@@ -1,0 +1,12 @@
+use std::time::Instant;
+use polygen::bounds::{builtin, AccuracySpec, BoundTable};
+use polygen::designspace::{generate, GenOptions};
+fn main() {
+    let f = builtin("recip", 16).unwrap();
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    for threads in [1usize, 8] {
+        let t0 = Instant::now();
+        let ds = generate(&bt, &GenOptions { lookup_bits: 6, threads, ..Default::default() }).unwrap();
+        println!("threads={threads}: {:?} k={}", t0.elapsed(), ds.k);
+    }
+}

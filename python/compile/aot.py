@@ -1,0 +1,89 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts (geometry constants live in model.py and must match
+rust/src/runtime/mod.rs):
+
+  verify_jnp.hlo.txt        fast verifier graph (CHUNK=65536, TABLE=2048)
+  verify_pallas.hlo.txt     Pallas-kernel verifier (interpret lowering)
+  extrema_jnp_N{N}.hlo.txt  diagonal-extrema graph, N in {256, 1024}
+  extrema_pallas_N256.hlo.txt
+
+Usage: python -m compile.aot --out-dir ../artifacts [--skip-pallas]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path: str, fn, example_args) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-pallas",
+        action="store_true",
+        help="skip the interpret-mode Pallas artifacts (slower to trace)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "chunk": model.CHUNK,
+        "table": model.TABLE,
+        "extrema_ns": list(model.EXTREMA_NS),
+        "artifacts": {},
+    }
+
+    jobs = [("verify_jnp.hlo.txt", model.verify_jnp, model.verify_example_args())]
+    for n in model.EXTREMA_NS:
+        jobs.append(
+            (f"extrema_jnp_N{n}.hlo.txt", model.extrema_jnp, model.extrema_example_args(n))
+        )
+    if not args.skip_pallas:
+        jobs.append(("verify_pallas.hlo.txt", model.verify_pallas, model.verify_example_args()))
+        jobs.append(
+            ("extrema_pallas_N256.hlo.txt", model.extrema_pallas,
+             model.extrema_example_args(256))
+        )
+
+    for name, fn, ex in jobs:
+        path = os.path.join(args.out_dir, name)
+        size = lower_to(path, fn, ex)
+        manifest["artifacts"][name] = size
+        print(f"wrote {path} ({size} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

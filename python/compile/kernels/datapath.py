@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: batched interpolator-datapath evaluation.
+
+The verification hot-spot: evaluate the generated piecewise-polynomial
+hardware on a block of input codes and count bound violations. TPU-shaped
+structure (see DESIGN.md §Hardware-Adaptation):
+
+- the coefficient LUT (three int64 vectors of length ``TABLE``; ≤ 48 KiB)
+  is VMEM-resident for the *whole* grid — its BlockSpec index map is
+  constant, so Pallas keeps one copy on-chip;
+- the input stream ``z`` and the bound streams ``l, u`` are tiled into
+  ``BLOCK``-element chunks (3 × 8 B × BLOCK per step) and double-buffered
+  HBM -> VMEM by the pipeline;
+- the body is pure VPU element-wise int64 work: shifts, two multiplies, a
+  gather into the resident LUT, compares, and a per-block violation count
+  accumulated into SMEM-like (1,)-shaped output.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; numerics are identical either way and are
+pinned to ``ref.datapath_check`` by the hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default export geometry (must match rust/src/runtime/mod.rs).
+BLOCK = 4096
+TABLE = 2048
+
+
+def _kernel(params_ref, la_ref, lb_ref, lc_ref, z_ref, l_ref, u_ref,
+            out_ref, viol_ref):
+    xbits = params_ref[0]
+    i = params_ref[1]
+    j = params_ref[2]
+    k = params_ref[3]
+    out_max = params_ref[4]
+    z = z_ref[...]
+    r = jnp.right_shift(z, xbits)
+    x = z - jnp.left_shift(r, xbits)
+    a = jnp.take(la_ref[...], r, axis=0, mode="clip")
+    b = jnp.take(lb_ref[...], r, axis=0, mode="clip")
+    c = jnp.take(lc_ref[...], r, axis=0, mode="clip")
+    xt = jnp.left_shift(jnp.right_shift(x, i), i)
+    xl = jnp.left_shift(jnp.right_shift(x, j), j)
+    out = jnp.clip(jnp.right_shift(a * xt * xt + b * xl + c, k), 0, out_max)
+    out_ref[...] = out
+    viol = jnp.sum(((out < l_ref[...]) | (out > u_ref[...])).astype(jnp.int64))
+    viol_ref[0] = viol
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def datapath_check_pallas(z, la, lb, lc, l, u, params, block=BLOCK):
+    """Pallas-tiled equivalent of ``ref.datapath_check``.
+
+    Args:
+      z, l, u: int64[B] with B a multiple of ``block``.
+      la, lb, lc: int64[TABLE] coefficient tables.
+      params: int64[5] = (xbits, sq_trunc, lin_trunc, k, out_max).
+
+    Returns (out int64[B], viol int64 scalar).
+    """
+    n = z.shape[0]
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    table_spec = pl.BlockSpec(la.shape, lambda g: (0,))  # VMEM-resident
+    stream_spec = pl.BlockSpec((block,), lambda g: (g,))
+    out, viol = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(params.shape, lambda g: (0,)),
+            table_spec,
+            table_spec,
+            table_spec,
+            stream_spec,
+            stream_spec,
+            stream_spec,
+        ],
+        out_specs=[
+            stream_spec,
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int64),
+        ],
+        interpret=True,
+    )(params, la, lb, lc, z, l, u)
+    return out, jnp.sum(viol)
+
+
+def vmem_footprint_bytes(block=BLOCK, table=TABLE):
+    """Estimated per-step VMEM residency of the kernel (DESIGN.md §Perf):
+    3 coefficient tables + 3 streamed operands + 1 output block + params,
+    times 2 for double buffering of the streams."""
+    tables = 3 * table * 8
+    streams = 3 * block * 8 * 2
+    out = block * 8 * 2
+    return tables + streams + out + 4 * 8

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: per-diagonal divided-difference extrema.
+
+The generation hot-spot (paper §II-A): for one region's bound slices
+``l, u`` of length N, compute for every diagonal ``t``
+
+    M(t) = max_{x<y, x+y=t} (l[y] - u[x] - 1) / (y - x)
+    m(t) = min_{x<y, x+y=t} (u[y] + 1 - l[x]) / (y - x)
+
+as exact integer fractions. This is the vector-friendly reformulation of
+the search the paper prunes sequentially with Claim II.1 (its
+"parallelism" future-work item): each diagonal maps to a grid row, the
+pair dimension maps to VPU lanes, and fraction comparison is an integer
+cross-multiply — no data-dependent control flow, so it vectorizes cleanly,
+at the cost of evaluating all O(N²) pairs.
+
+Grid/TPU shape: ``l``/``u`` (8 B · N each) are VMEM-resident across the
+whole grid; each step emits ``TBLOCK`` diagonals; the O(N) reduction per
+diagonal is a log-depth select tree.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Diagonal rows emitted per grid step in the Pallas variant.
+TBLOCK = 64
+
+
+def _kernel(n, l_ref, u_ref, mnum_ref, mden_ref, snum_ref, sden_ref):
+    g = pl.program_id(0)
+    l = l_ref[...].astype(jnp.int64)
+    u = u_ref[...].astype(jnp.int64)
+    # Diagonals handled by this step: t = 1 + g*TBLOCK + [0, TBLOCK).
+    t = 1 + g * TBLOCK + jnp.arange(TBLOCK, dtype=jnp.int64)[:, None]
+    x = jnp.arange(n, dtype=jnp.int64)[None, :]
+    y = t - x
+    valid = (x < y) & (y < n)
+    yc = jnp.clip(y, 0, n - 1)
+    den = jnp.where(valid, y - x, jnp.int64(1))
+    ly = jnp.take(l, yc, axis=0)
+    uy = jnp.take(u, yc, axis=0)
+    big = jnp.where(valid, ly - u[None, :] - 1, ref._NEG_INF)
+    small = jnp.where(valid, uy + 1 - l[None, :], ref._POS_INF)
+    bn, bd = ref.frac_max(big, den, axis=1)
+    nn, sd = ref.frac_max(-small, den, axis=1)
+    mnum_ref[...] = bn
+    mden_ref[...] = bd
+    snum_ref[...] = -nn
+    sden_ref[...] = sd
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def diagonal_extrema_pallas(l, u, *, n=None):
+    """Pallas-tiled equivalent of ``ref.diagonal_extrema``.
+
+    N must be a power of two; output arrays are padded up to a multiple of
+    ``TBLOCK`` diagonals (valid entries are the first 2N-3; padding rows
+    carry sentinel fractions and are discarded by the caller).
+    """
+    if n is None:
+        n = l.shape[0]
+    assert n & (n - 1) == 0, "N must be a power of two"
+    tmax = 2 * n - 3
+    tpad = -(-tmax // TBLOCK) * TBLOCK
+    grid = (tpad // TBLOCK,)
+    resident = pl.BlockSpec((n,), lambda g: (0,))
+    rows = pl.BlockSpec((TBLOCK,), lambda g: (g,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n),
+        grid=grid,
+        in_specs=[resident, resident],
+        out_specs=[rows, rows, rows, rows],
+        out_shape=[jax.ShapeDtypeStruct((tpad,), jnp.int64)] * 4,
+        interpret=True,
+    )(l.astype(jnp.int64), u.astype(jnp.int64))
+    return tuple(o[:tmax] for o in out)

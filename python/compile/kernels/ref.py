@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness references the Pallas kernels are tested against
+(pytest + hypothesis in ``python/tests/``), and they double as the *fast*
+XLA-CPU lowering shipped to the Rust runtime (the interpret-mode Pallas
+lowering is structurally faithful to a TPU kernel but slow on CPU; both are
+exported and must agree bit-for-bit).
+
+All arithmetic is int64 and exact. Fraction comparisons in the extrema
+oracle use integer cross-multiplication — never floating point — because a
+single mis-ordered divided difference corrupts the design space.
+"""
+
+import jax.numpy as jnp
+
+# Sentinels for masked lanes in the extrema reductions. Cross products stay
+# within +-2^62 provided |num| <= 2^50 and den <= 2^12, which holds for every
+# format this repo supports (bounds < 2^30, region size <= 2^11 per kernel
+# variant).
+_NEG_INF = -(1 << 50)
+_POS_INF = 1 << 50
+
+
+def datapath_eval(z, la, lb, lc, xbits, i, j, k, out_max):
+    """Bit-accurate interpolator datapath over a batch of input codes.
+
+    With r = z >> xbits, x = z & (2^xbits - 1), T_i(x) = (x >> i) << i,
+    S_j(x) = (x >> j) << j:
+
+        out = clamp((a[r] * T_i(x)**2 + b[r] * S_j(x) + c[r]) >> k,
+                    0, out_max)
+
+    (arithmetic shift = floor division, plus the output saturation stage,
+    matching ``Implementation::eval`` on the Rust side and the emitted
+    RTL).
+    """
+    z = z.astype(jnp.int64)
+    r = jnp.right_shift(z, xbits)
+    x = z - jnp.left_shift(r, xbits)
+    a = jnp.take(la, r, axis=0, mode="clip")
+    b = jnp.take(lb, r, axis=0, mode="clip")
+    c = jnp.take(lc, r, axis=0, mode="clip")
+    xt = jnp.left_shift(jnp.right_shift(x, i), i)
+    xl = jnp.left_shift(jnp.right_shift(x, j), j)
+    acc = a * xt * xt + b * xl + c
+    y = jnp.right_shift(acc, k)
+    return jnp.clip(y, 0, out_max)  # output saturation stage
+
+
+def datapath_check(z, la, lb, lc, l, u, xbits, i, j, k, out_max):
+    """Datapath eval plus bound check: returns (out, violation count)."""
+    out = datapath_eval(z, la, lb, lc, xbits, i, j, k, out_max)
+    viol = jnp.sum(((out < l) | (out > u)).astype(jnp.int64))
+    return out, viol
+
+
+def frac_max(num, den, axis):
+    """Exact elementwise-max of fractions num/den (den > 0) along ``axis``
+    via a manual tree reduction with cross-multiplied i64 comparisons.
+    The axis length must be a power of two (mask padding lanes with
+    ``_NEG_INF``/1)."""
+    n = num.shape[axis]
+    assert n & (n - 1) == 0, "reduction axis must be a power of two"
+    num = jnp.moveaxis(num, axis, -1)
+    den = jnp.moveaxis(den, axis, -1)
+    while num.shape[-1] > 1:
+        h = num.shape[-1] // 2
+        n0, n1 = num[..., :h], num[..., h:]
+        d0, d1 = den[..., :h], den[..., h:]
+        take1 = n1 * d0 > n0 * d1  # n1/d1 > n0/d0  (both d > 0)
+        num = jnp.where(take1, n1, n0)
+        den = jnp.where(take1, d1, d0)
+    return num[..., 0], den[..., 0]
+
+
+def diagonal_extrema(l, u):
+    """Per-diagonal divided-difference extrema of one region (paper §II).
+
+    For t in [1, 2N-3] over pairs x < y with x + y = t:
+
+        M(t) = max (l[y] - u[x] - 1) / (y - x)
+        m(t) = min (u[y] + 1 - l[x]) / (y - x)
+
+    Returns four int64 arrays of length 2N-3: (M_num, M_den, m_num, m_den),
+    all denominators > 0. N = l.shape[0] must be a power of two.
+    """
+    n = l.shape[0]
+    l = l.astype(jnp.int64)
+    u = u.astype(jnp.int64)
+    t = jnp.arange(1, 2 * n - 2, dtype=jnp.int64)[:, None]  # (2N-3, 1)
+    x = jnp.arange(n, dtype=jnp.int64)[None, :]  # (1, N)
+    y = t - x
+    valid = (x < y) & (y < n)
+    yc = jnp.clip(y, 0, n - 1).astype(jnp.int64)
+    den = jnp.where(valid, y - x, jnp.int64(1))
+
+    ly = jnp.take(l, yc, axis=0)  # (2N-3, N) gather l[y]
+    uy = jnp.take(u, yc, axis=0)
+    lx = l[None, :]
+    ux = u[None, :]
+    big_cand = jnp.where(valid, ly - ux - 1, _NEG_INF)
+    small_cand = jnp.where(valid, uy + 1 - lx, _POS_INF)
+
+    big_num, big_den = frac_max(big_cand, den, axis=1)
+    # min f = -max(-f).
+    neg_num, small_den = frac_max(-small_cand, den, axis=1)
+    return big_num, big_den, -neg_num, small_den

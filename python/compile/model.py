@@ -1,0 +1,76 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Two graph families, each in a fast pure-jnp variant (what the Rust hot
+path executes on CPU PJRT) and a Pallas variant (the TPU-shaped kernel,
+lowered under interpret mode; bit-identical, exported for cross-checking
+and as the TPU artifact):
+
+- ``verify_*``: evaluate a generated design on a chunk of the input space
+  and count bound violations (E7, the HECTOR-substitute verifier);
+- ``extrema_*``: per-diagonal divided-difference extrema of a region
+  (design-space generation offload).
+
+Python never runs at request time: ``aot.py`` lowers these once to HLO
+text under ``artifacts/`` and the Rust side loads + executes them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import datapath, extrema, ref
+
+# Export geometry — must match rust/src/runtime/mod.rs.
+CHUNK = 65536
+TABLE = datapath.TABLE
+EXTREMA_NS = (256, 1024)
+
+
+def verify_jnp(z, la, lb, lc, l, u, params):
+    """Fast path: pure-jnp datapath check over one chunk.
+
+    params: int64[5] = (xbits, sq_trunc, lin_trunc, k, out_max).
+    Returns (out int64[CHUNK], viol int64[1]).
+    """
+    out, viol = ref.datapath_check(
+        z, la, lb, lc, l, u, params[0], params[1], params[2], params[3], params[4]
+    )
+    return out, viol.reshape((1,))
+
+
+def verify_pallas(z, la, lb, lc, l, u, params):
+    """Pallas-kernel variant of ``verify_jnp`` (bit-identical)."""
+    out, viol = datapath.datapath_check_pallas(z, la, lb, lc, l, u, params)
+    return out, viol.reshape((1,))
+
+
+def extrema_jnp(l, u):
+    """Fast path: diagonal extrema of one region (N = l.shape[0])."""
+    return ref.diagonal_extrema(l, u)
+
+
+def extrema_pallas(l, u):
+    """Pallas-kernel variant of ``extrema_jnp`` (bit-identical on the
+    first 2N-3 entries)."""
+    return extrema.diagonal_extrema_pallas(l, u)
+
+
+def verify_example_args():
+    """ShapeDtypeStructs for lowering the verify graphs."""
+    i64 = jnp.int64
+    return (
+        jax.ShapeDtypeStruct((CHUNK,), i64),  # z
+        jax.ShapeDtypeStruct((TABLE,), i64),  # a table
+        jax.ShapeDtypeStruct((TABLE,), i64),  # b table
+        jax.ShapeDtypeStruct((TABLE,), i64),  # c table
+        jax.ShapeDtypeStruct((CHUNK,), i64),  # l
+        jax.ShapeDtypeStruct((CHUNK,), i64),  # u
+        jax.ShapeDtypeStruct((5,), i64),  # params
+    )
+
+
+def extrema_example_args(n):
+    i64 = jnp.int64
+    return (
+        jax.ShapeDtypeStruct((n,), i64),
+        jax.ShapeDtypeStruct((n,), i64),
+    )

@@ -1,0 +1,4 @@
+import jax
+
+# int64 datapath arithmetic everywhere (must precede any tracing).
+jax.config.update("jax_enable_x64", True)

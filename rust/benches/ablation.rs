@@ -1,0 +1,47 @@
+//! Ablation (paper §III): the paper reports that alternative decision
+//! procedures "such as prioritizing LUT optimization ... yielded inferior
+//! area-delay profiles". Compare SquareFirst (the paper's) vs LutFirst on
+//! the Table I workloads, plus forced-degree ablations.
+use polygen::bounds::AccuracySpec;
+use polygen::coordinator::Workload;
+use polygen::designspace::{generate, GenOptions};
+use polygen::dse::{explore, Degree, DseOptions, Procedure};
+use polygen::synth::synth_min_delay;
+
+fn main() {
+    let mut out = String::from(
+        "ABLATION - decision procedure variants (min-delay ADP, lower is better)\n",
+    );
+    out.push_str(&format!(
+        "{:<8} {:>4} {:>4} | {:>12} {:>12} | {:>12}\n",
+        "func", "bits", "LUB", "square-first", "lut-first", "forced-quad"
+    ));
+    for (name, bits, lub) in
+        [("recip", 10u32, 5u32), ("recip", 16, 8), ("log2", 16, 8), ("exp2", 10, 5)]
+    {
+        let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
+        let ds = generate(
+            &w.bt,
+            &GenOptions { lookup_bits: lub, threads: 8, ..Default::default() },
+        )
+        .unwrap();
+        let adp = |proc_: Procedure, deg: Option<Degree>| -> String {
+            explore(&w.bt, &ds, &DseOptions { procedure: proc_, degree: deg, ..Default::default() })
+                .map(|im| format!("{:.1}", synth_min_delay(&im).area_delay()))
+                .unwrap_or_else(|| "-".into())
+        };
+        let line = format!(
+            "{:<8} {:>4} {:>4} | {:>12} {:>12} | {:>12}\n",
+            name,
+            bits,
+            lub,
+            adp(Procedure::SquareFirst, None),
+            adp(Procedure::LutFirst, None),
+            adp(Procedure::SquareFirst, Some(Degree::Quadratic)),
+        );
+        print!("{line}");
+        out.push_str(&line);
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/ablation.txt", out).ok();
+}

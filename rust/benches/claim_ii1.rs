@@ -1,0 +1,13 @@
+//! E5 — Claim II.1: naive vs pruned divided-difference search, measured on
+//! the paper's 16-bit reciprocal generation workload (paper: ~5x).
+fn main() {
+    let mut out = String::new();
+    for (bits, lub, reps) in [(12u32, 5u32, 3usize), (16, 8, 3), (16, 7, 1)] {
+        let s = polygen::report::claim_ii1("recip", bits, lub, reps);
+        println!("{s}");
+        out.push_str(&s);
+        out.push('\n');
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/claim_ii1.txt", out).ok();
+}

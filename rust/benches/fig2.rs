@@ -1,0 +1,13 @@
+//! E3 — regenerate paper Fig. 2 (area-delay profile, reciprocal with 7
+//! lookup bits, vs the DW-like family re-selected per delay target).
+//! Paper uses 23-bit; default here is 16-bit (same code path), 20-bit
+//! under `-- --deep`.
+fn main() {
+    let deep = std::env::args().any(|a| a == "--deep");
+    let bits = if deep { 20 } else { 16 };
+    let (text, csv) = polygen::report::fig2("recip", bits, 7, 14);
+    println!("{text}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(format!("results/fig2_recip{bits}.csv"), csv).ok();
+    std::fs::write(format!("results/fig2_recip{bits}.txt"), &text).ok();
+}

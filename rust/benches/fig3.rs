@@ -1,0 +1,15 @@
+//! E4 — regenerate paper Fig. 3 (area-delay per LUT height, log2 10- and
+//! 16-bit, all feasible heights, labels = lookup bits).
+fn main() {
+    std::fs::create_dir_all("results").ok();
+    for bits in [10u32, 16] {
+        let (text, csv) = polygen::report::fig3("log2", bits, 8);
+        println!("{text}");
+        std::fs::write(format!("results/fig3_log2_{bits}.csv"), csv).ok();
+        std::fs::write(format!("results/fig3_log2_{bits}.txt"), &text).ok();
+    }
+    // E8 companion: where does linear become feasible?
+    for f in ["recip", "log2", "exp2"] {
+        print!("{}", polygen::report::linear_threshold(f, 16));
+    }
+}

@@ -1,0 +1,14 @@
+//! E6 — §II-A empirical runtime scaling of generation vs lookup bits R
+//! (paper: ~O(R^-3) on a 16-bit design; exponential in precision).
+fn main() {
+    let mut out = String::new();
+    let s = polygen::report::scaling("recip", 16, &[6, 7, 8, 9, 10, 11]);
+    println!("{s}");
+    out.push_str(&s);
+    // Precision scaling (the exponential wall): same R, growing bits.
+    let s2 = polygen::report::scaling("recip", 14, &[6, 7, 8, 9]);
+    println!("{s2}");
+    out.push_str(&s2);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/scaling.txt", out).ok();
+}

@@ -1,0 +1,24 @@
+//! E1 — regenerate paper Table I (min-delay synthesis vs DesignWare-like).
+//! `cargo bench --bench table1 [-- --deep]` ; output also lands in
+//! results/table1.txt.
+fn main() {
+    let deep = std::env::args().any(|a| a == "--deep");
+    let mut sizes: Vec<(&str, u32)> = vec![
+        ("recip", 10),
+        ("recip", 16),
+        ("log2", 10),
+        ("log2", 16),
+        ("exp2", 10),
+        ("exp2", 16),
+    ];
+    if deep {
+        // The paper's 23-bit rows took 39-78 h on its setup; 20-bit is the
+        // practical deep setting here (same code path, exponential wall).
+        sizes.push(("recip", 20));
+        sizes.push(("log2", 20));
+    }
+    let text = polygen::report::table1(&sizes, 8);
+    println!("{text}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table1.txt", &text).ok();
+}

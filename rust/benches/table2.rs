@@ -1,0 +1,14 @@
+//! E2 — regenerate paper Table II (LUT widths vs FloPoCo-like at equal
+//! height, quadratic). `cargo bench --bench table2 [-- --deep]`.
+fn main() {
+    let deep = std::env::args().any(|a| a == "--deep");
+    let mut cases = vec![("recip", 16u32, 6u32), ("log2", 16, 6), ("exp2", 10, 4)];
+    if deep {
+        cases.push(("recip", 20, 9));
+        cases.push(("log2", 20, 9));
+    }
+    let text = polygen::report::table2(&cases);
+    println!("{text}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table2.txt", &text).ok();
+}

@@ -1,0 +1,55 @@
+//! E7/perf — verification engine throughput: scalar Rust vs the AOT XLA
+//! graph (jnp flavor) vs the interpret-mode Pallas flavor, exhaustive over
+//! a 16-bit design. Skips engines whose artifacts are missing.
+use std::time::Instant;
+
+use polygen::bounds::{builtin, AccuracySpec, BoundTable};
+use polygen::designspace::{generate, GenOptions};
+use polygen::dse::{explore, DseOptions};
+use polygen::runtime::{Flavor, XlaRuntime};
+use polygen::verify::{verify_exhaustive, Engine};
+
+fn main() {
+    let f = builtin("recip", 16).unwrap();
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    let ds = generate(&bt, &GenOptions { lookup_bits: 8, threads: 8, ..Default::default() })
+        .unwrap();
+    let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+    let total = 1u64 << 16;
+    let mut out = String::from("verify engine throughput (recip 16-bit, 65536 inputs)\n");
+
+    let mut bench = |label: &str, engine: &Engine<'_>| {
+        // Warm once, then median of 5.
+        let _ = verify_exhaustive(&bt, &im, engine).unwrap();
+        let mut ts: Vec<f64> = (0..5)
+            .map(|_| {
+                let t0 = Instant::now();
+                let rep = verify_exhaustive(&bt, &im, engine).unwrap();
+                assert!(rep.ok());
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        ts.sort_by(f64::total_cmp);
+        let med = ts[2];
+        let line = format!(
+            "  {label:<12} {:>10.3} ms   {:>8.1} Minputs/s\n",
+            med * 1e3,
+            total as f64 / med / 1e6
+        );
+        print!("{line}");
+        out.push_str(&line);
+    };
+
+    bench("scalar", &Engine::Scalar);
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => {
+            bench("xla-jnp", &Engine::Xla { rt: &rt, flavor: Flavor::Jnp });
+            if rt.has_flavor(Flavor::Pallas) {
+                bench("xla-pallas", &Engine::Xla { rt: &rt, flavor: Flavor::Pallas });
+            }
+        }
+        Err(e) => println!("  (xla engines skipped: {e})"),
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/verify_engines.txt", out).ok();
+}

@@ -1,0 +1,11 @@
+//! Comparison generators (DESIGN.md §3 substitutions): a discrete Remez
+//! substrate, a FloPoCo/Sollya-style fpminimax generator (Table II), and a
+//! DesignWare-style conventional component family (Table I, Fig. 2).
+
+pub mod designware;
+pub mod flopoco;
+pub mod remez;
+
+pub use designware::{dw_family, DwFamily};
+pub use flopoco::flopoco_like;
+pub use remez::{remez_fit, MinimaxFit};

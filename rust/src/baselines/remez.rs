@@ -1,0 +1,231 @@
+//! Discrete Remez exchange — minimax polynomial fitting substrate.
+//!
+//! The comparison generators (FloPoCo-like, DesignWare-like) are built on
+//! minimax approximation, the same foundation as Sollya's `fpminimax`
+//! that the paper contrasts with. The target function only exists on the
+//! integer grid of a region, so this is the *discrete* Chebyshev problem:
+//! minimize `max_i |f(x_i) - p(x_i)|` over degree-`d` polynomials. The
+//! classic single-point exchange algorithm converges in a handful of
+//! iterations; arithmetic is `f64` (baseline quality is ultimately policed
+//! by exhaustive verification, not by this fit).
+
+/// Result of a minimax fit.
+#[derive(Clone, Debug)]
+pub struct MinimaxFit {
+    /// Coefficients, lowest degree first: `p(x) = c[0] + c[1] x + ...`.
+    pub coeffs: Vec<f64>,
+    /// The levelled error `|E|` on the reference set.
+    pub error: f64,
+    /// Iterations used.
+    pub iters: u32,
+}
+
+/// Fit a degree-`degree` minimax polynomial to `values[i] ~ p(i)`.
+///
+/// `values.len()` must be at least `degree + 2`.
+pub fn remez_fit(values: &[f64], degree: usize) -> MinimaxFit {
+    let n = values.len();
+    let m = degree + 2;
+    assert!(n >= m, "need at least degree+2 points");
+
+    // Chebyshev-extrema initial reference, mapped to the index range.
+    let mut refs: Vec<usize> = (0..m)
+        .map(|i| {
+            let t = (std::f64::consts::PI * i as f64 / (m - 1) as f64).cos();
+            (((1.0 - t) / 2.0) * (n - 1) as f64).round() as usize
+        })
+        .collect();
+    refs.sort_unstable();
+    refs.dedup();
+    // Dedup may shrink the set on tiny grids; pad with unused indices.
+    let mut next = 0usize;
+    while refs.len() < m {
+        if !refs.contains(&next) {
+            refs.push(next);
+        }
+        next += 1;
+    }
+    refs.sort_unstable();
+
+    let mut coeffs = vec![0.0; degree + 1];
+    let mut lev_err = 0.0f64;
+    let mut iters = 0u32;
+    for _ in 0..60 {
+        iters += 1;
+        // Solve p(x_j) + (-1)^j E = f(x_j) on the reference.
+        let mut a = vec![vec![0.0f64; m + 1]; m]; // augmented
+        for (j, &xi) in refs.iter().enumerate() {
+            let x = xi as f64;
+            let mut pw = 1.0;
+            for c in 0..=degree {
+                a[j][c] = pw;
+                pw *= x;
+            }
+            a[j][degree + 1] = if j % 2 == 0 { 1.0 } else { -1.0 };
+            a[j][m] = values[xi];
+        }
+        gauss_solve(&mut a);
+        for c in 0..=degree {
+            coeffs[c] = a[c][m];
+        }
+        lev_err = a[degree + 1][m].abs();
+
+        // Error scan over the full grid.
+        let err = |x: usize| -> f64 {
+            let mut p = 0.0;
+            let mut pw = 1.0;
+            for c in 0..=degree {
+                p += coeffs[c] * pw;
+                pw *= x as f64;
+            }
+            values[x] - p
+        };
+        let (mut worst, mut worst_e) = (0usize, 0.0f64);
+        for x in 0..n {
+            let e = err(x).abs();
+            if e > worst_e {
+                worst_e = e;
+                worst = x;
+            }
+        }
+        if worst_e <= lev_err * (1.0 + 1e-9) + 1e-15 {
+            break; // converged: no point exceeds the levelled error
+        }
+        exchange(&mut refs, worst, &err);
+    }
+    MinimaxFit { coeffs, error: lev_err, iters }
+}
+
+/// Single-point exchange preserving sign alternation.
+fn exchange(refs: &mut [usize], x_new: usize, err: &dyn Fn(usize) -> f64) {
+    let s_new = err(x_new).signum();
+    let m = refs.len();
+    if x_new < refs[0] {
+        if err(refs[0]).signum() == s_new {
+            refs[0] = x_new;
+        } else {
+            // Shift everything up, dropping the last point.
+            for i in (1..m).rev() {
+                refs[i] = refs[i - 1];
+            }
+            refs[0] = x_new;
+        }
+        return;
+    }
+    if x_new > refs[m - 1] {
+        if err(refs[m - 1]).signum() == s_new {
+            refs[m - 1] = x_new;
+        } else {
+            for i in 0..m - 1 {
+                refs[i] = refs[i + 1];
+            }
+            refs[m - 1] = x_new;
+        }
+        return;
+    }
+    // Interior: replace the neighbour with matching sign.
+    for i in 0..m {
+        if refs[i] >= x_new {
+            if refs[i] == x_new {
+                return;
+            }
+            let left = i.checked_sub(1);
+            if err(refs[i]).signum() == s_new {
+                refs[i] = x_new;
+            } else if let Some(li) = left {
+                refs[li] = x_new;
+            }
+            return;
+        }
+    }
+}
+
+/// In-place Gaussian elimination with partial pivoting on an augmented
+/// matrix; the solution lands in column `m` of each row.
+fn gauss_solve(a: &mut [Vec<f64>]) {
+    let n = a.len();
+    let m = a[0].len() - 1;
+    assert_eq!(n, m);
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-30, "singular system in Remez solve");
+        for c in col..=m {
+            a[col][c] /= d;
+        }
+        for row in 0..n {
+            if row != col && a[row][col] != 0.0 {
+                let f = a[row][col];
+                for c in col..=m {
+                    a[row][c] -= f * a[col][c];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_each_seed;
+
+    #[test]
+    fn exact_polynomial_recovered() {
+        // f already a quadratic: error ~ 0, coefficients recovered.
+        let vals: Vec<f64> = (0..64).map(|x| 3.0 + 2.0 * x as f64 - 0.25 * (x * x) as f64).collect();
+        let fit = remez_fit(&vals, 2);
+        assert!(fit.error < 1e-9);
+        assert!((fit.coeffs[0] - 3.0).abs() < 1e-7);
+        assert!((fit.coeffs[1] - 2.0).abs() < 1e-8);
+        assert!((fit.coeffs[2] + 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_minimax_abs_on_symmetric_grid() {
+        // Degree-1 minimax to |x - c| on a symmetric grid: E = range/4
+        // ... sanity: error must beat least-squares-ish bounds and
+        // equioscillate.
+        let n = 101;
+        let vals: Vec<f64> = (0..n).map(|x| ((x as f64) - 50.0).abs()).collect();
+        let fit = remez_fit(&vals, 1);
+        // f is even about the midpoint, so the best line is the constant
+        // 25 with equioscillating error 25 (at x=0, 50, 100).
+        assert!((fit.error - 25.0).abs() < 0.5, "E = {}", fit.error);
+        assert!(fit.coeffs[1].abs() < 1e-6, "slope should vanish");
+    }
+
+    #[test]
+    fn minimax_beats_endpoint_interpolation() {
+        for_each_seed(20, |rng| {
+            let n = 16 + rng.below(100) as usize;
+            let a = rng.f64() * 2.0 - 1.0;
+            let b = rng.f64() * 4.0;
+            let vals: Vec<f64> =
+                (0..n).map(|x| (a * (x as f64) * 0.2).exp() + b * (x as f64)).collect();
+            let fit = remez_fit(&vals, 2);
+            // Max error of the fit over the grid:
+            let maxe = (0..n)
+                .map(|x| {
+                    let p = fit.coeffs[0]
+                        + fit.coeffs[1] * x as f64
+                        + fit.coeffs[2] * (x as f64) * (x as f64);
+                    (vals[x] - p).abs()
+                })
+                .fold(0.0f64, f64::max);
+            assert!(maxe <= fit.error * (1.0 + 1e-6) + 1e-12, "not levelled: {maxe} vs {}", fit.error);
+        });
+    }
+
+    #[test]
+    fn tiny_grids_do_not_panic() {
+        let vals = vec![1.0, 2.0, 5.0, 3.0];
+        let fit = remez_fit(&vals, 2);
+        assert!(fit.error >= 0.0);
+        let lin = remez_fit(&vals[..3], 1);
+        assert!(lin.error >= 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Exact fixed-point `log2` / `exp2` floors.
+//!
+//! The paper's bound functions `l, u` must be *trusted*: a single
+//! mis-rounded bound makes the generated design space wrong (either
+//! excluding feasible polynomials or, worse, admitting infeasible ones).
+//! The paper defers this to "integration with MPFR" as future work; here we
+//! build the substrate directly: 128-bit fixed-point evaluation with ≥ 90
+//! guard bits and an explicit ambiguity check on every floor. If a value
+//! ever lands inside the guard margin of an integer boundary the functions
+//! panic rather than return a possibly-wrong bound (this never fires for
+//! the ≤ 26-bit formats used anywhere in this repo; a dedicated test
+//! exhaustively confirms agreement with directed `f64` evaluation).
+
+use crate::wide::{isqrt_u256, U256};
+
+/// Fractional bits of the internal fixed-point representation.
+const F: u32 = 120;
+/// Ambiguity margin in ulps of `2^-F`. The accumulated truncation error of
+/// the algorithms below is provably < 2^7 ulps; 2^20 is a very safe guard.
+const MARGIN: u128 = 1 << 20;
+
+/// `frac(log2(v))` for `v > 0`, as a Q0.120 fixed-point value, by the
+/// classic shift-and-square recurrence on a Q1.127 mantissa.
+///
+/// Per-step truncation contributes ≤ 2^-127 to `log2(a_i)` which enters the
+/// result with weight `2^-i`, so the total error is < (F+2)·2^-127 < 2^-119.
+pub fn log2_frac_q120(v: u128) -> u128 {
+    assert!(v > 0);
+    // Normalize to a in [2^127, 2^128): A = a / 2^127 in [1, 2)
+    // (shifting the MSB of v up to bit 127 discards only log2's integer
+    // part, which the caller does not want anyway).
+    let mut a: u128 = v << v.leading_zeros();
+    let mut frac: u128 = 0;
+    for _ in 0..F {
+        let sq = U256::mul_u128(a, a); // A^2 = sq / 2^254 in [1, 4)
+        let bit = (sq.hi >> 127) & 1; // A^2 >= 2  <=>  sq >= 2^255
+        frac = (frac << 1) | bit;
+        a = if bit == 1 {
+            sq.hi // A' = A^2/2: floor(sq / 2^128)
+        } else {
+            sq.shr(127).lo // A' = A^2: floor(sq / 2^127)
+        };
+    }
+    frac
+}
+
+/// `2^(z / 2^m)` for `0 <= z < 2^m`, as a Q1.127 fixed-point value in
+/// `[1, 2)`, via the product of repeated square roots of two.
+///
+/// `2^(z/2^m) = prod over set bits i of z of 2^(2^(i-m))`; the factors
+/// `s_j = 2^(2^-j)` come from the chain `s_1 = sqrt 2`, `s_{j+1} =
+/// sqrt(s_j)`. Square-rooting *halves* relative error, so the chain error
+/// stays ≤ 2^-126 per factor and the ≤ m-term product accumulates
+/// < (2m)·2^-127 < 2^-120 total.
+pub fn exp2_frac_q127(z: u64, m: u32) -> u128 {
+    assert!(m >= 1 && m <= 63 && (z >> m) == 0);
+    let roots = sqrt2_chain(m);
+    let mut g: u128 = 1u128 << 127; // 1.0 in Q1.127
+    for i in 0..m {
+        if (z >> i) & 1 == 1 {
+            let j = (m - i) as usize; // weight 2^-(m-i)
+            g = U256::mul_u128(g, roots[j - 1]).shr(127).lo;
+        }
+    }
+    g
+}
+
+/// `[ 2^(2^-1), 2^(2^-2), ..., 2^(2^-m) ]` in Q1.127.
+fn sqrt2_chain(m: u32) -> Vec<u128> {
+    let mut roots = Vec::with_capacity(m as usize);
+    // s_1 = sqrt(2) in Q1.127 = isqrt(2 << 254).
+    let mut s: u128 = isqrt_u256(U256 { hi: 1u128 << 127, lo: 0 });
+    roots.push(s);
+    for _ in 1..m {
+        // s_{j+1} = sqrt(s_j): isqrt(s << 127) in Q1.127.
+        s = isqrt_u256(U256::from_u128(s).shl(127));
+        roots.push(s);
+    }
+    roots
+}
+
+/// `floor(2^q * frac(log2(v)))` with an exactness flag.
+///
+/// Panics if the value is within the guard margin of an integer boundary
+/// (would indicate the 120-bit evaluation cannot decide the floor).
+pub fn floor_log2_scaled(v: u128, q: u32) -> (i64, bool) {
+    assert!(q < F - 24, "output precision too large for the 120-bit substrate");
+    if v.is_power_of_two() {
+        return (0, true); // frac(log2) = 0 exactly
+    }
+    let frac = log2_frac_q120(v);
+    split_floor(frac, F - q)
+}
+
+/// `floor(2^q * (2^(z/2^m) - 1))` with an exactness flag.
+pub fn floor_exp2m1_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
+    assert!(q <= 126 - 24, "output precision too large");
+    if z == 0 {
+        return (0, true);
+    }
+    let g = exp2_frac_q127(z, m); // Q1.127 in [1,2)
+    let frac = g - (1u128 << 127); // Q0.127
+    split_floor(frac, 127 - q)
+}
+
+/// Split a fixed-point fraction into `floor(frac / 2^shift)` and check the
+/// remainder is unambiguous (outside the guard margin of both boundaries).
+fn split_floor(frac: u128, shift: u32) -> (i64, bool) {
+    let floor = (frac >> shift) as i64;
+    let rem = frac & ((1u128 << shift) - 1);
+    let top = 1u128 << shift;
+    assert!(
+        rem > MARGIN && rem < top - MARGIN,
+        "ambiguous floor: value within guard margin of an integer; \
+         raise the working precision (rem = {rem:#x}, shift = {shift})"
+    );
+    (floor, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_matches_f64() {
+        for v in [3u128, 5, 7, 100, 12345, (1 << 20) + 7, (1 << 26) - 1] {
+            let frac = log2_frac_q120(v);
+            let expect = (v as f64).log2().fract();
+            let got = frac as f64 / 2f64.powi(F as i32);
+            assert!((got - expect).abs() < 1e-12, "v={v} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn log2_power_of_two_exact() {
+        assert_eq!(floor_log2_scaled(1 << 13, 16), (0, true));
+    }
+
+    #[test]
+    fn exp2_matches_f64() {
+        let m = 16;
+        for z in [1u64, 2, 1000, 32767, 32768, 65535] {
+            let g = exp2_frac_q127(z, m);
+            let got = g as f64 / 2f64.powi(127);
+            let expect = 2f64.powf(z as f64 / (1u64 << m) as f64);
+            assert!((got - expect).abs() < 1e-12, "z={z} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn floors_agree_with_f64_sweep() {
+        // Exhaustive for a small format: the f64 computation is accurate to
+        // ~2^-45 here, far below the 2^-? decision distances at 10-bit.
+        let m = 10u32;
+        let q = 11u32;
+        for z in 1..(1u64 << m) {
+            let v = (1u128 << m) + z as u128;
+            let (fl, ex) = floor_log2_scaled(v, q);
+            assert!(!ex);
+            let yf = ((v as f64) / (1u64 << m) as f64).log2() * (1u64 << q) as f64;
+            assert_eq!(fl, yf.floor() as i64, "log2 z={z}");
+
+            let (fe, ex2) = floor_exp2m1_scaled(z, m, m);
+            assert!(!ex2);
+            let ye = (2f64.powf(z as f64 / (1u64 << m) as f64) - 1.0)
+                * (1u64 << m) as f64;
+            assert_eq!(fe, ye.floor() as i64, "exp2 z={z}");
+        }
+    }
+
+    #[test]
+    fn sqrt2_chain_converges_to_one() {
+        let roots = sqrt2_chain(30);
+        let last = *roots.last().unwrap();
+        // 2^(2^-30) is barely above 1.
+        assert!(last > (1u128 << 127));
+        assert!(last - (1u128 << 127) < 1u128 << 100);
+    }
+}

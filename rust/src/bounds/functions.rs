@@ -1,0 +1,322 @@
+//! The target functions evaluated in the paper (reciprocal, log2, exp2)
+//! plus extras (sqrt, arbitrary `f64` closures) behind one trait.
+//!
+//! Each function maps a *stored input code* `z` (the explicit bits of the
+//! paper's `1.x` / `0.x` input) to the exact scaled output
+//! `Y(z) = f(z) * 2^q` (with any fixed output prefix bits removed), and
+//! reports `floor(Y)` together with an exactness flag. Everything
+//! downstream (accuracy specs, bound tables, the design space itself) is
+//! derived from these floors, so they are computed with exact integer /
+//! 128-bit fixed-point arithmetic — never rounded binary floating point.
+
+use super::exact::{floor_exp2m1_scaled, floor_log2_scaled};
+use crate::wide::isqrt_u128;
+
+/// A fixed-point function to approximate, in the paper's framing.
+pub trait TargetFunction: Send + Sync {
+    /// Short identifier, e.g. `"recip"`.
+    fn name(&self) -> &str;
+    /// Stored input bits (the paper's `n+m` for the variable part).
+    fn in_bits(&self) -> u32;
+    /// Stored output bits `q` (after removing any fixed prefix).
+    fn out_bits(&self) -> u32;
+    /// `(floor(Y(z)), Y(z) is exactly an integer)`.
+    fn floor_y(&self, z: u64) -> (i64, bool);
+    /// Real-valued `Y(z)` for the Remez / plotting baselines (not used by
+    /// the exact design-space math).
+    fn y_f64(&self, z: u64) -> f64;
+    /// Human-readable description of the mapping, e.g. `0.1y = 1/1.x`.
+    fn mapping(&self) -> String;
+}
+
+/// `0.1y = 1 / 1.x` — the paper's reciprocal.
+///
+/// `f = 2^m/(2^m+z) in (1/2, 1]`; stored output `y` with
+/// `value = (2^q + y) / 2^(q+1)`, so `Y(z) = 2^(m+q+1)/(2^m+z) - 2^q`.
+pub struct Recip {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Recip {
+    fn name(&self) -> &str {
+        "recip"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        let (m, q) = (self.in_bits, self.out_bits);
+        let num: u128 = 1u128 << (m + q + 1);
+        let den: u128 = (1u128 << m) + z as u128;
+        let fl = (num / den) as i64 - (1i64 << q);
+        (fl, num % den == 0)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let (m, q) = (self.in_bits, self.out_bits);
+        2f64.powi((m + q + 1) as i32) / ((1u64 << m) as f64 + z as f64)
+            - 2f64.powi(q as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("0.1y = 1/1.x  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `0.y = log2(1.x)` — the paper's base-2 logarithm.
+/// `Y(z) = 2^q * log2(1 + z/2^m)`.
+pub struct Log2 {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Log2 {
+    fn name(&self) -> &str {
+        "log2"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        let v = (1u128 << self.in_bits) + z as u128;
+        floor_log2_scaled(v, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let m = (1u64 << self.in_bits) as f64;
+        (1.0 + z as f64 / m).log2() * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("0.y = log2(1.x)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `1.y = 2^(0.x)` — the paper's base-2 exponential.
+/// `Y(z) = 2^q * (2^(z/2^m) - 1)`.
+pub struct Exp2 {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Exp2 {
+    fn name(&self) -> &str {
+        "exp2"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        floor_exp2m1_scaled(z, self.in_bits, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let m = (1u64 << self.in_bits) as f64;
+        (2f64.powf(z as f64 / m) - 1.0) * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("1.y = 2^(0.x)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `1.y = sqrt(1.x)` — extension function (not in the paper's tables but a
+/// standard workload for interpolator generators).
+/// `Y(z) = 2^q*(sqrt(1 + z/2^m) - 1)`; exact via integer square root when
+/// `2q >= m`.
+pub struct Sqrt {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Sqrt {
+    fn name(&self) -> &str {
+        "sqrt"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        let (m, q) = (self.in_bits, self.out_bits);
+        assert!(2 * q >= m, "sqrt exact floor needs 2q >= m");
+        // floor(2^q sqrt((2^m+z)/2^m)) = isqrt((2^m+z) << (2q-m)).
+        let a: u128 = ((1u128 << m) + z as u128) << (2 * q - m);
+        let root = isqrt_u128(a);
+        ((root as i64) - (1i64 << q), root * root == a)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let m = (1u64 << self.in_bits) as f64;
+        ((1.0 + z as f64 / m).sqrt() - 1.0) * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("1.y = sqrt(1.x)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// A user-supplied function via an `f64` closure, for quick experiments
+/// (`examples/custom_function.rs`).
+///
+/// Unlike the built-ins this is **not** exact: the floor is taken on the
+/// `f64` value and an ambiguity guard panics when the value is within
+/// `margin` of an integer. For production bounds implement
+/// [`TargetFunction`] with exact arithmetic instead.
+pub struct CustomF64<F: Fn(f64) -> f64 + Send + Sync> {
+    pub name: String,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    /// Maps the real input value in `[0,1)` (i.e. `z/2^m`) to the real
+    /// output value in `[0,1)`; scaled by `2^q` internally.
+    pub f: F,
+    /// Ambiguity guard in output ULPs (default 1e-6).
+    pub margin: f64,
+}
+
+impl<F: Fn(f64) -> f64 + Send + Sync> TargetFunction for CustomF64<F> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        let y = self.y_f64(z);
+        let fl = y.floor();
+        let d = y - fl;
+        if d < self.margin || d > 1.0 - self.margin {
+            // Within the guard band: accept only an exact integer.
+            let r = y.round();
+            assert!(
+                (y - r).abs() < self.margin,
+                "CustomF64 {}: ambiguous floor at z={z} (y={y})",
+                self.name
+            );
+            return (r as i64, true);
+        }
+        (fl as i64, false)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let xin = z as f64 / (1u64 << self.in_bits) as f64;
+        (self.f)(xin) * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("custom {} ({} -> {})", self.name, self.in_bits, self.out_bits)
+    }
+}
+
+/// Construct a built-in function by name at the paper's precisions:
+/// `recip: m -> m`, `log2: m -> m+1`, `exp2: m -> m`, `sqrt: m -> m`.
+pub fn builtin(name: &str, bits: u32) -> Option<Box<dyn TargetFunction>> {
+    match name {
+        "recip" => Some(Box::new(Recip { in_bits: bits, out_bits: bits })),
+        "log2" => Some(Box::new(Log2 { in_bits: bits, out_bits: bits + 1 })),
+        "exp2" => Some(Box::new(Exp2 { in_bits: bits, out_bits: bits })),
+        "sqrt" => Some(Box::new(Sqrt { in_bits: bits, out_bits: bits })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recip_edges() {
+        let f = Recip { in_bits: 16, out_bits: 16 };
+        // z = 0: f = 1.0 -> Y = 2^16 exactly.
+        assert_eq!(f.floor_y(0), (1 << 16, true));
+        // z = max: f -> just above 1/2, Y = 2^16/(2^17-1) ~ 0.49997.
+        let (fl, ex) = f.floor_y((1 << 16) - 1);
+        assert_eq!(fl, 0);
+        assert!(!ex);
+    }
+
+    #[test]
+    fn recip_monotone_decreasing() {
+        let f = Recip { in_bits: 12, out_bits: 12 };
+        let mut prev = i64::MAX;
+        for z in 0..(1u64 << 12) {
+            let (fl, _) = f.floor_y(z);
+            assert!(fl <= prev);
+            prev = fl;
+        }
+    }
+
+    #[test]
+    fn log2_monotone_and_range() {
+        let f = Log2 { in_bits: 10, out_bits: 11 };
+        let mut prev = -1i64;
+        for z in 0..(1u64 << 10) {
+            let (fl, _) = f.floor_y(z);
+            assert!(fl >= prev);
+            assert!(fl >= 0 && fl < (1 << 11));
+            prev = fl;
+        }
+    }
+
+    #[test]
+    fn exp2_monotone_and_range() {
+        let f = Exp2 { in_bits: 10, out_bits: 10 };
+        let mut prev = -1i64;
+        for z in 0..(1u64 << 10) {
+            let (fl, _) = f.floor_y(z);
+            assert!(fl >= prev);
+            assert!(fl >= 0 && fl < (1 << 10));
+            prev = fl;
+        }
+    }
+
+    #[test]
+    fn sqrt_exact_squares() {
+        let f = Sqrt { in_bits: 8, out_bits: 8 };
+        // z such that 1+z/256 = (1+k/256)^2 ... check z=0 exact.
+        assert_eq!(f.floor_y(0), (0, true));
+        let mut prev = -1i64;
+        for z in 0..256u64 {
+            let (fl, _) = f.floor_y(z);
+            assert!(fl >= prev);
+            prev = fl;
+        }
+    }
+
+    #[test]
+    fn floors_match_f64() {
+        for b in [8u32, 10] {
+            for name in ["recip", "log2", "exp2", "sqrt"] {
+                let f = builtin(name, b).unwrap();
+                for z in 0..(1u64 << b) {
+                    let (fl, ex) = f.floor_y(z);
+                    let y = f.y_f64(z);
+                    if ex {
+                        assert!((y - fl as f64).abs() < 1e-6, "{name} z={z}");
+                    } else {
+                        assert_eq!(fl, y.floor() as i64, "{name} z={z} y={y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn custom_f64_sin() {
+        let f = CustomF64 {
+            name: "sinpi4".into(),
+            in_bits: 8,
+            out_bits: 8,
+            f: |x: f64| (std::f64::consts::FRAC_PI_4 * x).sin(),
+            margin: 1e-9,
+        };
+        let (fl, _) = f.floor_y(128);
+        let expect = ((std::f64::consts::FRAC_PI_4 * 0.5).sin() * 256.0).floor() as i64;
+        assert_eq!(fl, expect);
+    }
+}

@@ -1,0 +1,195 @@
+//! Accuracy specifications and integer bound tables (the paper's `l`, `u`).
+//!
+//! The design space is defined relative to integer bound functions
+//! `l, u : [0, 2^(n+m)) -> Z` such that every acceptable hardware output
+//! `out(Z)` satisfies `l(Z) <= out(Z) <= u(Z)`. This module derives those
+//! bounds from a [`TargetFunction`]'s exact floors under an
+//! [`AccuracySpec`], clamps them to the output format (realizing output
+//! saturation at the domain edges), and materializes them as flat tables.
+
+pub mod exact;
+pub mod functions;
+
+pub use functions::{builtin, CustomF64, Exp2, Log2, Recip, Sqrt, TargetFunction};
+
+/// How much error the generated hardware may commit, in output ULPs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AccuracySpec {
+    /// `|out - Y| <= e` (the paper's "one ULP", `e = 1`, matching the
+    /// FloPoCo / DesignWare defaults it compares against).
+    Ulp(u32),
+    /// Faithful rounding, `|out - Y| < 1`: one of the two neighbouring
+    /// representable values (exact values must be returned exactly).
+    Faithful,
+}
+
+impl AccuracySpec {
+    /// Integer bounds `(l, u)` for an exact scaled value with
+    /// `floor(Y) = fl` and exactness flag `ex`, before clamping.
+    pub fn bounds_of_floor(&self, fl: i64, ex: bool) -> (i64, i64) {
+        match *self {
+            AccuracySpec::Ulp(e) => {
+                let e = e as i64;
+                // l = ceil(Y - e), u = floor(Y + e).
+                if ex {
+                    (fl - e, fl + e)
+                } else {
+                    (fl + 1 - e, fl + e)
+                }
+            }
+            AccuracySpec::Faithful => {
+                if ex {
+                    (fl, fl)
+                } else {
+                    (fl, fl + 1)
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AccuracySpec::Ulp(e) => format!("{e}ulp"),
+            AccuracySpec::Faithful => "faithful".into(),
+        }
+    }
+}
+
+/// Flat per-input integer bounds over the whole input space.
+///
+/// `l`/`u` are `i32`: every format this tool supports has `p + q <= 30`
+/// output bits, and bounds are clamped into `[0, 2^q - 1]`.
+#[derive(Clone)]
+pub struct BoundTable {
+    /// Stored input bits (table length is `2^in_bits`).
+    pub in_bits: u32,
+    /// Stored output bits `q`.
+    pub out_bits: u32,
+    pub l: Vec<i32>,
+    pub u: Vec<i32>,
+    /// Function identifier (for cache keys / reports).
+    pub func: String,
+    /// Accuracy label (for cache keys / reports).
+    pub accuracy: String,
+}
+
+impl BoundTable {
+    /// Evaluate the function's exact floors over the full input space and
+    /// derive clamped bounds.
+    pub fn build(f: &dyn TargetFunction, acc: AccuracySpec) -> BoundTable {
+        let n = 1u64 << f.in_bits();
+        let out_max = (1i64 << f.out_bits()) - 1;
+        let mut l = Vec::with_capacity(n as usize);
+        let mut u = Vec::with_capacity(n as usize);
+        for z in 0..n {
+            let (fl, ex) = f.floor_y(z);
+            let (lo, hi) = acc.bounds_of_floor(fl, ex);
+            let (lo, hi) = (lo.clamp(0, out_max), hi.clamp(0, out_max));
+            assert!(
+                lo <= hi,
+                "infeasible accuracy spec at z={z}: bounds [{lo}, {hi}] empty after \
+                 clamping to [0, {out_max}]"
+            );
+            l.push(lo as i32);
+            u.push(hi as i32);
+        }
+        BoundTable {
+            in_bits: f.in_bits(),
+            out_bits: f.out_bits(),
+            l,
+            u,
+            func: f.name().to_string(),
+            accuracy: acc.label(),
+        }
+    }
+
+    /// Construct directly from explicit bound vectors (tests, custom specs).
+    pub fn from_vecs(in_bits: u32, out_bits: u32, l: Vec<i32>, u: Vec<i32>) -> BoundTable {
+        assert_eq!(l.len(), 1usize << in_bits);
+        assert_eq!(u.len(), l.len());
+        assert!(l.iter().zip(&u).all(|(a, b)| a <= b), "l > u somewhere");
+        BoundTable { in_bits, out_bits, l, u, func: "custom".into(), accuracy: "custom".into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.l.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.l.is_empty()
+    }
+
+    /// The per-region slices for `R` lookup bits: region `r` covers codes
+    /// `[r * 2^xbits, (r+1) * 2^xbits)`.
+    pub fn region(&self, lookup_bits: u32, r: u64) -> (&[i32], &[i32]) {
+        let xbits = self.in_bits - lookup_bits;
+        let n = 1usize << xbits;
+        let base = (r as usize) << xbits;
+        (&self.l[base..base + n], &self.u[base..base + n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp1_bounds_nonexact() {
+        // Y = 7.3 -> floor 7, not exact: l = 7, u = 8.
+        assert_eq!(AccuracySpec::Ulp(1).bounds_of_floor(7, false), (7, 8));
+        // Y = 7 exactly: l = 6, u = 8.
+        assert_eq!(AccuracySpec::Ulp(1).bounds_of_floor(7, true), (6, 8));
+        assert_eq!(AccuracySpec::Faithful.bounds_of_floor(7, false), (7, 8));
+        assert_eq!(AccuracySpec::Faithful.bounds_of_floor(7, true), (7, 7));
+        assert_eq!(AccuracySpec::Ulp(2).bounds_of_floor(7, false), (6, 9));
+    }
+
+    #[test]
+    fn recip_table_saturates_at_zero_input() {
+        let f = Recip { in_bits: 8, out_bits: 8 };
+        let t = BoundTable::build(&f, AccuracySpec::Ulp(1));
+        // z=0: Y = 256 (exact), clamp to 255: bounds [255, 255].
+        assert_eq!((t.l[0], t.u[0]), (255, 255));
+        assert_eq!(t.len(), 256);
+        for i in 0..t.len() {
+            assert!(t.l[i] <= t.u[i]);
+            assert!(t.l[i] >= 0 && t.u[i] <= 255);
+        }
+    }
+
+    #[test]
+    fn regions_partition_table() {
+        let f = Log2 { in_bits: 8, out_bits: 9 };
+        let t = BoundTable::build(&f, AccuracySpec::Ulp(1));
+        let mut seen = 0usize;
+        for r in 0..16u64 {
+            let (l, u) = t.region(4, r);
+            assert_eq!(l.len(), 16);
+            assert_eq!(u.len(), 16);
+            seen += l.len();
+        }
+        assert_eq!(seen, t.len());
+        // Region 0 starts at the table start.
+        assert_eq!(t.region(4, 0).0[0], t.l[0]);
+        // Last region ends at the table end.
+        assert_eq!(*t.region(4, 15).0.last().unwrap(), *t.l.last().unwrap());
+    }
+
+    #[test]
+    fn bounds_contain_true_value() {
+        for name in ["recip", "log2", "exp2", "sqrt"] {
+            let f = builtin(name, 8).unwrap();
+            let t = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+            for z in 0..(1u64 << 8) {
+                let y = f.y_f64(z);
+                let lo = t.l[z as usize] as f64;
+                let hi = t.u[z as usize] as f64;
+                // Within 1 ulp (plus clamping slack at the edges).
+                assert!(
+                    y >= lo - 1.0 - 1e-9 && y <= hi + 1.0 + 1e-9,
+                    "{name} z={z}: y={y} not within [{lo}-1, {hi}+1]"
+                );
+            }
+        }
+    }
+}

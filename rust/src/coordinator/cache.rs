@@ -1,0 +1,196 @@
+//! Design-space disk cache.
+//!
+//! Generating a space is the expensive step (exponential in precision),
+//! and downstream exploration is tuned per hardware target — the paper's
+//! core argument for generating the *complete* space once. This cache
+//! makes that concrete: `.pgds` files store the full region dictionaries
+//! in a small versioned little-endian binary format (hand-rolled; no
+//! serde offline).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::designspace::region::{AbEntry, RegionSpace};
+use crate::designspace::DesignSpace;
+
+const MAGIC: &[u8; 4] = b"PGDS";
+const VERSION: u32 = 2;
+
+fn w_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_str(out: &mut Vec<u8>, s: &str) {
+    w_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err("truncated cache file".into());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| e.to_string())
+    }
+}
+
+/// Serialize a design space (region dictionaries + metadata; the real
+/// analyses are recomputable and not stored).
+pub fn to_bytes(ds: &DesignSpace) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    w_u32(&mut out, VERSION);
+    w_str(&mut out, &ds.func);
+    w_str(&mut out, &ds.accuracy);
+    w_u32(&mut out, ds.in_bits);
+    w_u32(&mut out, ds.out_bits);
+    w_u32(&mut out, ds.lookup_bits);
+    w_u32(&mut out, ds.k);
+    w_u64(&mut out, ds.dd_evals);
+    w_u32(&mut out, ds.regions.len() as u32);
+    for sp in &ds.regions {
+        w_u64(&mut out, sp.r);
+        w_u32(&mut out, sp.linear_ok as u32);
+        w_u32(&mut out, sp.entries.len() as u32);
+        for e in &sp.entries {
+            w_i64(&mut out, e.a);
+            w_i64(&mut out, e.b_lo);
+            w_i64(&mut out, e.b_hi);
+        }
+    }
+    out
+}
+
+/// Deserialize; `analyses` comes back empty (recompute when needed).
+pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err("not a .pgds file".into());
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        return Err(format!("cache version {ver}, expected {VERSION}"));
+    }
+    let func = r.string()?;
+    let accuracy = r.string()?;
+    let in_bits = r.u32()?;
+    let out_bits = r.u32()?;
+    let lookup_bits = r.u32()?;
+    let k = r.u32()?;
+    let dd_evals = r.u64()?;
+    let nregions = r.u32()? as usize;
+    let mut regions = Vec::with_capacity(nregions);
+    for _ in 0..nregions {
+        let rr = r.u64()?;
+        let linear_ok = r.u32()? != 0;
+        let nent = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(nent);
+        for _ in 0..nent {
+            entries.push(AbEntry { a: r.i64()?, b_lo: r.i64()?, b_hi: r.i64()? });
+        }
+        regions.push(RegionSpace { r: rr, k, entries, linear_ok });
+    }
+    if r.pos != buf.len() {
+        return Err("trailing bytes in cache file".into());
+    }
+    Ok(DesignSpace {
+        func,
+        accuracy,
+        in_bits,
+        out_bits,
+        lookup_bits,
+        k,
+        regions,
+        analyses: Vec::new(),
+        dd_evals,
+    })
+}
+
+/// Canonical cache path for a workload.
+pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, r: u32) -> PathBuf {
+    dir.join(format!("{func}_{acc}_{in_bits}b_R{r}.pgds"))
+}
+
+pub fn save(ds: &DesignSpace, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(ds))
+}
+
+pub fn load(path: &Path) -> Result<DesignSpace, String> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .read_to_end(&mut buf)
+        .map_err(|e| e.to_string())?;
+    from_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+
+    #[test]
+    fn roundtrip_preserves_everything_needed() {
+        let f = builtin("log2", 10).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: 5, ..Default::default() }).unwrap();
+        let back = from_bytes(&to_bytes(&ds)).unwrap();
+        assert_eq!(back.func, ds.func);
+        assert_eq!(back.k, ds.k);
+        assert_eq!(back.lookup_bits, ds.lookup_bits);
+        assert_eq!(back.regions.len(), ds.regions.len());
+        for (a, b) in ds.regions.iter().zip(&back.regions) {
+            assert_eq!(a.entries, b.entries);
+            assert_eq!(a.linear_ok, b.linear_ok);
+        }
+        // A cached space must drive the DSE identically.
+        let im1 = crate::dse::explore(&bt, &ds, &Default::default()).unwrap();
+        let im2 = crate::dse::explore(&bt, &back, &Default::default()).unwrap();
+        assert_eq!(im1.coeffs, im2.coeffs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_bytes(b"nope").is_err());
+        assert!(from_bytes(b"PGDS\x09\x00\x00\x00").is_err());
+        let f = builtin("exp2", 8).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() }).unwrap();
+        let mut bytes = to_bytes(&ds);
+        bytes.push(0); // trailing byte
+        assert!(from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal configuration system: a TOML-subset parser (sections,
+//! `key = value`, comments) plus typed accessors and CLI-style overrides.
+//!
+//! No third-party crates are available offline, so this is hand-rolled;
+//! it supports exactly what `polygen` job files need — see
+//! `examples/configs/` for samples.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration: `section.key -> string value` (top-level keys
+/// live under the empty section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected `key = value`", ln + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn set(&mut self, kv: &str) -> Result<(), String> {
+        let (k, v) = kv.split_once('=').ok_or("override must be key=value")?;
+        self.values.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str) -> Result<Option<u32>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| format!("{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "yes" | "1" => Ok(true),
+                "false" | "no" | "0" => Ok(false),
+                other => Err(format!("{key}: not a bool: {other}")),
+            })
+            .transpose()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_overrides() {
+        let mut c = Config::parse(
+            "# job file\nfunc = recip\nbits = 16\n[generate]\nlookup_bits = 8 # LUB\nsearch = \"pruned\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("func"), Some("recip"));
+        assert_eq!(c.get_u32("bits").unwrap(), Some(16));
+        assert_eq!(c.get("generate.lookup_bits"), Some("8"));
+        assert_eq!(c.get("generate.search"), Some("pruned"));
+        c.set("generate.lookup_bits=9").unwrap();
+        assert_eq!(c.get_u32("generate.lookup_bits").unwrap(), Some(9));
+        assert_eq!(c.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+        let c = Config::parse("flag = maybe").unwrap();
+        assert!(c.get_bool("flag").is_err());
+    }
+}

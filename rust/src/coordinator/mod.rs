@@ -1,0 +1,239 @@
+//! Workload orchestration: prepared workloads, cached generation, and
+//! multi-`R` sweeps across worker threads.
+//!
+//! This is the "coordinator" layer of the three-layer architecture: it
+//! owns job configuration ([`config`]), persistent design-space caching
+//! ([`cache`]), and the parallel sweeps (the paper's "parallelism" item)
+//! that the report generators and the CLI drive.
+
+pub mod cache;
+pub mod config;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
+use crate::designspace::{generate, DesignSpace, GenError, GenOptions};
+use crate::dse::{explore, DseOptions, Implementation};
+use crate::synth::{synth_min_delay, SynthPoint};
+
+/// A prepared workload: the function and its bound table.
+pub struct Workload {
+    pub func: Box<dyn TargetFunction>,
+    pub bt: BoundTable,
+    pub accuracy: AccuracySpec,
+}
+
+impl Workload {
+    /// Prepare a built-in function at the paper's precision conventions.
+    pub fn prepare(name: &str, bits: u32, acc: AccuracySpec) -> Option<Workload> {
+        let func = builtin(name, bits)?;
+        let bt = BoundTable::build(func.as_ref(), acc);
+        Some(Workload { func, bt, accuracy: acc })
+    }
+}
+
+/// One point of a lookup-bit sweep.
+pub struct SweepPoint {
+    pub lookup_bits: u32,
+    /// Generation wall-clock.
+    pub gen_time: Duration,
+    /// Generation outcome.
+    pub space: Result<DesignSpace, GenError>,
+    /// DSE result (when generation succeeded).
+    pub implementation: Option<Implementation>,
+    /// Min-delay synthesis point (when DSE succeeded).
+    pub synth: Option<SynthPoint>,
+}
+
+impl SweepPoint {
+    pub fn area_delay(&self) -> Option<f64> {
+        self.synth.map(|p| p.area_delay())
+    }
+}
+
+/// Generate + explore + cost one `R` value.
+pub fn run_point(w: &Workload, r: u32, gen: &GenOptions, dse: &DseOptions) -> SweepPoint {
+    let opts = GenOptions { lookup_bits: r, ..*gen };
+    let t0 = Instant::now();
+    let space = generate(&w.bt, &opts);
+    let gen_time = t0.elapsed();
+    let implementation = space.as_ref().ok().and_then(|ds| explore(&w.bt, ds, dse));
+    let synth = implementation.as_ref().map(synth_min_delay);
+    SweepPoint { lookup_bits: r, gen_time, space, implementation, synth }
+}
+
+/// Sweep `R` across `r_values`, distributing points over `threads`
+/// workers (each point runs single-threaded generation).
+pub fn sweep_lub(
+    w: &Workload,
+    r_values: &[u32],
+    gen: &GenOptions,
+    dse: &DseOptions,
+    threads: usize,
+) -> Vec<SweepPoint> {
+    if threads <= 1 || r_values.len() <= 1 {
+        return r_values.iter().map(|&r| run_point(w, r, gen, dse)).collect();
+    }
+    let mut out: Vec<Option<SweepPoint>> = Vec::new();
+    out.resize_with(r_values.len(), || None);
+    let chunk = r_values.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (slot, rs) in out.chunks_mut(chunk).zip(r_values.chunks(chunk)) {
+            scope.spawn(move || {
+                for (s, &r) in slot.iter_mut().zip(rs) {
+                    *s = Some(run_point(w, r, gen, dse));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|p| p.expect("sweep worker missed a point")).collect()
+}
+
+/// The best point of a sweep by area-delay product (the paper's Table I
+/// LUB selection rule).
+pub fn best_by_adp(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .filter(|p| p.synth.is_some())
+        .min_by(|a, b| a.area_delay().partial_cmp(&b.area_delay()).unwrap())
+}
+
+/// Objective for automatic lookup-bit selection.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LubObjective {
+    Area,
+    Delay,
+    AreaDelay,
+}
+
+/// The paper's stated future work — "a decision procedure to choose the
+/// optimal number of lookup bits" — realized: sweep the default `R` range
+/// and select by the requested hardware objective. Returns the chosen
+/// point (with its implementation) or `None` if nothing is feasible.
+pub fn auto_lub(
+    w: &Workload,
+    objective: LubObjective,
+    gen: &GenOptions,
+    dse: &DseOptions,
+    threads: usize,
+) -> Option<SweepPoint> {
+    let pts = sweep_lub(w, &default_r_range(w.bt.in_bits), gen, dse, threads);
+    let key = |p: &SweepPoint| -> Option<f64> {
+        p.synth.map(|sp| match objective {
+            LubObjective::Area => sp.area_um2,
+            LubObjective::Delay => sp.delay_ns,
+            LubObjective::AreaDelay => sp.area_delay(),
+        })
+    };
+    pts.into_iter()
+        .filter(|p| p.synth.is_some())
+        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+}
+
+/// Generate with a disk cache under `dir` (hit = parse + return).
+pub fn generate_cached(
+    w: &Workload,
+    r: u32,
+    gen: &GenOptions,
+    dir: &PathBuf,
+) -> Result<DesignSpace, GenError> {
+    let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, r);
+    if let Ok(ds) = cache::load(&path) {
+        if ds.in_bits == w.bt.in_bits && ds.out_bits == w.bt.out_bits {
+            return Ok(ds);
+        }
+    }
+    let opts = GenOptions { lookup_bits: r, ..*gen };
+    let ds = generate(&w.bt, &opts)?;
+    let _ = cache::save(&ds, &path); // best-effort
+    Ok(ds)
+}
+
+/// Default `R` sweep range for a precision: keep regions at most 2^10
+/// points (generation stays interactive) and at least 4 points.
+pub fn default_r_range(in_bits: u32) -> Vec<u32> {
+    let lo = in_bits.saturating_sub(10).max(2);
+    let hi = in_bits.saturating_sub(2).min(11);
+    (lo..=hi).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_parallel_equals_serial() {
+        let w = Workload::prepare("recip", 10, AccuracySpec::Ulp(1)).unwrap();
+        let rs = [4u32, 5, 6, 7];
+        let gen = GenOptions::default();
+        let dse = DseOptions::default();
+        let a = sweep_lub(&w, &rs, &gen, &dse, 1);
+        let b = sweep_lub(&w, &rs, &gen, &dse, 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.lookup_bits, y.lookup_bits);
+            assert_eq!(x.space.is_ok(), y.space.is_ok());
+            match (&x.implementation, &y.implementation) {
+                (Some(ix), Some(iy)) => assert_eq!(ix.coeffs, iy.coeffs),
+                (None, None) => {}
+                _ => panic!("parallel/serial divergence at R={}", x.lookup_bits),
+            }
+        }
+    }
+
+    #[test]
+    fn best_by_adp_picks_minimum() {
+        let w = Workload::prepare("log2", 10, AccuracySpec::Ulp(1)).unwrap();
+        let pts = sweep_lub(
+            &w,
+            &default_r_range(10),
+            &GenOptions::default(),
+            &DseOptions::default(),
+            2,
+        );
+        let best = best_by_adp(&pts).expect("some R must work");
+        for p in &pts {
+            if let Some(adp) = p.area_delay() {
+                assert!(best.area_delay().unwrap() <= adp + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_lub_objectives_pick_feasible_optima() {
+        let w = Workload::prepare("log2", 10, AccuracySpec::Ulp(1)).unwrap();
+        let gen = GenOptions::default();
+        let dse = DseOptions::default();
+        let area = auto_lub(&w, LubObjective::Area, &gen, &dse, 2).unwrap();
+        let delay = auto_lub(&w, LubObjective::Delay, &gen, &dse, 2).unwrap();
+        let adp = auto_lub(&w, LubObjective::AreaDelay, &gen, &dse, 2).unwrap();
+        // Each winner must be at least as good as the others on its own
+        // metric.
+        assert!(area.synth.unwrap().area_um2 <= adp.synth.unwrap().area_um2 + 1e-9);
+        assert!(delay.synth.unwrap().delay_ns <= area.synth.unwrap().delay_ns + 1e-9);
+        // And the implementations verify (spot).
+        for p in [&area, &delay, &adp] {
+            let im = p.implementation.as_ref().unwrap();
+            for z in (0..(1u64 << 10)).step_by(17) {
+                let y = im.eval(z);
+                assert!(y >= w.bt.l[z as usize] as i64 && y <= w.bt.u[z as usize] as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_through_generate_cached() {
+        let w = Workload::prepare("exp2", 8, AccuracySpec::Ulp(1)).unwrap();
+        let dir = std::env::temp_dir().join("polygen_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let gen = GenOptions::default();
+        let a = generate_cached(&w, 4, &gen, &dir).unwrap();
+        let b = generate_cached(&w, 4, &gen, &dir).unwrap(); // cache hit
+        assert_eq!(a.k, b.k);
+        for (x, y) in a.regions.iter().zip(&b.regions) {
+            assert_eq!(x.entries, y.entries);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,398 @@
+//! Divided-difference extremum searches — the computational core of design
+//! space generation (paper §II-A).
+//!
+//! Two kinds of search appear:
+//!
+//! 1. **Diagonal extrema** `M(t) = max_{x<y, x+y=t} (l(y)-u(x)-1)/(y-x)`
+//!    and `m(t) = min_{w<z, w+z=t} (u(z)+1-l(w))/(z-w)` over a region's
+//!    bound slices — O(N²) over all diagonals; this is the part the XLA /
+//!    Pallas kernel can also compute (see `python/compile/kernels/`).
+//!
+//! 2. **2-D searches of the form `max_{x<y} D(x,y)`,
+//!    `D(x,y) = (g(y)-h(x))/(y-x)`** — the Eqn 10 bounds on `a` (over
+//!    diagonal index pairs `t < s`) and, in the paper-faithful per-`a`
+//!    path, the Eqn 3/4 bounds on `b`. These are the searches **Claim
+//!    II.1** prunes: iterating `x` in ascending order with the incumbent
+//!    `(x', y')`, the whole inner loop over `y` can be skipped whenever
+//!    `D(x', y') <= (h(x) - h(x'))/(x - x')`.
+//!
+//! All comparisons are exact (integer cross-multiplication / `Rat`).
+
+use crate::rational::Rat;
+
+/// Which implementation the generator uses for the Claim II.1-prunable
+/// searches. `Naive` exists for the E5 benchmark and the equivalence
+/// property tests.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SearchStrategy {
+    Naive,
+    Pruned,
+}
+
+/// Result of a 2-D divided-difference search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DdMax {
+    pub value: Rat,
+    pub x: usize,
+    pub y: usize,
+    /// Number of `D` evaluations performed (for the speedup benches).
+    pub evals: u64,
+}
+
+/// `max_{x<y} (g(y) - h(x)) / (y - x)` by exhaustive scan.
+/// Returns `None` when fewer than two points.
+pub fn max_dd_naive(g: &[Rat], h: &[Rat]) -> Option<DdMax> {
+    let n = g.len();
+    assert_eq!(n, h.len());
+    let mut best: Option<DdMax> = None;
+    let mut evals = 0u64;
+    for x in 0..n.saturating_sub(1) {
+        for y in x + 1..n {
+            let d = g[y].sub(&h[x]).div(&Rat::int((y - x) as i128));
+            evals += 1;
+            if best.map_or(true, |b| b.value.lt(&d)) {
+                best = Some(DdMax { value: d, x, y, evals: 0 });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.evals = evals;
+        b
+    })
+}
+
+/// `max_{x<y} (g(y) - h(x)) / (y - x)` with the Claim II.1 skip rule.
+///
+/// Invariant maintained: `best` is the maximum over all pairs with first
+/// argument `<= x` processed so far. For a new `x`, if
+/// `best.value <= (h(x) - h(best.x)) / (x - best.x)` then (Claim II.1) no
+/// `y` can improve on `best`, and the inner loop is skipped entirely.
+pub fn max_dd_pruned(g: &[Rat], h: &[Rat]) -> Option<DdMax> {
+    let n = g.len();
+    assert_eq!(n, h.len());
+    if n < 2 {
+        return None;
+    }
+    let mut best: Option<DdMax> = None;
+    let mut evals = 0u64;
+    for x in 0..n - 1 {
+        if let Some(b) = best {
+            debug_assert!(x > b.x);
+            let slope = h[x].sub(&h[b.x]).div(&Rat::int((x - b.x) as i128));
+            if b.value.le(&slope) {
+                continue; // Claim II.1: no y improves the incumbent
+            }
+        }
+        for y in x + 1..n {
+            let d = g[y].sub(&h[x]).div(&Rat::int((y - x) as i128));
+            evals += 1;
+            if best.map_or(true, |b| b.value.lt(&d)) {
+                best = Some(DdMax { value: d, x, y, evals: 0 });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.evals = evals;
+        b
+    })
+}
+
+/// `min_{x<y} (g(y) - h(x)) / (y - x)` via the max search on negated data.
+pub fn min_dd(g: &[Rat], h: &[Rat], strategy: SearchStrategy) -> Option<DdMax> {
+    // (g(y)-h(x))/(y-x) = -[((-g)(y) - (-h)(x))/(y-x)], so the min is the
+    // negated max over g' = -g, h' = -h.
+    let ng: Vec<Rat> = g.iter().map(|v| v.neg()).collect();
+    let nh: Vec<Rat> = h.iter().map(|v| v.neg()).collect();
+    let r = match strategy {
+        SearchStrategy::Naive => max_dd_naive(&ng, &nh),
+        SearchStrategy::Pruned => max_dd_pruned(&ng, &nh),
+    };
+    r.map(|mut b| {
+        b.value = b.value.neg();
+        b
+    })
+}
+
+/// An unreduced `i128` fraction with positive denominator — the gcd-free
+/// representation the *fast* search paths use (§Perf: reducing through
+/// `Rat::new`'s gcd on every divided difference dominated generation
+/// time). Magnitude analysis for every caller in this crate: numerators
+/// stay below 2^60 and denominators below 2^40, so cross-multiplied
+/// comparisons fit `i128` with >25 bits of headroom; debug assertions
+/// guard the products.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RawFrac {
+    pub num: i128,
+    pub den: i128,
+}
+
+impl RawFrac {
+    #[inline]
+    pub fn from_rat(r: &Rat) -> RawFrac {
+        RawFrac { num: r.num(), den: r.den() }
+    }
+
+    #[inline]
+    pub fn to_rat(&self) -> Rat {
+        Rat::new(self.num, self.den)
+    }
+
+    /// `self < o` by cross multiplication (both dens > 0).
+    #[inline]
+    pub fn lt(&self, o: &RawFrac) -> bool {
+        debug_assert!(self.den > 0 && o.den > 0);
+        debug_assert!(
+            self.num.checked_mul(o.den).is_some() && o.num.checked_mul(self.den).is_some(),
+            "RawFrac comparison overflow"
+        );
+        self.num * o.den < o.num * self.den
+    }
+
+    #[inline]
+    pub fn le(&self, o: &RawFrac) -> bool {
+        !o.lt(self)
+    }
+}
+
+/// Gcd-free `max_{x<y} (g(y) - h(x)) / (y - x)` over raw fractions.
+/// `pruned` selects the Claim II.1 skip rule. Identical results to the
+/// `Rat` implementations (property-tested).
+pub fn max_dd_fracs(g: &[RawFrac], h: &[RawFrac], pruned: bool) -> Option<DdMax> {
+    let n = g.len();
+    assert_eq!(n, h.len());
+    if n < 2 {
+        return None;
+    }
+    let mut best: Option<(RawFrac, usize, usize)> = None;
+    let mut evals = 0u64;
+    for x in 0..n - 1 {
+        if pruned {
+            if let Some((bd, bx, _)) = best {
+                // Claim II.1: slope = (h(x) - h(bx)) / (x - bx).
+                let slope = RawFrac {
+                    num: h[x].num * h[bx].den - h[bx].num * h[x].den,
+                    den: h[x].den * h[bx].den * (x - bx) as i128,
+                };
+                if bd.le(&slope) {
+                    continue;
+                }
+            }
+        }
+        for y in x + 1..n {
+            let d = RawFrac {
+                num: g[y].num * h[x].den - h[x].num * g[y].den,
+                den: g[y].den * h[x].den * (y - x) as i128,
+            };
+            evals += 1;
+            if best.map_or(true, |(b, _, _)| b.lt(&d)) {
+                best = Some((d, x, y));
+            }
+        }
+    }
+    best.map(|(v, x, y)| DdMax { value: v.to_rat(), x, y, evals })
+}
+
+/// An unreduced small fraction with positive denominator, used in the hot
+/// diagonal loops (`i64` numerators, cross-multiplied in `i128`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Frac {
+    pub num: i64,
+    pub den: i64,
+}
+
+impl Frac {
+    #[inline]
+    pub fn lt(&self, o: &Frac) -> bool {
+        debug_assert!(self.den > 0 && o.den > 0);
+        (self.num as i128) * (o.den as i128) < (o.num as i128) * (self.den as i128)
+    }
+
+    pub fn to_rat(self) -> Rat {
+        Rat::new(self.num as i128, self.den as i128)
+    }
+}
+
+/// Per-diagonal extrema of a region's bound slices.
+///
+/// `m_upper[t-1]` = the paper's `m(r, t)` (min of upper-chord slopes) and
+/// `m_lower[t-1]` = `M(r, t)` (max of lower-chord slopes), for diagonals
+/// `t in [1, 2N-3]`; a region needs `N >= 2`.
+#[derive(Clone, Debug)]
+pub struct DiagExtrema {
+    /// `M(t)`, indexed by `t - 1`.
+    pub big_m: Vec<Rat>,
+    /// `m(t)`, indexed by `t - 1`.
+    pub small_m: Vec<Rat>,
+}
+
+/// Compute `M(t)`/`m(t)` for all diagonals by direct scan — O(N²) total.
+pub fn diagonal_extrema(l: &[i32], u: &[i32]) -> DiagExtrema {
+    let n = l.len();
+    assert_eq!(n, u.len());
+    assert!(n >= 2, "diagonal extrema need at least 2 points");
+    let tmax = 2 * n - 3; // largest t with an x < y pair
+    let mut big_m = Vec::with_capacity(tmax);
+    let mut small_m = Vec::with_capacity(tmax);
+    for t in 1..=tmax {
+        // x < y, x + y = t, both in [0, n): x in [max(0, t-n+1), ceil(t/2)-1].
+        let x0 = t.saturating_sub(n - 1);
+        let x1 = (t - 1) / 2;
+        let mut best_m = Frac { num: i64::MIN / 4, den: 1 }; // M: max
+        let mut best_s = Frac { num: i64::MAX / 4, den: 1 }; // m: min
+        for x in x0..=x1 {
+            let y = t - x;
+            let den = (y - x) as i64;
+            // M candidate: (l(y) - u(x) - 1) / (y - x)
+            let fm = Frac { num: l[y] as i64 - u[x] as i64 - 1, den };
+            if best_m.lt(&fm) {
+                best_m = fm;
+            }
+            // m candidate: (u(y) + 1 - l(x)) / (y - x)
+            let fs = Frac { num: u[y] as i64 + 1 - l[x] as i64, den };
+            if fs.lt(&best_s) {
+                best_s = fs;
+            }
+        }
+        big_m.push(best_m.to_rat());
+        small_m.push(best_s.to_rat());
+    }
+    DiagExtrema { big_m, small_m }
+}
+
+/// Construct `DiagExtrema` from raw `(num, den)` pairs, e.g. as returned by
+/// the XLA extrema kernel. Entries with `den == 0` are invalid.
+pub fn diag_extrema_from_fracs(
+    m_pairs: &[(i64, i64)],
+    s_pairs: &[(i64, i64)],
+    tmax: usize,
+) -> DiagExtrema {
+    let mut big_m = Vec::with_capacity(tmax);
+    let mut small_m = Vec::with_capacity(tmax);
+    for t in 0..tmax {
+        let (mn, md) = m_pairs[t];
+        let (sn, sd) = s_pairs[t];
+        assert!(md > 0 && sd > 0, "invalid diagonal {t} from kernel");
+        big_m.push(Rat::new(mn as i128, md as i128));
+        small_m.push(Rat::new(sn as i128, sd as i128));
+    }
+    DiagExtrema { big_m, small_m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{for_each_seed, Rng};
+
+    fn rand_rats(rng: &mut Rng, n: usize, mag: i64) -> Vec<Rat> {
+        (0..n).map(|_| Rat::int(rng.range_i64(-mag, mag) as i128)).collect()
+    }
+
+    #[test]
+    fn pruned_equals_naive_property() {
+        for_each_seed(60, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let g = rand_rats(rng, n, 50);
+            let h = rand_rats(rng, n, 50);
+            let a = max_dd_naive(&g, &h).unwrap();
+            let b = max_dd_pruned(&g, &h).unwrap();
+            assert_eq!(a.value, b.value, "g={g:?} h={h:?}");
+            // Pruned must never evaluate more than naive.
+            assert!(b.evals <= a.evals);
+        });
+    }
+
+    #[test]
+    fn min_dd_equals_negated_naive() {
+        for_each_seed(40, |rng| {
+            let n = 2 + rng.below(20) as usize;
+            let g = rand_rats(rng, n, 30);
+            let h = rand_rats(rng, n, 30);
+            let mn = min_dd(&g, &h, SearchStrategy::Pruned).unwrap();
+            // Brute force min.
+            let mut best: Option<Rat> = None;
+            for x in 0..n - 1 {
+                for y in x + 1..n {
+                    let d = g[y].sub(&h[x]).div(&Rat::int((y - x) as i128));
+                    if best.map_or(true, |b| d.lt(&b)) {
+                        best = Some(d);
+                    }
+                }
+            }
+            assert_eq!(mn.value, best.unwrap());
+        });
+    }
+
+    #[test]
+    fn pruning_actually_skips_on_smooth_data() {
+        // Steeply increasing h with flat g puts the maximum at small x and
+        // makes the Claim II.1 skip rule fire on every later x.
+        let n = 200usize;
+        let g: Vec<Rat> = (0..n).map(|_| Rat::ZERO).collect();
+        let h: Vec<Rat> = (0..n).map(|i| Rat::int((i * i) as i128)).collect();
+        let a = max_dd_naive(&g, &h).unwrap();
+        let b = max_dd_pruned(&g, &h).unwrap();
+        assert_eq!(a.value, b.value);
+        assert!(
+            b.evals * 3 < a.evals,
+            "expected substantial pruning: naive={} pruned={}",
+            a.evals,
+            b.evals
+        );
+    }
+
+    #[test]
+    fn raw_frac_search_equals_rat_search() {
+        for_each_seed(60, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let g = rand_rats(rng, n, 50);
+            let h = rand_rats(rng, n, 50);
+            let gr: Vec<RawFrac> = g.iter().map(RawFrac::from_rat).collect();
+            let hr: Vec<RawFrac> = h.iter().map(RawFrac::from_rat).collect();
+            let want = max_dd_naive(&g, &h).unwrap();
+            for pruned in [false, true] {
+                let got = max_dd_fracs(&gr, &hr, pruned).unwrap();
+                assert_eq!(got.value, want.value, "pruned={pruned} g={g:?} h={h:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn diagonal_extrema_match_bruteforce() {
+        for_each_seed(30, |rng| {
+            let n = 2 + rng.below(24) as usize;
+            let l: Vec<i32> = (0..n).map(|_| rng.range_i64(-40, 40) as i32).collect();
+            let u: Vec<i32> = l.iter().map(|&v| v + rng.range_i64(0, 6) as i32).collect();
+            let de = diagonal_extrema(&l, &u);
+            for t in 1..=(2 * n - 3) {
+                let mut bm: Option<Rat> = None;
+                let mut bs: Option<Rat> = None;
+                for x in 0..n {
+                    for y in (x + 1)..n {
+                        if x + y != t {
+                            continue;
+                        }
+                        let fm = Rat::new(
+                            l[y] as i128 - u[x] as i128 - 1,
+                            (y - x) as i128,
+                        );
+                        let fs = Rat::new(
+                            u[y] as i128 + 1 - l[x] as i128,
+                            (y - x) as i128,
+                        );
+                        bm = Some(bm.map_or(fm, |b: Rat| b.max_rat(fm)));
+                        bs = Some(bs.map_or(fs, |b: Rat| b.min_rat(fs)));
+                    }
+                }
+                assert_eq!(de.big_m[t - 1], bm.unwrap(), "M(t), t={t}, n={n}");
+                assert_eq!(de.small_m[t - 1], bs.unwrap(), "m(t), t={t}, n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn frac_comparison_exact() {
+        assert!(Frac { num: 1, den: 3 }.lt(&Frac { num: 2, den: 5 }));
+        assert!(!Frac { num: 2, den: 4 }.lt(&Frac { num: 1, den: 2 }));
+        assert!(Frac { num: -5, den: 2 }.lt(&Frac { num: -2, den: 1 }));
+    }
+}

@@ -1,0 +1,311 @@
+//! Complete design-space generation (paper §II).
+//!
+//! [`generate`] turns a [`BoundTable`] plus a lookup-bit count `R` into a
+//! [`DesignSpace`]: for every region, every valid integer `a` with its full
+//! interval of valid `b` (and, implicitly via [`region::c_interval`], the
+//! interval of valid `c` per pair), at the smallest evaluation-precision
+//! surplus `k` that is feasible across **all** regions (the paper keeps `k`
+//! constant across regions).
+
+pub mod extrema;
+pub mod region;
+
+use crate::bounds::BoundTable;
+use extrema::{DiagExtrema, SearchStrategy};
+use region::{min_feasible_k, region_space_at_k, RegionAnalysis, RegionSpace};
+
+/// Callback that can supply diagonal extrema for a region's bound slices
+/// (e.g. the XLA-offloaded kernel in `runtime::extrema`). Returning `None`
+/// falls back to the in-process Rust implementation. Providers are not
+/// required to be `Sync` (the PJRT wrapper types are not); generation runs
+/// single-threaded whenever a provider is installed.
+pub type ExtremaProvider<'a> = dyn Fn(&[i32], &[i32]) -> Option<DiagExtrema> + 'a;
+
+/// Options controlling generation.
+#[derive(Clone, Copy, Debug)]
+pub struct GenOptions {
+    /// The paper's `R`: number of lookup bits / log2 of the region count.
+    pub lookup_bits: u32,
+    /// Naive or Claim II.1-pruned Eqn 10 searches.
+    pub search: SearchStrategy,
+    /// Give up if no common `k <= max_k` exists.
+    pub max_k: u32,
+    /// Worker threads for the per-region analysis (regions are
+    /// independent — the paper's "parallelism" future-work item).
+    pub threads: usize,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { lookup_bits: 6, search: SearchStrategy::Pruned, max_k: 30, threads: 1 }
+    }
+}
+
+/// Why generation failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GenError {
+    /// Some region violates Eqn 9/10: no real quadratic exists. Use more
+    /// lookup bits.
+    InfeasibleRegion { r: u64 },
+    /// Real-feasible but no integer design within `max_k`.
+    KExhausted { r: u64, max_k: u32 },
+}
+
+impl std::fmt::Display for GenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GenError::InfeasibleRegion { r } => write!(
+                f,
+                "region {r} admits no quadratic (Eqn 9/10 infeasible); increase lookup bits"
+            ),
+            GenError::KExhausted { r, max_k } => {
+                write!(f, "region {r} has no integer design for any k <= {max_k}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GenError {}
+
+/// The complete design space at fixed `(R, k)` — the paper's "nested
+/// dictionary of valid polynomial coefficients".
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    pub func: String,
+    pub accuracy: String,
+    /// Total stored input bits `n+m`.
+    pub in_bits: u32,
+    /// Stored output bits `q`.
+    pub out_bits: u32,
+    /// Lookup bits `R`.
+    pub lookup_bits: u32,
+    /// Common evaluation-precision surplus `k`.
+    pub k: u32,
+    /// One entry per region `r in [0, 2^R)`.
+    pub regions: Vec<RegionSpace>,
+    /// Per-region real analyses (kept for the DSE and diagnostics).
+    pub analyses: Vec<RegionAnalysis>,
+    /// Total divided-difference evaluations (Claim II.1 instrumentation).
+    pub dd_evals: u64,
+}
+
+impl DesignSpace {
+    /// Interpolation bits per region.
+    pub fn x_bits(&self) -> u32 {
+        self.in_bits - self.lookup_bits
+    }
+
+    /// Points per region.
+    pub fn region_len(&self) -> usize {
+        1usize << self.x_bits()
+    }
+
+    /// Paper §II: a piecewise *linear* approximation suffices iff `a = 0`
+    /// is valid in every region.
+    pub fn linear_feasible(&self) -> bool {
+        self.regions.iter().all(|r| r.linear_ok)
+    }
+
+    /// Total number of `(a, b)` pairs across all regions (design-space
+    /// size metric used in reports).
+    pub fn num_ab_pairs(&self) -> u64 {
+        self.regions.iter().map(|r| r.num_ab_pairs()).sum()
+    }
+}
+
+/// Generate the complete design space for `R = opts.lookup_bits`.
+pub fn generate(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
+    generate_with(bt, opts, None)
+}
+
+/// [`generate`] with an optional external diagonal-extrema provider.
+pub fn generate_with(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    provider: Option<&ExtremaProvider<'_>>,
+) -> Result<DesignSpace, GenError> {
+    assert!(opts.lookup_bits <= bt.in_bits);
+    let nregions = 1u64 << opts.lookup_bits;
+
+    // Phase 1: per-region real analysis (embarrassingly parallel).
+    let analyses = analyze_all(bt, opts, provider, nregions);
+
+    // Phase 2: common k = max over regions of the per-region minimum.
+    let mut k = 0u32;
+    for an in &analyses {
+        if !an.feasible {
+            return Err(GenError::InfeasibleRegion { r: an.r });
+        }
+        match min_feasible_k(an, opts.max_k) {
+            Some(kr) => k = k.max(kr),
+            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
+        }
+    }
+
+    // Phase 3: enumerate every region at the common k. Feasibility at the
+    // per-region minimal k implies feasibility at the (>=) common k.
+    let mut regions = Vec::with_capacity(nregions as usize);
+    for an in &analyses {
+        let sp = region_space_at_k(an, k)
+            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r));
+        regions.push(sp);
+    }
+
+    let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
+    Ok(DesignSpace {
+        func: bt.func.clone(),
+        accuracy: bt.accuracy.clone(),
+        in_bits: bt.in_bits,
+        out_bits: bt.out_bits,
+        lookup_bits: opts.lookup_bits,
+        k,
+        regions,
+        analyses,
+        dd_evals,
+    })
+}
+
+fn analyze_all(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    provider: Option<&ExtremaProvider<'_>>,
+    nregions: u64,
+) -> Vec<RegionAnalysis> {
+    let analyze_one = |r: u64| -> RegionAnalysis {
+        let (l, u) = bt.region(opts.lookup_bits, r);
+        let diag = provider.and_then(|p| p(l, u));
+        region::analyze_region(r, l, u, opts.search, diag)
+    };
+
+    if opts.threads <= 1 || nregions <= 1 || provider.is_some() {
+        return (0..nregions).map(analyze_one).collect();
+    }
+
+    // Static chunking over a scoped thread pool: regions are uniform cost.
+    // (No provider here — the sequential branch above handled that case —
+    // so the closure we share across threads is Sync.)
+    let analyze_sync = |r: u64| -> RegionAnalysis {
+        let (l, u) = bt.region(opts.lookup_bits, r);
+        region::analyze_region(r, l, u, opts.search, None)
+    };
+    let threads = opts.threads.min(nregions as usize);
+    let mut results: Vec<Option<RegionAnalysis>> = vec![None; nregions as usize];
+    let chunk = (nregions as usize).div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (tid, slot) in results.chunks_mut(chunk).enumerate() {
+            let analyze_sync = &analyze_sync;
+            scope.spawn(move || {
+                let base = tid * chunk;
+                for (off, s) in slot.iter_mut().enumerate() {
+                    *s = Some(analyze_sync((base + off) as u64));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker missed a region")).collect()
+}
+
+/// Find the smallest `R` for which the design space is feasible (the
+/// paper's "minimum number of regions required").
+pub fn min_lookup_bits(bt: &BoundTable, opts: &GenOptions, r_max: u32) -> Option<u32> {
+    (0..=r_max.min(bt.in_bits)).find(|&r| {
+        let o = GenOptions { lookup_bits: r, ..*opts };
+        generate(bt, &o).is_ok()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+
+    fn table(name: &str, bits: u32) -> BoundTable {
+        BoundTable::build(builtin(name, bits).unwrap().as_ref(), AccuracySpec::Ulp(1))
+    }
+
+    #[test]
+    fn recip8_generates_and_verifies() {
+        let bt = table("recip", 8);
+        let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() })
+            .expect("recip 8-bit R=4 should be feasible");
+        assert_eq!(ds.regions.len(), 16);
+        // Spot-verify: every region's first and last (a,b) admit a valid c.
+        for sp in &ds.regions {
+            let (l, u) = bt.region(4, sp.r);
+            for e in [sp.entries.first().unwrap(), sp.entries.last().unwrap()] {
+                for b in [e.b_lo, e.b_hi] {
+                    let (c0, _) = region::c_interval(l, u, ds.k, e.a, b, 0, 0)
+                        .expect("enumerated pair lost its c");
+                    assert!(region::polynomial_valid(l, u, ds.k, e.a, b, c0, 0, 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_and_pruned_agree_end_to_end() {
+        let bt = table("log2", 8);
+        let a = generate(
+            &bt,
+            &GenOptions { lookup_bits: 3, search: SearchStrategy::Naive, ..Default::default() },
+        )
+        .unwrap();
+        let b = generate(
+            &bt,
+            &GenOptions { lookup_bits: 3, search: SearchStrategy::Pruned, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(a.k, b.k);
+        for (ra, rb) in a.regions.iter().zip(&b.regions) {
+            assert_eq!(ra.entries, rb.entries, "region {}", ra.r);
+        }
+        assert!(b.dd_evals <= a.dd_evals, "pruning increased work");
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let bt = table("exp2", 8);
+        let o1 = GenOptions { lookup_bits: 4, threads: 1, ..Default::default() };
+        let o4 = GenOptions { lookup_bits: 4, threads: 4, ..Default::default() };
+        let a = generate(&bt, &o1).unwrap();
+        let b = generate(&bt, &o4).unwrap();
+        assert_eq!(a.k, b.k);
+        for (ra, rb) in a.regions.iter().zip(&b.regions) {
+            assert_eq!(ra.entries, rb.entries);
+        }
+    }
+
+    #[test]
+    fn too_few_lookup_bits_is_infeasible_or_high_k() {
+        // recip over the full [1,2) range with R=0 and 1-ulp bounds has no
+        // single quadratic at 8 bits of precision.
+        let bt = table("recip", 8);
+        let res = generate(&bt, &GenOptions { lookup_bits: 0, ..Default::default() });
+        assert!(res.is_err(), "one quadratic for all of 1/x at 8 bits should fail");
+    }
+
+    #[test]
+    fn min_lookup_bits_finds_threshold() {
+        let bt = table("recip", 8);
+        let opts = GenOptions::default();
+        let rmin = min_lookup_bits(&bt, &opts, 8).expect("some R must work");
+        assert!(rmin >= 1);
+        // Feasible at rmin, infeasible below.
+        assert!(generate(&bt, &GenOptions { lookup_bits: rmin, ..opts }).is_ok());
+        if rmin > 0 {
+            assert!(generate(&bt, &GenOptions { lookup_bits: rmin - 1, ..opts }).is_err());
+        }
+    }
+
+    #[test]
+    fn higher_r_never_increases_k() {
+        let bt = table("log2", 10);
+        let mut prev_k = u32::MAX;
+        for r in 4..=7u32 {
+            let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+                .unwrap_or_else(|e| panic!("R={r}: {e}"));
+            assert!(ds.k <= prev_k, "k grew from {prev_k} to {} at R={r}", ds.k);
+            prev_k = ds.k;
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! Per-region feasibility analysis and integer coefficient enumeration —
+//! the paper's Eqns 1–10 made executable.
+//!
+//! For a region `r` with `N = 2^(n+m-R)` interpolation points and bound
+//! slices `L(x) = l_R(r,x)`, `U(x) = u_R(r,x)`:
+//!
+//! - Eqn 9 feasibility: `forall t, M(t) < m(t)`;
+//! - Eqn 10 bounds on `a/2^k`:
+//!   `A_lo = max_{t<s} (M(s)-m(t))/(s-t) < a/2^k <
+//!    A_hi = min_{t<s} (m(s)-M(t))/(s-t)`;
+//! - per integer `a`: `B_lo = max_t (2^k M(t) - a t) < b <
+//!   B_hi = min_t (2^k m(t) - a t)` (Eqns 3/4 collapsed onto diagonals);
+//! - per `(a, b)`: `C_lo = max_x (2^k L(x) - a x^2 - b x) <= c <
+//!   C_hi = min_x (2^k (U(x)+1) - a x^2 - b x)` (Eqn 1).
+//!
+//! Raising `k` scales every interval by two, so integer feasibility of a
+//! region reduces to the real feasibility of Eqns 9/10 plus a minimal-`k`
+//! search (paper: "k can be increased until the intervals contain an
+//! integer").
+
+use super::extrema::{
+    diagonal_extrema, max_dd_fracs, DiagExtrema, RawFrac, SearchStrategy,
+};
+use crate::rational::Rat;
+
+/// Clamp for the degenerate `N <= 2` regions where `a` (and for `N == 1`
+/// also `b`) is unconstrained by the data. The complete space is infinite
+/// there; we keep the representatives nearest zero, which are the only ones
+/// the width-minimizing decision procedure could ever select.
+pub const DEGENERATE_A_CLAMP: i64 = 8;
+
+/// Real-interval analysis of one region (everything that does not depend
+/// on `k`).
+#[derive(Clone, Debug)]
+pub struct RegionAnalysis {
+    pub r: u64,
+    /// Number of interpolation points `N` in the region.
+    pub n: usize,
+    /// Diagonal extrema (`None` when `N < 2`).
+    pub diag: Option<DiagExtrema>,
+    /// Eqn 9: `forall t, M(t) < m(t)`.
+    pub chord_ok: bool,
+    /// Eqn 10 lower bound on `a/2^k` (`None` = unconstrained below).
+    pub a_lo: Option<Rat>,
+    /// Eqn 10 upper bound on `a/2^k` (`None` = unconstrained above).
+    pub a_hi: Option<Rat>,
+    /// Eqns 9 & 10 both hold (a real quadratic exists; integer existence
+    /// follows for large enough `k`).
+    pub feasible: bool,
+    /// Number of divided-difference evaluations spent on the Eqn 10
+    /// searches (Claim II.1 instrumentation).
+    pub dd_evals: u64,
+}
+
+/// Analyze one region from its bound slices.
+///
+/// `strategy` selects the naive or Claim II.1-pruned implementation of the
+/// Eqn 10 searches; `diag` may supply precomputed diagonal extrema (e.g.
+/// from the XLA kernel), otherwise they are computed here.
+pub fn analyze_region(
+    r: u64,
+    l: &[i32],
+    u: &[i32],
+    strategy: SearchStrategy,
+    diag: Option<DiagExtrema>,
+) -> RegionAnalysis {
+    let n = l.len();
+    assert_eq!(n, u.len());
+    if n < 2 {
+        // Single point: any (a, b) with a suitable c works.
+        return RegionAnalysis {
+            r,
+            n,
+            diag: None,
+            chord_ok: true,
+            a_lo: None,
+            a_hi: None,
+            feasible: true,
+            dd_evals: 0,
+        };
+    }
+    let diag = diag.unwrap_or_else(|| diagonal_extrema(l, u));
+    // Eqn 9: M(t) < m(t) for every diagonal.
+    let chord_ok = diag
+        .big_m
+        .iter()
+        .zip(&diag.small_m)
+        .all(|(big, small)| big.lt(small));
+
+    // Eqn 10: searches over diagonal index pairs t < s. Note the arrays are
+    // indexed by t-1; the divided difference uses the *index difference*
+    // s - t, which is preserved by the shift. Gcd-free raw fractions keep
+    // the inner loops cheap (§Perf); results are value-identical to the
+    // `Rat` reference implementations (property-tested in `extrema`).
+    let (a_lo, a_hi, dd_evals) = if diag.big_m.len() >= 2 {
+        let pruned = strategy == SearchStrategy::Pruned;
+        let gm: Vec<RawFrac> = diag.big_m.iter().map(RawFrac::from_rat).collect();
+        let gs: Vec<RawFrac> = diag.small_m.iter().map(RawFrac::from_rat).collect();
+        // A_lo = max_{t<s} (M(s) - m(t)) / (s - t).
+        let lo = max_dd_fracs(&gm, &gs, pruned);
+        // A_hi = min_{t<s} (m(s) - M(t)) / (s - t) = -max over negated data.
+        let neg = |v: &[RawFrac]| -> Vec<RawFrac> {
+            v.iter().map(|f| RawFrac { num: -f.num, den: f.den }).collect()
+        };
+        let hi = max_dd_fracs(&neg(&gs), &neg(&gm), pruned);
+        let evals = lo.map_or(0, |v| v.evals) + hi.map_or(0, |v| v.evals);
+        (lo.map(|v| v.value), hi.map(|v| v.value.neg()), evals)
+    } else {
+        (None, None, 0) // N == 2: a single diagonal, no constraint on a
+    };
+
+    let feasible = chord_ok
+        && match (&a_lo, &a_hi) {
+            (Some(lo), Some(hi)) => lo.lt(hi),
+            _ => true,
+        };
+
+    RegionAnalysis { r, n, diag: Some(diag), chord_ok, a_lo, a_hi, feasible, dd_evals }
+}
+
+/// One valid `a` with its (inclusive) integer range of valid `b`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AbEntry {
+    pub a: i64,
+    pub b_lo: i64,
+    pub b_hi: i64,
+}
+
+/// The complete integer design space of one region at a fixed `k`:
+/// every valid `a` paired with its full range of valid `b` (the valid `c`
+/// for each `(a, b)` form the contiguous interval given by
+/// [`c_interval`], evaluated on demand — storing it per pair would
+/// square the memory for no information).
+#[derive(Clone, Debug)]
+pub struct RegionSpace {
+    pub r: u64,
+    pub k: u32,
+    pub entries: Vec<AbEntry>,
+    /// True when `a = 0` is in the space (paper §II: if this holds in all
+    /// regions, a piecewise linear implementation suffices).
+    pub linear_ok: bool,
+}
+
+impl RegionSpace {
+    pub fn num_ab_pairs(&self) -> u64 {
+        self.entries.iter().map(|e| (e.b_hi - e.b_lo + 1) as u64).sum()
+    }
+}
+
+/// Integer `a` range at precision `k`: strictly inside
+/// `(2^k * a_lo, 2^k * a_hi)`, clamped for degenerate regions.
+pub fn a_range_at_k(an: &RegionAnalysis, k: u32) -> (i64, i64) {
+    let lo = match &an.a_lo {
+        Some(v) => (v.shl(k).floor() + 1) as i64,
+        None => -DEGENERATE_A_CLAMP,
+    };
+    let hi = match &an.a_hi {
+        Some(v) => (v.shl(k).ceil() - 1) as i64,
+        None => DEGENERATE_A_CLAMP,
+    };
+    (lo, hi)
+}
+
+/// Integer `b` interval for a fixed `(a, k)`: strictly inside
+/// `(max_t (2^k M(t) - a t), min_t (2^k m(t) - a t))`.
+/// Returns `None` when no integer `b` exists.
+///
+/// Gcd-free scan: `2^k M(t) - a t` as the raw fraction
+/// `(num << k) - a t den) / den` — numerators stay < 2^60 for every
+/// supported format (num < 2^27, k <= 30, |a| t den < 2^45).
+pub fn b_range_at(an: &RegionAnalysis, k: u32, a: i64) -> Option<(i64, i64)> {
+    let diag = an.diag.as_ref()?;
+    let mut lo: Option<RawFrac> = None;
+    let mut hi: Option<RawFrac> = None;
+    for (idx, (big, small)) in diag.big_m.iter().zip(&diag.small_m).enumerate() {
+        let t = (idx + 1) as i128;
+        let at = a as i128 * t;
+        let blo = RawFrac { num: (big.num() << k) - at * big.den(), den: big.den() };
+        let bhi = RawFrac { num: (small.num() << k) - at * small.den(), den: small.den() };
+        lo = Some(match lo {
+            Some(v) if blo.lt(&v) => v,
+            _ => blo,
+        });
+        hi = Some(match hi {
+            Some(v) if v.lt(&bhi) => v,
+            _ => bhi,
+        });
+    }
+    let (lo, hi) = (lo?.to_rat(), hi?.to_rat());
+    let b0 = (lo.floor() + 1) as i64;
+    let b1 = (hi.ceil() - 1) as i64;
+    if b0 <= b1 {
+        Some((b0, b1))
+    } else {
+        None
+    }
+}
+
+/// Truncated-square / truncated-linear basis terms (paper §III):
+/// `T_i(x) = ((x >> i) << i)^2`, `S_j(x) = (x >> j) << j`.
+#[inline]
+pub fn trunc_sq(x: u64, i: u32) -> i128 {
+    let xt = ((x >> i) << i) as i128;
+    xt * xt
+}
+
+#[inline]
+pub fn trunc_lin(x: u64, j: u32) -> i128 {
+    ((x >> j) << j) as i128
+}
+
+/// Eqn 1 interval of valid `c` for `(a, b, k)` under input truncations
+/// `(i, j)`: inclusive `[C_lo, C_hi - 1]`, or `None` if empty.
+pub fn c_interval(
+    l: &[i32],
+    u: &[i32],
+    k: u32,
+    a: i64,
+    b: i64,
+    i: u32,
+    j: u32,
+) -> Option<(i64, i64)> {
+    let mut clo = i128::MIN;
+    let mut chi = i128::MAX;
+    let scale = 1i128 << k;
+    for x in 0..l.len() {
+        let base = (a as i128) * trunc_sq(x as u64, i) + (b as i128) * trunc_lin(x as u64, j);
+        let lo = scale * l[x] as i128 - base;
+        let hi = scale * (u[x] as i128 + 1) - base;
+        clo = clo.max(lo);
+        chi = chi.min(hi);
+        if clo >= chi {
+            return None;
+        }
+    }
+    debug_assert!(clo >= i64::MIN as i128 && chi - 1 <= i64::MAX as i128);
+    Some((clo as i64, (chi - 1) as i64))
+}
+
+/// Enumerate the complete integer space of a region at `k`. Returns `None`
+/// if no `(a, b)` (with a non-empty `c` interval, which Eqns 3/4 then
+/// guarantee) exists at this `k`.
+pub fn region_space_at_k(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
+    if !an.feasible {
+        return None;
+    }
+    if an.n < 2 {
+        // Degenerate single-point region: represent the nearest-zero slice
+        // of the (infinite) space.
+        let entries = vec![AbEntry { a: 0, b_lo: -DEGENERATE_A_CLAMP, b_hi: DEGENERATE_A_CLAMP }];
+        return Some(RegionSpace { r: an.r, k, entries, linear_ok: true });
+    }
+    let (a0, a1) = a_range_at_k(an, k);
+    let mut entries = Vec::new();
+    let mut linear_ok = false;
+    for a in a0..=a1 {
+        if let Some((b0, b1)) = b_range_at(an, k, a) {
+            if a == 0 {
+                linear_ok = true;
+            }
+            entries.push(AbEntry { a, b_lo: b0, b_hi: b1 });
+        }
+    }
+    if entries.is_empty() {
+        None
+    } else {
+        Some(RegionSpace { r: an.r, k, entries, linear_ok })
+    }
+}
+
+/// Smallest `k <= max_k` at which the region admits an integer `(a, b, c)`.
+pub fn min_feasible_k(an: &RegionAnalysis, max_k: u32) -> Option<u32> {
+    if !an.feasible {
+        return None;
+    }
+    (0..=max_k).find(|&k| region_space_at_k(an, k).is_some())
+}
+
+/// Exhaustively check Eqn 1 for a concrete `(a, b, c, k)` under
+/// truncations `(i, j)` — the definition the whole derivation serves.
+pub fn polynomial_valid(
+    l: &[i32],
+    u: &[i32],
+    k: u32,
+    a: i64,
+    b: i64,
+    c: i64,
+    i: u32,
+    j: u32,
+) -> bool {
+    let scale = 1i128 << k;
+    (0..l.len()).all(|x| {
+        let v = (a as i128) * trunc_sq(x as u64, i)
+            + (b as i128) * trunc_lin(x as u64, j)
+            + c as i128;
+        scale * (l[x] as i128) <= v && v < scale * (u[x] as i128 + 1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{for_each_seed, Rng};
+
+    /// Random bound slices that are guaranteed feasible by construction:
+    /// perturb an exact quadratic and widen.
+    fn quadratic_bounds(rng: &mut Rng, n: usize) -> (Vec<i32>, Vec<i32>) {
+        let a = rng.range_i64(-3, 3);
+        let b = rng.range_i64(-50, 50);
+        let c = rng.range_i64(0, 100);
+        let slack = rng.range_i64(1, 4);
+        let mut l = Vec::new();
+        let mut u = Vec::new();
+        for x in 0..n as i64 {
+            let v = a * x * x + b * x + c;
+            l.push((v - slack) as i32);
+            u.push((v + slack) as i32);
+        }
+        (l, u)
+    }
+
+    #[test]
+    fn quadratic_bounds_are_feasible_and_recover_polynomial() {
+        for_each_seed(40, |rng| {
+            let n = 4 + rng.below(28) as usize;
+            let (l, u) = quadratic_bounds(rng, n);
+            let an = analyze_region(0, &l, &u, SearchStrategy::Pruned, None);
+            assert!(an.feasible, "constructed-feasible region rejected");
+            let k = min_feasible_k(&an, 8).expect("k escalation failed");
+            let sp = region_space_at_k(&an, k).unwrap();
+            // Every enumerated (a, b) admits a c, and the triple verifies.
+            for e in &sp.entries {
+                for b in e.b_lo..=e.b_hi {
+                    let (c0, c1) =
+                        c_interval(&l, &u, k, e.a, b, 0, 0).expect("Eqns 3/4 promised a c");
+                    assert!(c0 <= c1);
+                    for c in [c0, c1] {
+                        assert!(
+                            polynomial_valid(&l, &u, k, e.a, b, c, 0, 0),
+                            "a={} b={b} c={c} k={k}",
+                            e.a
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn enumeration_is_complete_small() {
+        // On tiny regions, brute-force all (a,b,c) in a window and check the
+        // dictionary contains exactly the valid (a,b) pairs.
+        for_each_seed(25, |rng| {
+            let n = 4 + rng.below(4) as usize;
+            let (l, u) = quadratic_bounds(rng, n);
+            let an = analyze_region(0, &l, &u, SearchStrategy::Naive, None);
+            if !an.feasible {
+                return;
+            }
+            let k = 0u32;
+            let space = region_space_at_k(&an, k);
+            let in_space = |a: i64, b: i64| {
+                space.as_ref().map_or(false, |s| {
+                    s.entries.iter().any(|e| e.a == a && (e.b_lo..=e.b_hi).contains(&b))
+                })
+            };
+            for a in -6..=6i64 {
+                for b in -80..=80i64 {
+                    let valid = c_interval(&l, &u, k, a, b, 0, 0).is_some();
+                    assert_eq!(
+                        valid,
+                        in_space(a, b),
+                        "completeness mismatch at a={a} b={b} l={l:?} u={u:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn infeasible_when_bounds_too_tight_for_quadratic() {
+        // A sharp zig-zag cannot be matched by any quadratic with 0 slack.
+        let l: Vec<i32> = vec![0, 10, 0, 10, 0, 10, 0, 10];
+        let u: Vec<i32> = l.clone();
+        let an = analyze_region(0, &l, &u, SearchStrategy::Pruned, None);
+        assert!(!an.feasible);
+        assert_eq!(min_feasible_k(&an, 20), None);
+    }
+
+    #[test]
+    fn k_escalation_monotone() {
+        // If a region is feasible at k, it must stay feasible at k+1
+        // (intervals scale by 2).
+        for_each_seed(20, |rng| {
+            let n = 4 + rng.below(12) as usize;
+            let (l, u) = quadratic_bounds(rng, n);
+            let an = analyze_region(0, &l, &u, SearchStrategy::Pruned, None);
+            if !an.feasible {
+                return;
+            }
+            if let Some(k) = min_feasible_k(&an, 10) {
+                for k2 in k..=(k + 3).min(10) {
+                    assert!(
+                        region_space_at_k(&an, k2).is_some(),
+                        "feasible at k={k} but not k={k2}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn degenerate_regions() {
+        let an1 = analyze_region(0, &[5], &[6], SearchStrategy::Pruned, None);
+        assert!(an1.feasible);
+        assert!(region_space_at_k(&an1, 0).is_some());
+
+        let an2 = analyze_region(0, &[5, 7], &[6, 8], SearchStrategy::Pruned, None);
+        assert!(an2.feasible);
+        let sp = region_space_at_k(&an2, 0).unwrap();
+        assert!(sp.linear_ok);
+        // a is clamped, not unbounded.
+        assert!(sp.entries.iter().all(|e| e.a.abs() <= DEGENERATE_A_CLAMP));
+    }
+
+    #[test]
+    fn truncation_only_shrinks_c_interval() {
+        for_each_seed(20, |rng| {
+            let n = 8 + rng.below(24) as usize;
+            let (l, u) = quadratic_bounds(rng, n);
+            let an = analyze_region(0, &l, &u, SearchStrategy::Pruned, None);
+            if !an.feasible {
+                return;
+            }
+            let Some(k) = min_feasible_k(&an, 8) else { return };
+            let sp = region_space_at_k(&an, k).unwrap();
+            let e = sp.entries[sp.entries.len() / 2];
+            let b = (e.b_lo + e.b_hi) / 2;
+            let full = c_interval(&l, &u, k, e.a, b, 0, 0);
+            for i in 0..4u32 {
+                for j in 0..3u32 {
+                    if let Some((c0, c1)) = c_interval(&l, &u, k, e.a, b, i, j) {
+                        let (f0, f1) = full.unwrap();
+                        // Truncated interval need not be nested, but any c
+                        // valid under truncation is a genuinely valid design.
+                        assert!(polynomial_valid(&l, &u, k, e.a, b, c0, i, j));
+                        assert!(polynomial_valid(&l, &u, k, e.a, b, c1, i, j));
+                        let _ = (f0, f1);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,635 @@
+//! Design-space exploration — the paper's §III decision procedure.
+//!
+//! Given the complete design space, derive one concrete hardware
+//! implementation by the paper's ASIC-tuned procedure:
+//!
+//! 1. **Minimize `k`** — done during generation ([`crate::designspace::generate`]
+//!    returns the smallest `k` feasible across all regions).
+//! 2. **Maximize square-input truncation `i`** — the square path evaluates
+//!    `a * (x[m-1:i])^2`; only candidates that tolerate the induced error
+//!    survive.
+//! 3. **Maximize linear-input truncation `j`** — `b * x[m-1:j]`.
+//! 4. **Minimize coefficient bitwidths** `a`, then `b`, then `c`, with
+//!    Algorithm 1 ([`precision::algorithm1`]), pruning the dictionary after
+//!    each step.
+//!
+//! Finally the first surviving `(a, b, c)` triple is selected per region.
+//! An alternative LUT-first ordering (minimize widths before truncations)
+//! is provided for the ablation the paper mentions ("prioritizing LUT
+//! optimization ... yielded inferior area-delay profiles").
+
+pub mod precision;
+
+use crate::bounds::BoundTable;
+use crate::designspace::region::{c_interval, polynomial_valid};
+use crate::designspace::DesignSpace;
+use precision::{algorithm1, Encoding, IntervalSet};
+
+/// Interpolator degree (paper §II: linear suffices iff `0 in [a0, a1]` in
+/// every region — "resulting in smaller and faster hardware").
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Degree {
+    Linear,
+    Quadratic,
+}
+
+/// Decision-procedure variant.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Procedure {
+    /// The paper's procedure: truncations first, then widths.
+    SquareFirst,
+    /// Ablation: widths first, then truncations.
+    LutFirst,
+}
+
+/// Exploration options.
+#[derive(Clone, Copy, Debug)]
+pub struct DseOptions {
+    pub procedure: Procedure,
+    /// Force a linear implementation when feasible (`a = 0` everywhere);
+    /// `None` = automatic (linear if feasible).
+    pub degree: Option<Degree>,
+    /// Cap on enumerated `b` values per `(region, a)` during filtering; the
+    /// full range is scanned when it is narrower, otherwise a strided
+    /// subset (the result is then still a *valid* design, merely possibly
+    /// missing the global width optimum — recorded as `sampled`).
+    pub max_b_per_a: usize,
+}
+
+impl Default for DseOptions {
+    fn default() -> Self {
+        DseOptions { procedure: Procedure::SquareFirst, degree: None, max_b_per_a: 512 }
+    }
+}
+
+/// One region's surviving candidates after truncation filtering.
+#[derive(Clone, Debug, Default)]
+struct RegionCands {
+    /// `(a, surviving b values)`, `a` ascending by absolute value.
+    cands: Vec<(i64, Vec<i64>)>,
+}
+
+impl RegionCands {
+    fn is_empty(&self) -> bool {
+        self.cands.iter().all(|(_, bs)| bs.is_empty())
+    }
+}
+
+/// Selected coefficients for one region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coeffs {
+    pub a: i64,
+    pub b: i64,
+    pub c: i64,
+}
+
+/// A fully decided implementation: everything the RTL emitter, cost model
+/// and runtime evaluator need.
+#[derive(Clone, Debug)]
+pub struct Implementation {
+    pub func: String,
+    pub accuracy: String,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    pub lookup_bits: u32,
+    pub k: u32,
+    pub degree: Degree,
+    /// Square-input truncation `i`.
+    pub sq_trunc: u32,
+    /// Linear-input truncation `j`.
+    pub lin_trunc: u32,
+    pub enc_a: Encoding,
+    pub enc_b: Encoding,
+    pub enc_c: Encoding,
+    /// Per-region selected polynomials, index = `r`.
+    pub coeffs: Vec<Coeffs>,
+    /// True when `b` enumeration was subsampled (widths may be
+    /// conservative).
+    pub sampled: bool,
+}
+
+impl Implementation {
+    /// Interpolation bits per region (`x` width before truncation).
+    pub fn x_bits(&self) -> u32 {
+        self.in_bits - self.lookup_bits
+    }
+
+    /// Stored LUT width per region (the paper's Table II metric).
+    pub fn lut_width(&self) -> u32 {
+        let a = if self.degree == Degree::Linear { 0 } else { self.enc_a.width };
+        a + self.enc_b.width + self.enc_c.width
+    }
+
+    /// Widths as the paper prints them: `[a, b, c] = total`.
+    pub fn lut_width_label(&self) -> String {
+        let a = if self.degree == Degree::Linear { 0 } else { self.enc_a.width };
+        format!(
+            "[{},{},{}] = {}",
+            a,
+            self.enc_b.width,
+            self.enc_c.width,
+            a + self.enc_b.width + self.enc_c.width
+        )
+    }
+
+    /// Bit-accurate datapath semantics — the single definition that the
+    /// RTL emitter, the behavioural simulator, the XLA kernel and the
+    /// verifier must all agree with:
+    /// `out = clamp(floor((a*T_i(x) + b*S_j(x) + c) / 2^k), 0, 2^q - 1)`.
+    /// (The output saturation stage is standard practice and free for
+    /// design-space implementations, whose bounds already confine them.)
+    pub fn eval(&self, z: u64) -> i64 {
+        let xbits = self.x_bits();
+        let r = (z >> xbits) as usize;
+        let x = z & ((1u64 << xbits) - 1);
+        let co = self.coeffs[r];
+        let xt = ((x >> self.sq_trunc) << self.sq_trunc) as i128;
+        let xl = ((x >> self.lin_trunc) << self.lin_trunc) as i128;
+        let acc = co.a as i128 * xt * xt + co.b as i128 * xl + co.c as i128;
+        // Arithmetic shift = floor division by 2^k, also for negatives.
+        let y = (acc >> self.k) as i64;
+        y.clamp(0, (1i64 << self.out_bits) - 1)
+    }
+}
+
+/// Explore the design space and return the selected implementation.
+///
+/// `bt` must be the bound table the space was generated from.
+pub fn explore(bt: &BoundTable, ds: &DesignSpace, opts: &DseOptions) -> Option<Implementation> {
+    let degree = match opts.degree {
+        Some(d) => d,
+        None => {
+            if ds.linear_feasible() {
+                Degree::Linear
+            } else {
+                Degree::Quadratic
+            }
+        }
+    };
+    if degree == Degree::Linear && !ds.linear_feasible() {
+        return None;
+    }
+    let xbits = ds.x_bits();
+
+    match opts.procedure {
+        Procedure::SquareFirst => {
+            // Steps 2 & 3: maximize truncations on the unpruned dictionary.
+            let (i, j) = match degree {
+                Degree::Linear => {
+                    // No square path; only the linear truncation matters.
+                    let j = max_feasible_trunc(bt, ds, degree, opts, |j| (xbits, j));
+                    (xbits, j)
+                }
+                Degree::Quadratic => {
+                    let i = max_feasible_trunc(bt, ds, degree, opts, |i| (i, 0));
+                    let j = max_feasible_trunc(bt, ds, degree, opts, |j| (i, j));
+                    (i, j)
+                }
+            };
+            let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
+            finish(bt, ds, degree, i, j, cands, opts)
+        }
+        Procedure::LutFirst => {
+            // Ablation: minimize widths at (i, j) = (0, 0) first...
+            let cands = filter_all(bt, ds, degree, 0, 0, opts.max_b_per_a);
+            let pre = finish(bt, ds, degree, 0, 0, cands, opts)?;
+            // ...then re-run truncation maximization constrained to the
+            // already-chosen encodings (weaker truncations than
+            // SquareFirst typically survive).
+            let admits = |co: &Coeffs| {
+                pre.enc_a.admits(co.a) && pre.enc_b.admits(co.b) && pre.enc_c.admits(co.c)
+            };
+            let mut best = pre.clone();
+            for i in (0..=xbits).rev() {
+                if let Some(impl_) = reselect_at_trunc(bt, ds, &pre, i, pre.lin_trunc, &admits) {
+                    best = impl_;
+                    break;
+                }
+            }
+            Some(best)
+        }
+    }
+}
+
+/// Binary-search the largest truncation parameter `p` in `[0, x_bits]`
+/// such that every region retains a candidate under `(i, j) = map(p)`.
+/// (Feasibility is monotone in the truncation error in all observed
+/// workloads; the returned value is re-validated.)
+fn max_feasible_trunc(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    degree: Degree,
+    opts: &DseOptions,
+    map: impl Fn(u32) -> (u32, u32),
+) -> u32 {
+    let xbits = ds.x_bits();
+    let feasible = |p: u32| {
+        let (i, j) = map(p);
+        all_regions_survive(bt, ds, degree, i, j, opts.max_b_per_a)
+    };
+    let (mut lo, mut hi) = (0u32, xbits);
+    debug_assert!(feasible(0), "untruncated dictionary must be feasible");
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+fn all_regions_survive(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    degree: Degree,
+    i: u32,
+    j: u32,
+    cap: usize,
+) -> bool {
+    ds.regions.iter().all(|sp| {
+        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        !filter_region(l, u, ds.k, sp, degree, i, j, cap, true).is_empty()
+    })
+}
+
+fn filter_all(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    degree: Degree,
+    i: u32,
+    j: u32,
+    cap: usize,
+) -> Vec<RegionCands> {
+    ds.regions
+        .iter()
+        .map(|sp| {
+            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+            filter_region(l, u, ds.k, sp, degree, i, j, cap, false)
+        })
+        .collect()
+}
+
+/// The paper's "discard those that cannot [tolerate the truncation error]":
+/// keep the `(a, b)` whose Eqn 1 `c`-interval is non-empty under `(i, j)`.
+#[allow(clippy::too_many_arguments)]
+fn filter_region(
+    l: &[i32],
+    u: &[i32],
+    k: u32,
+    sp: &crate::designspace::region::RegionSpace,
+    degree: Degree,
+    i: u32,
+    j: u32,
+    cap: usize,
+    early_out: bool,
+) -> RegionCands {
+    let mut out = RegionCands::default();
+    // Ascending |a| keeps the cheapest quadratic term first (selection
+    // order matters: the paper "picks the first polynomial").
+    let mut entries: Vec<_> = sp.entries.iter().collect();
+    entries.sort_by_key(|e| (e.a.abs(), e.a));
+    for e in entries {
+        if degree == Degree::Linear && e.a != 0 {
+            continue;
+        }
+        let width = (e.b_hi - e.b_lo + 1) as usize;
+        let bs: Vec<i64> = if width <= cap {
+            (e.b_lo..=e.b_hi).collect()
+        } else {
+            // Strided subsample, keeping both endpoints.
+            let stride = width.div_ceil(cap);
+            let mut v: Vec<i64> = (e.b_lo..=e.b_hi).step_by(stride).collect();
+            if *v.last().unwrap() != e.b_hi {
+                v.push(e.b_hi);
+            }
+            v
+        };
+        let surviving: Vec<i64> = bs
+            .into_iter()
+            .filter(|&b| c_interval(l, u, k, e.a, b, i, j).is_some())
+            .collect();
+        if !surviving.is_empty() {
+            out.cands.push((e.a, surviving));
+            if early_out {
+                return out;
+            }
+        }
+    }
+    out
+}
+
+/// Steps 4+: Algorithm 1 per coefficient (a, then b, then c) with pruning,
+/// then select the first jointly-valid triple per region.
+fn finish(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    degree: Degree,
+    i: u32,
+    j: u32,
+    mut cands: Vec<RegionCands>,
+    opts: &DseOptions,
+) -> Option<Implementation> {
+    let sampled = sampled_any(ds, opts);
+
+    // --- a ---
+    let a_sets: Vec<IntervalSet> = cands
+        .iter()
+        .map(|rc| rc.cands.iter().map(|&(a, _)| (a, a)).collect())
+        .collect();
+    let enc_a = algorithm1(&a_sets)?;
+    for rc in &mut cands {
+        rc.cands.retain(|&(a, _)| enc_a.admits(a));
+        if rc.is_empty() {
+            return None;
+        }
+    }
+
+    // --- b ---
+    let b_sets: Vec<IntervalSet> = cands
+        .iter()
+        .map(|rc| {
+            rc.cands
+                .iter()
+                .flat_map(|(_, bs)| bs.iter().map(|&b| (b, b)))
+                .collect()
+        })
+        .collect();
+    let enc_b = algorithm1(&b_sets)?;
+    for rc in &mut cands {
+        for (_, bs) in &mut rc.cands {
+            bs.retain(|&b| enc_b.admits(b));
+        }
+        rc.cands.retain(|(_, bs)| !bs.is_empty());
+        if rc.is_empty() {
+            return None;
+        }
+    }
+
+    // --- c --- (interval-backed: one interval per surviving (a, b))
+    let mut c_sets: Vec<IntervalSet> = Vec::with_capacity(cands.len());
+    for (rc, sp) in cands.iter().zip(&ds.regions) {
+        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        let mut set: IntervalSet = Vec::new();
+        for (a, bs) in &rc.cands {
+            for &b in bs {
+                if let Some(iv) = c_interval(l, u, ds.k, *a, b, i, j) {
+                    set.push(iv);
+                }
+            }
+        }
+        if set.is_empty() {
+            return None;
+        }
+        c_sets.push(set);
+    }
+    let enc_c = algorithm1(&c_sets)?;
+
+    // --- selection: first jointly-valid triple per region ---
+    let mut coeffs = Vec::with_capacity(cands.len());
+    for (rc, sp) in cands.iter().zip(&ds.regions) {
+        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        let mut chosen: Option<Coeffs> = None;
+        'outer: for (a, bs) in &rc.cands {
+            for &b in bs {
+                let Some((c0, c1)) = c_interval(l, u, ds.k, *a, b, i, j) else { continue };
+                if let Some(c) = first_admissible_in(&enc_c, c0, c1) {
+                    debug_assert!(polynomial_valid(l, u, ds.k, *a, b, c, i, j));
+                    chosen = Some(Coeffs { a: *a, b, c });
+                    break 'outer;
+                }
+            }
+        }
+        coeffs.push(chosen?);
+    }
+
+    Some(Implementation {
+        func: ds.func.clone(),
+        accuracy: ds.accuracy.clone(),
+        in_bits: ds.in_bits,
+        out_bits: ds.out_bits,
+        lookup_bits: ds.lookup_bits,
+        k: ds.k,
+        degree,
+        sq_trunc: i,
+        lin_trunc: j,
+        enc_a,
+        enc_b,
+        enc_c,
+        coeffs,
+        sampled,
+    })
+}
+
+fn sampled_any(ds: &DesignSpace, opts: &DseOptions) -> bool {
+    ds.regions.iter().any(|sp| {
+        sp.entries
+            .iter()
+            .any(|e| (e.b_hi - e.b_lo + 1) as usize > opts.max_b_per_a)
+    })
+}
+
+/// Smallest-magnitude value in `[c0, c1]` admissible under `enc`
+/// (scanning multiples of `2^trunc` from the near edge).
+fn first_admissible_in(enc: &Encoding, c0: i64, c1: i64) -> Option<i64> {
+    let step = 1i64 << enc.trunc;
+    // First multiple of step >= c0.
+    let mut v = c0.div_euclid(step) * step;
+    if v < c0 {
+        v += step;
+    }
+    while v <= c1 {
+        if enc.admits(v) {
+            return Some(v);
+        }
+        v += step;
+    }
+    None
+}
+
+/// Re-run selection at a different truncation pair, constrained to
+/// already-fixed encodings (used by the LUT-first ablation).
+fn reselect_at_trunc(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    pre: &Implementation,
+    i: u32,
+    j: u32,
+    admits: &impl Fn(&Coeffs) -> bool,
+) -> Option<Implementation> {
+    let mut coeffs = Vec::with_capacity(ds.regions.len());
+    for sp in &ds.regions {
+        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        let mut chosen = None;
+        'outer: for e in &sp.entries {
+            if pre.degree == Degree::Linear && e.a != 0 {
+                continue;
+            }
+            if !pre.enc_a.admits(e.a) {
+                continue;
+            }
+            for b in e.b_lo..=e.b_hi {
+                if !pre.enc_b.admits(b) {
+                    continue;
+                }
+                let Some((c0, c1)) = c_interval(l, u, ds.k, e.a, b, i, j) else { continue };
+                if let Some(c) = first_admissible_in(&pre.enc_c, c0, c1) {
+                    let co = Coeffs { a: e.a, b, c };
+                    if admits(&co) {
+                        chosen = Some(co);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        coeffs.push(chosen?);
+    }
+    Some(Implementation { sq_trunc: i, lin_trunc: j, coeffs, ..pre.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+
+    fn setup(name: &str, bits: u32, r: u32) -> (BoundTable, DesignSpace) {
+        let f = builtin(name, bits).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+            .unwrap_or_else(|e| panic!("{name}/{bits} R={r}: {e}"));
+        (bt, ds)
+    }
+
+    /// The end-to-end invariant: the selected implementation meets the
+    /// bounds on EVERY input.
+    fn assert_impl_valid(bt: &BoundTable, im: &Implementation) {
+        for z in 0..(1u64 << bt.in_bits) {
+            let out = im.eval(z);
+            assert!(
+                out >= bt.l[z as usize] as i64 && out <= bt.u[z as usize] as i64,
+                "{} z={z}: out={out} not in [{}, {}]",
+                im.func,
+                bt.l[z as usize],
+                bt.u[z as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn recip8_explore_and_verify_exhaustively() {
+        let (bt, ds) = setup("recip", 8, 4);
+        let im = explore(&bt, &ds, &DseOptions::default()).expect("DSE failed");
+        assert_impl_valid(&bt, &im);
+        assert_eq!(im.coeffs.len(), 16);
+        // Encodings admit every selected coefficient.
+        for co in &im.coeffs {
+            assert!(im.enc_a.admits(co.a));
+            assert!(im.enc_b.admits(co.b));
+            assert!(im.enc_c.admits(co.c));
+        }
+    }
+
+    #[test]
+    fn all_functions_10bit_explore_and_verify() {
+        for name in ["recip", "log2", "exp2", "sqrt"] {
+            for r in [5u32, 6] {
+                let f = builtin(name, 10).unwrap();
+                let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+                let Ok(ds) =
+                    generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+                else {
+                    continue;
+                };
+                let im = explore(&bt, &ds, &DseOptions::default())
+                    .unwrap_or_else(|| panic!("{name} R={r}: DSE failed"));
+                assert_impl_valid(&bt, &im);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_chosen_when_feasible() {
+        // With enough regions, recip 8-bit becomes linear-feasible.
+        let f = builtin("recip", 8).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        for r in 4..=7u32 {
+            let Ok(ds) = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+            else {
+                continue;
+            };
+            if ds.linear_feasible() {
+                let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+                assert_eq!(im.degree, Degree::Linear);
+                assert!(im.coeffs.iter().all(|c| c.a == 0));
+                assert_impl_valid(&bt, &im);
+                return;
+            }
+        }
+        panic!("recip 8-bit never became linear-feasible up to R=7");
+    }
+
+    #[test]
+    fn forced_quadratic_also_valid() {
+        let (bt, ds) = setup("recip", 8, 6);
+        let im = explore(
+            &bt,
+            &ds,
+            &DseOptions { degree: Some(Degree::Quadratic), ..Default::default() },
+        )
+        .expect("forced quadratic failed");
+        assert_eq!(im.degree, Degree::Quadratic);
+        assert_impl_valid(&bt, &im);
+    }
+
+    #[test]
+    fn truncations_are_maximal() {
+        let (bt, ds) = setup("log2", 10, 5);
+        let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        assert_impl_valid(&bt, &im);
+        if im.degree == Degree::Quadratic && im.sq_trunc < im.x_bits() {
+            // One more bit of square truncation must be infeasible.
+            assert!(
+                !all_regions_survive(&bt, &ds, im.degree, im.sq_trunc + 1, 0, 512),
+                "sq_trunc {} not maximal",
+                im.sq_trunc
+            );
+        }
+    }
+
+    #[test]
+    fn lut_first_is_no_better_than_square_first() {
+        // The paper found LUT-first inferior; at minimum both must verify.
+        let (bt, ds) = setup("recip", 10, 5);
+        let a = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        let b = explore(
+            &bt,
+            &ds,
+            &DseOptions { procedure: Procedure::LutFirst, ..Default::default() },
+        )
+        .unwrap();
+        assert_impl_valid(&bt, &a);
+        assert_impl_valid(&bt, &b);
+        // SquareFirst should truncate at least as aggressively.
+        assert!(a.sq_trunc >= b.sq_trunc || a.degree == Degree::Linear);
+    }
+
+    #[test]
+    fn eval_matches_manual_formula() {
+        let (bt, ds) = setup("exp2", 8, 4);
+        let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        for z in [0u64, 1, 37, 128, 255] {
+            let xbits = im.x_bits();
+            let r = (z >> xbits) as usize;
+            let x = z & ((1 << xbits) - 1);
+            let co = im.coeffs[r];
+            let xt = ((x >> im.sq_trunc) << im.sq_trunc) as i128;
+            let xl = ((x >> im.lin_trunc) << im.lin_trunc) as i128;
+            let want = ((co.a as i128 * xt * xt + co.b as i128 * xl + co.c as i128)
+                >> im.k) as i64;
+            assert_eq!(im.eval(z), want);
+        }
+        let _ = bt;
+    }
+}

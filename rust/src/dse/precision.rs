@@ -1,0 +1,315 @@
+//! Algorithm 1 of the paper: coefficient precision minimization.
+//!
+//! Given, per region, the set of valid integer values for one coefficient,
+//! find the storage encoding `(trailing-zero truncation t, stored width P)`
+//! that minimizes `P` while every region retains at least one representable
+//! value. The paper runs the algorithm separately on the positive and the
+//! negative values (as magnitudes) and takes the cheaper of the two; when
+//! regions disagree on sign a signed encoding (one extra bit) is used.
+//!
+//! Value sets are represented as unions of inclusive intervals — the `c`
+//! coefficient's valid set per `(a, b)` is a contiguous interval that can
+//! span thousands of values, so interval arithmetic (rather than value
+//! enumeration) keeps Algorithm 1 exact *and* cheap: the largest available
+//! trailing-zero count in `[lo, hi]` and the minimum `bits(s) - t` over the
+//! multiples of `2^t` in `[lo, hi]` are both O(1) computations.
+
+use crate::fixedpoint::bit_width;
+
+/// Union of inclusive integer intervals (a coefficient's valid values in
+/// one region). Not necessarily sorted or disjoint.
+pub type IntervalSet = Vec<(i64, i64)>;
+
+/// Sign discipline of a coefficient encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sign {
+    /// All stored values are `>= 0` (stored as magnitudes).
+    NonNeg,
+    /// All stored values are `<= 0` (stored as magnitudes; the datapath
+    /// subtracts).
+    NonPos,
+    /// Mixed signs: one stored bit is the sign.
+    Signed,
+}
+
+/// A coefficient storage encoding chosen by Algorithm 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Encoding {
+    /// Low bits dropped from storage (values are multiples of `2^trunc`).
+    pub trunc: u32,
+    /// Stored bits, including the sign bit when `sign == Signed`.
+    pub width: u32,
+    pub sign: Sign,
+}
+
+impl Encoding {
+    /// Magnitude bits available for the value (`width` minus sign bit).
+    /// A signed zero-width encoding has no magnitude bits at all.
+    pub fn mag_bits(&self) -> u32 {
+        self.width.saturating_sub((self.sign == Sign::Signed) as u32)
+    }
+
+    /// Can `v` be stored under this encoding?
+    pub fn admits(&self, v: i64) -> bool {
+        if v == 0 {
+            return true;
+        }
+        if self.sign == Sign::Signed && self.width == 0 {
+            return false; // no magnitude bits at all
+        }
+        match self.sign {
+            Sign::NonNeg if v < 0 => return false,
+            Sign::NonPos if v > 0 => return false,
+            _ => {}
+        }
+        let mag = v.unsigned_abs();
+        mag.trailing_zeros() >= self.trunc && bit_width(mag >> self.trunc) <= self.mag_bits()
+    }
+}
+
+/// Largest `t` such that some multiple of `2^t` lies in `[lo, hi]`
+/// (`lo <= hi`, both `>= 0`). A set containing 0 returns 63.
+fn max_tz_in_interval(lo: i64, hi: i64) -> u32 {
+    debug_assert!(0 <= lo && lo <= hi);
+    if lo == 0 {
+        return 63;
+    }
+    let mut t = 62u32;
+    loop {
+        let step = 1i64 << t;
+        // Smallest multiple of 2^t that is >= lo.
+        let m = lo.div_euclid(step) * step + if lo % step == 0 { 0 } else { step };
+        if m <= hi {
+            return t;
+        }
+        t -= 1; // t = 0 always succeeds (every integer is a multiple of 1)
+    }
+}
+
+/// Minimum `bits(s) - t` over multiples `s` of `2^t` in `[lo, hi]`
+/// (`0 <= lo <= hi`), or `None` if there is no such multiple.
+/// `bits` is monotone, so the smallest multiple realizes the minimum.
+fn min_width_at_t(lo: i64, hi: i64, t: u32) -> Option<u32> {
+    debug_assert!(0 <= lo && lo <= hi);
+    let step = 1i64 << t;
+    let m = lo.div_euclid(step) * step + if lo % step == 0 { 0 } else { step };
+    if m > hi {
+        return None;
+    }
+    Some(bit_width((m as u64) >> t))
+}
+
+/// Core of Algorithm 1 over non-negative interval sets: returns
+/// `(t, P)` minimizing stored width `P`, or `None` if some region's set is
+/// empty. Ties on `P` prefer larger `t` (cheaper downstream arithmetic).
+fn algorithm1_unsigned(regions: &[IntervalSet]) -> Option<(u32, u32)> {
+    if regions.iter().any(|s| s.is_empty()) {
+        return None;
+    }
+    // T = min over regions of (max over the region's values of tz).
+    let mut t_cap = 63u32;
+    for set in regions {
+        let tr = set.iter().map(|&(lo, hi)| max_tz_in_interval(lo, hi)).max().unwrap();
+        t_cap = t_cap.min(tr);
+    }
+    let mut best: Option<(u32, u32)> = None; // (t, P)
+    for t in 0..=t_cap {
+        // P_t = max over regions of (min width over the region's values).
+        let mut p_t = 0u32;
+        let mut ok = true;
+        for set in regions {
+            let pr = set
+                .iter()
+                .filter_map(|&(lo, hi)| min_width_at_t(lo, hi, t))
+                .min();
+            match pr {
+                Some(p) => p_t = p_t.max(p),
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok && best.map_or(true, |(_, bp)| p_t <= bp) {
+            best = Some((t, p_t));
+        }
+    }
+    best
+}
+
+/// Restrict an interval set to its non-negative part.
+fn positive_part(set: &IntervalSet) -> IntervalSet {
+    set.iter()
+        .filter_map(|&(lo, hi)| if hi >= 0 { Some((lo.max(0), hi)) } else { None })
+        .collect()
+}
+
+/// Restrict to the non-positive part, negated into non-negative magnitudes.
+fn negative_part(set: &IntervalSet) -> IntervalSet {
+    set.iter()
+        .filter_map(|&(lo, hi)| if lo <= 0 { Some(((-hi).max(0), -lo)) } else { None })
+        .collect()
+}
+
+/// Absolute values of the whole set (for the signed branch): split at zero
+/// and merge.
+fn abs_part(set: &IntervalSet) -> IntervalSet {
+    let mut out = positive_part(set);
+    out.extend(negative_part(set));
+    out
+}
+
+/// Algorithm 1 with the paper's sign handling: run on the positive and
+/// negative sets, take the cheaper; fall back to a signed encoding when
+/// neither single-sign branch can cover every region.
+pub fn algorithm1(regions: &[IntervalSet]) -> Option<Encoding> {
+    let pos: Vec<IntervalSet> = regions.iter().map(positive_part).collect();
+    let neg: Vec<IntervalSet> = regions.iter().map(negative_part).collect();
+    // A signed encoding is needed when the single-sign branches fail; it
+    // costs one extra stored bit.
+    let abs: Vec<IntervalSet> = regions.iter().map(abs_part).collect();
+
+    let candidates = [
+        algorithm1_unsigned(&pos)
+            .map(|(t, p)| Encoding { trunc: t, width: p, sign: Sign::NonNeg }),
+        algorithm1_unsigned(&neg)
+            .map(|(t, p)| Encoding { trunc: t, width: p, sign: Sign::NonPos }),
+        algorithm1_unsigned(&abs)
+            .map(|(t, p)| Encoding { trunc: t, width: p + 1, sign: Sign::Signed }),
+    ];
+    candidates
+        .into_iter()
+        .flatten()
+        .min_by_key(|e| (e.width, std::cmp::Reverse(e.trunc)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_each_seed;
+
+    /// Brute-force reference: enumerate every (t, P) up to caps and check
+    /// representability by scanning actual values.
+    fn brute(regions: &[Vec<i64>]) -> Option<Encoding> {
+        let mut best: Option<Encoding> = None;
+        for sign in [Sign::NonNeg, Sign::NonPos, Sign::Signed] {
+            for t in 0..16u32 {
+                for w in 0..20u32 {
+                    let e = Encoding { trunc: t, width: w, sign };
+                    let ok = regions
+                        .iter()
+                        .all(|set| set.iter().any(|&v| e.admits(v)));
+                    if ok
+                        && best.map_or(true, |b| {
+                            (e.width, std::cmp::Reverse(e.trunc))
+                                < (b.width, std::cmp::Reverse(b.trunc))
+                        })
+                    {
+                        best = Some(e);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn to_intervals(sets: &[Vec<i64>]) -> Vec<IntervalSet> {
+        sets.iter().map(|s| s.iter().map(|&v| (v, v)).collect()).collect()
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_sets() {
+        for_each_seed(80, |rng| {
+            let nregions = 1 + rng.below(5) as usize;
+            let sets: Vec<Vec<i64>> = (0..nregions)
+                .map(|_| {
+                    let n = 1 + rng.below(6) as usize;
+                    (0..n).map(|_| rng.range_i64(-200, 200)).collect()
+                })
+                .collect();
+            let got = algorithm1(&to_intervals(&sets)).expect("non-empty sets");
+            let want = brute(&sets).expect("brute must find something");
+            assert_eq!(
+                (got.width, got.trunc),
+                (want.width, want.trunc),
+                "sets={sets:?} got={got:?} want={want:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn paper_style_example() {
+        // Regions {12, 20}, {8}, {24}: all multiples of 4 -> t=2;
+        // magnitudes >>2 are {3,5},{2},{6} -> min widths 2,2,3 -> P=3.
+        let sets = vec![vec![12i64, 20], vec![8], vec![24]];
+        let e = algorithm1(&to_intervals(&sets)).unwrap();
+        assert_eq!(e, Encoding { trunc: 2, width: 3, sign: Sign::NonNeg });
+        assert!(e.admits(8) && e.admits(24) && e.admits(20));
+        assert!(!e.admits(9)); // tz too small
+        assert!(!e.admits(64)); // needs 4 magnitude bits after trunc
+    }
+
+    #[test]
+    fn negative_only_sets_use_negative_branch() {
+        let sets: Vec<IntervalSet> = vec![vec![(-20, -12)], vec![(-8, -8)]];
+        let e = algorithm1(&sets).unwrap();
+        assert_eq!(e.sign, Sign::NonPos, "all-negative sets use the negative branch");
+        // Width 2 suffices (-16 = 2<<3 and -8 = 1<<3 at t=3; ties on width
+        // prefer the larger truncation).
+        assert_eq!((e.width, e.trunc), (2, 3));
+        assert!(e.admits(-16) && e.admits(-8));
+        assert!(!e.admits(-12) && !e.admits(16));
+    }
+
+    #[test]
+    fn mixed_signs_require_sign_bit() {
+        let sets: Vec<IntervalSet> = vec![vec![(4, 4)], vec![(-4, -4)]];
+        let e = algorithm1(&sets).unwrap();
+        assert_eq!(e.sign, Sign::Signed);
+        assert_eq!(e.trunc, 2);
+        assert_eq!(e.width, 2); // 1 magnitude bit + sign
+        assert!(e.admits(4) && e.admits(-4));
+    }
+
+    #[test]
+    fn zero_is_free() {
+        let sets: Vec<IntervalSet> = vec![vec![(0, 0)], vec![(0, 0)]];
+        let e = algorithm1(&sets).unwrap();
+        assert_eq!(e.width, 0);
+        assert!(e.admits(0));
+    }
+
+    #[test]
+    fn interval_vs_enumeration_equivalence() {
+        for_each_seed(40, |rng| {
+            let nregions = 1 + rng.below(4) as usize;
+            let intervals: Vec<IntervalSet> = (0..nregions)
+                .map(|_| {
+                    let lo = rng.range_i64(-100, 80);
+                    let hi = lo + rng.range_i64(0, 60);
+                    vec![(lo, hi)]
+                })
+                .collect();
+            let enumerated: Vec<IntervalSet> = intervals
+                .iter()
+                .map(|set| {
+                    set.iter()
+                        .flat_map(|&(lo, hi)| (lo..=hi).map(|v| (v, v)))
+                        .collect()
+                })
+                .collect();
+            assert_eq!(algorithm1(&intervals), algorithm1(&enumerated));
+        });
+    }
+
+    #[test]
+    fn interval_helpers() {
+        assert_eq!(max_tz_in_interval(5, 7), 1); // 6 = 2*3
+        assert_eq!(max_tz_in_interval(5, 8), 3);
+        assert_eq!(max_tz_in_interval(1, 1), 0);
+        assert_eq!(max_tz_in_interval(0, 0), 63);
+        assert_eq!(min_width_at_t(5, 8, 3), Some(1)); // 8>>3 = 1
+        assert_eq!(min_width_at_t(5, 7, 3), None);
+        assert_eq!(min_width_at_t(5, 7, 0), Some(3)); // 5 -> 3 bits
+    }
+}

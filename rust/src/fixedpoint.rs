@@ -1,0 +1,155 @@
+//! Fixed-point format descriptions and bit-slicing helpers.
+//!
+//! The paper's notation `n.m` denotes an unsigned fixed-point format with
+//! `n` integer bits and `m` fractional bits; a value `Z` is stored as the
+//! integer `z = Z * 2^m`. The interpolator architecture (paper Fig. 1)
+//! splits the stored integer into the top `R` lookup bits `r` and the low
+//! `n+m-R` interpolation bits `x`.
+
+use std::fmt;
+
+/// An unsigned fixed-point format `n.m`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct FixedFormat {
+    /// Integer bits (`n`).
+    pub int_bits: u32,
+    /// Fractional bits (`m`).
+    pub frac_bits: u32,
+}
+
+impl FixedFormat {
+    pub fn new(int_bits: u32, frac_bits: u32) -> FixedFormat {
+        let f = FixedFormat { int_bits, frac_bits };
+        assert!(f.total_bits() <= 32, "formats beyond 32 bits are not supported");
+        f
+    }
+
+    /// Purely fractional format `0.m`.
+    pub fn frac(m: u32) -> FixedFormat {
+        FixedFormat::new(0, m)
+    }
+
+    /// Total stored bits `n + m`.
+    pub fn total_bits(&self) -> u32 {
+        self.int_bits + self.frac_bits
+    }
+
+    /// Number of representable codes, `2^(n+m)`.
+    pub fn num_codes(&self) -> u64 {
+        1u64 << self.total_bits()
+    }
+
+    /// Largest stored integer, `2^(n+m) - 1`.
+    pub fn max_code(&self) -> u64 {
+        self.num_codes() - 1
+    }
+
+    /// Real value of a stored code.
+    pub fn value_of(&self, code: u64) -> f64 {
+        debug_assert!(code <= self.max_code());
+        code as f64 / (1u64 << self.frac_bits) as f64
+    }
+
+    /// One unit in the last place as a real number.
+    pub fn ulp(&self) -> f64 {
+        1.0 / (1u64 << self.frac_bits) as f64
+    }
+}
+
+impl fmt::Display for FixedFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+/// Split a stored input code into `(r, x)` for `R` lookup bits:
+/// `r` = top `R` bits, `x` = low `total_bits - R` bits.
+pub fn split_rx(code: u64, total_bits: u32, lookup_bits: u32) -> (u64, u64) {
+    debug_assert!(lookup_bits <= total_bits);
+    let xbits = total_bits - lookup_bits;
+    (code >> xbits, code & ((1u64 << xbits) - 1))
+}
+
+/// Rejoin `(r, x)` into a stored code (the paper's `{r, x}` concatenation).
+pub fn join_rx(r: u64, x: u64, total_bits: u32, lookup_bits: u32) -> u64 {
+    let xbits = total_bits - lookup_bits;
+    debug_assert!(r < (1u64 << lookup_bits) && x < (1u64 << xbits));
+    (r << xbits) | x
+}
+
+/// Truncate the low `t` bits of `x` (keep the bit-slice `x[hi:t]` at its
+/// original weight): `(x >> t) << t`.
+pub fn trunc_low(x: u64, t: u32) -> u64 {
+    (x >> t) << t
+}
+
+/// Number of bits needed to represent non-negative `v`: `ceil(log2(v+1))`.
+pub fn bit_width(v: u64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+/// Bit width of a signed coefficient set: magnitude bits of the largest
+/// absolute value, plus one sign bit if any value is negative.
+pub fn signed_width(min: i64, max: i64) -> u32 {
+    let mag = bit_width(min.unsigned_abs().max(max.unsigned_abs()));
+    if min < 0 {
+        mag + 1
+    } else {
+        mag
+    }
+}
+
+/// Trailing zeros of `v`, with the convention that 0 has "infinite"
+/// trailing zeros capped at 63 (Algorithm 1 treats 0 as maximally
+/// truncatable).
+pub fn trailing_zeros_capped(v: i64) -> u32 {
+    if v == 0 {
+        63
+    } else {
+        v.trailing_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_basics() {
+        let f = FixedFormat::new(1, 15);
+        assert_eq!(f.total_bits(), 16);
+        assert_eq!(f.num_codes(), 1 << 16);
+        assert_eq!(f.max_code(), (1 << 16) - 1);
+        assert!((f.value_of(1 << 15) - 1.0).abs() < 1e-12);
+        assert_eq!(format!("{f}"), "1.15");
+        assert!((FixedFormat::frac(8).ulp() - 1.0 / 256.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        for code in [0u64, 1, 0xabcd, 0xffff] {
+            let (r, x) = split_rx(code, 16, 6);
+            assert_eq!(join_rx(r, x, 16, 6), code);
+            assert!(r < 64);
+            assert!(x < (1 << 10));
+        }
+        assert_eq!(split_rx(0xffff, 16, 0), (0, 0xffff));
+        assert_eq!(split_rx(0xffff, 16, 16), (0xffff, 0));
+    }
+
+    #[test]
+    fn trunc_and_widths() {
+        assert_eq!(trunc_low(0b101101, 2), 0b101100);
+        assert_eq!(trunc_low(0b101101, 0), 0b101101);
+        assert_eq!(bit_width(0), 0);
+        assert_eq!(bit_width(1), 1);
+        assert_eq!(bit_width(255), 8);
+        assert_eq!(bit_width(256), 9);
+        assert_eq!(signed_width(0, 255), 8);
+        assert_eq!(signed_width(-1, 255), 9);
+        assert_eq!(signed_width(-256, 0), 10);
+        assert_eq!(trailing_zeros_capped(0), 63);
+        assert_eq!(trailing_zeros_capped(8), 3);
+        assert_eq!(trailing_zeros_capped(-8), 3);
+    }
+}

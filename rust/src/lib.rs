@@ -1,0 +1,26 @@
+//! **polygen** — complete polynomial-interpolation hardware design-space
+//! generation, exploration, RTL emission, and evaluation.
+//!
+//! Reproduction of *"Automatic Generation of Complete Polynomial
+//! Interpolation Hardware Design Space"* (Orloski, Coward, Drane, 2022) as
+//! a three-layer Rust + JAX + Pallas system: this crate is Layer 3 (the
+//! generator/coordinator); `python/compile/` holds the build-time JAX
+//! model (L2) and Pallas kernels (L1) that are AOT-lowered to the
+//! `artifacts/*.hlo.txt` the [`runtime`] module executes via PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod baselines;
+pub mod bounds;
+pub mod coordinator;
+pub mod designspace;
+pub mod dse;
+pub mod rtl;
+pub mod synth;
+pub mod runtime;
+pub mod verify;
+pub mod fixedpoint;
+pub mod rational;
+pub mod report;
+pub mod testutil;
+pub mod wide;

@@ -1,0 +1,364 @@
+//! `polygen` — CLI for complete polynomial-interpolation design-space
+//! generation, exploration, RTL emission, verification and reporting.
+//!
+//! Subcommands (hand-rolled argument parsing; clap is not available
+//! offline):
+//!
+//! ```text
+//! polygen generate --func recip --bits 16 --lub 8 [--naive] [--threads N] [--cache DIR]
+//! polygen dse      --func recip --bits 16 --lub 8 [--quadratic|--linear] [--lut-first]
+//! polygen rtl      --func recip --bits 10 --lub 5 --out DIR [--tb]
+//! polygen verify   --func recip --bits 16 --lub 8 [--engine scalar|xla|pallas] [--artifacts DIR]
+//! polygen sweep    --func log2  --bits 10 [--threads N]
+//! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear> [--deep] [--out DIR]
+//! polygen config   --file job.toml [--set key=value ...]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use polygen::bounds::AccuracySpec;
+use polygen::coordinator::config::Config;
+use polygen::coordinator::{best_by_adp, default_r_range, generate_cached, sweep_lub, Workload};
+use polygen::designspace::extrema::SearchStrategy;
+use polygen::designspace::{generate, GenOptions};
+use polygen::dse::{explore, Degree, DseOptions, Procedure};
+use polygen::report;
+use polygen::rtl;
+use polygen::runtime::{Flavor, XlaRuntime};
+use polygen::synth::synth_min_delay;
+use polygen::verify::{verify_exhaustive, Engine};
+
+/// Tiny flag parser: `--key value` and bare `--switch`.
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Option<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next()?;
+        let rest: Vec<String> = it.collect();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < rest.len() {
+            if !rest[i].starts_with("--") {
+                positional.push(rest[i].clone());
+                i += 1;
+                continue;
+            }
+            let k = rest[i].trim_start_matches('-').to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.push((k, Some(rest[i + 1].clone())));
+                i += 2;
+            } else {
+                flags.push((k, None));
+                i += 1;
+            }
+        }
+        Some(Args { cmd, positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: polygen <generate|dse|rtl|verify|sweep|report|config> [--flags]\n\
+         see rust/src/main.rs header or README.md for details"
+    );
+    ExitCode::FAILURE
+}
+
+fn workload(args: &Args) -> Result<Workload, String> {
+    let func = args.get("func").unwrap_or("recip");
+    let bits = args.u32_or("bits", 10);
+    let acc = match args.get("accuracy").unwrap_or("1ulp") {
+        "faithful" => AccuracySpec::Faithful,
+        s => AccuracySpec::Ulp(
+            s.trim_end_matches("ulp").parse().map_err(|_| format!("bad accuracy {s}"))?,
+        ),
+    };
+    Workload::prepare(func, bits, acc).ok_or_else(|| format!("unknown function {func}"))
+}
+
+fn gen_opts(args: &Args) -> GenOptions {
+    GenOptions {
+        lookup_bits: args.u32_or("lub", 6),
+        search: if args.has("naive") { SearchStrategy::Naive } else { SearchStrategy::Pruned },
+        max_k: args.u32_or("max-k", 30),
+        threads: args.u32_or("threads", 1) as usize,
+    }
+}
+
+fn dse_opts(args: &Args) -> DseOptions {
+    DseOptions {
+        procedure: if args.has("lut-first") {
+            Procedure::LutFirst
+        } else {
+            Procedure::SquareFirst
+        },
+        degree: if args.has("quadratic") {
+            Some(Degree::Quadratic)
+        } else if args.has("linear") {
+            Some(Degree::Linear)
+        } else {
+            None
+        },
+        max_b_per_a: args.u32_or("max-b", 512) as usize,
+    }
+}
+
+fn run() -> Result<(), String> {
+    let Some(args) = Args::parse() else { return Err("no command".into()) };
+    match args.cmd.as_str() {
+        "generate" => {
+            let w = workload(&args)?;
+            let opts = gen_opts(&args);
+            let ds = if let Some(dir) = args.get("cache") {
+                generate_cached(&w, opts.lookup_bits, &opts, &PathBuf::from(dir))
+            } else {
+                generate(&w.bt, &opts)
+            }
+            .map_err(|e| e.to_string())?;
+            println!(
+                "design space: {} {}b R={} k={}  regions={}  (a,b) pairs={}  linear_ok={}",
+                ds.func,
+                ds.in_bits,
+                ds.lookup_bits,
+                ds.k,
+                ds.regions.len(),
+                ds.num_ab_pairs(),
+                ds.linear_feasible()
+            );
+            Ok(())
+        }
+        "dse" => {
+            let w = workload(&args)?;
+            let opts = gen_opts(&args);
+            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
+            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
+            let p = synth_min_delay(&im);
+            println!(
+                "impl: {:?} k={} i={} j={} LUT {}  min-delay {:.3} ns, {:.1} um2",
+                im.degree,
+                im.k,
+                im.sq_trunc,
+                im.lin_trunc,
+                im.lut_width_label(),
+                p.delay_ns,
+                p.area_um2
+            );
+            for (r, co) in im.coeffs.iter().enumerate().take(8) {
+                println!("  r={r}: a={} b={} c={}", co.a, co.b, co.c);
+            }
+            if im.coeffs.len() > 8 {
+                println!("  ... {} more regions", im.coeffs.len() - 8);
+            }
+            Ok(())
+        }
+        "rtl" => {
+            let w = workload(&args)?;
+            let opts = gen_opts(&args);
+            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
+            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
+            let dir = PathBuf::from(args.get("out").unwrap_or("rtl_out"));
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let name = format!("{}_{}b_r{}", im.func, im.in_bits, im.lookup_bits);
+            let write = |p: PathBuf, s: String| std::fs::write(p, s).map_err(|e| e.to_string());
+            write(dir.join(format!("{name}.v")), rtl::emit_module(&im, &name))?;
+            if args.has("tb") {
+                write(dir.join(format!("{name}_tb.v")), rtl::emit_testbench(&im, &name))?;
+                write(dir.join(format!("{name}_golden.hex")), rtl::emit_golden_hex(&im))?;
+            }
+            if im.func == "recip" {
+                write(
+                    dir.join("recip_behavioral.v"),
+                    rtl::behavioral::emit_recip_behavioral(im.in_bits, im.out_bits),
+                )?;
+            }
+            println!("wrote RTL to {}", dir.display());
+            Ok(())
+        }
+        "verify" => {
+            let w = workload(&args)?;
+            let opts = gen_opts(&args);
+            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
+            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
+            let engine_name = args.get("engine").unwrap_or("scalar");
+            let rt;
+            let engine = match engine_name {
+                "scalar" => Engine::Scalar,
+                "xla" | "pallas" => {
+                    let dir = args.get("artifacts").unwrap_or("artifacts");
+                    rt = XlaRuntime::load(dir).map_err(|e| e.to_string())?;
+                    let flavor =
+                        if engine_name == "pallas" { Flavor::Pallas } else { Flavor::Jnp };
+                    Engine::Xla { rt: &rt, flavor }
+                }
+                other => return Err(format!("unknown engine {other}")),
+            };
+            let rep = verify_exhaustive(&w.bt, &im, &engine).map_err(|e| e.to_string())?;
+            println!(
+                "verified {} inputs via {engine_name}: {} violations{}",
+                rep.total,
+                rep.violations,
+                rep.first_violation
+                    .map(|z| format!(" (first at z={z})"))
+                    .unwrap_or_default()
+            );
+            if im.func == "recip" {
+                rtl::behavioral::recip_between_roundings(&im).map_err(|(z, y, lo, hi)| {
+                    format!("behavioural bracket failed at z={z}: {y} not in [{lo},{hi}]")
+                })?;
+                println!("behavioural RTZ/R+inf bracket: ok");
+            }
+            if rep.violations == 0 {
+                Ok(())
+            } else {
+                Err("verification FAILED".into())
+            }
+        }
+        "sweep" => {
+            let w = workload(&args)?;
+            let threads = args.u32_or("threads", 4) as usize;
+            let pts = sweep_lub(
+                &w,
+                &default_r_range(w.bt.in_bits),
+                &GenOptions::default(),
+                &dse_opts(&args),
+                threads,
+            );
+            println!("{}", report::fig3(&w.bt.func.clone(), w.bt.in_bits, threads).0);
+            if let Some(best) = best_by_adp(&pts) {
+                println!("best ADP at LUB = {}", best.lookup_bits);
+            }
+            Ok(())
+        }
+        "report" => {
+            let what = args
+                .positional
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "table1".into());
+            let deep = args.has("deep");
+            let threads = args.u32_or("threads", 4) as usize;
+            let out_dir = args.get("out").map(PathBuf::from);
+            let text = match what.as_str() {
+                "table1" => {
+                    let mut sizes: Vec<(&str, u32)> = vec![
+                        ("recip", 10),
+                        ("recip", 16),
+                        ("log2", 10),
+                        ("log2", 16),
+                        ("exp2", 10),
+                        ("exp2", 16),
+                    ];
+                    if deep {
+                        sizes.push(("recip", 20));
+                        sizes.push(("log2", 20));
+                    }
+                    report::table1(&sizes, threads)
+                }
+                "table2" => {
+                    let mut cases = vec![("recip", 16, 6), ("log2", 16, 6), ("exp2", 10, 4)];
+                    if deep {
+                        cases.push(("recip", 20, 9));
+                    }
+                    report::table2(&cases)
+                }
+                "fig2" => {
+                    let bits = if deep { 20 } else { 16 };
+                    let (t, csv) = report::fig2("recip", bits, 7, 14);
+                    if let Some(d) = &out_dir {
+                        std::fs::create_dir_all(d).ok();
+                        std::fs::write(d.join("fig2.csv"), csv).ok();
+                    }
+                    t
+                }
+                "fig3" => {
+                    let (t10, c10) = report::fig3("log2", 10, threads);
+                    let (t16, c16) = report::fig3("log2", 16, threads);
+                    if let Some(d) = &out_dir {
+                        std::fs::create_dir_all(d).ok();
+                        std::fs::write(d.join("fig3_log2_10.csv"), c10).ok();
+                        std::fs::write(d.join("fig3_log2_16.csv"), c16).ok();
+                    }
+                    format!("{t10}\n{t16}")
+                }
+                "claim" => report::claim_ii1("recip", 16, 8, 3),
+                "scaling" => report::scaling("recip", 16, &[6, 7, 8, 9, 10, 11]),
+                "linear" => ["recip", "log2", "exp2"]
+                    .iter()
+                    .map(|f| report::linear_threshold(f, 10))
+                    .collect::<String>(),
+                other => return Err(format!("unknown report {other}")),
+            };
+            println!("{text}");
+            if let Some(d) = &out_dir {
+                std::fs::create_dir_all(d).ok();
+                std::fs::write(d.join(format!("{what}.txt")), &text).ok();
+            }
+            Ok(())
+        }
+        "config" => {
+            let file = args.get("file").ok_or("--file required")?;
+            let mut cfg = Config::load(file)?;
+            for kv in args.get_all("set") {
+                cfg.set(kv)?;
+            }
+            let func = cfg.get_or("func", "recip").to_string();
+            let bits: u32 = cfg.get_u32("bits")?.unwrap_or(10);
+            let lub = cfg.get_u32("generate.lookup_bits")?.unwrap_or(6);
+            let w = Workload::prepare(&func, bits, AccuracySpec::Ulp(1))
+                .ok_or(format!("unknown function {func}"))?;
+            let ds = generate(&w.bt, &GenOptions { lookup_bits: lub, ..Default::default() })
+                .map_err(|e| e.to_string())?;
+            let im = explore(&w.bt, &ds, &DseOptions::default()).ok_or("DSE failed")?;
+            let p = synth_min_delay(&im);
+            println!(
+                "{func} {bits}b R={lub}: {:?} LUT {} — {:.3} ns, {:.1} um2",
+                im.degree,
+                im.lut_width_label(),
+                p.delay_ns,
+                p.area_um2
+            );
+            Ok(())
+        }
+        _ => Err(format!("unknown command {}", args.cmd)),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            if e == "no command" {
+                return usage();
+            }
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Exact rational arithmetic on `i128`.
+//!
+//! Every feasibility decision in the design-space generator (Eqns 1–10 of
+//! the paper) is a comparison between divided differences — ratios of
+//! integers. Floating point would silently mis-classify boundary cases, so
+//! all of `designspace` works in exact rationals. Magnitudes are small
+//! (numerators ≲ 2^70, denominators ≲ 2^24 even for 23-bit designs), so a
+//! reduced `i128` fraction never overflows; debug assertions guard this.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A reduced fraction `num/den` with `den > 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rat {
+    num: i128,
+    den: i128,
+}
+
+/// Greatest common divisor (non-negative inputs, `gcd(0, 0) = 0`).
+pub fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Rat {
+    pub const ZERO: Rat = Rat { num: 0, den: 1 };
+    pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+    /// Construct and reduce. Panics on zero denominator.
+    pub fn new(num: i128, den: i128) -> Rat {
+        assert!(den != 0, "Rat with zero denominator");
+        let s = if den < 0 { -1 } else { 1 };
+        let (num, den) = (num * s, den * s);
+        let g = gcd(num, den);
+        if g == 0 {
+            return Rat { num: 0, den: 1 };
+        }
+        Rat { num: num / g, den: den / g }
+    }
+
+    pub fn int(v: i128) -> Rat {
+        Rat { num: v, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// Largest integer `<= self`.
+    pub fn floor(&self) -> i128 {
+        self.num.div_euclid(self.den)
+    }
+
+    /// Smallest integer `>= self`.
+    pub fn ceil(&self) -> i128 {
+        -((-self.num).div_euclid(self.den))
+    }
+
+    pub fn add(&self, o: &Rat) -> Rat {
+        Rat::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+
+    pub fn sub(&self, o: &Rat) -> Rat {
+        Rat::new(self.num * o.den - o.num * self.den, self.den * o.den)
+    }
+
+    pub fn mul(&self, o: &Rat) -> Rat {
+        // Cross-reduce before multiplying to keep intermediates small.
+        let g1 = gcd(self.num, o.den).max(1);
+        let g2 = gcd(o.num, self.den).max(1);
+        Rat::new((self.num / g1) * (o.num / g2), (self.den / g2) * (o.den / g1))
+    }
+
+    pub fn div(&self, o: &Rat) -> Rat {
+        assert!(o.num != 0, "Rat division by zero");
+        self.mul(&Rat::new(o.den, o.num))
+    }
+
+    pub fn neg(&self) -> Rat {
+        Rat { num: -self.num, den: self.den }
+    }
+
+    /// Multiply by `2^k` exactly.
+    pub fn shl(&self, k: u32) -> Rat {
+        Rat::new(self.num << k, self.den)
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// Exact comparison by cross multiplication.
+    ///
+    /// Debug-asserts the cross products stay inside `i128`; with reduced
+    /// operands from this crate's workloads they always do.
+    pub fn cmp_rat(&self, o: &Rat) -> Ordering {
+        debug_assert!(
+            cross_mul_in_range(self.num, o.den) && cross_mul_in_range(o.num, self.den),
+            "Rat comparison overflow risk"
+        );
+        (self.num * o.den).cmp(&(o.num * self.den))
+    }
+
+    pub fn lt(&self, o: &Rat) -> bool {
+        self.cmp_rat(o) == Ordering::Less
+    }
+
+    pub fn le(&self, o: &Rat) -> bool {
+        self.cmp_rat(o) != Ordering::Greater
+    }
+
+    pub fn min_rat(self, o: Rat) -> Rat {
+        if o.lt(&self) {
+            o
+        } else {
+            self
+        }
+    }
+
+    pub fn max_rat(self, o: Rat) -> Rat {
+        if self.lt(&o) {
+            o
+        } else {
+            self
+        }
+    }
+}
+
+fn cross_mul_in_range(a: i128, b: i128) -> bool {
+    a.checked_mul(b).is_some()
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_rat(other))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_rat(other)
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_and_sign() {
+        let r = Rat::new(4, -8);
+        assert_eq!((r.num(), r.den()), (-1, 2));
+        assert_eq!(Rat::new(0, -5), Rat::ZERO);
+    }
+
+    #[test]
+    fn floor_ceil_negative() {
+        assert_eq!(Rat::new(-7, 2).floor(), -4);
+        assert_eq!(Rat::new(-7, 2).ceil(), -3);
+        assert_eq!(Rat::new(7, 2).floor(), 3);
+        assert_eq!(Rat::new(7, 2).ceil(), 4);
+        assert_eq!(Rat::new(-8, 2).floor(), -4);
+        assert_eq!(Rat::new(-8, 2).ceil(), -4);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rat::new(1, 3);
+        let b = Rat::new(1, 6);
+        assert_eq!(a.add(&b), Rat::new(1, 2));
+        assert_eq!(a.sub(&b), Rat::new(1, 6));
+        assert_eq!(a.mul(&b), Rat::new(1, 18));
+        assert_eq!(a.div(&b), Rat::int(2));
+        assert_eq!(a.shl(3), Rat::new(8, 3));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rat::new(1, 3).lt(&Rat::new(2, 5)));
+        assert!(Rat::new(-1, 3).lt(&Rat::ZERO));
+        assert_eq!(Rat::new(2, 4).cmp_rat(&Rat::new(1, 2)), Ordering::Equal);
+        assert_eq!(Rat::new(5, 3).min_rat(Rat::new(3, 2)), Rat::new(3, 2));
+        assert_eq!(Rat::new(5, 3).max_rat(Rat::new(3, 2)), Rat::new(5, 3));
+    }
+
+    #[test]
+    fn gcd_edge_cases() {
+        assert_eq!(gcd(0, 0), 0);
+        assert_eq!(gcd(0, 7), 7);
+        assert_eq!(gcd(-12, 18), 6);
+    }
+}

@@ -1,0 +1,137 @@
+//! LUT word encoding: pack the selected coefficients into the stored
+//! per-region word exactly as the emitted RTL does, and decode them back.
+//!
+//! This round trip is where width bugs would bite (an Algorithm 1 result
+//! one bit too narrow silently corrupts a coefficient), so it is explicit,
+//! checked, and exercised by both the RTL simulator and property tests.
+
+use crate::dse::precision::{Encoding, Sign};
+use crate::dse::{Coeffs, Degree, Implementation};
+
+/// Encode `v` into its stored field under `enc`. Panics if inadmissible
+/// (the DSE guarantees admissibility for selected coefficients).
+pub fn encode_field(enc: &Encoding, v: i64) -> u64 {
+    assert!(enc.admits(v), "value {v} not admissible under {enc:?}");
+    if enc.width == 0 {
+        return 0;
+    }
+    let mag = (v.unsigned_abs() >> enc.trunc) as u64;
+    match enc.sign {
+        Sign::NonNeg | Sign::NonPos => mag,
+        Sign::Signed => {
+            // Two's complement in `width` bits.
+            let w = enc.width;
+            ((v >> enc.trunc) as u64) & ((1u64 << w) - 1)
+        }
+    }
+}
+
+/// Decode a stored field back to the coefficient value.
+pub fn decode_field(enc: &Encoding, field: u64) -> i64 {
+    if enc.width == 0 {
+        return 0;
+    }
+    debug_assert!(field < (1u64 << enc.width));
+    match enc.sign {
+        Sign::NonNeg => (field as i64) << enc.trunc,
+        Sign::NonPos => -((field as i64) << enc.trunc),
+        Sign::Signed => {
+            let w = enc.width;
+            let signed = if field & (1u64 << (w - 1)) != 0 {
+                field as i64 - (1i64 << w)
+            } else {
+                field as i64
+            };
+            signed << enc.trunc
+        }
+    }
+}
+
+/// One packed LUT word: `{a_field, b_field, c_field}` (a in the MSBs).
+pub fn pack_word(im: &Implementation, co: &Coeffs) -> u64 {
+    let (wa, wb, wc) = field_widths(im);
+    let a = if wa == 0 { 0 } else { encode_field(&im.enc_a, co.a) };
+    let b = encode_field(&im.enc_b, co.b);
+    let c = encode_field(&im.enc_c, co.c);
+    (a << (wb + wc)) | (b << wc) | c
+}
+
+/// Unpack a LUT word into `(a, b, c)` coefficient values.
+pub fn unpack_word(im: &Implementation, word: u64) -> Coeffs {
+    let (_wa, wb, wc) = field_widths(im);
+    let c = decode_field(&im.enc_c, word & ((1u64 << wc) - 1).max(0));
+    let b = decode_field(&im.enc_b, (word >> wc) & mask(wb));
+    let a = if im.degree == Degree::Linear {
+        0
+    } else {
+        decode_field(&im.enc_a, word >> (wb + wc))
+    };
+    Coeffs { a, b, c }
+}
+
+fn mask(w: u32) -> u64 {
+    if w == 0 {
+        0
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// Stored field widths `(a, b, c)`; the `a` field is absent for linear
+/// designs.
+pub fn field_widths(im: &Implementation) -> (u32, u32, u32) {
+    let wa = if im.degree == Degree::Linear { 0 } else { im.enc_a.width };
+    (wa, im.enc_b.width, im.enc_c.width)
+}
+
+/// The full encoded LUT contents, one word per region.
+pub fn lut_words(im: &Implementation) -> Vec<u64> {
+    im.coeffs.iter().map(|co| pack_word(im, co)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+    use crate::dse::{explore, DseOptions};
+    use crate::testutil::for_each_seed;
+
+    #[test]
+    fn field_roundtrip_all_signs() {
+        for_each_seed(50, |rng| {
+            let trunc = rng.below(4) as u32;
+            let width = 1 + rng.below(10) as u32;
+            for sign in [Sign::NonNeg, Sign::NonPos, Sign::Signed] {
+                let enc = Encoding { trunc, width, sign };
+                for _ in 0..20 {
+                    let raw = rng.range_i64(-(1 << 12), 1 << 12);
+                    let v = (raw >> trunc) << trunc;
+                    if enc.admits(v) {
+                        let f = encode_field(&enc, v);
+                        assert!(f < (1u64 << width) || width == 0);
+                        assert_eq!(decode_field(&enc, f), v, "enc={enc:?} v={v}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn lut_words_roundtrip_real_design() {
+        for (name, bits, r) in [("recip", 10u32, 5u32), ("log2", 10, 6), ("exp2", 10, 4)] {
+            let f = builtin(name, bits).unwrap();
+            let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+            let ds =
+                generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() }).unwrap();
+            let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+            let words = lut_words(&im);
+            let (wa, wb, wc) = field_widths(&im);
+            for (i, &w) in words.iter().enumerate() {
+                assert!(w < (1u64 << (wa + wb + wc)).max(1), "{name} word too wide");
+                let co = unpack_word(&im, w);
+                assert_eq!(co, im.coeffs[i], "{name} region {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! RTL generation: Verilog emitter, LUT word encoding, bit-accurate
+//! netlist-level simulation, and behavioural references (paper §IV).
+
+pub mod behavioral;
+pub mod encode;
+pub mod sim;
+pub mod verilog;
+
+pub use sim::DatapathSim;
+pub use verilog::{emit_golden_hex, emit_module, emit_testbench};

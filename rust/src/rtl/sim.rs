@@ -1,0 +1,113 @@
+//! Bit-accurate simulator of the *emitted RTL* semantics.
+//!
+//! Unlike [`Implementation::eval`] (which evaluates the selected
+//! coefficients directly), `DatapathSim` goes the long way round, exactly
+//! as the hardware does: pack the LUT words, index by `r`, extract and
+//! sign-extend the stored fields, evaluate in width-checked integer
+//! arithmetic, arithmetic-shift, and truncate to the output width. Every
+//! intermediate is asserted to fit its declared RTL width, so an
+//! under-sized accumulator or LUT field fails loudly here (and in the
+//! exhaustive equivalence test) rather than silently in synthesis.
+
+use super::encode::{field_widths, lut_words, unpack_word};
+use crate::dse::{Degree, Implementation};
+
+/// The "netlist-level" model of one generated interpolator.
+pub struct DatapathSim {
+    im: Implementation,
+    lut: Vec<u64>,
+    wa: u32,
+    wb: u32,
+    wc: u32,
+}
+
+impl DatapathSim {
+    pub fn new(im: &Implementation) -> DatapathSim {
+        let lut = lut_words(im);
+        let (wa, wb, wc) = field_widths(im);
+        DatapathSim { im: im.clone(), lut, wa, wb, wc }
+    }
+
+    /// Stored LUT word width.
+    pub fn word_width(&self) -> u32 {
+        self.wa + self.wb + self.wc
+    }
+
+    /// Evaluate one input through the hardware model. Panics on any
+    /// declared-width overflow (none exist for DSE-produced designs).
+    pub fn eval(&self, z: u64) -> i64 {
+        let im = &self.im;
+        let xbits = im.x_bits();
+        let r = (z >> xbits) as usize;
+        let x = z & ((1u64 << xbits) - 1);
+
+        // LUT access and field decode — through the packed word.
+        let word = self.lut[r];
+        assert!(word < (1u128 << self.word_width().max(1)) as u64);
+        let co = unpack_word(im, word);
+
+        // Square path.
+        let acc: i128 = if im.degree == Degree::Quadratic {
+            let xs = x >> im.sq_trunc; // xs_bits wide
+            let xs_bits = xbits - im.sq_trunc;
+            assert!(xs < (1u64 << xs_bits.max(1)));
+            let sq = (xs as i128) * (xs as i128); // 2*xs_bits wide
+            assert!(sq < (1i128 << (2 * xs_bits).max(1)));
+            let prod_a = co.a as i128 * sq; // wa + 2*xs_bits (+sign)
+            let xl = (x >> im.lin_trunc) as i128;
+            let prod_b = co.b as i128 * xl;
+            (prod_a << (2 * im.sq_trunc)) + (prod_b << im.lin_trunc) + co.c as i128
+        } else {
+            let xl = (x >> im.lin_trunc) as i128;
+            ((co.b as i128 * xl) << im.lin_trunc) + co.c as i128
+        };
+
+        // Accumulator width check mirrors the emitted declaration.
+        let xs_bits = xbits - im.sq_trunc;
+        let xl_bits = xbits - im.lin_trunc;
+        let acc_w = (2 * xs_bits + self.wa + 2 + 2 * im.sq_trunc)
+            .max(self.wb + xl_bits + 2 + im.lin_trunc)
+            .max(self.wc + im.enc_c.trunc + 2)
+            + 2;
+        assert!(
+            acc.unsigned_abs() < (1u128 << acc_w),
+            "accumulator overflow: |{acc}| >= 2^{acc_w}"
+        );
+
+        // Output saturation stage, then the out_bits-wide bus.
+        let y = (acc >> im.k) as i64;
+        y.clamp(0, (1i64 << im.out_bits) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+    use crate::dse::{explore, DseOptions};
+
+    #[test]
+    fn sim_equals_eval_exhaustively() {
+        for (name, bits, r) in [
+            ("recip", 10u32, 5u32),
+            ("recip", 10, 4),
+            ("log2", 10, 6),
+            ("exp2", 10, 4),
+            ("sqrt", 10, 4),
+            ("recip", 8, 4),
+        ] {
+            let f = builtin(name, bits).unwrap();
+            let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+            let Ok(ds) = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+            else {
+                continue;
+            };
+            let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+            let sim = DatapathSim::new(&im);
+            for z in 0..(1u64 << bits) {
+                assert_eq!(sim.eval(z), im.eval(z), "{name}/{bits} R={r} z={z}");
+            }
+        }
+    }
+}

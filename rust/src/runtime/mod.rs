@@ -1,0 +1,203 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! The AOT bridge (see `python/compile/aot.py` and DESIGN.md): jax lowers
+//! the L2 graphs to HLO **text**; this module parses the text with
+//! `HloModuleProto::from_text_file`, compiles each module once on the
+//! PJRT CPU client, and exposes typed entry points. Python never runs on
+//! this path — the binary is self-contained once `artifacts/` exists.
+//!
+//! Geometry constants must match `python/compile/model.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::designspace::extrema::DiagExtrema;
+use crate::dse::Implementation;
+
+/// Batch size of the verify graphs.
+pub const CHUNK: usize = 65536;
+/// Coefficient-table padding of the verify graphs (supports `R <= 11`).
+pub const TABLE: usize = 2048;
+/// Region sizes with a compiled extrema graph.
+pub const EXTREMA_NS: [usize; 2] = [256, 1024];
+
+/// Which lowering of the verify graph to execute.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Flavor {
+    /// Pure-jnp lowering: fused XLA-CPU loops — the fast path.
+    Jnp,
+    /// Interpret-mode Pallas lowering: structurally the TPU kernel;
+    /// bit-identical, much slower on CPU. Used for cross-checks.
+    Pallas,
+}
+
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExe {
+    fn load(client: &xla::PjRtClient, path: &Path) -> Result<LoadedExe> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedExe { exe })
+    }
+
+    fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// The compiled-artifact runtime. Construction compiles every artifact
+/// found under the directory; individual graphs are optional so partial
+/// artifact sets (e.g. `--skip-pallas`) still work.
+pub struct XlaRuntime {
+    verify_jnp: Option<LoadedExe>,
+    verify_pallas: Option<LoadedExe>,
+    extrema: Vec<(usize, LoadedExe)>,
+    pub dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Load from `artifacts/` (or a custom directory).
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let opt = |name: &str| -> Result<Option<LoadedExe>> {
+            let p = dir.join(name);
+            if p.exists() {
+                Ok(Some(LoadedExe::load(&client, &p)?))
+            } else {
+                Ok(None)
+            }
+        };
+        let verify_jnp = opt("verify_jnp.hlo.txt")?;
+        let verify_pallas = opt("verify_pallas.hlo.txt")?;
+        let mut extrema = Vec::new();
+        for n in EXTREMA_NS {
+            if let Some(exe) = opt(&format!("extrema_jnp_N{n}.hlo.txt"))? {
+                extrema.push((n, exe));
+            }
+        }
+        if verify_jnp.is_none() && verify_pallas.is_none() && extrema.is_empty() {
+            bail!(
+                "no artifacts found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(XlaRuntime { verify_jnp, verify_pallas, extrema, dir })
+    }
+
+    pub fn has_flavor(&self, flavor: Flavor) -> bool {
+        match flavor {
+            Flavor::Jnp => self.verify_jnp.is_some(),
+            Flavor::Pallas => self.verify_pallas.is_some(),
+        }
+    }
+
+    /// Execute the verify graph on one chunk.
+    ///
+    /// `z`, `l`, `u` must be exactly `CHUNK` long; tables exactly `TABLE`.
+    /// `params = [xbits, sq_trunc, lin_trunc, k, out_max]`.
+    /// Returns `(outputs, violation count)`.
+    pub fn verify_chunk(
+        &self,
+        flavor: Flavor,
+        z: &[i64],
+        tables: &CoeffTables,
+        l: &[i64],
+        u: &[i64],
+        params: [i64; 5],
+    ) -> Result<(Vec<i64>, i64)> {
+        assert_eq!(z.len(), CHUNK);
+        assert_eq!(l.len(), CHUNK);
+        assert_eq!(u.len(), CHUNK);
+        let exe = match flavor {
+            Flavor::Jnp => self.verify_jnp.as_ref(),
+            Flavor::Pallas => self.verify_pallas.as_ref(),
+        }
+        .with_context(|| format!("verify artifact for {flavor:?} not loaded"))?;
+        let args = vec![
+            xla::Literal::vec1(z),
+            xla::Literal::vec1(&tables.a),
+            xla::Literal::vec1(&tables.b),
+            xla::Literal::vec1(&tables.c),
+            xla::Literal::vec1(l),
+            xla::Literal::vec1(u),
+            xla::Literal::vec1(&params),
+        ];
+        let mut out = exe.run(&args)?;
+        anyhow::ensure!(out.len() == 2, "verify graph returned {} outputs", out.len());
+        let viol = out.pop().unwrap().to_vec::<i64>()?;
+        let outs = out.pop().unwrap().to_vec::<i64>()?;
+        Ok((outs, viol.iter().sum()))
+    }
+
+    /// Execute the diagonal-extrema graph for a region of exactly a
+    /// compiled size. Returns `None` when no variant matches (callers fall
+    /// back to the in-process Rust implementation).
+    pub fn extrema(&self, l: &[i32], u: &[i32]) -> Option<DiagExtrema> {
+        let n = l.len();
+        let exe = self.extrema.iter().find(|&&(sz, _)| sz == n).map(|(_, e)| e)?;
+        let li: Vec<i64> = l.iter().map(|&v| v as i64).collect();
+        let ui: Vec<i64> = u.iter().map(|&v| v as i64).collect();
+        let args = [xla::Literal::vec1(&li), xla::Literal::vec1(&ui)];
+        let out = exe.run(&args).ok()?;
+        if out.len() != 4 {
+            return None;
+        }
+        let bn = out[0].to_vec::<i64>().ok()?;
+        let bd = out[1].to_vec::<i64>().ok()?;
+        let sn = out[2].to_vec::<i64>().ok()?;
+        let sd = out[3].to_vec::<i64>().ok()?;
+        let tmax = 2 * n - 3;
+        let m_pairs: Vec<(i64, i64)> = bn.into_iter().zip(bd).collect();
+        let s_pairs: Vec<(i64, i64)> = sn.into_iter().zip(sd).collect();
+        Some(crate::designspace::extrema::diag_extrema_from_fracs(
+            &m_pairs, &s_pairs, tmax,
+        ))
+    }
+}
+
+/// Padded coefficient tables for the verify graph.
+pub struct CoeffTables {
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+    pub c: Vec<i64>,
+}
+
+impl CoeffTables {
+    pub fn from_impl(im: &Implementation) -> CoeffTables {
+        assert!(
+            im.coeffs.len() <= TABLE,
+            "R={} exceeds the compiled table capacity",
+            im.lookup_bits
+        );
+        let mut a = vec![0i64; TABLE];
+        let mut b = vec![0i64; TABLE];
+        let mut c = vec![0i64; TABLE];
+        for (i, co) in im.coeffs.iter().enumerate() {
+            a[i] = co.a;
+            b[i] = co.b;
+            c[i] = co.c;
+        }
+        CoeffTables { a, b, c }
+    }
+}
+
+/// Overflow guard: the XLA datapath runs in i64; reject configurations
+/// whose accumulator could exceed it (none of the paper's formats do).
+pub fn accumulator_fits_i64(im: &Implementation) -> bool {
+    let xmax = (1i128 << im.x_bits()) - 1;
+    let amax = im.coeffs.iter().map(|c| (c.a as i128).abs()).max().unwrap_or(0);
+    let bmax = im.coeffs.iter().map(|c| (c.b as i128).abs()).max().unwrap_or(0);
+    let cmax = im.coeffs.iter().map(|c| (c.c as i128).abs()).max().unwrap_or(0);
+    let acc = amax * xmax * xmax + bmax * xmax + cmax;
+    acc < (1i128 << 62)
+}

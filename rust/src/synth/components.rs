@@ -1,0 +1,199 @@
+//! Gate-level component models — the Design Compiler / TSMC 7 nm stand-in.
+//!
+//! The paper's Table I / Figs 2–3 are Synopsys DC synthesis results on a
+//! TSMC 7 nm library. We cannot run DC, so (DESIGN.md §3) we model each
+//! datapath component analytically at the gate-equivalent level and
+//! calibrate two global constants (area of a NAND2-equivalent, one FO4
+//! delay) to the 7 nm magnitudes the paper reports. The *shape* of every
+//! comparison — which architecture is smaller, how area trades against the
+//! delay target, where LUT-height crossovers sit — comes out of the
+//! structural models, not the calibration.
+
+/// Area of one gate equivalent (NAND2), µm². Calibrated so a 16-bit
+/// quadratic interpolator lands in the paper's few-hundred-µm² range.
+pub const GE_UM2: f64 = 0.065;
+/// One FO4 inverter delay, ns (≈7 ps in a fast 7 nm process).
+pub const FO4_NS: f64 = 0.007;
+
+/// Area/delay of one component at maximum drive (minimum delay).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Gate equivalents.
+    pub area_ge: f64,
+    /// FO4 units on the component's critical path.
+    pub delay_fo4: f64,
+}
+
+impl Cost {
+    pub fn zero() -> Cost {
+        Cost::default()
+    }
+
+    pub fn area_um2(&self) -> f64 {
+        self.area_ge * GE_UM2
+    }
+
+    pub fn delay_ns(&self) -> f64 {
+        self.delay_fo4 * FO4_NS
+    }
+}
+
+/// Carry-save reduction depth for `rows` partial-product rows down to 2
+/// (Dadda sequence: 2, 3, 4, 6, 9, 13, 19, 28, ...).
+pub fn dadda_stages(rows: u32) -> u32 {
+    if rows <= 2 {
+        return 0;
+    }
+    let mut h = 2u32;
+    let mut stages = 0u32;
+    while h < rows {
+        h = h * 3 / 2;
+        stages += 1;
+    }
+    stages
+}
+
+/// Parallel-prefix (Kogge-Stone-ish) adder of width `w`.
+pub fn adder(w: u32) -> Cost {
+    if w == 0 {
+        return Cost::zero();
+    }
+    let lg = (w.max(2) as f64).log2();
+    Cost {
+        // w PG cells + w*log2(w) prefix nodes + w sum XORs.
+        area_ge: w as f64 * (2.0 + 1.6 * lg) + w as f64,
+        delay_fo4: 2.0 + 1.8 * lg,
+    }
+}
+
+/// Signed multiplier `w1 x w2` (radix-4 Booth, Dadda tree, final CPA).
+pub fn multiplier(w1: u32, w2: u32) -> Cost {
+    if w1 == 0 || w2 == 0 {
+        return Cost::zero();
+    }
+    let rows = w1.div_ceil(2) + 1; // Booth radix-4 rows
+    let pp_area = rows as f64 * (w2 as f64 + 2.0) * 1.6; // mux-based PP cells
+    let csa_area = (rows.saturating_sub(2)) as f64 * (w1 + w2) as f64 * 4.5;
+    let cpa = adder(w1 + w2);
+    Cost {
+        area_ge: pp_area + csa_area + cpa.area_ge,
+        delay_fo4: 3.0 /* booth enc+mux */ + dadda_stages(rows) as f64 * 2.2 + cpa.delay_fo4,
+    }
+}
+
+/// Dedicated squarer of width `w` (folding halves the partial products).
+pub fn squarer(w: u32) -> Cost {
+    if w == 0 {
+        return Cost::zero();
+    }
+    let rows = (w.div_ceil(2) + 1).max(1);
+    let pp_area = 0.5 * w as f64 * (w as f64 + 1.0) * 1.2; // folded AND array
+    let csa_area = rows.saturating_sub(2) as f64 * (2 * w) as f64 * 4.0;
+    let cpa = adder(2 * w);
+    Cost {
+        area_ge: pp_area + csa_area + cpa.area_ge,
+        delay_fo4: 1.0 + dadda_stages(rows) as f64 * 2.2 + cpa.delay_fo4,
+    }
+}
+
+/// Synthesized ROM (the coefficient LUT): `2^r_bits` words of `width`
+/// bits, implemented as random logic after minimization (how DC treats a
+/// `case` table). Empirical logic-compaction factor ~0.35 per bit-cell,
+/// shrinking slightly with height as minimization finds shared cubes.
+pub fn lut(r_bits: u32, width: u32) -> Cost {
+    if width == 0 || r_bits == 0 {
+        return Cost::zero();
+    }
+    let entries = (1u64 << r_bits) as f64;
+    let share = 0.38 * (1.0 - 0.018 * r_bits as f64).max(0.55);
+    Cost {
+        area_ge: entries * width as f64 * share + width as f64 * 2.0,
+        delay_fo4: 1.0 + 1.35 * r_bits as f64 + 0.4 * (width.max(2) as f64).log2(),
+    }
+}
+
+/// 3:2 carry-save compression of `n` operands of width `w`, plus the final
+/// carry-propagate adder.
+pub fn multi_operand_add(n: u32, w: u32) -> Cost {
+    if n <= 1 {
+        return Cost::zero();
+    }
+    let layers = dadda_stages(n);
+    let cpa = adder(w);
+    Cost {
+        area_ge: (n.saturating_sub(2)) as f64 * w as f64 * 4.5 + cpa.area_ge,
+        delay_fo4: layers as f64 * 2.2 + cpa.delay_fo4,
+    }
+}
+
+/// Delay-target sizing model: synthesizing for a tighter delay costs area
+/// (gate upsizing, buffering, logic duplication). `effort = d_min / d`
+/// in (0, 1]; multiplier grows gently, then steeply as `d -> d_min`.
+pub fn sizing_multiplier(d_min_ns: f64, d_target_ns: f64) -> f64 {
+    assert!(d_target_ns > 0.0 && d_min_ns > 0.0);
+    let e = (d_min_ns / d_target_ns).min(1.0);
+    1.0 + 0.9 * e.powi(3) / (1.5 - e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dadda_depths() {
+        assert_eq!(dadda_stages(2), 0);
+        assert_eq!(dadda_stages(3), 1);
+        assert_eq!(dadda_stages(4), 2);
+        assert_eq!(dadda_stages(6), 3);
+        assert_eq!(dadda_stages(9), 4);
+        assert_eq!(dadda_stages(13), 5);
+        assert_eq!(dadda_stages(19), 6);
+    }
+
+    #[test]
+    fn monotone_in_width() {
+        for w in 2..30u32 {
+            assert!(multiplier(w + 1, w).area_ge > multiplier(w, w - 1).area_ge);
+            assert!(adder(w + 1).area_ge > adder(w).area_ge);
+            assert!(squarer(w + 1).area_ge > squarer(w).area_ge);
+            assert!(lut(8, w + 1).area_ge > lut(8, w).area_ge);
+        }
+    }
+
+    #[test]
+    fn squarer_cheaper_than_multiplier() {
+        for w in 4..24u32 {
+            assert!(
+                squarer(w).area_ge < multiplier(w, w).area_ge,
+                "squarer({w}) should beat {w}x{w} multiplier"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_scales_with_height() {
+        let a6 = lut(6, 30).area_ge;
+        let a8 = lut(8, 30).area_ge;
+        assert!(a8 > 3.0 * a6, "doubling R twice should ~4x the LUT");
+        assert!(lut(8, 30).delay_fo4 > lut(6, 30).delay_fo4);
+    }
+
+    #[test]
+    fn sizing_curve_shape() {
+        let dmin = 0.2;
+        let relaxed = sizing_multiplier(dmin, 0.4);
+        let tight = sizing_multiplier(dmin, 0.21);
+        let at_min = sizing_multiplier(dmin, 0.2);
+        assert!(relaxed < tight && tight < at_min);
+        assert!(relaxed < 1.4, "relaxed target should be near minimum area");
+        assert!(at_min > 2.0 && at_min < 6.0, "min-delay costs a few x area: {at_min}");
+    }
+
+    #[test]
+    fn calibration_magnitudes() {
+        // A 16x16 multiplier in 7nm is a few hundred µm² and sub-ns.
+        let m = multiplier(16, 16);
+        assert!(m.area_um2() > 50.0 && m.area_um2() < 500.0, "{}", m.area_um2());
+        assert!(m.delay_ns() > 0.05 && m.delay_ns() < 0.4, "{}", m.delay_ns());
+    }
+}

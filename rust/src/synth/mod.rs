@@ -1,0 +1,8 @@
+//! Synthesis cost model — the Design Compiler / TSMC 7 nm substitute
+//! (DESIGN.md §3). Component models in [`components`], whole-datapath
+//! costing and delay-target sweeps in [`model`].
+
+pub mod components;
+pub mod model;
+
+pub use model::{breakdown, sweep, synth_at, synth_min_delay, Breakdown, SynthPoint};

@@ -1,0 +1,201 @@
+//! Whole-datapath cost model for a generated interpolator (paper Fig. 1),
+//! and the area(delay-target) sweep behind Table I and Figs 2–3.
+//!
+//! The two parallel paths of the architecture:
+//!
+//! ```text
+//!   path A:  x -> truncate -> square ----\
+//!   path B:  r -> LUT (a,b,c) ------------+-> a*sq, b*xl -> 3:2 + CPA -> >>k
+//! ```
+//!
+//! The multiplies start when *both* their operands are ready, so the
+//! pre-multiply delay is `max(T_square, T_lut)` — the paper's observation
+//! that the square path is usually critical drives its decision procedure
+//! (§III), and this model reproduces that: for quadratic designs at the
+//! paper's sizes `T_square > T_lut` until `R` grows large.
+
+use super::components::{
+    lut, multi_operand_add, multiplier, sizing_multiplier, squarer, Cost,
+};
+use crate::dse::{Degree, Implementation};
+use crate::rtl::encode::field_widths;
+
+/// Per-component cost breakdown of one implementation at max drive.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub lut: Cost,
+    pub squarer: Cost,
+    pub mult_a: Cost,
+    pub mult_b: Cost,
+    pub accumulate: Cost,
+    /// Minimum achievable delay, ns.
+    pub d_min_ns: f64,
+    /// Area at minimum delay... no: area at *relaxed* target, GE.
+    pub area_min_ge: f64,
+}
+
+/// Structural cost of the implementation (drive-independent).
+pub fn breakdown(im: &Implementation) -> Breakdown {
+    let (wa, wb, wc) = field_widths(im);
+    let xbits = im.x_bits();
+    let xs_bits = xbits - im.sq_trunc;
+    let xl_bits = xbits - im.lin_trunc;
+
+    let lut_c = lut(im.lookup_bits, wa + wb + wc);
+    let (sq_c, ma_c) = if im.degree == Degree::Quadratic {
+        (squarer(xs_bits), multiplier(wa + 1, 2 * xs_bits))
+    } else {
+        (Cost::zero(), Cost::zero())
+    };
+    let mb_c = multiplier(wb + 1, xl_bits);
+    // Accumulator: three operands at the accumulator width.
+    let acc_w = (2 * xs_bits + wa).max(wb + xl_bits).max(wc) + 2 + im.k;
+    let n_ops = if im.degree == Degree::Quadratic { 3 } else { 2 };
+    let add_c = multi_operand_add(n_ops, acc_w);
+
+    let pre_mult = sq_c.delay_fo4.max(lut_c.delay_fo4);
+    let mult_path = ma_c.delay_fo4.max(mb_c.delay_fo4 + (lut_c.delay_fo4 - pre_mult).max(0.0));
+    let d_min_fo4 = pre_mult + mult_path + add_c.delay_fo4;
+    let area_ge =
+        lut_c.area_ge + sq_c.area_ge + ma_c.area_ge + mb_c.area_ge + add_c.area_ge;
+
+    Breakdown {
+        lut: lut_c,
+        squarer: sq_c,
+        mult_a: ma_c,
+        mult_b: mb_c,
+        accumulate: add_c,
+        d_min_ns: d_min_fo4 * super::components::FO4_NS,
+        area_min_ge: area_ge * 1.10, // 10% wiring/misc overhead
+    }
+}
+
+/// One synthesis result: the model's analogue of a DC run at a delay
+/// target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SynthPoint {
+    pub delay_ns: f64,
+    pub area_um2: f64,
+}
+
+impl SynthPoint {
+    pub fn area_delay(&self) -> f64 {
+        self.delay_ns * self.area_um2
+    }
+}
+
+/// "Synthesize" at a delay target: returns the achieved delay (the target,
+/// when achievable) and the sized area. Targets below `d_min` are clamped
+/// to `d_min` (DC reports a violated path; we report the floor).
+pub fn synth_at(im: &Implementation, target_ns: f64) -> SynthPoint {
+    let b = breakdown(im);
+    let d = target_ns.max(b.d_min_ns);
+    let mult = sizing_multiplier(b.d_min_ns, d);
+    SynthPoint {
+        delay_ns: d,
+        area_um2: b.area_min_ge * mult * super::components::GE_UM2,
+    }
+}
+
+/// The minimum-obtainable-delay point (Table I's operating point).
+pub fn synth_min_delay(im: &Implementation) -> SynthPoint {
+    let b = breakdown(im);
+    synth_at(im, b.d_min_ns)
+}
+
+/// Full area-delay profile (Fig. 2 / Fig. 3): `n` targets from `d_min` to
+/// `relax * d_min`, geometrically spaced.
+pub fn sweep(im: &Implementation, n: usize, relax: f64) -> Vec<SynthPoint> {
+    let b = breakdown(im);
+    (0..n)
+        .map(|i| {
+            let f = (relax.ln() * i as f64 / (n - 1).max(1) as f64).exp();
+            synth_at(im, b.d_min_ns * f)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+    use crate::dse::{explore, DseOptions};
+
+    fn demo(name: &str, bits: u32, r: u32) -> Implementation {
+        let f = builtin(name, bits).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() }).unwrap();
+        explore(&bt, &ds, &DseOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn paper_magnitudes_10bit() {
+        // Paper Table I: 10-bit recip, 6 lookup bits (linear): 43 µm² at
+        // 0.125 ns. The model should land within ~2-3x of both.
+        let im = demo("recip", 10, 6);
+        let p = synth_min_delay(&im);
+        assert!(p.delay_ns > 0.04 && p.delay_ns < 0.4, "delay {}", p.delay_ns);
+        assert!(p.area_um2 > 10.0 && p.area_um2 < 250.0, "area {}", p.area_um2);
+    }
+
+    #[test]
+    fn sweep_is_monotone_banana() {
+        let im = demo("log2", 10, 5);
+        let pts = sweep(&im, 12, 2.5);
+        for w in pts.windows(2) {
+            assert!(w[1].delay_ns > w[0].delay_ns);
+            assert!(w[1].area_um2 <= w[0].area_um2 + 1e-9, "area must relax with delay");
+        }
+        // Meaningful dynamic range.
+        assert!(pts[0].area_um2 > 1.5 * pts.last().unwrap().area_um2);
+    }
+
+    #[test]
+    fn linear_cheaper_than_quadratic_same_function() {
+        // Same function/precision: a linear design (higher R) at min delay
+        // should be faster than the quadratic (it drops squarer+mult).
+        let quad = demo("recip", 10, 4);
+        let lin = demo("recip", 10, 7);
+        if quad.degree == Degree::Quadratic && lin.degree == Degree::Linear {
+            let pq = synth_min_delay(&quad);
+            let pl = synth_min_delay(&lin);
+            assert!(pl.delay_ns < pq.delay_ns, "linear should be faster");
+        }
+    }
+
+    #[test]
+    fn truncation_reduces_cost() {
+        // Force zero truncation and compare: the DSE's truncations must pay.
+        let im = demo("recip", 10, 4);
+        if im.degree != Degree::Quadratic || im.sq_trunc == 0 {
+            return;
+        }
+        let mut untrunc = im.clone();
+        untrunc.sq_trunc = 0;
+        untrunc.lin_trunc = 0;
+        let a = synth_min_delay(&im);
+        let b = synth_min_delay(&untrunc);
+        assert!(
+            a.area_um2 < b.area_um2,
+            "truncated {} >= untruncated {}",
+            a.area_um2,
+            b.area_um2
+        );
+    }
+
+    #[test]
+    fn breakdown_components_positive_for_quadratic() {
+        let im = demo("recip", 10, 4);
+        if im.degree != Degree::Quadratic {
+            return;
+        }
+        let b = breakdown(&im);
+        assert!(b.lut.area_ge > 0.0);
+        assert!(b.squarer.area_ge > 0.0);
+        assert!(b.mult_a.area_ge > 0.0);
+        assert!(b.mult_b.area_ge > 0.0);
+        assert!(b.accumulate.area_ge > 0.0);
+        assert!(b.d_min_ns > 0.0);
+    }
+}

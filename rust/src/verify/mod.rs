@@ -1,0 +1,210 @@
+//! Exhaustive design verification — the HECTOR substitute (DESIGN.md §3).
+//!
+//! The paper formally verifies generated RTL with Synopsys HECTOR; the
+//! input spaces here are at most 2^24 codes, so *exhaustive simulation* of
+//! the bit-accurate datapath against the bound tables is a stronger check
+//! and is what we run: every input code, not a property proof over an
+//! abstraction. Two engines:
+//!
+//! - [`Engine::Scalar`]: pure-Rust evaluation of
+//!   [`Implementation::eval`] — the trust anchor;
+//! - [`Engine::Xla`]: the AOT-compiled verify graph, chunked through PJRT
+//!   (~the hot path; bit-identical by construction and cross-checked by
+//!   `tests/runtime_integration.rs`).
+
+use anyhow::Result;
+
+use crate::bounds::BoundTable;
+use crate::dse::Implementation;
+use crate::runtime::{accumulator_fits_i64, CoeffTables, Flavor, XlaRuntime, CHUNK};
+
+/// Which verification engine to run.
+pub enum Engine<'rt> {
+    Scalar,
+    Xla { rt: &'rt XlaRuntime, flavor: Flavor },
+}
+
+/// Outcome of an exhaustive verification sweep.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Inputs checked (always the full space).
+    pub total: u64,
+    pub violations: u64,
+    /// Smallest violating input code, if any.
+    pub first_violation: Option<u64>,
+    /// Worst signed distance outside the bounds (0 when clean).
+    pub worst_excess: i64,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.violations == 0
+    }
+}
+
+/// Exhaustively verify `im` against `bt` over all `2^in_bits` inputs.
+pub fn verify_exhaustive(
+    bt: &BoundTable,
+    im: &Implementation,
+    engine: &Engine<'_>,
+) -> Result<VerifyReport> {
+    assert_eq!(bt.in_bits, im.in_bits, "bound table / implementation mismatch");
+    match engine {
+        Engine::Scalar => Ok(verify_scalar(bt, im)),
+        Engine::Xla { rt, flavor } => verify_xla(bt, im, rt, *flavor),
+    }
+}
+
+fn verify_scalar(bt: &BoundTable, im: &Implementation) -> VerifyReport {
+    let total = 1u64 << bt.in_bits;
+    let mut violations = 0u64;
+    let mut first = None;
+    let mut worst = 0i64;
+    for z in 0..total {
+        let out = im.eval(z);
+        let (lo, hi) = (bt.l[z as usize] as i64, bt.u[z as usize] as i64);
+        if out < lo || out > hi {
+            violations += 1;
+            if first.is_none() {
+                first = Some(z);
+            }
+            let excess = if out < lo { lo - out } else { out - hi };
+            worst = worst.max(excess);
+        }
+    }
+    VerifyReport { total, violations, first_violation: first, worst_excess: worst }
+}
+
+fn verify_xla(
+    bt: &BoundTable,
+    im: &Implementation,
+    rt: &XlaRuntime,
+    flavor: Flavor,
+) -> Result<VerifyReport> {
+    anyhow::ensure!(accumulator_fits_i64(im), "accumulator would overflow the i64 datapath");
+    let total = 1u64 << bt.in_bits;
+    let tables = CoeffTables::from_impl(im);
+    let params = [
+        im.x_bits() as i64,
+        im.sq_trunc as i64,
+        im.lin_trunc as i64,
+        im.k as i64,
+        (1i64 << im.out_bits) - 1,
+    ];
+    let mut violations = 0u64;
+    let mut first = None;
+    let mut worst = 0i64;
+
+    let mut z_buf = vec![0i64; CHUNK];
+    let mut l_buf = vec![0i64; CHUNK];
+    let mut u_buf = vec![0i64; CHUNK];
+    let mut base = 0u64;
+    while base < total {
+        let n = ((total - base) as usize).min(CHUNK);
+        for i in 0..CHUNK {
+            if i < n {
+                let z = base + i as u64;
+                z_buf[i] = z as i64;
+                l_buf[i] = bt.l[z as usize] as i64;
+                u_buf[i] = bt.u[z as usize] as i64;
+            } else {
+                // Padding lanes: input 0 with permissive bounds.
+                z_buf[i] = 0;
+                l_buf[i] = i64::MIN / 4;
+                u_buf[i] = i64::MAX / 4;
+            }
+        }
+        let (outs, viol) = rt.verify_chunk(flavor, &z_buf, &tables, &l_buf, &u_buf, params)?;
+        if viol > 0 {
+            violations += viol as u64;
+            // Localize within the chunk (cheap: only on failure).
+            for i in 0..n {
+                let out = outs[i];
+                if out < l_buf[i] || out > u_buf[i] {
+                    let z = base + i as u64;
+                    if first.is_none() {
+                        first = Some(z);
+                    }
+                    let excess =
+                        if out < l_buf[i] { l_buf[i] - out } else { out - u_buf[i] };
+                    worst = worst.max(excess);
+                }
+            }
+        }
+        base += n as u64;
+    }
+    Ok(VerifyReport { total, violations, first_violation: first, worst_excess: worst })
+}
+
+/// Cross-check the two engines on a strided sample of inputs (used by
+/// integration tests and `polygen verify --cross-check`).
+pub fn cross_check_sample(
+    bt: &BoundTable,
+    im: &Implementation,
+    rt: &XlaRuntime,
+    flavor: Flavor,
+    stride: u64,
+) -> Result<bool> {
+    let tables = CoeffTables::from_impl(im);
+    let params = [
+        im.x_bits() as i64,
+        im.sq_trunc as i64,
+        im.lin_trunc as i64,
+        im.k as i64,
+        (1i64 << im.out_bits) - 1,
+    ];
+    let total = 1u64 << bt.in_bits;
+    let mut z_buf = vec![0i64; CHUNK];
+    let l_buf = vec![i64::MIN / 4; CHUNK];
+    let u_buf = vec![i64::MAX / 4; CHUNK];
+    let picks: Vec<u64> = (0..total).step_by(stride.max(1) as usize).collect();
+    for (i, &z) in picks.iter().enumerate() {
+        z_buf[i % CHUNK] = z as i64;
+        if (i + 1) % CHUNK == 0 || i + 1 == picks.len() {
+            let (outs, _) = rt.verify_chunk(flavor, &z_buf, &tables, &l_buf, &u_buf, params)?;
+            let filled = (i % CHUNK) + 1;
+            for (slot, &out) in outs.iter().enumerate().take(filled) {
+                let zz = z_buf[slot] as u64;
+                if out != im.eval(zz) {
+                    return Ok(false);
+                }
+            }
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec};
+    use crate::designspace::{generate, GenOptions};
+    use crate::dse::{explore, DseOptions};
+
+    #[test]
+    fn scalar_verify_clean_design() {
+        let f = builtin("recip", 10).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: 5, ..Default::default() }).unwrap();
+        let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        let rep = verify_exhaustive(&bt, &im, &Engine::Scalar).unwrap();
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.total, 1 << 10);
+    }
+
+    #[test]
+    fn scalar_verify_catches_corruption() {
+        let f = builtin("exp2", 8).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() }).unwrap();
+        let mut im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        // Fault injection: corrupt one region's c.
+        im.coeffs[7].c += 64 << im.k;
+        let rep = verify_exhaustive(&bt, &im, &Engine::Scalar).unwrap();
+        assert!(!rep.ok());
+        assert!(rep.first_violation.is_some());
+        let z = rep.first_violation.unwrap();
+        assert_eq!(z >> im.x_bits(), 7, "violation not localized to region 7");
+        assert!(rep.worst_excess > 0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Minimal 256-bit unsigned helpers for the exact transcendental bound
+//! computations in [`crate::bounds`].
+//!
+//! The exact `log2` / `exp2` substrates work on 128-bit fixed-point
+//! mantissas; squaring and square-rooting those needs 256-bit
+//! intermediates. Only the handful of operations those algorithms need are
+//! implemented — this is not a general bignum.
+
+/// A 256-bit unsigned integer as `(hi, lo)` 128-bit limbs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct U256 {
+    pub hi: u128,
+    pub lo: u128,
+}
+
+impl U256 {
+    pub const ZERO: U256 = U256 { hi: 0, lo: 0 };
+
+    pub fn from_u128(v: u128) -> U256 {
+        U256 { hi: 0, lo: v }
+    }
+
+    /// Full 128x128 -> 256 multiply.
+    pub fn mul_u128(a: u128, b: u128) -> U256 {
+        const MASK: u128 = (1u128 << 64) - 1;
+        let (a0, a1) = (a & MASK, a >> 64);
+        let (b0, b1) = (b & MASK, b >> 64);
+        let p00 = a0 * b0;
+        let p01 = a0 * b1;
+        let p10 = a1 * b0;
+        let p11 = a1 * b1;
+        // lo = p00 + ((p01 + p10) << 64), tracking carries.
+        let (mid, c1) = p01.overflowing_add(p10);
+        let mid_lo = mid << 64;
+        let mid_hi = (mid >> 64) + ((c1 as u128) << 64);
+        let (lo, c2) = p00.overflowing_add(mid_lo);
+        let hi = p11 + mid_hi + c2 as u128;
+        U256 { hi, lo }
+    }
+
+    /// Logical right shift by `s` bits (`0 <= s < 256`).
+    pub fn shr(self, s: u32) -> U256 {
+        match s {
+            0 => self,
+            1..=127 => U256 { hi: self.hi >> s, lo: (self.lo >> s) | (self.hi << (128 - s)) },
+            128 => U256 { hi: 0, lo: self.hi },
+            129..=255 => U256 { hi: 0, lo: self.hi >> (s - 128) },
+            _ => U256::ZERO,
+        }
+    }
+
+    /// Left shift by `s` bits (`0 <= s < 256`), discarding overflow.
+    pub fn shl(self, s: u32) -> U256 {
+        match s {
+            0 => self,
+            1..=127 => U256 { hi: (self.hi << s) | (self.lo >> (128 - s)), lo: self.lo << s },
+            128 => U256 { hi: self.lo, lo: 0 },
+            129..=255 => U256 { hi: self.lo << (s - 128), lo: 0 },
+            _ => U256::ZERO,
+        }
+    }
+
+    pub fn cmp256(&self, o: &U256) -> std::cmp::Ordering {
+        (self.hi, self.lo).cmp(&(o.hi, o.lo))
+    }
+
+    pub fn lt(&self, o: &U256) -> bool {
+        self.cmp256(o) == std::cmp::Ordering::Less
+    }
+
+    pub fn saturating_to_u128(self) -> u128 {
+        if self.hi != 0 {
+            u128::MAX
+        } else {
+            self.lo
+        }
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bits(&self) -> u32 {
+        if self.hi != 0 {
+            256 - self.hi.leading_zeros()
+        } else {
+            128 - self.lo.leading_zeros()
+        }
+    }
+}
+
+/// `floor(sqrt(v))` for `u128` by Newton iteration seeded from `f64`.
+pub fn isqrt_u128(v: u128) -> u128 {
+    if v == 0 {
+        return 0;
+    }
+    // f64 seed is good to ~2^-52 relative; a few Newton steps pin it down.
+    let mut x = (v as f64).sqrt() as u128;
+    if x == 0 {
+        x = 1;
+    }
+    for _ in 0..6 {
+        let next = (x + v / x) >> 1;
+        if next >= x {
+            break;
+        }
+        x = next;
+    }
+    // Final correction to the exact floor.
+    while x.checked_mul(x).map_or(true, |sq| sq > v) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).map_or(false, |sq| sq <= v) {
+        x += 1;
+    }
+    x
+}
+
+impl U256 {
+    pub fn checked_sub(self, o: U256) -> Option<U256> {
+        if self.lt(&o) {
+            return None;
+        }
+        let (lo, borrow) = self.lo.overflowing_sub(o.lo);
+        Some(U256 { hi: self.hi - o.hi - borrow as u128, lo })
+    }
+
+    pub fn add(self, o: U256) -> U256 {
+        let (lo, carry) = self.lo.overflowing_add(o.lo);
+        U256 { hi: self.hi.wrapping_add(o.hi).wrapping_add(carry as u128), lo }
+    }
+}
+
+/// `floor(sqrt(v))` for a 256-bit value, returned as `u128` (the root of a
+/// 256-bit value always fits in 128 bits). Classic digit-by-digit method:
+/// exact, branch-simple, ~128 iterations.
+pub fn isqrt_u256(v: U256) -> u128 {
+    if v.hi == 0 {
+        return isqrt_u128(v.lo);
+    }
+    let mut x = v;
+    let mut res = U256::ZERO;
+    // Highest power of four <= v.
+    let mut bit = U256::from_u128(1).shl((v.bits() - 1) & !1);
+    while bit != U256::ZERO {
+        let sum = res.add(bit);
+        if let Some(rem) = x.checked_sub(sum) {
+            x = rem;
+            res = res.shr(1).add(bit);
+        } else {
+            res = res.shr(1);
+        }
+        bit = bit.shr(2);
+    }
+    debug_assert_eq!(res.hi, 0);
+    res.lo
+}
+
+/// `floor(v / d)` for 256-bit `v` and 128-bit `d`, saturating to `u128::MAX`.
+pub fn div_u256_by_u128(v: U256, d: u128) -> u128 {
+    assert!(d != 0, "division by zero");
+    if v.hi == 0 {
+        return v.lo / d;
+    }
+    if v.hi >= d {
+        return u128::MAX; // quotient does not fit; saturate
+    }
+    // Long division, bit by bit over the high limb then low limb.
+    let mut rem: u128 = 0;
+    let mut quo: u128 = 0;
+    for i in (0..256).rev() {
+        let bit = if i >= 128 { (v.hi >> (i - 128)) & 1 } else { (v.lo >> i) & 1 };
+        // rem = rem*2 + bit; if rem >= d { rem -= d; q bit = 1 }
+        let carry = rem >> 127;
+        rem = (rem << 1) | bit;
+        if carry != 0 || rem >= d {
+            rem = rem.wrapping_sub(d);
+            if i < 128 {
+                quo |= 1u128 << i;
+            } else {
+                return u128::MAX;
+            }
+        }
+    }
+    quo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_small() {
+        let p = U256::mul_u128(u64::MAX as u128, u64::MAX as u128);
+        assert_eq!(p.hi, 0);
+        assert_eq!(p.lo, (u64::MAX as u128) * (u64::MAX as u128));
+    }
+
+    #[test]
+    fn mul_big() {
+        // (2^127)^2 = 2^254
+        let p = U256::mul_u128(1u128 << 127, 1u128 << 127);
+        assert_eq!(p.lo, 0);
+        assert_eq!(p.hi, 1u128 << 126);
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        let v = U256 { hi: 0x1234_5678_9abc_def0, lo: 0x0fed_cba9_8765_4321 };
+        for s in [0u32, 1, 63, 64, 127, 128, 129, 200, 255] {
+            let w = v.shl(s).shr(s);
+            if s == 0 {
+                assert_eq!(w, v);
+            }
+            let x = v.shr(1).shl(1);
+            assert_eq!(x.lo & !1, v.lo & !1);
+        }
+    }
+
+    #[test]
+    fn isqrt_u128_exact() {
+        for v in [0u128, 1, 2, 3, 4, 15, 16, 17, 1 << 40, (1 << 40) + 1, u64::MAX as u128] {
+            let r = isqrt_u128(v);
+            assert!(r * r <= v, "v={v}");
+            assert!((r + 1).checked_mul(r + 1).map_or(true, |s| s > v), "v={v}");
+        }
+        // Deterministic pseudo-random sweep.
+        let mut s: u128 = 0x9e3779b97f4a7c15;
+        for _ in 0..2000 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = s >> 7;
+            let r = isqrt_u128(v);
+            assert!(r * r <= v);
+            assert!((r + 1).checked_mul(r + 1).map_or(true, |sq| sq > v));
+        }
+    }
+
+    #[test]
+    fn isqrt_u256_exact() {
+        // Perfect squares of large values round-trip.
+        let mut s: u128 = 0xdeadbeefcafebabe;
+        for _ in 0..500 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = s | (1u128 << 120);
+            let sq = U256::mul_u128(x, x);
+            assert_eq!(isqrt_u256(sq), x);
+            // And sq+1 (if not overflowing lo) has the same floor sqrt.
+            let sq1 = U256 { hi: sq.hi, lo: sq.lo.wrapping_add(1) };
+            if sq1.lo != 0 {
+                assert_eq!(isqrt_u256(sq1), x);
+            }
+        }
+    }
+
+    #[test]
+    fn div_u256() {
+        let v = U256::mul_u128(123456789012345678901234567890u128, 987654321u128);
+        assert_eq!(div_u256_by_u128(v, 987654321u128), 123456789012345678901234567890u128);
+        let v1 = U256 { hi: v.hi, lo: v.lo + 5 };
+        assert_eq!(div_u256_by_u128(v1, 987654321u128), 123456789012345678901234567890u128);
+    }
+
+    #[test]
+    fn bits_counts() {
+        assert_eq!(U256::ZERO.bits(), 0);
+        assert_eq!(U256::from_u128(1).bits(), 1);
+        assert_eq!(U256 { hi: 1, lo: 0 }.bits(), 129);
+    }
+}

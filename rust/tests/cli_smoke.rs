@@ -1,0 +1,104 @@
+//! CLI smoke tests: drive the `polygen` binary end to end via
+//! `std::process` (the closest thing to a user's shell).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn polygen() -> Command {
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_polygen"));
+    Command::new(exe)
+}
+
+#[test]
+fn generate_prints_space_summary() {
+    let out = polygen()
+        .args(["generate", "--func", "recip", "--bits", "10", "--lub", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("design space: recip 10b R=5"), "{s}");
+    assert!(s.contains("linear_ok"), "{s}");
+}
+
+#[test]
+fn dse_prints_coefficients() {
+    let out = polygen()
+        .args(["dse", "--func", "log2", "--bits", "10", "--lub", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("impl:"), "{s}");
+    assert!(s.contains("r=0:"), "{s}");
+}
+
+#[test]
+fn verify_scalar_passes() {
+    let out = polygen()
+        .args(["verify", "--func", "exp2", "--bits", "10", "--lub", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("0 violations"), "{s}");
+}
+
+#[test]
+fn rtl_writes_files() {
+    let dir = std::env::temp_dir().join(format!("polygen_rtl_{}", std::process::id()));
+    let out = polygen()
+        .args([
+            "rtl", "--func", "recip", "--bits", "8", "--lub", "4", "--tb", "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("recip_8b_r4.v").exists());
+    assert!(dir.join("recip_8b_r4_tb.v").exists());
+    assert!(dir.join("recip_8b_r4_golden.hex").exists());
+    assert!(dir.join("recip_behavioral.v").exists());
+    let v = std::fs::read_to_string(dir.join("recip_8b_r4.v")).unwrap();
+    assert!(v.contains("module recip_8b_r4"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn report_linear_runs() {
+    let out = polygen().args(["report", "linear"]).output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("linear feasible"), "{s}");
+}
+
+#[test]
+fn config_file_flow() {
+    let cfg = std::env::temp_dir().join(format!("polygen_cfg_{}.toml", std::process::id()));
+    std::fs::write(&cfg, "func = exp2\nbits = 10\n[generate]\nlookup_bits = 5\n").unwrap();
+    let out = polygen()
+        .args(["config", "--file", cfg.to_str().unwrap(), "--set", "generate.lookup_bits=6"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("exp2 10b R=6"), "{s}");
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = polygen().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn bad_function_reports_error() {
+    let out = polygen()
+        .args(["generate", "--func", "tan", "--bits", "10", "--lub", "5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown function"));
+}

@@ -1,0 +1,121 @@
+//! Integration: full pipeline against the AOT artifacts.
+//!
+//! generate -> DSE -> XLA verify (jnp + pallas flavors) must agree with the
+//! scalar engine bit-for-bit. Skips (with a loud message) when
+//! `artifacts/` has not been built — `make test` always builds it first.
+
+use polygen::bounds::{builtin, AccuracySpec, BoundTable};
+use polygen::designspace::{generate, GenOptions};
+use polygen::dse::{explore, DseOptions};
+use polygen::runtime::{Flavor, XlaRuntime};
+use polygen::verify::{cross_check_sample, verify_exhaustive, Engine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn pipeline(name: &str, bits: u32, r: u32) -> (BoundTable, polygen::dse::Implementation) {
+    let f = builtin(name, bits).unwrap();
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+        .unwrap_or_else(|e| panic!("{name}/{bits} R={r}: {e}"));
+    let im = explore(&bt, &ds, &DseOptions::default()).expect("DSE failed");
+    (bt, im)
+}
+
+#[test]
+fn xla_verify_matches_scalar_all_functions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    for (name, bits, r) in
+        [("recip", 10u32, 5u32), ("log2", 10, 5), ("exp2", 10, 4), ("sqrt", 10, 4)]
+    {
+        let (bt, im) = pipeline(name, bits, r);
+        let scalar = verify_exhaustive(&bt, &im, &Engine::Scalar).unwrap();
+        let xla = verify_exhaustive(&bt, &im, &Engine::Xla { rt: &rt, flavor: Flavor::Jnp })
+            .unwrap();
+        assert_eq!(scalar, xla, "{name}: engine disagreement");
+        assert!(scalar.ok(), "{name}: generated design violates bounds: {scalar:?}");
+    }
+}
+
+#[test]
+fn pallas_flavor_is_bit_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    if !rt.has_flavor(Flavor::Pallas) {
+        eprintln!("SKIP: pallas artifact not built");
+        return;
+    }
+    let (bt, im) = pipeline("recip", 10, 5);
+    let jnp = verify_exhaustive(&bt, &im, &Engine::Xla { rt: &rt, flavor: Flavor::Jnp })
+        .unwrap();
+    let pallas =
+        verify_exhaustive(&bt, &im, &Engine::Xla { rt: &rt, flavor: Flavor::Pallas }).unwrap();
+    assert_eq!(jnp, pallas);
+}
+
+#[test]
+fn xla_catches_injected_fault() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    let (bt, mut im) = pipeline("log2", 10, 5);
+    im.coeffs[3].c -= 32 << im.k; // fault injection
+    let scalar = verify_exhaustive(&bt, &im, &Engine::Scalar).unwrap();
+    let xla =
+        verify_exhaustive(&bt, &im, &Engine::Xla { rt: &rt, flavor: Flavor::Jnp }).unwrap();
+    assert_eq!(scalar, xla);
+    assert!(!xla.ok());
+    assert_eq!(xla.first_violation.map(|z| z >> im.x_bits()), Some(3));
+}
+
+#[test]
+fn eval_cross_check_strided() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    let (bt, im) = pipeline("exp2", 10, 5);
+    assert!(cross_check_sample(&bt, &im, &rt, Flavor::Jnp, 7).unwrap());
+}
+
+#[test]
+fn xla_extrema_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    // recip 12-bit with R=4 gives regions of exactly N=256.
+    let f = builtin("recip", 12).unwrap();
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    for r in [0u64, 7, 15] {
+        let (l, u) = bt.region(4, r);
+        assert_eq!(l.len(), 256);
+        let got = rt.extrema(l, u).expect("N=256 variant compiled");
+        let want = polygen::designspace::extrema::diagonal_extrema(l, u);
+        // Values must agree exactly as rationals (pairs may differ).
+        assert_eq!(got.big_m.len(), want.big_m.len());
+        for t in 0..want.big_m.len() {
+            assert_eq!(got.big_m[t], want.big_m[t], "M(t) r={r} t={}", t + 1);
+            assert_eq!(got.small_m[t], want.small_m[t], "m(t) r={r} t={}", t + 1);
+        }
+    }
+}
+
+#[test]
+fn generate_with_xla_extrema_provider_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(&dir).expect("artifact load");
+    let f = builtin("recip", 12).unwrap();
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    let opts = GenOptions { lookup_bits: 4, ..Default::default() };
+    let provider = |l: &[i32], u: &[i32]| rt.extrema(l, u);
+    let a = polygen::designspace::generate_with(&bt, &opts, Some(&provider)).unwrap();
+    let b = generate(&bt, &opts).unwrap();
+    assert_eq!(a.k, b.k);
+    for (ra, rb) in a.regions.iter().zip(&b.regions) {
+        assert_eq!(ra.entries, rb.entries, "region {}", ra.r);
+    }
+}
