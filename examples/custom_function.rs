@@ -1,7 +1,8 @@
 //! Bring your own function: the generator is not limited to the paper's
-//! three workloads. This example approximates `sin(pi/4 * x)` on `[0, 1)`
-//! — a common range-reduced sine segment — from an `f64` closure, then
-//! generates, explores, verifies and emits RTL.
+//! built-in workloads. This example approximates `sin(pi/4 * x)` on
+//! `[0, 1)` — a common range-reduced sine segment — from an `f64`
+//! closure, then runs the pipeline at the minimum feasible LUT height
+//! and one relaxed height.
 //!
 //! (For production bounds implement `TargetFunction` with exact integer
 //! arithmetic as `bounds::functions` does; the closure path guards its
@@ -9,48 +10,47 @@
 //!
 //! Run: `cargo run --release --example custom_function`
 
-use polygen::bounds::{AccuracySpec, BoundTable, CustomF64};
-use polygen::designspace::{generate, min_lookup_bits, GenOptions};
-use polygen::dse::{explore, DseOptions};
-use polygen::rtl;
-use polygen::synth::synth_min_delay;
-use polygen::verify::{verify_exhaustive, Engine};
+use polygen::pipeline::{CustomF64, Pipeline, PipelineError};
 
-fn main() -> anyhow::Result<()> {
-    let f = CustomF64 {
+fn sin_pi4() -> CustomF64<fn(f64) -> f64> {
+    CustomF64 {
         name: "sin_pi4".into(),
         in_bits: 12,
         out_bits: 12,
         f: |x: f64| (std::f64::consts::FRAC_PI_4 * x).sin(),
         margin: 1e-7,
-    };
-    let bt = BoundTable::build(&f, AccuracySpec::Ulp(1));
+    }
+}
 
+fn main() -> Result<(), PipelineError> {
     // How many regions does this function *need*? (paper §I: the complete
     // space determines the minimum.)
-    let opts = GenOptions::default();
-    let rmin = min_lookup_bits(&bt, &opts, 10).expect("feasible at some R");
+    let rmin = Pipeline::custom(Box::new(sin_pi4()))
+        .prepare()?
+        .min_lookup_bits(10)
+        .expect("feasible at some R");
     println!("sin(pi/4 x) @ 12 bits: minimum lookup bits = {rmin}");
 
-    // Generate at rmin and one relaxed height; compare hardware.
+    // Run the pipeline at rmin and one relaxed height; compare hardware.
     for r in [rmin, rmin + 2] {
-        let ds = generate(&bt, &GenOptions { lookup_bits: r, ..opts })
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let im = explore(&bt, &ds, &DseOptions::default()).expect("DSE");
-        let rep = verify_exhaustive(&bt, &im, &Engine::Scalar)?;
-        anyhow::ensure!(rep.ok(), "verification failed at R={r}: {rep:?}");
-        let p = synth_min_delay(&im);
+        let verified = Pipeline::custom(Box::new(sin_pi4())).lub(r).run()?;
         println!(
             "  R={r}: {:?}, LUT {}, verified {} inputs, {:.3} ns / {:.1} um2",
-            im.degree,
-            im.lut_width_label(),
-            rep.total,
-            p.delay_ns,
-            p.area_um2
+            verified.implementation.degree,
+            verified.implementation.lut_width_label(),
+            verified.report.total,
+            verified.synth.delay_ns,
+            verified.synth.area_um2
         );
         if r == rmin {
-            let v = rtl::emit_module(&im, "sin_pi4");
-            println!("  generated {} lines of Verilog (module sin_pi4)", v.lines().count());
+            let dir = std::env::temp_dir().join("polygen_sin_pi4_rtl");
+            let emitted = verified.emit_rtl(&dir)?;
+            println!(
+                "  emitted {} (+{} more files) under {}",
+                emitted.module,
+                emitted.files.len().saturating_sub(1),
+                dir.display()
+            );
         }
     }
     Ok(())

@@ -1,53 +1,43 @@
 //! End-to-end driver (DESIGN.md E7): the full three-layer system on a real
-//! workload — 16-bit reciprocal, the paper's Table I row.
+//! workload — 16-bit reciprocal, the paper's Table I row — as one staged
+//! pipeline.
 //!
-//! generate (parallel, Claim II.1-pruned) -> DSE -> RTL emission ->
-//! exhaustive verification through the AOT-compiled XLA graph (all 65 536
-//! inputs in one PJRT chunk) -> Pallas-flavor cross-check -> behavioural
-//! RTZ/R+inf bracket -> cost-model report.
+//! prepare -> generate (parallel, Claim II.1-pruned) -> explore ->
+//! synthesize -> exhaustive verification through the AOT-compiled XLA
+//! graph (all 65 536 inputs in one PJRT chunk) -> Pallas-flavor
+//! cross-check -> behavioural RTZ/R+inf bracket -> cost-model report.
 //!
 //! Requires artifacts: `make artifacts` first.
 //! Run: `cargo run --release --example full_flow`
 
 use std::time::Instant;
 
-use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, GenOptions};
-use polygen::dse::{explore, DseOptions};
-use polygen::rtl::{self, DatapathSim};
-use polygen::runtime::{Flavor, XlaRuntime};
-use polygen::synth::{breakdown, synth_min_delay};
-use polygen::verify::{cross_check_sample, verify_exhaustive, Engine};
+use polygen::pipeline::{breakdown, DatapathSim, Engine, Flavor, Pipeline, XlaRuntime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let bits = 16u32;
     let lub = 8u32;
     println!("=== polygen full flow: recip {bits}-bit, R = {lub} ===");
 
     // --- L3: generation (the paper's core algorithm) ---
-    let f = builtin("recip", bits).unwrap();
     let t0 = Instant::now();
-    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    let prepared = Pipeline::function("recip").bits(bits).lub(lub).threads(8).prepare()?;
     println!("[bounds ] exact l/u over 2^{bits} inputs in {:?}", t0.elapsed());
 
-    let t0 = Instant::now();
-    let ds = generate(
-        &bt,
-        &GenOptions { lookup_bits: lub, threads: 8, ..Default::default() },
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let spaced = prepared.generate()?;
     println!(
         "[space  ] k = {}, {} regions, {} (a,b) pairs, linear = {}, {:?} ({} dd evals)",
-        ds.k,
-        ds.regions.len(),
-        ds.num_ab_pairs(),
-        ds.linear_feasible(),
-        t0.elapsed(),
-        ds.dd_evals
+        spaced.space.k,
+        spaced.space.regions.len(),
+        spaced.space.num_ab_pairs(),
+        spaced.space.linear_feasible(),
+        spaced.gen_time,
+        spaced.space.dd_evals
     );
 
     let t0 = Instant::now();
-    let im = explore(&bt, &ds, &DseOptions::default()).expect("DSE");
+    let synthesized = spaced.explore()?.synthesize();
+    let im = &synthesized.implementation;
     println!(
         "[dse    ] {:?}, i = {}, j = {}, LUT {} in {:?}",
         im.degree,
@@ -58,50 +48,54 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- RTL + netlist-level simulation spot check ---
-    let verilog = rtl::emit_module(&im, "recip16");
-    let sim = DatapathSim::new(&im);
+    let sim = DatapathSim::new(im);
     for z in (0..(1u64 << bits)).step_by(997) {
         assert_eq!(sim.eval(z), im.eval(z));
     }
-    println!("[rtl    ] {} lines of Verilog; netlist sim spot check ok", verilog.lines().count());
+    println!("[rtl    ] netlist sim spot check ok");
 
     // --- L1/L2: exhaustive verification through PJRT ---
     let rt = XlaRuntime::load("artifacts")?;
     let t0 = Instant::now();
-    let rep = verify_exhaustive(&bt, &im, &Engine::Xla { rt: &rt, flavor: Flavor::Jnp })?;
+    let verified = synthesized.verify_with(&rt, Flavor::Jnp)?;
     let t_xla = t0.elapsed();
-    anyhow::ensure!(rep.ok(), "XLA verification failed: {rep:?}");
-    println!("[verify ] XLA(jnp): {} inputs, 0 violations, {:?}", rep.total, t_xla);
+    println!(
+        "[verify ] XLA(jnp): {} inputs, 0 violations, {:?}",
+        verified.report.total, t_xla
+    );
 
+    // Scalar re-run (the trust anchor) must agree bit for bit.
     let t0 = Instant::now();
-    let rep_s = verify_exhaustive(&bt, &im, &Engine::Scalar)?;
+    let rep_s = polygen::pipeline::verify_implementation(
+        &verified.workload.bt,
+        &verified.implementation,
+        &Engine::Scalar,
+    )?;
     println!(
         "[verify ] scalar  : {} inputs, 0 violations, {:?} (xla speedup {:.1}x)",
         rep_s.total,
         t0.elapsed(),
         t0.elapsed().as_secs_f64() / t_xla.as_secs_f64().max(1e-9)
     );
-    anyhow::ensure!(rep == rep_s, "engine disagreement");
+    assert_eq!(verified.report, rep_s, "engine disagreement");
 
     if rt.has_flavor(Flavor::Pallas) {
-        let ok = cross_check_sample(&bt, &im, &rt, Flavor::Pallas, 33)?;
-        anyhow::ensure!(ok, "pallas flavor disagreed with scalar eval");
+        let ok = verified.cross_check(&rt, Flavor::Pallas, 33)?;
+        assert!(ok, "pallas flavor disagreed with scalar eval");
         println!("[verify ] pallas flavor cross-check: ok");
     }
 
     // --- Behavioural bracket (the paper's HECTOR check for recip) ---
-    rtl::behavioral::recip_between_roundings(&im)
-        .map_err(|(z, y, lo, hi)| anyhow::anyhow!("bracket failed at z={z}: {y} not in [{lo},{hi}]"))?;
+    verified.check_behavioural_bracket()?;
     println!("[hector~] output between RTZ and R+inf behavioural references");
 
     // --- Cost model ---
-    let b = breakdown(&im);
-    let p = synth_min_delay(&im);
+    let b = breakdown(&verified.implementation);
     println!(
         "[synth  ] min delay {:.3} ns, area {:.1} um2 (LUT {:.0} GE, sq {:.0} GE, \
          mults {:.0} GE, add {:.0} GE)",
-        p.delay_ns,
-        p.area_um2,
+        verified.synth.delay_ns,
+        verified.synth.area_um2,
         b.lut.area_ge,
         b.squarer.area_ge,
         b.mult_a.area_ge + b.mult_b.area_ge,

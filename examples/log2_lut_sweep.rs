@@ -1,34 +1,25 @@
 //! LUT-height exploration for the base-2 logarithm (paper Fig. 3): the
 //! optimal height is non-obvious and metric-dependent — this example
-//! regenerates the tradeoff and reports the best height under three
-//! different objectives.
+//! regenerates the tradeoff with `Pipeline::sweep` and reports the best
+//! height under three different objectives.
 //!
 //! Run: `cargo run --release --example log2_lut_sweep`
 
-use polygen::bounds::AccuracySpec;
-use polygen::coordinator::{default_r_range, sweep_lub, Workload};
-use polygen::designspace::GenOptions;
-use polygen::dse::{Degree, DseOptions};
+use polygen::pipeline::{Degree, LubObjective, Pipeline};
 
 fn main() {
     for bits in [10u32, 16] {
-        let w = Workload::prepare("log2", bits, AccuracySpec::Ulp(1)).unwrap();
-        let pts = sweep_lub(
-            &w,
-            &default_r_range(bits),
-            &GenOptions::default(),
-            &DseOptions::default(),
-            8,
-        );
+        let swept = Pipeline::function("log2")
+            .bits(bits)
+            .threads(8)
+            .sweep()
+            .expect("log2 is a built-in");
         println!("log2 {bits}-bit (0.y = log2(1.x), {} -> {} bits):", bits, bits + 1);
         println!(
             "  {:>4} {:>6} {:>10} {:>11} {:>11} {:>4}",
             "LUB", "deg", "delay ns", "area um2", "area*delay", "k"
         );
-        let mut best_area: Option<(u32, f64)> = None;
-        let mut best_delay: Option<(u32, f64)> = None;
-        let mut best_adp: Option<(u32, f64)> = None;
-        for p in &pts {
+        for p in &swept.points {
             let (Some(im), Some(sp)) = (&p.implementation, &p.synth) else {
                 println!("  {:>4} infeasible (needs more regions)", p.lookup_bits);
                 continue;
@@ -43,21 +34,14 @@ fn main() {
                 sp.area_delay(),
                 im.k
             );
-            let upd = |slot: &mut Option<(u32, f64)>, v: f64| {
-                if slot.map_or(true, |(_, b)| v < b) {
-                    *slot = Some((p.lookup_bits, v));
-                }
-            };
-            upd(&mut best_area, sp.area_um2);
-            upd(&mut best_delay, sp.delay_ns);
-            upd(&mut best_adp, sp.area_delay());
         }
         // The Fig. 3 takeaway: different metrics pick different heights.
+        let winner = |obj| swept.best(obj).map(|p| p.lookup_bits).unwrap_or(0);
         println!(
             "  optima: area -> LUB {}, delay -> LUB {}, area*delay -> LUB {}\n",
-            best_area.map(|(r, _)| r).unwrap_or(0),
-            best_delay.map(|(r, _)| r).unwrap_or(0),
-            best_adp.map(|(r, _)| r).unwrap_or(0),
+            winner(LubObjective::Area),
+            winner(LubObjective::Delay),
+            winner(LubObjective::AreaDelay),
         );
     }
 }

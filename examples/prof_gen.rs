@@ -1,12 +1,19 @@
-use std::time::Instant;
-use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, GenOptions};
-fn main() {
-    let f = builtin("recip", 16).unwrap();
-    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+//! Profiling helper: time the generation stage of the pipeline alone,
+//! serial vs parallel, on the paper's 16-bit reciprocal workload.
+//!
+//! Run: `cargo run --release --example prof_gen`
+
+use polygen::pipeline::Pipeline;
+
+fn main() -> Result<(), polygen::pipeline::PipelineError> {
     for threads in [1usize, 8] {
-        let t0 = Instant::now();
-        let ds = generate(&bt, &GenOptions { lookup_bits: 6, threads, ..Default::default() }).unwrap();
-        println!("threads={threads}: {:?} k={}", t0.elapsed(), ds.k);
+        let spaced = Pipeline::function("recip")
+            .bits(16)
+            .lub(6)
+            .threads(threads)
+            .prepare()?
+            .generate()?;
+        println!("threads={threads}: {:?} k={}", spaced.gen_time, spaced.space.k);
     }
+    Ok(())
 }

@@ -1,52 +1,50 @@
-//! Quickstart: generate the complete design space for a 10-bit reciprocal,
-//! explore it with the paper's decision procedure, verify exhaustively,
-//! and emit Verilog.
+//! Quickstart: one staged pipeline run — generate the complete design
+//! space for a 10-bit reciprocal, explore it with the paper's decision
+//! procedure, cost it, verify exhaustively, and emit Verilog.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, GenOptions};
-use polygen::dse::{explore, DseOptions};
-use polygen::rtl;
-use polygen::synth::synth_min_delay;
-use polygen::verify::{verify_exhaustive, Engine};
+use polygen::pipeline::{emit_module, Pipeline};
 
-fn main() -> anyhow::Result<()> {
-    // 1. The target: 0.1y = 1/1.x at 10 input / 10 output bits, 1 ULP.
-    let f = builtin("recip", 10).expect("built-in function");
-    println!("target: {}", f.mapping());
-    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+fn main() -> Result<(), polygen::pipeline::PipelineError> {
+    // 1. The target: 0.1y = 1/1.x at 10 input / 10 output bits, 1 ULP,
+    //    32 regions (R = 5 lookup bits).
+    let prepared = Pipeline::function("recip").bits(10).lub(5).prepare()?;
+    println!("target: {}", prepared.workload.func.mapping());
 
-    // 2. Complete design space at R = 5 lookup bits (32 regions).
-    let ds = generate(&bt, &GenOptions { lookup_bits: 5, ..Default::default() })
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // 2. Complete design space — an inspectable artifact, not an
+    //    intermediate.
+    let spaced = prepared.generate()?;
     println!(
         "design space: k = {}, {} regions, {} (a,b) pairs, linear feasible = {}",
-        ds.k,
-        ds.regions.len(),
-        ds.num_ab_pairs(),
-        ds.linear_feasible()
+        spaced.space.k,
+        spaced.space.regions.len(),
+        spaced.space.num_ab_pairs(),
+        spaced.space.linear_feasible()
     );
 
     // 3. Decision procedure: truncations + Algorithm 1 width minimization.
-    let im = explore(&bt, &ds, &DseOptions::default()).expect("DSE");
+    let explored = spaced.explore()?;
     println!(
         "implementation: {:?}, sq_trunc = {}, lin_trunc = {}, LUT {}",
-        im.degree,
-        im.sq_trunc,
-        im.lin_trunc,
-        im.lut_width_label()
+        explored.implementation.degree,
+        explored.implementation.sq_trunc,
+        explored.implementation.lin_trunc,
+        explored.implementation.lut_width_label()
     );
 
-    // 4. Exhaustive verification (the HECTOR substitute).
-    let rep = verify_exhaustive(&bt, &im, &Engine::Scalar)?;
-    anyhow::ensure!(rep.ok(), "verification failed: {rep:?}");
-    println!("verified all {} inputs: 0 violations", rep.total);
+    // 4. Cost model, then exhaustive verification (the HECTOR
+    //    substitute). A violation would surface as
+    //    PipelineError::VerifyFailed with its first counterexample.
+    let verified = explored.synthesize().verify()?;
+    println!("verified all {} inputs: 0 violations", verified.report.total);
+    println!(
+        "cost model: {:.3} ns, {:.1} um2 at minimum delay",
+        verified.synth.delay_ns, verified.synth.area_um2
+    );
 
-    // 5. Cost and RTL.
-    let p = synth_min_delay(&im);
-    println!("cost model: {:.3} ns, {:.1} um2 at minimum delay", p.delay_ns, p.area_um2);
-    let verilog = rtl::emit_module(&im, "recip10");
+    // 5. RTL.
+    let verilog = emit_module(&verified.implementation, "recip10");
     println!("--- first lines of generated Verilog ---");
     for line in verilog.lines().take(12) {
         println!("{line}");

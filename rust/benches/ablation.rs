@@ -2,13 +2,14 @@
 //! procedures "such as prioritizing LUT optimization ... yielded inferior
 //! area-delay profiles". Compare SquareFirst (the paper's) vs LutFirst on
 //! the Table I workloads, plus forced-degree ablations.
-use polygen::bounds::AccuracySpec;
-use polygen::coordinator::Workload;
-use polygen::designspace::{generate, GenOptions};
-use polygen::dse::{explore, Degree, DseOptions, Procedure};
-use polygen::synth::synth_min_delay;
+//!
+//! Each variant is a pipeline run; a shared disk cache means the complete
+//! space is generated once per workload and re-read for the other two
+//! variants.
+use polygen::pipeline::{Degree, Pipeline, Procedure};
 
 fn main() {
+    let cache = std::env::temp_dir().join("polygen_ablation_cache");
     let mut out = String::from(
         "ABLATION - decision procedure variants (min-delay ADP, lower is better)\n",
     );
@@ -19,16 +20,21 @@ fn main() {
     for (name, bits, lub) in
         [("recip", 10u32, 5u32), ("recip", 16, 8), ("log2", 16, 8), ("exp2", 10, 5)]
     {
-        let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
-        let ds = generate(
-            &w.bt,
-            &GenOptions { lookup_bits: lub, threads: 8, ..Default::default() },
-        )
-        .unwrap();
-        let adp = |proc_: Procedure, deg: Option<Degree>| -> String {
-            explore(&w.bt, &ds, &DseOptions { procedure: proc_, degree: deg, ..Default::default() })
-                .map(|im| format!("{:.1}", synth_min_delay(&im).area_delay()))
-                .unwrap_or_else(|| "-".into())
+        let adp = |procedure: Procedure, degree: Option<Degree>| -> String {
+            let mut p = Pipeline::function(name)
+                .bits(bits)
+                .lub(lub)
+                .threads(8)
+                .procedure(procedure)
+                .cache_dir(&cache);
+            if let Some(d) = degree {
+                p = p.degree(d);
+            }
+            p.prepare()
+                .and_then(|prepared| prepared.generate())
+                .and_then(|spaced| spaced.explore())
+                .map(|explored| format!("{:.1}", explored.synthesize().synth.area_delay()))
+                .unwrap_or_else(|_| "-".into())
         };
         let line = format!(
             "{:<8} {:>4} {:>4} | {:>12} {:>12} | {:>12}\n",
@@ -44,4 +50,5 @@ fn main() {
     }
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/ablation.txt", out).ok();
+    std::fs::remove_dir_all(&cache).ok();
 }

@@ -1,21 +1,22 @@
 //! Perf/extension — thread scaling of design-space generation (the
 //! paper's "parallelism" future-work item): per-region analysis across
-//! worker threads on a 16-bit reciprocal with large regions.
-use std::time::Instant;
-
-use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, GenOptions};
+//! worker threads on a 16-bit reciprocal with large regions, measured
+//! through the pipeline's generation stage.
+use polygen::pipeline::Pipeline;
 
 fn main() {
-    let f = builtin("recip", 16).unwrap();
-    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
     let mut out = String::from("generation thread scaling (recip 16-bit, R=6)\n");
     let mut t1 = 0.0f64;
     for threads in [1usize, 2, 4, 8] {
-        let opts = GenOptions { lookup_bits: 6, threads, ..Default::default() };
-        let t0 = Instant::now();
-        let ds = generate(&bt, &opts).unwrap();
-        let dt = t0.elapsed().as_secs_f64();
+        let spaced = Pipeline::function("recip")
+            .bits(16)
+            .lub(6)
+            .threads(threads)
+            .prepare()
+            .unwrap()
+            .generate()
+            .unwrap();
+        let dt = spaced.gen_time.as_secs_f64();
         if threads == 1 {
             t1 = dt;
         }
@@ -23,7 +24,7 @@ fn main() {
             "  threads={threads:<2} {:>8.2} s  speedup {:>4.2}x  (k={})\n",
             dt,
             t1 / dt,
-            ds.k
+            spaced.space.k
         );
         print!("{line}");
         out.push_str(&line);

@@ -1,30 +1,37 @@
 //! E7/perf — verification engine throughput: scalar Rust vs the AOT XLA
 //! graph (jnp flavor) vs the interpret-mode Pallas flavor, exhaustive over
 //! a 16-bit design. Skips engines whose artifacts are missing.
+//!
+//! The design under test comes from one pipeline run; the timed loops
+//! call the engine-parameterized verifier directly (the pipeline's
+//! one-shot `verify()` stage is the wrong shape for a 5-rep median).
 use std::time::Instant;
 
-use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, GenOptions};
-use polygen::dse::{explore, DseOptions};
-use polygen::runtime::{Flavor, XlaRuntime};
-use polygen::verify::{verify_exhaustive, Engine};
+use polygen::pipeline::{verify_implementation, Engine, Flavor, Pipeline, XlaRuntime};
 
 fn main() {
-    let f = builtin("recip", 16).unwrap();
-    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
-    let ds = generate(&bt, &GenOptions { lookup_bits: 8, threads: 8, ..Default::default() })
+    let explored = Pipeline::function("recip")
+        .bits(16)
+        .lub(8)
+        .threads(8)
+        .prepare()
+        .unwrap()
+        .generate()
+        .unwrap()
+        .explore()
         .unwrap();
-    let im = explore(&bt, &ds, &DseOptions::default()).unwrap();
+    let bt = &explored.workload.bt;
+    let im = &explored.implementation;
     let total = 1u64 << 16;
     let mut out = String::from("verify engine throughput (recip 16-bit, 65536 inputs)\n");
 
     let mut bench = |label: &str, engine: &Engine<'_>| {
         // Warm once, then median of 5.
-        let _ = verify_exhaustive(&bt, &im, engine).unwrap();
+        let _ = verify_implementation(bt, im, engine).unwrap();
         let mut ts: Vec<f64> = (0..5)
             .map(|_| {
                 let t0 = Instant::now();
-                let rep = verify_exhaustive(&bt, &im, engine).unwrap();
+                let rep = verify_implementation(bt, im, engine).unwrap();
                 assert!(rep.ok());
                 t0.elapsed().as_secs_f64()
             })

@@ -154,9 +154,9 @@ impl DwFamily {
             .iter()
             .map(|im| (synth_min_delay(im), im))
             .min_by(|a, b| {
-                (a.0.delay_ns, a.0.area_um2)
-                    .partial_cmp(&(b.0.delay_ns, b.0.area_um2))
-                    .unwrap()
+                a.0.delay_ns
+                    .total_cmp(&b.0.delay_ns)
+                    .then(a.0.area_um2.total_cmp(&b.0.area_um2))
             })
     }
 }

@@ -149,7 +149,7 @@ fn gauss_solve(a: &mut [Vec<f64>]) {
     for col in 0..n {
         // Pivot.
         let piv = (col..n)
-            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
             .unwrap();
         a.swap(col, piv);
         let d = a[col][col];

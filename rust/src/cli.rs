@@ -1,0 +1,145 @@
+//! Tiny flag parser for the `polygen` binary: `--key value`, bare
+//! `--switch`, repeated flags, and positionals (clap is not available
+//! offline).
+//!
+//! Grammar: a token starting with `--` opens a flag; the next token
+//! becomes its value unless that token also starts with `--` (so a bare
+//! switch must be followed by another flag or the end of the line —
+//! a positional right after a switch is consumed as the switch's value;
+//! put positionals first, as `polygen report table1 --deep` does).
+
+/// Parsed command line: `polygen <cmd> [positionals] [--flags]`.
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse the process's own arguments; `None` when no subcommand was
+    /// given.
+    pub fn parse() -> Option<Args> {
+        Args::from_tokens(std::env::args().skip(1).collect())
+    }
+
+    /// Parse an explicit token list (first token = subcommand).
+    pub fn from_tokens(tokens: Vec<String>) -> Option<Args> {
+        let mut it = tokens.into_iter();
+        let cmd = it.next()?;
+        let rest: Vec<String> = it.collect();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < rest.len() {
+            if !rest[i].starts_with("--") {
+                positional.push(rest[i].clone());
+                i += 1;
+                continue;
+            }
+            let k = rest[i].trim_start_matches('-').to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.push((k, Some(rest[i + 1].clone())));
+                i += 2;
+            } else {
+                flags.push((k, None));
+                i += 1;
+            }
+        }
+        Some(Args { cmd, positional, flags })
+    }
+
+    /// First value of `--key value` (bare switches yield `None`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_deref())
+    }
+
+    /// Every value of a repeated flag, e.g. `--set a=1 --set b=2`.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    /// Whether the flag appeared at all (with or without a value).
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    /// Parse a flag's value as `u32`, falling back to `default` when the
+    /// flag is absent, valueless, or unparsable.
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::from_tokens(tokens.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn empty_command_line_is_none() {
+        assert!(Args::from_tokens(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn flags_values_and_positionals() {
+        let a = parse(&["report", "table1", "--threads", "8", "--deep"]);
+        assert_eq!(a.cmd, "report");
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.u32_or("threads", 4), 8);
+        assert!(a.has("deep"));
+        assert_eq!(a.get("deep"), None, "bare switch has no value");
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_in_order() {
+        let a = parse(&["config", "--file", "j.toml", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        // `get` returns the first occurrence.
+        assert_eq!(a.get("set"), Some("a=1"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn switch_followed_by_flag_stays_bare() {
+        let a = parse(&["dse", "--quadratic", "--func", "recip"]);
+        assert!(a.has("quadratic"));
+        assert_eq!(a.get("quadratic"), None);
+        assert_eq!(a.get("func"), Some("recip"));
+    }
+
+    #[test]
+    fn switch_followed_by_positional_consumes_it() {
+        // Documented sharp edge: the parser cannot know `--deep` takes no
+        // value, so a trailing positional is captured as its value.
+        // Positionals must precede switches.
+        let a = parse(&["report", "--deep", "table1"]);
+        assert_eq!(a.get("deep"), Some("table1"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn missing_or_malformed_values_fall_back() {
+        let a = parse(&["generate", "--bits"]);
+        assert!(a.has("bits"));
+        assert_eq!(a.get("bits"), None);
+        assert_eq!(a.u32_or("bits", 10), 10);
+        let a = parse(&["generate", "--bits", "many"]);
+        assert_eq!(a.u32_or("bits", 10), 10, "unparsable value falls back");
+        assert_eq!(a.u32_or("absent", 7), 7);
+    }
+
+    #[test]
+    fn single_dash_tokens_are_positionals() {
+        let a = parse(&["report", "-deep"]);
+        assert_eq!(a.positional, vec!["-deep"]);
+        assert!(!a.has("deep"));
+    }
+}

@@ -10,8 +10,9 @@
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
+use crate::designspace::extrema::SearchStrategy;
 use crate::designspace::region::{AbEntry, RegionSpace};
-use crate::designspace::DesignSpace;
+use crate::designspace::{DesignSpace, GenOptions};
 
 const MAGIC: &[u8; 4] = b"PGDS";
 const VERSION: u32 = 2;
@@ -134,17 +135,40 @@ pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
     })
 }
 
-/// Canonical cache path for a workload.
-pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, r: u32) -> PathBuf {
-    dir.join(format!("{func}_{acc}_{in_bits}b_R{r}.pgds"))
+/// Canonical cache path for a workload at specific generation options.
+/// Every result-affecting [`GenOptions`] field is part of the key:
+/// `lookup_bits` shapes the space, `search` changes the stored `dd_evals`
+/// instrumentation, and `max_k` bounds which spaces exist at all.
+/// `threads` is deliberately excluded — worker count never changes the
+/// result (`designspace::tests::threads_do_not_change_result`).
+pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, opts: &GenOptions) -> PathBuf {
+    let strategy = match opts.search {
+        SearchStrategy::Naive => "naive",
+        SearchStrategy::Pruned => "pruned",
+    };
+    dir.join(format!(
+        "{func}_{acc}_{in_bits}b_R{}_{strategy}_k{}.pgds",
+        opts.lookup_bits, opts.max_k
+    ))
 }
 
+/// Save atomically (write a per-process temp file, then rename): batch
+/// workers share one cache directory, and a reader must never observe a
+/// half-written `.pgds`.
 pub fn save(ds: &DesignSpace, path: &Path) -> std::io::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(&to_bytes(ds))
+    static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp{}.{seq}", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&to_bytes(ds))?;
+    }
+    std::fs::rename(&tmp, path)
 }
 
 pub fn load(path: &Path) -> Result<DesignSpace, String> {
@@ -180,6 +204,23 @@ mod tests {
         let im1 = crate::dse::explore(&bt, &ds, &Default::default()).unwrap();
         let im2 = crate::dse::explore(&bt, &back, &Default::default()).unwrap();
         assert_eq!(im1.coeffs, im2.coeffs);
+    }
+
+    #[test]
+    fn cache_key_covers_all_gen_options() {
+        // Regression: the key once hashed only `lookup_bits`, so switching
+        // strategy (or `max_k`) could return a stale space with the other
+        // option's instrumentation.
+        let dir = Path::new("/tmp/pgds");
+        let base = GenOptions { lookup_bits: 5, ..Default::default() };
+        let naive = GenOptions { search: SearchStrategy::Naive, ..base };
+        let low_k = GenOptions { max_k: 12, ..base };
+        let threaded = GenOptions { threads: 8, ..base };
+        let p = |o: &GenOptions| cache_path(dir, "recip", "1ulp", 10, o);
+        assert_ne!(p(&base), p(&naive), "search strategy must be in the key");
+        assert_ne!(p(&base), p(&low_k), "max_k must be in the key");
+        assert_ne!(p(&naive), p(&low_k));
+        assert_eq!(p(&base), p(&threaded), "threads never changes the result");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod cache;
 pub mod config;
 
-use std::path::PathBuf;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
@@ -54,9 +54,23 @@ impl SweepPoint {
 
 /// Generate + explore + cost one `R` value.
 pub fn run_point(w: &Workload, r: u32, gen: &GenOptions, dse: &DseOptions) -> SweepPoint {
+    run_point_cached(w, r, gen, dse, None)
+}
+
+/// [`run_point`] with an optional design-space disk cache.
+pub fn run_point_cached(
+    w: &Workload,
+    r: u32,
+    gen: &GenOptions,
+    dse: &DseOptions,
+    cache: Option<&Path>,
+) -> SweepPoint {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let t0 = Instant::now();
-    let space = generate(&w.bt, &opts);
+    let space = match cache {
+        Some(dir) => generate_cached(w, r, &opts, dir),
+        None => generate(&w.bt, &opts),
+    };
     let gen_time = t0.elapsed();
     let implementation = space.as_ref().ok().and_then(|ds| explore(&w.bt, ds, dse));
     let synth = implementation.as_ref().map(synth_min_delay);
@@ -72,8 +86,25 @@ pub fn sweep_lub(
     dse: &DseOptions,
     threads: usize,
 ) -> Vec<SweepPoint> {
+    sweep_lub_cached(w, r_values, gen, dse, threads, None)
+}
+
+/// [`sweep_lub`] with an optional shared disk cache: hit points parse a
+/// `.pgds` file instead of regenerating (their `gen_time` then measures
+/// the parse — much smaller, as a cached sweep should report).
+pub fn sweep_lub_cached(
+    w: &Workload,
+    r_values: &[u32],
+    gen: &GenOptions,
+    dse: &DseOptions,
+    threads: usize,
+    cache: Option<&Path>,
+) -> Vec<SweepPoint> {
     if threads <= 1 || r_values.len() <= 1 {
-        return r_values.iter().map(|&r| run_point(w, r, gen, dse)).collect();
+        return r_values
+            .iter()
+            .map(|&r| run_point_cached(w, r, gen, dse, cache))
+            .collect();
     }
     let mut out: Vec<Option<SweepPoint>> = Vec::new();
     out.resize_with(r_values.len(), || None);
@@ -82,7 +113,7 @@ pub fn sweep_lub(
         for (slot, rs) in out.chunks_mut(chunk).zip(r_values.chunks(chunk)) {
             scope.spawn(move || {
                 for (s, &r) in slot.iter_mut().zip(rs) {
-                    *s = Some(run_point(w, r, gen, dse));
+                    *s = Some(run_point_cached(w, r, gen, dse, cache));
                 }
             });
         }
@@ -93,10 +124,7 @@ pub fn sweep_lub(
 /// The best point of a sweep by area-delay product (the paper's Table I
 /// LUB selection rule).
 pub fn best_by_adp(points: &[SweepPoint]) -> Option<&SweepPoint> {
-    points
-        .iter()
-        .filter(|p| p.synth.is_some())
-        .min_by(|a, b| a.area_delay().partial_cmp(&b.area_delay()).unwrap())
+    best_by_objective(points, LubObjective::AreaDelay)
 }
 
 /// Objective for automatic lookup-bit selection.
@@ -105,6 +133,29 @@ pub enum LubObjective {
     Area,
     Delay,
     AreaDelay,
+}
+
+/// A point's cost under an objective; `None` for unsynthesized points and
+/// for non-finite cost-model outputs (a NaN/inf point must never win —
+/// or panic — a selection).
+fn objective_key(p: &SweepPoint, objective: LubObjective) -> Option<f64> {
+    p.synth
+        .filter(|sp| sp.delay_ns.is_finite() && sp.area_um2.is_finite())
+        .map(|sp| match objective {
+            LubObjective::Area => sp.area_um2,
+            LubObjective::Delay => sp.delay_ns,
+            LubObjective::AreaDelay => sp.area_delay(),
+        })
+}
+
+/// The sweep point minimizing `objective`, NaN-safe (`f64::total_cmp`,
+/// with non-finite keys excluded up front).
+pub fn best_by_objective(points: &[SweepPoint], objective: LubObjective) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .filter_map(|p| objective_key(p, objective).map(|k| (p, k)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(p, _)| p)
 }
 
 /// The paper's stated future work — "a decision procedure to choose the
@@ -118,33 +169,32 @@ pub fn auto_lub(
     dse: &DseOptions,
     threads: usize,
 ) -> Option<SweepPoint> {
-    let pts = sweep_lub(w, &default_r_range(w.bt.in_bits), gen, dse, threads);
-    let key = |p: &SweepPoint| -> Option<f64> {
-        p.synth.map(|sp| match objective {
-            LubObjective::Area => sp.area_um2,
-            LubObjective::Delay => sp.delay_ns,
-            LubObjective::AreaDelay => sp.area_delay(),
-        })
-    };
-    pts.into_iter()
-        .filter(|p| p.synth.is_some())
-        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+    let mut pts = sweep_lub(w, &default_r_range(w.bt.in_bits), gen, dse, threads);
+    let best = pts
+        .iter()
+        .enumerate()
+        .filter_map(|(i, p)| objective_key(p, objective).map(|k| (i, k)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(i, _)| i)?;
+    Some(pts.swap_remove(best))
 }
 
-/// Generate with a disk cache under `dir` (hit = parse + return).
+/// Generate with a disk cache under `dir` (hit = parse + return). The
+/// cache key covers every result-affecting [`GenOptions`] field, so
+/// switching options never returns a stale space.
 pub fn generate_cached(
     w: &Workload,
     r: u32,
     gen: &GenOptions,
-    dir: &PathBuf,
+    dir: &Path,
 ) -> Result<DesignSpace, GenError> {
-    let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, r);
+    let opts = GenOptions { lookup_bits: r, ..*gen };
+    let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, &opts);
     if let Ok(ds) = cache::load(&path) {
         if ds.in_bits == w.bt.in_bits && ds.out_bits == w.bt.out_bits {
             return Ok(ds);
         }
     }
-    let opts = GenOptions { lookup_bits: r, ..*gen };
     let ds = generate(&w.bt, &opts)?;
     let _ = cache::save(&ds, &path); // best-effort
     Ok(ds)
@@ -220,6 +270,65 @@ mod tests {
                 assert!(y >= w.bt.l[z as usize] as i64 && y <= w.bt.u[z as usize] as i64);
             }
         }
+    }
+
+    fn synthetic_point(r: u32, synth: Option<SynthPoint>) -> SweepPoint {
+        SweepPoint {
+            lookup_bits: r,
+            gen_time: Duration::ZERO,
+            space: Err(GenError::InfeasibleRegion { r: 0 }),
+            implementation: None,
+            synth,
+        }
+    }
+
+    /// Regression: selection once used `partial_cmp(..).unwrap()`, which
+    /// panics the moment a cost model emits NaN. A NaN point must be
+    /// skipped, not crowned or fatal.
+    #[test]
+    fn best_by_adp_survives_nan_and_none_points() {
+        let pts = vec![
+            synthetic_point(4, None),
+            synthetic_point(5, Some(SynthPoint { delay_ns: f64::NAN, area_um2: 1.0 })),
+            synthetic_point(6, Some(SynthPoint { delay_ns: 2.0, area_um2: 3.0 })),
+            synthetic_point(7, Some(SynthPoint { delay_ns: 1.0, area_um2: 100.0 })),
+        ];
+        let best = best_by_adp(&pts).expect("a finite point exists");
+        assert_eq!(best.lookup_bits, 6);
+        for obj in [LubObjective::Area, LubObjective::Delay, LubObjective::AreaDelay] {
+            let b = best_by_objective(&pts, obj).unwrap();
+            assert!(b.area_delay().unwrap().is_finite(), "{obj:?} picked a NaN point");
+        }
+        // All-NaN and all-None sweeps select nothing instead of panicking.
+        let nan_only =
+            vec![synthetic_point(4, Some(SynthPoint { delay_ns: f64::NAN, area_um2: f64::NAN }))];
+        assert!(best_by_adp(&nan_only).is_none());
+        assert!(best_by_adp(&[synthetic_point(4, None)]).is_none());
+    }
+
+    /// Regression: the disk cache once keyed only on `lookup_bits`, so
+    /// switching the search strategy returned the other strategy's stale
+    /// space (visible through `dd_evals`).
+    #[test]
+    fn generate_cached_distinguishes_gen_options() {
+        use crate::designspace::extrema::SearchStrategy;
+        let w = Workload::prepare("recip", 8, AccuracySpec::Ulp(1)).unwrap();
+        let dir = std::env::temp_dir().join("polygen_cache_opts_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let naive = GenOptions { search: SearchStrategy::Naive, ..Default::default() };
+        let pruned = GenOptions { search: SearchStrategy::Pruned, ..Default::default() };
+        let a = generate_cached(&w, 4, &naive, &dir).unwrap();
+        let b = generate_cached(&w, 4, &pruned, &dir).unwrap();
+        assert!(
+            b.dd_evals < a.dd_evals,
+            "pruned run served the cached naive space: {} vs {}",
+            b.dd_evals,
+            a.dd_evals
+        );
+        // And each variant now hits its own cache entry.
+        assert_eq!(generate_cached(&w, 4, &naive, &dir).unwrap().dd_evals, a.dd_evals);
+        assert_eq!(generate_cached(&w, 4, &pruned, &dir).unwrap().dd_evals, b.dd_evals);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

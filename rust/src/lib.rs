@@ -12,9 +12,11 @@
 
 pub mod baselines;
 pub mod bounds;
+pub mod cli;
 pub mod coordinator;
 pub mod designspace;
 pub mod dse;
+pub mod pipeline;
 pub mod rtl;
 pub mod synth;
 pub mod runtime;

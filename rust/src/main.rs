@@ -1,8 +1,8 @@
 //! `polygen` — CLI for complete polynomial-interpolation design-space
 //! generation, exploration, RTL emission, verification and reporting.
 //!
-//! Subcommands (hand-rolled argument parsing; clap is not available
-//! offline):
+//! Every flow is a [`polygen::pipeline`] run; this file only parses
+//! flags ([`polygen::cli`]) and formats stage artifacts.
 //!
 //! ```text
 //! polygen generate --func recip --bits 16 --lub 8 [--naive] [--threads N] [--cache DIR]
@@ -12,136 +12,81 @@
 //! polygen sweep    --func log2  --bits 10 [--threads N]
 //! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear> [--deep] [--out DIR]
 //! polygen config   --file job.toml [--set key=value ...]
+//! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR]
 //! ```
+//!
+//! `--lub auto` (optionally with `--objective area|delay|area_delay`)
+//! enables automatic lookup-bit selection on any flow.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use polygen::bounds::AccuracySpec;
-use polygen::coordinator::config::Config;
-use polygen::coordinator::{best_by_adp, default_r_range, generate_cached, sweep_lub, Workload};
-use polygen::designspace::extrema::SearchStrategy;
-use polygen::designspace::{generate, GenOptions};
-use polygen::dse::{explore, Degree, DseOptions, Procedure};
+use polygen::cli::Args;
+use polygen::pipeline::{
+    parse_accuracy, Batch, Config, Degree, Flavor, JobSpec, LubObjective, Pipeline, Procedure,
+    SearchStrategy, XlaRuntime,
+};
 use polygen::report;
-use polygen::rtl;
-use polygen::runtime::{Flavor, XlaRuntime};
-use polygen::synth::synth_min_delay;
-use polygen::verify::{verify_exhaustive, Engine};
-
-/// Tiny flag parser: `--key value` and bare `--switch`.
-struct Args {
-    cmd: String,
-    positional: Vec<String>,
-    flags: Vec<(String, Option<String>)>,
-}
-
-impl Args {
-    fn parse() -> Option<Args> {
-        let mut it = std::env::args().skip(1);
-        let cmd = it.next()?;
-        let rest: Vec<String> = it.collect();
-        let mut flags = Vec::new();
-        let mut positional = Vec::new();
-        let mut i = 0;
-        while i < rest.len() {
-            if !rest[i].starts_with("--") {
-                positional.push(rest[i].clone());
-                i += 1;
-                continue;
-            }
-            let k = rest[i].trim_start_matches('-').to_string();
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                flags.push((k, Some(rest[i + 1].clone())));
-                i += 2;
-            } else {
-                flags.push((k, None));
-                i += 1;
-            }
-        }
-        Some(Args { cmd, positional, flags })
-    }
-
-    fn get(&self, key: &str) -> Option<&str> {
-        self.flags.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_deref())
-    }
-
-    fn get_all(&self, key: &str) -> Vec<&str> {
-        self.flags
-            .iter()
-            .filter(|(k, _)| k == key)
-            .filter_map(|(_, v)| v.as_deref())
-            .collect()
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.flags.iter().any(|(k, _)| k == key)
-    }
-
-    fn u32_or(&self, key: &str, default: u32) -> u32 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-}
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: polygen <generate|dse|rtl|verify|sweep|report|config> [--flags]\n\
+        "usage: polygen <generate|dse|rtl|verify|sweep|report|config|batch> [--flags]\n\
          see rust/src/main.rs header or README.md for details"
     );
     ExitCode::FAILURE
 }
 
-fn workload(args: &Args) -> Result<Workload, String> {
+/// Build a pipeline from the common flags (`--func --bits --accuracy
+/// --lub --naive --max-k --threads --max-b --quadratic/--linear
+/// --lut-first --cache --tb`).
+fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
     let func = args.get("func").unwrap_or("recip");
-    let bits = args.u32_or("bits", 10);
-    let acc = match args.get("accuracy").unwrap_or("1ulp") {
-        "faithful" => AccuracySpec::Faithful,
-        s => AccuracySpec::Ulp(
-            s.trim_end_matches("ulp").parse().map_err(|_| format!("bad accuracy {s}"))?,
-        ),
+    let acc = parse_accuracy(args.get("accuracy").unwrap_or("1ulp"))
+        .map_err(|e| e.to_string())?;
+    let mut p = Pipeline::function(func)
+        .bits(args.u32_or("bits", 10))
+        .accuracy(acc)
+        .search(if args.has("naive") { SearchStrategy::Naive } else { SearchStrategy::Pruned })
+        .max_k(args.u32_or("max-k", 30))
+        .threads(args.u32_or("threads", 1) as usize)
+        .max_b_per_a(args.u32_or("max-b", 512) as usize);
+    p = match args.get("lub") {
+        Some("auto") => p.auto_lub(match args.get("objective").unwrap_or("area_delay") {
+            "area" => LubObjective::Area,
+            "delay" => LubObjective::Delay,
+            "area_delay" => LubObjective::AreaDelay,
+            other => return Err(format!("bad objective {other} (area|delay|area_delay)")),
+        }),
+        Some(v) => p.lub(v.parse().map_err(|_| format!("bad lub {v}"))?),
+        None => p.lub(6),
     };
-    Workload::prepare(func, bits, acc).ok_or_else(|| format!("unknown function {func}"))
-}
-
-fn gen_opts(args: &Args) -> GenOptions {
-    GenOptions {
-        lookup_bits: args.u32_or("lub", 6),
-        search: if args.has("naive") { SearchStrategy::Naive } else { SearchStrategy::Pruned },
-        max_k: args.u32_or("max-k", 30),
-        threads: args.u32_or("threads", 1) as usize,
+    if args.has("quadratic") {
+        p = p.degree(Degree::Quadratic);
+    } else if args.has("linear") {
+        p = p.degree(Degree::Linear);
     }
-}
-
-fn dse_opts(args: &Args) -> DseOptions {
-    DseOptions {
-        procedure: if args.has("lut-first") {
-            Procedure::LutFirst
-        } else {
-            Procedure::SquareFirst
-        },
-        degree: if args.has("quadratic") {
-            Some(Degree::Quadratic)
-        } else if args.has("linear") {
-            Some(Degree::Linear)
-        } else {
-            None
-        },
-        max_b_per_a: args.u32_or("max-b", 512) as usize,
+    if args.has("lut-first") {
+        p = p.procedure(Procedure::LutFirst);
     }
+    if let Some(dir) = args.get("cache") {
+        p = p.cache_dir(dir);
+    }
+    if args.has("tb") {
+        p = p.testbench(true);
+    }
+    Ok(p)
 }
 
 fn run() -> Result<(), String> {
     let Some(args) = Args::parse() else { return Err("no command".into()) };
     match args.cmd.as_str() {
         "generate" => {
-            let w = workload(&args)?;
-            let opts = gen_opts(&args);
-            let ds = if let Some(dir) = args.get("cache") {
-                generate_cached(&w, opts.lookup_bits, &opts, &PathBuf::from(dir))
-            } else {
-                generate(&w.bt, &opts)
-            }
-            .map_err(|e| e.to_string())?;
+            let spaced = pipeline_from(&args)?
+                .prepare()
+                .map_err(|e| e.to_string())?
+                .generate()
+                .map_err(|e| e.to_string())?;
+            let ds = &spaced.space;
             println!(
                 "design space: {} {}b R={} k={}  regions={}  (a,b) pairs={}  linear_ok={}",
                 ds.func,
@@ -155,11 +100,15 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "dse" => {
-            let w = workload(&args)?;
-            let opts = gen_opts(&args);
-            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
-            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
-            let p = synth_min_delay(&im);
+            let s = pipeline_from(&args)?
+                .prepare()
+                .map_err(|e| e.to_string())?
+                .generate()
+                .map_err(|e| e.to_string())?
+                .explore()
+                .map_err(|e| e.to_string())?
+                .synthesize();
+            let im = &s.implementation;
             println!(
                 "impl: {:?} k={} i={} j={} LUT {}  min-delay {:.3} ns, {:.1} um2",
                 im.degree,
@@ -167,8 +116,8 @@ fn run() -> Result<(), String> {
                 im.sq_trunc,
                 im.lin_trunc,
                 im.lut_width_label(),
-                p.delay_ns,
-                p.area_um2
+                s.synth.delay_ns,
+                s.synth.area_um2
             );
             for (r, co) in im.coeffs.iter().enumerate().take(8) {
                 println!("  r={r}: a={} b={} c={}", co.a, co.b, co.c);
@@ -179,79 +128,57 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "rtl" => {
-            let w = workload(&args)?;
-            let opts = gen_opts(&args);
-            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
-            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
+            let explored = pipeline_from(&args)?
+                .prepare()
+                .map_err(|e| e.to_string())?
+                .generate()
+                .map_err(|e| e.to_string())?
+                .explore()
+                .map_err(|e| e.to_string())?;
             let dir = PathBuf::from(args.get("out").unwrap_or("rtl_out"));
-            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
-            let name = format!("{}_{}b_r{}", im.func, im.in_bits, im.lookup_bits);
-            let write = |p: PathBuf, s: String| std::fs::write(p, s).map_err(|e| e.to_string());
-            write(dir.join(format!("{name}.v")), rtl::emit_module(&im, &name))?;
-            if args.has("tb") {
-                write(dir.join(format!("{name}_tb.v")), rtl::emit_testbench(&im, &name))?;
-                write(dir.join(format!("{name}_golden.hex")), rtl::emit_golden_hex(&im))?;
-            }
-            if im.func == "recip" {
-                write(
-                    dir.join("recip_behavioral.v"),
-                    rtl::behavioral::emit_recip_behavioral(im.in_bits, im.out_bits),
-                )?;
-            }
-            println!("wrote RTL to {}", dir.display());
+            let emitted = explored.emit_rtl(&dir).map_err(|e| e.to_string())?;
+            println!("wrote RTL to {} ({} files)", dir.display(), emitted.files.len());
             Ok(())
         }
         "verify" => {
-            let w = workload(&args)?;
-            let opts = gen_opts(&args);
-            let ds = generate(&w.bt, &opts).map_err(|e| e.to_string())?;
-            let im = explore(&w.bt, &ds, &dse_opts(&args)).ok_or("DSE found no design")?;
+            let synthesized = pipeline_from(&args)?
+                .prepare()
+                .map_err(|e| e.to_string())?
+                .generate()
+                .map_err(|e| e.to_string())?
+                .explore()
+                .map_err(|e| e.to_string())?
+                .synthesize();
             let engine_name = args.get("engine").unwrap_or("scalar");
-            let rt;
-            let engine = match engine_name {
-                "scalar" => Engine::Scalar,
+            let verified = match engine_name {
+                "scalar" => synthesized.verify(),
                 "xla" | "pallas" => {
                     let dir = args.get("artifacts").unwrap_or("artifacts");
-                    rt = XlaRuntime::load(dir).map_err(|e| e.to_string())?;
+                    let rt = XlaRuntime::load(dir).map_err(|e| e.to_string())?;
                     let flavor =
                         if engine_name == "pallas" { Flavor::Pallas } else { Flavor::Jnp };
-                    Engine::Xla { rt: &rt, flavor }
+                    synthesized.verify_with(&rt, flavor)
                 }
                 other => return Err(format!("unknown engine {other}")),
-            };
-            let rep = verify_exhaustive(&w.bt, &im, &engine).map_err(|e| e.to_string())?;
+            }
+            .map_err(|e| e.to_string())?;
             println!(
-                "verified {} inputs via {engine_name}: {} violations{}",
-                rep.total,
-                rep.violations,
-                rep.first_violation
-                    .map(|z| format!(" (first at z={z})"))
-                    .unwrap_or_default()
+                "verified {} inputs via {engine_name}: 0 violations",
+                verified.report.total
             );
-            if im.func == "recip" {
-                rtl::behavioral::recip_between_roundings(&im).map_err(|(z, y, lo, hi)| {
-                    format!("behavioural bracket failed at z={z}: {y} not in [{lo},{hi}]")
-                })?;
+            verified.check_behavioural_bracket().map_err(|e| e.to_string())?;
+            if verified.implementation.func == "recip" {
                 println!("behavioural RTZ/R+inf bracket: ok");
             }
-            if rep.violations == 0 {
-                Ok(())
-            } else {
-                Err("verification FAILED".into())
-            }
+            Ok(())
         }
         "sweep" => {
-            let w = workload(&args)?;
+            let func = args.get("func").unwrap_or("recip").to_string();
+            let bits = args.u32_or("bits", 10);
             let threads = args.u32_or("threads", 4) as usize;
-            let pts = sweep_lub(
-                &w,
-                &default_r_range(w.bt.in_bits),
-                &GenOptions::default(),
-                &dse_opts(&args),
-                threads,
-            );
-            println!("{}", report::fig3(&w.bt.func.clone(), w.bt.in_bits, threads).0);
-            if let Some(best) = best_by_adp(&pts) {
+            let swept = pipeline_from(&args)?.threads(threads).sweep().map_err(|e| e.to_string())?;
+            println!("{}", report::fig3(&func, bits, threads).0);
+            if let Some(best) = swept.best(LubObjective::AreaDelay) {
                 println!("best ADP at LUB = {}", best.lookup_bits);
             }
             Ok(())
@@ -328,23 +255,66 @@ fn run() -> Result<(), String> {
             for kv in args.get_all("set") {
                 cfg.set(kv)?;
             }
-            let func = cfg.get_or("func", "recip").to_string();
-            let bits: u32 = cfg.get_u32("bits")?.unwrap_or(10);
-            let lub = cfg.get_u32("generate.lookup_bits")?.unwrap_or(6);
-            let w = Workload::prepare(&func, bits, AccuracySpec::Ulp(1))
-                .ok_or(format!("unknown function {func}"))?;
-            let ds = generate(&w.bt, &GenOptions { lookup_bits: lub, ..Default::default() })
-                .map_err(|e| e.to_string())?;
-            let im = explore(&w.bt, &ds, &DseOptions::default()).ok_or("DSE failed")?;
-            let p = synth_min_delay(&im);
+            let spec = JobSpec::from_config(&cfg).map_err(|e| e.to_string())?;
+            let res = spec.run().map_err(|e| e.to_string())?;
             println!(
-                "{func} {bits}b R={lub}: {:?} LUT {} — {:.3} ns, {:.1} um2",
-                im.degree,
-                im.lut_width_label(),
-                p.delay_ns,
-                p.area_um2
+                "{} {}b R={}: {:?} LUT {} — {:.3} ns, {:.1} um2",
+                res.func,
+                res.bits,
+                res.lookup_bits,
+                res.implementation.degree,
+                res.implementation.lut_width_label(),
+                res.synth.delay_ns,
+                res.synth.area_um2
             );
             Ok(())
+        }
+        "batch" => {
+            let mut files: Vec<String> =
+                args.get_all("jobs").iter().map(|s| s.to_string()).collect();
+            files.extend(args.positional.iter().cloned());
+            if files.is_empty() {
+                return Err("batch requires job files (positional or --jobs FILE)".into());
+            }
+            let mut specs = Vec::with_capacity(files.len());
+            for f in &files {
+                let text = std::fs::read_to_string(f).map_err(|e| format!("{f}: {e}"))?;
+                specs.push(JobSpec::from_toml(&text).map_err(|e| format!("{f}: {e}"))?);
+            }
+            let threads = args.u32_or("threads", specs.len().min(8) as u32) as usize;
+            let mut batch = Batch::new().threads(threads);
+            if let Some(dir) = args.get("cache") {
+                batch = batch.cache_dir(dir);
+            }
+            let results = batch.execute(&specs);
+            let mut failed = 0usize;
+            for (spec, res) in specs.iter().zip(&results) {
+                match res {
+                    Ok(j) => println!(
+                        "{:<20} ok  R={} {:?} LUT {}  {:.3} ns  {:.1} um2{}",
+                        spec.label(),
+                        j.lookup_bits,
+                        j.implementation.degree,
+                        j.implementation.lut_width_label(),
+                        j.synth.delay_ns,
+                        j.synth.area_um2,
+                        j.verify
+                            .as_ref()
+                            .map(|r| format!("  verified {}", r.total))
+                            .unwrap_or_default()
+                    ),
+                    Err(e) => {
+                        failed += 1;
+                        println!("{:<20} FAILED: {e}", spec.label());
+                    }
+                }
+            }
+            println!("batch: {}/{} jobs succeeded", results.len() - failed, results.len());
+            if failed > 0 {
+                Err(format!("{failed} job(s) failed"))
+            } else {
+                Ok(())
+            }
         }
         _ => Err(format!("unknown command {}", args.cmd)),
     }

@@ -1,0 +1,139 @@
+//! Structured pipeline failures.
+//!
+//! Every fallible stage of [`crate::pipeline`] returns
+//! `Result<_, PipelineError>`; the old `Option<Implementation>`-style
+//! returns along the generate → explore → synth → verify path swallowed
+//! *why* a flow failed. This enum carries the cause: the offending region
+//! for infeasible generation, the exhausted sweep range for automatic
+//! lookup-bit selection, the DSE configuration that found no design, and
+//! the first counterexample input for a verification mismatch.
+
+use std::path::PathBuf;
+
+use crate::designspace::GenError;
+use crate::dse::Degree;
+use crate::verify::VerifyReport;
+
+/// Why a pipeline run failed, with the failing stage's evidence attached.
+#[derive(Debug)]
+pub enum PipelineError {
+    /// `Pipeline::function` named something [`crate::bounds::builtin`]
+    /// does not know.
+    UnknownFunction(String),
+    /// Design-space generation failed at a fixed `R`; `source` names the
+    /// offending region (Eqn 9/10 infeasibility or `k` exhaustion).
+    Generation { lookup_bits: u32, source: GenError },
+    /// Automatic lookup-bit selection swept `tried` and found no point
+    /// with a synthesizable implementation. `last` is the generation
+    /// error at the largest attempted `R`, when generation itself failed.
+    SweepExhausted { func: String, tried: Vec<u32>, last: Option<GenError> },
+    /// The space generated but the decision procedure found no design
+    /// under the requested constraints (forced degree, `b` cap, ...).
+    DseExhausted { func: String, lookup_bits: u32, degree: Option<Degree> },
+    /// Exhaustive verification found bound violations; `counterexample`
+    /// is the smallest violating input code.
+    VerifyFailed { counterexample: u64, report: VerifyReport },
+    /// The behavioural RTZ/R+inf reference bracket failed (recip only):
+    /// output `y` at input `z` fell outside `[lo, hi]`.
+    BracketFailed { z: u64, y: i64, lo: i64, hi: i64 },
+    /// A PJRT/XLA engine error (artifact loading, graph execution).
+    Engine(String),
+    /// Filesystem failure while emitting artifacts.
+    Io { path: PathBuf, source: std::io::Error },
+    /// A malformed [`crate::pipeline::JobSpec`] (bad TOML key or value).
+    Spec(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::UnknownFunction(name) => write!(f, "unknown function {name}"),
+            PipelineError::Generation { lookup_bits, source } => {
+                write!(f, "generation failed at R={lookup_bits}: {source}")
+            }
+            PipelineError::SweepExhausted { func, tried, last } => {
+                write!(f, "no feasible lookup-bit count for {func} in {tried:?}")?;
+                if let Some(e) = last {
+                    write!(f, " (last error: {e})")?;
+                }
+                Ok(())
+            }
+            PipelineError::DseExhausted { func, lookup_bits, degree } => write!(
+                f,
+                "decision procedure found no design for {func} at R={lookup_bits}\
+                 {}",
+                match degree {
+                    Some(Degree::Linear) => " (forced linear)",
+                    Some(Degree::Quadratic) => " (forced quadratic)",
+                    None => "",
+                }
+            ),
+            PipelineError::VerifyFailed { counterexample, report } => write!(
+                f,
+                "verification FAILED: {} of {} inputs violate bounds \
+                 (first counterexample z={counterexample}, worst excess {})",
+                report.violations, report.total, report.worst_excess
+            ),
+            PipelineError::BracketFailed { z, y, lo, hi } => write!(
+                f,
+                "behavioural bracket failed at z={z}: {y} not in [{lo},{hi}]"
+            ),
+            PipelineError::Engine(msg) => write!(f, "verification engine: {msg}"),
+            PipelineError::Io { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
+            PipelineError::Spec(msg) => write!(f, "job spec: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PipelineError::Generation { source, .. } => Some(source),
+            PipelineError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_cause() {
+        let e = PipelineError::Generation {
+            lookup_bits: 3,
+            source: GenError::InfeasibleRegion { r: 7 },
+        };
+        let s = e.to_string();
+        assert!(s.contains("R=3"), "{s}");
+        assert!(s.contains("region 7"), "{s}");
+
+        let e = PipelineError::UnknownFunction("tan".into());
+        assert_eq!(e.to_string(), "unknown function tan");
+
+        let e = PipelineError::VerifyFailed {
+            counterexample: 42,
+            report: VerifyReport {
+                total: 1024,
+                violations: 3,
+                first_violation: Some(42),
+                worst_excess: 9,
+            },
+        };
+        let s = e.to_string();
+        assert!(s.contains("z=42") && s.contains("3 of 1024"), "{s}");
+    }
+
+    #[test]
+    fn generation_error_exposes_source() {
+        use std::error::Error as _;
+        let e = PipelineError::Generation {
+            lookup_bits: 2,
+            source: GenError::KExhausted { r: 1, max_k: 30 },
+        };
+        assert!(e.source().unwrap().to_string().contains("k <= 30"));
+    }
+}

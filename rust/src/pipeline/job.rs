@@ -1,0 +1,465 @@
+//! Serializable pipeline jobs and batch execution.
+//!
+//! A [`JobSpec`] is the declarative form of a [`Pipeline`](super::Pipeline)
+//! configuration: it round-trips through the TOML-subset config layer
+//! ([`crate::coordinator::config::Config`]), so job files can be checked
+//! in, generated, and shipped to workers. [`Batch`] executes many specs
+//! across worker threads, all reusing one coordinator disk cache — the
+//! scale/batching story for serving many scenarios.
+//!
+//! ```no_run
+//! use polygen::pipeline::{Batch, JobSpec};
+//!
+//! let specs: Vec<JobSpec> = ["recip", "log2", "exp2"]
+//!     .iter()
+//!     .map(|f| JobSpec::new(f, 16))
+//!     .collect();
+//! for (spec, result) in specs.iter().zip(Batch::run(&specs, 3)) {
+//!     match result {
+//!         Ok(job) => println!("{}: R={} ok", spec.label(), job.lookup_bits),
+//!         Err(e) => println!("{}: {e}", spec.label()),
+//!     }
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::config::Config;
+
+use super::{
+    AccuracySpec, Degree, Implementation, LookupBits, LubObjective, Pipeline, PipelineError,
+    Procedure, SearchStrategy, Settings, SynthPoint, VerifyReport,
+};
+
+/// One pipeline job, serializable to/from a TOML job file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub func: String,
+    pub bits: u32,
+    pub accuracy: AccuracySpec,
+    pub lookup: LookupBits,
+    pub degree: Option<Degree>,
+    pub procedure: Procedure,
+    pub search: SearchStrategy,
+    pub max_k: u32,
+    pub threads: usize,
+    pub max_b_per_a: usize,
+    /// Exhaustively verify the selected implementation (default true).
+    pub verify: bool,
+    /// When set, emit Verilog artifacts into this directory.
+    pub rtl_out: Option<PathBuf>,
+}
+
+impl JobSpec {
+    /// A job with the pipeline's defaults for everything but the target.
+    pub fn new(func: &str, bits: u32) -> JobSpec {
+        let s = Settings::default();
+        JobSpec {
+            func: func.to_string(),
+            bits,
+            accuracy: s.accuracy,
+            lookup: s.lookup,
+            degree: s.degree,
+            procedure: s.procedure,
+            search: s.search,
+            max_k: s.max_k,
+            threads: s.threads,
+            max_b_per_a: s.max_b_per_a,
+            verify: true,
+            rtl_out: None,
+        }
+    }
+
+    /// Short identifier for logs and result files, e.g. `recip_16b_R8`.
+    pub fn label(&self) -> String {
+        match self.lookup {
+            LookupBits::Fixed(r) => format!("{}_{}b_R{r}", self.func, self.bits),
+            LookupBits::Auto(_) => format!("{}_{}b_Rauto", self.func, self.bits),
+        }
+    }
+
+    /// The imperative form of this spec.
+    pub fn to_pipeline(&self) -> Pipeline {
+        let mut p = Pipeline::function(&self.func)
+            .bits(self.bits)
+            .accuracy(self.accuracy)
+            .lookup_bits(self.lookup)
+            .procedure(self.procedure)
+            .search(self.search)
+            .max_k(self.max_k)
+            .threads(self.threads)
+            .max_b_per_a(self.max_b_per_a);
+        if let Some(d) = self.degree {
+            p = p.degree(d);
+        }
+        p
+    }
+
+    /// Execute the job (no disk cache).
+    pub fn run(&self) -> Result<JobResult, PipelineError> {
+        self.run_with(None)
+    }
+
+    /// Execute the job, generating through a shared disk cache.
+    pub fn run_with(&self, cache: Option<&Path>) -> Result<JobResult, PipelineError> {
+        let mut p = self.to_pipeline();
+        if let Some(dir) = cache {
+            p = p.cache_dir(dir);
+        }
+        let synthesized = p.prepare()?.generate()?.explore()?.synthesize();
+        if self.verify {
+            let v = synthesized.verify()?;
+            let rtl = match &self.rtl_out {
+                Some(dir) => v.emit_rtl(dir)?.files,
+                None => Vec::new(),
+            };
+            Ok(JobResult::assemble(v.implementation, v.synth, Some(v.report), rtl))
+        } else {
+            let rtl = match &self.rtl_out {
+                Some(dir) => synthesized.emit_rtl(dir)?.files,
+                None => Vec::new(),
+            };
+            Ok(JobResult::assemble(synthesized.implementation, synthesized.synth, None, rtl))
+        }
+    }
+
+    /// Parse a job file's text (the TOML subset [`Config`] accepts).
+    pub fn from_toml(text: &str) -> Result<JobSpec, PipelineError> {
+        let cfg = Config::parse(text).map_err(PipelineError::Spec)?;
+        JobSpec::from_config(&cfg)
+    }
+
+    /// Build a spec from a parsed [`Config`] (missing keys take the
+    /// pipeline defaults; unknown values are [`PipelineError::Spec`]).
+    pub fn from_config(cfg: &Config) -> Result<JobSpec, PipelineError> {
+        let spec_err = PipelineError::Spec;
+        let mut s = JobSpec::new(cfg.get_or("func", "recip"), 10);
+        s.bits = cfg.get_u32("bits").map_err(spec_err)?.unwrap_or(10);
+        if let Some(v) = cfg.get("accuracy") {
+            s.accuracy = parse_accuracy(v)?;
+        }
+        if let Some(v) = cfg.get("generate.lookup_bits") {
+            s.lookup = parse_lookup(v)?;
+        }
+        if let Some(v) = cfg.get("generate.search") {
+            s.search = match v {
+                "pruned" => SearchStrategy::Pruned,
+                "naive" => SearchStrategy::Naive,
+                other => return Err(spec_err(format!("generate.search: {other}"))),
+            };
+        }
+        if let Some(v) = cfg.get_u32("generate.max_k").map_err(spec_err)? {
+            s.max_k = v;
+        }
+        if let Some(v) = cfg.get_u32("generate.threads").map_err(spec_err)? {
+            s.threads = v as usize;
+        }
+        if let Some(v) = cfg.get("dse.procedure") {
+            s.procedure = match v {
+                "square_first" => Procedure::SquareFirst,
+                "lut_first" => Procedure::LutFirst,
+                other => return Err(spec_err(format!("dse.procedure: {other}"))),
+            };
+        }
+        if let Some(v) = cfg.get("dse.degree") {
+            s.degree = match v {
+                "auto" => None,
+                "linear" => Some(Degree::Linear),
+                "quadratic" => Some(Degree::Quadratic),
+                other => return Err(spec_err(format!("dse.degree: {other}"))),
+            };
+        }
+        if let Some(v) = cfg.get_u32("dse.max_b_per_a").map_err(spec_err)? {
+            s.max_b_per_a = v as usize;
+        }
+        if let Some(v) = cfg.get_bool("job.verify").map_err(spec_err)? {
+            s.verify = v;
+        }
+        if let Some(v) = cfg.get("job.rtl_out") {
+            s.rtl_out = Some(PathBuf::from(v));
+        }
+        Ok(s)
+    }
+
+    /// Serialize to job-file text; `JobSpec::from_toml(&spec.to_toml())`
+    /// reconstructs the spec exactly.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("func = {}\n", self.func));
+        out.push_str(&format!("bits = {}\n", self.bits));
+        out.push_str(&format!("accuracy = {}\n\n", self.accuracy.label()));
+        out.push_str("[generate]\n");
+        out.push_str(&format!("lookup_bits = {}\n", lookup_label(self.lookup)));
+        out.push_str(&format!(
+            "search = {}\n",
+            match self.search {
+                SearchStrategy::Pruned => "pruned",
+                SearchStrategy::Naive => "naive",
+            }
+        ));
+        out.push_str(&format!("max_k = {}\n", self.max_k));
+        out.push_str(&format!("threads = {}\n\n", self.threads));
+        out.push_str("[dse]\n");
+        out.push_str(&format!(
+            "procedure = {}\n",
+            match self.procedure {
+                Procedure::SquareFirst => "square_first",
+                Procedure::LutFirst => "lut_first",
+            }
+        ));
+        out.push_str(&format!(
+            "degree = {}\n",
+            match self.degree {
+                None => "auto",
+                Some(Degree::Linear) => "linear",
+                Some(Degree::Quadratic) => "quadratic",
+            }
+        ));
+        out.push_str(&format!("max_b_per_a = {}\n\n", self.max_b_per_a));
+        out.push_str("[job]\n");
+        out.push_str(&format!("verify = {}\n", self.verify));
+        if let Some(dir) = &self.rtl_out {
+            out.push_str(&format!("rtl_out = {}\n", dir.display()));
+        }
+        out
+    }
+}
+
+/// Parse an accuracy label (`faithful`, `1ulp`, `2ulp`, ...) — the
+/// single grammar shared by job files and the CLI's `--accuracy` flag.
+pub fn parse_accuracy(s: &str) -> Result<AccuracySpec, PipelineError> {
+    if s == "faithful" {
+        return Ok(AccuracySpec::Faithful);
+    }
+    s.trim_end_matches("ulp")
+        .parse()
+        .map(AccuracySpec::Ulp)
+        .map_err(|_| PipelineError::Spec(format!("accuracy: {s}")))
+}
+
+fn parse_lookup(s: &str) -> Result<LookupBits, PipelineError> {
+    match s {
+        "auto" | "auto:area_delay" => Ok(LookupBits::Auto(LubObjective::AreaDelay)),
+        "auto:area" => Ok(LookupBits::Auto(LubObjective::Area)),
+        "auto:delay" => Ok(LookupBits::Auto(LubObjective::Delay)),
+        fixed => fixed
+            .parse()
+            .map(LookupBits::Fixed)
+            .map_err(|_| PipelineError::Spec(format!("generate.lookup_bits: {fixed}"))),
+    }
+}
+
+fn lookup_label(lookup: LookupBits) -> String {
+    match lookup {
+        LookupBits::Fixed(r) => r.to_string(),
+        LookupBits::Auto(LubObjective::AreaDelay) => "auto".into(),
+        LookupBits::Auto(LubObjective::Area) => "auto:area".into(),
+        LookupBits::Auto(LubObjective::Delay) => "auto:delay".into(),
+    }
+}
+
+/// What one executed job produced (everything `Send`, so batches can
+/// collect results across workers).
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub func: String,
+    pub bits: u32,
+    /// The `R` actually used (the sweep's choice under auto selection).
+    pub lookup_bits: u32,
+    pub implementation: Implementation,
+    pub synth: SynthPoint,
+    /// Present when the spec asked for verification (always clean —
+    /// violations surface as [`PipelineError::VerifyFailed`]).
+    pub verify: Option<VerifyReport>,
+    /// Verilog files written, when the spec named an output directory.
+    pub rtl: Vec<PathBuf>,
+}
+
+impl JobResult {
+    fn assemble(
+        implementation: Implementation,
+        synth: SynthPoint,
+        verify: Option<VerifyReport>,
+        rtl: Vec<PathBuf>,
+    ) -> JobResult {
+        JobResult {
+            func: implementation.func.clone(),
+            bits: implementation.in_bits,
+            lookup_bits: implementation.lookup_bits,
+            implementation,
+            synth,
+            verify,
+            rtl,
+        }
+    }
+}
+
+/// Executes many [`JobSpec`]s across worker threads. Jobs are pulled
+/// from a shared queue (dynamic load balancing — auto-LUB sweeps take
+/// much longer than fixed-`R` jobs), and one result slot per spec keeps
+/// output order deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    threads: usize,
+    cache_dir: Option<PathBuf>,
+}
+
+impl Batch {
+    pub fn new() -> Batch {
+        Batch { threads: 1, cache_dir: None }
+    }
+
+    /// Worker-thread count (default 1 = sequential).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Share one design-space disk cache across all jobs.
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// One-call form: `Batch::run(&specs, threads)`.
+    pub fn run(specs: &[JobSpec], threads: usize) -> Vec<Result<JobResult, PipelineError>> {
+        Batch::new().threads(threads).execute(specs)
+    }
+
+    /// Execute every spec; `results[i]` corresponds to `specs[i]`. A
+    /// failing job fails its own slot only.
+    pub fn execute(&self, specs: &[JobSpec]) -> Vec<Result<JobResult, PipelineError>> {
+        let cache = self.cache_dir.as_deref();
+        let workers = self.threads.min(specs.len().max(1));
+        if workers <= 1 {
+            return specs.iter().map(|s| s.run_with(cache)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<JobResult, PipelineError>>>> =
+            specs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let res = specs[i].run_with(cache);
+                    *slots[i].lock().unwrap() = Some(res);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("batch worker missed a job"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip_defaults() {
+        let spec = JobSpec::new("recip", 16);
+        let back = JobSpec::from_toml(&spec.to_toml()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn toml_roundtrip_every_nondefault_field() {
+        let spec = JobSpec {
+            func: "log2".into(),
+            bits: 12,
+            accuracy: AccuracySpec::Faithful,
+            lookup: LookupBits::Auto(LubObjective::Delay),
+            degree: Some(Degree::Quadratic),
+            procedure: Procedure::LutFirst,
+            search: SearchStrategy::Naive,
+            max_k: 24,
+            threads: 4,
+            max_b_per_a: 128,
+            verify: false,
+            rtl_out: Some(PathBuf::from("out/rtl")),
+        };
+        let text = spec.to_toml();
+        let back = JobSpec::from_toml(&text).unwrap();
+        assert_eq!(spec, back, "round-trip through:\n{text}");
+    }
+
+    #[test]
+    fn auto_objective_labels_roundtrip() {
+        for obj in [LubObjective::Area, LubObjective::Delay, LubObjective::AreaDelay] {
+            let lb = LookupBits::Auto(obj);
+            assert_eq!(parse_lookup(&lookup_label(lb)).unwrap(), lb);
+        }
+        assert_eq!(parse_lookup("7").unwrap(), LookupBits::Fixed(7));
+    }
+
+    #[test]
+    fn bad_values_are_spec_errors() {
+        for text in [
+            "bits = twelve\n",
+            "accuracy = tight\n",
+            "[generate]\nlookup_bits = many\n",
+            "[generate]\nsearch = exhaustive\n",
+            "[dse]\ndegree = cubic\n",
+            "[dse]\nprocedure = random\n",
+            "[job]\nverify = maybe\n",
+        ] {
+            match JobSpec::from_toml(text) {
+                Err(PipelineError::Spec(_)) => {}
+                other => panic!("{text:?}: expected Spec error, got {:?}", other.err()),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_isolates_failures_and_preserves_order() {
+        let specs = vec![
+            JobSpec::new("recip", 8),
+            JobSpec::new("tan", 8), // unknown function
+            JobSpec::new("exp2", 8),
+        ];
+        let results = Batch::run(&specs, 2);
+        assert_eq!(results.len(), 3);
+        let ok = results[0].as_ref().expect("recip should succeed");
+        assert_eq!(ok.func, "recip");
+        assert!(ok.verify.as_ref().unwrap().ok());
+        match &results[1] {
+            Err(PipelineError::UnknownFunction(f)) => assert_eq!(f, "tan"),
+            other => panic!("expected UnknownFunction, got ok={}", other.is_ok()),
+        }
+        assert_eq!(results[2].as_ref().unwrap().func, "exp2");
+    }
+
+    #[test]
+    fn batch_parallel_equals_sequential() {
+        let specs = vec![JobSpec::new("recip", 8), JobSpec::new("log2", 8)];
+        let seq = Batch::run(&specs, 1);
+        let par = Batch::run(&specs, 2);
+        for (a, b) in seq.iter().zip(&par) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
+            assert_eq!(a.lookup_bits, b.lookup_bits);
+        }
+    }
+
+    #[test]
+    fn job_with_rtl_out_writes_files() {
+        let dir = std::env::temp_dir().join(format!("polygen_job_rtl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = JobSpec::new("recip", 8);
+        spec.lookup = LookupBits::Fixed(4);
+        spec.rtl_out = Some(dir.clone());
+        let res = spec.run().unwrap();
+        assert!(!res.rtl.is_empty());
+        for f in &res.rtl {
+            assert!(f.exists(), "{} missing", f.display());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,723 @@
+//! The one public entry point: a typed, staged pipeline from a target
+//! function to verified hardware.
+//!
+//! The paper's pitch is that the *complete* design space plus a modified
+//! decision procedure is all you need to retarget new hardware
+//! technologies. This module packages that claim as an API instead of a
+//! pile of free functions: a [`Pipeline`] builder whose stages produce
+//! inspectable artifacts —
+//!
+//! ```text
+//! Pipeline ──prepare()──▶ Prepared ──generate()──▶ Spaced
+//!     ──explore()──▶ Explored ──synthesize()──▶ Synthesized
+//!     ──verify()──▶ Verified ──emit_rtl()──▶ RtlEmitted
+//! ```
+//!
+//! — so callers can stop at any layer (inspect the [`DesignSpace`], grab
+//! the [`Implementation`], cost it) or run end-to-end with
+//! [`Pipeline::run`]. Every fallible stage returns
+//! `Result<_, PipelineError>`: failures carry their cause (the offending
+//! region, the exhausted sweep, the first counterexample input) instead
+//! of a bare `None`.
+//!
+//! # End to end
+//!
+//! ```
+//! use polygen::pipeline::Pipeline;
+//!
+//! let verified = Pipeline::function("recip")
+//!     .bits(8)
+//!     .lub(4)
+//!     .run()
+//!     .expect("recip 8-bit at R=4 is feasible");
+//! assert!(verified.report.ok());
+//! assert_eq!(verified.space.regions.len(), 16);
+//! ```
+//!
+//! # Stop at any stage
+//!
+//! ```
+//! use polygen::pipeline::Pipeline;
+//!
+//! let spaced = Pipeline::function("exp2")
+//!     .bits(8)
+//!     .lub(4)
+//!     .prepare()
+//!     .unwrap()
+//!     .generate()
+//!     .unwrap();
+//! // The complete space is an artifact, not an intermediate.
+//! assert!(spaced.space.num_ab_pairs() > 0);
+//! let explored = spaced.explore().unwrap();
+//! assert_eq!(explored.implementation.coeffs.len(), 16);
+//! ```
+//!
+//! # Automatic lookup-bit selection
+//!
+//! The paper's stated future work — "a decision procedure to choose the
+//! optimal number of lookup bits" — is a builder knob:
+//!
+//! ```no_run
+//! use polygen::pipeline::{LookupBits, LubObjective, Pipeline};
+//!
+//! let v = Pipeline::function("log2")
+//!     .bits(16)
+//!     .lookup_bits(LookupBits::Auto(LubObjective::AreaDelay))
+//!     .threads(8)
+//!     .run()
+//!     .unwrap();
+//! println!("chose R = {}", v.implementation.lookup_bits);
+//! ```
+//!
+//! # Batch execution
+//!
+//! Many jobs, worker threads, one shared disk cache — see [`JobSpec`] and
+//! [`Batch`] in [`job`].
+
+pub mod error;
+pub mod job;
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    best_by_objective, default_r_range, generate_cached, sweep_lub_cached, Workload,
+};
+use crate::designspace::generate;
+use crate::rtl;
+use crate::synth::synth_min_delay;
+use crate::verify::verify_exhaustive;
+
+pub use error::PipelineError;
+pub use job::{parse_accuracy, Batch, JobResult, JobSpec};
+
+// Re-exports: everything a pipeline caller needs, so `main.rs`, the
+// examples and the benches compile against `polygen::pipeline` alone.
+pub use crate::bounds::{builtin, AccuracySpec, BoundTable, CustomF64, TargetFunction};
+pub use crate::coordinator::config::Config;
+pub use crate::coordinator::{LubObjective, SweepPoint};
+pub use crate::designspace::extrema::SearchStrategy;
+pub use crate::designspace::{DesignSpace, GenError, GenOptions};
+pub use crate::dse::{Degree, DseOptions, Implementation, Procedure};
+pub use crate::rtl::{emit_golden_hex, emit_module, emit_testbench, DatapathSim};
+pub use crate::runtime::{Flavor, XlaRuntime};
+pub use crate::synth::{breakdown, synth_at, Breakdown, SynthPoint};
+pub use crate::verify::{verify_exhaustive as verify_implementation, Engine, VerifyReport};
+
+/// How the pipeline chooses the lookup-bit count `R`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LookupBits {
+    /// Generate at exactly this `R`.
+    Fixed(u32),
+    /// Sweep the default `R` range and select the point optimizing the
+    /// given hardware objective (the paper's future-work decision
+    /// procedure, realized by [`crate::coordinator::sweep_lub`]).
+    Auto(LubObjective),
+}
+
+/// Shared stage configuration, fixed when the builder is consumed.
+#[derive(Clone, Debug)]
+struct Settings {
+    bits: u32,
+    accuracy: AccuracySpec,
+    lookup: LookupBits,
+    degree: Option<Degree>,
+    procedure: Procedure,
+    search: SearchStrategy,
+    max_k: u32,
+    threads: usize,
+    max_b_per_a: usize,
+    cache_dir: Option<PathBuf>,
+    testbench: bool,
+    sweep_range: Option<Vec<u32>>,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        let gen = GenOptions::default();
+        let dse = DseOptions::default();
+        Settings {
+            bits: 10,
+            accuracy: AccuracySpec::Ulp(1),
+            lookup: LookupBits::Fixed(gen.lookup_bits),
+            degree: dse.degree,
+            procedure: dse.procedure,
+            search: gen.search,
+            max_k: gen.max_k,
+            threads: gen.threads,
+            max_b_per_a: dse.max_b_per_a,
+            cache_dir: None,
+            testbench: false,
+            sweep_range: None,
+        }
+    }
+}
+
+impl Settings {
+    fn gen_opts(&self, lookup_bits: u32) -> GenOptions {
+        GenOptions {
+            lookup_bits,
+            search: self.search,
+            max_k: self.max_k,
+            threads: self.threads,
+        }
+    }
+
+    /// Options for one point of a sweep: `sweep_lub` already spreads
+    /// points across `threads` workers, so per-point generation must stay
+    /// single-threaded (its documented invariant) — nesting would
+    /// oversubscribe to `threads^2` and corrupt per-point `gen_time`.
+    fn sweep_gen_opts(&self) -> GenOptions {
+        GenOptions { threads: 1, ..self.gen_opts(0) }
+    }
+
+    fn dse_opts(&self) -> DseOptions {
+        DseOptions {
+            procedure: self.procedure,
+            degree: self.degree,
+            max_b_per_a: self.max_b_per_a,
+        }
+    }
+}
+
+enum Source {
+    Builtin(String),
+    Custom(Box<dyn TargetFunction>),
+}
+
+/// The staged builder. Construct with [`Pipeline::function`] (a built-in
+/// workload) or [`Pipeline::custom`] (bring your own
+/// [`TargetFunction`]), configure, then either [`Pipeline::run`]
+/// end-to-end or step through the stages starting at
+/// [`Pipeline::prepare`].
+pub struct Pipeline {
+    source: Source,
+    settings: Settings,
+}
+
+impl Pipeline {
+    /// Target a built-in function (`recip`, `log2`, `exp2`, `sqrt`).
+    /// Name resolution is deferred to [`Pipeline::prepare`], which
+    /// returns [`PipelineError::UnknownFunction`] for anything else.
+    pub fn function(name: &str) -> Pipeline {
+        Pipeline { source: Source::Builtin(name.to_string()), settings: Settings::default() }
+    }
+
+    /// Target a custom function. Its own `in_bits` wins over
+    /// [`Pipeline::bits`].
+    pub fn custom(f: Box<dyn TargetFunction>) -> Pipeline {
+        Pipeline { source: Source::Custom(f), settings: Settings::default() }
+    }
+
+    /// Stored input precision for built-in functions (default 10).
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.settings.bits = bits;
+        self
+    }
+
+    /// Accuracy specification (default 1 ULP).
+    pub fn accuracy(mut self, acc: AccuracySpec) -> Self {
+        self.settings.accuracy = acc;
+        self
+    }
+
+    /// Lookup-bit policy: [`LookupBits::Fixed`] or [`LookupBits::Auto`].
+    pub fn lookup_bits(mut self, lookup: LookupBits) -> Self {
+        self.settings.lookup = lookup;
+        self
+    }
+
+    /// Shorthand for `lookup_bits(LookupBits::Fixed(r))`.
+    pub fn lub(self, r: u32) -> Self {
+        self.lookup_bits(LookupBits::Fixed(r))
+    }
+
+    /// Shorthand for `lookup_bits(LookupBits::Auto(objective))`.
+    pub fn auto_lub(self, objective: LubObjective) -> Self {
+        self.lookup_bits(LookupBits::Auto(objective))
+    }
+
+    /// Force the interpolator degree (default: linear iff feasible).
+    pub fn degree(mut self, degree: Degree) -> Self {
+        self.settings.degree = Some(degree);
+        self
+    }
+
+    /// Decision-procedure variant (default: the paper's SquareFirst).
+    pub fn procedure(mut self, procedure: Procedure) -> Self {
+        self.settings.procedure = procedure;
+        self
+    }
+
+    /// Naive or Claim II.1-pruned Eqn 10 searches (default: pruned).
+    pub fn search(mut self, search: SearchStrategy) -> Self {
+        self.settings.search = search;
+        self
+    }
+
+    /// Give up if no common `k <= max_k` exists (default 30).
+    pub fn max_k(mut self, max_k: u32) -> Self {
+        self.settings.max_k = max_k;
+        self
+    }
+
+    /// Worker threads for generation and sweeps (default 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.settings.threads = threads.max(1);
+        self
+    }
+
+    /// Cap on enumerated `b` values per `(region, a)` (default 512).
+    pub fn max_b_per_a(mut self, cap: usize) -> Self {
+        self.settings.max_b_per_a = cap;
+        self
+    }
+
+    /// Cache generated spaces under this directory (`.pgds` files); see
+    /// [`crate::coordinator::cache`]. The key covers every
+    /// result-affecting [`GenOptions`] field. Custom functions are never
+    /// disk-cached: their name does not determine their content, so a
+    /// stale space could silently shadow an edited closure.
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.settings.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Also emit a self-checking testbench + golden vector from
+    /// [`Explored::emit_rtl`] (default false).
+    pub fn testbench(mut self, tb: bool) -> Self {
+        self.settings.testbench = tb;
+        self
+    }
+
+    /// Override the `R` values swept by [`LookupBits::Auto`] and
+    /// [`Pipeline::sweep`] (default: [`default_r_range`]).
+    pub fn sweep_range(mut self, r_values: Vec<u32>) -> Self {
+        self.settings.sweep_range = Some(r_values);
+        self
+    }
+
+    /// Stage 1: resolve the function and build its bound table.
+    pub fn prepare(self) -> Result<Prepared, PipelineError> {
+        let Pipeline { source, settings } = self;
+        let (workload, cacheable) = match source {
+            Source::Builtin(name) => (
+                Workload::prepare(&name, settings.bits, settings.accuracy)
+                    .ok_or(PipelineError::UnknownFunction(name))?,
+                true,
+            ),
+            Source::Custom(f) => {
+                let bt = BoundTable::build(f.as_ref(), settings.accuracy);
+                // Not disk-cacheable: the cache key is the function name,
+                // which only determines the content for built-ins.
+                (Workload { func: f, bt, accuracy: settings.accuracy }, false)
+            }
+        };
+        Ok(Prepared { settings, workload, cacheable })
+    }
+
+    /// Run every stage (scalar verification) and return the final
+    /// artifact bundle.
+    pub fn run(self) -> Result<Verified, PipelineError> {
+        self.prepare()?.generate()?.explore()?.synthesize().verify()
+    }
+
+    /// Sweep the lookup-bit range without committing to one point:
+    /// the exploratory flavor of [`LookupBits::Auto`]. Used by the
+    /// Fig. 3 / Table I report generators.
+    pub fn sweep(self) -> Result<Swept, PipelineError> {
+        let prepared = self.prepare()?;
+        let Prepared { settings, workload, cacheable } = prepared;
+        let rs = settings
+            .sweep_range
+            .clone()
+            .unwrap_or_else(|| default_r_range(workload.bt.in_bits));
+        let cache = if cacheable { settings.cache_dir.as_deref() } else { None };
+        let points = sweep_lub_cached(
+            &workload,
+            &rs,
+            &settings.sweep_gen_opts(),
+            &settings.dse_opts(),
+            settings.threads,
+            cache,
+        );
+        Ok(Swept { settings, workload, points })
+    }
+}
+
+/// Stage-1 artifact: the resolved [`Workload`] (function + bound table).
+pub struct Prepared {
+    settings: Settings,
+    pub workload: Workload,
+    /// Built-ins may use the disk cache (name determines content).
+    cacheable: bool,
+}
+
+impl Prepared {
+    /// Smallest `R` with a feasible complete space (paper §I: "the
+    /// minimum number of regions required"), probing `0..=r_max`.
+    pub fn min_lookup_bits(&self, r_max: u32) -> Option<u32> {
+        crate::designspace::min_lookup_bits(&self.workload.bt, &self.settings.gen_opts(0), r_max)
+    }
+
+    /// Stage 2: generate the complete design space. Under
+    /// [`LookupBits::Auto`] this sweeps the `R` range, selects the best
+    /// point by the objective, and carries that point's implementation
+    /// forward so [`Spaced::explore`] does not repeat the work.
+    pub fn generate(self) -> Result<Spaced, PipelineError> {
+        let Prepared { settings, workload, cacheable } = self;
+        let cache = if cacheable { settings.cache_dir.as_deref() } else { None };
+        match settings.lookup {
+            LookupBits::Fixed(r) => {
+                let opts = settings.gen_opts(r);
+                let t0 = Instant::now();
+                let space = match cache {
+                    Some(dir) => generate_cached(&workload, r, &opts, dir),
+                    None => generate(&workload.bt, &opts),
+                };
+                let gen_time = t0.elapsed();
+                let space = space
+                    .map_err(|source| PipelineError::Generation { lookup_bits: r, source })?;
+                Ok(Spaced { settings, workload, space, gen_time, preselected: None })
+            }
+            LookupBits::Auto(objective) => {
+                let rs = settings
+                    .sweep_range
+                    .clone()
+                    .unwrap_or_else(|| default_r_range(workload.bt.in_bits));
+                let mut points = sweep_lub_cached(
+                    &workload,
+                    &rs,
+                    &settings.sweep_gen_opts(),
+                    &settings.dse_opts(),
+                    settings.threads,
+                    cache,
+                );
+                let best = best_by_objective(&points, objective)
+                    .map(|b| b.lookup_bits)
+                    .and_then(|r| points.iter().position(|p| p.lookup_bits == r));
+                let Some(idx) = best else {
+                    let last = points.iter().rev().find_map(|p| p.space.as_ref().err().cloned());
+                    return Err(PipelineError::SweepExhausted {
+                        func: workload.bt.func.clone(),
+                        tried: rs,
+                        last,
+                    });
+                };
+                let chosen = points.swap_remove(idx);
+                let space = chosen.space.expect("selected sweep point lost its space");
+                Ok(Spaced {
+                    settings,
+                    workload,
+                    space,
+                    gen_time: chosen.gen_time,
+                    preselected: chosen.implementation,
+                })
+            }
+        }
+    }
+}
+
+/// Stage-2 artifact: the complete [`DesignSpace`] (plus its workload).
+pub struct Spaced {
+    settings: Settings,
+    pub workload: Workload,
+    pub space: DesignSpace,
+    /// Generation wall-clock (the paper's Table I "runtime" column
+    /// measures this step).
+    pub gen_time: Duration,
+    /// Implementation already selected by an auto-LUB sweep.
+    preselected: Option<Implementation>,
+}
+
+impl Spaced {
+    /// Stage 3: run the decision procedure over the complete space.
+    pub fn explore(self) -> Result<Explored, PipelineError> {
+        let Spaced { settings, workload, space, gen_time, preselected } = self;
+        let implementation = match preselected {
+            Some(im) => im,
+            None => crate::dse::explore(&workload.bt, &space, &settings.dse_opts()).ok_or_else(
+                || PipelineError::DseExhausted {
+                    func: workload.bt.func.clone(),
+                    lookup_bits: space.lookup_bits,
+                    degree: settings.degree,
+                },
+            )?,
+        };
+        Ok(Explored { settings, workload, space, gen_time, implementation })
+    }
+}
+
+/// Stage-3 artifact: one concrete [`Implementation`].
+pub struct Explored {
+    settings: Settings,
+    pub workload: Workload,
+    pub space: DesignSpace,
+    pub gen_time: Duration,
+    pub implementation: Implementation,
+}
+
+impl Explored {
+    /// Stage 4: cost the datapath at its minimum obtainable delay.
+    pub fn synthesize(self) -> Synthesized {
+        let synth = synth_min_delay(&self.implementation);
+        let Explored { settings, workload, space, gen_time, implementation } = self;
+        Synthesized { settings, workload, space, gen_time, implementation, synth }
+    }
+
+    /// Emit Verilog (module, optional testbench + golden vector, and the
+    /// behavioural reference for `recip`) without synthesizing first.
+    pub fn emit_rtl(&self, dir: impl AsRef<Path>) -> Result<RtlEmitted, PipelineError> {
+        emit_rtl_files(&self.implementation, &self.settings, dir.as_ref())
+    }
+}
+
+/// Stage-4 artifact: the implementation plus its min-delay [`SynthPoint`].
+pub struct Synthesized {
+    settings: Settings,
+    pub workload: Workload,
+    pub space: DesignSpace,
+    pub gen_time: Duration,
+    pub implementation: Implementation,
+    pub synth: SynthPoint,
+}
+
+impl Synthesized {
+    /// Stage 5: exhaustive scalar verification (the trust anchor). A
+    /// clean sweep yields [`Verified`]; any violation is a
+    /// [`PipelineError::VerifyFailed`] carrying the first counterexample.
+    pub fn verify(self) -> Result<Verified, PipelineError> {
+        let report = verify_exhaustive(&self.workload.bt, &self.implementation, &Engine::Scalar)
+            .map_err(|e| PipelineError::Engine(e.to_string()))?;
+        self.finish(report)
+    }
+
+    /// Stage 5 through a compiled XLA engine (jnp or Pallas flavor).
+    pub fn verify_with(self, rt: &XlaRuntime, flavor: Flavor) -> Result<Verified, PipelineError> {
+        let engine = Engine::Xla { rt, flavor };
+        let report = verify_exhaustive(&self.workload.bt, &self.implementation, &engine)
+            .map_err(|e| PipelineError::Engine(e.to_string()))?;
+        self.finish(report)
+    }
+
+    fn finish(self, report: VerifyReport) -> Result<Verified, PipelineError> {
+        if !report.ok() {
+            return Err(PipelineError::VerifyFailed {
+                counterexample: report
+                    .first_violation
+                    .expect("violations recorded without a first input"),
+                report,
+            });
+        }
+        let Synthesized { settings, workload, space, gen_time, implementation, synth } = self;
+        Ok(Verified { settings, workload, space, gen_time, implementation, synth, report })
+    }
+
+    /// See [`Explored::emit_rtl`].
+    pub fn emit_rtl(&self, dir: impl AsRef<Path>) -> Result<RtlEmitted, PipelineError> {
+        emit_rtl_files(&self.implementation, &self.settings, dir.as_ref())
+    }
+}
+
+/// Stage-5 artifact: everything, plus the clean [`VerifyReport`].
+pub struct Verified {
+    settings: Settings,
+    pub workload: Workload,
+    pub space: DesignSpace,
+    pub gen_time: Duration,
+    pub implementation: Implementation,
+    pub synth: SynthPoint,
+    pub report: VerifyReport,
+}
+
+impl Verified {
+    /// Cross-check a strided input sample through a second engine flavor
+    /// (`Ok(true)` = bit-identical with [`Implementation::eval`]).
+    pub fn cross_check(
+        &self,
+        rt: &XlaRuntime,
+        flavor: Flavor,
+        stride: u64,
+    ) -> Result<bool, PipelineError> {
+        crate::verify::cross_check_sample(&self.workload.bt, &self.implementation, rt, flavor, stride)
+            .map_err(|e| PipelineError::Engine(e.to_string()))
+    }
+
+    /// The paper's HECTOR-style behavioural check for `recip`: the output
+    /// must sit between the round-toward-zero and round-toward-+inf
+    /// references. A no-op for other functions.
+    pub fn check_behavioural_bracket(&self) -> Result<(), PipelineError> {
+        if self.implementation.func != "recip" {
+            return Ok(());
+        }
+        rtl::behavioral::recip_between_roundings(&self.implementation)
+            .map_err(|(z, y, lo, hi)| PipelineError::BracketFailed { z, y, lo, hi })
+    }
+
+    /// Final stage: write the Verilog artifacts.
+    pub fn emit_rtl(&self, dir: impl AsRef<Path>) -> Result<RtlEmitted, PipelineError> {
+        emit_rtl_files(&self.implementation, &self.settings, dir.as_ref())
+    }
+}
+
+/// Terminal artifact of [`Verified::emit_rtl`]: the module name and every
+/// file written.
+#[derive(Clone, Debug)]
+pub struct RtlEmitted {
+    pub module: String,
+    pub files: Vec<PathBuf>,
+}
+
+fn emit_rtl_files(
+    im: &Implementation,
+    settings: &Settings,
+    dir: &Path,
+) -> Result<RtlEmitted, PipelineError> {
+    let io_err = |path: &Path, source: std::io::Error| PipelineError::Io {
+        path: path.to_path_buf(),
+        source,
+    };
+    std::fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+    let module = format!("{}_{}b_r{}", im.func, im.in_bits, im.lookup_bits);
+    let mut files = Vec::new();
+    let mut write = |path: PathBuf, text: String| -> Result<(), PipelineError> {
+        std::fs::write(&path, text).map_err(|e| io_err(&path, e))?;
+        files.push(path);
+        Ok(())
+    };
+    write(dir.join(format!("{module}.v")), rtl::emit_module(im, &module))?;
+    if settings.testbench {
+        write(dir.join(format!("{module}_tb.v")), rtl::emit_testbench(im, &module))?;
+        write(dir.join(format!("{module}_golden.hex")), rtl::emit_golden_hex(im))?;
+    }
+    if im.func == "recip" {
+        write(
+            dir.join("recip_behavioral.v"),
+            rtl::behavioral::emit_recip_behavioral(im.in_bits, im.out_bits),
+        )?;
+    }
+    Ok(RtlEmitted { module, files })
+}
+
+/// Artifact of [`Pipeline::sweep`]: every point of a lookup-bit sweep.
+pub struct Swept {
+    #[allow(dead_code)]
+    settings: Settings,
+    pub workload: Workload,
+    pub points: Vec<SweepPoint>,
+}
+
+impl Swept {
+    /// The best synthesizable point under `objective` (NaN-safe; `None`
+    /// when nothing in the range was feasible).
+    pub fn best(&self, objective: LubObjective) -> Option<&SweepPoint> {
+        best_by_objective(&self.points, objective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staged_and_end_to_end_agree() {
+        let staged = Pipeline::function("recip")
+            .bits(8)
+            .lub(4)
+            .prepare()
+            .unwrap()
+            .generate()
+            .unwrap()
+            .explore()
+            .unwrap()
+            .synthesize()
+            .verify()
+            .unwrap();
+        let direct = Pipeline::function("recip").bits(8).lub(4).run().unwrap();
+        assert_eq!(staged.implementation.coeffs, direct.implementation.coeffs);
+        assert_eq!(staged.synth, direct.synth);
+        assert!(staged.report.ok());
+    }
+
+    #[test]
+    fn unknown_function_is_structured() {
+        match Pipeline::function("tan").bits(8).prepare() {
+            Err(PipelineError::UnknownFunction(name)) => assert_eq!(name, "tan"),
+            other => panic!("expected UnknownFunction, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn infeasible_generation_names_the_region() {
+        let err = Pipeline::function("recip")
+            .bits(8)
+            .lub(0)
+            .prepare()
+            .unwrap()
+            .generate()
+            .unwrap_err();
+        match err {
+            PipelineError::Generation { lookup_bits: 0, source } => match source {
+                GenError::InfeasibleRegion { .. } | GenError::KExhausted { .. } => {}
+            },
+            other => panic!("expected Generation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn verify_failure_carries_counterexample() {
+        let mut explored = Pipeline::function("exp2")
+            .bits(8)
+            .lub(4)
+            .prepare()
+            .unwrap()
+            .generate()
+            .unwrap()
+            .explore()
+            .unwrap();
+        let k = explored.implementation.k;
+        explored.implementation.coeffs[7].c += 64 << k;
+        match explored.synthesize().verify() {
+            Err(PipelineError::VerifyFailed { counterexample, report }) => {
+                assert!(report.violations > 0);
+                assert_eq!(counterexample >> 4, 7, "counterexample not in region 7");
+            }
+            other => panic!("expected VerifyFailed, got {:?}", other.err().map(|e| e.to_string())),
+        }
+    }
+
+    #[test]
+    fn auto_lub_picks_a_feasible_point() {
+        let v = Pipeline::function("log2")
+            .bits(10)
+            .auto_lub(LubObjective::AreaDelay)
+            .threads(2)
+            .run()
+            .unwrap();
+        assert!(v.report.ok());
+        let range = default_r_range(10);
+        assert!(range.contains(&v.implementation.lookup_bits));
+    }
+
+    #[test]
+    fn custom_function_flows_through() {
+        let f = CustomF64 {
+            name: "half_x".into(),
+            in_bits: 8,
+            out_bits: 8,
+            f: |x: f64| 0.5 * x,
+            margin: 1e-9,
+        };
+        let v = Pipeline::custom(Box::new(f)).lub(3).run().unwrap();
+        assert!(v.report.ok());
+        assert_eq!(v.implementation.func, "half_x");
+    }
+
+    #[test]
+    fn sweep_exposes_every_point() {
+        let swept = Pipeline::function("exp2").bits(8).threads(2).sweep().unwrap();
+        assert_eq!(swept.points.len(), default_r_range(8).len());
+        let best = swept.best(LubObjective::Area).expect("some R feasible");
+        assert!(best.synth.is_some());
+    }
+}

@@ -9,10 +9,11 @@ use std::time::{Duration, Instant};
 use crate::baselines::dw_family;
 use crate::baselines::flopoco::flopoco_like;
 use crate::bounds::AccuracySpec;
-use crate::coordinator::{best_by_adp, default_r_range, sweep_lub, Workload};
+use crate::coordinator::{default_r_range, LubObjective, Workload};
 use crate::designspace::extrema::SearchStrategy;
 use crate::designspace::{generate, GenOptions};
-use crate::dse::{explore, Degree, DseOptions};
+use crate::dse::Degree;
+use crate::pipeline::Pipeline;
 use crate::synth::sweep as synth_sweep;
 
 /// Simple timing helper for the bench harnesses (criterion is not
@@ -58,17 +59,10 @@ pub fn table1(sizes: &[(&str, u32)], threads: usize) -> String {
     );
     let mut adp_ratios = Vec::new();
     for &(name, bits) in sizes {
-        let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
         let t0 = Instant::now();
-        let pts = sweep_lub(
-            &w,
-            &default_r_range(bits),
-            &GenOptions::default(),
-            &DseOptions::default(),
-            threads,
-        );
+        let swept = Pipeline::function(name).bits(bits).threads(threads).sweep().unwrap();
         let runtime = t0.elapsed();
-        let Some(best) = best_by_adp(&pts) else {
+        let Some(best) = swept.best(LubObjective::AreaDelay) else {
             let _ = writeln!(out, "{name:<8} {bits:>4} | infeasible in sweep range");
             continue;
         };
@@ -79,7 +73,7 @@ pub fn table1(sizes: &[(&str, u32)], threads: usize) -> String {
             best.lookup_bits,
             if im.degree == Degree::Linear { "lin" } else { "quad" }
         );
-        let fam = dw_family(w.func.as_ref());
+        let fam = dw_family(swept.workload.func.as_ref());
         let dw = fam.min_delay_point();
         let (dws, ratio) = match dw {
             Some((dp, _)) => {
@@ -128,17 +122,18 @@ pub fn table2(cases: &[(&str, u32, u32)]) -> String {
         "func", "bits", "LUB", "FloPoCo-like", "Proposed"
     );
     for &(name, bits, lub) in cases {
-        let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
-        let fp = flopoco_like(w.func.as_ref(), lub, Degree::Quadratic);
-        let ours = generate(&w.bt, &GenOptions { lookup_bits: lub, ..Default::default() })
-            .ok()
-            .and_then(|ds| {
-                explore(
-                    &w.bt,
-                    &ds,
-                    &DseOptions { degree: Some(Degree::Quadratic), ..Default::default() },
-                )
-            });
+        let prepared = Pipeline::function(name)
+            .bits(bits)
+            .lub(lub)
+            .degree(Degree::Quadratic)
+            .prepare()
+            .unwrap();
+        let fp = flopoco_like(prepared.workload.func.as_ref(), lub, Degree::Quadratic);
+        let ours = prepared
+            .generate()
+            .and_then(|spaced| spaced.explore())
+            .map(|explored| explored.implementation)
+            .ok();
         let fps = fp.map(|im| im.lut_width_label()).unwrap_or_else(|| "-".into());
         let os = ours.map(|im| im.lut_width_label()).unwrap_or_else(|| "-".into());
         let _ = writeln!(out, "{name:<8} {bits:>4} {lub:>4} | {fps:>18} | {os:>18}");
@@ -150,12 +145,17 @@ pub fn table2(cases: &[(&str, u32, u32)]) -> String {
 /// DesignWare-like family re-selected per delay target. Returns
 /// `(text, csv)`.
 pub fn fig2(name: &str, bits: u32, lub: u32, npoints: usize) -> (String, String) {
-    let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
-    let ds = generate(&w.bt, &GenOptions { lookup_bits: lub, ..Default::default() })
-        .unwrap_or_else(|e| panic!("{name}/{bits} R={lub}: {e}"));
-    let im = explore(&w.bt, &ds, &DseOptions::default()).unwrap();
-    let ours = synth_sweep(&im, npoints, 2.5);
-    let fam = dw_family(w.func.as_ref());
+    let explored = Pipeline::function(name)
+        .bits(bits)
+        .lub(lub)
+        .prepare()
+        .unwrap()
+        .generate()
+        .unwrap_or_else(|e| panic!("{name}/{bits}: {e}"))
+        .explore()
+        .unwrap_or_else(|e| panic!("{name}/{bits}: {e}"));
+    let ours = synth_sweep(&explored.implementation, npoints, 2.5);
+    let fam = dw_family(explored.workload.func.as_ref());
 
     let mut text = format!(
         "FIG 2 — area-delay profile: {name} {bits}-bit, {lub} lookup bits vs DW-like\n"
@@ -188,14 +188,8 @@ pub fn fig2(name: &str, bits: u32, lub: u32, npoints: usize) -> (String, String)
 /// Fig. 3: area-delay points at minimum delay for every feasible LUT
 /// height (plus the DW-like reference point). Returns `(text, csv)`.
 pub fn fig3(name: &str, bits: u32, threads: usize) -> (String, String) {
-    let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
-    let pts = sweep_lub(
-        &w,
-        &default_r_range(bits),
-        &GenOptions::default(),
-        &DseOptions::default(),
-        threads,
-    );
+    let swept = Pipeline::function(name).bits(bits).threads(threads).sweep().unwrap();
+    let pts = &swept.points;
     let mut text = format!("FIG 3 — min-delay area/delay per LUT height: {name} {bits}-bit\n");
     let mut csv = String::from("lub,degree,delay_ns,area_um2,adp,k,lin_feasible\n");
     let _ = writeln!(
@@ -203,7 +197,7 @@ pub fn fig3(name: &str, bits: u32, threads: usize) -> (String, String) {
         "{:>4} {:>6} {:>9} {:>10} {:>10} {:>3}",
         "LUB", "deg", "delay ns", "area um2", "a*d", "k"
     );
-    for p in &pts {
+    for p in pts {
         match (&p.implementation, &p.synth) {
             (Some(im), Some(sp)) => {
                 let deg = if im.degree == Degree::Linear { "lin" } else { "quad" };
@@ -229,7 +223,7 @@ pub fn fig3(name: &str, bits: u32, threads: usize) -> (String, String) {
             }
         }
     }
-    if let Some((dp, dim)) = dw_family(w.func.as_ref()).min_delay_point() {
+    if let Some((dp, dim)) = dw_family(swept.workload.func.as_ref()).min_delay_point() {
         let _ = writeln!(
             text,
             "{:>4} {:>6} {:>9.3} {:>10.1} {:>10.1}   (DW-like, R{})",
@@ -326,6 +320,9 @@ pub fn scaling(name: &str, bits: u32, rs: &[u32]) -> String {
 /// E8: smallest LUT height at which a *linear* interpolator suffices
 /// (paper §II: `0 in [a0, a1]` in every region).
 pub fn linear_threshold(name: &str, bits: u32) -> String {
+    // Generation-layer probe (like claim_ii1/scaling): build the bound
+    // table once and generate per R, rather than re-preparing a pipeline
+    // for every height.
     let w = Workload::prepare(name, bits, AccuracySpec::Ulp(1)).unwrap();
     for r in default_r_range(bits) {
         if let Ok(ds) = generate(&w.bt, &GenOptions { lookup_bits: r, ..Default::default() }) {

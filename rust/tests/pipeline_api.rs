@@ -1,0 +1,165 @@
+//! Integration tests for the `polygen::pipeline` surface: the staged
+//! builder, structured errors, RTL emission, disk-cache reuse, and batch
+//! job execution — the API contract DESIGN.md §5 commits to.
+
+use polygen::pipeline::{
+    Batch, JobSpec, LookupBits, LubObjective, Pipeline, PipelineError,
+};
+
+/// A staged run exposes every intermediate artifact, and the end-to-end
+/// `run()` reaches the same implementation.
+#[test]
+fn staged_artifacts_are_inspectable() {
+    let prepared = Pipeline::function("log2").bits(10).lub(5).prepare().unwrap();
+    assert_eq!(prepared.workload.bt.in_bits, 10);
+
+    let spaced = prepared.generate().unwrap();
+    assert_eq!(spaced.space.regions.len(), 32);
+    assert!(spaced.space.num_ab_pairs() > 0);
+
+    let explored = spaced.explore().unwrap();
+    assert_eq!(explored.implementation.coeffs.len(), 32);
+
+    let synthesized = explored.synthesize();
+    assert!(synthesized.synth.delay_ns > 0.0 && synthesized.synth.area_um2 > 0.0);
+
+    let verified = synthesized.verify().unwrap();
+    assert!(verified.report.ok());
+    assert_eq!(verified.report.total, 1 << 10);
+
+    let direct = Pipeline::function("log2").bits(10).lub(5).run().unwrap();
+    assert_eq!(direct.implementation.coeffs, verified.implementation.coeffs);
+}
+
+/// The pipeline's generation stage reuses the coordinator disk cache:
+/// a second run parses the `.pgds` file and must drive the DSE to the
+/// identical implementation.
+#[test]
+fn cache_dir_roundtrips_through_pipeline() {
+    let dir = std::env::temp_dir().join(format!("polygen_pipe_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let run = || {
+        Pipeline::function("exp2")
+            .bits(8)
+            .lub(4)
+            .cache_dir(&dir)
+            .run()
+            .unwrap()
+    };
+    let first = run();
+    assert!(
+        std::fs::read_dir(&dir).unwrap().count() > 0,
+        "no cache file written"
+    );
+    let second = run(); // cache hit
+    assert_eq!(first.implementation.coeffs, second.implementation.coeffs);
+    assert_eq!(first.space.k, second.space.k);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Verilog emission from the verified stage writes the module and (with
+/// `testbench(true)`) the self-checking testbench + golden vector.
+#[test]
+fn emit_rtl_writes_all_artifacts() {
+    let dir = std::env::temp_dir().join(format!("polygen_pipe_rtl_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let verified = Pipeline::function("recip")
+        .bits(8)
+        .lub(4)
+        .testbench(true)
+        .run()
+        .unwrap();
+    let emitted = verified.emit_rtl(&dir).unwrap();
+    assert_eq!(emitted.module, "recip_8b_r4");
+    // module + tb + golden + recip behavioural reference
+    assert_eq!(emitted.files.len(), 4, "{:?}", emitted.files);
+    for f in &emitted.files {
+        assert!(f.exists(), "{} missing", f.display());
+    }
+    let v = std::fs::read_to_string(dir.join("recip_8b_r4.v")).unwrap();
+    assert!(v.contains("module recip_8b_r4"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every fallible stage returns `Result<_, PipelineError>` with the
+/// cause attached — no bare `Option` anywhere on the public path.
+#[test]
+fn errors_carry_their_cause() {
+    // Unknown function at prepare().
+    let e = Pipeline::function("cosh").bits(8).prepare().err().unwrap();
+    assert!(matches!(e, PipelineError::UnknownFunction(ref n) if n == "cosh"), "{e}");
+
+    // Infeasible generation at generate(), with the failing R attached.
+    let e = Pipeline::function("recip")
+        .bits(10)
+        .lub(1)
+        .prepare()
+        .unwrap()
+        .generate()
+        .err()
+        .unwrap();
+    assert!(matches!(e, PipelineError::Generation { lookup_bits: 1, .. }), "{e}");
+
+    // Auto selection over an all-infeasible range reports the sweep.
+    let e = Pipeline::function("recip")
+        .bits(10)
+        .auto_lub(LubObjective::AreaDelay)
+        .sweep_range(vec![0, 1])
+        .run()
+        .err()
+        .unwrap();
+    match e {
+        PipelineError::SweepExhausted { func, tried, last } => {
+            assert_eq!(func, "recip");
+            assert_eq!(tried, vec![0, 1]);
+            assert!(last.is_some(), "generation failures should surface");
+        }
+        other => panic!("expected SweepExhausted, got {other}"),
+    }
+}
+
+/// Job specs written to disk as TOML drive the same pipeline (the
+/// `polygen batch` flow), and batch results line up with their specs.
+#[test]
+fn jobspec_files_drive_batch() {
+    let dir = std::env::temp_dir().join(format!("polygen_jobs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut specs = Vec::new();
+    for (func, lub) in [("recip", 4u32), ("exp2", 4)] {
+        let mut s = JobSpec::new(func, 8);
+        s.lookup = LookupBits::Fixed(lub);
+        let path = dir.join(format!("{}.toml", s.label()));
+        std::fs::write(&path, s.to_toml()).unwrap();
+        // Reload from disk — the file, not the in-memory spec, is the input.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let loaded = JobSpec::from_toml(&text).unwrap();
+        assert_eq!(loaded, s);
+        specs.push(loaded);
+    }
+    let cache = dir.join("cache");
+    let results = Batch::new().threads(2).cache_dir(&cache).execute(&specs);
+    assert_eq!(results.len(), 2);
+    for (spec, res) in specs.iter().zip(&results) {
+        let job = res.as_ref().unwrap_or_else(|e| panic!("{}: {e}", spec.label()));
+        assert_eq!(job.func, spec.func);
+        assert!(job.verify.as_ref().unwrap().ok());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Auto lookup-bit selection agrees with an explicit sweep's best point.
+#[test]
+fn auto_lub_matches_manual_sweep() {
+    let auto = Pipeline::function("exp2")
+        .bits(8)
+        .auto_lub(LubObjective::AreaDelay)
+        .run()
+        .unwrap();
+    let swept = Pipeline::function("exp2").bits(8).sweep().unwrap();
+    let best = swept.best(LubObjective::AreaDelay).unwrap();
+    assert_eq!(auto.implementation.lookup_bits, best.lookup_bits);
+    assert_eq!(
+        &auto.implementation.coeffs,
+        &best.implementation.as_ref().unwrap().coeffs
+    );
+}
