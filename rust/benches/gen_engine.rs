@@ -1,0 +1,183 @@
+//! Reproducible perf harness for the generation engine (§Perf: envelope
+//! enumeration). Times complete-space generation for recip/log2/exp2 at
+//! 12/14/16 bits over several `R`, single- and multi-threaded, plus the
+//! retained pre-envelope oracle engine (`generate_naive`) on flagged
+//! workloads — both engines measured in the same run, with their spaces
+//! checked identical. Writes machine-readable `BENCH_gen.json` at the
+//! repository root so the perf trajectory is tracked across PRs.
+//!
+//! ```text
+//! cargo bench --bench gen_engine             # full run
+//! cargo bench --bench gen_engine -- --smoke  # CI smoke profile
+//! ```
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use polygen::bounds::{builtin, AccuracySpec, BoundTable};
+use polygen::designspace::{generate, generate_naive, DesignSpace, GenOptions};
+
+struct Case {
+    func: &'static str,
+    bits: u32,
+    r: u32,
+    /// Also time the pre-envelope oracle (slow at 16 bits — flagged).
+    with_naive: bool,
+}
+
+const fn case(func: &'static str, bits: u32, r: u32, with_naive: bool) -> Case {
+    Case { func, bits, r, with_naive }
+}
+
+const FULL: &[Case] = &[
+    case("recip", 12, 5, true),
+    case("recip", 14, 6, true),
+    case("recip", 16, 6, true),
+    case("log2", 12, 5, false),
+    case("log2", 14, 6, false),
+    case("log2", 16, 7, true),
+    case("exp2", 12, 5, false),
+    case("exp2", 14, 6, false),
+    case("exp2", 16, 6, false),
+];
+
+const SMOKE: &[Case] = &[case("recip", 12, 5, true), case("log2", 12, 5, false)];
+
+fn time_median<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
+    let mut times = Vec::with_capacity(reps);
+    let t0 = Instant::now();
+    let mut out = f();
+    times.push(t0.elapsed().as_secs_f64());
+    for _ in 1..reps {
+        let t0 = Instant::now();
+        out = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    (times[times.len() / 2], out)
+}
+
+fn assert_identical(a: &DesignSpace, b: &DesignSpace) {
+    assert_eq!(a.k, b.k, "engines disagree on k");
+    assert_eq!(a.regions.len(), b.regions.len());
+    for (ra, rb) in a.regions.iter().zip(&b.regions) {
+        assert_eq!(ra.entries, rb.entries, "engines disagree in region {}", ra.r);
+        assert_eq!(ra.linear_ok, rb.linear_ok, "engines disagree in region {}", ra.r);
+    }
+}
+
+struct Row {
+    func: &'static str,
+    bits: u32,
+    r: u32,
+    k: u32,
+    ab_pairs: u64,
+    env_1t: f64,
+    env_mt: f64,
+    naive_1t: Option<f64>,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cases = if smoke { SMOKE } else { FULL };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let mut rows: Vec<Row> = Vec::new();
+
+    for c in cases {
+        let f = builtin(c.func, c.bits).expect("builtin function");
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let o1 = GenOptions { lookup_bits: c.r, threads: 1, ..Default::default() };
+        let omt = GenOptions { lookup_bits: c.r, threads, ..Default::default() };
+        let reps = if smoke || c.bits >= 16 { 1 } else { 3 };
+
+        let (env_1t, ds) = time_median(reps, || generate(&bt, &o1));
+        let ds = match ds {
+            Ok(ds) => ds,
+            Err(e) => {
+                println!("{:>5} {:>2}b R={}  SKIPPED: {e}", c.func, c.bits, c.r);
+                continue;
+            }
+        };
+        let (env_mt, ds_mt) = time_median(reps, || generate(&bt, &omt).expect("mt generation"));
+        assert_identical(&ds, &ds_mt);
+
+        let naive_1t = if c.with_naive {
+            let (t, nds) =
+                time_median(1, || generate_naive(&bt, &o1).expect("oracle generation"));
+            assert_identical(&ds, &nds);
+            Some(t)
+        } else {
+            None
+        };
+
+        let speedup = naive_1t.map(|t| t / env_1t.max(1e-12));
+        println!(
+            "{:>5} {:>2}b R={}  k={:<2} pairs={:<9} env_1t={:>8.2} ms  env_{}t={:>8.2} ms{}",
+            c.func,
+            c.bits,
+            c.r,
+            ds.k,
+            ds.num_ab_pairs(),
+            env_1t * 1e3,
+            threads,
+            env_mt * 1e3,
+            match (naive_1t, speedup) {
+                (Some(t), Some(s)) => format!("  naive_1t={:>9.2} ms  speedup={s:.2}x", t * 1e3),
+                _ => String::new(),
+            }
+        );
+        rows.push(Row {
+            func: c.func,
+            bits: c.bits,
+            r: c.r,
+            k: ds.k,
+            ab_pairs: ds.num_ab_pairs(),
+            env_1t,
+            env_mt,
+            naive_1t,
+        });
+    }
+
+    // Machine-readable trajectory record at the repository root.
+    let headline = rows
+        .iter()
+        .find(|r| r.func == "recip" && r.bits == 16 && r.r == 6)
+        .and_then(|r| r.naive_1t.map(|t| t / r.env_1t.max(1e-12)));
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"gen_engine\",");
+    let _ = writeln!(json, "  \"harness\": \"cargo-bench\",");
+    let _ = writeln!(json, "  \"mode\": \"{}\",", if smoke { "smoke" } else { "full" });
+    let _ = writeln!(json, "  \"threads_multi\": {threads},");
+    let _ = writeln!(
+        json,
+        "  \"headline_speedup_recip16_r6\": {},",
+        headline.map_or("null".to_string(), |s| format!("{s:.3}"))
+    );
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"func\": \"{}\", \"bits\": {}, \"lookup_bits\": {}, \"k\": {}, \
+             \"ab_pairs\": {}, \"envelope_1t_s\": {:.6}, \"envelope_mt_s\": {:.6}, \
+             \"naive_1t_s\": {}, \"speedup_vs_naive\": {}}}{}",
+            r.func,
+            r.bits,
+            r.r,
+            r.k,
+            r.ab_pairs,
+            r.env_1t,
+            r.env_mt,
+            r.naive_1t.map_or("null".to_string(), |t| format!("{t:.6}")),
+            r.naive_1t.map_or("null".to_string(), |t| format!("{:.3}", t / r.env_1t.max(1e-12))),
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    json.push_str("}\n");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gen.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

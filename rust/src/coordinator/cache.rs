@@ -145,6 +145,7 @@ pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, opts: &GenOpt
     let strategy = match opts.search {
         SearchStrategy::Naive => "naive",
         SearchStrategy::Pruned => "pruned",
+        SearchStrategy::Hull => "hull",
     };
     dir.join(format!(
         "{func}_{acc}_{in_bits}b_R{}_{strategy}_k{}.pgds",

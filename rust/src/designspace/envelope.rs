@@ -1,0 +1,313 @@
+//! Line envelopes (convex-hull trick) — the §Perf substrate of the
+//! generation engine (see DESIGN.md, "§Perf: envelope enumeration").
+//!
+//! Two families of bounds in the generator are maxima/minima of *lines*,
+//! so they can be swept instead of rescanned:
+//!
+//! - Eqns 3/4 collapsed onto diagonals: `B_lo(a) = max_t (2^k M(t) - a t)`.
+//!   Dividing by `2^k`, each diagonal `t` contributes the `k`-independent
+//!   line `y = M(t) - t x` queried at `x = a / 2^k`, so the per-`a` scan
+//!   over all diagonals is one upper-envelope query ([`RatEnvelope`]).
+//! - Eqn 1: `C_lo(b) = max_x (2^k L(x) - a T_i(x) - b S_j(x))`. Each
+//!   interpolation point `x` contributes the all-integer line
+//!   `y = (2^k L(x) - a T_i(x)) - S_j(x) b` ([`IntEnvelope`]).
+//!
+//! Envelopes are built once in O(N) from slope-sorted lines, then queried
+//! either with a monotone cursor (O(1) amortized over an ascending integer
+//! sweep — the `a`/`b` enumeration loops) or by binary search (O(log N)
+//! for isolated points). All comparisons are exact: rational intercepts
+//! cross-multiply through [`Rat`], integer lines stay in `i128`.
+//!
+//! Magnitude analysis (documented per call site, debug-asserted here):
+//! intercepts of the Eqn 3/4 lines are diagonal extrema with numerators
+//! `< 2^33` and denominators `< 2^24`; breakpoints are differences of two
+//! such over a slope gap `< 2^25`, so every cross product stays well
+//! inside `i128`. Eqn 1 lines have `|icept| < 2^94` and `|slope| < 2^24`
+//! in the worst supported format, leaving the hull-domination products
+//! `< 2^119`.
+
+use crate::rational::Rat;
+
+/// A line `y = icept + slope * x` with an exact rational intercept.
+#[derive(Clone, Copy, Debug)]
+pub struct RatLine {
+    pub slope: i64,
+    pub icept: Rat,
+}
+
+/// Upper envelope (pointwise max) of [`RatLine`]s.
+#[derive(Clone, Debug)]
+pub struct RatEnvelope {
+    hull: Vec<RatLine>,
+}
+
+impl RatEnvelope {
+    /// Build from lines with non-decreasing slopes (equal slopes keep the
+    /// larger intercept). O(N).
+    pub fn upper<I: IntoIterator<Item = RatLine>>(lines: I) -> RatEnvelope {
+        let mut hull: Vec<RatLine> = Vec::new();
+        for l in lines {
+            if let Some(&top) = hull.last() {
+                debug_assert!(top.slope <= l.slope, "slopes must be non-decreasing");
+                if top.slope == l.slope {
+                    if l.icept.le(&top.icept) {
+                        continue;
+                    }
+                    hull.pop();
+                }
+            }
+            while hull.len() >= 2 {
+                let a = hull[hull.len() - 2];
+                let b = hull[hull.len() - 1];
+                // With slopes m_a < m_b < m_l, line b never rises above
+                // both neighbours iff its takeover point from a is at or
+                // past l's: (q_b - q_l)(m_b - m_a) <= (q_a - q_b)(m_l - m_b).
+                let lhs = b.icept.sub(&l.icept).mul(&Rat::int((b.slope - a.slope) as i128));
+                let rhs = a.icept.sub(&b.icept).mul(&Rat::int((l.slope - b.slope) as i128));
+                if lhs.le(&rhs) {
+                    hull.pop();
+                } else {
+                    break;
+                }
+            }
+            hull.push(l);
+        }
+        RatEnvelope { hull }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hull.is_empty()
+    }
+
+    /// Breakpoint `x` from which `hull[i + 1]` dominates `hull[i]`.
+    fn breakpoint(hull: &[RatLine], i: usize) -> Option<Rat> {
+        let a = hull.get(i)?;
+        let b = hull.get(i + 1)?;
+        Some(a.icept.sub(&b.icept).div(&Rat::int((b.slope - a.slope) as i128)))
+    }
+
+    /// A cursor for queries at non-decreasing `x = a / 2^k`.
+    pub fn cursor(&self) -> RatCursor<'_> {
+        RatCursor { hull: &self.hull, idx: 0, next: Self::breakpoint(&self.hull, 0) }
+    }
+}
+
+/// Monotone query cursor over a [`RatEnvelope`].
+pub struct RatCursor<'a> {
+    hull: &'a [RatLine],
+    idx: usize,
+    /// Breakpoint where `hull[idx + 1]` takes over (cached).
+    next: Option<Rat>,
+}
+
+impl<'a> RatCursor<'a> {
+    /// The envelope's maximizing line at `x = a / 2^k`. Query points must
+    /// be non-decreasing across calls on one cursor; at a breakpoint both
+    /// adjacent lines are equal-valued and either may be returned.
+    pub fn line_at(&mut self, a: i64, k: u32) -> &'a RatLine {
+        loop {
+            // Advance while a / 2^k >= t  <=>  a * t.den >= t.num * 2^k.
+            let advance = match &self.next {
+                Some(t) => {
+                    debug_assert!(
+                        (a as i128).checked_mul(t.den()).is_some()
+                            && t.num().checked_mul(1i128 << k).is_some(),
+                        "RatCursor breakpoint comparison overflow"
+                    );
+                    (a as i128) * t.den() >= t.num() * (1i128 << k)
+                }
+                None => false,
+            };
+            if !advance {
+                break;
+            }
+            self.idx += 1;
+            self.next = RatEnvelope::breakpoint(self.hull, self.idx);
+        }
+        &self.hull[self.idx]
+    }
+}
+
+/// A line `y = icept + slope * x` over integers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IntLine {
+    pub slope: i128,
+    pub icept: i128,
+}
+
+#[inline]
+fn value(l: IntLine, x: i64) -> i128 {
+    l.icept + l.slope * x as i128
+}
+
+/// Upper envelope (pointwise max) of [`IntLine`]s.
+#[derive(Clone, Debug)]
+pub struct IntEnvelope {
+    hull: Vec<IntLine>,
+}
+
+impl IntEnvelope {
+    /// Build from lines with non-decreasing slopes (equal slopes keep the
+    /// larger intercept). O(N).
+    pub fn upper<I: IntoIterator<Item = IntLine>>(lines: I) -> IntEnvelope {
+        let mut hull: Vec<IntLine> = Vec::new();
+        for l in lines {
+            if let Some(&top) = hull.last() {
+                debug_assert!(top.slope <= l.slope, "slopes must be non-decreasing");
+                if top.slope == l.slope {
+                    if l.icept <= top.icept {
+                        continue;
+                    }
+                    hull.pop();
+                }
+            }
+            while hull.len() >= 2 {
+                let a = hull[hull.len() - 2];
+                let b = hull[hull.len() - 1];
+                debug_assert!(
+                    (b.icept - l.icept).checked_mul(b.slope - a.slope).is_some()
+                        && (a.icept - b.icept).checked_mul(l.slope - b.slope).is_some(),
+                    "IntEnvelope domination overflow"
+                );
+                if (b.icept - l.icept) * (b.slope - a.slope)
+                    <= (a.icept - b.icept) * (l.slope - b.slope)
+                {
+                    hull.pop();
+                } else {
+                    break;
+                }
+            }
+            hull.push(l);
+        }
+        IntEnvelope { hull }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hull.is_empty()
+    }
+
+    /// Envelope (max) value at `x`, by binary search over the hull —
+    /// line values at fixed `x` are unimodal in hull order.
+    pub fn eval(&self, x: i64) -> i128 {
+        let h = &self.hull;
+        let (mut lo, mut hi) = (0usize, h.len() - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if value(h[mid + 1], x) >= value(h[mid], x) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        value(h[lo], x)
+    }
+
+    /// A cursor for queries at non-decreasing integer `x`.
+    pub fn cursor(&self) -> IntCursor<'_> {
+        IntCursor { hull: &self.hull, idx: 0 }
+    }
+}
+
+/// Monotone query cursor over an [`IntEnvelope`].
+pub struct IntCursor<'a> {
+    hull: &'a [IntLine],
+    idx: usize,
+}
+
+impl IntCursor<'_> {
+    /// Envelope (max) value at `x`; query points must be non-decreasing
+    /// across calls on one cursor.
+    pub fn max_at(&mut self, x: i64) -> i128 {
+        let h = self.hull;
+        while self.idx + 1 < h.len() && value(h[self.idx + 1], x) >= value(h[self.idx], x) {
+            self.idx += 1;
+        }
+        value(h[self.idx], x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_each_seed;
+
+    fn brute_max_int(lines: &[IntLine], x: i64) -> i128 {
+        lines.iter().map(|&l| value(l, x)).max().unwrap()
+    }
+
+    #[test]
+    fn int_envelope_matches_bruteforce() {
+        for_each_seed(80, |rng| {
+            let n = 1 + rng.below(30) as usize;
+            let mut lines: Vec<IntLine> = (0..n)
+                .map(|_| IntLine {
+                    slope: rng.range_i64(-20, 20) as i128,
+                    icept: rng.range_i64(-500, 500) as i128,
+                })
+                .collect();
+            lines.sort_by_key(|l| l.slope);
+            let env = IntEnvelope::upper(lines.iter().copied());
+            let mut cur = env.cursor();
+            let mut x = -60i64;
+            while x <= 60 {
+                let want = brute_max_int(&lines, x);
+                assert_eq!(env.eval(x), want, "eval at x={x} lines={lines:?}");
+                assert_eq!(cur.max_at(x), want, "cursor at x={x} lines={lines:?}");
+                x += 1 + rng.below(4) as i64;
+            }
+        });
+    }
+
+    #[test]
+    fn int_envelope_handles_duplicate_slopes_and_collinear() {
+        let lines = [
+            IntLine { slope: -1, icept: 3 },
+            IntLine { slope: -1, icept: 7 },
+            IntLine { slope: 0, icept: 5 },
+            IntLine { slope: 1, icept: 3 },
+            IntLine { slope: 1, icept: 3 },
+            IntLine { slope: 2, icept: 1 },
+        ];
+        let env = IntEnvelope::upper(lines.iter().copied());
+        for x in -10i64..=10 {
+            assert_eq!(env.eval(x), brute_max_int(&lines, x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn rat_envelope_matches_bruteforce() {
+        for_each_seed(80, |rng| {
+            let n = 1 + rng.below(20) as usize;
+            // Distinct ascending slopes with random rational intercepts.
+            let mut slope = rng.range_i64(-30, -10);
+            let lines: Vec<RatLine> = (0..n)
+                .map(|_| {
+                    let num = rng.range_i64(-200, 200) as i128;
+                    let den = 1 + rng.below(7) as i128;
+                    let l = RatLine { slope, icept: Rat::new(num, den) };
+                    slope += 1 + rng.range_i64(0, 3);
+                    l
+                })
+                .collect();
+            let env = RatEnvelope::upper(lines.iter().copied());
+            let mut cur = env.cursor();
+            let k = rng.below(4) as u32;
+            let mut a = -40i64;
+            while a <= 40 {
+                // Value at x = a / 2^k, exactly.
+                let at = |l: &RatLine| {
+                    l.icept.add(&Rat::new(l.slope as i128 * a as i128, 1i128 << k))
+                };
+                let want = lines.iter().map(&at).fold(None::<Rat>, |acc, v| {
+                    Some(match acc {
+                        Some(b) if v.lt(&b) => b,
+                        _ => v,
+                    })
+                });
+                let got = at(cur.line_at(a, k));
+                assert_eq!(want.unwrap(), got, "a={a} k={k} lines={lines:?}");
+                a += 1 + rng.below(3) as i64;
+            }
+        });
+    }
+}

@@ -20,13 +20,17 @@
 
 use crate::rational::Rat;
 
-/// Which implementation the generator uses for the Claim II.1-prunable
-/// searches. `Naive` exists for the E5 benchmark and the equivalence
-/// property tests.
+/// Which implementation the generator uses for the Eqn 10 searches (and,
+/// with [`SearchStrategy::Hull`], the diagonal-extrema inner loops).
+/// `Naive` exists for the E5 benchmark and the equivalence property
+/// tests; `Pruned` is the Claim II.1 skip rule; `Hull` is the §Perf
+/// envelope engine ([`max_dd_hull`] + [`diagonal_extrema_fast`]) and the
+/// default. All three are value-identical (property-tested).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum SearchStrategy {
     Naive,
     Pruned,
+    Hull,
 }
 
 /// Result of a 2-D divided-difference search.
@@ -106,6 +110,11 @@ pub fn min_dd(g: &[Rat], h: &[Rat], strategy: SearchStrategy) -> Option<DdMax> {
     let r = match strategy {
         SearchStrategy::Naive => max_dd_naive(&ng, &nh),
         SearchStrategy::Pruned => max_dd_pruned(&ng, &nh),
+        SearchStrategy::Hull => {
+            let gr: Vec<RawFrac> = ng.iter().map(RawFrac::from_rat).collect();
+            let hr: Vec<RawFrac> = nh.iter().map(RawFrac::from_rat).collect();
+            max_dd_hull(&gr, &hr)
+        }
     };
     r.map(|mut b| {
         b.value = b.value.neg();
@@ -138,14 +147,20 @@ impl RawFrac {
     }
 
     /// `self < o` by cross multiplication (both dens > 0).
+    ///
+    /// The fast path multiplies in `i128` directly — the documented
+    /// magnitude envelope (numerators `< 2^60`, denominators `< 2^40`)
+    /// leaves >25 bits of headroom. Beyond the envelope the release build
+    /// no longer silently wraps: on `checked_mul` overflow the comparison
+    /// falls back to reduced [`Rat`]s, whose own comparison widens to
+    /// 256 bits when even the reduced cross products overflow.
     #[inline]
     pub fn lt(&self, o: &RawFrac) -> bool {
         debug_assert!(self.den > 0 && o.den > 0);
-        debug_assert!(
-            self.num.checked_mul(o.den).is_some() && o.num.checked_mul(self.den).is_some(),
-            "RawFrac comparison overflow"
-        );
-        self.num * o.den < o.num * self.den
+        match (self.num.checked_mul(o.den), o.num.checked_mul(self.den)) {
+            (Some(l), Some(r)) => l < r,
+            _ => self.to_rat().lt(&o.to_rat()),
+        }
     }
 
     #[inline]
@@ -187,6 +202,113 @@ pub fn max_dd_fracs(g: &[RawFrac], h: &[RawFrac], pruned: bool) -> Option<DdMax>
             if best.map_or(true, |(b, _, _)| b.lt(&d)) {
                 best = Some((d, x, y));
             }
+        }
+    }
+    best.map(|(v, x, y)| DdMax { value: v.to_rat(), x, y, evals })
+}
+
+/// `max_{x<y} (g(y) - h(x)) / (y - x)` in O(n log n): incremental lower
+/// convex hull of the points `(x, h(x))` plus a tangent binary search
+/// from each query point `(y, g(y))` (§Perf: the Eqn 10 bounds are
+/// max-slope problems, so they can be swept with a hull instead of
+/// rescanned — the same structure Brisebarre & Muller exploit for
+/// truncated-polynomial coefficient bounds).
+///
+/// Correctness: the maximizing `x` for a fixed `y` lies on the lower hull
+/// of the points seen so far, and the slope from the hull to the query
+/// point is unimodal along the hull (each slope to the query is a mediant
+/// of its hull-edge slope and the next slope to the query), so a binary
+/// search on "still ascending" finds the tangent. Value-identical to
+/// [`max_dd_naive`] (property-tested); the `(x, y)` witness may differ on
+/// ties — only the value is contractual. `evals` counts tangent-search
+/// slope comparisons, the hull analogue of `D` evaluations.
+///
+/// All comparisons are exact cross multiplications of gcd-free fractions:
+/// triple products bounded by `2^57 * 2^25 * 2^24 = 2^106` for the widest
+/// supported format. Inputs are magnitude-prechecked once; anything that
+/// could push a triple product past `i128` is routed to the pruned
+/// search, whose comparisons carry a checked overflow fallback —
+/// value-identical, just slower.
+pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
+    let n = g.len();
+    assert_eq!(n, h.len());
+    if n < 2 {
+        return None;
+    }
+    // Worst triple product: (num-diff <= 2^(nb+db+1)) * (index gap
+    // <= 2^xb) * (den <= 2^db) — demand it fits i128 with a sign bit.
+    let bits = |v: i128| 128 - v.unsigned_abs().leading_zeros();
+    let mut nb = 0u32;
+    let mut db = 0u32;
+    for f in g.iter().chain(h.iter()) {
+        nb = nb.max(bits(f.num));
+        db = db.max(bits(f.den));
+    }
+    if nb + 2 * db + bits(n as i128) + 1 > 126 {
+        return max_dd_fracs(g, h, true);
+    }
+    // Referenced from debug_assert! conditions (type-checked, compiled
+    // out of release binaries).
+    fn fits(a: i128, b: i128, c: i128) -> bool {
+        a.checked_mul(b).and_then(|v| v.checked_mul(c)).is_some()
+    }
+    // Lower hull of (x, h(x)), stored as indices into h; consecutive hull
+    // slopes strictly increase.
+    let mut hull: Vec<usize> = Vec::with_capacity(n);
+    let mut best: Option<(RawFrac, usize, usize)> = None;
+    let mut evals = 0u64;
+    for y in 1..n {
+        let p = y - 1; // the newly available point (p, h(p))
+        while hull.len() >= 2 {
+            let i1 = hull[hull.len() - 2];
+            let i2 = hull[hull.len() - 1];
+            let (v1, v2, vp) = (h[i1], h[i2], h[p]);
+            // Pop i2 iff slope(i1, i2) >= slope(i2, p).
+            debug_assert!(
+                fits(v2.num * v1.den - v1.num * v2.den, (p - i2) as i128, vp.den)
+                    && fits(vp.num * v2.den - v2.num * vp.den, (i2 - i1) as i128, v1.den),
+                "hull domination overflow"
+            );
+            let lhs = (v2.num * v1.den - v1.num * v2.den) * ((p - i2) as i128) * vp.den;
+            let rhs = (vp.num * v2.den - v2.num * vp.den) * ((i2 - i1) as i128) * v1.den;
+            if lhs >= rhs {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(p);
+        // Tangent search: maximize slope(hull[i] -> (y, g(y))) over i.
+        let q = g[y];
+        let (mut lo, mut hi) = (0usize, hull.len() - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let (ia, ib) = (hull[mid], hull[mid + 1]);
+            let (va, vb) = (h[ia], h[ib]);
+            evals += 1;
+            // Ascend iff slope(ib, Q) >= slope(ia, Q).
+            debug_assert!(
+                fits(q.num * vb.den - vb.num * q.den, (y - ia) as i128, va.den)
+                    && fits(q.num * va.den - va.num * q.den, (y - ib) as i128, vb.den),
+                "tangent comparison overflow"
+            );
+            let lhs = (q.num * vb.den - vb.num * q.den) * ((y - ia) as i128) * va.den;
+            let rhs = (q.num * va.den - va.num * q.den) * ((y - ib) as i128) * vb.den;
+            if lhs >= rhs {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let ix = hull[lo];
+        let vx = h[ix];
+        let d = RawFrac {
+            num: q.num * vx.den - vx.num * q.den,
+            den: q.den * vx.den * ((y - ix) as i128),
+        };
+        evals += 1;
+        if best.map_or(true, |(b, _, _)| b.lt(&d)) {
+            best = Some((d, ix, y));
         }
     }
     best.map(|(v, x, y)| DdMax { value: v.to_rat(), x, y, evals })
@@ -255,6 +377,54 @@ pub fn diagonal_extrema(l: &[i32], u: &[i32]) -> DiagExtrema {
         }
         big_m.push(best_m.to_rat());
         small_m.push(best_s.to_rat());
+    }
+    DiagExtrema { big_m, small_m }
+}
+
+/// [`diagonal_extrema`] with the inner comparisons kept entirely in `i64`
+/// (§Perf). Bound values are `i32` (numerator magnitudes `<= 2^32`) and
+/// separations are `< 2^24`, so cross products stay below `2^57` — no
+/// `i128` widening in the O(N²) hot loop. Value-identical to [`diagonal_extrema`]
+/// (property-tested), which is retained as the reference for the XLA
+/// extrema kernel cross-checks and the pre-envelope oracle engine.
+pub fn diagonal_extrema_fast(l: &[i32], u: &[i32]) -> DiagExtrema {
+    let n = l.len();
+    assert_eq!(n, u.len());
+    assert!(n >= 2, "diagonal extrema need at least 2 points");
+    debug_assert!(n < (1 << 24), "separation magnitude envelope exceeded");
+    let tmax = 2 * n - 3;
+    let mut big_m = Vec::with_capacity(tmax);
+    let mut small_m = Vec::with_capacity(tmax);
+    for t in 1..=tmax {
+        let x0 = t.saturating_sub(n - 1);
+        let x1 = (t - 1) / 2;
+        // Seed with the first pair so incumbents are always real
+        // candidates (no sentinel whose cross product could overflow).
+        let y0 = t - x0;
+        let d0 = (y0 - x0) as i64;
+        let mut mn = l[y0] as i64 - u[x0] as i64 - 1;
+        let mut md = d0;
+        let mut sn = u[y0] as i64 + 1 - l[x0] as i64;
+        let mut sd = d0;
+        for x in x0 + 1..=x1 {
+            let y = t - x;
+            let d = (y - x) as i64;
+            // M candidate: (l(y) - u(x) - 1) / (y - x), strict improvement
+            // keeps the first maximizer like the reference scan.
+            let a = l[y] as i64 - u[x] as i64 - 1;
+            if a * md > mn * d {
+                mn = a;
+                md = d;
+            }
+            // m candidate: (u(y) + 1 - l(x)) / (y - x).
+            let b = u[y] as i64 + 1 - l[x] as i64;
+            if b * sd < sn * d {
+                sn = b;
+                sd = d;
+            }
+        }
+        big_m.push(Rat::new(mn as i128, md as i128));
+        small_m.push(Rat::new(sn as i128, sd as i128));
     }
     DiagExtrema { big_m, small_m }
 }
@@ -387,6 +557,122 @@ mod tests {
                 assert_eq!(de.small_m[t - 1], bs.unwrap(), "m(t), t={t}, n={n}");
             }
         });
+    }
+
+    #[test]
+    fn hull_search_equals_naive_property() {
+        for_each_seed(80, |rng| {
+            let n = 2 + rng.below(50) as usize;
+            // Mix of integer, collinear, and fractional inputs — collinear
+            // h exercises the hull's equal-slope pops.
+            let (g, h): (Vec<Rat>, Vec<Rat>) = match rng.below(3) {
+                0 => (rand_rats(rng, n, 50), rand_rats(rng, n, 50)),
+                1 => {
+                    let s = rng.range_i64(-3, 3);
+                    let h = (0..n)
+                        .map(|i| Rat::int(s as i128 * i as i128 + rng.below(2) as i128))
+                        .collect();
+                    (rand_rats(rng, n, 20), h)
+                }
+                _ => {
+                    let fr = |rng: &mut Rng| {
+                        Rat::new(rng.range_i64(-60, 60) as i128, 1 + rng.below(9) as i128)
+                    };
+                    let g: Vec<Rat> = (0..n).map(|_| fr(rng)).collect();
+                    let h: Vec<Rat> = (0..n).map(|_| fr(rng)).collect();
+                    (g, h)
+                }
+            };
+            let want = max_dd_naive(&g, &h).unwrap();
+            let gr: Vec<RawFrac> = g.iter().map(RawFrac::from_rat).collect();
+            let hr: Vec<RawFrac> = h.iter().map(RawFrac::from_rat).collect();
+            let got = max_dd_hull(&gr, &hr).unwrap();
+            assert_eq!(got.value, want.value, "g={g:?} h={h:?}");
+        });
+    }
+
+    #[test]
+    fn hull_min_dd_equals_naive() {
+        for_each_seed(30, |rng| {
+            let n = 2 + rng.below(20) as usize;
+            let g = rand_rats(rng, n, 30);
+            let h = rand_rats(rng, n, 30);
+            let want = min_dd(&g, &h, SearchStrategy::Naive).unwrap();
+            let got = min_dd(&g, &h, SearchStrategy::Hull).unwrap();
+            assert_eq!(got.value, want.value);
+        });
+    }
+
+    #[test]
+    fn hull_search_is_sublinear_in_evals() {
+        // On a long input the tangent searches cost O(n log n) total,
+        // far below the naive n^2/2.
+        let n = 512usize;
+        let g: Vec<RawFrac> = (0..n)
+            .map(|i| RawFrac { num: (i as i128 * i as i128) % 97, den: 1 + (i as i128 % 5) })
+            .collect();
+        let h: Vec<RawFrac> = (0..n)
+            .map(|i| RawFrac { num: (7 * i as i128) % 89 - 40, den: 1 + (i as i128 % 3) })
+            .collect();
+        let hull = max_dd_hull(&g, &h).unwrap();
+        let naive_evals = (n * (n - 1) / 2) as u64;
+        assert!(
+            hull.evals * 10 < naive_evals,
+            "expected order-of-magnitude fewer evals: hull={} naive={naive_evals}",
+            hull.evals
+        );
+    }
+
+    #[test]
+    fn hull_falls_back_on_huge_magnitudes() {
+        // Magnitudes beyond the hull's triple-product precheck: the
+        // search must route through the checked pruned path and stay
+        // exact (cross products here need the Rat/U256 fallbacks too).
+        let g: Vec<RawFrac> = (0..6)
+            .map(|i| RawFrac { num: (1i128 << 100) + i as i128, den: (1i128 << 20) + 1 })
+            .collect();
+        let h: Vec<RawFrac> = (0..6)
+            .map(|i| RawFrac { num: -(1i128 << 100) - (i * i) as i128, den: (1i128 << 20) - 1 })
+            .collect();
+        let hull = max_dd_hull(&g, &h).unwrap();
+        let naive = max_dd_fracs(&g, &h, false).unwrap();
+        assert_eq!(hull.value, naive.value);
+    }
+
+    #[test]
+    fn fast_diagonal_extrema_matches_reference() {
+        for_each_seed(40, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let l: Vec<i32> = (0..n).map(|_| rng.range_i64(-300, 300) as i32).collect();
+            let u: Vec<i32> = l.iter().map(|&v| v + rng.range_i64(0, 9) as i32).collect();
+            let a = diagonal_extrema(&l, &u);
+            let b = diagonal_extrema_fast(&l, &u);
+            assert_eq!(a.big_m, b.big_m, "l={l:?} u={u:?}");
+            assert_eq!(a.small_m, b.small_m, "l={l:?} u={u:?}");
+        });
+    }
+
+    #[test]
+    fn raw_frac_lt_survives_overflow_magnitudes() {
+        // The documented envelope is num < 2^60, den < 2^40 (cross
+        // products < 2^100 — fast path). These operands sit far beyond
+        // it: cross products need 131 bits, so the checked fallback must
+        // decide through reduced Rats instead of silently wrapping.
+        let a = RawFrac { num: (1i128 << 90) + 1, den: 1i128 << 40 };
+        let b = RawFrac { num: 1i128 << 90, den: (1i128 << 40) - 1 };
+        // a < b  <=>  (2^90+1)(2^40-1) < 2^130  <=>  2^40 - 1 < 2^90.
+        assert!(a.lt(&b));
+        assert!(!b.lt(&a));
+        assert!(a.le(&b) && !b.le(&a));
+        // Equal values across different representations still compare equal.
+        let a2 = RawFrac { num: ((1i128 << 90) + 1) * 2, den: 1i128 << 41 };
+        assert!(!a.lt(&a2) && !a2.lt(&a));
+        // At the documented envelope edge the fast path still runs and
+        // agrees with the exact Rat ordering.
+        let c = RawFrac { num: (1i128 << 60) - 1, den: (1i128 << 40) - 1 };
+        let d = RawFrac { num: (1i128 << 60) - 3, den: (1i128 << 40) - 3 };
+        assert_eq!(c.lt(&d), c.to_rat().lt(&d.to_rat()));
+        assert_eq!(d.lt(&c), d.to_rat().lt(&c.to_rat()));
     }
 
     #[test]

@@ -7,12 +7,17 @@
 //! surplus `k` that is feasible across **all** regions (the paper keeps `k`
 //! constant across regions).
 
+pub mod envelope;
 pub mod extrema;
 pub mod region;
 
 use crate::bounds::BoundTable;
+use crate::pool::run_indexed;
 use extrema::{DiagExtrema, SearchStrategy};
-use region::{min_feasible_k, region_space_at_k, RegionAnalysis, RegionSpace};
+use region::{
+    min_feasible_k, min_feasible_k_naive, region_space_at_k, region_space_at_k_naive,
+    RegionAnalysis, RegionSpace,
+};
 
 /// Callback that can supply diagonal extrema for a region's bound slices
 /// (e.g. the XLA-offloaded kernel in `runtime::extrema`). Returning `None`
@@ -26,7 +31,8 @@ pub type ExtremaProvider<'a> = dyn Fn(&[i32], &[i32]) -> Option<DiagExtrema> + '
 pub struct GenOptions {
     /// The paper's `R`: number of lookup bits / log2 of the region count.
     pub lookup_bits: u32,
-    /// Naive or Claim II.1-pruned Eqn 10 searches.
+    /// Eqn 10 search implementation: the hull engine (default), Claim
+    /// II.1-pruned, or naive — all value-identical.
     pub search: SearchStrategy,
     /// Give up if no common `k <= max_k` exists.
     pub max_k: u32,
@@ -37,7 +43,7 @@ pub struct GenOptions {
 
 impl Default for GenOptions {
     fn default() -> Self {
-        GenOptions { lookup_bits: 6, search: SearchStrategy::Pruned, max_k: 30, threads: 1 }
+        GenOptions { lookup_bits: 6, search: SearchStrategy::Hull, max_k: 30, threads: 1 }
     }
 }
 
@@ -127,29 +133,18 @@ pub fn generate_with(
     assert!(opts.lookup_bits <= bt.in_bits);
     let nregions = 1u64 << opts.lookup_bits;
 
-    // Phase 1: per-region real analysis (embarrassingly parallel).
-    let analyses = analyze_all(bt, opts, provider, nregions);
+    // Phases 1 + 2: per-region analysis, then the common k.
+    let (analyses, k) = analyze_and_common_k(bt, opts, provider, nregions)?;
 
-    // Phase 2: common k = max over regions of the per-region minimum.
-    let mut k = 0u32;
-    for an in &analyses {
-        if !an.feasible {
-            return Err(GenError::InfeasibleRegion { r: an.r });
-        }
-        match min_feasible_k(an, opts.max_k) {
-            Some(kr) => k = k.max(kr),
-            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
-        }
-    }
-
-    // Phase 3: enumerate every region at the common k. Feasibility at the
-    // per-region minimal k implies feasibility at the (>=) common k.
-    let mut regions = Vec::with_capacity(nregions as usize);
-    for an in &analyses {
-        let sp = region_space_at_k(an, k)
-            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r));
-        regions.push(sp);
-    }
+    // Phase 3: enumerate every region at the common k (work-stealing over
+    // regions — enumeration cost is as non-uniform as analysis cost).
+    // Feasibility at the per-region minimal k implies feasibility at the
+    // (>=) common k.
+    let regions = run_indexed(nregions as usize, opts.threads, |i| {
+        let an = &analyses[i];
+        region_space_at_k(an, k)
+            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r))
+    });
 
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
     Ok(DesignSpace {
@@ -165,53 +160,144 @@ pub fn generate_with(
     })
 }
 
+/// Phases 1 + 2: analyze every region and find the common `k` (the max
+/// over regions of the per-region minimum) — everything feasibility
+/// depends on, without materializing any region space. Shared by
+/// [`generate_with`] and the existence probes of [`min_lookup_bits`].
+fn analyze_and_common_k(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    provider: Option<&ExtremaProvider<'_>>,
+    nregions: u64,
+) -> Result<(Vec<RegionAnalysis>, u32), GenError> {
+    let analyses = analyze_all(bt, opts, provider, nregions);
+    let mut k = 0u32;
+    for an in &analyses {
+        if !an.feasible {
+            return Err(GenError::InfeasibleRegion { r: an.r });
+        }
+        match min_feasible_k(an, opts.max_k) {
+            Some(kr) => k = k.max(kr),
+            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
+        }
+    }
+    Ok((analyses, k))
+}
+
 fn analyze_all(
     bt: &BoundTable,
     opts: &GenOptions,
     provider: Option<&ExtremaProvider<'_>>,
     nregions: u64,
 ) -> Vec<RegionAnalysis> {
-    let analyze_one = |r: u64| -> RegionAnalysis {
-        let (l, u) = bt.region(opts.lookup_bits, r);
-        let diag = provider.and_then(|p| p(l, u));
-        region::analyze_region(r, l, u, opts.search, diag)
-    };
-
     if opts.threads <= 1 || nregions <= 1 || provider.is_some() {
+        // Sequential (and the only branch that may consult the non-Sync
+        // provider).
+        let analyze_one = |r: u64| -> RegionAnalysis {
+            let (l, u) = bt.region(opts.lookup_bits, r);
+            let diag = provider.and_then(|p| p(l, u));
+            region::analyze_region(r, l, u, opts.search, diag)
+        };
         return (0..nregions).map(analyze_one).collect();
     }
 
-    // Static chunking over a scoped thread pool: regions are uniform cost.
-    // (No provider here — the sequential branch above handled that case —
-    // so the closure we share across threads is Sync.)
-    let analyze_sync = |r: u64| -> RegionAnalysis {
-        let (l, u) = bt.region(opts.lookup_bits, r);
-        region::analyze_region(r, l, u, opts.search, None)
+    // Work-stealing over regions (shared with `pipeline::Batch`): region
+    // cost is *not* uniform — Claim II.1 pruning and the hull tangent
+    // searches fire unevenly — so workers pull from a shared cursor
+    // instead of static chunks. Results are indexed, so the output is
+    // thread-count independent.
+    run_indexed(nregions as usize, opts.threads, |i| {
+        let (l, u) = bt.region(opts.lookup_bits, i as u64);
+        region::analyze_region(i as u64, l, u, opts.search, None)
+    })
+}
+
+/// The pre-envelope reference engine, kept verbatim as the oracle: linear
+/// `k` scan with full re-enumeration at every step, per-candidate
+/// diagonal rescans, sequential phase 3. Value-identical to [`generate`]
+/// (property-tested); the `gen_engine` bench measures both in one run.
+/// `SearchStrategy::Hull` is mapped to the pre-envelope default `Pruned`.
+pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
+    assert!(opts.lookup_bits <= bt.in_bits);
+    let nregions = 1u64 << opts.lookup_bits;
+    let search = match opts.search {
+        SearchStrategy::Hull => SearchStrategy::Pruned,
+        other => other,
     };
-    let threads = opts.threads.min(nregions as usize);
-    let mut results: Vec<Option<RegionAnalysis>> = vec![None; nregions as usize];
-    let chunk = (nregions as usize).div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (tid, slot) in results.chunks_mut(chunk).enumerate() {
-            let analyze_sync = &analyze_sync;
-            scope.spawn(move || {
-                let base = tid * chunk;
-                for (off, s) in slot.iter_mut().enumerate() {
-                    *s = Some(analyze_sync((base + off) as u64));
-                }
-            });
+    let opts = GenOptions { search, ..*opts };
+    let analyses = analyze_all(bt, &opts, None, nregions);
+    let mut k = 0u32;
+    for an in &analyses {
+        if !an.feasible {
+            return Err(GenError::InfeasibleRegion { r: an.r });
         }
-    });
-    results.into_iter().map(|r| r.expect("worker missed a region")).collect()
+        match min_feasible_k_naive(an, opts.max_k) {
+            Some(kr) => k = k.max(kr),
+            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
+        }
+    }
+    let mut regions = Vec::with_capacity(nregions as usize);
+    for an in &analyses {
+        let sp = region_space_at_k_naive(an, k)
+            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r));
+        regions.push(sp);
+    }
+    let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
+    Ok(DesignSpace {
+        func: bt.func.clone(),
+        accuracy: bt.accuracy.clone(),
+        in_bits: bt.in_bits,
+        out_bits: bt.out_bits,
+        lookup_bits: opts.lookup_bits,
+        k,
+        regions,
+        analyses,
+        dd_evals,
+    })
 }
 
 /// Find the smallest `R` for which the design space is feasible (the
 /// paper's "minimum number of regions required").
 pub fn min_lookup_bits(bt: &BoundTable, opts: &GenOptions, r_max: u32) -> Option<u32> {
-    (0..=r_max.min(bt.in_bits)).find(|&r| {
+    min_lookup_bits_report(bt, opts, r_max).ok()
+}
+
+/// [`min_lookup_bits`] with evidence: on failure, returns the highest
+/// `R` actually probed together with its [`GenError`], distinguishing
+/// "needs more lookup bits" ([`GenError::InfeasibleRegion`]) from
+/// "needs a larger `max_k`" ([`GenError::KExhausted`]) instead of
+/// conflating both into `None`.
+///
+/// Feasibility is monotone in `R` (halving a region can only relax its
+/// chord and Eqn 10 constraints — `higher_r_never_increases_k` tests the
+/// stronger form), so the probe is exponential + binary over `R`, and
+/// each probe runs only the analysis phases — no region space is ever
+/// materialized just to be discarded.
+pub fn min_lookup_bits_report(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    r_max: u32,
+) -> Result<u32, (u32, GenError)> {
+    let cap = r_max.min(bt.in_bits);
+    let mut last_err: Option<(u32, GenError)> = None;
+    let found = region::min_monotone(cap, |r| {
         let o = GenOptions { lookup_bits: r, ..*opts };
-        generate(bt, &o).is_ok()
-    })
+        match analyze_and_common_k(bt, &o, None, 1u64 << r) {
+            Ok(_) => true,
+            Err(e) => {
+                // Keep the error from the highest R probed — the most
+                // informative one under monotone feasibility.
+                if last_err.as_ref().map_or(true, |(pr, _)| r > *pr) {
+                    last_err = Some((r, e));
+                }
+                false
+            }
+        }
+    });
+    match found {
+        Some(r) => Ok(r),
+        None => Err(last_err.expect("infeasible probes recorded an error")),
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +346,75 @@ mod tests {
             assert_eq!(ra.entries, rb.entries, "region {}", ra.r);
         }
         assert!(b.dd_evals <= a.dd_evals, "pruning increased work");
+    }
+
+    #[test]
+    fn all_strategies_and_engines_agree_end_to_end() {
+        // The acceptance invariant: hull/pruned/naive strategies and the
+        // envelope/pre-envelope engines produce byte-identical spaces —
+        // common k, every region's entries, and linear_ok.
+        for (name, bits, r) in [("recip", 8u32, 4u32), ("log2", 8, 3), ("exp2", 8, 4)] {
+            let bt = table(name, bits);
+            let reference = generate(
+                &bt,
+                &GenOptions { lookup_bits: r, search: SearchStrategy::Hull, ..Default::default() },
+            )
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let others = [
+                generate(
+                    &bt,
+                    &GenOptions {
+                        lookup_bits: r,
+                        search: SearchStrategy::Pruned,
+                        ..Default::default()
+                    },
+                )
+                .unwrap(),
+                generate_naive(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+                    .unwrap(),
+            ];
+            for other in others {
+                assert_eq!(reference.k, other.k, "{name}: k differs");
+                assert_eq!(reference.regions.len(), other.regions.len());
+                for (ra, rb) in reference.regions.iter().zip(&other.regions) {
+                    assert_eq!(ra.entries, rb.entries, "{name} region {}", ra.r);
+                    assert_eq!(ra.linear_ok, rb.linear_ok, "{name} region {}", ra.r);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_lookup_bits_report_distinguishes_failures() {
+        // recip 8-bit with the default max_k fails below the threshold;
+        // the report must carry a structured cause, and agree with the
+        // plain Option variant.
+        let bt = table("recip", 8);
+        let opts = GenOptions::default();
+        let rmin = min_lookup_bits(&bt, &opts, 8).expect("some R must work");
+        assert_eq!(min_lookup_bits_report(&bt, &opts, 8), Ok(rmin));
+        if rmin > 0 {
+            // Capped below the threshold: must return the error and the
+            // R it was observed at (within the probed range), not Ok.
+            let (r_err, err) = min_lookup_bits_report(&bt, &opts, rmin - 1)
+                .expect_err("below-threshold cap must fail");
+            assert!(r_err < rmin);
+            match err {
+                GenError::InfeasibleRegion { .. } | GenError::KExhausted { .. } => {}
+            }
+        }
+        // A max_k of 0 normally makes every R's k-search fail: the report
+        // must then say KExhausted (needs more k), not merely "no R
+        // worked" — and if some R does admit k = 0, the report must have
+        // found a working one.
+        let tight = GenOptions { max_k: 0, ..opts };
+        match min_lookup_bits_report(&bt, &tight, 4) {
+            Err((_, GenError::KExhausted { max_k: 0, .. })) => {}
+            Err((r, other)) => panic!("expected KExhausted, got {other} at R={r}"),
+            Ok(r) => {
+                assert!(generate(&bt, &GenOptions { lookup_bits: r, ..tight }).is_ok());
+            }
+        }
     }
 
     #[test]

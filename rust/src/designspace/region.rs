@@ -18,8 +18,10 @@
 //! search (paper: "k can be increased until the intervals contain an
 //! integer").
 
+use super::envelope::{IntCursor, IntEnvelope, IntLine, RatCursor, RatEnvelope, RatLine};
 use super::extrema::{
-    diagonal_extrema, max_dd_fracs, DiagExtrema, RawFrac, SearchStrategy,
+    diagonal_extrema, diagonal_extrema_fast, max_dd_fracs, max_dd_hull, DiagExtrema, RawFrac,
+    SearchStrategy,
 };
 use crate::rational::Rat;
 
@@ -28,6 +30,33 @@ use crate::rational::Rat;
 /// there; we keep the representatives nearest zero, which are the only ones
 /// the width-minimizing decision procedure could ever select.
 pub const DEGENERATE_A_CLAMP: i64 = 8;
+
+/// Precomputed §Perf envelopes of the Eqn 3/4 diagonal lines, built once
+/// per region and swept for every `(k, a)` afterwards: dividing by `2^k`,
+/// `B_lo(a) = 2^k max_t (M(t) - t x)` and
+/// `B_hi(a) = 2^k min_t (m(t) - t x)` at `x = a / 2^k`, so both are
+/// `k`-independent envelopes of lines in `x`.
+#[derive(Clone, Debug)]
+pub struct BEnvelopes {
+    /// Upper envelope of `y = M(t) - t x` (lines keyed `slope = -t`).
+    pub lo: RatEnvelope,
+    /// Upper envelope of `y = t x - m(t)` — the negated `B_hi` side
+    /// (lines keyed `slope = t`, intercept `-m(t)`).
+    pub hi_neg: RatEnvelope,
+}
+
+/// Build both Eqn 3/4 envelopes from a region's diagonal extrema. O(N).
+pub fn build_b_envelopes(diag: &DiagExtrema) -> BEnvelopes {
+    let tmax = diag.big_m.len();
+    // Slopes must be fed in ascending order: -t descends in t, +t ascends.
+    let lo = RatEnvelope::upper(
+        (1..=tmax).rev().map(|t| RatLine { slope: -(t as i64), icept: diag.big_m[t - 1] }),
+    );
+    let hi_neg = RatEnvelope::upper(
+        (1..=tmax).map(|t| RatLine { slope: t as i64, icept: diag.small_m[t - 1].neg() }),
+    );
+    BEnvelopes { lo, hi_neg }
+}
 
 /// Real-interval analysis of one region (everything that does not depend
 /// on `k`).
@@ -38,6 +67,8 @@ pub struct RegionAnalysis {
     pub n: usize,
     /// Diagonal extrema (`None` when `N < 2`).
     pub diag: Option<DiagExtrema>,
+    /// Eqn 3/4 line envelopes over the diagonals (`None` when `N < 2`).
+    pub envs: Option<BEnvelopes>,
     /// Eqn 9: `forall t, M(t) < m(t)`.
     pub chord_ok: bool,
     /// Eqn 10 lower bound on `a/2^k` (`None` = unconstrained below).
@@ -54,9 +85,11 @@ pub struct RegionAnalysis {
 
 /// Analyze one region from its bound slices.
 ///
-/// `strategy` selects the naive or Claim II.1-pruned implementation of the
-/// Eqn 10 searches; `diag` may supply precomputed diagonal extrema (e.g.
-/// from the XLA kernel), otherwise they are computed here.
+/// `strategy` selects the hull (§Perf default), Claim II.1-pruned or
+/// naive implementation of the Eqn 10 searches (all value-identical);
+/// `diag` may supply precomputed diagonal extrema (e.g. from the XLA
+/// kernel), otherwise they are computed here — with the `i64` fast scan
+/// under [`SearchStrategy::Hull`], the reference scan otherwise.
 pub fn analyze_region(
     r: u64,
     l: &[i32],
@@ -72,6 +105,7 @@ pub fn analyze_region(
             r,
             n,
             diag: None,
+            envs: None,
             chord_ok: true,
             a_lo: None,
             a_hi: None,
@@ -79,7 +113,10 @@ pub fn analyze_region(
             dd_evals: 0,
         };
     }
-    let diag = diag.unwrap_or_else(|| diagonal_extrema(l, u));
+    let diag = diag.unwrap_or_else(|| match strategy {
+        SearchStrategy::Hull => diagonal_extrema_fast(l, u),
+        _ => diagonal_extrema(l, u),
+    });
     // Eqn 9: M(t) < m(t) for every diagonal.
     let chord_ok = diag
         .big_m
@@ -90,19 +127,23 @@ pub fn analyze_region(
     // Eqn 10: searches over diagonal index pairs t < s. Note the arrays are
     // indexed by t-1; the divided difference uses the *index difference*
     // s - t, which is preserved by the shift. Gcd-free raw fractions keep
-    // the inner loops cheap (§Perf); results are value-identical to the
-    // `Rat` reference implementations (property-tested in `extrema`).
+    // the inner loops cheap (§Perf); the hull, pruned and naive searches
+    // are value-identical (property-tested in `extrema`).
     let (a_lo, a_hi, dd_evals) = if diag.big_m.len() >= 2 {
-        let pruned = strategy == SearchStrategy::Pruned;
         let gm: Vec<RawFrac> = diag.big_m.iter().map(RawFrac::from_rat).collect();
         let gs: Vec<RawFrac> = diag.small_m.iter().map(RawFrac::from_rat).collect();
-        // A_lo = max_{t<s} (M(s) - m(t)) / (s - t).
-        let lo = max_dd_fracs(&gm, &gs, pruned);
-        // A_hi = min_{t<s} (m(s) - M(t)) / (s - t) = -max over negated data.
         let neg = |v: &[RawFrac]| -> Vec<RawFrac> {
             v.iter().map(|f| RawFrac { num: -f.num, den: f.den }).collect()
         };
-        let hi = max_dd_fracs(&neg(&gs), &neg(&gm), pruned);
+        // A_lo = max_{t<s} (M(s) - m(t)) / (s - t);
+        // A_hi = min_{t<s} (m(s) - M(t)) / (s - t) = -max over negated data.
+        let (lo, hi) = match strategy {
+            SearchStrategy::Hull => (max_dd_hull(&gm, &gs), max_dd_hull(&neg(&gs), &neg(&gm))),
+            _ => {
+                let pruned = strategy == SearchStrategy::Pruned;
+                (max_dd_fracs(&gm, &gs, pruned), max_dd_fracs(&neg(&gs), &neg(&gm), pruned))
+            }
+        };
         let evals = lo.map_or(0, |v| v.evals) + hi.map_or(0, |v| v.evals);
         (lo.map(|v| v.value), hi.map(|v| v.value.neg()), evals)
     } else {
@@ -115,7 +156,8 @@ pub fn analyze_region(
             _ => true,
         };
 
-    RegionAnalysis { r, n, diag: Some(diag), chord_ok, a_lo, a_hi, feasible, dd_evals }
+    let envs = Some(build_b_envelopes(&diag));
+    RegionAnalysis { r, n, diag: Some(diag), envs, chord_ok, a_lo, a_hi, feasible, dd_evals }
 }
 
 /// One valid `a` with its (inclusive) integer range of valid `b`.
@@ -165,6 +207,10 @@ pub fn a_range_at_k(an: &RegionAnalysis, k: u32) -> (i64, i64) {
 /// `(max_t (2^k M(t) - a t), min_t (2^k m(t) - a t))`.
 /// Returns `None` when no integer `b` exists.
 ///
+/// This is the O(N) rescan over every diagonal — retained as the oracle
+/// for the envelope path ([`b_range_at_env`], property-tested identical)
+/// and for the pre-envelope reference engine.
+///
 /// Gcd-free scan: `2^k M(t) - a t` as the raw fraction
 /// `(num << k) - a t den) / den` — numerators stay < 2^60 for every
 /// supported format (num < 2^27, k <= 30, |a| t den < 2^45).
@@ -194,6 +240,50 @@ pub fn b_range_at(an: &RegionAnalysis, k: u32, a: i64) -> Option<(i64, i64)> {
     } else {
         None
     }
+}
+
+/// The envelope-swept form of [`b_range_at`] (§Perf): instead of
+/// rescanning every diagonal, read the two active envelope lines at
+/// `x = a / 2^k` and evaluate only those. Cursors must be queried with
+/// non-decreasing `a` at a fixed `k`.
+///
+/// The exact fraction built from the active line is the same
+/// `(num << k) - a t den) / den` expression the oracle computes for the
+/// maximizing diagonal, so the result is bit-identical.
+fn b_interval_from(
+    lo_cur: &mut RatCursor<'_>,
+    hi_cur: &mut RatCursor<'_>,
+    k: u32,
+    a: i64,
+) -> Option<(i64, i64)> {
+    let ll = lo_cur.line_at(a, k);
+    let hl = hi_cur.line_at(a, k);
+    // Lower side: line slope is -t, intercept M(t).
+    let t_lo = (-ll.slope) as i128;
+    let m = &ll.icept;
+    let lo = RawFrac { num: (m.num() << k) - (a as i128) * t_lo * m.den(), den: m.den() };
+    // Upper side: line slope is +t, intercept -m(t).
+    let t_hi = hl.slope as i128;
+    let s = hl.icept.neg();
+    let hi = RawFrac { num: (s.num() << k) - (a as i128) * t_hi * s.den(), den: s.den() };
+    let (lo, hi) = (lo.to_rat(), hi.to_rat());
+    let b0 = (lo.floor() + 1) as i64;
+    let b1 = (hi.ceil() - 1) as i64;
+    if b0 <= b1 {
+        Some((b0, b1))
+    } else {
+        None
+    }
+}
+
+/// One-off envelope query of the `b` interval (fresh cursors; used by the
+/// equivalence property tests and spot checks — the enumeration loops
+/// keep persistent cursors instead).
+pub fn b_range_at_env(an: &RegionAnalysis, k: u32, a: i64) -> Option<(i64, i64)> {
+    let envs = an.envs.as_ref()?;
+    let mut lo_cur = envs.lo.cursor();
+    let mut hi_cur = envs.hi_neg.cursor();
+    b_interval_from(&mut lo_cur, &mut hi_cur, k, a)
 }
 
 /// Truncated-square / truncated-linear basis terms (paper §III):
@@ -237,9 +327,78 @@ pub fn c_interval(
     Some((clo as i64, (chi - 1) as i64))
 }
 
+/// Envelope-backed [`c_interval`] for a fixed `(l, u, k, a, i, j)` across
+/// many `b` (§Perf): every interpolation point contributes the integer
+/// line `(2^k L(x) - a T_i(x)) - S_j(x) b` to `C_lo` (resp. the negated
+/// upper line to `-C_hi`), so one O(N) hull build answers each `b` in
+/// O(1) amortized instead of the O(N) rescan. Property-tested identical
+/// to [`c_interval`].
+#[derive(Clone, Debug)]
+pub struct CEnvelope {
+    /// Upper envelope of the `C_lo` lines.
+    lo: IntEnvelope,
+    /// Upper envelope of the negated `C_hi` lines.
+    hi_neg: IntEnvelope,
+}
+
+impl CEnvelope {
+    pub fn build(l: &[i32], u: &[i32], k: u32, a: i64, i: u32, j: u32) -> CEnvelope {
+        let n = l.len();
+        let scale = 1i128 << k;
+        // S_j(x) is non-decreasing in x, so descending x feeds ascending
+        // slopes -S_j(x) and ascending x feeds ascending slopes +S_j(x).
+        let lo = IntEnvelope::upper((0..n).rev().map(|x| {
+            let base = (a as i128) * trunc_sq(x as u64, i);
+            IntLine { slope: -trunc_lin(x as u64, j), icept: scale * l[x] as i128 - base }
+        }));
+        let hi_neg = IntEnvelope::upper((0..n).map(|x| {
+            let base = (a as i128) * trunc_sq(x as u64, i);
+            IntLine { slope: trunc_lin(x as u64, j), icept: base - scale * (u[x] as i128 + 1) }
+        }));
+        CEnvelope { lo, hi_neg }
+    }
+
+    /// A cursor pair for queries at non-decreasing `b`.
+    pub fn cursor(&self) -> CCursor<'_> {
+        CCursor { lo: self.lo.cursor(), hi_neg: self.hi_neg.cursor() }
+    }
+
+    /// One-off query at an arbitrary `b` (binary search, O(log N)).
+    pub fn interval_at(&self, b: i64) -> Option<(i64, i64)> {
+        finish_c(self.lo.eval(b), -self.hi_neg.eval(b))
+    }
+}
+
+/// Monotone query cursor over a [`CEnvelope`].
+pub struct CCursor<'a> {
+    lo: IntCursor<'a>,
+    hi_neg: IntCursor<'a>,
+}
+
+impl CCursor<'_> {
+    /// Same contract as [`c_interval`]; `b` must be non-decreasing across
+    /// calls on one cursor.
+    pub fn interval_at(&mut self, b: i64) -> Option<(i64, i64)> {
+        finish_c(self.lo.max_at(b), -self.hi_neg.max_at(b))
+    }
+}
+
+#[inline]
+fn finish_c(clo: i128, chi: i128) -> Option<(i64, i64)> {
+    if clo >= chi {
+        return None;
+    }
+    debug_assert!(clo >= i64::MIN as i128 && chi - 1 <= i64::MAX as i128);
+    Some((clo as i64, (chi - 1) as i64))
+}
+
 /// Enumerate the complete integer space of a region at `k`. Returns `None`
 /// if no `(a, b)` (with a non-empty `c` interval, which Eqns 3/4 then
 /// guarantee) exists at this `k`.
+///
+/// §Perf: the integer `a` sweep reads the precomputed line envelopes with
+/// moving cursors — O(N + |a|) instead of the oracle's O(|a| · N)
+/// ([`region_space_at_k_naive`], property-tested identical).
 pub fn region_space_at_k(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
     if !an.feasible {
         return None;
@@ -247,6 +406,38 @@ pub fn region_space_at_k(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
     if an.n < 2 {
         // Degenerate single-point region: represent the nearest-zero slice
         // of the (infinite) space.
+        let entries = vec![AbEntry { a: 0, b_lo: -DEGENERATE_A_CLAMP, b_hi: DEGENERATE_A_CLAMP }];
+        return Some(RegionSpace { r: an.r, k, entries, linear_ok: true });
+    }
+    let envs = an.envs.as_ref().expect("analyzed region with N >= 2 has envelopes");
+    let (a0, a1) = a_range_at_k(an, k);
+    let mut lo_cur = envs.lo.cursor();
+    let mut hi_cur = envs.hi_neg.cursor();
+    let mut entries = Vec::new();
+    let mut linear_ok = false;
+    for a in a0..=a1 {
+        if let Some((b0, b1)) = b_interval_from(&mut lo_cur, &mut hi_cur, k, a) {
+            if a == 0 {
+                linear_ok = true;
+            }
+            entries.push(AbEntry { a, b_lo: b0, b_hi: b1 });
+        }
+    }
+    if entries.is_empty() {
+        None
+    } else {
+        Some(RegionSpace { r: an.r, k, entries, linear_ok })
+    }
+}
+
+/// Pre-envelope oracle for [`region_space_at_k`]: rescan every diagonal
+/// for every candidate `a`. Kept for the equivalence property tests and
+/// the `gen_engine` bench baseline.
+pub fn region_space_at_k_naive(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
+    if !an.feasible {
+        return None;
+    }
+    if an.n < 2 {
         let entries = vec![AbEntry { a: 0, b_lo: -DEGENERATE_A_CLAMP, b_hi: DEGENERATE_A_CLAMP }];
         return Some(RegionSpace { r: an.r, k, entries, linear_ok: true });
     }
@@ -268,12 +459,86 @@ pub fn region_space_at_k(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
     }
 }
 
+/// Existence-only form of [`region_space_at_k`]: does any integer
+/// `(a, b)` survive at this `k`? Early-exits on the first witness, so the
+/// `k`-search never materializes spaces it will throw away.
+pub fn region_feasible_at_k(an: &RegionAnalysis, k: u32) -> bool {
+    if !an.feasible {
+        return false;
+    }
+    if an.n < 2 {
+        return true;
+    }
+    let envs = an.envs.as_ref().expect("analyzed region with N >= 2 has envelopes");
+    let (a0, a1) = a_range_at_k(an, k);
+    let mut lo_cur = envs.lo.cursor();
+    let mut hi_cur = envs.hi_neg.cursor();
+    (a0..=a1).any(|a| b_interval_from(&mut lo_cur, &mut hi_cur, k, a).is_some())
+}
+
+/// Smallest `v in [0, cap]` with `pred(v)` true, for a monotone predicate
+/// (`false.. false true.. true`); `None` when even `cap` fails.
+/// Exponential probe upward, then bisection of the bracket — shared by
+/// the `k`-search here and the `R`-search in
+/// [`crate::designspace::min_lookup_bits_report`].
+pub(crate) fn min_monotone(cap: u32, mut pred: impl FnMut(u32) -> bool) -> Option<u32> {
+    if pred(0) {
+        return Some(0);
+    }
+    if cap == 0 {
+        return None;
+    }
+    // Exponential probe: lo is always infeasible, hi the first feasible.
+    let mut lo = 0u32;
+    let mut hi = 1u32;
+    loop {
+        if hi >= cap {
+            if !pred(cap) {
+                return None;
+            }
+            hi = cap;
+            break;
+        }
+        if pred(hi) {
+            break;
+        }
+        lo = hi;
+        hi *= 2;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
 /// Smallest `k <= max_k` at which the region admits an integer `(a, b, c)`.
+///
+/// Feasibility is monotone in `k` — raising `k` scales every real
+/// interval by two, so any integer witness `(a, b)` at `k` yields
+/// `(2a, 2b)` inside the doubled intervals at `k + 1` (property-tested in
+/// `k_escalation_monotone`). The search therefore probes exponentially
+/// upward and binary-searches the bracket, using the existence-only
+/// predicate: O(log k_min) probes instead of the oracle's linear scan
+/// with full enumeration at every step ([`min_feasible_k_naive`]).
 pub fn min_feasible_k(an: &RegionAnalysis, max_k: u32) -> Option<u32> {
     if !an.feasible {
         return None;
     }
-    (0..=max_k).find(|&k| region_space_at_k(an, k).is_some())
+    min_monotone(max_k, |k| region_feasible_at_k(an, k))
+}
+
+/// Pre-envelope oracle for [`min_feasible_k`]: linear `k` scan, fully
+/// re-enumerating the space at each step.
+pub fn min_feasible_k_naive(an: &RegionAnalysis, max_k: u32) -> Option<u32> {
+    if !an.feasible {
+        return None;
+    }
+    (0..=max_k).find(|&k| region_space_at_k_naive(an, k).is_some())
 }
 
 /// Exhaustively check Eqn 1 for a concrete `(a, b, c, k)` under
@@ -300,23 +565,92 @@ pub fn polynomial_valid(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testutil::{for_each_seed, Rng};
+    use crate::testutil::{for_each_seed, quadratic_bounds, zigzag_bounds};
 
-    /// Random bound slices that are guaranteed feasible by construction:
-    /// perturb an exact quadratic and widen.
-    fn quadratic_bounds(rng: &mut Rng, n: usize) -> (Vec<i32>, Vec<i32>) {
-        let a = rng.range_i64(-3, 3);
-        let b = rng.range_i64(-50, 50);
-        let c = rng.range_i64(0, 100);
-        let slack = rng.range_i64(1, 4);
-        let mut l = Vec::new();
-        let mut u = Vec::new();
-        for x in 0..n as i64 {
-            let v = a * x * x + b * x + c;
-            l.push((v - slack) as i32);
-            u.push((v + slack) as i32);
-        }
-        (l, u)
+    #[test]
+    fn envelope_b_range_matches_naive_oracle() {
+        for_each_seed(60, |rng| {
+            let n = 3 + rng.below(28) as usize;
+            let (l, u) =
+                if rng.bool() { quadratic_bounds(rng, n) } else { zigzag_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            for k in 0..=6u32 {
+                let (a0, a1) = a_range_at_k(&an, k);
+                let a1 = a1.min(a0 + 200);
+                for a in a0..=a1 {
+                    assert_eq!(
+                        b_range_at(&an, k, a),
+                        b_range_at_env(&an, k, a),
+                        "k={k} a={a} l={l:?} u={u:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn envelope_space_equals_naive_space() {
+        for_each_seed(60, |rng| {
+            let n = 3 + rng.below(28) as usize;
+            let (l, u) =
+                if rng.bool() { quadratic_bounds(rng, n) } else { zigzag_bounds(rng, n) };
+            for strategy in [SearchStrategy::Hull, SearchStrategy::Pruned] {
+                let an = analyze_region(0, &l, &u, strategy, None);
+                for k in 0..=8u32 {
+                    let env = region_space_at_k(&an, k);
+                    let naive = region_space_at_k_naive(&an, k);
+                    match (env, naive) {
+                        (None, None) => {}
+                        (Some(e), Some(nv)) => {
+                            assert_eq!(e.entries, nv.entries, "k={k} l={l:?} u={u:?}");
+                            assert_eq!(e.linear_ok, nv.linear_ok);
+                            assert!(region_feasible_at_k(&an, k));
+                        }
+                        (e, nv) => panic!(
+                            "engines disagree at k={k}: env={:?} naive={:?} l={l:?} u={u:?}",
+                            e.map(|s| s.entries),
+                            nv.map(|s| s.entries)
+                        ),
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn binary_k_search_equals_linear_oracle() {
+        for_each_seed(60, |rng| {
+            let n = 3 + rng.below(24) as usize;
+            let (l, u) =
+                if rng.below(3) == 0 { zigzag_bounds(rng, n) } else { quadratic_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            for max_k in [0u32, 1, 3, 10] {
+                assert_eq!(
+                    min_feasible_k(&an, max_k),
+                    min_feasible_k_naive(&an, max_k),
+                    "max_k={max_k} l={l:?} u={u:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn c_envelope_matches_c_interval_oracle() {
+        for_each_seed(60, |rng| {
+            let n = 2 + rng.below(28) as usize;
+            let (l, u) = quadratic_bounds(rng, n);
+            let k = rng.below(6) as u32;
+            let a = rng.range_i64(-6, 6);
+            let i = rng.below(5) as u32;
+            let j = rng.below(4) as u32;
+            let env = CEnvelope::build(&l, &u, k, a, i, j);
+            let mut cur = env.cursor();
+            for b in -90..=90i64 {
+                let want = c_interval(&l, &u, k, a, b, i, j);
+                assert_eq!(cur.interval_at(b), want, "cursor k={k} a={a} i={i} j={j} b={b}");
+                assert_eq!(env.interval_at(b), want, "eval k={k} a={a} i={i} j={j} b={b}");
+            }
+        });
     }
 
     #[test]

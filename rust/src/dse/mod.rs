@@ -21,7 +21,7 @@
 pub mod precision;
 
 use crate::bounds::BoundTable;
-use crate::designspace::region::{c_interval, polynomial_valid};
+use crate::designspace::region::{polynomial_valid, CEnvelope};
 use crate::designspace::DesignSpace;
 use precision::{algorithm1, Encoding, IntervalSet};
 
@@ -306,10 +306,12 @@ fn filter_region(
             }
             v
         };
-        let surviving: Vec<i64> = bs
-            .into_iter()
-            .filter(|&b| c_interval(l, u, k, e.a, b, i, j).is_some())
-            .collect();
+        // §Perf: one envelope build per (a, i, j) answers every b in O(1)
+        // amortized — the b values are ascending, so a cursor suffices.
+        let env = CEnvelope::build(l, u, k, e.a, i, j);
+        let mut cur = env.cursor();
+        let surviving: Vec<i64> =
+            bs.into_iter().filter(|&b| cur.interval_at(b).is_some()).collect();
         if !surviving.is_empty() {
             out.cands.push((e.a, surviving));
             if early_out {
@@ -373,8 +375,10 @@ fn finish(
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         let mut set: IntervalSet = Vec::new();
         for (a, bs) in &rc.cands {
+            let env = CEnvelope::build(l, u, ds.k, *a, i, j);
+            let mut cur = env.cursor();
             for &b in bs {
-                if let Some(iv) = c_interval(l, u, ds.k, *a, b, i, j) {
+                if let Some(iv) = cur.interval_at(b) {
                     set.push(iv);
                 }
             }
@@ -392,8 +396,10 @@ fn finish(
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         let mut chosen: Option<Coeffs> = None;
         'outer: for (a, bs) in &rc.cands {
+            let env = CEnvelope::build(l, u, ds.k, *a, i, j);
+            let mut cur = env.cursor();
             for &b in bs {
-                let Some((c0, c1)) = c_interval(l, u, ds.k, *a, b, i, j) else { continue };
+                let Some((c0, c1)) = cur.interval_at(b) else { continue };
                 if let Some(c) = first_admissible_in(&enc_c, c0, c1) {
                     debug_assert!(polynomial_valid(l, u, ds.k, *a, b, c, i, j));
                     chosen = Some(Coeffs { a: *a, b, c });
@@ -469,11 +475,13 @@ fn reselect_at_trunc(
             if !pre.enc_a.admits(e.a) {
                 continue;
             }
+            let env = CEnvelope::build(l, u, ds.k, e.a, i, j);
+            let mut cur = env.cursor();
             for b in e.b_lo..=e.b_hi {
                 if !pre.enc_b.admits(b) {
                     continue;
                 }
-                let Some((c0, c1)) = c_interval(l, u, ds.k, e.a, b, i, j) else { continue };
+                let Some((c0, c1)) = cur.interval_at(b) else { continue };
                 if let Some(c) = first_admissible_in(&pre.enc_c, c0, c1) {
                     let co = Coeffs { a: e.a, b, c };
                     if admits(&co) {

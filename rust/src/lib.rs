@@ -17,6 +17,7 @@ pub mod coordinator;
 pub mod designspace;
 pub mod dse;
 pub mod pipeline;
+pub mod pool;
 pub mod rtl;
 pub mod synth;
 pub mod runtime;

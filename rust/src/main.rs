@@ -5,7 +5,7 @@
 //! flags ([`polygen::cli`]) and formats stage artifacts.
 //!
 //! ```text
-//! polygen generate --func recip --bits 16 --lub 8 [--naive] [--threads N] [--cache DIR]
+//! polygen generate --func recip --bits 16 --lub 8 [--naive|--pruned] [--threads N] [--cache DIR]
 //! polygen dse      --func recip --bits 16 --lub 8 [--quadratic|--linear] [--lut-first]
 //! polygen rtl      --func recip --bits 10 --lub 5 --out DIR [--tb]
 //! polygen verify   --func recip --bits 16 --lub 8 [--engine scalar|xla|pallas] [--artifacts DIR]
@@ -37,8 +37,8 @@ fn usage() -> ExitCode {
 }
 
 /// Build a pipeline from the common flags (`--func --bits --accuracy
-/// --lub --naive --max-k --threads --max-b --quadratic/--linear
-/// --lut-first --cache --tb`).
+/// --lub --naive/--pruned --max-k --threads --max-b --quadratic/--linear
+/// --lut-first --cache --tb`); the default search is the hull engine.
 fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
     let func = args.get("func").unwrap_or("recip");
     let acc = parse_accuracy(args.get("accuracy").unwrap_or("1ulp"))
@@ -46,7 +46,13 @@ fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
     let mut p = Pipeline::function(func)
         .bits(args.u32_or("bits", 10))
         .accuracy(acc)
-        .search(if args.has("naive") { SearchStrategy::Naive } else { SearchStrategy::Pruned })
+        .search(if args.has("naive") {
+            SearchStrategy::Naive
+        } else if args.has("pruned") {
+            SearchStrategy::Pruned
+        } else {
+            SearchStrategy::Hull
+        })
         .max_k(args.u32_or("max-k", 30))
         .threads(args.u32_or("threads", 1) as usize)
         .max_b_per_a(args.u32_or("max-b", 512) as usize);

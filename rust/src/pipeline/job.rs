@@ -23,8 +23,6 @@
 //! ```
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::coordinator::config::Config;
 
@@ -145,6 +143,7 @@ impl JobSpec {
         }
         if let Some(v) = cfg.get("generate.search") {
             s.search = match v {
+                "hull" => SearchStrategy::Hull,
                 "pruned" => SearchStrategy::Pruned,
                 "naive" => SearchStrategy::Naive,
                 other => return Err(spec_err(format!("generate.search: {other}"))),
@@ -195,6 +194,7 @@ impl JobSpec {
         out.push_str(&format!(
             "search = {}\n",
             match self.search {
+                SearchStrategy::Hull => "hull",
                 SearchStrategy::Pruned => "pruned",
                 SearchStrategy::Naive => "naive",
             }
@@ -329,32 +329,13 @@ impl Batch {
     }
 
     /// Execute every spec; `results[i]` corresponds to `specs[i]`. A
-    /// failing job fails its own slot only.
+    /// failing job fails its own slot only. Jobs are pulled from the
+    /// shared work-stealing pool ([`crate::pool`]) — the same scheduler
+    /// design-space generation uses — so a slow auto-LUB sweep never
+    /// parks the other workers.
     pub fn execute(&self, specs: &[JobSpec]) -> Vec<Result<JobResult, PipelineError>> {
         let cache = self.cache_dir.as_deref();
-        let workers = self.threads.min(specs.len().max(1));
-        if workers <= 1 {
-            return specs.iter().map(|s| s.run_with(cache)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<JobResult, PipelineError>>>> =
-            specs.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= specs.len() {
-                        break;
-                    }
-                    let res = specs[i].run_with(cache);
-                    *slots[i].lock().unwrap() = Some(res);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("batch worker missed a job"))
-            .collect()
+        crate::pool::run_indexed(specs.len(), self.threads, |i| specs[i].run_with(cache))
     }
 }
 

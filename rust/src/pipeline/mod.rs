@@ -249,7 +249,8 @@ impl Pipeline {
         self
     }
 
-    /// Naive or Claim II.1-pruned Eqn 10 searches (default: pruned).
+    /// Eqn 10 search implementation: the §Perf hull engine (the
+    /// default), Claim II.1-pruned, or naive — all value-identical.
     pub fn search(mut self, search: SearchStrategy) -> Self {
         self.settings.search = search;
         self
@@ -358,6 +359,19 @@ impl Prepared {
     /// minimum number of regions required"), probing `0..=r_max`.
     pub fn min_lookup_bits(&self, r_max: u32) -> Option<u32> {
         crate::designspace::min_lookup_bits(&self.workload.bt, &self.settings.gen_opts(0), r_max)
+    }
+
+    /// [`Prepared::min_lookup_bits`] with evidence: on failure the error
+    /// distinguishes "needs more lookup bits" (an infeasible region at
+    /// the largest probed `R`) from "needs a larger `max_k`" (the
+    /// `k`-search was the binding constraint).
+    pub fn min_lookup_bits_report(&self, r_max: u32) -> Result<u32, PipelineError> {
+        crate::designspace::min_lookup_bits_report(
+            &self.workload.bt,
+            &self.settings.gen_opts(0),
+            r_max,
+        )
+        .map_err(|(lookup_bits, source)| PipelineError::Generation { lookup_bits, source })
     }
 
     /// Stage 2: generate the complete design space. Under

@@ -1,0 +1,95 @@
+//! Work-stealing index pool shared by design-space generation
+//! ([`crate::designspace`]) and batch job execution
+//! ([`crate::pipeline::Batch`]).
+//!
+//! Per-item cost is *not* uniform in either caller: Claim II.1 pruning
+//! fires unevenly across regions, and a batch mixes auto-LUB sweeps with
+//! fixed-`R` jobs. Static chunking parks finished workers behind the
+//! slowest chunk; here workers instead pull the next index from one
+//! shared atomic cursor. Results are written back by index, so the output
+//! order — and therefore every downstream artifact — is independent of
+//! the thread count and of scheduling (property-tested).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Compute `f(i)` for `i in 0..n` across up to `threads` workers pulling
+/// from a shared cursor; returns `out` with `out[i] = f(i)`.
+/// `threads <= 1` (or `n <= 1`) runs inline with no thread setup.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(part) => parts.push(part),
+                // Preserve the worker's panic payload (e.g. the region id
+                // in generation's invariant-breach message) instead of
+                // masking it behind a generic join failure.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(out[i].is_none(), "index {i} computed twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("pool missed an index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_independent_of_thread_count() {
+        // Uneven per-item cost: make high indices much heavier, so static
+        // chunking would misassign work but the result must not change.
+        let work = |i: usize| -> u64 {
+            let rounds = if i % 7 == 0 { 20_000 } else { 10 };
+            let mut acc = i as u64;
+            for _ in 0..rounds {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            }
+            acc
+        };
+        let want = run_indexed(97, 1, work);
+        for threads in [2usize, 3, 8, 64] {
+            assert_eq!(run_indexed(97, threads, work), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn edge_sizes() {
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i * 2), vec![0]);
+        assert_eq!(run_indexed(5, 100, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+}

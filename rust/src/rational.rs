@@ -106,14 +106,31 @@ impl Rat {
 
     /// Exact comparison by cross multiplication.
     ///
-    /// Debug-asserts the cross products stay inside `i128`; with reduced
-    /// operands from this crate's workloads they always do.
+    /// With reduced operands from this crate's workloads the products fit
+    /// `i128` (the fast path); if they do not, the comparison widens to
+    /// exact 256-bit magnitudes instead of wrapping, so ordering is
+    /// correct for the full `i128` domain in release builds too.
     pub fn cmp_rat(&self, o: &Rat) -> Ordering {
-        debug_assert!(
-            cross_mul_in_range(self.num, o.den) && cross_mul_in_range(o.num, self.den),
-            "Rat comparison overflow risk"
-        );
-        (self.num * o.den).cmp(&(o.num * self.den))
+        match (self.num.checked_mul(o.den), o.num.checked_mul(self.den)) {
+            (Some(l), Some(r)) => l.cmp(&r),
+            _ => {
+                // Both dens > 0, so the product signs are the num signs:
+                // different signs decide immediately, equal signs compare
+                // 256-bit magnitudes (reversed for negatives).
+                let (a, b) = (self.num, o.num);
+                if a.signum() != b.signum() {
+                    return a.signum().cmp(&b.signum());
+                }
+                let la = crate::wide::U256::mul_u128(a.unsigned_abs(), o.den as u128);
+                let rb = crate::wide::U256::mul_u128(b.unsigned_abs(), self.den as u128);
+                let ord = la.cmp256(&rb);
+                if a >= 0 {
+                    ord
+                } else {
+                    ord.reverse()
+                }
+            }
+        }
     }
 
     pub fn lt(&self, o: &Rat) -> bool {
@@ -139,10 +156,6 @@ impl Rat {
             self
         }
     }
-}
-
-fn cross_mul_in_range(a: i128, b: i128) -> bool {
-    a.checked_mul(b).is_some()
 }
 
 impl PartialOrd for Rat {
@@ -212,6 +225,23 @@ mod tests {
         assert_eq!(Rat::new(2, 4).cmp_rat(&Rat::new(1, 2)), Ordering::Equal);
         assert_eq!(Rat::new(5, 3).min_rat(Rat::new(3, 2)), Rat::new(3, 2));
         assert_eq!(Rat::new(5, 3).max_rat(Rat::new(3, 2)), Rat::new(5, 3));
+    }
+
+    #[test]
+    fn ordering_survives_cross_product_overflow() {
+        // Cross products of these need >127 bits; the wide path must
+        // still order exactly, for every sign combination.
+        let big = (1i128 << 100) + 1; // odd: no reduction possible
+        let a = Rat::new(big, 1 << 30);
+        let b = Rat::new(1 << 100, (1 << 30) - 1);
+        // a < b  <=>  (2^100+1)(2^30-1) < 2^130  <=>  2^30 - 1 < 2^100.
+        assert!(a.lt(&b));
+        assert!(!b.lt(&a));
+        assert!(a.neg().cmp_rat(&b.neg()) == Ordering::Greater);
+        assert!(a.neg().lt(&b));
+        assert!(b.neg().lt(&a));
+        assert_eq!(a.cmp_rat(&a), Ordering::Equal);
+        assert_eq!(a.neg().cmp_rat(&a.neg()), Ordering::Equal);
     }
 
     #[test]

@@ -45,6 +45,45 @@ impl Rng {
     }
 }
 
+/// Random bound slices that are guaranteed feasible by construction
+/// (perturb an exact quadratic, widen by a random slack) — shared by the
+/// region / DSE / envelope equivalence property tests.
+pub fn quadratic_bounds(rng: &mut Rng, n: usize) -> (Vec<i32>, Vec<i32>) {
+    quadratic_bounds_with(rng, n, 3, 50, 4)
+}
+
+/// [`quadratic_bounds`] with explicit caps on the quadratic coefficient,
+/// linear coefficient and slack magnitudes.
+pub fn quadratic_bounds_with(
+    rng: &mut Rng,
+    n: usize,
+    a_mag: i64,
+    b_mag: i64,
+    slack_max: i64,
+) -> (Vec<i32>, Vec<i32>) {
+    let a = rng.range_i64(-a_mag, a_mag);
+    let b = rng.range_i64(-b_mag, b_mag);
+    let c = rng.range_i64(0, 100);
+    let slack = rng.range_i64(1, slack_max);
+    let mut l = Vec::new();
+    let mut u = Vec::new();
+    for x in 0..n as i64 {
+        let v = a * x * x + b * x + c;
+        l.push((v - slack) as i32);
+        u.push((v + slack) as i32);
+    }
+    (l, u)
+}
+
+/// Random unstructured bound slices (frequently infeasible for any
+/// quadratic) — exercises the infeasible / `KExhausted` paths the
+/// feasible-by-construction generator cannot reach.
+pub fn zigzag_bounds(rng: &mut Rng, n: usize) -> (Vec<i32>, Vec<i32>) {
+    let l: Vec<i32> = (0..n).map(|_| rng.range_i64(-40, 40) as i32).collect();
+    let u: Vec<i32> = l.iter().map(|&v| v + rng.range_i64(0, 6) as i32).collect();
+    (l, u)
+}
+
 /// Run `f` across `cases` seeds; on panic, report which seed failed.
 pub fn for_each_seed(cases: u64, f: impl Fn(&mut Rng)) {
     for seed in 0..cases {
