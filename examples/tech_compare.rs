@@ -1,0 +1,61 @@
+//! Technology comparison: the paper's closing claim, live.
+//!
+//! "Targeting alternative hardware technologies simply requires a
+//! modified decision procedure to explore the space." Here the SAME
+//! complete design space (recip 8-bit, R = 3 — naturally quadratic) is
+//! explored by each shipped technology's default decision procedure and
+//! costed by its own model. The ASIC ordering maximizes square-input
+//! truncation; the FPGA cost model instead trades truncation for a
+//! narrower `b` coefficient (narrow soft multipliers beat shallow
+//! tables), selecting a different implementation — every one of which
+//! still verifies exhaustively.
+//!
+//! Run: `cargo run --release --example tech_compare`
+
+use polygen::pipeline::{Implementation, Pipeline, PipelineError, TechKind};
+
+fn main() -> Result<(), PipelineError> {
+    let (func, bits, lub) = ("recip", 8, 3);
+    println!("one design space: {func} {bits}-bit, R = {lub}\n");
+    println!(
+        "{:<10} {:<13} {:>4} {:>2} {:>2} {:>16} {:>10} {:>12}",
+        "tech", "procedure", "deg", "i", "j", "LUT [a,b,c]", "delay ns", "area"
+    );
+
+    let mut asic_impl: Option<Implementation> = None;
+    for tech in TechKind::ALL {
+        // Same function, same R — only the technology target changes.
+        let v = Pipeline::function(func)
+            .bits(bits)
+            .lub(lub)
+            .technology(tech)
+            .run()?; // includes exhaustive verification
+        assert!(v.report.ok());
+        let im = &v.implementation;
+        let differs = asic_impl.as_ref().is_some_and(|base| !base.same_selection(im));
+        let marker = if differs { "  <- differs from asic-ge" } else { "" };
+        if tech == TechKind::AsicGe {
+            asic_impl = Some(im.clone());
+        }
+        let cm = tech.technology().cost_model();
+        println!(
+            "{:<10} {:<13} {:>4?} {:>2} {:>2} {:>16} {:>10.3} {:>7.1} {:<4}{}",
+            tech.label(),
+            tech.technology().default_procedure().name(),
+            im.degree,
+            im.sq_trunc,
+            im.lin_trunc,
+            im.lut_width_label(),
+            v.synth.delay_ns,
+            v.synth.area_um2,
+            cm.area_unit(),
+            marker
+        );
+    }
+
+    println!(
+        "\nAll three implementations verified exhaustively against the same \
+         bound tables — different selections, same guarantee."
+    );
+    Ok(())
+}

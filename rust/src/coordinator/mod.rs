@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
 use crate::designspace::{generate, DesignSpace, GenError, GenOptions};
 use crate::dse::{explore, DseOptions, Implementation};
-use crate::synth::{synth_min_delay, SynthPoint};
+use crate::synth::{synth_min_delay_with, SynthPoint};
 
 /// A prepared workload: the function and its bound table.
 pub struct Workload {
@@ -73,7 +73,10 @@ pub fn run_point_cached(
     };
     let gen_time = t0.elapsed();
     let implementation = space.as_ref().ok().and_then(|ds| explore(&w.bt, ds, dse));
-    let synth = implementation.as_ref().map(synth_min_delay);
+    // Cost under the technology the exploration targeted, so sweeps and
+    // auto-LUB selection optimize the same model the procedure used.
+    let cm = dse.tech.technology().cost_model();
+    let synth = implementation.as_ref().map(|im| synth_min_delay_with(cm, im));
     SweepPoint { lookup_bits: r, gen_time, space, implementation, synth }
 }
 

@@ -219,9 +219,23 @@ pub fn max_dd_fracs(g: &[RawFrac], h: &[RawFrac], pruned: bool) -> Option<DdMax>
 /// point is unimodal along the hull (each slope to the query is a mediant
 /// of its hull-edge slope and the next slope to the query), so a binary
 /// search on "still ascending" finds the tangent. Value-identical to
-/// [`max_dd_naive`] (property-tested); the `(x, y)` witness may differ on
-/// ties — only the value is contractual. `evals` counts tangent-search
+/// [`max_dd_naive`] (property-tested). `evals` counts tangent-search
 /// slope comparisons, the hull analogue of `D` evaluations.
+///
+/// **Tie-breaking is pinned**: the `(x, y)` witness is the argmax pair
+/// minimizing `(x, y)` lexicographically — exactly what the naive scan's
+/// iteration order (ascending `x` outer, ascending `y` inner, strict
+/// improvement) returns, so consumers may rely on the witness itself.
+/// Three pieces make this hold: collinear hull points are popped but the
+/// *left* endpoint of any tangent-contact run survives as a vertex; the
+/// tangent search ascends only on a *strictly* greater slope, landing on
+/// the leftmost maximizer (the slope sequence is unimodal with equal
+/// adjacent values only at its maximum — an equal pair forces both to
+/// coincide with the edge slope, and the next edge is strictly steeper);
+/// and value ties across queries keep the lexicographically smaller
+/// witness. The big-magnitude fallback ([`max_dd_fracs`] with pruning)
+/// shares the naive scan's iteration order, so its witness agrees by
+/// construction.
 ///
 /// All comparisons are exact cross multiplications of gcd-free fractions:
 /// triple products bounded by `2^57 * 2^25 * 2^24 = 2^106` for the widest
@@ -286,7 +300,8 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
             let (ia, ib) = (hull[mid], hull[mid + 1]);
             let (va, vb) = (h[ia], h[ib]);
             evals += 1;
-            // Ascend iff slope(ib, Q) >= slope(ia, Q).
+            // Ascend iff slope(ib, Q) > slope(ia, Q) — strictly, so ties
+            // resolve to the leftmost maximizer (the pinned witness).
             debug_assert!(
                 fits(q.num * vb.den - vb.num * q.den, (y - ia) as i128, va.den)
                     && fits(q.num * va.den - va.num * q.den, (y - ib) as i128, vb.den),
@@ -294,7 +309,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
             );
             let lhs = (q.num * vb.den - vb.num * q.den) * ((y - ia) as i128) * va.den;
             let rhs = (q.num * va.den - va.num * q.den) * ((y - ib) as i128) * vb.den;
-            if lhs >= rhs {
+            if lhs > rhs {
                 lo = mid + 1;
             } else {
                 hi = mid;
@@ -307,7 +322,13 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
             den: q.den * vx.den * ((y - ix) as i128),
         };
         evals += 1;
-        if best.map_or(true, |(b, _, _)| b.lt(&d)) {
+        // Strict improvement, or an equal value with a lexicographically
+        // smaller (x, y) — matching the naive scan's first-found witness.
+        let better = match &best {
+            None => true,
+            Some((b, bx, by)) => b.lt(&d) || (!d.lt(b) && (ix < *bx || (ix == *bx && y < *by))),
+        };
+        if better {
             best = Some((d, ix, y));
         }
     }
@@ -601,6 +622,64 @@ mod tests {
             let got = min_dd(&g, &h, SearchStrategy::Hull).unwrap();
             assert_eq!(got.value, want.value);
         });
+    }
+
+    #[test]
+    fn hull_witness_matches_naive_on_value_ties() {
+        // The pinned tie-breaking contract (ROADMAP open item): on
+        // value-equal argmax sets the hull must return the naive scan's
+        // witness — the pair minimizing (x, y) lexicographically. Tiny
+        // value ranges, collinear and constant h slices make ties dense.
+        for_each_seed(150, |rng| {
+            let n = 2 + rng.below(14) as usize;
+            let (g, h): (Vec<Rat>, Vec<Rat>) = match rng.below(4) {
+                0 => (rand_rats(rng, n, 2), rand_rats(rng, n, 2)),
+                1 => {
+                    // Collinear h (with jitter): tangent contact runs.
+                    let s = rng.range_i64(-2, 2);
+                    let h = (0..n)
+                        .map(|i| Rat::int(s as i128 * i as i128 + rng.below(2) as i128))
+                        .collect();
+                    (rand_rats(rng, n, 1), h)
+                }
+                2 => {
+                    // Constant h, constant g: every pair ties per gap.
+                    let h = vec![Rat::ZERO; n];
+                    let g = vec![Rat::int(rng.range_i64(-1, 1) as i128); n];
+                    (g, h)
+                }
+                _ => (rand_rats(rng, n, 1), rand_rats(rng, n, 3)),
+            };
+            let want = max_dd_naive(&g, &h).unwrap();
+            let gr: Vec<RawFrac> = g.iter().map(RawFrac::from_rat).collect();
+            let hr: Vec<RawFrac> = h.iter().map(RawFrac::from_rat).collect();
+            let got = max_dd_hull(&gr, &hr).unwrap();
+            assert_eq!(got.value, want.value, "g={g:?} h={h:?}");
+            assert_eq!(
+                (got.x, got.y),
+                (want.x, want.y),
+                "witness tie-break drifted: g={g:?} h={h:?}"
+            );
+            // The pruned fallback path shares the pinned witness too.
+            let pr = max_dd_fracs(&gr, &hr, true).unwrap();
+            assert_eq!((pr.x, pr.y), (want.x, want.y), "pruned witness: g={g:?} h={h:?}");
+        });
+    }
+
+    #[test]
+    fn hull_witness_pinned_on_collinear_plateau() {
+        // Deterministic plateau: g and h on the same line, so EVERY pair
+        // (x, y) has slope exactly 1 — the whole search space ties. The
+        // contract picks the lex-smallest pair (0, 1).
+        let n = 8usize;
+        let g: Vec<Rat> = (0..n).map(|i| Rat::int(i as i128)).collect();
+        let h: Vec<Rat> = (0..n).map(|i| Rat::int(i as i128)).collect();
+        let want = max_dd_naive(&g, &h).unwrap();
+        let gr: Vec<RawFrac> = g.iter().map(RawFrac::from_rat).collect();
+        let hr: Vec<RawFrac> = h.iter().map(RawFrac::from_rat).collect();
+        let got = max_dd_hull(&gr, &hr).unwrap();
+        assert_eq!((got.x, got.y, got.value), (want.x, want.y, want.value));
+        assert_eq!((got.x, got.y), (0, 1), "lex-smallest argmax expected");
     }
 
     #[test]

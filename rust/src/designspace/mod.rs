@@ -268,11 +268,18 @@ pub fn min_lookup_bits(bt: &BoundTable, opts: &GenOptions, r_max: u32) -> Option
 /// "needs a larger `max_k`" ([`GenError::KExhausted`]) instead of
 /// conflating both into `None`.
 ///
-/// Feasibility is monotone in `R` (halving a region can only relax its
-/// chord and Eqn 10 constraints — `higher_r_never_increases_k` tests the
-/// stronger form), so the probe is exponential + binary over `R`, and
-/// each probe runs only the analysis phases — no region space is ever
-/// materialized just to be discarded.
+/// Feasibility is monotone in `R` for every spec shipped here (halving a
+/// region can only relax its chord and Eqn 10 constraints —
+/// `higher_r_never_increases_k` tests the stronger form), so the probe
+/// is exponential + binary over `R`, and each probe runs only the
+/// analysis phases — no region space is ever materialized just to be
+/// discarded. The assumption is **guarded**: the search spot-checks a
+/// skipped `R` below its answer, and on a detected violation (a future,
+/// e.g. `R`-dependent, accuracy spec) falls back to an exhaustive linear
+/// scan — flagged by a debug assertion (ROADMAP open item). The
+/// spot-check is sampled, not exhaustive (see [`min_monotone_guarded`]):
+/// certainty would cost the very linear scan the bisection avoids, and
+/// every spec shipped today is provably monotone.
 pub fn min_lookup_bits_report(
     bt: &BoundTable,
     opts: &GenOptions,
@@ -280,7 +287,7 @@ pub fn min_lookup_bits_report(
 ) -> Result<u32, (u32, GenError)> {
     let cap = r_max.min(bt.in_bits);
     let mut last_err: Option<(u32, GenError)> = None;
-    let found = region::min_monotone(cap, |r| {
+    let found = min_monotone_guarded(cap, |r| {
         let o = GenOptions { lookup_bits: r, ..*opts };
         match analyze_and_common_k(bt, &o, None, 1u64 << r) {
             Ok(_) => true,
@@ -295,9 +302,45 @@ pub fn min_lookup_bits_report(
         }
     });
     match found {
-        Some(r) => Ok(r),
+        Some((r, monotone_ok)) => {
+            debug_assert!(
+                monotone_ok,
+                "feasibility is not monotone in R for {} ({}); the bisected \
+                 lookup-bit search fell back to a linear scan",
+                bt.func, bt.accuracy
+            );
+            Ok(r)
+        }
         None => Err(last_err.expect("infeasible probes recorded an error")),
     }
+}
+
+/// [`region::min_monotone`] plus a monotonicity spot-check: after the
+/// bisection answers `found`, re-probe the largest `R < found` the
+/// search *skipped* (the bracket endpoints were all probed infeasible —
+/// only skipped interior points can hide a violation). If that probe is
+/// feasible, the predicate is not monotone and the search result is
+/// untrustworthy: fall back to an exhaustive ascending scan, which needs
+/// no assumption. Returns `(minimum, monotone_ok)`.
+///
+/// This is a *sampled* guard, chosen to keep the O(log) probe count: a
+/// non-monotone dip at a different skipped point (or below an
+/// infeasible-at-`cap` answer of `None`) escapes detection. Probing
+/// every skipped point would re-add exactly the small-`R` probes — the
+/// expensive ones — that the exponential+binary scheme exists to skip.
+fn min_monotone_guarded(cap: u32, mut pred: impl FnMut(u32) -> bool) -> Option<(u32, bool)> {
+    let mut probed: Vec<u32> = Vec::new();
+    let found = region::min_monotone(cap, |r| {
+        probed.push(r);
+        pred(r)
+    })?;
+    if let Some(rc) = (0..found).rev().find(|r| !probed.contains(r)) {
+        if pred(rc) {
+            let true_min = (0..=cap).find(|&r| pred(r)).expect("pred(rc) held");
+            return Some((true_min, false));
+        }
+    }
+    Some((found, true))
 }
 
 #[cfg(test)]
@@ -415,6 +458,24 @@ mod tests {
                 assert!(generate(&bt, &GenOptions { lookup_bits: r, ..tight }).is_ok());
             }
         }
+    }
+
+    #[test]
+    fn guarded_search_detects_non_monotone_predicates() {
+        // Monotone predicate: bisection answer accepted, flag clean.
+        assert_eq!(min_monotone_guarded(8, |r| r >= 5), Some((5, true)));
+        assert_eq!(min_monotone_guarded(8, |_| true), Some((0, true)));
+        assert_eq!(min_monotone_guarded(3, |_| false), None);
+
+        // Non-monotone predicate crafted so the bisection lands on 7
+        // (probes 0,1,2,4,7,5,6 — skipping 3) while the true minimum is
+        // 3: the guard re-probes the skipped point and falls back to the
+        // exhaustive scan.
+        let feasible = [false, false, false, true, false, false, false, true];
+        let raw = region::min_monotone(7, |r| feasible[r as usize]);
+        assert_eq!(raw, Some(7), "bisection alone must miss the true minimum");
+        let guarded = min_monotone_guarded(7, |r| feasible[r as usize]);
+        assert_eq!(guarded, Some((3, false)), "guard must detect and correct");
     }
 
     #[test]

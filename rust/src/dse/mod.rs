@@ -1,29 +1,39 @@
-//! Design-space exploration — the paper's §III decision procedure.
+//! Design-space exploration — the paper's §III decision procedure,
+//! decomposed into technology-pluggable pieces.
 //!
-//! Given the complete design space, derive one concrete hardware
-//! implementation by the paper's ASIC-tuned procedure:
+//! The paper's ASIC procedure, as a [`procedure::Lexicographic`] pass
+//! sequence ([`procedure::Pass`]):
 //!
-//! 1. **Minimize `k`** — done during generation ([`crate::designspace::generate`]
-//!    returns the smallest `k` feasible across all regions).
-//! 2. **Maximize square-input truncation `i`** — the square path evaluates
-//!    `a * (x[m-1:i])^2`; only candidates that tolerate the induced error
-//!    survive.
+//! 1. **Minimize `k`** — done during generation
+//!    ([`crate::designspace::generate`] returns the smallest `k` feasible
+//!    across all regions).
+//! 2. **Maximize square-input truncation `i`** — the square path
+//!    evaluates `a * (x[m-1:i])^2`; only candidates that tolerate the
+//!    induced error survive.
 //! 3. **Maximize linear-input truncation `j`** — `b * x[m-1:j]`.
 //! 4. **Minimize coefficient bitwidths** `a`, then `b`, then `c`, with
-//!    Algorithm 1 ([`precision::algorithm1`]), pruning the dictionary after
-//!    each step.
+//!    Algorithm 1 ([`precision::algorithm1`]), pruning the dictionary
+//!    after each step; finally the first surviving `(a, b, c)` triple is
+//!    selected per region.
 //!
-//! Finally the first surviving `(a, b, c)` triple is selected per region.
-//! An alternative LUT-first ordering (minimize widths before truncations)
-//! is provided for the ablation the paper mentions ("prioritizing LUT
-//! optimization ... yielded inferior area-delay profiles").
+//! Alternative orderings (the paper: "prioritizing LUT optimization ...
+//! yielded inferior area-delay profiles") are just different pass
+//! sequences, and [`procedure::ParetoCost`] drops the fixed ordering
+//! entirely, ranking the truncation/width frontier by a technology's
+//! [`CostModel`](crate::tech::CostModel) — the paper's "modified decision
+//! procedure" for alternative hardware technologies. [`explore`] runs
+//! the procedure selected by [`DseOptions`]; [`explore_with`] accepts
+//! any user [`procedure::DecisionProcedure`].
 
 pub mod precision;
+pub mod procedure;
 
 use crate::bounds::BoundTable;
 use crate::designspace::region::{polynomial_valid, CEnvelope};
 use crate::designspace::DesignSpace;
+use crate::tech::{CostModel, TechKind};
 use precision::{algorithm1, Encoding, IntervalSet};
+use procedure::DecisionProcedure;
 
 /// Interpolator degree (paper §II: linear suffices iff `0 in [a0, a1]` in
 /// every region — "resulting in smaller and faster hardware").
@@ -33,19 +43,38 @@ pub enum Degree {
     Quadratic,
 }
 
-/// Decision-procedure variant.
+/// Named decision-procedure variant (the serializable selector behind
+/// `dse.procedure`; custom procedures go through [`explore_with`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Procedure {
     /// The paper's procedure: truncations first, then widths.
     SquareFirst,
     /// Ablation: widths first, then truncations.
     LutFirst,
+    /// Cost-guided Pareto ranking by the technology's cost model.
+    Pareto,
+}
+
+impl Procedure {
+    /// Instantiate the named procedure.
+    pub fn instantiate(self) -> Box<dyn DecisionProcedure> {
+        match self {
+            Procedure::SquareFirst => Box::new(procedure::Lexicographic::square_first()),
+            Procedure::LutFirst => Box::new(procedure::Lexicographic::lut_first()),
+            Procedure::Pareto => Box::new(procedure::ParetoCost::default()),
+        }
+    }
 }
 
 /// Exploration options.
 #[derive(Clone, Copy, Debug)]
 pub struct DseOptions {
-    pub procedure: Procedure,
+    /// Forced procedure; `None` = the technology's default ordering
+    /// ([`crate::tech::Technology::default_procedure`]).
+    pub procedure: Option<Procedure>,
+    /// Technology target: supplies the cost model (for cost-guided
+    /// procedures and downstream synthesis) and the default procedure.
+    pub tech: TechKind,
     /// Force a linear implementation when feasible (`a = 0` everywhere);
     /// `None` = automatic (linear if feasible).
     pub degree: Option<Degree>,
@@ -58,7 +87,7 @@ pub struct DseOptions {
 
 impl Default for DseOptions {
     fn default() -> Self {
-        DseOptions { procedure: Procedure::SquareFirst, degree: None, max_b_per_a: 512 }
+        DseOptions { procedure: None, tech: TechKind::AsicGe, degree: None, max_b_per_a: 512 }
     }
 }
 
@@ -132,6 +161,22 @@ impl Implementation {
         )
     }
 
+    /// True when two implementations make the same selection from a
+    /// space: degree, truncations, encodings and per-region coefficients
+    /// all equal. The single definition of "same design" used by the
+    /// per-technology divergence report/tests — a new
+    /// selection-determining field must be added here once, not at every
+    /// comparison site.
+    pub fn same_selection(&self, other: &Implementation) -> bool {
+        self.degree == other.degree
+            && self.sq_trunc == other.sq_trunc
+            && self.lin_trunc == other.lin_trunc
+            && self.enc_a == other.enc_a
+            && self.enc_b == other.enc_b
+            && self.enc_c == other.enc_c
+            && self.coeffs == other.coeffs
+    }
+
     /// Bit-accurate datapath semantics — the single definition that the
     /// RTL emitter, the behavioural simulator, the XLA kernel and the
     /// verifier must all agree with:
@@ -152,10 +197,37 @@ impl Implementation {
     }
 }
 
-/// Explore the design space and return the selected implementation.
+/// Explore the design space with the procedure and technology selected
+/// by `opts` and return the selected implementation.
 ///
-/// `bt` must be the bound table the space was generated from.
+/// `bt` must be the bound table the space was generated from. The
+/// default options reproduce the paper's ASIC procedure exactly
+/// (`AsicGe` technology, whose default ordering is SquareFirst).
 pub fn explore(bt: &BoundTable, ds: &DesignSpace, opts: &DseOptions) -> Option<Implementation> {
+    let tech = opts.tech.technology();
+    let proc_: Box<dyn DecisionProcedure> = match opts.procedure {
+        Some(p) => p.instantiate(),
+        None => tech.default_procedure(),
+    };
+    explore_with(bt, ds, proc_.as_ref(), tech.cost_model(), opts)
+}
+
+/// [`explore`] with an explicit procedure and cost model — the plugin
+/// entry point for technologies and procedures not named by
+/// [`TechKind`]/[`Procedure`].
+pub fn explore_with(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    proc_: &dyn DecisionProcedure,
+    cm: &dyn CostModel,
+    opts: &DseOptions,
+) -> Option<Implementation> {
+    proc_.decide(bt, ds, cm, opts)
+}
+
+/// Resolve the degree under `opts`: forced if requested (and feasible),
+/// otherwise linear iff the space admits it.
+fn resolve_degree(ds: &DesignSpace, opts: &DseOptions) -> Option<Degree> {
     let degree = match opts.degree {
         Some(d) => d,
         None => {
@@ -169,46 +241,7 @@ pub fn explore(bt: &BoundTable, ds: &DesignSpace, opts: &DseOptions) -> Option<I
     if degree == Degree::Linear && !ds.linear_feasible() {
         return None;
     }
-    let xbits = ds.x_bits();
-
-    match opts.procedure {
-        Procedure::SquareFirst => {
-            // Steps 2 & 3: maximize truncations on the unpruned dictionary.
-            let (i, j) = match degree {
-                Degree::Linear => {
-                    // No square path; only the linear truncation matters.
-                    let j = max_feasible_trunc(bt, ds, degree, opts, |j| (xbits, j));
-                    (xbits, j)
-                }
-                Degree::Quadratic => {
-                    let i = max_feasible_trunc(bt, ds, degree, opts, |i| (i, 0));
-                    let j = max_feasible_trunc(bt, ds, degree, opts, |j| (i, j));
-                    (i, j)
-                }
-            };
-            let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
-            finish(bt, ds, degree, i, j, cands, opts)
-        }
-        Procedure::LutFirst => {
-            // Ablation: minimize widths at (i, j) = (0, 0) first...
-            let cands = filter_all(bt, ds, degree, 0, 0, opts.max_b_per_a);
-            let pre = finish(bt, ds, degree, 0, 0, cands, opts)?;
-            // ...then re-run truncation maximization constrained to the
-            // already-chosen encodings (weaker truncations than
-            // SquareFirst typically survive).
-            let admits = |co: &Coeffs| {
-                pre.enc_a.admits(co.a) && pre.enc_b.admits(co.b) && pre.enc_c.admits(co.c)
-            };
-            let mut best = pre.clone();
-            for i in (0..=xbits).rev() {
-                if let Some(impl_) = reselect_at_trunc(bt, ds, &pre, i, pre.lin_trunc, &admits) {
-                    best = impl_;
-                    break;
-                }
-            }
-            Some(best)
-        }
-    }
+    Some(degree)
 }
 
 /// Binary-search the largest truncation parameter `p` in `[0, x_bits]`
@@ -322,8 +355,8 @@ fn filter_region(
     out
 }
 
-/// Steps 4+: Algorithm 1 per coefficient (a, then b, then c) with pruning,
-/// then select the first jointly-valid triple per region.
+/// Algorithm 1 per coefficient (a, then b, then c) with pruning, then
+/// select the first jointly-valid triple per region.
 fn finish(
     bt: &BoundTable,
     ds: &DesignSpace,
@@ -455,7 +488,7 @@ fn first_admissible_in(enc: &Encoding, c0: i64, c1: i64) -> Option<i64> {
 }
 
 /// Re-run selection at a different truncation pair, constrained to
-/// already-fixed encodings (used by the LUT-first ablation).
+/// already-fixed encodings (used by the width-first orderings).
 fn reselect_at_trunc(
     bt: &BoundTable,
     ds: &DesignSpace,
@@ -614,13 +647,70 @@ mod tests {
         let b = explore(
             &bt,
             &ds,
-            &DseOptions { procedure: Procedure::LutFirst, ..Default::default() },
+            &DseOptions { procedure: Some(Procedure::LutFirst), ..Default::default() },
         )
         .unwrap();
         assert_impl_valid(&bt, &a);
         assert_impl_valid(&bt, &b);
         // SquareFirst should truncate at least as aggressively.
         assert!(a.sq_trunc >= b.sq_trunc || a.degree == Degree::Linear);
+    }
+
+    #[test]
+    fn explicit_square_first_equals_default() {
+        // Default options = AsicGe technology whose default ordering is
+        // SquareFirst; forcing it must be a no-op.
+        let (bt, ds) = setup("exp2", 8, 4);
+        let a = explore(&bt, &ds, &DseOptions::default()).unwrap();
+        let b = explore(
+            &bt,
+            &ds,
+            &DseOptions { procedure: Some(Procedure::SquareFirst), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(a.coeffs, b.coeffs);
+        assert_eq!((a.sq_trunc, a.lin_trunc), (b.sq_trunc, b.lin_trunc));
+        assert_eq!((a.enc_a, a.enc_b, a.enc_c), (b.enc_a, b.enc_b, b.enc_c));
+    }
+
+    #[test]
+    fn pareto_procedure_explores_and_verifies() {
+        for tech in TechKind::ALL {
+            let (bt, ds) = setup("recip", 8, 3); // naturally quadratic
+            let im = explore(
+                &bt,
+                &ds,
+                &DseOptions { procedure: Some(Procedure::Pareto), tech, ..Default::default() },
+            )
+            .unwrap_or_else(|| panic!("{}: pareto found nothing", tech.label()));
+            assert_impl_valid(&bt, &im);
+        }
+    }
+
+    #[test]
+    fn fpga_technology_selects_differently_somewhere() {
+        // The headline acceptance: from the SAME complete space, the
+        // FPGA technology's default procedure picks a different
+        // implementation than the ASIC default on at least one bundled
+        // example. (On recip 8-bit R=3 the FPGA model trades one bit of
+        // square truncation for a two-bit-narrower b coefficient —
+        // narrow soft multipliers beat shallow tables.)
+        let mut diverged = false;
+        for (name, bits, r) in [("recip", 8u32, 3u32), ("recip", 10, 4), ("log2", 10, 4)] {
+            let (bt, ds) = setup(name, bits, r);
+            let asic = explore(&bt, &ds, &DseOptions::default()).unwrap();
+            let fpga = explore(
+                &bt,
+                &ds,
+                &DseOptions { tech: TechKind::FpgaLut6, ..Default::default() },
+            )
+            .unwrap();
+            assert_impl_valid(&bt, &fpga);
+            if !asic.same_selection(&fpga) {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "FPGA technology never diverged from the ASIC selection");
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Decision procedures over the complete design space — the paper's §III
+//! exploration, decomposed into composable lexicographic passes plus a
+//! cost-guided Pareto procedure.
+//!
+//! The pre-trait code was one monolith hardwired to the ASIC ordering.
+//! Here a procedure is data: [`Lexicographic`] sequences [`Pass`]es in
+//! any order ([`Lexicographic::square_first`] reproduces the paper's
+//! procedure bit-for-bit, pinned by `tests/procedure_golden.rs`), and
+//! [`ParetoCost`] replaces the fixed ordering with ranking by a
+//! [`CostModel`] — the "modified decision procedure" the paper says is
+//! all a new hardware technology needs. Custom procedures implement
+//! [`DecisionProcedure`] and run through [`crate::dse::explore_with`].
+
+use std::cmp::Ordering;
+
+use super::{
+    filter_all, finish, max_feasible_trunc, reselect_at_trunc, resolve_degree, Coeffs, Degree,
+    DseOptions, Implementation,
+};
+use crate::bounds::BoundTable;
+use crate::designspace::DesignSpace;
+use crate::synth::synth_min_delay_with;
+use crate::tech::CostModel;
+
+/// One lexicographic optimization pass. A pass refines the current
+/// truncation pair `(i, j)` and/or the selected encodings; sequencing
+/// decides which objective dominates.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Pass {
+    /// Minimize the evaluation-precision surplus `k`. Satisfied by
+    /// construction: [`crate::designspace::generate`] returns the space
+    /// at the smallest `k` feasible across all regions, so this pass is
+    /// a documented no-op — it exists so procedure listings read like
+    /// the paper's step sequence.
+    MinimizeK,
+    /// Maximize the square-input truncation `i`. Before widths are
+    /// fixed this binary-searches the largest `i` every region survives;
+    /// after [`Pass::MinimizeWidths`] it re-selects coefficients under
+    /// the already-chosen encodings at the deepest truncation that still
+    /// admits a selection.
+    MaximizeSquareTrunc,
+    /// Maximize the linear-input truncation `j` (same two modes).
+    MaximizeLinearTrunc,
+    /// Minimize coefficient storage widths `a`, then `b`, then `c` with
+    /// Algorithm 1, pruning the dictionary after each step, then select
+    /// the first jointly-valid triple per region.
+    MinimizeWidths,
+}
+
+/// A decision procedure: consumes the complete [`DesignSpace`] (plus the
+/// bound table it was generated from) and a technology's [`CostModel`],
+/// returns one concrete [`Implementation`].
+///
+/// Lexicographic procedures ignore the cost model; [`ParetoCost`] ranks
+/// by it. Implement this trait to plug in a custom exploration strategy
+/// — [`crate::dse::explore_with`] is the entry point.
+pub trait DecisionProcedure: Sync {
+    /// Identifier for reports and logs.
+    fn name(&self) -> &'static str;
+
+    /// Explore and decide. `None` = the space admits no implementation
+    /// under `opts` (e.g. a forced degree that is infeasible).
+    fn decide(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        cm: &dyn CostModel,
+        opts: &DseOptions,
+    ) -> Option<Implementation>;
+}
+
+/// A sequence of [`Pass`]es applied left to right — earlier passes take
+/// lexicographic priority.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lexicographic {
+    pub passes: Vec<Pass>,
+    name: &'static str,
+}
+
+impl Lexicographic {
+    pub fn new(passes: Vec<Pass>) -> Lexicographic {
+        Lexicographic { passes, name: "lexicographic" }
+    }
+
+    /// The paper's ASIC ordering: truncations first (square, then
+    /// linear), widths last.
+    pub fn square_first() -> Lexicographic {
+        Lexicographic {
+            passes: vec![
+                Pass::MinimizeK,
+                Pass::MaximizeSquareTrunc,
+                Pass::MaximizeLinearTrunc,
+                Pass::MinimizeWidths,
+            ],
+            name: "square_first",
+        }
+    }
+
+    /// The ablation ordering the paper found inferior on ASIC: widths
+    /// minimized on the untruncated dictionary, truncation re-maximized
+    /// afterwards under the fixed encodings.
+    pub fn lut_first() -> Lexicographic {
+        Lexicographic {
+            passes: vec![Pass::MinimizeK, Pass::MinimizeWidths, Pass::MaximizeSquareTrunc],
+            name: "lut_first",
+        }
+    }
+}
+
+/// Deepest-truncation re-selection under fixed encodings: walk the axis
+/// from full truncation down, return the first depth that still admits a
+/// selection (feasibility under fixed encodings need not be monotone, so
+/// this is a linear descent, not a bisection).
+fn constrained_max(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    pre: &Implementation,
+    square_axis: bool,
+    i: u32,
+    j: u32,
+) -> Implementation {
+    let admits = |co: &Coeffs| {
+        pre.enc_a.admits(co.a) && pre.enc_b.admits(co.b) && pre.enc_c.admits(co.c)
+    };
+    for p in (0..=ds.x_bits()).rev() {
+        let (ii, jj) = if square_axis { (p, j) } else { (i, p) };
+        if let Some(im) = reselect_at_trunc(bt, ds, pre, ii, jj, &admits) {
+            return im;
+        }
+    }
+    pre.clone()
+}
+
+impl DecisionProcedure for Lexicographic {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn decide(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        _cm: &dyn CostModel,
+        opts: &DseOptions,
+    ) -> Option<Implementation> {
+        let degree = resolve_degree(ds, opts)?;
+        let xbits = ds.x_bits();
+        let (mut i, mut j) = (0u32, 0u32);
+        let mut fixed: Option<Implementation> = None;
+        for pass in &self.passes {
+            match pass {
+                Pass::MinimizeK => {} // generation already minimized k
+                Pass::MaximizeSquareTrunc => {
+                    if let Some(pre) = fixed.take() {
+                        let upd = constrained_max(bt, ds, &pre, true, i, j);
+                        i = upd.sq_trunc;
+                        fixed = Some(upd);
+                    } else {
+                        // The square path vanishes for linear designs:
+                        // `a = 0` makes `i` unconstrained, so it is
+                        // maximal outright.
+                        i = if degree == Degree::Linear {
+                            xbits
+                        } else {
+                            max_feasible_trunc(bt, ds, degree, opts, |p| (p, j))
+                        };
+                    }
+                }
+                Pass::MaximizeLinearTrunc => {
+                    if let Some(pre) = fixed.take() {
+                        let upd = constrained_max(bt, ds, &pre, false, i, j);
+                        j = upd.lin_trunc;
+                        fixed = Some(upd);
+                    } else {
+                        j = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
+                    }
+                }
+                Pass::MinimizeWidths => {
+                    let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
+                    fixed = Some(finish(bt, ds, degree, i, j, cands, opts)?);
+                }
+            }
+        }
+        match fixed {
+            Some(im) => Some(im),
+            // A sequence without MinimizeWidths still needs encodings to
+            // emit an implementation: minimize them at the final (i, j).
+            None => {
+                let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
+                finish(bt, ds, degree, i, j, cands, opts)
+            }
+        }
+    }
+}
+
+/// Cost-guided Pareto procedure: instead of committing to one pass
+/// order, enumerate the truncation/width trade-off frontier of the
+/// space, cost every candidate with the technology's model, drop
+/// dominated points, and rank the survivors by area-delay product (in
+/// the technology's own units).
+///
+/// Candidates: for quadratic designs, each sampled square truncation
+/// `i` (at its maximal feasible `j`) with widths minimized there; for
+/// linear designs the sweep runs over `j`. The width-first
+/// ([`Lexicographic::lut_first`]) selection joins the pool, so the
+/// procedure can trade truncation away entirely when storage is cheap —
+/// which is exactly what the FPGA model does on bundled examples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParetoCost {
+    /// Cap on sampled truncation depths — never exceeded; both endpoints
+    /// (full and zero truncation) are always in the sample. Values below
+    /// 2 are treated as 2.
+    pub max_candidates: usize,
+}
+
+impl Default for ParetoCost {
+    fn default() -> Self {
+        ParetoCost { max_candidates: 6 }
+    }
+}
+
+/// `max, ..., 0` downsampled to at most `cap` values (`cap >= 2`),
+/// descending, both endpoints included.
+fn downsample_desc(max: u32, cap: usize) -> Vec<u32> {
+    let cap = cap.max(2) as u32;
+    if max < cap {
+        return (0..=max).rev().collect();
+    }
+    // ceil(max / stride) values above zero, i.e. at most cap - 1, plus 0.
+    let stride = max.div_ceil(cap - 1);
+    let mut vals = Vec::with_capacity(cap as usize);
+    let mut v = max;
+    while v > 0 {
+        vals.push(v);
+        v = v.saturating_sub(stride);
+    }
+    vals.push(0);
+    vals
+}
+
+impl DecisionProcedure for ParetoCost {
+    fn name(&self) -> &'static str {
+        "pareto"
+    }
+
+    fn decide(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        cm: &dyn CostModel,
+        opts: &DseOptions,
+    ) -> Option<Implementation> {
+        let degree = resolve_degree(ds, opts)?;
+        let xbits = ds.x_bits();
+        let cap = opts.max_b_per_a;
+        let mut cands: Vec<Implementation> = Vec::new();
+        let at = |i: u32, j: u32| -> Option<Implementation> {
+            finish(bt, ds, degree, i, j, filter_all(bt, ds, degree, i, j, cap), opts)
+        };
+        if degree == Degree::Quadratic {
+            let i_max = max_feasible_trunc(bt, ds, degree, opts, |p| (p, 0));
+            for i in downsample_desc(i_max, self.max_candidates) {
+                let j = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
+                cands.extend(at(i, j));
+            }
+        } else {
+            let j_max = max_feasible_trunc(bt, ds, degree, opts, |p| (xbits, p));
+            for j in downsample_desc(j_max, self.max_candidates) {
+                cands.extend(at(xbits, j));
+            }
+        }
+        // The width-first selection explores the opposite corner of the
+        // trade space (minimal widths, whatever truncation survives).
+        if let Some(wf) = Lexicographic::lut_first().decide(bt, ds, cm, opts) {
+            if wf.degree == degree {
+                cands.push(wf);
+            }
+        }
+        let mut costed: Vec<(Implementation, crate::synth::SynthPoint)> = cands
+            .into_iter()
+            .map(|im| {
+                let p = synth_min_delay_with(cm, &im);
+                (im, p)
+            })
+            .collect();
+        // Pareto filter on (area, delay), then rank by area-delay
+        // product; ties keep the earlier (deeper-truncation) candidate.
+        let mut best: Option<(usize, f64)> = None;
+        for (idx, (_, p)) in costed.iter().enumerate() {
+            let dominated = costed.iter().any(|(_, q)| {
+                q.area_um2 <= p.area_um2
+                    && q.delay_ns <= p.delay_ns
+                    && (q.area_um2 < p.area_um2 || q.delay_ns < p.delay_ns)
+            });
+            if dominated {
+                continue;
+            }
+            let adp = p.area_um2 * p.delay_ns;
+            let improves = match best {
+                None => true,
+                Some((_, b)) => adp.total_cmp(&b) == Ordering::Less,
+            };
+            if improves {
+                best = Some((idx, adp));
+            }
+        }
+        best.map(|(idx, _)| costed.swap_remove(idx).0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{builtin, AccuracySpec, BoundTable};
+    use crate::designspace::{generate, GenOptions};
+    use crate::tech::TechKind;
+
+    fn setup(name: &str, bits: u32, r: u32) -> (BoundTable, DesignSpace) {
+        let f = builtin(name, bits).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+            .unwrap_or_else(|e| panic!("{name}/{bits} R={r}: {e}"));
+        (bt, ds)
+    }
+
+    fn assert_valid(bt: &BoundTable, im: &Implementation) {
+        for z in 0..(1u64 << bt.in_bits) {
+            let out = im.eval(z);
+            assert!(
+                out >= bt.l[z as usize] as i64 && out <= bt.u[z as usize] as i64,
+                "z={z}: {out} outside bounds"
+            );
+        }
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints_and_honors_cap() {
+        assert_eq!(downsample_desc(3, 6), vec![3, 2, 1, 0]);
+        assert_eq!(downsample_desc(0, 6), vec![0]);
+        assert_eq!(downsample_desc(11, 4), vec![11, 7, 3, 0]);
+        for max in 0..40u32 {
+            for cap in 2..8usize {
+                let v = downsample_desc(max, cap);
+                assert!(v.len() <= cap, "max={max} cap={cap}: {v:?}");
+                assert_eq!(*v.first().unwrap(), max);
+                assert_eq!(*v.last().unwrap(), 0);
+                assert!(v.windows(2).all(|w| w[0] > w[1]), "{v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_procedure_yields_valid_implementations() {
+        let (bt, ds) = setup("recip", 8, 3); // naturally quadratic
+        let cm = TechKind::AsicGe.technology().cost_model();
+        let opts = DseOptions::default();
+        for proc_ in [
+            &Lexicographic::square_first() as &dyn DecisionProcedure,
+            &Lexicographic::lut_first(),
+            &ParetoCost::default(),
+        ] {
+            let im = proc_
+                .decide(&bt, &ds, cm, &opts)
+                .unwrap_or_else(|| panic!("{} found nothing", proc_.name()));
+            assert_valid(&bt, &im);
+        }
+    }
+
+    #[test]
+    fn custom_pass_orders_explore_and_verify() {
+        // The point of the decomposition: orderings beyond the two
+        // shipped ones are expressible and stay correct.
+        let (bt, ds) = setup("log2", 10, 5);
+        let cm = TechKind::AsicGe.technology().cost_model();
+        let opts = DseOptions::default();
+        for passes in [
+            vec![Pass::MaximizeLinearTrunc, Pass::MaximizeSquareTrunc, Pass::MinimizeWidths],
+            vec![Pass::MaximizeSquareTrunc, Pass::MinimizeWidths, Pass::MaximizeLinearTrunc],
+            vec![Pass::MinimizeK], // implicit width minimization at (0, 0)
+        ] {
+            let im = Lexicographic::new(passes.clone())
+                .decide(&bt, &ds, cm, &opts)
+                .unwrap_or_else(|| panic!("{passes:?} found nothing"));
+            assert_valid(&bt, &im);
+        }
+    }
+
+    #[test]
+    fn pareto_never_returns_a_dominated_candidate() {
+        let (bt, ds) = setup("recip", 10, 4); // quadratic
+        for tech in TechKind::ALL {
+            let cm = tech.technology().cost_model();
+            let im = ParetoCost::default()
+                .decide(&bt, &ds, cm, &DseOptions::default())
+                .expect("pareto found nothing");
+            assert_valid(&bt, &im);
+            // The winner must not be beaten on both axes by the plain
+            // square-first selection under the same model.
+            let sq = Lexicographic::square_first()
+                .decide(&bt, &ds, cm, &DseOptions::default())
+                .unwrap();
+            let pw = synth_min_delay_with(cm, &im);
+            let ps = synth_min_delay_with(cm, &sq);
+            assert!(
+                !(ps.area_um2 < pw.area_um2 && ps.delay_ns < pw.delay_ns),
+                "{}: pareto winner dominated by square-first",
+                tech.label()
+            );
+        }
+    }
+}

@@ -20,6 +20,7 @@ pub mod pipeline;
 pub mod pool;
 pub mod rtl;
 pub mod synth;
+pub mod tech;
 pub mod runtime;
 pub mod verify;
 pub mod fixedpoint;

@@ -6,17 +6,21 @@
 //!
 //! ```text
 //! polygen generate --func recip --bits 16 --lub 8 [--naive|--pruned] [--threads N] [--cache DIR]
-//! polygen dse      --func recip --bits 16 --lub 8 [--quadratic|--linear] [--lut-first]
+//! polygen dse      --func recip --bits 16 --lub 8 [--quadratic|--linear] [--procedure P]
 //! polygen rtl      --func recip --bits 10 --lub 5 --out DIR [--tb]
 //! polygen verify   --func recip --bits 16 --lub 8 [--engine scalar|xla|pallas] [--artifacts DIR]
 //! polygen sweep    --func log2  --bits 10 [--threads N]
-//! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear> [--deep] [--out DIR]
+//! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear|tech> [--deep] [--out DIR]
 //! polygen config   --file job.toml [--set key=value ...]
 //! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR]
 //! ```
 //!
 //! `--lub auto` (optionally with `--objective area|delay|area_delay`)
-//! enables automatic lookup-bit selection on any flow.
+//! enables automatic lookup-bit selection on any flow. Every flow takes
+//! `--tech asic-ge|fpga-lut6|low-power` (the technology target: cost
+//! model + default decision procedure) and `--procedure
+//! square_first|lut_first|pareto` to force an ordering (`--lut-first`
+//! is kept as a shorthand).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -24,7 +28,7 @@ use std::process::ExitCode;
 use polygen::cli::Args;
 use polygen::pipeline::{
     parse_accuracy, Batch, Config, Degree, Flavor, JobSpec, LubObjective, Pipeline, Procedure,
-    SearchStrategy, XlaRuntime,
+    SearchStrategy, TechKind, XlaRuntime,
 };
 use polygen::report;
 
@@ -39,13 +43,23 @@ fn usage() -> ExitCode {
 /// Build a pipeline from the common flags (`--func --bits --accuracy
 /// --lub --naive/--pruned --max-k --threads --max-b --quadratic/--linear
 /// --lut-first --cache --tb`); the default search is the hull engine.
+fn tech_from(args: &Args) -> Result<TechKind, String> {
+    match args.get("tech") {
+        Some(t) => TechKind::parse(t)
+            .ok_or_else(|| format!("bad tech {t} (asic-ge|fpga-lut6|low-power)")),
+        None => Ok(TechKind::default()),
+    }
+}
+
 fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
     let func = args.get("func").unwrap_or("recip");
     let acc = parse_accuracy(args.get("accuracy").unwrap_or("1ulp"))
         .map_err(|e| e.to_string())?;
+    let tech = tech_from(args)?;
     let mut p = Pipeline::function(func)
         .bits(args.u32_or("bits", 10))
         .accuracy(acc)
+        .technology(tech)
         .search(if args.has("naive") {
             SearchStrategy::Naive
         } else if args.has("pruned") {
@@ -57,11 +71,16 @@ fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
         .threads(args.u32_or("threads", 1) as usize)
         .max_b_per_a(args.u32_or("max-b", 512) as usize);
     p = match args.get("lub") {
-        Some("auto") => p.auto_lub(match args.get("objective").unwrap_or("area_delay") {
-            "area" => LubObjective::Area,
-            "delay" => LubObjective::Delay,
-            "area_delay" => LubObjective::AreaDelay,
-            other => return Err(format!("bad objective {other} (area|delay|area_delay)")),
+        Some("auto") => p.auto_lub(match args.get("objective") {
+            // No explicit objective: the technology's own default (e.g.
+            // minimum activity-weighted area for low-power).
+            None => tech.technology().default_objective(),
+            Some("area") => LubObjective::Area,
+            Some("delay") => LubObjective::Delay,
+            Some("area_delay") => LubObjective::AreaDelay,
+            Some(other) => {
+                return Err(format!("bad objective {other} (area|delay|area_delay)"))
+            }
         }),
         Some(v) => p.lub(v.parse().map_err(|_| format!("bad lub {v}"))?),
         None => p.lub(6),
@@ -71,7 +90,16 @@ fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
     } else if args.has("linear") {
         p = p.degree(Degree::Linear);
     }
-    if args.has("lut-first") {
+    if let Some(proc_) = args.get("procedure") {
+        p = p.procedure(match proc_ {
+            "square_first" => Procedure::SquareFirst,
+            "lut_first" => Procedure::LutFirst,
+            "pareto" => Procedure::Pareto,
+            other => {
+                return Err(format!("bad procedure {other} (square_first|lut_first|pareto)"))
+            }
+        });
+    } else if args.has("lut-first") {
         p = p.procedure(Procedure::LutFirst);
     }
     if let Some(dir) = args.get("cache") {
@@ -115,15 +143,21 @@ fn run() -> Result<(), String> {
                 .map_err(|e| e.to_string())?
                 .synthesize();
             let im = &s.implementation;
+            // Echo the canonical label and the technology's area unit
+            // (the parse already succeeded in pipeline_from; aliases
+            // like `fpga` normalize here).
+            let tech = tech_from(&args)?;
             println!(
-                "impl: {:?} k={} i={} j={} LUT {}  min-delay {:.3} ns, {:.1} um2",
+                "impl [{}]: {:?} k={} i={} j={} LUT {}  min-delay {:.3} ns, {:.1} {}",
+                tech.label(),
                 im.degree,
                 im.k,
                 im.sq_trunc,
                 im.lin_trunc,
                 im.lut_width_label(),
                 s.synth.delay_ns,
-                s.synth.area_um2
+                s.synth.area_um2,
+                tech.technology().cost_model().area_unit()
             );
             for (r, co) in im.coeffs.iter().enumerate().take(8) {
                 println!("  r={r}: a={} b={} c={}", co.a, co.b, co.c);
@@ -242,6 +276,19 @@ fn run() -> Result<(), String> {
                 }
                 "claim" => report::claim_ii1("recip", 16, 8, 3),
                 "scaling" => report::scaling("recip", 16, &[6, 7, 8, 9, 10, 11]),
+                "tech" => {
+                    let mut cases = vec![
+                        ("recip", 8, 3),
+                        ("recip", 10, 4),
+                        ("log2", 10, 4),
+                        ("exp2", 10, 3),
+                    ];
+                    if deep {
+                        cases.push(("recip", 16, 6));
+                        cases.push(("log2", 16, 6));
+                    }
+                    report::tech_table(&cases)
+                }
                 "linear" => ["recip", "log2", "exp2"]
                     .iter()
                     .map(|f| report::linear_threshold(f, 10))

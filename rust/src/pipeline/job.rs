@@ -28,7 +28,7 @@ use crate::coordinator::config::Config;
 
 use super::{
     AccuracySpec, Degree, Implementation, LookupBits, LubObjective, Pipeline, PipelineError,
-    Procedure, SearchStrategy, Settings, SynthPoint, VerifyReport,
+    Procedure, SearchStrategy, Settings, SynthPoint, TechKind, VerifyReport,
 };
 
 /// One pipeline job, serializable to/from a TOML job file.
@@ -39,7 +39,11 @@ pub struct JobSpec {
     pub accuracy: AccuracySpec,
     pub lookup: LookupBits,
     pub degree: Option<Degree>,
-    pub procedure: Procedure,
+    /// Forced procedure; `None` (`procedure = auto`) = the technology's
+    /// default ordering.
+    pub procedure: Option<Procedure>,
+    /// Technology target (`tech = "asic-ge" | "fpga-lut6" | "low-power"`).
+    pub tech: TechKind,
     pub search: SearchStrategy,
     pub max_k: u32,
     pub threads: usize,
@@ -61,6 +65,7 @@ impl JobSpec {
             lookup: s.lookup,
             degree: s.degree,
             procedure: s.procedure,
+            tech: s.tech,
             search: s.search,
             max_k: s.max_k,
             threads: s.threads,
@@ -84,11 +89,14 @@ impl JobSpec {
             .bits(self.bits)
             .accuracy(self.accuracy)
             .lookup_bits(self.lookup)
-            .procedure(self.procedure)
+            .technology(self.tech)
             .search(self.search)
             .max_k(self.max_k)
             .threads(self.threads)
             .max_b_per_a(self.max_b_per_a);
+        if let Some(pr) = self.procedure {
+            p = p.procedure(pr);
+        }
         if let Some(d) = self.degree {
             p = p.degree(d);
         }
@@ -138,6 +146,10 @@ impl JobSpec {
         if let Some(v) = cfg.get("accuracy") {
             s.accuracy = parse_accuracy(v)?;
         }
+        if let Some(v) = cfg.get("tech") {
+            s.tech = TechKind::parse(v)
+                .ok_or_else(|| spec_err(format!("tech: {v} (asic-ge|fpga-lut6|low-power)")))?;
+        }
         if let Some(v) = cfg.get("generate.lookup_bits") {
             s.lookup = parse_lookup(v)?;
         }
@@ -157,8 +169,10 @@ impl JobSpec {
         }
         if let Some(v) = cfg.get("dse.procedure") {
             s.procedure = match v {
-                "square_first" => Procedure::SquareFirst,
-                "lut_first" => Procedure::LutFirst,
+                "auto" => None,
+                "square_first" => Some(Procedure::SquareFirst),
+                "lut_first" => Some(Procedure::LutFirst),
+                "pareto" => Some(Procedure::Pareto),
                 other => return Err(spec_err(format!("dse.procedure: {other}"))),
             };
         }
@@ -188,7 +202,8 @@ impl JobSpec {
         let mut out = String::new();
         out.push_str(&format!("func = {}\n", self.func));
         out.push_str(&format!("bits = {}\n", self.bits));
-        out.push_str(&format!("accuracy = {}\n\n", self.accuracy.label()));
+        out.push_str(&format!("accuracy = {}\n", self.accuracy.label()));
+        out.push_str(&format!("tech = {}\n\n", self.tech.label()));
         out.push_str("[generate]\n");
         out.push_str(&format!("lookup_bits = {}\n", lookup_label(self.lookup)));
         out.push_str(&format!(
@@ -205,8 +220,10 @@ impl JobSpec {
         out.push_str(&format!(
             "procedure = {}\n",
             match self.procedure {
-                Procedure::SquareFirst => "square_first",
-                Procedure::LutFirst => "lut_first",
+                None => "auto",
+                Some(Procedure::SquareFirst) => "square_first",
+                Some(Procedure::LutFirst) => "lut_first",
+                Some(Procedure::Pareto) => "pareto",
             }
         ));
         out.push_str(&format!(
@@ -300,6 +317,13 @@ impl JobResult {
 /// from a shared queue (dynamic load balancing — auto-LUB sweeps take
 /// much longer than fixed-`R` jobs), and one result slot per spec keeps
 /// output order deterministic.
+///
+/// `threads` is the batch's **total thread budget**: when a spec itself
+/// asks for `job.threads > 1` (threaded generation / sweeps inside the
+/// job), the inner thread count is clamped so `workers x inner` never
+/// exceeds the budget — nested parallelism must not oversubscribe (see
+/// [`Batch::inner_thread_cap`]). Thread counts never change any result
+/// (property-tested), so the clamp is invisible except to the scheduler.
 #[derive(Clone, Debug, Default)]
 pub struct Batch {
     threads: usize,
@@ -311,7 +335,7 @@ impl Batch {
         Batch { threads: 1, cache_dir: None }
     }
 
-    /// Worker-thread count (default 1 = sequential).
+    /// Total thread budget (default 1 = sequential).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
@@ -328,6 +352,19 @@ impl Batch {
         Batch::new().threads(threads).execute(specs)
     }
 
+    /// Per-job inner thread cap for a batch of `jobs` under a total
+    /// budget of `budget` threads: with `W = min(budget, jobs)` workers
+    /// running concurrently, each job may use at most `budget / W`
+    /// threads, so the batch never runs more than `budget` threads in
+    /// total. With at least as many jobs as budget this is 1 (all
+    /// parallelism goes to the job-level pool); leftover budget flows to
+    /// inner generation threads only when the batch is small.
+    pub fn inner_thread_cap(budget: usize, jobs: usize) -> usize {
+        let budget = budget.max(1);
+        let workers = budget.min(jobs.max(1));
+        (budget / workers).max(1)
+    }
+
     /// Execute every spec; `results[i]` corresponds to `specs[i]`. A
     /// failing job fails its own slot only. Jobs are pulled from the
     /// shared work-stealing pool ([`crate::pool`]) — the same scheduler
@@ -335,7 +372,12 @@ impl Batch {
     /// parks the other workers.
     pub fn execute(&self, specs: &[JobSpec]) -> Vec<Result<JobResult, PipelineError>> {
         let cache = self.cache_dir.as_deref();
-        crate::pool::run_indexed(specs.len(), self.threads, |i| specs[i].run_with(cache))
+        let inner_cap = Batch::inner_thread_cap(self.threads, specs.len());
+        crate::pool::run_indexed(specs.len(), self.threads, |i| {
+            let mut spec = specs[i].clone();
+            spec.threads = spec.threads.clamp(1, inner_cap);
+            spec.run_with(cache)
+        })
     }
 }
 
@@ -358,7 +400,8 @@ mod tests {
             accuracy: AccuracySpec::Faithful,
             lookup: LookupBits::Auto(LubObjective::Delay),
             degree: Some(Degree::Quadratic),
-            procedure: Procedure::LutFirst,
+            procedure: Some(Procedure::LutFirst),
+            tech: TechKind::FpgaLut6,
             search: SearchStrategy::Naive,
             max_k: 24,
             threads: 4,
@@ -369,6 +412,25 @@ mod tests {
         let text = spec.to_toml();
         let back = JobSpec::from_toml(&text).unwrap();
         assert_eq!(spec, back, "round-trip through:\n{text}");
+    }
+
+    #[test]
+    fn tech_and_procedure_labels_roundtrip() {
+        for tech in TechKind::ALL {
+            for procedure in [
+                None,
+                Some(Procedure::SquareFirst),
+                Some(Procedure::LutFirst),
+                Some(Procedure::Pareto),
+            ] {
+                let mut spec = JobSpec::new("recip", 10);
+                spec.tech = tech;
+                spec.procedure = procedure;
+                let back = JobSpec::from_toml(&spec.to_toml()).unwrap();
+                assert_eq!(back.tech, tech);
+                assert_eq!(back.procedure, procedure);
+            }
+        }
     }
 
     #[test]
@@ -385,6 +447,7 @@ mod tests {
         for text in [
             "bits = twelve\n",
             "accuracy = tight\n",
+            "tech = tpu\n",
             "[generate]\nlookup_bits = many\n",
             "[generate]\nsearch = exhaustive\n",
             "[dse]\ndegree = cubic\n",
@@ -427,6 +490,70 @@ mod tests {
             assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
             assert_eq!(a.lookup_bits, b.lookup_bits);
         }
+    }
+
+    #[test]
+    fn inner_thread_cap_never_exceeds_budget() {
+        // The oversubscription regression (ROADMAP): W workers each
+        // running a job with job.threads > 1 must keep W * inner within
+        // the configured budget.
+        for budget in 1..=16usize {
+            for jobs in 1..=20usize {
+                let cap = Batch::inner_thread_cap(budget, jobs);
+                let workers = budget.min(jobs.max(1));
+                assert!(cap >= 1);
+                assert!(
+                    workers * cap <= budget,
+                    "budget={budget} jobs={jobs}: {workers} workers x {cap} inner"
+                );
+            }
+        }
+        // As many jobs as budget: all parallelism goes to the job pool.
+        assert_eq!(Batch::inner_thread_cap(8, 8), 1);
+        assert_eq!(Batch::inner_thread_cap(8, 100), 1);
+        // Small batch, big budget: leftover flows inward.
+        assert_eq!(Batch::inner_thread_cap(8, 2), 4);
+        assert_eq!(Batch::inner_thread_cap(3, 2), 1);
+        assert_eq!(Batch::inner_thread_cap(0, 0), 1);
+    }
+
+    #[test]
+    fn batch_clamps_threaded_jobs_without_changing_results() {
+        // Jobs demanding 16 inner threads under a 2-thread batch budget:
+        // the clamp engages (cap = 1) and results still match the
+        // unclamped sequential run — thread counts never change results.
+        let mut specs = vec![JobSpec::new("recip", 8), JobSpec::new("exp2", 8)];
+        for s in &mut specs {
+            s.threads = 16;
+        }
+        let clamped = Batch::run(&specs, 2);
+        let seq: Vec<_> = specs.iter().map(|s| s.run()).collect();
+        for (a, b) in clamped.iter().zip(&seq) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
+        }
+    }
+
+    #[test]
+    fn batch_runs_per_technology_jobs() {
+        // One function, three technologies, one batch: every job
+        // verifies, and the FPGA job costs in its own (slower) units.
+        let specs: Vec<JobSpec> = TechKind::ALL
+            .iter()
+            .map(|&t| {
+                let mut s = JobSpec::new("recip", 8);
+                s.lookup = LookupBits::Fixed(3);
+                s.tech = t;
+                s
+            })
+            .collect();
+        let results = Batch::run(&specs, 3);
+        let ok: Vec<&JobResult> =
+            results.iter().map(|r| r.as_ref().expect("job failed")).collect();
+        for j in &ok {
+            assert!(j.verify.as_ref().unwrap().ok());
+        }
+        assert!(ok[1].synth.delay_ns > ok[0].synth.delay_ns, "FPGA must be slower");
     }
 
     #[test]

@@ -85,7 +85,6 @@ use crate::coordinator::{
 };
 use crate::designspace::generate;
 use crate::rtl;
-use crate::synth::synth_min_delay;
 use crate::verify::verify_exhaustive;
 
 pub use error::PipelineError;
@@ -98,10 +97,15 @@ pub use crate::coordinator::config::Config;
 pub use crate::coordinator::{LubObjective, SweepPoint};
 pub use crate::designspace::extrema::SearchStrategy;
 pub use crate::designspace::{DesignSpace, GenError, GenOptions};
+pub use crate::dse::procedure::{DecisionProcedure, Lexicographic, ParetoCost, Pass};
 pub use crate::dse::{Degree, DseOptions, Implementation, Procedure};
 pub use crate::rtl::{emit_golden_hex, emit_module, emit_testbench, DatapathSim};
 pub use crate::runtime::{Flavor, XlaRuntime};
-pub use crate::synth::{breakdown, synth_at, Breakdown, SynthPoint};
+pub use crate::synth::{
+    breakdown, breakdown_with, synth_at, synth_at_with, synth_min_delay_with, Breakdown,
+    SynthPoint,
+};
+pub use crate::tech::{CostModel, TechKind, Technology};
 pub use crate::verify::{verify_exhaustive as verify_implementation, Engine, VerifyReport};
 
 /// How the pipeline chooses the lookup-bit count `R`.
@@ -122,7 +126,10 @@ struct Settings {
     accuracy: AccuracySpec,
     lookup: LookupBits,
     degree: Option<Degree>,
-    procedure: Procedure,
+    /// Forced procedure; `None` = the technology's default ordering.
+    procedure: Option<Procedure>,
+    /// Technology target: cost model + default procedure/objective.
+    tech: TechKind,
     search: SearchStrategy,
     max_k: u32,
     threads: usize,
@@ -142,6 +149,7 @@ impl Default for Settings {
             lookup: LookupBits::Fixed(gen.lookup_bits),
             degree: dse.degree,
             procedure: dse.procedure,
+            tech: dse.tech,
             search: gen.search,
             max_k: gen.max_k,
             threads: gen.threads,
@@ -174,9 +182,15 @@ impl Settings {
     fn dse_opts(&self) -> DseOptions {
         DseOptions {
             procedure: self.procedure,
+            tech: self.tech,
             degree: self.degree,
             max_b_per_a: self.max_b_per_a,
         }
+    }
+
+    /// The cost model every costing stage uses.
+    fn cost_model(&self) -> &'static dyn CostModel {
+        self.tech.technology().cost_model()
     }
 }
 
@@ -243,9 +257,18 @@ impl Pipeline {
         self
     }
 
-    /// Decision-procedure variant (default: the paper's SquareFirst).
+    /// Force a decision-procedure variant (default: the technology's own
+    /// ordering — the paper's SquareFirst for [`TechKind::AsicGe`]).
     pub fn procedure(mut self, procedure: Procedure) -> Self {
-        self.settings.procedure = procedure;
+        self.settings.procedure = Some(procedure);
+        self
+    }
+
+    /// Technology target (default [`TechKind::AsicGe`]): selects the
+    /// cost model behind every costing stage and, unless
+    /// [`Pipeline::procedure`] forces one, the decision procedure.
+    pub fn technology(mut self, tech: TechKind) -> Self {
+        self.settings.tech = tech;
         self
     }
 
@@ -472,9 +495,10 @@ pub struct Explored {
 }
 
 impl Explored {
-    /// Stage 4: cost the datapath at its minimum obtainable delay.
+    /// Stage 4: cost the datapath at its minimum obtainable delay, under
+    /// the pipeline's technology cost model.
     pub fn synthesize(self) -> Synthesized {
-        let synth = synth_min_delay(&self.implementation);
+        let synth = synth_min_delay_with(self.settings.cost_model(), &self.implementation);
         let Explored { settings, workload, space, gen_time, implementation } = self;
         Synthesized { settings, workload, space, gen_time, implementation, synth }
     }
@@ -711,6 +735,31 @@ mod tests {
         assert!(v.report.ok());
         let range = default_r_range(10);
         assert!(range.contains(&v.implementation.lookup_bits));
+    }
+
+    #[test]
+    fn technology_threads_through_the_pipeline() {
+        // Same flow, different technology target: the FPGA pipeline must
+        // verify end to end and cost in its own units (logic levels are
+        // far slower than 7nm FO4s).
+        let asic = Pipeline::function("recip").bits(8).lub(3).run().unwrap();
+        let fpga = Pipeline::function("recip")
+            .bits(8)
+            .lub(3)
+            .technology(TechKind::FpgaLut6)
+            .run()
+            .unwrap();
+        assert!(fpga.report.ok());
+        assert!(fpga.synth.delay_ns > asic.synth.delay_ns);
+        // Forcing the ASIC procedure on the FPGA tech still verifies.
+        let forced = Pipeline::function("recip")
+            .bits(8)
+            .lub(3)
+            .technology(TechKind::FpgaLut6)
+            .procedure(Procedure::SquareFirst)
+            .run()
+            .unwrap();
+        assert!(forced.report.ok());
     }
 
     #[test]

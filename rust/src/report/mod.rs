@@ -12,9 +12,10 @@ use crate::bounds::AccuracySpec;
 use crate::coordinator::{default_r_range, LubObjective, Workload};
 use crate::designspace::extrema::SearchStrategy;
 use crate::designspace::{generate, GenOptions};
-use crate::dse::Degree;
+use crate::dse::{explore, Degree, DseOptions};
 use crate::pipeline::Pipeline;
-use crate::synth::sweep as synth_sweep;
+use crate::synth::{sweep as synth_sweep, synth_min_delay_with};
+use crate::tech::TechKind;
 
 /// Simple timing helper for the bench harnesses (criterion is not
 /// available offline): median of `reps` runs plus the result of the last.
@@ -317,6 +318,86 @@ pub fn scaling(name: &str, bits: u32, rs: &[u32]) -> String {
     out
 }
 
+/// Technology comparison: the SAME complete design space explored by
+/// each shipped technology's default decision procedure and costed by
+/// its own model — the paper's closing claim ("targeting alternative
+/// hardware technologies simply requires a modified decision procedure")
+/// as a table. Rows where the selection differs from `asic-ge` are
+/// marked `*`.
+pub fn tech_table(cases: &[(&str, u32, u32)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "TECH — one design space, per-technology procedures (areas in native units)"
+    );
+    let _ = writeln!(
+        out,
+        "{:<8} {:>4} {:>3} | {:<10} {:<12} {:>4} {:>2} {:>2} {:>14} | {:>9} {:>12}",
+        "func", "bits", "R", "tech", "procedure", "deg", "i", "j", "LUT [a,b,c]", "delay ns",
+        "area"
+    );
+    for &(name, bits, lub) in cases {
+        let prepared = match Pipeline::function(name).bits(bits).lub(lub).prepare() {
+            Ok(p) => p,
+            Err(e) => {
+                let _ = writeln!(out, "{name:<8} {bits:>4} {lub:>3} | {e}");
+                continue;
+            }
+        };
+        let (bt, opts) = (
+            &prepared.workload.bt,
+            GenOptions { lookup_bits: lub, ..Default::default() },
+        );
+        let ds = match generate(bt, &opts) {
+            Ok(ds) => ds,
+            Err(e) => {
+                let _ = writeln!(out, "{name:<8} {bits:>4} {lub:>3} | infeasible: {e}");
+                continue;
+            }
+        };
+        let mut baseline: Option<crate::dse::Implementation> = None;
+        for tech in TechKind::ALL {
+            let dse = DseOptions { tech, ..Default::default() };
+            let Some(im) = explore(bt, &ds, &dse) else {
+                let _ = writeln!(
+                    out,
+                    "{name:<8} {bits:>4} {lub:>3} | {:<10} found no design",
+                    tech.label()
+                );
+                continue;
+            };
+            let cm = tech.technology().cost_model();
+            let p = synth_min_delay_with(cm, &im);
+            let differs = baseline.as_ref().is_some_and(|b| !b.same_selection(&im));
+            let _ = writeln!(
+                out,
+                "{:<8} {:>4} {:>3} | {:<10} {:<12} {:>4} {:>2} {:>2} {:>14} | {:>9.3} {:>7.1} {:<4}{}",
+                name,
+                bits,
+                lub,
+                tech.label(),
+                tech.technology().default_procedure().name(),
+                if im.degree == Degree::Linear { "lin" } else { "quad" },
+                im.sq_trunc,
+                im.lin_trunc,
+                im.lut_width_label(),
+                p.delay_ns,
+                p.area_um2,
+                cm.area_unit(),
+                if differs { " *" } else { "" }
+            );
+            // The `*` marker is defined against asic-ge specifically; if
+            // the ASIC procedure found no design there is no baseline and
+            // the other rows stay unmarked.
+            if tech == TechKind::AsicGe {
+                baseline = Some(im);
+            }
+        }
+    }
+    let _ = writeln!(out, "(* = selection differs from asic-ge on the same space)");
+    out
+}
+
 /// E8: smallest LUT height at which a *linear* interpolator suffices
 /// (paper §II: `0 in [a0, a1]` in every region).
 pub fn linear_threshold(name: &str, bits: u32) -> String {
@@ -357,6 +438,17 @@ mod tests {
     fn claim_ii1_reports_speedup() {
         let s = claim_ii1("recip", 10, 5, 1);
         assert!(s.contains("speedup"));
+    }
+
+    #[test]
+    fn tech_table_shows_divergence_marker() {
+        // recip 8-bit R=3 is the bundled example where the FPGA
+        // technology picks a different implementation than asic-ge.
+        let t = tech_table(&[("recip", 8, 3)]);
+        assert!(t.contains("asic-ge"), "{t}");
+        assert!(t.contains("fpga-lut6"), "{t}");
+        assert!(t.contains("low-power"), "{t}");
+        assert!(t.contains(" *"), "expected a divergence marker:\n{t}");
     }
 
     #[test]

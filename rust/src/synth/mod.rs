@@ -1,8 +1,13 @@
 //! Synthesis cost model — the Design Compiler / TSMC 7 nm substitute
 //! (DESIGN.md §3). Component models in [`components`], whole-datapath
-//! costing and delay-target sweeps in [`model`].
+//! costing and delay-target sweeps in [`model`] — now parameterized over
+//! any technology's [`crate::tech::CostModel`] (the `*_with` variants);
+//! the plain functions remain the bit-identical ASIC shorthands.
 
 pub mod components;
 pub mod model;
 
-pub use model::{breakdown, sweep, synth_at, synth_min_delay, Breakdown, SynthPoint};
+pub use model::{
+    breakdown, breakdown_with, sweep, sweep_with, synth_at, synth_at_with, synth_min_delay,
+    synth_min_delay_with, Breakdown, SynthPoint,
+};

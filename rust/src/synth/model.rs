@@ -13,50 +13,66 @@
 //! that the square path is usually critical drives its decision procedure
 //! (§III), and this model reproduces that: for quadratic designs at the
 //! paper's sizes `T_square > T_lut` until `R` grows large.
+//!
+//! The datapath *composition* is technology-independent; the component
+//! primitives come from a [`CostModel`]. The `*_with` functions take any
+//! cost model; the plain functions are the [`AsicGe`] shorthands and
+//! reproduce the pre-trait numbers bit-for-bit.
 
-use super::components::{
-    lut, multi_operand_add, multiplier, sizing_multiplier, squarer, Cost,
-};
 use crate::dse::{Degree, Implementation};
 use crate::rtl::encode::field_widths;
+use crate::tech::{AsicGe, CostModel};
 
 /// Per-component cost breakdown of one implementation at max drive.
+/// Areas/delays are in the cost model's technology units (gate
+/// equivalents / FO4 for [`AsicGe`]).
 #[derive(Clone, Debug, Default)]
 pub struct Breakdown {
-    pub lut: Cost,
-    pub squarer: Cost,
-    pub mult_a: Cost,
-    pub mult_b: Cost,
-    pub accumulate: Cost,
+    pub lut: super::components::Cost,
+    pub squarer: super::components::Cost,
+    pub mult_a: super::components::Cost,
+    pub mult_b: super::components::Cost,
+    pub accumulate: super::components::Cost,
     /// Minimum achievable delay, ns.
     pub d_min_ns: f64,
-    /// Area at minimum delay... no: area at *relaxed* target, GE.
+    /// Base area in technology units (GE for [`AsicGe`]): the area at a
+    /// fully *relaxed* delay target, before the delay-target sizing of
+    /// [`CostModel::sizing_multiplier`] scales it up. Includes the
+    /// technology's wiring/misc overhead. (Despite the historical field
+    /// name, this is the *minimum area*, not the area at minimum delay.)
     pub area_min_ge: f64,
 }
 
-/// Structural cost of the implementation (drive-independent).
+/// Structural cost of the implementation under the ASIC gate model
+/// (drive-independent). Shorthand for [`breakdown_with`] with [`AsicGe`].
 pub fn breakdown(im: &Implementation) -> Breakdown {
+    breakdown_with(&AsicGe, im)
+}
+
+/// Structural cost of the implementation under any technology's
+/// [`CostModel`].
+pub fn breakdown_with(cm: &dyn CostModel, im: &Implementation) -> Breakdown {
     let (wa, wb, wc) = field_widths(im);
     let xbits = im.x_bits();
     let xs_bits = xbits - im.sq_trunc;
     let xl_bits = xbits - im.lin_trunc;
 
-    let lut_c = lut(im.lookup_bits, wa + wb + wc);
+    let lut_c = cm.lut(im.lookup_bits, wa + wb + wc);
     let (sq_c, ma_c) = if im.degree == Degree::Quadratic {
-        (squarer(xs_bits), multiplier(wa + 1, 2 * xs_bits))
+        (cm.squarer(xs_bits), cm.multiplier(wa + 1, 2 * xs_bits))
     } else {
-        (Cost::zero(), Cost::zero())
+        (super::components::Cost::zero(), super::components::Cost::zero())
     };
-    let mb_c = multiplier(wb + 1, xl_bits);
+    let mb_c = cm.multiplier(wb + 1, xl_bits);
     // Accumulator: three operands at the accumulator width.
     let acc_w = (2 * xs_bits + wa).max(wb + xl_bits).max(wc) + 2 + im.k;
     let n_ops = if im.degree == Degree::Quadratic { 3 } else { 2 };
-    let add_c = multi_operand_add(n_ops, acc_w);
+    let add_c = cm.multi_operand_add(n_ops, acc_w);
 
     let pre_mult = sq_c.delay_fo4.max(lut_c.delay_fo4);
     let mult_path = ma_c.delay_fo4.max(mb_c.delay_fo4 + (lut_c.delay_fo4 - pre_mult).max(0.0));
-    let d_min_fo4 = pre_mult + mult_path + add_c.delay_fo4;
-    let area_ge =
+    let d_min_units = pre_mult + mult_path + add_c.delay_fo4;
+    let area =
         lut_c.area_ge + sq_c.area_ge + ma_c.area_ge + mb_c.area_ge + add_c.area_ge;
 
     Breakdown {
@@ -65,13 +81,14 @@ pub fn breakdown(im: &Implementation) -> Breakdown {
         mult_a: ma_c,
         mult_b: mb_c,
         accumulate: add_c,
-        d_min_ns: d_min_fo4 * super::components::FO4_NS,
-        area_min_ge: area_ge * 1.10, // 10% wiring/misc overhead
+        d_min_ns: d_min_units * cm.delay_unit_ns(),
+        area_min_ge: area * cm.wiring_overhead(),
     }
 }
 
 /// One synthesis result: the model's analogue of a DC run at a delay
-/// target.
+/// target. `area_um2` is in the cost model's report units (µm² for
+/// [`AsicGe`], native LUT6s for the FPGA model).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SynthPoint {
     pub delay_ns: f64,
@@ -88,29 +105,49 @@ impl SynthPoint {
 /// when achievable) and the sized area. Targets below `d_min` are clamped
 /// to `d_min` (DC reports a violated path; we report the floor).
 pub fn synth_at(im: &Implementation, target_ns: f64) -> SynthPoint {
-    let b = breakdown(im);
+    synth_at_with(&AsicGe, im, target_ns)
+}
+
+/// [`synth_at`] under any technology's cost model.
+pub fn synth_at_with(cm: &dyn CostModel, im: &Implementation, target_ns: f64) -> SynthPoint {
+    let b = breakdown_with(cm, im);
     let d = target_ns.max(b.d_min_ns);
-    let mult = sizing_multiplier(b.d_min_ns, d);
+    let mult = cm.sizing_multiplier(b.d_min_ns, d);
     SynthPoint {
         delay_ns: d,
-        area_um2: b.area_min_ge * mult * super::components::GE_UM2,
+        area_um2: b.area_min_ge * mult * cm.area_unit_um2(),
     }
 }
 
 /// The minimum-obtainable-delay point (Table I's operating point).
 pub fn synth_min_delay(im: &Implementation) -> SynthPoint {
-    let b = breakdown(im);
-    synth_at(im, b.d_min_ns)
+    synth_min_delay_with(&AsicGe, im)
+}
+
+/// [`synth_min_delay`] under any technology's cost model.
+pub fn synth_min_delay_with(cm: &dyn CostModel, im: &Implementation) -> SynthPoint {
+    let b = breakdown_with(cm, im);
+    synth_at_with(cm, im, b.d_min_ns)
 }
 
 /// Full area-delay profile (Fig. 2 / Fig. 3): `n` targets from `d_min` to
 /// `relax * d_min`, geometrically spaced.
 pub fn sweep(im: &Implementation, n: usize, relax: f64) -> Vec<SynthPoint> {
-    let b = breakdown(im);
+    sweep_with(&AsicGe, im, n, relax)
+}
+
+/// [`sweep`] under any technology's cost model.
+pub fn sweep_with(
+    cm: &dyn CostModel,
+    im: &Implementation,
+    n: usize,
+    relax: f64,
+) -> Vec<SynthPoint> {
+    let b = breakdown_with(cm, im);
     (0..n)
         .map(|i| {
             let f = (relax.ln() * i as f64 / (n - 1).max(1) as f64).exp();
-            synth_at(im, b.d_min_ns * f)
+            synth_at_with(cm, im, b.d_min_ns * f)
         })
         .collect()
 }
@@ -121,6 +158,7 @@ mod tests {
     use crate::bounds::{builtin, AccuracySpec, BoundTable};
     use crate::designspace::{generate, GenOptions};
     use crate::dse::{explore, DseOptions};
+    use crate::tech::TechKind;
 
     fn demo(name: &str, bits: u32, r: u32) -> Implementation {
         let f = builtin(name, bits).unwrap();
@@ -197,5 +235,35 @@ mod tests {
         assert!(b.mult_b.area_ge > 0.0);
         assert!(b.accumulate.area_ge > 0.0);
         assert!(b.d_min_ns > 0.0);
+    }
+
+    #[test]
+    fn asic_shorthand_is_bit_identical_to_trait_path() {
+        // The free functions are AsicGe delegations: costing through the
+        // trait layer must not perturb a single bit of Table I.
+        let im = demo("recip", 10, 4);
+        let cm = TechKind::AsicGe.technology().cost_model();
+        let a = breakdown(&im);
+        let b = breakdown_with(cm, &im);
+        assert_eq!(a.d_min_ns.to_bits(), b.d_min_ns.to_bits());
+        assert_eq!(a.area_min_ge.to_bits(), b.area_min_ge.to_bits());
+        let pa = synth_at(&im, 0.3);
+        let pb = synth_at_with(cm, &im, 0.3);
+        assert_eq!(pa.delay_ns.to_bits(), pb.delay_ns.to_bits());
+        assert_eq!(pa.area_um2.to_bits(), pb.area_um2.to_bits());
+    }
+
+    #[test]
+    fn technologies_cost_the_same_design_differently() {
+        let im = demo("recip", 10, 4);
+        let asic = synth_min_delay_with(TechKind::AsicGe.technology().cost_model(), &im);
+        let fpga = synth_min_delay_with(TechKind::FpgaLut6.technology().cost_model(), &im);
+        let low = synth_min_delay_with(TechKind::LowPower.technology().cost_model(), &im);
+        // FPGA logic levels are far slower than 7nm FO4s.
+        assert!(fpga.delay_ns > 3.0 * asic.delay_ns, "{} vs {}", fpga.delay_ns, asic.delay_ns);
+        // Activity weighting strictly discounts the energy proxy.
+        assert!(low.area_um2 < asic.area_um2);
+        // Same timing model for low-power.
+        assert_eq!(low.delay_ns.to_bits(), asic.delay_ns.to_bits());
     }
 }

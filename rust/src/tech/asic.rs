@@ -1,0 +1,72 @@
+//! The ASIC gate-equivalent technology: the original calibrated TSMC
+//! 7 nm-like model, now behind the [`Technology`] traits.
+//!
+//! [`AsicGe`]'s cost model *is* [`crate::synth::components`] — every
+//! method delegates to the free functions there — and its default
+//! decision procedure is the paper's SquareFirst ordering, so exploring
+//! and costing through the trait layer reproduces the pre-trait
+//! selections bit-for-bit (pinned by `tests/procedure_golden.rs`).
+
+use super::{CostModel, Technology};
+use crate::dse::procedure::{DecisionProcedure, Lexicographic};
+use crate::synth::components::{
+    self, lut, multi_operand_add, multiplier, squarer, Cost, FO4_NS, GE_UM2,
+};
+
+/// Design Compiler / TSMC 7 nm substitute: areas in gate equivalents,
+/// delays in FO4 units (DESIGN.md §3).
+pub struct AsicGe;
+
+impl CostModel for AsicGe {
+    fn name(&self) -> &'static str {
+        "asic-ge"
+    }
+
+    fn lut(&self, r_bits: u32, width: u32) -> Cost {
+        lut(r_bits, width)
+    }
+
+    fn squarer(&self, w: u32) -> Cost {
+        squarer(w)
+    }
+
+    fn multiplier(&self, w1: u32, w2: u32) -> Cost {
+        multiplier(w1, w2)
+    }
+
+    fn multi_operand_add(&self, n: u32, w: u32) -> Cost {
+        multi_operand_add(n, w)
+    }
+
+    fn delay_unit_ns(&self) -> f64 {
+        FO4_NS
+    }
+
+    fn area_unit_um2(&self) -> f64 {
+        GE_UM2
+    }
+
+    fn area_unit(&self) -> &'static str {
+        "um2"
+    }
+
+    fn sizing_multiplier(&self, d_min_ns: f64, d_target_ns: f64) -> f64 {
+        components::sizing_multiplier(d_min_ns, d_target_ns)
+    }
+}
+
+impl Technology for AsicGe {
+    fn name(&self) -> &'static str {
+        "asic-ge"
+    }
+
+    fn cost_model(&self) -> &dyn CostModel {
+        self
+    }
+
+    /// The paper's ASIC-tuned ordering: the square path is critical, so
+    /// truncations are maximized before widths are minimized.
+    fn default_procedure(&self) -> Box<dyn DecisionProcedure> {
+        Box::new(Lexicographic::square_first())
+    }
+}

@@ -1,0 +1,134 @@
+//! LUT6/carry-chain FPGA technology.
+//!
+//! Cost structure differs from the gate model in exactly the way that
+//! flips the decision procedure's preferences: a coefficient table of
+//! `R <= 6` lookup bits costs about one LUT6 *per stored bit* (a 6-input
+//! LUT holds 64 entries natively), while multipliers are soft —
+//! partial-product LUTs plus carry chains, with area close to the full
+//! `w1 * w2` bit product. Narrow multipliers therefore beat shallow
+//! tables, and the cost-guided default procedure spends table width to
+//! buy narrower `b` coefficients (see `report tech`: on `recip` 8-bit at
+//! `R = 3` it selects `(i, widths)` the ASIC ordering rejects).
+//!
+//! Units: area in LUT6 equivalents, delay in logic levels
+//! (~0.45 ns per level including routing).
+
+use super::{CostModel, Technology};
+use crate::dse::procedure::{DecisionProcedure, ParetoCost};
+use crate::synth::components::Cost;
+
+/// LUT6/carry-chain fabric model.
+pub struct FpgaLut6;
+
+fn log2f(v: u32) -> f64 {
+    (v.max(2) as f64).log2()
+}
+
+/// Carry-chain ripple adder: ~w/2 LUT6s (two bits per LUT + chain), one
+/// level plus the chain propagation.
+fn cc_adder(w: u32) -> Cost {
+    if w == 0 {
+        return Cost::zero();
+    }
+    Cost { area_ge: 0.5 * w as f64, delay_fo4: 0.6 + 0.045 * w as f64 }
+}
+
+impl CostModel for FpgaLut6 {
+    fn name(&self) -> &'static str {
+        "fpga-lut6"
+    }
+
+    fn lut(&self, r_bits: u32, width: u32) -> Cost {
+        if width == 0 || r_bits == 0 {
+            return Cost::zero();
+        }
+        // One LUT6 per output bit per 64-entry block; F7/F8-style muxes
+        // combine blocks above R = 6.
+        let blocks = (1u64 << r_bits.saturating_sub(6)) as f64;
+        let mux = 0.5 * width as f64 * (blocks - 1.0);
+        Cost {
+            area_ge: width as f64 * blocks + mux,
+            delay_fo4: 1.0 + 0.5 * r_bits.saturating_sub(6) as f64 + 0.15 * log2f(width),
+        }
+    }
+
+    fn squarer(&self, w: u32) -> Cost {
+        if w == 0 {
+            return Cost::zero();
+        }
+        // Folding + the constant operand halve the array twice over.
+        let pp = 0.22 * w as f64 * w as f64;
+        let ca = cc_adder(2 * w);
+        Cost {
+            area_ge: pp + w as f64 + ca.area_ge,
+            delay_fo4: 1.0 + 0.8 * log2f(w) + ca.delay_fo4,
+        }
+    }
+
+    fn multiplier(&self, w1: u32, w2: u32) -> Cost {
+        if w1 == 0 || w2 == 0 {
+            return Cost::zero();
+        }
+        // Soft multiplier: partial-product LUTs plus carry-chain
+        // compressor rows — the dominant FPGA cost.
+        let pp = 0.8 * w1 as f64 * w2 as f64;
+        let ca = cc_adder(w1 + w2);
+        Cost {
+            area_ge: pp + 0.5 * (w1 + w2) as f64 + ca.area_ge,
+            delay_fo4: 1.0 + 1.1 * log2f(w1) + ca.delay_fo4,
+        }
+    }
+
+    fn multi_operand_add(&self, n: u32, w: u32) -> Cost {
+        if n <= 1 {
+            return Cost::zero();
+        }
+        // Ternary carry-chain adders absorb one extra operand per level.
+        let ca = cc_adder(w);
+        Cost {
+            area_ge: n.saturating_sub(2) as f64 * 0.7 * w as f64 + ca.area_ge,
+            delay_fo4: 0.8 * n.saturating_sub(2) as f64 + ca.delay_fo4,
+        }
+    }
+
+    fn delay_unit_ns(&self) -> f64 {
+        0.45 // one logic level + routing
+    }
+
+    fn area_unit_um2(&self) -> f64 {
+        1.0 // report areas in native LUT6 units
+    }
+
+    fn area_unit(&self) -> &'static str {
+        "LUT6"
+    }
+
+    fn wiring_overhead(&self) -> f64 {
+        1.0 // routing is already in the per-level delay
+    }
+
+    fn sizing_multiplier(&self, d_min_ns: f64, d_target_ns: f64) -> f64 {
+        // No continuous gate sizing on an FPGA: tightening the target
+        // costs only mild retiming/duplication.
+        assert!(d_target_ns > 0.0 && d_min_ns > 0.0);
+        let e = (d_min_ns / d_target_ns).min(1.0);
+        1.0 + 0.15 * e * e
+    }
+}
+
+impl Technology for FpgaLut6 {
+    fn name(&self) -> &'static str {
+        "fpga-lut6"
+    }
+
+    fn cost_model(&self) -> &dyn CostModel {
+        self
+    }
+
+    /// Fixed orderings encode the ASIC trade-off; the FPGA fabric needs
+    /// the cost model itself to arbitrate tables against soft
+    /// multipliers, so its default is the cost-guided Pareto procedure.
+    fn default_procedure(&self) -> Box<dyn DecisionProcedure> {
+        Box::new(ParetoCost::default())
+    }
+}

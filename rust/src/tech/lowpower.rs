@@ -1,0 +1,89 @@
+//! Activity-weighted low-power technology.
+//!
+//! Same structural models as [`AsicGe`](super::AsicGe) — the gates are
+//! the gates — but "area" is weighted by per-component switching
+//! activity, so it tracks switched capacitance (dynamic energy) rather
+//! than silicon. Arithmetic arrays toggle on most cycles; the
+//! coefficient table is quiet (one word changes per region switch). The
+//! cost-guided default procedure therefore leans harder on truncation
+//! (shrinking the toggling arrays) and tolerates wider, cold storage.
+
+use super::{AsicGe, CostModel, Technology};
+use crate::coordinator::LubObjective;
+use crate::dse::procedure::{DecisionProcedure, ParetoCost};
+use crate::synth::components::Cost;
+
+/// Switching-activity weights relative to a free-running adder.
+const ACT_LUT: f64 = 0.15;
+const ACT_SQ: f64 = 0.50;
+const ACT_MUL: f64 = 0.60;
+const ACT_ADD: f64 = 0.35;
+
+/// Activity-weighted gate model: areas are energy proxies, delays are
+/// the [`AsicGe`] delays.
+pub struct LowPower;
+
+fn weigh(c: Cost, act: f64) -> Cost {
+    Cost { area_ge: c.area_ge * act, delay_fo4: c.delay_fo4 }
+}
+
+impl CostModel for LowPower {
+    fn name(&self) -> &'static str {
+        "low-power"
+    }
+
+    fn lut(&self, r_bits: u32, width: u32) -> Cost {
+        weigh(AsicGe.lut(r_bits, width), ACT_LUT)
+    }
+
+    fn squarer(&self, w: u32) -> Cost {
+        weigh(AsicGe.squarer(w), ACT_SQ)
+    }
+
+    fn multiplier(&self, w1: u32, w2: u32) -> Cost {
+        weigh(AsicGe.multiplier(w1, w2), ACT_MUL)
+    }
+
+    fn multi_operand_add(&self, n: u32, w: u32) -> Cost {
+        weigh(AsicGe.multi_operand_add(n, w), ACT_ADD)
+    }
+
+    fn delay_unit_ns(&self) -> f64 {
+        AsicGe.delay_unit_ns()
+    }
+
+    fn area_unit_um2(&self) -> f64 {
+        AsicGe.area_unit_um2()
+    }
+
+    fn area_unit(&self) -> &'static str {
+        "sw-um2" // switched-capacitance-weighted µm²
+    }
+
+    fn sizing_multiplier(&self, d_min_ns: f64, d_target_ns: f64) -> f64 {
+        AsicGe.sizing_multiplier(d_min_ns, d_target_ns)
+    }
+}
+
+impl Technology for LowPower {
+    fn name(&self) -> &'static str {
+        "low-power"
+    }
+
+    fn cost_model(&self) -> &dyn CostModel {
+        self
+    }
+
+    fn default_procedure(&self) -> Box<dyn DecisionProcedure> {
+        Box::new(ParetoCost::default())
+    }
+
+    /// Energy is the scarce resource: sweep lookup bits for minimum
+    /// (activity-weighted) area rather than area-delay. Takes effect on
+    /// `--tech low-power --lub auto` (unless `--objective` overrides);
+    /// job files with `lookup_bits = auto` still default to area-delay
+    /// (ROADMAP open item).
+    fn default_objective(&self) -> LubObjective {
+        LubObjective::Area
+    }
+}

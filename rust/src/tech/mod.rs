@@ -1,0 +1,215 @@
+//! Pluggable technology targets — the paper's closing claim made into an
+//! API.
+//!
+//! The paper ends on: *"Targeting alternative hardware technologies
+//! simply requires a modified decision procedure to explore the space."*
+//! This module is that claim as a contract. Two traits carve the
+//! technology axis out of the exploration/costing layer:
+//!
+//! - [`CostModel`] — the area/delay primitives (coefficient LUT,
+//!   multiplier, squarer, multi-operand accumulate) plus the
+//!   technology's unit system and delay-target sizing behaviour. The
+//!   whole-datapath composition lives in [`crate::synth::model`]
+//!   (`breakdown_with`, `synth_at_with`, ...), parameterized over this
+//!   trait.
+//! - [`Technology`] — bundles a cost model with the technology's default
+//!   decision-procedure ordering
+//!   ([`DecisionProcedure`](crate::dse::procedure::DecisionProcedure))
+//!   and its default lookup-bit selection objective. Adding a backend =
+//!   implementing these two traits; nothing else in the system changes.
+//!
+//! Three technologies ship ([`TechKind`] names them for configs/CLI):
+//!
+//! | kind | cost model | default procedure |
+//! |---|---|---|
+//! | `asic-ge` | the calibrated TSMC-7nm-like gate model ([`crate::synth::components`]) | the paper's SquareFirst ordering (bit-identical to the pre-trait selections) |
+//! | `fpga-lut6` | LUT6/carry-chain costs (soft multipliers dominate, short tables are nearly free) | cost-guided Pareto ([`crate::dse::procedure::ParetoCost`]) |
+//! | `low-power` | activity-weighted gates ("area" = switched capacitance) | cost-guided Pareto |
+//!
+//! The trio demonstrably disagrees: on bundled examples the FPGA model
+//! trades square-input truncation for narrower `b` coefficients (narrow
+//! soft multipliers beat shallow tables), selecting a different
+//! implementation than `asic-ge` from the *same* complete design space —
+//! see `report tech` and `examples/tech_compare.rs`.
+
+mod asic;
+mod fpga;
+mod lowpower;
+
+pub use asic::AsicGe;
+pub use fpga::FpgaLut6;
+pub use lowpower::LowPower;
+
+use crate::coordinator::LubObjective;
+use crate::dse::procedure::DecisionProcedure;
+use crate::synth::components::Cost;
+
+/// Area/delay primitives of one hardware technology.
+///
+/// Areas and delays are in *technology units* (gate equivalents and FO4
+/// delays for `asic-ge`, LUT6s and logic levels for `fpga-lut6`, switched
+/// capacitance for `low-power`); [`CostModel::delay_unit_ns`] and
+/// [`CostModel::area_unit_um2`] convert to report units. Within one
+/// technology the units are consistent, so Pareto comparisons and the
+/// area-delay objectives need no conversion.
+pub trait CostModel: Sync {
+    /// Technology identifier for reports.
+    fn name(&self) -> &'static str;
+    /// The coefficient table: `2^r_bits` words of `width` bits.
+    fn lut(&self, r_bits: u32, width: u32) -> Cost;
+    /// Dedicated squarer of input width `w`.
+    fn squarer(&self, w: u32) -> Cost;
+    /// Signed multiplier `w1 x w2`.
+    fn multiplier(&self, w1: u32, w2: u32) -> Cost;
+    /// Carry-save reduction of `n` operands of width `w` plus final CPA.
+    fn multi_operand_add(&self, n: u32, w: u32) -> Cost;
+    /// Nanoseconds per delay unit.
+    fn delay_unit_ns(&self) -> f64;
+    /// µm²-equivalents per area unit (1.0 = report areas in native units).
+    fn area_unit_um2(&self) -> f64;
+    /// Human-readable area unit for report tables.
+    fn area_unit(&self) -> &'static str;
+    /// Multiplier on summed component area (wiring/misc overhead).
+    fn wiring_overhead(&self) -> f64 {
+        1.10
+    }
+    /// Area multiplier for synthesizing at delay target `d_target_ns`
+    /// when the minimum obtainable delay is `d_min_ns` (gate upsizing on
+    /// ASIC, near-flat retiming cost on FPGA).
+    fn sizing_multiplier(&self, d_min_ns: f64, d_target_ns: f64) -> f64;
+}
+
+/// A hardware technology: a cost model plus the decision-procedure
+/// ordering and selection objective tuned to it.
+pub trait Technology: Sync {
+    /// Identifier used by configs, the CLI and reports.
+    fn name(&self) -> &'static str;
+    /// The technology's area/delay primitives.
+    fn cost_model(&self) -> &dyn CostModel;
+    /// The decision procedure this technology explores the space with
+    /// when the user does not force one (`dse.procedure = auto`).
+    fn default_procedure(&self) -> Box<dyn DecisionProcedure>;
+    /// The lookup-bit sweep objective this technology optimizes by
+    /// default. Consumed by the CLI's `--lub auto` when no
+    /// `--objective` is given; the library-level
+    /// [`LookupBits::Auto`](crate::pipeline::LookupBits) carries an
+    /// explicit objective (job files currently default it to
+    /// area-delay — ROADMAP open item).
+    fn default_objective(&self) -> LubObjective {
+        LubObjective::AreaDelay
+    }
+}
+
+/// The shipped technologies, as a serializable name (configs, `--tech`).
+/// Custom [`Technology`] impls bypass this enum via
+/// [`crate::dse::explore_with`] and
+/// [`crate::synth::synth_min_delay_with`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum TechKind {
+    /// The calibrated gate-equivalent ASIC model (the original target).
+    #[default]
+    AsicGe,
+    /// LUT6/carry-chain FPGA fabric.
+    FpgaLut6,
+    /// Activity-weighted low-power ASIC.
+    LowPower,
+}
+
+static ASIC_GE: AsicGe = AsicGe;
+static FPGA_LUT6: FpgaLut6 = FpgaLut6;
+static LOW_POWER: LowPower = LowPower;
+
+impl TechKind {
+    pub const ALL: [TechKind; 3] = [TechKind::AsicGe, TechKind::FpgaLut6, TechKind::LowPower];
+
+    /// The technology singleton behind this kind.
+    pub fn technology(self) -> &'static dyn Technology {
+        match self {
+            TechKind::AsicGe => &ASIC_GE,
+            TechKind::FpgaLut6 => &FPGA_LUT6,
+            TechKind::LowPower => &LOW_POWER,
+        }
+    }
+
+    /// Config/CLI label (`asic-ge`, `fpga-lut6`, `low-power`).
+    pub fn label(self) -> &'static str {
+        match self {
+            TechKind::AsicGe => "asic-ge",
+            TechKind::FpgaLut6 => "fpga-lut6",
+            TechKind::LowPower => "low-power",
+        }
+    }
+
+    /// Parse a config/CLI label; underscores are accepted for dashes.
+    pub fn parse(s: &str) -> Option<TechKind> {
+        match s.replace('_', "-").as_str() {
+            "asic-ge" | "asic" => Some(TechKind::AsicGe),
+            "fpga-lut6" | "fpga" => Some(TechKind::FpgaLut6),
+            "low-power" | "lowpower" => Some(TechKind::LowPower),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for t in TechKind::ALL {
+            assert_eq!(TechKind::parse(t.label()), Some(t));
+            assert_eq!(t.technology().name(), t.label());
+            assert_eq!(t.technology().cost_model().name(), t.label());
+        }
+        assert_eq!(TechKind::parse("fpga_lut6"), Some(TechKind::FpgaLut6));
+        assert_eq!(TechKind::parse("asic"), Some(TechKind::AsicGe));
+        assert_eq!(TechKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn cost_models_are_monotone_in_width() {
+        for t in TechKind::ALL {
+            let cm = t.technology().cost_model();
+            for w in 2..24u32 {
+                assert!(
+                    cm.multiplier(w + 1, w).area_ge > cm.multiplier(w, w - 1).area_ge,
+                    "{}: multiplier not monotone at {w}",
+                    cm.name()
+                );
+                assert!(cm.squarer(w + 1).area_ge > cm.squarer(w).area_ge);
+                assert!(cm.lut(6, w + 1).area_ge > cm.lut(6, w).area_ge);
+            }
+            assert!(cm.delay_unit_ns() > 0.0);
+            assert!(cm.area_unit_um2() > 0.0);
+        }
+    }
+
+    #[test]
+    fn fpga_tables_are_cheap_multipliers_expensive() {
+        // The divergence driver: relative to a 12x12 soft multiplier, a
+        // 64-entry table is far cheaper on the FPGA model than the gate
+        // model — so the FPGA procedure should spend table bits to buy
+        // narrower multipliers.
+        let asic = TechKind::AsicGe.technology().cost_model();
+        let fpga = TechKind::FpgaLut6.technology().cost_model();
+        let ratio =
+            |cm: &dyn CostModel| cm.lut(6, 20).area_ge / cm.multiplier(12, 12).area_ge;
+        assert!(
+            ratio(fpga) < 0.5 * ratio(asic),
+            "FPGA table/multiplier cost ratio should be far below ASIC: {} vs {}",
+            ratio(fpga),
+            ratio(asic)
+        );
+    }
+
+    #[test]
+    fn sizing_curves_behave() {
+        for t in TechKind::ALL {
+            let cm = t.technology().cost_model();
+            let relaxed = cm.sizing_multiplier(0.2, 0.4);
+            let tight = cm.sizing_multiplier(0.2, 0.2);
+            assert!(relaxed >= 1.0 && tight >= relaxed);
+        }
+    }
+}

@@ -29,8 +29,26 @@ fn dse_prints_coefficients() {
         .unwrap();
     assert!(out.status.success());
     let s = String::from_utf8_lossy(&out.stdout);
-    assert!(s.contains("impl:"), "{s}");
+    assert!(s.contains("impl [asic-ge]:"), "{s}");
     assert!(s.contains("r=0:"), "{s}");
+}
+
+#[test]
+fn dse_accepts_technology_flag() {
+    let out = polygen()
+        .args(["dse", "--func", "recip", "--bits", "8", "--lub", "3", "--tech", "fpga-lut6"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("impl [fpga-lut6]:"), "{s}");
+    // Unknown technologies fail with a helpful message.
+    let bad = polygen()
+        .args(["dse", "--func", "recip", "--bits", "8", "--lub", "3", "--tech", "tpu"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("bad tech"));
 }
 
 #[test]

@@ -85,9 +85,9 @@ fn dse_variant_matrix() {
     let f = builtin("recip", 10).unwrap();
     let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
     let ds = generate(&bt, &GenOptions { lookup_bits: 5, ..Default::default() }).unwrap();
-    for procedure in [Procedure::SquareFirst, Procedure::LutFirst] {
+    for procedure in [Procedure::SquareFirst, Procedure::LutFirst, Procedure::Pareto] {
         for degree in [None, Some(Degree::Quadratic)] {
-            let opts = DseOptions { procedure, degree, ..Default::default() };
+            let opts = DseOptions { procedure: Some(procedure), degree, ..Default::default() };
             let Some(im) = explore(&bt, &ds, &opts) else {
                 panic!("{procedure:?}/{degree:?} failed");
             };

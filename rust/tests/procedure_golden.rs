@@ -1,0 +1,479 @@
+//! Procedure-equivalence golden tests.
+//!
+//! The trait-based exploration layer (PR: pluggable technology targets)
+//! refactored the SquareFirst/LutFirst monolith into composable
+//! lexicographic passes. The acceptance bar is *byte-identical*
+//! selections: `legacy` below is the pre-refactor `dse::explore`
+//! preserved verbatim (only rewritten against the public API), and every
+//! test pins the refactored engine — and the `AsicGe` technology default
+//! — to its exact output (coefficients, truncations, encodings) on the
+//! bundled recip/log2/exp2 (+sqrt) examples.
+
+use polygen::bounds::{builtin, AccuracySpec, BoundTable};
+use polygen::designspace::{generate, DesignSpace, GenOptions};
+use polygen::dse::{explore, Degree, DseOptions, Implementation, Procedure};
+use polygen::tech::TechKind;
+
+/// The pre-refactor decision procedure, frozen as the oracle.
+mod legacy {
+    use polygen::bounds::BoundTable;
+    use polygen::designspace::region::{polynomial_valid, CEnvelope, RegionSpace};
+    use polygen::designspace::DesignSpace;
+    use polygen::dse::precision::{algorithm1, Encoding, IntervalSet};
+    use polygen::dse::{Coeffs, Degree, Implementation};
+
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    pub enum Procedure {
+        SquareFirst,
+        LutFirst,
+    }
+
+    #[derive(Clone, Debug, Default)]
+    struct RegionCands {
+        cands: Vec<(i64, Vec<i64>)>,
+    }
+
+    impl RegionCands {
+        fn is_empty(&self) -> bool {
+            self.cands.iter().all(|(_, bs)| bs.is_empty())
+        }
+    }
+
+    pub fn explore(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        procedure: Procedure,
+        degree_opt: Option<Degree>,
+        cap: usize,
+    ) -> Option<Implementation> {
+        let degree = match degree_opt {
+            Some(d) => d,
+            None => {
+                if ds.linear_feasible() {
+                    Degree::Linear
+                } else {
+                    Degree::Quadratic
+                }
+            }
+        };
+        if degree == Degree::Linear && !ds.linear_feasible() {
+            return None;
+        }
+        let xbits = ds.x_bits();
+
+        match procedure {
+            Procedure::SquareFirst => {
+                let (i, j) = match degree {
+                    Degree::Linear => {
+                        let j = max_feasible_trunc(bt, ds, degree, cap, |j| (xbits, j));
+                        (xbits, j)
+                    }
+                    Degree::Quadratic => {
+                        let i = max_feasible_trunc(bt, ds, degree, cap, |i| (i, 0));
+                        let j = max_feasible_trunc(bt, ds, degree, cap, |j| (i, j));
+                        (i, j)
+                    }
+                };
+                let cands = filter_all(bt, ds, degree, i, j, cap);
+                finish(bt, ds, degree, i, j, cands, cap)
+            }
+            Procedure::LutFirst => {
+                let cands = filter_all(bt, ds, degree, 0, 0, cap);
+                let pre = finish(bt, ds, degree, 0, 0, cands, cap)?;
+                let admits = |co: &Coeffs| {
+                    pre.enc_a.admits(co.a) && pre.enc_b.admits(co.b) && pre.enc_c.admits(co.c)
+                };
+                let mut best = pre.clone();
+                for i in (0..=xbits).rev() {
+                    if let Some(impl_) =
+                        reselect_at_trunc(bt, ds, &pre, i, pre.lin_trunc, &admits)
+                    {
+                        best = impl_;
+                        break;
+                    }
+                }
+                Some(best)
+            }
+        }
+    }
+
+    fn max_feasible_trunc(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        degree: Degree,
+        cap: usize,
+        map: impl Fn(u32) -> (u32, u32),
+    ) -> u32 {
+        let xbits = ds.x_bits();
+        let feasible = |p: u32| {
+            let (i, j) = map(p);
+            all_regions_survive(bt, ds, degree, i, j, cap)
+        };
+        let (mut lo, mut hi) = (0u32, xbits);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if feasible(mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    fn all_regions_survive(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        degree: Degree,
+        i: u32,
+        j: u32,
+        cap: usize,
+    ) -> bool {
+        ds.regions.iter().all(|sp| {
+            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+            !filter_region(l, u, ds.k, sp, degree, i, j, cap, true).is_empty()
+        })
+    }
+
+    fn filter_all(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        degree: Degree,
+        i: u32,
+        j: u32,
+        cap: usize,
+    ) -> Vec<RegionCands> {
+        ds.regions
+            .iter()
+            .map(|sp| {
+                let (l, u) = bt.region(ds.lookup_bits, sp.r);
+                filter_region(l, u, ds.k, sp, degree, i, j, cap, false)
+            })
+            .collect()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn filter_region(
+        l: &[i32],
+        u: &[i32],
+        k: u32,
+        sp: &RegionSpace,
+        degree: Degree,
+        i: u32,
+        j: u32,
+        cap: usize,
+        early_out: bool,
+    ) -> RegionCands {
+        let mut out = RegionCands::default();
+        let mut entries: Vec<_> = sp.entries.iter().collect();
+        entries.sort_by_key(|e| (e.a.abs(), e.a));
+        for e in entries {
+            if degree == Degree::Linear && e.a != 0 {
+                continue;
+            }
+            let width = (e.b_hi - e.b_lo + 1) as usize;
+            let bs: Vec<i64> = if width <= cap {
+                (e.b_lo..=e.b_hi).collect()
+            } else {
+                let stride = width.div_ceil(cap);
+                let mut v: Vec<i64> = (e.b_lo..=e.b_hi).step_by(stride).collect();
+                if *v.last().unwrap() != e.b_hi {
+                    v.push(e.b_hi);
+                }
+                v
+            };
+            let env = CEnvelope::build(l, u, k, e.a, i, j);
+            let mut cur = env.cursor();
+            let surviving: Vec<i64> =
+                bs.into_iter().filter(|&b| cur.interval_at(b).is_some()).collect();
+            if !surviving.is_empty() {
+                out.cands.push((e.a, surviving));
+                if early_out {
+                    return out;
+                }
+            }
+        }
+        out
+    }
+
+    fn finish(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        degree: Degree,
+        i: u32,
+        j: u32,
+        mut cands: Vec<RegionCands>,
+        cap: usize,
+    ) -> Option<Implementation> {
+        let sampled = ds.regions.iter().any(|sp| {
+            sp.entries.iter().any(|e| (e.b_hi - e.b_lo + 1) as usize > cap)
+        });
+
+        let a_sets: Vec<IntervalSet> = cands
+            .iter()
+            .map(|rc| rc.cands.iter().map(|&(a, _)| (a, a)).collect())
+            .collect();
+        let enc_a = algorithm1(&a_sets)?;
+        for rc in &mut cands {
+            rc.cands.retain(|&(a, _)| enc_a.admits(a));
+            if rc.is_empty() {
+                return None;
+            }
+        }
+
+        let b_sets: Vec<IntervalSet> = cands
+            .iter()
+            .map(|rc| {
+                rc.cands
+                    .iter()
+                    .flat_map(|(_, bs)| bs.iter().map(|&b| (b, b)))
+                    .collect()
+            })
+            .collect();
+        let enc_b = algorithm1(&b_sets)?;
+        for rc in &mut cands {
+            for (_, bs) in &mut rc.cands {
+                bs.retain(|&b| enc_b.admits(b));
+            }
+            rc.cands.retain(|(_, bs)| !bs.is_empty());
+            if rc.is_empty() {
+                return None;
+            }
+        }
+
+        let mut c_sets: Vec<IntervalSet> = Vec::with_capacity(cands.len());
+        for (rc, sp) in cands.iter().zip(&ds.regions) {
+            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+            let mut set: IntervalSet = Vec::new();
+            for (a, bs) in &rc.cands {
+                let env = CEnvelope::build(l, u, ds.k, *a, i, j);
+                let mut cur = env.cursor();
+                for &b in bs {
+                    if let Some(iv) = cur.interval_at(b) {
+                        set.push(iv);
+                    }
+                }
+            }
+            if set.is_empty() {
+                return None;
+            }
+            c_sets.push(set);
+        }
+        let enc_c = algorithm1(&c_sets)?;
+
+        let mut coeffs = Vec::with_capacity(cands.len());
+        for (rc, sp) in cands.iter().zip(&ds.regions) {
+            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+            let mut chosen: Option<Coeffs> = None;
+            'outer: for (a, bs) in &rc.cands {
+                let env = CEnvelope::build(l, u, ds.k, *a, i, j);
+                let mut cur = env.cursor();
+                for &b in bs {
+                    let Some((c0, c1)) = cur.interval_at(b) else { continue };
+                    if let Some(c) = first_admissible_in(&enc_c, c0, c1) {
+                        assert!(polynomial_valid(l, u, ds.k, *a, b, c, i, j));
+                        chosen = Some(Coeffs { a: *a, b, c });
+                        break 'outer;
+                    }
+                }
+            }
+            coeffs.push(chosen?);
+        }
+
+        Some(Implementation {
+            func: ds.func.clone(),
+            accuracy: ds.accuracy.clone(),
+            in_bits: ds.in_bits,
+            out_bits: ds.out_bits,
+            lookup_bits: ds.lookup_bits,
+            k: ds.k,
+            degree,
+            sq_trunc: i,
+            lin_trunc: j,
+            enc_a,
+            enc_b,
+            enc_c,
+            coeffs,
+            sampled,
+        })
+    }
+
+    fn first_admissible_in(enc: &Encoding, c0: i64, c1: i64) -> Option<i64> {
+        let step = 1i64 << enc.trunc;
+        let mut v = c0.div_euclid(step) * step;
+        if v < c0 {
+            v += step;
+        }
+        while v <= c1 {
+            if enc.admits(v) {
+                return Some(v);
+            }
+            v += step;
+        }
+        None
+    }
+
+    fn reselect_at_trunc(
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        pre: &Implementation,
+        i: u32,
+        j: u32,
+        admits: &impl Fn(&Coeffs) -> bool,
+    ) -> Option<Implementation> {
+        let mut coeffs = Vec::with_capacity(ds.regions.len());
+        for sp in &ds.regions {
+            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+            let mut chosen = None;
+            'outer: for e in &sp.entries {
+                if pre.degree == Degree::Linear && e.a != 0 {
+                    continue;
+                }
+                if !pre.enc_a.admits(e.a) {
+                    continue;
+                }
+                let env = CEnvelope::build(l, u, ds.k, e.a, i, j);
+                let mut cur = env.cursor();
+                for b in e.b_lo..=e.b_hi {
+                    if !pre.enc_b.admits(b) {
+                        continue;
+                    }
+                    let Some((c0, c1)) = cur.interval_at(b) else { continue };
+                    if let Some(c) = first_admissible_in(&pre.enc_c, c0, c1) {
+                        let co = Coeffs { a: e.a, b, c };
+                        if admits(&co) {
+                            chosen = Some(co);
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            coeffs.push(chosen?);
+        }
+        Some(Implementation { sq_trunc: i, lin_trunc: j, coeffs, ..pre.clone() })
+    }
+}
+
+fn setup(name: &str, bits: u32, r: u32) -> Option<(BoundTable, DesignSpace)> {
+    let f = builtin(name, bits)?;
+    let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+    let ds = generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() }).ok()?;
+    Some((bt, ds))
+}
+
+/// Byte-identical comparison of every selection-determining field.
+fn assert_identical(case: &str, a: &Implementation, b: &Implementation) {
+    assert_eq!(a.degree, b.degree, "{case}: degree");
+    assert_eq!(a.k, b.k, "{case}: k");
+    assert_eq!(a.sq_trunc, b.sq_trunc, "{case}: sq_trunc");
+    assert_eq!(a.lin_trunc, b.lin_trunc, "{case}: lin_trunc");
+    assert_eq!(a.enc_a, b.enc_a, "{case}: enc_a");
+    assert_eq!(a.enc_b, b.enc_b, "{case}: enc_b");
+    assert_eq!(a.enc_c, b.enc_c, "{case}: enc_c");
+    assert_eq!(a.coeffs, b.coeffs, "{case}: coeffs");
+    assert_eq!(a.sampled, b.sampled, "{case}: sampled");
+}
+
+/// The bundled example set: recip/log2/exp2 (the paper's functions, the
+/// quadratic low-R corners included) plus sqrt.
+const CASES: &[(&str, u32, u32)] = &[
+    ("recip", 8, 3),
+    ("recip", 8, 4),
+    ("recip", 10, 4),
+    ("recip", 10, 5),
+    ("log2", 10, 4),
+    ("log2", 10, 5),
+    ("exp2", 8, 4),
+    ("exp2", 10, 3),
+    ("exp2", 10, 4),
+    ("sqrt", 10, 5),
+];
+
+#[test]
+fn square_first_matches_pre_refactor_byte_for_byte() {
+    let mut checked = 0;
+    for &(name, bits, r) in CASES {
+        let Some((bt, ds)) = setup(name, bits, r) else { continue };
+        let want = legacy::explore(&bt, &ds, legacy::Procedure::SquareFirst, None, 512)
+            .unwrap_or_else(|| panic!("{name}-{bits} R={r}: legacy found nothing"));
+        let got = explore(&bt, &ds, &DseOptions::default())
+            .unwrap_or_else(|| panic!("{name}-{bits} R={r}: refactor found nothing"));
+        assert_identical(&format!("{name}-{bits} R={r} square_first"), &want, &got);
+        checked += 1;
+    }
+    assert!(checked >= 8, "only {checked} cases generated");
+}
+
+#[test]
+fn lut_first_matches_pre_refactor_byte_for_byte() {
+    for &(name, bits, r) in CASES {
+        let Some((bt, ds)) = setup(name, bits, r) else { continue };
+        let want = legacy::explore(&bt, &ds, legacy::Procedure::LutFirst, None, 512)
+            .unwrap_or_else(|| panic!("{name}-{bits} R={r}: legacy found nothing"));
+        let got = explore(
+            &bt,
+            &ds,
+            &DseOptions { procedure: Some(Procedure::LutFirst), ..Default::default() },
+        )
+        .unwrap_or_else(|| panic!("{name}-{bits} R={r}: refactor found nothing"));
+        assert_identical(&format!("{name}-{bits} R={r} lut_first"), &want, &got);
+    }
+}
+
+#[test]
+fn forced_degrees_match_pre_refactor() {
+    for &(name, bits, r, degree) in &[
+        ("recip", 8u32, 6u32, Degree::Quadratic),
+        ("recip", 8, 4, Degree::Linear),
+        ("log2", 10, 5, Degree::Quadratic),
+    ] {
+        let Some((bt, ds)) = setup(name, bits, r) else { continue };
+        let want =
+            legacy::explore(&bt, &ds, legacy::Procedure::SquareFirst, Some(degree), 512);
+        let got = explore(
+            &bt,
+            &ds,
+            &DseOptions { degree: Some(degree), ..Default::default() },
+        );
+        match (want, got) {
+            (None, None) => {}
+            (Some(w), Some(g)) => {
+                assert_identical(&format!("{name}-{bits} R={r} {degree:?}"), &w, &g)
+            }
+            (w, g) => panic!(
+                "{name}-{bits} R={r}: legacy={} refactor={}",
+                w.is_some(),
+                g.is_some()
+            ),
+        }
+    }
+}
+
+#[test]
+fn asic_technology_default_is_the_paper_procedure() {
+    // The AsicGe technology's default ordering must be the same
+    // SquareFirst selection — forcing tech = AsicGe explicitly (as
+    // pipelines do) changes nothing.
+    for &(name, bits, r) in &[("recip", 10u32, 4u32), ("exp2", 10, 4)] {
+        let Some((bt, ds)) = setup(name, bits, r) else { continue };
+        let want = legacy::explore(&bt, &ds, legacy::Procedure::SquareFirst, None, 512).unwrap();
+        let got = explore(
+            &bt,
+            &ds,
+            &DseOptions { tech: TechKind::AsicGe, ..Default::default() },
+        )
+        .unwrap();
+        assert_identical(&format!("{name}-{bits} R={r} asic default"), &want, &got);
+    }
+}
+
+#[test]
+fn subsampled_b_enumeration_stays_identical() {
+    // A tiny max_b_per_a forces the strided-subsample path through both
+    // engines; the refactor must keep stride arithmetic identical.
+    let (bt, ds) = setup("recip", 10, 4).unwrap();
+    let want = legacy::explore(&bt, &ds, legacy::Procedure::SquareFirst, None, 16).unwrap();
+    let got = explore(&bt, &ds, &DseOptions { max_b_per_a: 16, ..Default::default() }).unwrap();
+    assert_identical("recip-10 R=4 cap=16", &want, &got);
+    assert!(want.sampled, "cap=16 must engage subsampling for this space");
+}
