@@ -28,7 +28,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!(
         "[space  ] k = {}, {} regions, {} (a,b) pairs, linear = {}, {:?} ({} dd evals)",
         spaced.space.k,
-        spaced.space.regions.len(),
+        spaced.space.num_regions(),
         spaced.space.num_ab_pairs(),
         spaced.space.linear_feasible(),
         spaced.gen_time,

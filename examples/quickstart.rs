@@ -13,12 +13,14 @@ fn main() -> Result<(), polygen::pipeline::PipelineError> {
     println!("target: {}", prepared.workload.func.mapping());
 
     // 2. Complete design space — an inspectable artifact, not an
-    //    intermediate.
+    //    intermediate. Regions are lazy: the size metrics below stream
+    //    over the stored envelopes, and entries materialize only when
+    //    the decision procedure (step 3) touches them.
     let spaced = prepared.generate()?;
     println!(
         "design space: k = {}, {} regions, {} (a,b) pairs, linear feasible = {}",
         spaced.space.k,
-        spaced.space.regions.len(),
+        spaced.space.num_regions(),
         spaced.space.num_ab_pairs(),
         spaced.space.linear_feasible()
     );

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the gen_engine smoke profile.
+
+Compares a freshly regenerated BENCH_gen.json against the committed
+baseline and fails (exit 1) when any smoke metric regressed by more than
+the threshold:
+
+- time metrics (lazy_1t_s / envelope_1t_s / envelope_mt_s / naive_1t_s):
+  fail when new > (1 + threshold) * baseline;
+- the dimensionless speedup_vs_naive ratio: fail when
+  new < (1 - threshold) * baseline.
+
+Rows are matched by (func, bits, lookup_bits); rows present on one side
+only are reported but never fail the gate (case sets evolve). Metrics
+whose baseline is missing/null, or below --min-time (timer noise floor),
+are compared informationally only. Baselines recorded by the python
+mirror (mode "mirror-estimate", from the no-toolchain authoring
+container) are not comparable wall-clock sources: their time metrics are
+informational, but the machine-independent speedup ratio is still gated.
+
+A markdown comparison table is appended to the file named by
+$GITHUB_STEP_SUMMARY (or --summary) when set.
+
+Usage: bench_gate.py BASELINE.json NEW.json [--threshold 0.25]
+                     [--min-time 0.005] [--summary FILE]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+TIME_METRICS = ["lazy_1t_s", "envelope_1t_s", "envelope_mt_s", "naive_1t_s"]
+RATIO_METRICS = ["speedup_vs_naive"]
+
+
+def key(row):
+    return (row.get("func"), row.get("bits"), row.get("lookup_bits"))
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional regression (default 0.25)")
+    ap.add_argument("--min-time", type=float, default=0.005,
+                    help="seconds; baseline times below this are too noisy to gate")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"))
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    new = load(args.new)
+    base_rows = {key(r): r for r in base.get("results", [])}
+    new_rows = {key(r): r for r in new.get("results", [])}
+    mirror_baseline = "mirror" in str(base.get("mode", "")) or "python-mirror" in str(
+        base.get("harness", "")
+    )
+
+    lines = ["# gen_engine bench regression gate", ""]
+    if mirror_baseline:
+        lines += [
+            "> baseline is a python-mirror estimate (authored without a rust "
+            "toolchain): wall-clock metrics are informational; only the "
+            "machine-independent `speedup_vs_naive` ratio is gated. Commit the "
+            "CI artifact `BENCH_gen.json` to turn the time gates on.",
+            "",
+        ]
+    lines += [
+        "| case | metric | baseline | new | change | verdict |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    failures = []
+
+    for k in sorted(new_rows, key=str):
+        nrow = new_rows[k]
+        brow = base_rows.get(k)
+        label = "{} {}b R={}".format(*k)
+        if brow is None:
+            lines.append(f"| {label} | — | (not in baseline) | | | ℹ️ new case |")
+            continue
+        for metric in TIME_METRICS + RATIO_METRICS:
+            b, n = brow.get(metric), nrow.get(metric)
+            if b is None or n is None:
+                continue
+            is_ratio = metric in RATIO_METRICS
+            if is_ratio:
+                change = (n - b) / b if b else 0.0
+                bad = n < (1.0 - args.threshold) * b
+                gated = True
+            else:
+                change = (n - b) / b if b else 0.0
+                bad = n > (1.0 + args.threshold) * b
+                gated = (not mirror_baseline) and b >= args.min_time
+            if bad and gated:
+                verdict = "❌ regression"
+                failures.append(f"{label} {metric}: {b:.6g} -> {n:.6g} ({change:+.1%})")
+            elif bad:
+                verdict = "⚠️ ungated"
+            else:
+                verdict = "✅"
+            fmt = (lambda v: f"{v:.3f}x") if is_ratio else (lambda v: f"{v * 1e3:.2f} ms")
+            lines.append(
+                f"| {label} | {metric} | {fmt(b)} | {fmt(n)} | {change:+.1%} | {verdict} |"
+            )
+    for k in sorted(set(base_rows) - set(new_rows), key=str):
+        lines.append("| {} {}b R={} | — | (missing from new run) | | | ℹ️ |".format(*k))
+
+    lines.append("")
+    lines.append(
+        f"threshold: ±{args.threshold:.0%}; time metrics gated only when "
+        f"baseline ≥ {args.min_time * 1e3:.0f} ms and native"
+    )
+    report = "\n".join(lines)
+    print(report)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(report + "\n")
+
+    if failures:
+        print("\nFAIL: bench regression gate", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Peak-RSS gate for the CI memory smoke.
+
+Parses `/usr/bin/time -v` output (the "Maximum resident set size
+(kbytes)" line) and fails (exit 1) when peak RSS exceeds the threshold.
+The threshold for the 20-bit lazy-generate smoke is documented in
+DESIGN.md §Scaling — update both together.
+
+Appends a one-line result to $GITHUB_STEP_SUMMARY (or --summary) when set.
+
+Usage: mem_gate.py TIME_OUTPUT_FILE THRESHOLD_KB [--summary FILE]
+"""
+
+import argparse
+import os
+import re
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("time_output")
+    ap.add_argument("threshold_kb", type=int)
+    ap.add_argument("--label", default="memory smoke")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"))
+    args = ap.parse_args()
+
+    with open(args.time_output) as f:
+        text = f.read()
+    m = re.search(r"Maximum resident set size \(kbytes\):\s*(\d+)", text)
+    if not m:
+        print(f"FAIL: no 'Maximum resident set size' line in {args.time_output}",
+              file=sys.stderr)
+        print(text, file=sys.stderr)
+        return 1
+    peak_kb = int(m.group(1))
+    ok = peak_kb <= args.threshold_kb
+    line = (
+        f"{args.label}: peak RSS {peak_kb / 1024:.0f} MiB "
+        f"(threshold {args.threshold_kb / 1024:.0f} MiB) — "
+        f"{'OK' if ok else 'EXCEEDED'}"
+    )
+    print(line)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(f"### {args.label}\n\n{line}\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,20 @@
 //! Reproducible perf harness for the generation engine (§Perf: envelope
-//! enumeration). Times complete-space generation for recip/log2/exp2 at
-//! 12/14/16 bits over several `R`, single- and multi-threaded, plus the
-//! retained pre-envelope oracle engine (`generate_naive`) on flagged
-//! workloads — both engines measured in the same run, with their spaces
-//! checked identical. Writes machine-readable `BENCH_gen.json` at the
-//! repository root so the perf trajectory is tracked across PRs.
+//! enumeration; §Scaling: lazy regions). Times complete-space generation
+//! for recip/log2/exp2 at 12/14/16 bits over several `R`:
+//!
+//! - `lazy` — [`generate`]: analysis phases + common `k` only (what the
+//!   pipeline runs; entries sweep on demand),
+//! - `env`  — [`generate_eager`]: the eager envelope engine, single- and
+//!   multi-threaded (the apples-to-apples successor of the pre-lazy
+//!   `generate`, so the `envelope_*` metrics stay comparable across the
+//!   committed baselines),
+//! - `naive` — the retained pre-envelope oracle on flagged workloads.
+//!
+//! All engines are measured in the same run with their spaces checked
+//! identical. Writes machine-readable `BENCH_gen.json` at the repository
+//! root so the perf trajectory is tracked across PRs — CI regenerates it
+//! natively in the smoke profile and gates on regressions against the
+//! committed baseline (`python/bench_gate.py`).
 //!
 //! ```text
 //! cargo bench --bench gen_engine             # full run
@@ -15,7 +25,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 use polygen::bounds::{builtin, AccuracySpec, BoundTable};
-use polygen::designspace::{generate, generate_naive, DesignSpace, GenOptions};
+use polygen::designspace::{generate, generate_eager, generate_naive, DesignSpace, GenOptions};
 
 struct Case {
     func: &'static str,
@@ -59,10 +69,15 @@ fn time_median<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
 
 fn assert_identical(a: &DesignSpace, b: &DesignSpace) {
     assert_eq!(a.k, b.k, "engines disagree on k");
-    assert_eq!(a.regions.len(), b.regions.len());
-    for (ra, rb) in a.regions.iter().zip(&b.regions) {
-        assert_eq!(ra.entries, rb.entries, "engines disagree in region {}", ra.r);
-        assert_eq!(ra.linear_ok, rb.linear_ok, "engines disagree in region {}", ra.r);
+    assert_eq!(a.num_regions(), b.num_regions());
+    for (ra, rb) in a.region_views().zip(b.region_views()) {
+        assert_eq!(ra.entries(), rb.entries(), "engines disagree in region {}", ra.r());
+        assert_eq!(
+            ra.space().linear_ok,
+            rb.space().linear_ok,
+            "engines disagree in region {}",
+            ra.r()
+        );
     }
 }
 
@@ -72,6 +87,7 @@ struct Row {
     r: u32,
     k: u32,
     ab_pairs: u64,
+    lazy_1t: f64,
     env_1t: f64,
     env_mt: f64,
     naive_1t: Option<f64>,
@@ -90,16 +106,22 @@ fn main() {
         let omt = GenOptions { lookup_bits: c.r, threads, ..Default::default() };
         let reps = if smoke || c.bits >= 16 { 1 } else { 3 };
 
-        let (env_1t, ds) = time_median(reps, || generate(&bt, &o1));
-        let ds = match ds {
+        // Lazy: what `generate` now costs (no entry sweep).
+        let (lazy_1t, lazy_ds) = time_median(reps, || generate(&bt, &o1));
+        let lazy_ds = match lazy_ds {
             Ok(ds) => ds,
             Err(e) => {
                 println!("{:>5} {:>2}b R={}  SKIPPED: {e}", c.func, c.bits, c.r);
                 continue;
             }
         };
-        let (env_mt, ds_mt) = time_median(reps, || generate(&bt, &omt).expect("mt generation"));
+        // Eager: the full materialization the pre-lazy engine always paid
+        // (metric name `envelope_*` kept for baseline comparability).
+        let (env_1t, ds) = time_median(reps, || generate_eager(&bt, &o1).expect("eager"));
+        let (env_mt, ds_mt) =
+            time_median(reps, || generate_eager(&bt, &omt).expect("mt generation"));
         assert_identical(&ds, &ds_mt);
+        assert_identical(&ds, &lazy_ds); // materializes the lazy space's views
 
         let naive_1t = if c.with_naive {
             let (t, nds) =
@@ -112,12 +134,14 @@ fn main() {
 
         let speedup = naive_1t.map(|t| t / env_1t.max(1e-12));
         println!(
-            "{:>5} {:>2}b R={}  k={:<2} pairs={:<9} env_1t={:>8.2} ms  env_{}t={:>8.2} ms{}",
+            "{:>5} {:>2}b R={}  k={:<2} pairs={:<9} lazy_1t={:>8.2} ms  env_1t={:>8.2} ms  \
+             env_{}t={:>8.2} ms{}",
             c.func,
             c.bits,
             c.r,
             ds.k,
             ds.num_ab_pairs(),
+            lazy_1t * 1e3,
             env_1t * 1e3,
             threads,
             env_mt * 1e3,
@@ -132,6 +156,7 @@ fn main() {
             r: c.r,
             k: ds.k,
             ab_pairs: ds.num_ab_pairs(),
+            lazy_1t,
             env_1t,
             env_mt,
             naive_1t,
@@ -158,13 +183,14 @@ fn main() {
         let _ = writeln!(
             json,
             "    {{\"func\": \"{}\", \"bits\": {}, \"lookup_bits\": {}, \"k\": {}, \
-             \"ab_pairs\": {}, \"envelope_1t_s\": {:.6}, \"envelope_mt_s\": {:.6}, \
-             \"naive_1t_s\": {}, \"speedup_vs_naive\": {}}}{}",
+             \"ab_pairs\": {}, \"lazy_1t_s\": {:.6}, \"envelope_1t_s\": {:.6}, \
+             \"envelope_mt_s\": {:.6}, \"naive_1t_s\": {}, \"speedup_vs_naive\": {}}}{}",
             r.func,
             r.bits,
             r.r,
             r.k,
             r.ab_pairs,
+            r.lazy_1t,
             r.env_1t,
             r.env_mt,
             r.naive_1t.map_or("null".to_string(), |t| format!("{t:.6}")),

@@ -64,7 +64,9 @@ impl<'a> Reader<'a> {
 }
 
 /// Serialize a design space (region dictionaries + metadata; the real
-/// analyses are recomputable and not stored).
+/// analyses are recomputable and not stored). Materializes every lazy
+/// region — the `.pgds` format is the full dictionary by design, so a
+/// load never needs the analyses back.
 pub fn to_bytes(ds: &DesignSpace) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
@@ -76,8 +78,9 @@ pub fn to_bytes(ds: &DesignSpace) -> Vec<u8> {
     w_u32(&mut out, ds.lookup_bits);
     w_u32(&mut out, ds.k);
     w_u64(&mut out, ds.dd_evals);
-    w_u32(&mut out, ds.regions.len() as u32);
-    for sp in &ds.regions {
+    w_u32(&mut out, ds.num_regions() as u32);
+    for rv in ds.region_views() {
+        let sp = rv.space();
         w_u64(&mut out, sp.r);
         w_u32(&mut out, sp.linear_ok as u32);
         w_u32(&mut out, sp.entries.len() as u32);
@@ -122,7 +125,10 @@ pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
     if r.pos != buf.len() {
         return Err("trailing bytes in cache file".into());
     }
-    Ok(DesignSpace {
+    // Cache hits come back fully materialized (analyses are recomputable
+    // and deliberately not stored); every lazy-view query answers from
+    // the pre-filled cells.
+    Ok(DesignSpace::from_materialized(
         func,
         accuracy,
         in_bits,
@@ -130,9 +136,9 @@ pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
         lookup_bits,
         k,
         regions,
-        analyses: Vec::new(),
+        Vec::new(),
         dd_evals,
-    })
+    ))
 }
 
 /// Canonical cache path for a workload at specific generation options.
@@ -196,10 +202,10 @@ mod tests {
         assert_eq!(back.func, ds.func);
         assert_eq!(back.k, ds.k);
         assert_eq!(back.lookup_bits, ds.lookup_bits);
-        assert_eq!(back.regions.len(), ds.regions.len());
-        for (a, b) in ds.regions.iter().zip(&back.regions) {
-            assert_eq!(a.entries, b.entries);
-            assert_eq!(a.linear_ok, b.linear_ok);
+        assert_eq!(back.num_regions(), ds.num_regions());
+        for (a, b) in ds.region_views().zip(back.region_views()) {
+            assert_eq!(a.entries(), b.entries());
+            assert_eq!(a.linear_ok(), b.linear_ok());
         }
         // A cached space must drive the DSE identically.
         let im1 = crate::dse::explore(&bt, &ds, &Default::default()).unwrap();

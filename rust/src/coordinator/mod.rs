@@ -95,6 +95,12 @@ pub fn sweep_lub(
 /// [`sweep_lub`] with an optional shared disk cache: hit points parse a
 /// `.pgds` file instead of regenerating (their `gen_time` then measures
 /// the parse — much smaller, as a cached sweep should report).
+///
+/// Points are scheduled on the process-wide pool ([`crate::pool`]):
+/// point cost falls steeply with `R` (low-`R` regions are exponentially
+/// larger), so workers steal points from a shared cursor instead of the
+/// static chunks an earlier revision used — and when this sweep runs
+/// inside a batch, idle batch workers are donated to it automatically.
 pub fn sweep_lub_cached(
     w: &Workload,
     r_values: &[u32],
@@ -103,25 +109,9 @@ pub fn sweep_lub_cached(
     threads: usize,
     cache: Option<&Path>,
 ) -> Vec<SweepPoint> {
-    if threads <= 1 || r_values.len() <= 1 {
-        return r_values
-            .iter()
-            .map(|&r| run_point_cached(w, r, gen, dse, cache))
-            .collect();
-    }
-    let mut out: Vec<Option<SweepPoint>> = Vec::new();
-    out.resize_with(r_values.len(), || None);
-    let chunk = r_values.len().div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (slot, rs) in out.chunks_mut(chunk).zip(r_values.chunks(chunk)) {
-            scope.spawn(move || {
-                for (s, &r) in slot.iter_mut().zip(rs) {
-                    *s = Some(run_point_cached(w, r, gen, dse, cache));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|p| p.expect("sweep worker missed a point")).collect()
+    crate::pool::run_indexed(r_values.len(), threads, |i| {
+        run_point_cached(w, r_values[i], gen, dse, cache)
+    })
 }
 
 /// The best point of a sweep by area-delay product (the paper's Table I
@@ -199,6 +189,11 @@ pub fn generate_cached(
         }
     }
     let ds = generate(&w.bt, &opts)?;
+    // The `.pgds` format stores the full dictionaries, so a miss pays
+    // materialization here either way — do it through the scheduler
+    // (parallel phase 3) rather than letting `cache::save`'s serializer
+    // sweep every region sequentially.
+    ds.materialize(opts.threads);
     let _ = cache::save(&ds, &path); // best-effort
     Ok(ds)
 }
@@ -343,8 +338,8 @@ mod tests {
         let a = generate_cached(&w, 4, &gen, &dir).unwrap();
         let b = generate_cached(&w, 4, &gen, &dir).unwrap(); // cache hit
         assert_eq!(a.k, b.k);
-        for (x, y) in a.regions.iter().zip(&b.regions) {
-            assert_eq!(x.entries, y.entries);
+        for (x, y) in a.region_views().zip(b.region_views()) {
+            assert_eq!(x.entries(), y.entries());
         }
         let _ = std::fs::remove_dir_all(&dir);
     }

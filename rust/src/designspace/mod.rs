@@ -6,16 +6,38 @@
 //! interval of valid `c` per pair), at the smallest evaluation-precision
 //! surplus `k` that is feasible across **all** regions (the paper keeps `k`
 //! constant across regions).
+//!
+//! # Lazy regions (§Scaling)
+//!
+//! The space is *addressable* eagerly but *materialized* lazily: [`generate`]
+//! runs only the analysis phases (per-region envelopes + the common `k`) and
+//! stores no entries. A region's `(a, b)` dictionary is re-swept from its
+//! envelopes on first touch through a [`RegionView`] and memoized, so
+//!
+//! - untouched regions cost nothing — peak memory for a 20-bit `generate`
+//!   is the analyses, not the exponentially `k`-amplified entry lists;
+//! - repeated visits (the decision procedures sweep regions many times)
+//!   pay the sweep once;
+//! - size metrics ([`DesignSpace::num_ab_pairs`],
+//!   [`DesignSpace::linear_feasible`]) stream over the envelopes without
+//!   materializing anything.
+//!
+//! [`generate_eager`] retains the old all-at-once behaviour (parallel
+//! phase 3 over the scheduler) as the oracle the lazy path is
+//! property-tested byte-identical against; [`generate_naive`] remains the
+//! pre-envelope reference engine.
 
 pub mod envelope;
 pub mod extrema;
 pub mod region;
 
+use std::sync::OnceLock;
+
 use crate::bounds::BoundTable;
 use crate::pool::run_indexed;
 use extrema::{DiagExtrema, SearchStrategy};
 use region::{
-    min_feasible_k, min_feasible_k_naive, region_space_at_k, region_space_at_k_naive,
+    min_feasible_k, min_feasible_k_naive, region_space_at_k, region_space_at_k_naive, AbEntry,
     RegionAnalysis, RegionSpace,
 };
 
@@ -36,8 +58,9 @@ pub struct GenOptions {
     pub search: SearchStrategy,
     /// Give up if no common `k <= max_k` exists.
     pub max_k: u32,
-    /// Worker threads for the per-region analysis (regions are
-    /// independent — the paper's "parallelism" future-work item).
+    /// Concurrency budget for the per-region analysis (regions are
+    /// independent — the paper's "parallelism" future-work item); work is
+    /// scheduled on the process-wide pool ([`crate::pool`]).
     pub threads: usize,
 }
 
@@ -75,6 +98,14 @@ impl std::error::Error for GenError {}
 
 /// The complete design space at fixed `(R, k)` — the paper's "nested
 /// dictionary of valid polynomial coefficients".
+///
+/// Regions are stored **lazily**: only the per-region analyses (envelopes
+/// and feasibility intervals, already computed during generation) plus
+/// the common `k` are kept. Entries are re-swept on demand through
+/// [`DesignSpace::region_view`] and memoized per region. Spaces loaded
+/// from the disk cache are fully materialized up front (their analyses
+/// are not stored) — both representations answer every query
+/// identically.
 #[derive(Clone, Debug)]
 pub struct DesignSpace {
     pub func: String,
@@ -87,12 +118,64 @@ pub struct DesignSpace {
     pub lookup_bits: u32,
     /// Common evaluation-precision surplus `k`.
     pub k: u32,
-    /// One entry per region `r in [0, 2^R)`.
-    pub regions: Vec<RegionSpace>,
-    /// Per-region real analyses (kept for the DSE and diagnostics).
+    /// Per-region real analyses (the lazy backing store; empty for
+    /// cache-loaded spaces, whose regions are pre-materialized).
     pub analyses: Vec<RegionAnalysis>,
     /// Total divided-difference evaluations (Claim II.1 instrumentation).
     pub dd_evals: u64,
+    /// Memoized per-region spaces; a cell fills on first touch.
+    pub(crate) cells: Vec<OnceLock<RegionSpace>>,
+}
+
+/// Lazy, memoizing handle on one region of a [`DesignSpace`]. The first
+/// call that needs the entries re-sweeps them from the stored envelopes
+/// at the common `k` and caches the result; queries that do not need the
+/// entry list ([`RegionView::linear_ok`], [`RegionView::num_ab_pairs`])
+/// stream over the envelopes instead of materializing.
+#[derive(Clone, Copy)]
+pub struct RegionView<'a> {
+    ds: &'a DesignSpace,
+    r: usize,
+}
+
+impl<'a> RegionView<'a> {
+    /// Region index `r`.
+    pub fn r(&self) -> u64 {
+        self.r as u64
+    }
+
+    /// Whether this region's entries have already been swept (memoized).
+    pub fn is_materialized(&self) -> bool {
+        self.ds.cells[self.r].get().is_some()
+    }
+
+    /// The materialized region space (swept on first call, then cached).
+    pub fn space(&self) -> &'a RegionSpace {
+        self.ds.cells[self.r].get_or_init(|| self.ds.sweep_region(self.r))
+    }
+
+    /// The complete `(a, b)` dictionary of this region (materializing).
+    pub fn entries(&self) -> &'a [AbEntry] {
+        &self.space().entries
+    }
+
+    /// `a = 0` is in this region's space (answered from the envelopes
+    /// when the region has not been materialized).
+    pub fn linear_ok(&self) -> bool {
+        match self.ds.cells[self.r].get() {
+            Some(sp) => sp.linear_ok,
+            None => region::linear_ok_at_k(&self.ds.analyses[self.r], self.ds.k),
+        }
+    }
+
+    /// Number of `(a, b)` pairs in this region (streamed from the
+    /// envelopes when the region has not been materialized).
+    pub fn num_ab_pairs(&self) -> u64 {
+        match self.ds.cells[self.r].get() {
+            Some(sp) => sp.num_ab_pairs(),
+            None => region::num_ab_pairs_at_k(&self.ds.analyses[self.r], self.ds.k),
+        }
+    }
 }
 
 impl DesignSpace {
@@ -106,20 +189,97 @@ impl DesignSpace {
         1usize << self.x_bits()
     }
 
+    /// Number of regions `2^R`.
+    pub fn num_regions(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Lazy view of region `r`.
+    pub fn region_view(&self, r: usize) -> RegionView<'_> {
+        assert!(r < self.cells.len(), "region {r} out of range");
+        RegionView { ds: self, r }
+    }
+
+    /// Iterate all regions as lazy views, in region order.
+    pub fn region_views(&self) -> impl ExactSizeIterator<Item = RegionView<'_>> + '_ {
+        (0..self.cells.len()).map(move |r| RegionView { ds: self, r })
+    }
+
     /// Paper §II: a piecewise *linear* approximation suffices iff `a = 0`
-    /// is valid in every region.
+    /// is valid in every region. Answered from the envelopes — no region
+    /// is materialized by this query.
     pub fn linear_feasible(&self) -> bool {
-        self.regions.iter().all(|r| r.linear_ok)
+        self.region_views().all(|v| v.linear_ok())
     }
 
     /// Total number of `(a, b)` pairs across all regions (design-space
-    /// size metric used in reports).
+    /// size metric used in reports). Streamed — O(1) extra memory even
+    /// for 20+-bit spaces.
     pub fn num_ab_pairs(&self) -> u64 {
-        self.regions.iter().map(|r| r.num_ab_pairs()).sum()
+        self.region_views().map(|v| v.num_ab_pairs()).sum()
+    }
+
+    /// Sweep every unmaterialized region now (phase 3 of the eager
+    /// engine), across up to `threads` workers of the process-wide
+    /// scheduler. Memoized regions are kept as-is.
+    pub fn materialize(&self, threads: usize) {
+        let fresh = run_indexed(self.num_regions(), threads, |i| match self.cells[i].get() {
+            Some(_) => None,
+            None => Some(self.sweep_region(i)),
+        });
+        for (cell, sp) in self.cells.iter().zip(fresh) {
+            if let Some(sp) = sp {
+                let _ = cell.set(sp);
+            }
+        }
+    }
+
+    fn sweep_region(&self, i: usize) -> RegionSpace {
+        let an = &self.analyses[i];
+        region_space_at_k(an, self.k)
+            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={}", an.r, self.k))
+    }
+
+    /// Assemble a fully-materialized space (cache loads, the naive
+    /// engine). `analyses` may be empty — every cell is pre-filled, so
+    /// the lazy backing store is never consulted.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_materialized(
+        func: String,
+        accuracy: String,
+        in_bits: u32,
+        out_bits: u32,
+        lookup_bits: u32,
+        k: u32,
+        regions: Vec<RegionSpace>,
+        analyses: Vec<RegionAnalysis>,
+        dd_evals: u64,
+    ) -> DesignSpace {
+        let cells = regions
+            .into_iter()
+            .map(|sp| {
+                let cell = OnceLock::new();
+                let _ = cell.set(sp);
+                cell
+            })
+            .collect();
+        DesignSpace {
+            func,
+            accuracy,
+            in_bits,
+            out_bits,
+            lookup_bits,
+            k,
+            analyses,
+            dd_evals,
+            cells,
+        }
     }
 }
 
-/// Generate the complete design space for `R = opts.lookup_bits`.
+/// Generate the complete design space for `R = opts.lookup_bits`,
+/// **lazily**: only the per-region analyses and the common `k` are
+/// computed; entries are swept on demand through [`RegionView`]s.
 pub fn generate(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
     generate_with(bt, opts, None)
 }
@@ -133,18 +293,10 @@ pub fn generate_with(
     assert!(opts.lookup_bits <= bt.in_bits);
     let nregions = 1u64 << opts.lookup_bits;
 
-    // Phases 1 + 2: per-region analysis, then the common k.
+    // Phases 1 + 2: per-region analysis, then the common k. Phase 3 (the
+    // entry sweep) happens per region on first touch: feasibility at the
+    // per-region minimal k implies feasibility at the (>=) common k.
     let (analyses, k) = analyze_and_common_k(bt, opts, provider, nregions)?;
-
-    // Phase 3: enumerate every region at the common k (work-stealing over
-    // regions — enumeration cost is as non-uniform as analysis cost).
-    // Feasibility at the per-region minimal k implies feasibility at the
-    // (>=) common k.
-    let regions = run_indexed(nregions as usize, opts.threads, |i| {
-        let an = &analyses[i];
-        region_space_at_k(an, k)
-            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r))
-    });
 
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
     Ok(DesignSpace {
@@ -154,10 +306,29 @@ pub fn generate_with(
         out_bits: bt.out_bits,
         lookup_bits: opts.lookup_bits,
         k,
-        regions,
         analyses,
         dd_evals,
+        cells: (0..nregions).map(|_| OnceLock::new()).collect(),
     })
+}
+
+/// The eager oracle: [`generate`] plus an immediate parallel
+/// materialization of every region (the pre-lazy behaviour, kept for the
+/// equivalence property tests, paper-runtime reports and benches).
+/// Byte-identical to touching every [`RegionView`] of a lazy space.
+pub fn generate_eager(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
+    generate_eager_with(bt, opts, None)
+}
+
+/// [`generate_eager`] with an optional external diagonal-extrema provider.
+pub fn generate_eager_with(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    provider: Option<&ExtremaProvider<'_>>,
+) -> Result<DesignSpace, GenError> {
+    let ds = generate_with(bt, opts, provider)?;
+    ds.materialize(opts.threads);
+    Ok(ds)
 }
 
 /// Phases 1 + 2: analyze every region and find the common `k` (the max
@@ -201,11 +372,11 @@ fn analyze_all(
         return (0..nregions).map(analyze_one).collect();
     }
 
-    // Work-stealing over regions (shared with `pipeline::Batch`): region
-    // cost is *not* uniform — Claim II.1 pruning and the hull tangent
-    // searches fire unevenly — so workers pull from a shared cursor
-    // instead of static chunks. Results are indexed, so the output is
-    // thread-count independent.
+    // Work-stealing over regions on the process-wide scheduler (shared
+    // with `pipeline::Batch`): region cost is *not* uniform — Claim II.1
+    // pruning and the hull tangent searches fire unevenly — so workers
+    // pull from a shared cursor instead of static chunks. Results are
+    // indexed, so the output is thread-count independent.
     run_indexed(nregions as usize, opts.threads, |i| {
         let (l, u) = bt.region(opts.lookup_bits, i as u64);
         region::analyze_region(i as u64, l, u, opts.search, None)
@@ -214,9 +385,11 @@ fn analyze_all(
 
 /// The pre-envelope reference engine, kept verbatim as the oracle: linear
 /// `k` scan with full re-enumeration at every step, per-candidate
-/// diagonal rescans, sequential phase 3. Value-identical to [`generate`]
-/// (property-tested); the `gen_engine` bench measures both in one run.
-/// `SearchStrategy::Hull` is mapped to the pre-envelope default `Pruned`.
+/// diagonal rescans, sequential phase 3, fully-materialized result.
+/// Value-identical to [`generate`] / [`generate_eager`]
+/// (property-tested); the `gen_engine` bench measures all engines in one
+/// run. `SearchStrategy::Hull` is mapped to the pre-envelope default
+/// `Pruned`.
 pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
     assert!(opts.lookup_bits <= bt.in_bits);
     let nregions = 1u64 << opts.lookup_bits;
@@ -243,17 +416,17 @@ pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace,
         regions.push(sp);
     }
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
-    Ok(DesignSpace {
-        func: bt.func.clone(),
-        accuracy: bt.accuracy.clone(),
-        in_bits: bt.in_bits,
-        out_bits: bt.out_bits,
-        lookup_bits: opts.lookup_bits,
+    Ok(DesignSpace::from_materialized(
+        bt.func.clone(),
+        bt.accuracy.clone(),
+        bt.in_bits,
+        bt.out_bits,
+        opts.lookup_bits,
         k,
         regions,
         analyses,
         dd_evals,
-    })
+    ))
 }
 
 /// Find the smallest `R` for which the design space is feasible (the
@@ -352,14 +525,24 @@ mod tests {
         BoundTable::build(builtin(name, bits).unwrap().as_ref(), AccuracySpec::Ulp(1))
     }
 
+    fn assert_spaces_identical(a: &DesignSpace, b: &DesignSpace, label: &str) {
+        assert_eq!(a.k, b.k, "{label}: k differs");
+        assert_eq!(a.num_regions(), b.num_regions(), "{label}: region count");
+        for (ra, rb) in a.region_views().zip(b.region_views()) {
+            assert_eq!(ra.entries(), rb.entries(), "{label} region {}", ra.r());
+            assert_eq!(ra.space().linear_ok, rb.space().linear_ok, "{label} region {}", ra.r());
+        }
+    }
+
     #[test]
     fn recip8_generates_and_verifies() {
         let bt = table("recip", 8);
         let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() })
             .expect("recip 8-bit R=4 should be feasible");
-        assert_eq!(ds.regions.len(), 16);
+        assert_eq!(ds.num_regions(), 16);
         // Spot-verify: every region's first and last (a,b) admit a valid c.
-        for sp in &ds.regions {
+        for rv in ds.region_views() {
+            let sp = rv.space();
             let (l, u) = bt.region(4, sp.r);
             for e in [sp.entries.first().unwrap(), sp.entries.last().unwrap()] {
                 for b in [e.b_lo, e.b_hi] {
@@ -369,6 +552,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lazy_views_match_eager_oracle() {
+        // The tentpole invariant, spot form (the broad property grid
+        // lives in tests/pipeline_properties.rs): lazy RegionView entries
+        // are byte-identical to generate_eager's, and the streamed
+        // metrics match the materialized ones.
+        let mut checked = 0;
+        for (name, bits, r) in [("recip", 8u32, 4u32), ("log2", 8, 3), ("sqrt", 8, 4)] {
+            let bt = table(name, bits);
+            let opts = GenOptions { lookup_bits: r, ..Default::default() };
+            let Ok(lazy) = generate(&bt, &opts) else { continue };
+            let eager = generate_eager(&bt, &opts).unwrap();
+            checked += 1;
+            // Streamed metrics answer without materializing.
+            let pairs = lazy.num_ab_pairs();
+            let linear = lazy.linear_feasible();
+            assert!(
+                lazy.region_views().all(|v| !v.is_materialized()),
+                "{name}: metric queries must not materialize regions"
+            );
+            assert_eq!(pairs, eager.num_ab_pairs(), "{name}: pair count");
+            assert_eq!(linear, eager.linear_feasible(), "{name}: linear bit");
+            assert_spaces_identical(&lazy, &eager, name);
+            // After the comparison every region is memoized; metrics now
+            // answer from the materialized spaces — same values.
+            assert!(lazy.region_views().all(|v| v.is_materialized()));
+            assert_eq!(lazy.num_ab_pairs(), pairs);
+            assert_eq!(lazy.linear_feasible(), linear);
+        }
+        assert!(checked >= 2, "too few feasible spot cases: {checked}");
+    }
+
+    #[test]
+    fn region_views_memoize() {
+        let bt = table("exp2", 8);
+        let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() }).unwrap();
+        let rv = ds.region_view(3);
+        assert!(!rv.is_materialized());
+        let first = rv.space() as *const RegionSpace;
+        assert!(rv.is_materialized());
+        // The memoized space is returned by pointer identity — no resweep.
+        assert!(std::ptr::eq(first, ds.region_view(3).space()));
+        // Untouched neighbours stay lazy.
+        assert!(!ds.region_view(2).is_materialized());
     }
 
     #[test]
@@ -384,17 +613,14 @@ mod tests {
             &GenOptions { lookup_bits: 3, search: SearchStrategy::Pruned, ..Default::default() },
         )
         .unwrap();
-        assert_eq!(a.k, b.k);
-        for (ra, rb) in a.regions.iter().zip(&b.regions) {
-            assert_eq!(ra.entries, rb.entries, "region {}", ra.r);
-        }
+        assert_spaces_identical(&a, &b, "log2 naive/pruned");
         assert!(b.dd_evals <= a.dd_evals, "pruning increased work");
     }
 
     #[test]
     fn all_strategies_and_engines_agree_end_to_end() {
         // The acceptance invariant: hull/pruned/naive strategies and the
-        // envelope/pre-envelope engines produce byte-identical spaces —
+        // lazy/eager/pre-envelope engines produce byte-identical spaces —
         // common k, every region's entries, and linear_ok.
         for (name, bits, r) in [("recip", 8u32, 4u32), ("log2", 8, 3), ("exp2", 8, 4)] {
             let bt = table(name, bits);
@@ -413,16 +639,13 @@ mod tests {
                     },
                 )
                 .unwrap(),
+                generate_eager(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
+                    .unwrap(),
                 generate_naive(&bt, &GenOptions { lookup_bits: r, ..Default::default() })
                     .unwrap(),
             ];
             for other in others {
-                assert_eq!(reference.k, other.k, "{name}: k differs");
-                assert_eq!(reference.regions.len(), other.regions.len());
-                for (ra, rb) in reference.regions.iter().zip(&other.regions) {
-                    assert_eq!(ra.entries, rb.entries, "{name} region {}", ra.r);
-                    assert_eq!(ra.linear_ok, rb.linear_ok, "{name} region {}", ra.r);
-                }
+                assert_spaces_identical(&reference, &other, name);
             }
         }
     }
@@ -483,12 +706,9 @@ mod tests {
         let bt = table("exp2", 8);
         let o1 = GenOptions { lookup_bits: 4, threads: 1, ..Default::default() };
         let o4 = GenOptions { lookup_bits: 4, threads: 4, ..Default::default() };
-        let a = generate(&bt, &o1).unwrap();
-        let b = generate(&bt, &o4).unwrap();
-        assert_eq!(a.k, b.k);
-        for (ra, rb) in a.regions.iter().zip(&b.regions) {
-            assert_eq!(ra.entries, rb.entries);
-        }
+        let a = generate_eager(&bt, &o1).unwrap();
+        let b = generate_eager(&bt, &o4).unwrap();
+        assert_spaces_identical(&a, &b, "exp2 1t/4t");
     }
 
     #[test]

@@ -459,6 +459,48 @@ pub fn region_space_at_k_naive(an: &RegionAnalysis, k: u32) -> Option<RegionSpac
     }
 }
 
+/// Whether `a = 0` is in the region's space at `k` — the
+/// [`RegionSpace::linear_ok`] bit answered with one envelope query,
+/// without enumerating the space. Used by lazy
+/// [`DesignSpace`](crate::designspace::DesignSpace) views for regions
+/// that have not been swept (property-tested identical to the
+/// materialized bit).
+pub fn linear_ok_at_k(an: &RegionAnalysis, k: u32) -> bool {
+    if !an.feasible {
+        return false;
+    }
+    if an.n < 2 {
+        return true; // degenerate representative always includes a = 0
+    }
+    let (a0, a1) = a_range_at_k(an, k);
+    a0 <= 0 && 0 <= a1 && b_range_at_env(an, k, 0).is_some()
+}
+
+/// Number of `(a, b)` pairs the region's space at `k` contains —
+/// [`RegionSpace::num_ab_pairs`] computed by the same envelope sweep
+/// [`region_space_at_k`] runs, but accumulating widths instead of
+/// storing entries: O(1) memory, so size metrics on 20+-bit spaces never
+/// materialize anything (property-tested identical).
+pub fn num_ab_pairs_at_k(an: &RegionAnalysis, k: u32) -> u64 {
+    if !an.feasible {
+        return 0;
+    }
+    if an.n < 2 {
+        return (2 * DEGENERATE_A_CLAMP + 1) as u64;
+    }
+    let envs = an.envs.as_ref().expect("analyzed region with N >= 2 has envelopes");
+    let (a0, a1) = a_range_at_k(an, k);
+    let mut lo_cur = envs.lo.cursor();
+    let mut hi_cur = envs.hi_neg.cursor();
+    let mut total = 0u64;
+    for a in a0..=a1 {
+        if let Some((b0, b1)) = b_interval_from(&mut lo_cur, &mut hi_cur, k, a) {
+            total += (b1 - b0 + 1) as u64;
+        }
+    }
+    total
+}
+
 /// Existence-only form of [`region_space_at_k`]: does any integer
 /// `(a, b)` survive at this `k`? Early-exits on the first witness, so the
 /// `k`-search never materializes spaces it will throw away.
@@ -611,6 +653,41 @@ mod tests {
                             e.map(|s| s.entries),
                             nv.map(|s| s.entries)
                         ),
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn streamed_metrics_match_materialized_space() {
+        // The lazy-view fast paths: linear_ok_at_k and num_ab_pairs_at_k
+        // must agree exactly with what region_space_at_k materializes,
+        // including the no-space-at-this-k and degenerate cases.
+        for_each_seed(60, |rng| {
+            let n = 1 + rng.below(30) as usize;
+            let (l, u) =
+                if rng.bool() { quadratic_bounds(rng, n) } else { zigzag_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            for k in 0..=8u32 {
+                match region_space_at_k(&an, k) {
+                    Some(sp) => {
+                        assert_eq!(
+                            linear_ok_at_k(&an, k),
+                            sp.linear_ok,
+                            "k={k} l={l:?} u={u:?}"
+                        );
+                        assert_eq!(
+                            num_ab_pairs_at_k(&an, k),
+                            sp.num_ab_pairs(),
+                            "k={k} l={l:?} u={u:?}"
+                        );
+                    }
+                    None => {
+                        assert!(!linear_ok_at_k(&an, k), "k={k} l={l:?} u={u:?}");
+                        // An empty space has zero pairs; the streamed
+                        // count must not invent any.
+                        assert_eq!(num_ab_pairs_at_k(&an, k), 0, "k={k} l={l:?} u={u:?}");
                     }
                 }
             }

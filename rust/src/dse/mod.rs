@@ -281,7 +281,11 @@ fn all_regions_survive(
     j: u32,
     cap: usize,
 ) -> bool {
-    ds.regions.iter().all(|sp| {
+    // Lazy iteration: each region's entries are swept (and memoized) as
+    // the procedure reaches it, so an early infeasible region stops the
+    // scan before the rest of the space is ever materialized.
+    ds.region_views().all(|rv| {
+        let sp = rv.space();
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         !filter_region(l, u, ds.k, sp, degree, i, j, cap, true).is_empty()
     })
@@ -295,9 +299,9 @@ fn filter_all(
     j: u32,
     cap: usize,
 ) -> Vec<RegionCands> {
-    ds.regions
-        .iter()
-        .map(|sp| {
+    ds.region_views()
+        .map(|rv| {
+            let sp = rv.space();
             let (l, u) = bt.region(ds.lookup_bits, sp.r);
             filter_region(l, u, ds.k, sp, degree, i, j, cap, false)
         })
@@ -404,8 +408,8 @@ fn finish(
 
     // --- c --- (interval-backed: one interval per surviving (a, b))
     let mut c_sets: Vec<IntervalSet> = Vec::with_capacity(cands.len());
-    for (rc, sp) in cands.iter().zip(&ds.regions) {
-        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+    for (rc, rv) in cands.iter().zip(ds.region_views()) {
+        let (l, u) = bt.region(ds.lookup_bits, rv.r());
         let mut set: IntervalSet = Vec::new();
         for (a, bs) in &rc.cands {
             let env = CEnvelope::build(l, u, ds.k, *a, i, j);
@@ -425,8 +429,8 @@ fn finish(
 
     // --- selection: first jointly-valid triple per region ---
     let mut coeffs = Vec::with_capacity(cands.len());
-    for (rc, sp) in cands.iter().zip(&ds.regions) {
-        let (l, u) = bt.region(ds.lookup_bits, sp.r);
+    for (rc, rv) in cands.iter().zip(ds.region_views()) {
+        let (l, u) = bt.region(ds.lookup_bits, rv.r());
         let mut chosen: Option<Coeffs> = None;
         'outer: for (a, bs) in &rc.cands {
             let env = CEnvelope::build(l, u, ds.k, *a, i, j);
@@ -462,8 +466,8 @@ fn finish(
 }
 
 fn sampled_any(ds: &DesignSpace, opts: &DseOptions) -> bool {
-    ds.regions.iter().any(|sp| {
-        sp.entries
+    ds.region_views().any(|rv| {
+        rv.entries()
             .iter()
             .any(|e| (e.b_hi - e.b_lo + 1) as usize > opts.max_b_per_a)
     })
@@ -497,8 +501,9 @@ fn reselect_at_trunc(
     j: u32,
     admits: &impl Fn(&Coeffs) -> bool,
 ) -> Option<Implementation> {
-    let mut coeffs = Vec::with_capacity(ds.regions.len());
-    for sp in &ds.regions {
+    let mut coeffs = Vec::with_capacity(ds.num_regions());
+    for rv in ds.region_views() {
+        let sp = rv.space();
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         let mut chosen = None;
         'outer: for e in &sp.entries {

@@ -121,13 +121,16 @@ fn run() -> Result<(), String> {
                 .generate()
                 .map_err(|e| e.to_string())?;
             let ds = &spaced.space;
+            // Lazy space: the pair count and linear bit stream over the
+            // stored envelopes, so even 20-bit runs stay within the
+            // analysis-phase memory footprint (DESIGN.md §Scaling).
             println!(
                 "design space: {} {}b R={} k={}  regions={}  (a,b) pairs={}  linear_ok={}",
                 ds.func,
                 ds.in_bits,
                 ds.lookup_bits,
                 ds.k,
-                ds.regions.len(),
+                ds.num_regions(),
                 ds.num_ab_pairs(),
                 ds.linear_feasible()
             );
@@ -363,6 +366,9 @@ fn run() -> Result<(), String> {
                 }
             }
             println!("batch: {}/{} jobs succeeded", results.len() - failed, results.len());
+            // Graceful shutdown: barrier on the process-wide scheduler so
+            // no donated worker is still mid-job when the process exits.
+            polygen::pipeline::shutdown();
             if failed > 0 {
                 Err(format!("{failed} job(s) failed"))
             } else {

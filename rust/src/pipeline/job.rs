@@ -46,6 +46,11 @@ pub struct JobSpec {
     pub tech: TechKind,
     pub search: SearchStrategy,
     pub max_k: u32,
+    /// Concurrency budget for the job's generation/sweep phases. Inside
+    /// a [`Batch`] this is a *floor*: the batch raises it to its own
+    /// budget so idle workers can be donated to this job's inner phases
+    /// (thread counts never change results, only scheduling). Run the
+    /// spec standalone ([`JobSpec::run`]) to pin an exact count.
     pub threads: usize,
     pub max_b_per_a: usize,
     /// Exhaustively verify the selected implementation (default true).
@@ -151,7 +156,10 @@ impl JobSpec {
                 .ok_or_else(|| spec_err(format!("tech: {v} (asic-ge|fpga-lut6|low-power)")))?;
         }
         if let Some(v) = cfg.get("generate.lookup_bits") {
-            s.lookup = parse_lookup(v)?;
+            // Tech-aware: a plain `auto` resolves to the technology's own
+            // default objective (`tech` is parsed above), so low-power
+            // job files sweep for minimum area without spelling it out.
+            s.lookup = parse_lookup(v, s.tech)?;
         }
         if let Some(v) = cfg.get("generate.search") {
             s.search = match v {
@@ -205,7 +213,7 @@ impl JobSpec {
         out.push_str(&format!("accuracy = {}\n", self.accuracy.label()));
         out.push_str(&format!("tech = {}\n\n", self.tech.label()));
         out.push_str("[generate]\n");
-        out.push_str(&format!("lookup_bits = {}\n", lookup_label(self.lookup)));
+        out.push_str(&format!("lookup_bits = {}\n", lookup_label(self.lookup, self.tech)));
         out.push_str(&format!(
             "search = {}\n",
             match self.search {
@@ -256,9 +264,14 @@ pub fn parse_accuracy(s: &str) -> Result<AccuracySpec, PipelineError> {
         .map_err(|_| PipelineError::Spec(format!("accuracy: {s}")))
 }
 
-fn parse_lookup(s: &str) -> Result<LookupBits, PipelineError> {
+/// Parse a `lookup_bits` value. A plain `auto` consults the technology's
+/// [`default_objective`](crate::tech::Technology::default_objective) —
+/// the same rule the CLI's `--lub auto` applies — so job files no longer
+/// hardcode area-delay; `auto:<objective>` forces one explicitly.
+fn parse_lookup(s: &str, tech: TechKind) -> Result<LookupBits, PipelineError> {
     match s {
-        "auto" | "auto:area_delay" => Ok(LookupBits::Auto(LubObjective::AreaDelay)),
+        "auto" => Ok(LookupBits::Auto(tech.technology().default_objective())),
+        "auto:area_delay" => Ok(LookupBits::Auto(LubObjective::AreaDelay)),
         "auto:area" => Ok(LookupBits::Auto(LubObjective::Area)),
         "auto:delay" => Ok(LookupBits::Auto(LubObjective::Delay)),
         fixed => fixed
@@ -268,10 +281,15 @@ fn parse_lookup(s: &str) -> Result<LookupBits, PipelineError> {
     }
 }
 
-fn lookup_label(lookup: LookupBits) -> String {
+/// Inverse of [`parse_lookup`] under the same technology: the
+/// technology's own default objective prints as the idiomatic `auto`,
+/// anything else spells the objective out, so every `(tech, lookup)`
+/// combination round-trips exactly.
+fn lookup_label(lookup: LookupBits, tech: TechKind) -> String {
     match lookup {
         LookupBits::Fixed(r) => r.to_string(),
-        LookupBits::Auto(LubObjective::AreaDelay) => "auto".into(),
+        LookupBits::Auto(obj) if obj == tech.technology().default_objective() => "auto".into(),
+        LookupBits::Auto(LubObjective::AreaDelay) => "auto:area_delay".into(),
         LookupBits::Auto(LubObjective::Area) => "auto:area".into(),
         LookupBits::Auto(LubObjective::Delay) => "auto:delay".into(),
     }
@@ -313,17 +331,21 @@ impl JobResult {
     }
 }
 
-/// Executes many [`JobSpec`]s across worker threads. Jobs are pulled
-/// from a shared queue (dynamic load balancing — auto-LUB sweeps take
-/// much longer than fixed-`R` jobs), and one result slot per spec keeps
-/// output order deterministic.
+/// Executes many [`JobSpec`]s on the process-wide scheduler
+/// ([`crate::pool`]). Jobs are pulled from a shared cursor (dynamic load
+/// balancing — auto-LUB sweeps take much longer than fixed-`R` jobs),
+/// and one result slot per spec keeps output order deterministic.
 ///
-/// `threads` is the batch's **total thread budget**: when a spec itself
-/// asks for `job.threads > 1` (threaded generation / sweeps inside the
-/// job), the inner thread count is clamped so `workers x inner` never
-/// exceeds the budget — nested parallelism must not oversubscribe (see
-/// [`Batch::inner_thread_cap`]). Thread counts never change any result
-/// (property-tested), so the clamp is invisible except to the scheduler.
+/// `threads` is the batch's **concurrency budget**, and it flows
+/// dynamically: each job's inner generation/sweep work is raised to the
+/// same budget and posted to the scheduler, so when a small job finishes
+/// early its worker is *donated* to a sibling's inner work instead of
+/// idling. Real parallelism is bounded by the persistent pool size
+/// regardless of nesting (this supersedes the static
+/// `inner_thread_cap` split of earlier revisions). Thread counts never
+/// change any result (property-tested), so scheduling is invisible
+/// outside wall-clock time. [`shutdown`](super::shutdown) drains the
+/// scheduler after batches when a completion barrier is needed.
 #[derive(Clone, Debug, Default)]
 pub struct Batch {
     threads: usize,
@@ -335,7 +357,7 @@ impl Batch {
         Batch { threads: 1, cache_dir: None }
     }
 
-    /// Total thread budget (default 1 = sequential).
+    /// Concurrency budget (default 1 = sequential).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
@@ -352,30 +374,17 @@ impl Batch {
         Batch::new().threads(threads).execute(specs)
     }
 
-    /// Per-job inner thread cap for a batch of `jobs` under a total
-    /// budget of `budget` threads: with `W = min(budget, jobs)` workers
-    /// running concurrently, each job may use at most `budget / W`
-    /// threads, so the batch never runs more than `budget` threads in
-    /// total. With at least as many jobs as budget this is 1 (all
-    /// parallelism goes to the job-level pool); leftover budget flows to
-    /// inner generation threads only when the batch is small.
-    pub fn inner_thread_cap(budget: usize, jobs: usize) -> usize {
-        let budget = budget.max(1);
-        let workers = budget.min(jobs.max(1));
-        (budget / workers).max(1)
-    }
-
     /// Execute every spec; `results[i]` corresponds to `specs[i]`. A
-    /// failing job fails its own slot only. Jobs are pulled from the
-    /// shared work-stealing pool ([`crate::pool`]) — the same scheduler
-    /// design-space generation uses — so a slow auto-LUB sweep never
-    /// parks the other workers.
+    /// failing job fails its own slot only.
     pub fn execute(&self, specs: &[JobSpec]) -> Vec<Result<JobResult, PipelineError>> {
         let cache = self.cache_dir.as_deref();
-        let inner_cap = Batch::inner_thread_cap(self.threads, specs.len());
         crate::pool::run_indexed(specs.len(), self.threads, |i| {
             let mut spec = specs[i].clone();
-            spec.threads = spec.threads.clamp(1, inner_cap);
+            // Budget donation: let every job's inner phases use the full
+            // batch budget — the global scheduler arbitrates, so idle
+            // batch workers migrate into siblings' generation jobs while
+            // total parallelism stays bounded by the pool size.
+            spec.threads = spec.threads.max(self.threads);
             spec.run_with(cache)
         })
     }
@@ -435,11 +444,38 @@ mod tests {
 
     #[test]
     fn auto_objective_labels_roundtrip() {
-        for obj in [LubObjective::Area, LubObjective::Delay, LubObjective::AreaDelay] {
-            let lb = LookupBits::Auto(obj);
-            assert_eq!(parse_lookup(&lookup_label(lb)).unwrap(), lb);
+        // Every (tech, objective) combination round-trips — including
+        // objectives that differ from the technology's default.
+        for tech in TechKind::ALL {
+            for obj in [LubObjective::Area, LubObjective::Delay, LubObjective::AreaDelay] {
+                let lb = LookupBits::Auto(obj);
+                assert_eq!(parse_lookup(&lookup_label(lb, tech), tech).unwrap(), lb);
+            }
+            assert_eq!(parse_lookup("7", tech).unwrap(), LookupBits::Fixed(7));
         }
-        assert_eq!(parse_lookup("7").unwrap(), LookupBits::Fixed(7));
+    }
+
+    #[test]
+    fn plain_auto_resolves_to_technology_default_objective() {
+        // The ROADMAP open item from PR 3: `lookup_bits = auto` job files
+        // must consult Technology::default_objective instead of
+        // hardcoding area-delay. low-power's default is Area.
+        let text = "tech = low-power\n[generate]\nlookup_bits = auto\n";
+        let spec = JobSpec::from_toml(text).unwrap();
+        assert_eq!(spec.lookup, LookupBits::Auto(LubObjective::Area));
+        // ... asic-ge keeps the historical area-delay meaning.
+        let spec = JobSpec::from_toml("[generate]\nlookup_bits = auto\n").unwrap();
+        assert_eq!(spec.lookup, LookupBits::Auto(LubObjective::AreaDelay));
+        // And the round-trip prints the default back as plain `auto`.
+        let mut s = JobSpec::new("recip", 10);
+        s.tech = TechKind::LowPower;
+        s.lookup = LookupBits::Auto(LubObjective::Area);
+        assert!(s.to_toml().contains("lookup_bits = auto\n"), "{}", s.to_toml());
+        assert_eq!(JobSpec::from_toml(&s.to_toml()).unwrap(), s);
+        // A non-default objective under the same tech stays explicit.
+        s.lookup = LookupBits::Auto(LubObjective::Delay);
+        assert!(s.to_toml().contains("lookup_bits = auto:delay\n"));
+        assert_eq!(JobSpec::from_toml(&s.to_toml()).unwrap(), s);
     }
 
     #[test]
@@ -493,45 +529,41 @@ mod tests {
     }
 
     #[test]
-    fn inner_thread_cap_never_exceeds_budget() {
-        // The oversubscription regression (ROADMAP): W workers each
-        // running a job with job.threads > 1 must keep W * inner within
-        // the configured budget.
-        for budget in 1..=16usize {
-            for jobs in 1..=20usize {
-                let cap = Batch::inner_thread_cap(budget, jobs);
-                let workers = budget.min(jobs.max(1));
-                assert!(cap >= 1);
-                assert!(
-                    workers * cap <= budget,
-                    "budget={budget} jobs={jobs}: {workers} workers x {cap} inner"
-                );
-            }
-        }
-        // As many jobs as budget: all parallelism goes to the job pool.
-        assert_eq!(Batch::inner_thread_cap(8, 8), 1);
-        assert_eq!(Batch::inner_thread_cap(8, 100), 1);
-        // Small batch, big budget: leftover flows inward.
-        assert_eq!(Batch::inner_thread_cap(8, 2), 4);
-        assert_eq!(Batch::inner_thread_cap(3, 2), 1);
-        assert_eq!(Batch::inner_thread_cap(0, 0), 1);
-    }
-
-    #[test]
-    fn batch_clamps_threaded_jobs_without_changing_results() {
+    fn batch_nested_parallelism_does_not_change_results() {
         // Jobs demanding 16 inner threads under a 2-thread batch budget:
-        // the clamp engages (cap = 1) and results still match the
-        // unclamped sequential run — thread counts never change results.
+        // inner work is posted to the global scheduler (no static clamp
+        // anymore) and results still match the sequential run — thread
+        // counts and scheduling never change results.
         let mut specs = vec![JobSpec::new("recip", 8), JobSpec::new("exp2", 8)];
         for s in &mut specs {
             s.threads = 16;
         }
-        let clamped = Batch::run(&specs, 2);
+        let scheduled = Batch::run(&specs, 2);
         let seq: Vec<_> = specs.iter().map(|s| s.run()).collect();
-        for (a, b) in clamped.iter().zip(&seq) {
+        for (a, b) in scheduled.iter().zip(&seq) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
         }
+    }
+
+    #[test]
+    fn drained_batch_leaves_global_pool_reusable() {
+        // The shutdown contract: after a batch completes and the
+        // scheduler drains, the persistent workers are parked — and a
+        // second batch (and a bare run_indexed) reuse them with
+        // identical results.
+        let specs = vec![JobSpec::new("recip", 8), JobSpec::new("log2", 8)];
+        let first = Batch::run(&specs, 2);
+        super::super::shutdown();
+        let again = Batch::run(&specs, 2);
+        for (a, b) in first.iter().zip(&again) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
+            assert_eq!(a.lookup_bits, b.lookup_bits);
+        }
+        super::super::shutdown(); // idempotent on an idle pool
+        let direct = crate::pool::run_indexed(16, 4, |i| i * i);
+        assert_eq!(direct, (0..16).map(|i| i * i).collect::<Vec<_>>());
     }
 
     #[test]

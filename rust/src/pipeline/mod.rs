@@ -31,7 +31,7 @@
 //!     .run()
 //!     .expect("recip 8-bit at R=4 is feasible");
 //! assert!(verified.report.ok());
-//! assert_eq!(verified.space.regions.len(), 16);
+//! assert_eq!(verified.space.num_regions(), 16);
 //! ```
 //!
 //! # Stop at any stage
@@ -89,6 +89,16 @@ use crate::verify::verify_exhaustive;
 
 pub use error::PipelineError;
 pub use job::{parse_accuracy, Batch, JobResult, JobSpec};
+
+/// Gracefully drain the process-wide scheduler: blocks until every
+/// outstanding generation/sweep/batch job has completed, leaving the
+/// persistent workers parked and reusable. Call at pipeline shutdown
+/// (the CLI does after each `batch` run) when you need the guarantee
+/// that no scheduler work is still in flight — e.g. before tearing down
+/// resources that in-flight jobs might touch.
+pub fn shutdown() {
+    crate::pool::global().drain();
+}
 
 // Re-exports: everything a pipeline caller needs, so `main.rs`, the
 // examples and the benches compile against `polygen::pipeline` alone.
@@ -172,9 +182,10 @@ impl Settings {
     }
 
     /// Options for one point of a sweep: `sweep_lub` already spreads
-    /// points across `threads` workers, so per-point generation must stay
-    /// single-threaded (its documented invariant) — nesting would
-    /// oversubscribe to `threads^2` and corrupt per-point `gen_time`.
+    /// points across the scheduler, so per-point generation stays
+    /// single-threaded. The process-wide pool would bound real
+    /// parallelism either way; pinning the inner thread count keeps each
+    /// point's `gen_time` a clean single-thread measurement.
     fn sweep_gen_opts(&self) -> GenOptions {
         GenOptions { threads: 1, ..self.gen_opts(0) }
     }
@@ -460,8 +471,12 @@ pub struct Spaced {
     settings: Settings,
     pub workload: Workload,
     pub space: DesignSpace,
-    /// Generation wall-clock (the paper's Table I "runtime" column
-    /// measures this step).
+    /// Generation wall-clock. Generation is lazy (§Scaling): this covers
+    /// the analysis phases and the common-`k` search; per-region entries
+    /// are swept on first touch by the exploration stage. The
+    /// paper-comparable full-materialization runtime is what
+    /// `report::{claim_ii1,scaling}` and the `gen_engine` bench measure
+    /// (they time the eager oracle).
     pub gen_time: Duration,
     /// Implementation already selected by an auto-LUB sweep.
     preselected: Option<Implementation>,

@@ -1,20 +1,54 @@
-//! Work-stealing index pool shared by design-space generation
-//! ([`crate::designspace`]) and batch job execution
+//! Process-wide work-stealing scheduler shared by design-space
+//! generation ([`crate::designspace`]), lookup-bit sweeps
+//! ([`crate::coordinator`]) and batch job execution
 //! ([`crate::pipeline::Batch`]).
 //!
-//! Per-item cost is *not* uniform in either caller: Claim II.1 pruning
-//! fires unevenly across regions, and a batch mixes auto-LUB sweeps with
+//! Per-item cost is *not* uniform in any caller: Claim II.1 pruning fires
+//! unevenly across regions, and a batch mixes auto-LUB sweeps with
 //! fixed-`R` jobs. Static chunking parks finished workers behind the
-//! slowest chunk; here workers instead pull the next index from one
-//! shared atomic cursor. Results are written back by index, so the output
-//! order — and therefore every downstream artifact — is independent of
-//! the thread count and of scheduling (property-tested).
+//! slowest chunk; here workers pull the next index from a shared atomic
+//! cursor. Results are written back by index, so the output order — and
+//! therefore every downstream artifact — is independent of the thread
+//! count and of scheduling (property-tested).
+//!
+//! # The global scheduler
+//!
+//! Earlier revisions spawned a fresh scoped pool per call, which made
+//! nested parallelism (a threaded batch running threaded generations) an
+//! oversubscription hazard that had to be clamped statically
+//! (`Batch::inner_thread_cap`, now superseded). Instead there is **one**
+//! process-wide [`Scheduler`] ([`global`]) with persistent workers,
+//! spawned once on first use and parked between calls:
+//!
+//! - [`run_indexed`] posts a *job* (an index range + a task closure) and
+//!   the calling thread immediately starts executing its own indices, so
+//!   a call never deadlocks waiting for workers — even recursively from
+//!   inside another job's task.
+//! - Idle workers scan the job list and help any job whose concurrency
+//!   is still below its requested `threads` budget. This is the dynamic
+//!   **budget donation** that replaces the static split: when a small
+//!   batch job finishes early, its worker migrates to a sibling's
+//!   generation job instead of idling behind a per-job cap.
+//! - Total parallelism is bounded by the worker pool size (machine
+//!   parallelism by default, `POLYGEN_POOL_THREADS` to override) plus
+//!   the submitting threads — regardless of how deeply jobs nest.
+//! - [`Scheduler::drain`] blocks until every outstanding job has
+//!   completed; workers then stay parked, ready for reuse
+//!   ([`crate::pipeline::shutdown`] is the pipeline-level entry point).
+//!
+//! Worker panics are caught per task, forwarded to the submitting call
+//! and re-raised there with the original payload (e.g. the region id in
+//! generation's invariant-breach message); the pool itself survives and
+//! remains reusable.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Compute `f(i)` for `i in 0..n` across up to `threads` workers pulling
-/// from a shared cursor; returns `out` with `out[i] = f(i)`.
-/// `threads <= 1` (or `n <= 1`) runs inline with no thread setup.
+/// Compute `f(i)` for `i in 0..n` across up to `threads` concurrent
+/// executors (the calling thread plus donated pool workers) pulling from
+/// a shared cursor; returns `out` with `out[i] = f(i)`.
+/// `threads <= 1` (or `n <= 1`) runs inline with no scheduler traffic.
 pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -24,65 +58,260 @@ where
     if threads <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let mut parts: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let next = &next;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut local = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        local.push((i, f(i)));
-                    }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            match h.join() {
-                Ok(part) => parts.push(part),
-                // Preserve the worker's panic payload (e.g. the region id
-                // in generation's invariant-breach message) instead of
-                // masking it behind a generic join failure.
-                Err(payload) => std::panic::resume_unwind(payload),
+    let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
+    let slots = Slots(out.as_mut_ptr());
+    let task = move |i: usize| {
+        let v = f(i);
+        // SAFETY: the cursor hands each index to exactly one executor, so
+        // this slot is written once, by us, with no concurrent access;
+        // the submitter only reads `out` after every task completed.
+        unsafe { *slots.0.add(i) = Some(v) };
+    };
+    global().run(n, threads, &task);
+    out.into_iter().map(|v| v.expect("scheduler missed an index")).collect()
+}
+
+/// Raw slot pointer smuggled into the task closure. Distinct indices
+/// address distinct slots, so concurrent writes never alias.
+struct Slots<T>(*mut Option<T>);
+
+// SAFETY: see `run_indexed` — per-index exclusive access, completion is
+// synchronized through the job's state mutex before the submitter reads.
+unsafe impl<T: Send> Send for Slots<T> {}
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+/// Type-erased pointer to the submitter's task closure. Only dereferenced
+/// while the submitting [`Scheduler::run`] frame is alive — it blocks
+/// until every task execution has finished, and an exhausted cursor stops
+/// workers from ever touching the task again.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` and outlives all dereferences (above).
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// One posted index range. Lives in the scheduler's job list from
+/// submission until the submitter observes completion and removes it.
+struct Job {
+    task: TaskPtr,
+    n: usize,
+    /// Requested concurrency budget, counting the submitting thread.
+    /// Workers stop joining once `active` reaches it; it is a *target*,
+    /// not a reservation — idle capacity flows wherever budgets allow.
+    limit: usize,
+    /// Next index to hand out (may run past `n`; executors then leave).
+    cursor: AtomicUsize,
+    /// Executors currently inside [`execute`] for this job.
+    active: AtomicUsize,
+    state: Mutex<JobState>,
+    done_cv: Condvar,
+}
+
+struct JobState {
+    completed: usize,
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+/// Pull indices from `job` until the cursor is exhausted. Panics in the
+/// task are caught and recorded (first payload wins) so accounting stays
+/// exact and the worker survives.
+fn execute(job: &Job) {
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // SAFETY: index `i < n` was still available, so this task has not
+        // been counted completed — the submitter cannot observe
+        // `completed == n` and is still blocked in `Scheduler::run`,
+        // keeping the closure alive for the duration of this call. (The
+        // deref sits after the cursor check on purpose: a worker that
+        // claims a just-finished job must break without ever touching
+        // the pointer.)
+        let task = unsafe { &*job.task.0 };
+        let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+        let mut st = job.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
             }
         }
-    });
-    let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
-    for part in parts {
-        for (i, v) in part {
-            debug_assert!(out[i].is_none(), "index {i} computed twice");
-            out[i] = Some(v);
+        st.completed += 1;
+        if st.completed == job.n {
+            job.done_cv.notify_all();
         }
     }
-    out.into_iter().map(|v| v.expect("pool missed an index")).collect()
+    job.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+struct Inner {
+    /// Outstanding jobs. Small: one entry per in-flight `run_indexed`.
+    jobs: Vec<Arc<Job>>,
+    /// Workers spawned so far (monotone, capped at `max_workers`).
+    spawned: usize,
+    /// Workers currently executing a job.
+    busy: usize,
+}
+
+/// The process-wide scheduler. Obtain via [`global`].
+pub struct Scheduler {
+    inner: Mutex<Inner>,
+    /// Parked workers wait here; notified on job submission.
+    work_cv: Condvar,
+    /// [`Scheduler::drain`] waits here; notified on full idleness.
+    idle_cv: Condvar,
+    max_workers: usize,
+}
+
+static GLOBAL: OnceLock<Scheduler> = OnceLock::new();
+
+/// The process-wide scheduler, created on first use. Worker threads are
+/// spawned lazily as jobs demand them, up to machine parallelism minus
+/// one (submitting threads always participate in their own jobs);
+/// `POLYGEN_POOL_THREADS` overrides the cap (`0` = no workers, every
+/// call runs on its submitting thread alone).
+pub fn global() -> &'static Scheduler {
+    GLOBAL.get_or_init(|| Scheduler {
+        inner: Mutex::new(Inner { jobs: Vec::new(), spawned: 0, busy: 0 }),
+        work_cv: Condvar::new(),
+        idle_cv: Condvar::new(),
+        max_workers: default_workers(),
+    })
+}
+
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("POLYGEN_POOL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n;
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1)
+}
+
+impl Scheduler {
+    /// Execute `task(i)` for `i in 0..n` with up to `limit` concurrent
+    /// executors (including the calling thread); blocks until every
+    /// index has run, then re-raises the first task panic, if any.
+    fn run(&'static self, n: usize, limit: usize, task: &(dyn Fn(usize) + Sync)) {
+        let job = Arc::new(Job {
+            task: TaskPtr(task as *const (dyn Fn(usize) + Sync)),
+            n,
+            limit,
+            cursor: AtomicUsize::new(0),
+            active: AtomicUsize::new(1), // the submitter, below
+            state: Mutex::new(JobState { completed: 0, panic: None }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.jobs.push(Arc::clone(&job));
+            self.spawn_workers(&mut inner, limit.saturating_sub(1));
+            // Wake parked workers to come steal.
+            self.work_cv.notify_all();
+        }
+        // The submitter always works its own job: progress never depends
+        // on worker availability, so nested submission cannot deadlock.
+        execute(&job);
+        // Wait out indices stolen by workers that are still in flight.
+        let mut st = job.state.lock().unwrap();
+        while st.completed < n {
+            st = job.done_cv.wait(st).unwrap();
+        }
+        let panic = st.panic.take();
+        drop(st);
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        if inner.busy == 0 && inner.jobs.is_empty() {
+            self.idle_cv.notify_all();
+        }
+        drop(inner);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+
+    fn spawn_workers(&'static self, inner: &mut Inner, wanted: usize) {
+        let mut deficit = wanted.min(self.max_workers.saturating_sub(inner.spawned));
+        while deficit > 0 {
+            let spawned = std::thread::Builder::new()
+                .name(format!("polygen-pool-{}", inner.spawned))
+                .spawn(move || self.worker_loop())
+                .is_ok();
+            if !spawned {
+                break; // resource exhaustion: degrade to fewer workers
+            }
+            inner.spawned += 1;
+            deficit -= 1;
+        }
+    }
+
+    fn worker_loop(&'static self) {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // Donation: join *any* job still under its budget, not just
+            // the one that woke us.
+            let claim = inner
+                .jobs
+                .iter()
+                .find(|j| {
+                    j.cursor.load(Ordering::Relaxed) < j.n
+                        && j.active.load(Ordering::Relaxed) < j.limit
+                })
+                .cloned();
+            match claim {
+                Some(job) => {
+                    // Under the scheduler lock, so budget checks do not race.
+                    job.active.fetch_add(1, Ordering::Relaxed);
+                    inner.busy += 1;
+                    drop(inner);
+                    execute(&job);
+                    inner = self.inner.lock().unwrap();
+                    inner.busy -= 1;
+                    if inner.busy == 0 && inner.jobs.is_empty() {
+                        self.idle_cv.notify_all();
+                    }
+                }
+                None => inner = self.work_cv.wait(inner).unwrap(),
+            }
+        }
+    }
+
+    /// Graceful drain: block until every outstanding job has completed
+    /// and all pool workers are parked. Workers are *not* torn down —
+    /// they stay resident for the next batch; this is the shutdown
+    /// barrier that lets a caller know no scheduler work remains.
+    pub fn drain(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        while !(inner.jobs.is_empty() && inner.busy == 0) {
+            inner = self.idle_cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Workers spawned so far (diagnostics; never exceeds the cap).
+    pub fn workers_spawned(&self) -> usize {
+        self.inner.lock().unwrap().spawned
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn uneven_work(i: usize) -> u64 {
+        // Uneven per-item cost: make some indices much heavier, so static
+        // chunking would misassign work but the result must not change.
+        let rounds = if i % 7 == 0 { 20_000 } else { 10 };
+        let mut acc = i as u64;
+        for _ in 0..rounds {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        }
+        acc
+    }
+
     #[test]
     fn results_independent_of_thread_count() {
-        // Uneven per-item cost: make high indices much heavier, so static
-        // chunking would misassign work but the result must not change.
-        let work = |i: usize| -> u64 {
-            let rounds = if i % 7 == 0 { 20_000 } else { 10 };
-            let mut acc = i as u64;
-            for _ in 0..rounds {
-                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-            }
-            acc
-        };
-        let want = run_indexed(97, 1, work);
+        let want = run_indexed(97, 1, uneven_work);
         for threads in [2usize, 3, 8, 64] {
-            assert_eq!(run_indexed(97, threads, work), want, "threads={threads}");
+            assert_eq!(run_indexed(97, threads, uneven_work), want, "threads={threads}");
         }
     }
 
@@ -91,5 +320,79 @@ mod tests {
         assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(run_indexed(1, 4, |i| i * 2), vec![0]);
         assert_eq!(run_indexed(5, 100, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_jobs_complete_and_stay_deterministic() {
+        // A job whose tasks themselves submit jobs: the global scheduler
+        // must neither deadlock (submitters self-drain) nor mix results
+        // across jobs.
+        let got = run_indexed(6, 3, |i| {
+            let inner = run_indexed(20, 4, move |j| (i * 100 + j) as u64);
+            inner.iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..6)
+            .map(|i| (0..20).map(|j| (i * 100 + j) as u64).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // Budget donation across independent submitting threads: all
+        // jobs complete with correct, independent results.
+        let outs: Vec<Vec<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|s| scope.spawn(move || run_indexed(50, 4, move |i| (s * 1000 + i) as u64)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (s, out) in outs.iter().enumerate() {
+            let want: Vec<u64> = (0..50).map(|i| (s * 1000 + i) as u64).collect();
+            assert_eq!(*out, want);
+        }
+    }
+
+    #[test]
+    fn panic_payload_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            run_indexed(16, 4, |i| {
+                if i == 9 {
+                    panic!("task 9 exploded");
+                }
+                i
+            })
+        });
+        let payload = result.expect_err("panic must propagate to the submitter");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("task 9 exploded"), "payload lost: {msg:?}");
+        // The pool must remain fully usable after a task panic.
+        global().drain();
+        assert_eq!(run_indexed(8, 4, |i| i * 3), vec![0, 3, 6, 9, 12, 15, 18, 21]);
+    }
+
+    #[test]
+    fn drain_is_idempotent_and_leaves_pool_reusable() {
+        let a = run_indexed(40, 4, uneven_work);
+        global().drain();
+        global().drain(); // idle drain returns immediately
+        let b = run_indexed(40, 4, uneven_work);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_count_is_capped() {
+        let _ = run_indexed(64, 64, |i| i);
+        let cap = global().max_workers;
+        assert!(
+            global().workers_spawned() <= cap,
+            "spawned {} workers, cap {cap}",
+            global().workers_spawned()
+        );
     }
 }

@@ -80,9 +80,9 @@ impl Technology for LowPower {
 
     /// Energy is the scarce resource: sweep lookup bits for minimum
     /// (activity-weighted) area rather than area-delay. Takes effect on
-    /// `--tech low-power --lub auto` (unless `--objective` overrides);
-    /// job files with `lookup_bits = auto` still default to area-delay
-    /// (ROADMAP open item).
+    /// `--tech low-power --lub auto` and on job files with
+    /// `lookup_bits = auto` (an explicit `--objective` /
+    /// `auto:<objective>` overrides).
     fn default_objective(&self) -> LubObjective {
         LubObjective::Area
     }

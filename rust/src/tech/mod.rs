@@ -91,10 +91,11 @@ pub trait Technology: Sync {
     fn default_procedure(&self) -> Box<dyn DecisionProcedure>;
     /// The lookup-bit sweep objective this technology optimizes by
     /// default. Consumed by the CLI's `--lub auto` when no
-    /// `--objective` is given; the library-level
-    /// [`LookupBits::Auto`](crate::pipeline::LookupBits) carries an
-    /// explicit objective (job files currently default it to
-    /// area-delay — ROADMAP open item).
+    /// `--objective` is given and by job files whose
+    /// `lookup_bits = auto` names no explicit objective; the
+    /// library-level
+    /// [`LookupBits::Auto`](crate::pipeline::LookupBits) always
+    /// carries the resolved objective.
     fn default_objective(&self) -> LubObjective {
         LubObjective::AreaDelay
     }

@@ -14,7 +14,7 @@ fn staged_artifacts_are_inspectable() {
     assert_eq!(prepared.workload.bt.in_bits, 10);
 
     let spaced = prepared.generate().unwrap();
-    assert_eq!(spaced.space.regions.len(), 32);
+    assert_eq!(spaced.space.num_regions(), 32);
     assert!(spaced.space.num_ab_pairs() > 0);
 
     let explored = spaced.explore().unwrap();

@@ -7,7 +7,7 @@
 use polygen::bounds::{builtin, AccuracySpec, BoundTable};
 use polygen::coordinator::cache;
 use polygen::designspace::extrema::SearchStrategy;
-use polygen::designspace::{generate, GenOptions};
+use polygen::designspace::{generate, generate_eager, GenOptions};
 use polygen::dse::{explore, Degree, DseOptions, Procedure};
 use polygen::rtl::{emit_golden_hex, emit_module, DatapathSim};
 use polygen::verify::{verify_exhaustive, Engine};
@@ -45,6 +45,72 @@ fn grid_every_design_verifies_and_simulates() {
         }
     }
     assert!(checked >= 30, "grid too sparse: only {checked} designs checked");
+}
+
+/// The lazy-region tentpole invariant over a broad grid: whatever a
+/// `RegionView` re-sweeps on demand is byte-identical to the eager
+/// oracle's phase-3 output — entries, `linear_ok`, pair counts — across
+/// every built-in workload, several precisions and lookup heights, and
+/// the streamed metrics agree with the materialized ones.
+#[test]
+fn grid_lazy_views_equal_eager_oracle() {
+    let mut checked = 0;
+    for name in ["recip", "log2", "exp2", "sqrt"] {
+        for bits in [8u32, 10, 12] {
+            let f = builtin(name, bits).unwrap();
+            let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+            for r in 3..=(bits - 3) {
+                let opts = GenOptions { lookup_bits: r, ..Default::default() };
+                let Ok(lazy) = generate(&bt, &opts) else { continue };
+                let eager = generate_eager(&bt, &opts)
+                    .expect("lazy feasible implies eager feasible");
+                assert_eq!(lazy.k, eager.k, "{name}/{bits} R={r}: k");
+                // Streamed metrics first — they must not materialize.
+                assert_eq!(
+                    lazy.num_ab_pairs(),
+                    eager.num_ab_pairs(),
+                    "{name}/{bits} R={r}: pair count"
+                );
+                assert_eq!(
+                    lazy.linear_feasible(),
+                    eager.linear_feasible(),
+                    "{name}/{bits} R={r}: linear bit"
+                );
+                assert!(
+                    lazy.region_views().all(|v| !v.is_materialized()),
+                    "{name}/{bits} R={r}: metrics materialized a region"
+                );
+                // Then the byte-identical entry sweep, region by region.
+                for (lv, ev) in lazy.region_views().zip(eager.region_views()) {
+                    assert_eq!(
+                        lv.entries(),
+                        ev.entries(),
+                        "{name}/{bits} R={r} region {}",
+                        lv.r()
+                    );
+                    assert_eq!(lv.linear_ok(), ev.linear_ok(), "{name}/{bits} R={r}");
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 30, "grid too sparse: only {checked} spaces checked");
+}
+
+/// Exploring a lazy space and an eager space yields the same
+/// implementation — the decision procedures are representation-blind.
+#[test]
+fn dse_is_representation_blind() {
+    for (name, bits, r) in [("recip", 10u32, 4u32), ("exp2", 10, 5)] {
+        let f = builtin(name, bits).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        let opts = GenOptions { lookup_bits: r, ..Default::default() };
+        let lazy = generate(&bt, &opts).unwrap();
+        let eager = generate_eager(&bt, &opts).unwrap();
+        let a = explore(&bt, &lazy, &DseOptions::default()).unwrap();
+        let b = explore(&bt, &eager, &DseOptions::default()).unwrap();
+        assert!(a.same_selection(&b), "{name}: lazy vs eager DSE diverged");
+    }
 }
 
 /// Accuracy-spec variants: Faithful and Ulp(2) also produce verified

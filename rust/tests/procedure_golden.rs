@@ -129,7 +129,10 @@ mod legacy {
         j: u32,
         cap: usize,
     ) -> bool {
-        ds.regions.iter().all(|sp| {
+        // Access path modernized with the lazy-region refactor (entries
+        // now come through memoizing views); the algorithm is unchanged.
+        ds.region_views().all(|rv| {
+            let sp = rv.space();
             let (l, u) = bt.region(ds.lookup_bits, sp.r);
             !filter_region(l, u, ds.k, sp, degree, i, j, cap, true).is_empty()
         })
@@ -143,9 +146,9 @@ mod legacy {
         j: u32,
         cap: usize,
     ) -> Vec<RegionCands> {
-        ds.regions
-            .iter()
-            .map(|sp| {
+        ds.region_views()
+            .map(|rv| {
+                let sp = rv.space();
                 let (l, u) = bt.region(ds.lookup_bits, sp.r);
                 filter_region(l, u, ds.k, sp, degree, i, j, cap, false)
             })
@@ -205,8 +208,8 @@ mod legacy {
         mut cands: Vec<RegionCands>,
         cap: usize,
     ) -> Option<Implementation> {
-        let sampled = ds.regions.iter().any(|sp| {
-            sp.entries.iter().any(|e| (e.b_hi - e.b_lo + 1) as usize > cap)
+        let sampled = ds.region_views().any(|rv| {
+            rv.entries().iter().any(|e| (e.b_hi - e.b_lo + 1) as usize > cap)
         });
 
         let a_sets: Vec<IntervalSet> = cands
@@ -242,8 +245,8 @@ mod legacy {
         }
 
         let mut c_sets: Vec<IntervalSet> = Vec::with_capacity(cands.len());
-        for (rc, sp) in cands.iter().zip(&ds.regions) {
-            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        for (rc, rv) in cands.iter().zip(ds.region_views()) {
+            let (l, u) = bt.region(ds.lookup_bits, rv.r());
             let mut set: IntervalSet = Vec::new();
             for (a, bs) in &rc.cands {
                 let env = CEnvelope::build(l, u, ds.k, *a, i, j);
@@ -262,8 +265,8 @@ mod legacy {
         let enc_c = algorithm1(&c_sets)?;
 
         let mut coeffs = Vec::with_capacity(cands.len());
-        for (rc, sp) in cands.iter().zip(&ds.regions) {
-            let (l, u) = bt.region(ds.lookup_bits, sp.r);
+        for (rc, rv) in cands.iter().zip(ds.region_views()) {
+            let (l, u) = bt.region(ds.lookup_bits, rv.r());
             let mut chosen: Option<Coeffs> = None;
             'outer: for (a, bs) in &rc.cands {
                 let env = CEnvelope::build(l, u, ds.k, *a, i, j);
@@ -321,8 +324,9 @@ mod legacy {
         j: u32,
         admits: &impl Fn(&Coeffs) -> bool,
     ) -> Option<Implementation> {
-        let mut coeffs = Vec::with_capacity(ds.regions.len());
-        for sp in &ds.regions {
+        let mut coeffs = Vec::with_capacity(ds.num_regions());
+        for rv in ds.region_views() {
+            let sp = rv.space();
             let (l, u) = bt.region(ds.lookup_bits, sp.r);
             let mut chosen = None;
             'outer: for e in &sp.entries {

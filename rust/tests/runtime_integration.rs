@@ -115,7 +115,7 @@ fn generate_with_xla_extrema_provider_end_to_end() {
     let a = polygen::designspace::generate_with(&bt, &opts, Some(&provider)).unwrap();
     let b = generate(&bt, &opts).unwrap();
     assert_eq!(a.k, b.k);
-    for (ra, rb) in a.regions.iter().zip(&b.regions) {
-        assert_eq!(ra.entries, rb.entries, "region {}", ra.r);
+    for (ra, rb) in a.region_views().zip(b.region_views()) {
+        assert_eq!(ra.entries(), rb.entries(), "region {}", ra.r());
     }
 }
