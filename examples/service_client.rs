@@ -1,0 +1,141 @@
+//! Drive the polygen job service over HTTP: spawn an in-process
+//! `polygen serve` equivalent on an ephemeral port, submit several jobs
+//! concurrently, poll their statuses, cancel one, and fetch results —
+//! exactly the workflow a remote client would run against
+//! `polygen serve --port 7878`.
+//!
+//! ```text
+//! cargo run --release --example service_client
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use polygen::service::http::HttpServer;
+use polygen::service::Service;
+
+/// Minimal one-shot HTTP client (the server closes after each response).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: client\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let code = raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (code, body)
+}
+
+fn field_u64(body: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).expect(key);
+    body[at + pat.len()..].chars().take_while(char::is_ascii_digit).collect::<String>()
+        .parse()
+        .expect(key)
+}
+
+fn status_of(body: &str) -> String {
+    let pat = "\"status\":\"";
+    let at = body.find(pat).map(|i| i + pat.len()).unwrap_or(0);
+    body[at..].chars().take_while(|c| *c != '"').collect()
+}
+
+fn main() {
+    // Server side: what `polygen serve` does, on an ephemeral port.
+    let service = Service::builder().workers(4).build();
+    let server = HttpServer::spawn(service, "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+    println!("service listening on http://{addr}");
+
+    // Client side: concurrent submissions — three quick jobs (TOML and
+    // JSON bodies) and one heavy auto-LUB sweep we will abandon.
+    let jobs: Vec<(&str, String)> = vec![
+        ("recip 8b R=4 (toml)", "func = recip\nbits = 8\n[generate]\nlookup_bits = 4\n".into()),
+        ("log2 8b R=4 (json)", r#"{"func":"log2","bits":8,"generate":{"lookup_bits":4}}"#.into()),
+        ("exp2 8b R=4 (toml)", "func = exp2\nbits = 8\n[generate]\nlookup_bits = 4\n".into()),
+        (
+            "recip 16b auto (doomed)",
+            "func = recip\nbits = 16\n[generate]\nlookup_bits = auto\nthreads = 2\n\
+             [job]\nverify = false\n"
+                .into(),
+        ),
+    ];
+    let ids: Vec<(u64, &str)> = std::thread::scope(|scope| {
+        jobs.iter()
+            .map(|(name, body)| {
+                scope.spawn(move || {
+                    let (code, resp) = http(addr, "POST", "/jobs", body);
+                    assert_eq!(code, 201, "{resp}");
+                    let id = field_u64(&resp, "id");
+                    println!("submitted {name} -> id {id}");
+                    (id, *name)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // Change of plans: cancel the sweep.
+    let (doomed_id, doomed_name) = *ids.last().expect("four jobs submitted");
+    let (code, resp) = http(addr, "DELETE", &format!("/jobs/{doomed_id}"), "");
+    println!("cancelling {doomed_name}: DELETE /jobs/{doomed_id} -> {code} ({})", status_of(&resp));
+    assert_eq!(code, 200);
+
+    // Poll everything to a terminal state, printing live phase/progress.
+    let mut pending: Vec<(u64, &str)> = ids.clone();
+    while !pending.is_empty() {
+        std::thread::sleep(Duration::from_millis(150));
+        pending.retain(|(id, name)| {
+            let (_, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+            let status = status_of(&body);
+            match status.as_str() {
+                "done" | "failed" | "cancelled" => {
+                    println!("{name}: {status}");
+                    false
+                }
+                "running" => {
+                    let phase = body
+                        .split("\"phase\":\"")
+                        .nth(1)
+                        .map(|s| s.chars().take_while(|c| *c != '"').collect::<String>())
+                        .unwrap_or_default();
+                    println!("{name}: running ({phase})");
+                    true
+                }
+                other => {
+                    println!("{name}: {other}");
+                    true
+                }
+            }
+        });
+    }
+
+    // Fetch results: the three quick jobs must deliver, the doomed one
+    // must report 409/cancelled.
+    for (id, name) in &ids {
+        let (code, body) = http(addr, "GET", &format!("/jobs/{id}/result"), "");
+        if *id == doomed_id {
+            assert_eq!(code, 409, "{body}");
+            println!("{name}: result -> 409 cancelled (as requested)");
+        } else {
+            assert_eq!(code, 200, "{body}");
+            println!(
+                "{name}: R={} LUT {} delay {} ns",
+                field_u64(&body, "lookup_bits"),
+                body.split("\"lut_width\":\"").nth(1).map(|s| s.split('"').next().unwrap_or(""))
+                    .unwrap_or(""),
+                body.split("\"delay_ns\":").nth(1).map(|s| s.split(',').next().unwrap_or(""))
+                    .unwrap_or("")
+            );
+        }
+    }
+    server.stop();
+    polygen::pipeline::shutdown();
+    println!("all jobs settled; scheduler drained; bye");
+}

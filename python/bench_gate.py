@@ -18,11 +18,19 @@ mirror (mode "mirror-estimate", from the no-toolchain authoring
 container) are not comparable wall-clock sources: their time metrics are
 informational, but the machine-independent speedup ratio is still gated.
 
+--prefer-native FILE names an optional second baseline (CI passes the
+BENCH_gen.json artifact of the previous successful run on the same
+runner class): when it exists and was natively measured, it replaces the
+positional baseline, which *arms the wall-clock gates* even while the
+committed baseline is still a mirror estimate. A missing/unreadable/
+mirror-mode FILE silently falls back to the positional baseline.
+
 A markdown comparison table is appended to the file named by
 $GITHUB_STEP_SUMMARY (or --summary) when set.
 
 Usage: bench_gate.py BASELINE.json NEW.json [--threshold 0.25]
                      [--min-time 0.005] [--summary FILE]
+                     [--prefer-native FILE]
 """
 
 import argparse
@@ -43,6 +51,12 @@ def load(path):
         return json.load(f)
 
 
+def is_mirror(doc):
+    return "mirror" in str(doc.get("mode", "")) or "python-mirror" in str(
+        doc.get("harness", "")
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
@@ -52,17 +66,28 @@ def main():
     ap.add_argument("--min-time", type=float, default=0.005,
                     help="seconds; baseline times below this are too noisy to gate")
     ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"))
+    ap.add_argument("--prefer-native", default=None, metavar="FILE",
+                    help="use FILE as the baseline instead when it is a native "
+                         "measurement (e.g. the previous CI run's artifact)")
     args = ap.parse_args()
 
     base = load(args.baseline)
+    baseline_source = args.baseline
+    if args.prefer_native:
+        try:
+            preferred = load(args.prefer_native)
+        except (OSError, ValueError):
+            preferred = None
+        if preferred is not None and not is_mirror(preferred):
+            base = preferred
+            baseline_source = f"{args.prefer_native} (previous native artifact)"
     new = load(args.new)
     base_rows = {key(r): r for r in base.get("results", [])}
     new_rows = {key(r): r for r in new.get("results", [])}
-    mirror_baseline = "mirror" in str(base.get("mode", "")) or "python-mirror" in str(
-        base.get("harness", "")
-    )
+    mirror_baseline = is_mirror(base)
 
     lines = ["# gen_engine bench regression gate", ""]
+    lines += [f"baseline: `{baseline_source}`", ""]
     if mirror_baseline:
         lines += [
             "> baseline is a python-mirror estimate (authored without a rust "

@@ -13,7 +13,8 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
-use crate::designspace::{generate, DesignSpace, GenError, GenOptions};
+use crate::designspace::{generate_ctrl, DesignSpace, GenError, GenOptions};
+use crate::pool::{CancelToken, Progress};
 use crate::dse::{explore, DseOptions, Implementation};
 use crate::synth::{synth_min_delay_with, SynthPoint};
 
@@ -65,13 +66,35 @@ pub fn run_point_cached(
     dse: &DseOptions,
     cache: Option<&Path>,
 ) -> SweepPoint {
+    run_point_inner(w, r, gen, dse, cache, None)
+}
+
+/// One sweep point with an optional cancel token threaded into its
+/// generation (the token is checked between region sweeps); a point
+/// cancelled mid-generation records `Err(GenError::Cancelled)` as its
+/// space and skips exploration.
+fn run_point_inner(
+    w: &Workload,
+    r: u32,
+    gen: &GenOptions,
+    dse: &DseOptions,
+    cache: Option<&Path>,
+    cancel: Option<&CancelToken>,
+) -> SweepPoint {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let t0 = Instant::now();
     let space = match cache {
-        Some(dir) => generate_cached(w, r, &opts, dir),
-        None => generate(&w.bt, &opts),
+        Some(dir) => generate_cached_ctrl(w, r, &opts, dir, cancel, None),
+        None => generate_ctrl(&w.bt, &opts, cancel, None),
     };
     let gen_time = t0.elapsed();
+    // A cancel that lands between generation and exploration also stops
+    // the point: exploration re-sweeps regions, which can dwarf the
+    // analysis phases on small-R points.
+    let space = match space {
+        Ok(_) if cancel.is_some_and(|c| c.is_cancelled()) => Err(GenError::Cancelled),
+        other => other,
+    };
     let implementation = space.as_ref().ok().and_then(|ds| explore(&w.bt, ds, dse));
     // Cost under the technology the exploration targeted, so sweeps and
     // auto-LUB selection optimize the same model the procedure used.
@@ -111,6 +134,45 @@ pub fn sweep_lub_cached(
 ) -> Vec<SweepPoint> {
     crate::pool::run_indexed(r_values.len(), threads, |i| {
         run_point_cached(w, r_values[i], gen, dse, cache)
+    })
+}
+
+/// [`sweep_lub_cached`] with cooperative cancellation and per-point
+/// progress — the sweep [`crate::service`] jobs run. The token is
+/// checked before each point *and* between each point's region sweeps;
+/// a cancelled point carries `Err(GenError::Cancelled)` as its space.
+/// `progress` counts completed points (the region-level counts of the
+/// individual generations are deliberately not reported: concurrent
+/// points would interleave their resets into noise).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_lub_ctrl(
+    w: &Workload,
+    r_values: &[u32],
+    gen: &GenOptions,
+    dse: &DseOptions,
+    threads: usize,
+    cache: Option<&Path>,
+    cancel: &CancelToken,
+    progress: Option<&Progress>,
+) -> Vec<SweepPoint> {
+    if let Some(p) = progress {
+        p.begin(r_values.len());
+    }
+    crate::pool::run_indexed(r_values.len(), threads, |i| {
+        if cancel.is_cancelled() {
+            return SweepPoint {
+                lookup_bits: r_values[i],
+                gen_time: Duration::ZERO,
+                space: Err(GenError::Cancelled),
+                implementation: None,
+                synth: None,
+            };
+        }
+        let point = run_point_inner(w, r_values[i], gen, dse, cache, Some(cancel));
+        if let Some(p) = progress {
+            p.tick();
+        }
+        point
     })
 }
 
@@ -181,6 +243,21 @@ pub fn generate_cached(
     gen: &GenOptions,
     dir: &Path,
 ) -> Result<DesignSpace, GenError> {
+    generate_cached_ctrl(w, r, gen, dir, None, None)
+}
+
+/// [`generate_cached`] with cooperative cancellation/progress threaded
+/// into the miss path (both the analysis phases and the pre-save
+/// materialization sweep — the dominant cost at 16+ bits — honor the
+/// token). Cache hits are a parse and never cancel.
+pub fn generate_cached_ctrl(
+    w: &Workload,
+    r: u32,
+    gen: &GenOptions,
+    dir: &Path,
+    cancel: Option<&CancelToken>,
+    progress: Option<&Progress>,
+) -> Result<DesignSpace, GenError> {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, &opts);
     if let Ok(ds) = cache::load(&path) {
@@ -188,12 +265,14 @@ pub fn generate_cached(
             return Ok(ds);
         }
     }
-    let ds = generate(&w.bt, &opts)?;
+    let ds = generate_ctrl(&w.bt, &opts, cancel, progress)?;
     // The `.pgds` format stores the full dictionaries, so a miss pays
     // materialization here either way — do it through the scheduler
     // (parallel phase 3) rather than letting `cache::save`'s serializer
     // sweep every region sequentially.
-    ds.materialize(opts.threads);
+    if !ds.materialize_ctrl(opts.threads, cancel) {
+        return Err(GenError::Cancelled);
+    }
     let _ = cache::save(&ds, &path); // best-effort
     Ok(ds)
 }

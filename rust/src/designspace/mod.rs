@@ -34,7 +34,7 @@ pub mod region;
 use std::sync::OnceLock;
 
 use crate::bounds::BoundTable;
-use crate::pool::run_indexed;
+use crate::pool::{run_indexed, CancelToken, Progress};
 use extrema::{DiagExtrema, SearchStrategy};
 use region::{
     min_feasible_k, min_feasible_k_naive, region_space_at_k, region_space_at_k_naive, AbEntry,
@@ -78,6 +78,11 @@ pub enum GenError {
     InfeasibleRegion { r: u64 },
     /// Real-feasible but no integer design within `max_k`.
     KExhausted { r: u64, max_k: u32 },
+    /// The run's [`CancelToken`](crate::pool::CancelToken) was triggered:
+    /// generation stopped cooperatively between region sweeps. Not a
+    /// property of the workload — retrying without cancellation may
+    /// succeed.
+    Cancelled,
 }
 
 impl std::fmt::Display for GenError {
@@ -90,6 +95,7 @@ impl std::fmt::Display for GenError {
             GenError::KExhausted { r, max_k } => {
                 write!(f, "region {r} has no integer design for any k <= {max_k}")
             }
+            GenError::Cancelled => write!(f, "generation cancelled"),
         }
     }
 }
@@ -223,15 +229,28 @@ impl DesignSpace {
     /// engine), across up to `threads` workers of the process-wide
     /// scheduler. Memoized regions are kept as-is.
     pub fn materialize(&self, threads: usize) {
-        let fresh = run_indexed(self.num_regions(), threads, |i| match self.cells[i].get() {
-            Some(_) => None,
-            None => Some(self.sweep_region(i)),
+        let done = self.materialize_ctrl(threads, None);
+        debug_assert!(done, "uncancellable materialize reported a cancel");
+    }
+
+    /// [`DesignSpace::materialize`] with a cooperative cancel checkpoint
+    /// between region sweeps. Returns `false` when the token fired
+    /// before every region was swept; already-swept regions stay
+    /// memoized (harmless — they are correct, merely early), so the
+    /// space remains usable if the caller decides to continue anyway.
+    pub fn materialize_ctrl(&self, threads: usize, cancel: Option<&CancelToken>) -> bool {
+        let fresh = run_indexed(self.num_regions(), threads, |i| {
+            if cancel.is_some_and(|c| c.is_cancelled()) || self.cells[i].get().is_some() {
+                return None;
+            }
+            Some(self.sweep_region(i))
         });
         for (cell, sp) in self.cells.iter().zip(fresh) {
             if let Some(sp) = sp {
                 let _ = cell.set(sp);
             }
         }
+        !cancel.is_some_and(|c| c.is_cancelled())
     }
 
     fn sweep_region(&self, i: usize) -> RegionSpace {
@@ -290,13 +309,38 @@ pub fn generate_with(
     opts: &GenOptions,
     provider: Option<&ExtremaProvider<'_>>,
 ) -> Result<DesignSpace, GenError> {
+    generate_inner(bt, opts, provider, None, None)
+}
+
+/// [`generate`] with cooperative cancellation and progress reporting —
+/// the entry point [`crate::service`] jobs run on. The cancel token is
+/// polled before each region's analysis (a cancelled run returns
+/// [`GenError::Cancelled`] without sweeping the remaining regions);
+/// `progress` ticks once per analyzed region after a
+/// [`Progress::begin`]`(num_regions)`.
+pub fn generate_ctrl(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    cancel: Option<&CancelToken>,
+    progress: Option<&Progress>,
+) -> Result<DesignSpace, GenError> {
+    generate_inner(bt, opts, None, cancel, progress)
+}
+
+fn generate_inner(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    provider: Option<&ExtremaProvider<'_>>,
+    cancel: Option<&CancelToken>,
+    progress: Option<&Progress>,
+) -> Result<DesignSpace, GenError> {
     assert!(opts.lookup_bits <= bt.in_bits);
     let nregions = 1u64 << opts.lookup_bits;
 
     // Phases 1 + 2: per-region analysis, then the common k. Phase 3 (the
     // entry sweep) happens per region on first touch: feasibility at the
     // per-region minimal k implies feasibility at the (>=) common k.
-    let (analyses, k) = analyze_and_common_k(bt, opts, provider, nregions)?;
+    let (analyses, k) = analyze_and_common_k(bt, opts, provider, nregions, cancel, progress)?;
 
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
     Ok(DesignSpace {
@@ -340,8 +384,16 @@ fn analyze_and_common_k(
     opts: &GenOptions,
     provider: Option<&ExtremaProvider<'_>>,
     nregions: u64,
+    cancel: Option<&CancelToken>,
+    progress: Option<&Progress>,
 ) -> Result<(Vec<RegionAnalysis>, u32), GenError> {
-    let analyses = analyze_all(bt, opts, provider, nregions);
+    let analyses = analyze_all(bt, opts, provider, nregions, cancel, progress)
+        .ok_or(GenError::Cancelled)?;
+    // A cancel that lands after the last region was analyzed still wins:
+    // the caller asked the run to stop, so it must not observe success.
+    if cancel.is_some_and(|c| c.is_cancelled()) {
+        return Err(GenError::Cancelled);
+    }
     let mut k = 0u32;
     for an in &analyses {
         if !an.feasible {
@@ -355,19 +407,39 @@ fn analyze_and_common_k(
     Ok((analyses, k))
 }
 
+/// Analyze every region; `None` = the cancel token fired and at least
+/// one region was skipped (its analysis slot holds a placeholder that
+/// must not be used).
 fn analyze_all(
     bt: &BoundTable,
     opts: &GenOptions,
     provider: Option<&ExtremaProvider<'_>>,
     nregions: u64,
-) -> Vec<RegionAnalysis> {
+    cancel: Option<&CancelToken>,
+    progress: Option<&Progress>,
+) -> Option<Vec<RegionAnalysis>> {
+    if let Some(p) = progress {
+        p.begin(nregions as usize);
+    }
+    // The cancellation checkpoint (both branches): polled before each
+    // region's sweep, so a cancelled run stops within one region's worth
+    // of work per executor.
+    let cancelled = || cancel.is_some_and(|c| c.is_cancelled());
     if opts.threads <= 1 || nregions <= 1 || provider.is_some() {
         // Sequential (and the only branch that may consult the non-Sync
-        // provider).
-        let analyze_one = |r: u64| -> RegionAnalysis {
+        // provider — which is why this closure must not cross into
+        // `run_indexed`, whose tasks require `Sync` captures).
+        let analyze_one = |r: u64| -> Option<RegionAnalysis> {
+            if cancelled() {
+                return None;
+            }
             let (l, u) = bt.region(opts.lookup_bits, r);
             let diag = provider.and_then(|p| p(l, u));
-            region::analyze_region(r, l, u, opts.search, diag)
+            let an = region::analyze_region(r, l, u, opts.search, diag);
+            if let Some(p) = progress {
+                p.tick();
+            }
+            Some(an)
         };
         return (0..nregions).map(analyze_one).collect();
     }
@@ -377,10 +449,19 @@ fn analyze_all(
     // pruning and the hull tangent searches fire unevenly — so workers
     // pull from a shared cursor instead of static chunks. Results are
     // indexed, so the output is thread-count independent.
-    run_indexed(nregions as usize, opts.threads, |i| {
+    run_indexed(nregions as usize, opts.threads, |i| -> Option<RegionAnalysis> {
+        if cancelled() {
+            return None;
+        }
         let (l, u) = bt.region(opts.lookup_bits, i as u64);
-        region::analyze_region(i as u64, l, u, opts.search, None)
+        let an = region::analyze_region(i as u64, l, u, opts.search, None);
+        if let Some(p) = progress {
+            p.tick();
+        }
+        Some(an)
     })
+    .into_iter()
+    .collect()
 }
 
 /// The pre-envelope reference engine, kept verbatim as the oracle: linear
@@ -398,7 +479,8 @@ pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace,
         other => other,
     };
     let opts = GenOptions { search, ..*opts };
-    let analyses = analyze_all(bt, &opts, None, nregions);
+    let analyses =
+        analyze_all(bt, &opts, None, nregions, None, None).expect("uncancellable run");
     let mut k = 0u32;
     for an in &analyses {
         if !an.feasible {
@@ -462,7 +544,7 @@ pub fn min_lookup_bits_report(
     let mut last_err: Option<(u32, GenError)> = None;
     let found = min_monotone_guarded(cap, |r| {
         let o = GenOptions { lookup_bits: r, ..*opts };
-        match analyze_and_common_k(bt, &o, None, 1u64 << r) {
+        match analyze_and_common_k(bt, &o, None, 1u64 << r, None, None) {
             Ok(_) => true,
             Err(e) => {
                 // Keep the error from the highest R probed — the most
@@ -667,6 +749,7 @@ mod tests {
             assert!(r_err < rmin);
             match err {
                 GenError::InfeasibleRegion { .. } | GenError::KExhausted { .. } => {}
+                GenError::Cancelled => panic!("no cancel token in play"),
             }
         }
         // A max_k of 0 normally makes every R's k-search fail: the report
@@ -699,6 +782,33 @@ mod tests {
         assert_eq!(raw, Some(7), "bisection alone must miss the true minimum");
         let guarded = min_monotone_guarded(7, |r| feasible[r as usize]);
         assert_eq!(guarded, Some((3, false)), "guard must detect and correct");
+    }
+
+    #[test]
+    fn cancelled_generation_reports_cancelled() {
+        let bt = table("recip", 8);
+        let opts = GenOptions { lookup_bits: 4, ..Default::default() };
+        // A pre-fired token cancels before any region is swept.
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let err = generate_ctrl(&bt, &opts, Some(&cancel), None).unwrap_err();
+        assert_eq!(err, GenError::Cancelled);
+
+        // An unfired token is invisible: the ctrl path matches the plain
+        // engine and the progress counter lands on (regions, regions).
+        let fresh = CancelToken::new();
+        let progress = Progress::default();
+        let ds = generate_ctrl(&bt, &opts, Some(&fresh), Some(&progress)).unwrap();
+        let plain = generate(&bt, &opts).unwrap();
+        assert_eq!(progress.get(), (16, 16));
+        assert_spaces_identical(&ds, &plain, "ctrl vs plain");
+
+        // materialize_ctrl: a fired token aborts (reporting false), an
+        // unfired one completes.
+        let lazy = generate(&bt, &opts).unwrap();
+        assert!(!lazy.materialize_ctrl(2, Some(&cancel)));
+        assert!(lazy.materialize_ctrl(2, Some(&fresh)));
+        assert!(lazy.region_views().all(|v| v.is_materialized()));
     }
 
     #[test]

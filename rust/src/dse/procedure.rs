@@ -199,23 +199,33 @@ impl DecisionProcedure for Lexicographic {
 /// dominated points, and rank the survivors by area-delay product (in
 /// the technology's own units).
 ///
-/// Candidates: for quadratic designs, each sampled square truncation
-/// `i` (at its maximal feasible `j`) with widths minimized there; for
-/// linear designs the sweep runs over `j`. The width-first
+/// Candidates: for quadratic designs, the **2-D `(i, j)` truncation
+/// frontier** — each sampled square truncation `i` crossed with a
+/// sampled descent of linear truncations `j` from the maximal feasible
+/// `j` at that `i` down to zero, widths minimized at every grid point.
+/// (The pre-frontier behaviour, `j` maximized per `i`, is the
+/// `frontier_2d = false` ablation; its candidate set is a subset of the
+/// frontier's, so the widened pool never selects a costlier
+/// implementation — property-tested.) For linear designs the sweep runs
+/// over `j` alone and the two shapes coincide. The width-first
 /// ([`Lexicographic::lut_first`]) selection joins the pool, so the
 /// procedure can trade truncation away entirely when storage is cheap —
 /// which is exactly what the FPGA model does on bundled examples.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParetoCost {
-    /// Cap on sampled truncation depths — never exceeded; both endpoints
-    /// (full and zero truncation) are always in the sample. Values below
-    /// 2 are treated as 2.
+    /// Cap on sampled truncation depths **per axis** — never exceeded;
+    /// both endpoints (full and zero truncation) are always in the
+    /// sample. Values below 2 are treated as 2. The 2-D frontier costs
+    /// at most `max_candidates^2` selections.
     pub max_candidates: usize,
+    /// Sweep the full `(i, j)` grid (the default). `false` restores the
+    /// 1-D ablation: `j` maximized per sampled `i`.
+    pub frontier_2d: bool,
 }
 
 impl Default for ParetoCost {
     fn default() -> Self {
-        ParetoCost { max_candidates: 6 }
+        ParetoCost { max_candidates: 6, frontier_2d: true }
     }
 }
 
@@ -260,8 +270,19 @@ impl DecisionProcedure for ParetoCost {
         if degree == Degree::Quadratic {
             let i_max = max_feasible_trunc(bt, ds, degree, opts, |p| (p, 0));
             for i in downsample_desc(i_max, self.max_candidates) {
-                let j = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
-                cands.extend(at(i, j));
+                let j_max = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
+                let js = if self.frontier_2d {
+                    // The full frontier row at this i: j_max down to 0.
+                    // Shallower j admits more (a, b) survivors, which can
+                    // tighten the minimized widths — a trade only a cost
+                    // model (not a fixed pass order) can arbitrate.
+                    downsample_desc(j_max, self.max_candidates)
+                } else {
+                    vec![j_max]
+                };
+                for j in js {
+                    cands.extend(at(i, j));
+                }
             }
         } else {
             let j_max = max_feasible_trunc(bt, ds, degree, opts, |p| (xbits, p));
@@ -382,6 +403,38 @@ mod tests {
                 .decide(&bt, &ds, cm, &opts)
                 .unwrap_or_else(|| panic!("{passes:?} found nothing"));
             assert_valid(&bt, &im);
+        }
+    }
+
+    #[test]
+    fn two_d_frontier_never_selects_costlier_than_one_d() {
+        // Satellite property (ROADMAP PR-3 item): the 2-D (i, j) grid's
+        // candidate pool is a superset of the old per-i-max-j pool
+        // (downsample_desc always includes its max endpoint), and the
+        // winner is the ADP-minimum over undominated candidates — so
+        // widening the pool can never select a costlier implementation,
+        // under ANY shipped cost model.
+        for (name, bits, r) in [("recip", 8u32, 3u32), ("recip", 10, 4), ("log2", 10, 4)] {
+            let (bt, ds) = setup(name, bits, r);
+            let opts = DseOptions::default();
+            for tech in TechKind::ALL {
+                let cm = tech.technology().cost_model();
+                let one_d = ParetoCost { frontier_2d: false, ..Default::default() }
+                    .decide(&bt, &ds, cm, &opts);
+                let two_d = ParetoCost::default().decide(&bt, &ds, cm, &opts);
+                let (Some(one_d), Some(two_d)) = (one_d, two_d) else {
+                    panic!("{name}/{bits} R={r} {}: pareto found nothing", tech.label());
+                };
+                assert_valid(&bt, &two_d);
+                let p1 = synth_min_delay_with(cm, &one_d);
+                let p2 = synth_min_delay_with(cm, &two_d);
+                let (adp1, adp2) = (p1.area_um2 * p1.delay_ns, p2.area_um2 * p2.delay_ns);
+                assert!(
+                    adp2 <= adp1 * (1.0 + 1e-12),
+                    "{name}/{bits} R={r} {}: 2-D frontier regressed ADP {adp1} -> {adp2}",
+                    tech.label()
+                );
+            }
         }
     }
 

@@ -19,6 +19,7 @@ pub mod dse;
 pub mod pipeline;
 pub mod pool;
 pub mod rtl;
+pub mod service;
 pub mod synth;
 pub mod tech;
 pub mod runtime;

@@ -12,7 +12,8 @@
 //! polygen sweep    --func log2  --bits 10 [--threads N]
 //! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear|tech> [--deep] [--out DIR]
 //! polygen config   --file job.toml [--set key=value ...]
-//! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR]
+//! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR] [--threads-strict]
+//! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR]
 //! ```
 //!
 //! `--lub auto` (optionally with `--objective area|delay|area_delay`)
@@ -34,7 +35,7 @@ use polygen::report;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: polygen <generate|dse|rtl|verify|sweep|report|config|batch> [--flags]\n\
+        "usage: polygen <generate|dse|rtl|verify|sweep|report|config|batch|serve> [--flags]\n\
          see rust/src/main.rs header or README.md for details"
     );
     ExitCode::FAILURE
@@ -325,6 +326,29 @@ fn run() -> Result<(), String> {
             );
             Ok(())
         }
+        "serve" => {
+            // The HTTP/JSON front-end over polygen::service (wire format
+            // in DESIGN.md §Service): POST /jobs, GET /jobs[/:id[/result]],
+            // DELETE /jobs/:id. `--port 0` binds an ephemeral port (the
+            // actual one is printed).
+            let addr = args.get("addr").unwrap_or("127.0.0.1");
+            let port = args.u32_or("port", 7878);
+            let jobs = args.u32_or(
+                "jobs",
+                std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(4),
+            ) as usize;
+            let mut builder = polygen::service::Service::builder().workers(jobs);
+            if let Some(dir) = args.get("cache") {
+                builder = builder.cache_dir(dir);
+            }
+            let svc = builder.build();
+            let listener = std::net::TcpListener::bind(format!("{addr}:{port}"))
+                .map_err(|e| format!("bind {addr}:{port}: {e}"))?;
+            let local = listener.local_addr().map_err(|e| e.to_string())?;
+            println!("polygen service listening on http://{local} ({jobs} concurrent jobs)");
+            polygen::service::http::serve(svc, listener);
+            Ok(())
+        }
         "batch" => {
             let mut files: Vec<String> =
                 args.get_all("jobs").iter().map(|s| s.to_string()).collect();
@@ -336,6 +360,13 @@ fn run() -> Result<(), String> {
             for f in &files {
                 let text = std::fs::read_to_string(f).map_err(|e| format!("{f}: {e}"))?;
                 specs.push(JobSpec::from_toml(&text).map_err(|e| format!("{f}: {e}"))?);
+            }
+            if args.has("threads-strict") {
+                // CLI override for the donation floor (ROADMAP PR-4
+                // item): every job keeps its own `threads` as a hard cap.
+                for s in &mut specs {
+                    s.threads_strict = true;
+                }
             }
             let threads = args.u32_or("threads", specs.len().min(8) as u32) as usize;
             let mut batch = Batch::new().threads(threads);

@@ -42,6 +42,15 @@ pub enum PipelineError {
     Io { path: PathBuf, source: std::io::Error },
     /// A malformed [`crate::pipeline::JobSpec`] (bad TOML key or value).
     Spec(String),
+    /// The run's [`crate::pipeline::JobCtrl`] was cancelled: the
+    /// pipeline stopped cooperatively at a phase boundary or between
+    /// region sweeps. Not a property of the workload — resubmitting the
+    /// same spec can succeed.
+    Cancelled,
+    /// A panic escaped a pipeline stage; carries the payload's message.
+    /// Produced by [`crate::service::Service`] executors, which convert
+    /// panics into failed jobs instead of dying.
+    Panic(String),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -83,6 +92,8 @@ impl std::fmt::Display for PipelineError {
                 write!(f, "{}: {source}", path.display())
             }
             PipelineError::Spec(msg) => write!(f, "job spec: {msg}"),
+            PipelineError::Cancelled => write!(f, "job cancelled"),
+            PipelineError::Panic(msg) => write!(f, "job panicked: {msg}"),
         }
     }
 }

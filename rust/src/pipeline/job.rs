@@ -23,12 +23,13 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::config::Config;
 
 use super::{
-    AccuracySpec, Degree, Implementation, LookupBits, LubObjective, Pipeline, PipelineError,
-    Procedure, SearchStrategy, Settings, SynthPoint, TechKind, VerifyReport,
+    AccuracySpec, Degree, Implementation, JobCtrl, LookupBits, LubObjective, Pipeline,
+    PipelineError, Procedure, SearchStrategy, Settings, SynthPoint, TechKind, VerifyReport,
 };
 
 /// One pipeline job, serializable to/from a TOML job file.
@@ -46,12 +47,21 @@ pub struct JobSpec {
     pub tech: TechKind,
     pub search: SearchStrategy,
     pub max_k: u32,
-    /// Concurrency budget for the job's generation/sweep phases. Inside
-    /// a [`Batch`] this is a *floor*: the batch raises it to its own
-    /// budget so idle workers can be donated to this job's inner phases
-    /// (thread counts never change results, only scheduling). Run the
-    /// spec standalone ([`JobSpec::run`]) to pin an exact count.
+    /// Concurrency budget for the job's generation/sweep phases. Under a
+    /// [`Batch`] or a [`crate::service::Service`] this is a **floor**,
+    /// not a cap: the executor raises it to its own budget so idle
+    /// workers can be donated to this job's inner phases (thread counts
+    /// never change results, only scheduling). Set
+    /// [`JobSpec::threads_strict`] to make it a hard cap instead, or run
+    /// the spec standalone ([`JobSpec::run`]) to pin an exact count.
     pub threads: usize,
+    /// Opt out of budget donation: when true, `threads` is a hard cap on
+    /// the job's inner concurrency even inside a batch/service whose
+    /// budget is larger (`generate.threads_strict = true` in job files,
+    /// `--threads-strict` on the CLI). For deployments that need strict
+    /// per-job thread isolation — e.g. to keep one job's latency
+    /// profile independent of its neighbours.
+    pub threads_strict: bool,
     pub max_b_per_a: usize,
     /// Exhaustively verify the selected implementation (default true).
     pub verify: bool,
@@ -74,6 +84,7 @@ impl JobSpec {
             search: s.search,
             max_k: s.max_k,
             threads: s.threads,
+            threads_strict: false,
             max_b_per_a: s.max_b_per_a,
             verify: true,
             rtl_out: None,
@@ -115,9 +126,23 @@ impl JobSpec {
 
     /// Execute the job, generating through a shared disk cache.
     pub fn run_with(&self, cache: Option<&Path>) -> Result<JobResult, PipelineError> {
+        self.run_controlled(cache, None)
+    }
+
+    /// [`JobSpec::run_with`] under a [`JobCtrl`]: the run becomes
+    /// cancellable and reports phase/progress — how
+    /// [`crate::service::Service`] executes every job.
+    pub fn run_controlled(
+        &self,
+        cache: Option<&Path>,
+        ctrl: Option<Arc<JobCtrl>>,
+    ) -> Result<JobResult, PipelineError> {
         let mut p = self.to_pipeline();
         if let Some(dir) = cache {
             p = p.cache_dir(dir);
+        }
+        if let Some(c) = ctrl {
+            p = p.control(c);
         }
         let synthesized = p.prepare()?.generate()?.explore()?.synthesize();
         if self.verify {
@@ -134,6 +159,17 @@ impl JobSpec {
             };
             Ok(JobResult::assemble(synthesized.implementation, synthesized.synth, None, rtl))
         }
+    }
+
+    /// The spec as an executor with concurrency budget `budget` runs it:
+    /// `threads` is a donation **floor** raised to the budget, unless
+    /// [`JobSpec::threads_strict`] opts the job out (then it is a cap).
+    pub(crate) fn donated(&self, budget: usize) -> JobSpec {
+        let mut s = self.clone();
+        if !s.threads_strict {
+            s.threads = s.threads.max(budget);
+        }
+        s
     }
 
     /// Parse a job file's text (the TOML subset [`Config`] accepts).
@@ -174,6 +210,9 @@ impl JobSpec {
         }
         if let Some(v) = cfg.get_u32("generate.threads").map_err(spec_err)? {
             s.threads = v as usize;
+        }
+        if let Some(v) = cfg.get_bool("generate.threads_strict").map_err(spec_err)? {
+            s.threads_strict = v;
         }
         if let Some(v) = cfg.get("dse.procedure") {
             s.procedure = match v {
@@ -223,7 +262,8 @@ impl JobSpec {
             }
         ));
         out.push_str(&format!("max_k = {}\n", self.max_k));
-        out.push_str(&format!("threads = {}\n\n", self.threads));
+        out.push_str(&format!("threads = {}\n", self.threads));
+        out.push_str(&format!("threads_strict = {}\n\n", self.threads_strict));
         out.push_str("[dse]\n");
         out.push_str(&format!(
             "procedure = {}\n",
@@ -331,21 +371,26 @@ impl JobResult {
     }
 }
 
-/// Executes many [`JobSpec`]s on the process-wide scheduler
-/// ([`crate::pool`]). Jobs are pulled from a shared cursor (dynamic load
-/// balancing — auto-LUB sweeps take much longer than fixed-`R` jobs),
-/// and one result slot per spec keeps output order deterministic.
+/// Blocking multi-job execution: submit-all + wait-all over a private
+/// [`crate::service::Service`].
+///
+/// `Batch` is now a thin shim — the async, handle-based service is the
+/// real execution layer, and this type preserves the original blocking
+/// contract on top of it: `results[i]` corresponds to `specs[i]`, a
+/// failing job fails only its own slot, and results are byte-identical
+/// to running each spec alone (scheduling never changes results,
+/// property-tested). Callers that want to poll progress or cancel
+/// individual jobs should use [`crate::service::Service`] directly.
 ///
 /// `threads` is the batch's **concurrency budget**, and it flows
 /// dynamically: each job's inner generation/sweep work is raised to the
-/// same budget and posted to the scheduler, so when a small job finishes
-/// early its worker is *donated* to a sibling's inner work instead of
-/// idling. Real parallelism is bounded by the persistent pool size
-/// regardless of nesting (this supersedes the static
-/// `inner_thread_cap` split of earlier revisions). Thread counts never
-/// change any result (property-tested), so scheduling is invisible
-/// outside wall-clock time. [`shutdown`](super::shutdown) drains the
-/// scheduler after batches when a completion barrier is needed.
+/// same budget (a donation *floor* — see [`JobSpec::threads`]; jobs with
+/// [`JobSpec::threads_strict`] keep their own cap) and posted to the
+/// process-wide scheduler, so when a small job finishes early its
+/// worker is donated to a sibling's inner work instead of idling. Real
+/// parallelism stays bounded by the persistent pool size regardless of
+/// nesting. [`shutdown`](super::shutdown) drains the scheduler after
+/// batches when a completion barrier is needed.
 #[derive(Clone, Debug, Default)]
 pub struct Batch {
     threads: usize,
@@ -377,16 +422,18 @@ impl Batch {
     /// Execute every spec; `results[i]` corresponds to `specs[i]`. A
     /// failing job fails its own slot only.
     pub fn execute(&self, specs: &[JobSpec]) -> Vec<Result<JobResult, PipelineError>> {
-        let cache = self.cache_dir.as_deref();
-        crate::pool::run_indexed(specs.len(), self.threads, |i| {
-            let mut spec = specs[i].clone();
-            // Budget donation: let every job's inner phases use the full
-            // batch budget — the global scheduler arbitrates, so idle
-            // batch workers migrate into siblings' generation jobs while
-            // total parallelism stays bounded by the pool size.
-            spec.threads = spec.threads.max(self.threads);
-            spec.run_with(cache)
-        })
+        let mut svc = crate::service::Service::builder().workers(self.threads);
+        if let Some(dir) = &self.cache_dir {
+            svc = svc.cache_dir(dir);
+        }
+        let svc = svc.build();
+        // Submit everything up front (the service's executors pull jobs
+        // as capacity frees — budget donation happens in submit), then
+        // wait in spec order. Handle extraction keeps each job's owned
+        // `Result` so the shim's signature matches the pre-service
+        // `Batch` exactly.
+        let handles: Vec<_> = specs.iter().map(|s| svc.submit(s.clone())).collect();
+        handles.into_iter().map(|h| h.wait()).collect()
     }
 }
 
@@ -414,6 +461,7 @@ mod tests {
             search: SearchStrategy::Naive,
             max_k: 24,
             threads: 4,
+            threads_strict: true,
             max_b_per_a: 128,
             verify: false,
             rtl_out: Some(PathBuf::from("out/rtl")),
@@ -476,6 +524,31 @@ mod tests {
         s.lookup = LookupBits::Auto(LubObjective::Delay);
         assert!(s.to_toml().contains("lookup_bits = auto:delay\n"));
         assert_eq!(JobSpec::from_toml(&s.to_toml()).unwrap(), s);
+    }
+
+    #[test]
+    fn threads_strict_roundtrips_and_caps_donation() {
+        // ROADMAP PR-4 item: per-job `threads` is a donation floor by
+        // default; `threads_strict = true` turns it into a hard cap.
+        let mut spec = JobSpec::new("recip", 10);
+        spec.threads = 2;
+        assert_eq!(spec.donated(8).threads, 8, "default: floor raised to the budget");
+        spec.threads_strict = true;
+        assert_eq!(spec.donated(8).threads, 2, "strict: the job keeps its own cap");
+        assert_eq!(spec.donated(1).threads, 2, "strict never lowers the cap either");
+
+        // TOML round-trip, both through to_toml and from a hand-written
+        // job file.
+        let back = JobSpec::from_toml(&spec.to_toml()).unwrap();
+        assert_eq!(back, spec);
+        let text = "func = recip\n[generate]\nthreads = 2\nthreads_strict = true\n";
+        assert!(JobSpec::from_toml(text).unwrap().threads_strict);
+        let text = "func = recip\n[generate]\nthreads = 2\n";
+        assert!(!JobSpec::from_toml(text).unwrap().threads_strict, "default is false");
+        match JobSpec::from_toml("[generate]\nthreads_strict = sometimes\n") {
+            Err(PipelineError::Spec(_)) => {}
+            other => panic!("bad bool must be a Spec error, got ok={}", other.is_ok()),
+        }
     }
 
     #[test]

@@ -78,12 +78,16 @@ pub mod error;
 pub mod job;
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    best_by_objective, default_r_range, generate_cached, sweep_lub_cached, Workload,
+    best_by_objective, default_r_range, generate_cached_ctrl, sweep_lub_cached, sweep_lub_ctrl,
+    Workload,
 };
-use crate::designspace::generate;
+use crate::designspace::generate_ctrl;
+use crate::pool::{CancelToken, Progress};
 use crate::rtl;
 use crate::verify::verify_exhaustive;
 
@@ -118,6 +122,99 @@ pub use crate::synth::{
 pub use crate::tech::{CostModel, TechKind, Technology};
 pub use crate::verify::{verify_exhaustive as verify_implementation, Engine, VerifyReport};
 
+/// Which pipeline stage a controlled run is currently in — the phase a
+/// [`crate::service`] job reports from [`JobCtrl::phase`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    Prepare,
+    Generate,
+    Explore,
+    Synthesize,
+    Verify,
+}
+
+impl Phase {
+    /// Lowercase wire/report label (`"generate"`, ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prepare => "prepare",
+            Phase::Generate => "generate",
+            Phase::Explore => "explore",
+            Phase::Synthesize => "synthesize",
+            Phase::Verify => "verify",
+        }
+    }
+
+    fn from_u8(v: u8) -> Phase {
+        match v {
+            1 => Phase::Generate,
+            2 => Phase::Explore,
+            3 => Phase::Synthesize,
+            4 => Phase::Verify,
+            _ => Phase::Prepare,
+        }
+    }
+}
+
+/// Shared control block for one controlled pipeline run: a cooperative
+/// [`CancelToken`], a [`Progress`] counter, and the current [`Phase`].
+///
+/// Attach one with [`Pipeline::control`] (or run a [`JobSpec`] through
+/// [`crate::service::Service`], which does it for you), keep a clone of
+/// the `Arc`, and you can observe and cancel the run from any thread:
+///
+/// - **Cancellation points.** The token is checked at every phase
+///   boundary, before each region's analysis sweep inside generation,
+///   between the points of an auto-LUB sweep, and between the region
+///   materialization sweeps of a cache-miss — so a cancel lands within
+///   one region's worth of work per executor. A cancelled run returns
+///   [`PipelineError::Cancelled`]; the process-wide scheduler fully
+///   drains its tasks (cancellation is cooperative, never a kill), so
+///   the pool stays reusable.
+/// - **Progress.** During [`Phase::Generate`] the counter holds
+///   `(regions analyzed, regions total)` for a fixed-`R` job and
+///   `(sweep points done, points total)` for an auto-LUB job.
+#[derive(Debug, Default)]
+pub struct JobCtrl {
+    cancel: CancelToken,
+    progress: Progress,
+    phase: AtomicU8,
+}
+
+impl JobCtrl {
+    pub fn new() -> JobCtrl {
+        JobCtrl::default()
+    }
+
+    /// Request cooperative cancellation (idempotent, never blocks).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// The phase the run last entered.
+    pub fn phase(&self) -> Phase {
+        Phase::from_u8(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// `(done, total)` within the current phase's counted unit.
+    pub fn progress(&self) -> (usize, usize) {
+        self.progress.get()
+    }
+
+    /// The underlying token, for threading into lower layers.
+    pub fn token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    fn set_phase(&self, p: Phase) {
+        self.phase.store(p as u8, Ordering::Relaxed);
+    }
+}
+
 /// How the pipeline chooses the lookup-bit count `R`.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum LookupBits {
@@ -147,6 +244,8 @@ struct Settings {
     cache_dir: Option<PathBuf>,
     testbench: bool,
     sweep_range: Option<Vec<u32>>,
+    /// Cancellation/progress control block for this run (service jobs).
+    ctrl: Option<Arc<JobCtrl>>,
 }
 
 impl Default for Settings {
@@ -167,6 +266,7 @@ impl Default for Settings {
             cache_dir: None,
             testbench: false,
             sweep_range: None,
+            ctrl: None,
         }
     }
 }
@@ -202,6 +302,28 @@ impl Settings {
     /// The cost model every costing stage uses.
     fn cost_model(&self) -> &'static dyn CostModel {
         self.tech.technology().cost_model()
+    }
+
+    /// Phase-boundary cancellation point: fail with
+    /// [`PipelineError::Cancelled`] if the run's control block was
+    /// cancelled, otherwise record that `next` begins. No-op without a
+    /// control block.
+    fn checkpoint(&self, next: Phase) -> Result<(), PipelineError> {
+        if let Some(c) = &self.ctrl {
+            if c.is_cancelled() {
+                return Err(PipelineError::Cancelled);
+            }
+            c.set_phase(next);
+        }
+        Ok(())
+    }
+
+    fn cancel_token(&self) -> Option<&CancelToken> {
+        self.ctrl.as_deref().map(JobCtrl::token)
+    }
+
+    fn progress_counter(&self) -> Option<&Progress> {
+        self.ctrl.as_deref().map(|c| &c.progress)
     }
 }
 
@@ -332,9 +454,19 @@ impl Pipeline {
         self
     }
 
+    /// Attach a [`JobCtrl`]: the run becomes cancellable (checked at
+    /// phase boundaries and between region sweeps) and reports its
+    /// phase/progress through the shared block. [`crate::service`]
+    /// attaches one to every submitted job.
+    pub fn control(mut self, ctrl: Arc<JobCtrl>) -> Self {
+        self.settings.ctrl = Some(ctrl);
+        self
+    }
+
     /// Stage 1: resolve the function and build its bound table.
     pub fn prepare(self) -> Result<Prepared, PipelineError> {
         let Pipeline { source, settings } = self;
+        settings.checkpoint(Phase::Prepare)?;
         let (workload, cacheable) = match source {
             Source::Builtin(name) => (
                 Workload::prepare(&name, settings.bits, settings.accuracy)
@@ -414,18 +546,33 @@ impl Prepared {
     /// forward so [`Spaced::explore`] does not repeat the work.
     pub fn generate(self) -> Result<Spaced, PipelineError> {
         let Prepared { settings, workload, cacheable } = self;
+        settings.checkpoint(Phase::Generate)?;
         let cache = if cacheable { settings.cache_dir.as_deref() } else { None };
         match settings.lookup {
             LookupBits::Fixed(r) => {
                 let opts = settings.gen_opts(r);
                 let t0 = Instant::now();
                 let space = match cache {
-                    Some(dir) => generate_cached(&workload, r, &opts, dir),
-                    None => generate(&workload.bt, &opts),
+                    Some(dir) => generate_cached_ctrl(
+                        &workload,
+                        r,
+                        &opts,
+                        dir,
+                        settings.cancel_token(),
+                        settings.progress_counter(),
+                    ),
+                    None => generate_ctrl(
+                        &workload.bt,
+                        &opts,
+                        settings.cancel_token(),
+                        settings.progress_counter(),
+                    ),
                 };
                 let gen_time = t0.elapsed();
-                let space = space
-                    .map_err(|source| PipelineError::Generation { lookup_bits: r, source })?;
+                let space = space.map_err(|source| match source {
+                    GenError::Cancelled => PipelineError::Cancelled,
+                    source => PipelineError::Generation { lookup_bits: r, source },
+                })?;
                 Ok(Spaced { settings, workload, space, gen_time, preselected: None })
             }
             LookupBits::Auto(objective) => {
@@ -433,14 +580,29 @@ impl Prepared {
                     .sweep_range
                     .clone()
                     .unwrap_or_else(|| default_r_range(workload.bt.in_bits));
-                let mut points = sweep_lub_cached(
-                    &workload,
-                    &rs,
-                    &settings.sweep_gen_opts(),
-                    &settings.dse_opts(),
-                    settings.threads,
-                    cache,
-                );
+                let mut points = match settings.cancel_token() {
+                    Some(token) => sweep_lub_ctrl(
+                        &workload,
+                        &rs,
+                        &settings.sweep_gen_opts(),
+                        &settings.dse_opts(),
+                        settings.threads,
+                        cache,
+                        token,
+                        settings.progress_counter(),
+                    ),
+                    None => sweep_lub_cached(
+                        &workload,
+                        &rs,
+                        &settings.sweep_gen_opts(),
+                        &settings.dse_opts(),
+                        settings.threads,
+                        cache,
+                    ),
+                };
+                if settings.ctrl.as_deref().is_some_and(JobCtrl::is_cancelled) {
+                    return Err(PipelineError::Cancelled);
+                }
                 let best = best_by_objective(&points, objective)
                     .map(|b| b.lookup_bits)
                     .and_then(|r| points.iter().position(|p| p.lookup_bits == r));
@@ -486,6 +648,7 @@ impl Spaced {
     /// Stage 3: run the decision procedure over the complete space.
     pub fn explore(self) -> Result<Explored, PipelineError> {
         let Spaced { settings, workload, space, gen_time, preselected } = self;
+        settings.checkpoint(Phase::Explore)?;
         let implementation = match preselected {
             Some(im) => im,
             None => crate::dse::explore(&workload.bt, &space, &settings.dse_opts()).ok_or_else(
@@ -511,8 +674,13 @@ pub struct Explored {
 
 impl Explored {
     /// Stage 4: cost the datapath at its minimum obtainable delay, under
-    /// the pipeline's technology cost model.
+    /// the pipeline's technology cost model. Infallible, so it only
+    /// records the phase transition; a pending cancel lands at the next
+    /// fallible boundary ([`Synthesized::verify`]).
     pub fn synthesize(self) -> Synthesized {
+        if let Some(c) = &self.settings.ctrl {
+            c.set_phase(Phase::Synthesize);
+        }
         let synth = synth_min_delay_with(self.settings.cost_model(), &self.implementation);
         let Explored { settings, workload, space, gen_time, implementation } = self;
         Synthesized { settings, workload, space, gen_time, implementation, synth }
@@ -540,6 +708,7 @@ impl Synthesized {
     /// clean sweep yields [`Verified`]; any violation is a
     /// [`PipelineError::VerifyFailed`] carrying the first counterexample.
     pub fn verify(self) -> Result<Verified, PipelineError> {
+        self.settings.checkpoint(Phase::Verify)?;
         let report = verify_exhaustive(&self.workload.bt, &self.implementation, &Engine::Scalar)
             .map_err(|e| PipelineError::Engine(e.to_string()))?;
         self.finish(report)
@@ -547,6 +716,7 @@ impl Synthesized {
 
     /// Stage 5 through a compiled XLA engine (jnp or Pallas flavor).
     pub fn verify_with(self, rt: &XlaRuntime, flavor: Flavor) -> Result<Verified, PipelineError> {
+        self.settings.checkpoint(Phase::Verify)?;
         let engine = Engine::Xla { rt, flavor };
         let report = verify_exhaustive(&self.workload.bt, &self.implementation, &engine)
             .map_err(|e| PipelineError::Engine(e.to_string()))?;
@@ -712,6 +882,7 @@ mod tests {
         match err {
             PipelineError::Generation { lookup_bits: 0, source } => match source {
                 GenError::InfeasibleRegion { .. } | GenError::KExhausted { .. } => {}
+                GenError::Cancelled => panic!("no cancel token in play"),
             },
             other => panic!("expected Generation, got {other:?}"),
         }
@@ -736,6 +907,33 @@ mod tests {
                 assert_eq!(counterexample >> 4, 7, "counterexample not in region 7");
             }
             other => panic!("expected VerifyFailed, got {:?}", other.err().map(|e| e.to_string())),
+        }
+    }
+
+    #[test]
+    fn controlled_run_reports_phases_and_cancels() {
+        // An unfired control block is invisible to the result, records
+        // the final phase, and counts every region of the fixed-R
+        // generation.
+        let ctrl = Arc::new(JobCtrl::new());
+        let v = Pipeline::function("recip")
+            .bits(8)
+            .lub(4)
+            .control(Arc::clone(&ctrl))
+            .run()
+            .unwrap();
+        assert!(v.report.ok());
+        assert_eq!(ctrl.phase(), Phase::Verify);
+        assert_eq!(ctrl.progress(), (16, 16), "R=4 has 16 regions");
+        let plain = Pipeline::function("recip").bits(8).lub(4).run().unwrap();
+        assert_eq!(v.implementation.coeffs, plain.implementation.coeffs);
+
+        // A pre-fired block cancels at the first phase boundary.
+        let ctrl = Arc::new(JobCtrl::new());
+        ctrl.cancel();
+        match Pipeline::function("recip").bits(8).lub(4).control(ctrl).run() {
+            Err(PipelineError::Cancelled) => {}
+            other => panic!("expected Cancelled, got ok={}", other.is_ok()),
         }
     }
 

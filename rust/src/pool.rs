@@ -25,10 +25,13 @@
 //!   a call never deadlocks waiting for workers — even recursively from
 //!   inside another job's task.
 //! - Idle workers scan the job list and help any job whose concurrency
-//!   is still below its requested `threads` budget. This is the dynamic
-//!   **budget donation** that replaces the static split: when a small
-//!   batch job finishes early, its worker migrates to a sibling's
-//!   generation job instead of idling behind a per-job cap.
+//!   is still below its requested `threads` budget, picking the job with
+//!   the **largest remaining range** first (`pick_job`) rather than
+//!   re-joining the oldest. This is the dynamic **budget donation** that
+//!   replaces the static split: when a small batch job finishes early,
+//!   its worker migrates to the sibling with the most work left instead
+//!   of idling behind a per-job cap — and a tiny fixed-`R` job no longer
+//!   serializes behind an auto-LUB sweep's tail.
 //! - Total parallelism is bounded by the worker pool size (machine
 //!   parallelism by default, `POLYGEN_POOL_THREADS` to override) plus
 //!   the submitting threads — regardless of how deeply jobs nest.
@@ -42,8 +45,67 @@
 //! remains reusable.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Cooperative cancellation flag, shared between a job's owner (who calls
+/// [`CancelToken::cancel`]) and the task closures running on the
+/// scheduler (who poll [`CancelToken::is_cancelled`] at their natural
+/// checkpoints — between region sweeps in generation, between points in
+/// a lookup-bit sweep, at pipeline phase boundaries).
+///
+/// Cancellation is *advisory*: the scheduler itself never kills a task.
+/// A task that observes the flag returns a cheap placeholder and its
+/// caller maps the run to a `Cancelled` error, so scheduler accounting
+/// (`completed == n`) stays exact and the pool remains reusable after
+/// any cancellation.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotone work counter threaded into scheduler tasks so a job's owner
+/// can observe progress (e.g. "analyzed 37 of 64 regions") without any
+/// synchronization beyond two relaxed atomics. [`Progress::begin`]
+/// resets the counter for a new phase; concurrent readers may observe
+/// `done` mid-update — the pair is a progress *indication*, not a
+/// barrier.
+#[derive(Debug, Default)]
+pub struct Progress {
+    done: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl Progress {
+    /// Start a new counted phase of `total` work items.
+    pub fn begin(&self, total: usize) {
+        self.done.store(0, Ordering::Relaxed);
+        self.total.store(total, Ordering::Relaxed);
+    }
+
+    /// Record one completed work item.
+    pub fn tick(&self) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(done, total)` as last observed.
+    pub fn get(&self) -> (usize, usize) {
+        (self.done.load(Ordering::Relaxed), self.total.load(Ordering::Relaxed))
+    }
+}
 
 /// Compute `f(i)` for `i in 0..n` across up to `threads` concurrent
 /// executors (the calling thread plus donated pool workers) pulling from
@@ -141,6 +203,34 @@ fn execute(job: &Job) {
         }
     }
     job.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Cost-aware job pick for an idle worker: among jobs that still have
+/// unclaimed indices and are under their concurrency budget, choose the
+/// one with the **largest remaining range** (ties keep submission
+/// order). The earlier FIFO scan always re-joined the oldest eligible
+/// job, so when a batch mixed a long auto-LUB sweep with tiny fixed-`R`
+/// jobs, every freed worker piled onto the sweep's tail while the tiny
+/// jobs waited behind it; largest-remaining-first sends capacity where
+/// the most work is left and lets short jobs start immediately.
+///
+/// The loads are relaxed snapshots — a stale pick is at worst slightly
+/// suboptimal, never incorrect (the cursor hands out each index exactly
+/// once regardless of which job a worker joins).
+fn pick_job(jobs: &[Arc<Job>]) -> Option<Arc<Job>> {
+    let mut best: Option<(&Arc<Job>, usize)> = None;
+    for j in jobs {
+        let cursor = j.cursor.load(Ordering::Relaxed);
+        if cursor >= j.n || j.active.load(Ordering::Relaxed) >= j.limit {
+            continue;
+        }
+        let remaining = j.n - cursor;
+        // Strict `>` keeps the earliest-submitted job on ties.
+        if best.map_or(true, |(_, r)| remaining > r) {
+            best = Some((j, remaining));
+        }
+    }
+    best.map(|(j, _)| Arc::clone(j))
 }
 
 struct Inner {
@@ -248,15 +338,9 @@ impl Scheduler {
         let mut inner = self.inner.lock().unwrap();
         loop {
             // Donation: join *any* job still under its budget, not just
-            // the one that woke us.
-            let claim = inner
-                .jobs
-                .iter()
-                .find(|j| {
-                    j.cursor.load(Ordering::Relaxed) < j.n
-                        && j.active.load(Ordering::Relaxed) < j.limit
-                })
-                .cloned();
+            // the one that woke us. The pick is cost-aware (see
+            // `pick_job`), not a FIFO scan.
+            let claim = pick_job(&inner.jobs);
             match claim {
                 Some(job) => {
                     // Under the scheduler lock, so budget checks do not race.
@@ -383,6 +467,83 @@ mod tests {
         global().drain(); // idle drain returns immediately
         let b = run_indexed(40, 4, uneven_work);
         assert_eq!(a, b);
+    }
+
+    /// Build a synthetic job for `pick_job` tests: `n` total indices,
+    /// the cursor already at `cursor`, `active` of `limit` executors.
+    /// The task pointer is never dereferenced by `pick_job`.
+    fn synthetic_job(
+        task: &(dyn Fn(usize) + Sync),
+        n: usize,
+        cursor: usize,
+        active: usize,
+        limit: usize,
+    ) -> Arc<Job> {
+        Arc::new(Job {
+            task: TaskPtr(task as *const (dyn Fn(usize) + Sync)),
+            n,
+            limit,
+            cursor: AtomicUsize::new(cursor),
+            active: AtomicUsize::new(active),
+            state: Mutex::new(JobState { completed: 0, panic: None }),
+            done_cv: Condvar::new(),
+        })
+    }
+
+    #[test]
+    fn pick_prefers_largest_remaining_range() {
+        let noop: &(dyn Fn(usize) + Sync) = &|_| {};
+        // The PR-4 ROADMAP scenario: an auto-LUB sweep near its tail
+        // (2 indices left) was submitted first; a tiny fixed-R job with
+        // all 8 indices left arrives later. A FIFO scan would re-join
+        // the sweep; the cost-aware pick must start the tiny job.
+        let sweep_tail = synthetic_job(noop, 1000, 998, 1, 8);
+        let tiny = synthetic_job(noop, 8, 0, 1, 8);
+        let jobs = vec![Arc::clone(&sweep_tail), Arc::clone(&tiny)];
+        let picked = pick_job(&jobs).expect("both jobs eligible");
+        assert!(Arc::ptr_eq(&picked, &tiny), "picked the sweep tail over the fresh job");
+
+        // Jobs at budget or with an exhausted cursor are never picked.
+        let at_budget = synthetic_job(noop, 500, 0, 4, 4);
+        let exhausted = synthetic_job(noop, 10, 10, 0, 4);
+        assert!(pick_job(&[at_budget, exhausted]).is_none());
+
+        // Ties keep submission order (the first job in the list).
+        let first = synthetic_job(noop, 20, 10, 1, 8);
+        let second = synthetic_job(noop, 10, 0, 1, 8);
+        let picked = pick_job(&[Arc::clone(&first), second]).unwrap();
+        assert!(Arc::ptr_eq(&picked, &first), "tie must keep submission order");
+
+        assert!(pick_job(&[]).is_none());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_idempotent() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled() && !clone.is_cancelled());
+        clone.cancel();
+        clone.cancel();
+        assert!(t.is_cancelled(), "cancel must be visible through every clone");
+    }
+
+    #[test]
+    fn progress_counts_across_threads() {
+        let p = Progress::default();
+        p.begin(64);
+        assert_eq!(p.get(), (0, 64));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..16 {
+                        p.tick();
+                    }
+                });
+            }
+        });
+        assert_eq!(p.get(), (64, 64));
+        p.begin(3); // a new phase resets the pair
+        assert_eq!(p.get(), (0, 3));
     }
 
     #[test]

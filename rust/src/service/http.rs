@@ -1,0 +1,562 @@
+//! Dependency-free HTTP/JSON front-end over a [`Service`] — the
+//! `polygen serve` wire protocol.
+//!
+//! Built on `std::net::TcpListener` alone (no async runtime, no HTTP or
+//! JSON crates are available offline): one accept loop, one short-lived
+//! handler thread per connection, one request per connection
+//! (`Connection: close`). That is deliberately modest — the point of
+//! this layer is the *protocol*, which every future scaling PR (remote
+//! workers, rate limiting, sharding) keeps while replacing the
+//! transport.
+//!
+//! # Endpoints
+//!
+//! | Method & path          | Body                        | Replies |
+//! |------------------------|-----------------------------|---------|
+//! | `POST /jobs`           | job file (TOML) or JSON     | `201` status object |
+//! | `GET /jobs`            | —                           | `200` array of status objects |
+//! | `GET /jobs/:id`        | —                           | `200` status object, `404` |
+//! | `GET /jobs/:id/result` | —                           | `200` result, `202` still queued/running, `409` cancelled, `422` failed, `404` |
+//! | `DELETE /jobs/:id`     | —                           | `200` post-cancel status, `404` |
+//!
+//! A status object is
+//! `{"id":3,"label":"recip_16b_R8","status":"running","phase":"generate",`
+//! `"progress":{"done":37,"total":64}}` (phase/progress only while
+//! running; `"error"` when failed). `POST` accepts the exact job-file
+//! TOML the CLI's `batch` takes, or the same keys as JSON — nested
+//! (`{"generate":{"lookup_bits":"auto"}}`) or dotted
+//! (`{"generate.lookup_bits":"auto"}`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{JobEntry, JobStatus, Service};
+use crate::pipeline::{JobResult, PipelineError};
+
+/// Serve `service` on `listener` until the process exits (the blocking
+/// entry point `polygen serve` uses). Use [`HttpServer::spawn`] for an
+/// in-process server you can stop (tests, examples).
+pub fn serve(service: Service, listener: TcpListener) {
+    serve_until(service, listener, None);
+}
+
+fn serve_until(service: Service, listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
+    for conn in listener.incoming() {
+        if stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed)) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        let svc = service.clone();
+        // One thread per connection: connections are short (one request)
+        // and job execution happens on the service's executors, so the
+        // handler threads only parse and format.
+        std::thread::spawn(move || {
+            let _ = handle_connection(stream, &svc);
+        });
+    }
+}
+
+/// An HTTP front-end running on its own thread. Dropping it does *not*
+/// stop the loop (threads are detached on drop); call
+/// [`HttpServer::stop`] for a clean shutdown.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `service` on a background thread.
+    pub fn spawn(service: Service, addr: &str) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("polygen-http".into())
+            .spawn(move || serve_until(service, listener, Some(flag)))?;
+        Ok(HttpServer { addr, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. In-flight handler
+    /// threads finish their single request on their own.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, svc: &Service) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => return respond(&mut stream, 400, &obj([("error", json_str(&e))])),
+    };
+    let segs: Vec<&str> = path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
+    let (code, body) = route(svc, &method, &segs, &body);
+    respond(&mut stream, code, &body)
+}
+
+fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, String) {
+    match (method, segs) {
+        ("POST", ["jobs"]) => {
+            let text = body.trim();
+            let toml = if text.starts_with('{') {
+                match json_to_job_toml(text) {
+                    Ok(t) => t,
+                    Err(e) => return (400, obj([("error", json_str(&format!("json: {e}")))])),
+                }
+            } else {
+                text.to_string()
+            };
+            match svc.submit_toml(&toml) {
+                Ok(handle) => {
+                    let id = handle.id();
+                    // The registry keeps the entry; the handle is not
+                    // needed (results are served by id).
+                    drop(handle);
+                    let entry = svc.entry(id).expect("just submitted");
+                    (201, status_json(&entry))
+                }
+                Err(e) => (400, obj([("error", json_str(&e.to_string()))])),
+            }
+        }
+        ("GET", ["jobs"]) => {
+            let items: Vec<String> =
+                svc.entries().iter().map(status_json).collect();
+            (200, format!("[{}]", items.join(",")))
+        }
+        ("GET", ["jobs", id]) => match parse_id(id).and_then(|id| svc.entry(id)) {
+            Some(entry) => (200, status_json(&entry)),
+            None => not_found(),
+        },
+        ("GET", ["jobs", id, "result"]) => match parse_id(id).and_then(|id| svc.entry(id)) {
+            Some(entry) => result_response(&entry),
+            None => not_found(),
+        },
+        ("DELETE", ["jobs", id]) => match parse_id(id).and_then(|id| svc.entry(id)) {
+            Some(entry) => {
+                entry.cancel();
+                (200, status_json(&entry))
+            }
+            None => not_found(),
+        },
+        ("GET" | "POST" | "DELETE", _) => not_found(),
+        _ => (405, obj([("error", json_str("method not allowed"))])),
+    }
+}
+
+fn not_found() -> (u16, String) {
+    (404, obj([("error", json_str("no such job"))]))
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse().ok()
+}
+
+/// `GET /jobs/:id/result`: the terminal outcome, or a 202 with the
+/// status object while the job is still queued/running.
+fn result_response(entry: &Arc<JobEntry>) -> (u16, String) {
+    match entry.status() {
+        JobStatus::Done => {
+            let body = entry
+                .with_outcome(|o| match o {
+                    Some(Ok(res)) => result_json(entry.id(), res),
+                    // Outcome taken by a local JobHandle (possible when
+                    // the service is driven both in-process and over
+                    // HTTP): the status is still truthful.
+                    _ => obj([
+                        ("id", entry.id().to_string()),
+                        ("status", json_str("done")),
+                        ("error", json_str("result consumed by its in-process handle")),
+                    ]),
+                })
+                .unwrap_or_default();
+            (200, body)
+        }
+        JobStatus::Failed { error } => (
+            422,
+            obj([
+                ("id", entry.id().to_string()),
+                ("status", json_str("failed")),
+                ("error", json_str(&error)),
+            ]),
+        ),
+        JobStatus::Cancelled => (
+            409,
+            obj([("id", entry.id().to_string()), ("status", json_str("cancelled"))]),
+        ),
+        JobStatus::Queued | JobStatus::Running { .. } => (202, status_json(entry)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire formats
+// ---------------------------------------------------------------------
+
+fn status_json(entry: &Arc<JobEntry>) -> String {
+    let mut fields: Vec<(&str, String)> = vec![
+        ("id", entry.id().to_string()),
+        ("label", json_str(&entry.spec().label())),
+    ];
+    let status = entry.status();
+    fields.push(("status", json_str(status.label())));
+    match &status {
+        JobStatus::Running { phase, done, total } => {
+            fields.push(("phase", json_str(phase.label())));
+            fields.push(("progress", format!("{{\"done\":{done},\"total\":{total}}}")));
+        }
+        JobStatus::Failed { error } => fields.push(("error", json_str(error))),
+        _ => {}
+    }
+    obj(fields)
+}
+
+fn result_json(id: u64, res: &JobResult) -> String {
+    let im = &res.implementation;
+    let coeffs: Vec<String> = im
+        .coeffs
+        .iter()
+        .map(|c| format!("{{\"a\":{},\"b\":{},\"c\":{}}}", c.a, c.b, c.c))
+        .collect();
+    let result = obj([
+        ("func", json_str(&res.func)),
+        ("bits", res.bits.to_string()),
+        ("lookup_bits", res.lookup_bits.to_string()),
+        ("k", im.k.to_string()),
+        ("degree", json_str(&format!("{:?}", im.degree).to_lowercase())),
+        ("sq_trunc", im.sq_trunc.to_string()),
+        ("lin_trunc", im.lin_trunc.to_string()),
+        ("lut_width", json_str(&im.lut_width_label())),
+        ("delay_ns", fmt_f64(res.synth.delay_ns)),
+        ("area", fmt_f64(res.synth.area_um2)),
+        (
+            "verified",
+            res.verify.as_ref().map(|v| v.total.to_string()).unwrap_or_else(|| "null".into()),
+        ),
+        ("coeffs", format!("[{}]", coeffs.join(","))),
+    ]);
+    obj([("id", id.to_string()), ("status", json_str("done")), ("result", result)])
+}
+
+/// JSON-safe float rendering (the error enums never reach here with
+/// NaN/inf, but a cost model could).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn obj<'a>(fields: impl IntoIterator<Item = (&'a str, String)>) -> String {
+    let body: Vec<String> =
+        fields.into_iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ---------------------------------------------------------------------
+// JSON job specs
+// ---------------------------------------------------------------------
+
+/// Convert a JSON job object into the TOML job-file text
+/// [`crate::pipeline::JobSpec::from_toml`] parses. Supports one level of
+/// nesting (`{"generate":{...}}`) and dotted keys; values may be
+/// strings, numbers, or booleans.
+fn json_to_job_toml(text: &str) -> Result<String, String> {
+    let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    p.object("", &mut pairs, 0)?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    // TOML needs top-level keys before any [section] header.
+    let mut out = String::new();
+    for (k, v) in pairs.iter().filter(|(k, _)| !k.contains('.')) {
+        out.push_str(&format!("{k} = {v}\n"));
+    }
+    let mut section = String::new();
+    for (k, v) in pairs.iter().filter(|(k, _)| k.contains('.')) {
+        let (sec, key) = k.split_once('.').expect("filtered on '.'");
+        if key.contains('.') {
+            return Err(format!("{k}: at most one level of nesting"));
+        }
+        if sec != section {
+            out.push_str(&format!("[{sec}]\n"));
+            section = sec.to_string();
+        }
+        out.push_str(&format!("{key} = {v}\n"));
+    }
+    Ok(out)
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        // Collected as bytes and decoded once: pushing `byte as char`
+        // would widen each UTF-8 continuation byte into its own Latin-1
+        // code point and mangle any non-ASCII value.
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let Some(&c) = self.b.get(self.i) else {
+                return Err("unterminated string".into());
+            };
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| "invalid utf-8".to_string())
+                }
+                b'\\' => {
+                    let Some(&e) = self.b.get(self.i) else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' => out.push(e),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        other => {
+                            return Err(format!("unsupported escape \\{}", other as char))
+                        }
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    /// A scalar value rendered as job-file TOML text (strings lose their
+    /// quotes — the config layer strips them anyway and never contains
+    /// commas or braces in valid values).
+    fn scalar(&mut self) -> Result<String, String> {
+        match self.peek() {
+            Some(b'"') => {
+                let s = self.string()?;
+                if s.contains('\n') || s.contains('#') {
+                    return Err(format!("value {s:?} not representable in a job file"));
+                }
+                Ok(s)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let start = self.i;
+                while self
+                    .b
+                    .get(self.i)
+                    .is_some_and(|&c| c.is_ascii_digit() || b"+-.eE".contains(&c))
+                {
+                    self.i += 1;
+                }
+                Ok(std::str::from_utf8(&self.b[start..self.i]).unwrap().to_string())
+            }
+            Some(b't') | Some(b'f') => {
+                for word in ["true", "false"] {
+                    if self.b[self.i..].starts_with(word.as_bytes()) {
+                        self.i += word.len();
+                        return Ok(word.to_string());
+                    }
+                }
+                Err(format!("bad literal at byte {}", self.i))
+            }
+            _ => Err(format!("unsupported value at byte {}", self.i)),
+        }
+    }
+
+    fn object(
+        &mut self,
+        prefix: &str,
+        out: &mut Vec<(String, String)>,
+        depth: usize,
+    ) -> Result<(), String> {
+        if depth > 1 {
+            return Err("at most one level of nesting".into());
+        }
+        self.eat(b'{')?;
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            let key = self.string()?;
+            let key = if prefix.is_empty() { key } else { format!("{prefix}.{key}") };
+            self.eat(b':')?;
+            if self.peek() == Some(b'{') {
+                self.object(&key, out, depth + 1)?;
+            } else {
+                let v = self.scalar()?;
+                out.push((key, v));
+            }
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal HTTP/1.1
+// ---------------------------------------------------------------------
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), String> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let path = parts.next().ok_or("request line without path")?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().map_err(|_| "bad content-length")?;
+            }
+        }
+    }
+    if content_length > 1 << 20 {
+        return Err("body too large".into());
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+    String::from_utf8(body).map(|b| (method, path, b)).map_err(|e| e.to_string())
+}
+
+fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        422 => "Unprocessable Entity",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_specs_become_job_files() {
+        let toml = json_to_job_toml(
+            r#"{"func":"recip","bits":16,"generate":{"lookup_bits":"auto","threads":4},
+                "dse":{"procedure":"pareto"},"job":{"verify":false}}"#,
+        )
+        .unwrap();
+        let spec = crate::pipeline::JobSpec::from_toml(&toml).unwrap();
+        assert_eq!(spec.func, "recip");
+        assert_eq!(spec.bits, 16);
+        assert_eq!(spec.threads, 4);
+        assert!(!spec.verify);
+        assert_eq!(spec.procedure, Some(crate::pipeline::Procedure::Pareto));
+
+        // Dotted keys are the flat spelling of the same thing.
+        let toml = json_to_job_toml(r#"{"func":"log2","generate.lookup_bits":"5"}"#).unwrap();
+        let spec = crate::pipeline::JobSpec::from_toml(&toml).unwrap();
+        assert_eq!(spec.lookup, crate::pipeline::LookupBits::Fixed(5));
+
+        // Structural errors are reported, not mangled.
+        assert!(json_to_job_toml("{\"a\":{\"b\":{\"c\":1}}}").is_err());
+        assert!(json_to_job_toml("{\"a\":[1,2]}").is_err());
+        assert!(json_to_job_toml("{\"a\":1} trailing").is_err());
+        assert!(json_to_job_toml("not json").is_err());
+    }
+
+    #[test]
+    fn json_escaping_round_trips_control_chars() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("plain"), "\"plain\"");
+        let esc = json_str("\u{1}");
+        assert_eq!(esc, "\"\\u0001\"");
+    }
+
+    #[test]
+    fn empty_json_object_is_a_valid_default_spec() {
+        let toml = json_to_job_toml("{}").unwrap();
+        let spec = crate::pipeline::JobSpec::from_toml(&toml).unwrap();
+        assert_eq!(spec.func, "recip"); // all defaults
+    }
+}

@@ -1,0 +1,678 @@
+//! `polygen::service` — the async, handle-based job execution layer.
+//!
+//! The paper's value proposition ("give us an accuracy spec, get the
+//! complete design space and competitive hardware") is the shape of a
+//! request/response service, and the blocking APIs
+//! ([`Pipeline::run`](crate::pipeline::Pipeline::run),
+//! [`Batch`](crate::pipeline::Batch)) cannot serve it: a caller that
+//! wants ten concurrent jobs,
+//! live progress, or the ability to abandon one has to own a thread per
+//! job. A [`Service`] fixes that:
+//!
+//! - [`Service::submit`] accepts a [`JobSpec`] and **returns
+//!   immediately** with a [`JobHandle`];
+//! - the handle exposes [`JobHandle::status`] (queued / running with
+//!   phase + region progress / done / failed with the structured
+//!   [`PipelineError`] / cancelled), blocking [`JobHandle::wait`],
+//!   non-blocking [`JobHandle::try_result`], and cooperative
+//!   [`JobHandle::cancel`] — checked at pipeline phase boundaries and
+//!   between region sweeps (see [`JobCtrl`]);
+//! - jobs run on a small pool of **executor threads** owned by the
+//!   service (spawned lazily up to the service's worker budget); each
+//!   executor drives one pipeline at a time, and the pipeline's inner
+//!   generation/sweep parallelism is posted to the process-wide
+//!   scheduler ([`crate::pool::global`]) exactly as before — the
+//!   service is an orchestration layer, not a second thread pool for
+//!   region work;
+//! - every submitted spec's `threads` is raised to the service budget
+//!   (donation floor) unless the spec sets
+//!   [`threads_strict`](JobSpec::threads_strict);
+//! - a shared disk cache ([`ServiceBuilder::cache_dir`]) backs all
+//!   jobs, so repeated specs parse a `.pgds` instead of regenerating.
+//!
+//! [`crate::pipeline::Batch`] is now a thin blocking shim over this
+//! module (submit-all + wait-all), and [`http`] serves the same
+//! registry over a dependency-free HTTP/JSON front-end (`polygen serve`).
+//!
+//! ```no_run
+//! use polygen::pipeline::JobSpec;
+//! use polygen::service::{JobStatus, Service};
+//!
+//! let svc = Service::builder().workers(4).build();
+//! let mut spec = JobSpec::new("recip", 16);
+//! let handle = svc.submit(spec.clone());
+//! spec.func = "log2".into();
+//! let other = svc.submit(spec); // both jobs now run concurrently
+//! while !handle.status().is_finished() {
+//!     if let JobStatus::Running { phase, done, total } = handle.status() {
+//!         eprintln!("recip: {} {done}/{total}", phase.label());
+//!     }
+//!     std::thread::sleep(std::time::Duration::from_millis(100));
+//! }
+//! other.cancel(); // changed our mind about log2
+//! let result = handle.wait().expect("recip 16-bit is feasible");
+//! println!("R = {}", result.lookup_bits);
+//! ```
+//!
+//! # Lifecycle
+//!
+//! A job moves `Queued → Running → (Done | Failed | Cancelled)`; the
+//! transitions are monotone and every terminal state is sticky. The
+//! service keeps finished entries in its registry so late `GET`s (and
+//! late [`JobHandle`] reads) still see them; a registry eviction policy
+//! is deliberately out of scope until a deployment needs one.
+//!
+//! Dropping the last [`Service`] clone *closes* the service: executors
+//! finish the queued backlog and exit. Outstanding [`JobHandle`]s stay
+//! valid — their jobs complete (or were already finished) because the
+//! backlog is drained, never abandoned. Cancellation is cooperative
+//! everywhere: the process-wide scheduler fully retires a cancelled
+//! job's tasks (each one observes the token and returns early), so the
+//! pool is left drained-but-reusable, never poisoned.
+
+pub mod http;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::pipeline::{JobCtrl, JobResult, JobSpec, Phase, PipelineError};
+
+/// Observable job state. `Failed` carries the error's rendered message;
+/// the owned structured [`PipelineError`] is delivered once, by
+/// [`JobHandle::wait`] / [`JobHandle::try_result`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    /// Accepted, waiting for an executor.
+    Queued,
+    /// An executor is driving the pipeline; `phase` is the stage it last
+    /// entered and `done`/`total` count the phase's work unit (regions
+    /// analyzed for fixed-`R` generation, sweep points for auto-LUB).
+    Running { phase: Phase, done: usize, total: usize },
+    Done,
+    Failed { error: String },
+    Cancelled,
+}
+
+impl JobStatus {
+    /// Lowercase wire label (`"queued"`, `"running"`, ...).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running { .. } => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed { .. } => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal? (`done` / `failed` / `cancelled`)
+    pub fn is_finished(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed { .. } | JobStatus::Cancelled)
+    }
+}
+
+/// Terminal label kept after the owned outcome may have been taken.
+#[derive(Clone, Debug)]
+enum FinLabel {
+    Done,
+    Failed(String),
+    Cancelled,
+}
+
+enum EntryState {
+    Queued,
+    Running,
+    Finished {
+        label: FinLabel,
+        /// The owned result/error; `None` once a consuming handle
+        /// accessor extracted it. The HTTP layer only ever peeks.
+        outcome: Option<Result<JobResult, PipelineError>>,
+    },
+}
+
+/// One registered job: spec, control block, and its state machine.
+pub(crate) struct JobEntry {
+    id: u64,
+    spec: JobSpec,
+    ctrl: Arc<JobCtrl>,
+    state: Mutex<EntryState>,
+    cv: Condvar,
+}
+
+impl JobEntry {
+    pub(crate) fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub(crate) fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    pub(crate) fn status(&self) -> JobStatus {
+        let st = self.state.lock().unwrap();
+        match &*st {
+            // A cancel on a still-queued job is reported immediately —
+            // the executor that eventually pops it only confirms.
+            EntryState::Queued if self.ctrl.is_cancelled() => JobStatus::Cancelled,
+            EntryState::Queued => JobStatus::Queued,
+            EntryState::Running => {
+                let (done, total) = self.ctrl.progress();
+                JobStatus::Running { phase: self.ctrl.phase(), done, total }
+            }
+            EntryState::Finished { label, .. } => match label {
+                FinLabel::Done => JobStatus::Done,
+                FinLabel::Failed(e) => JobStatus::Failed { error: e.clone() },
+                FinLabel::Cancelled => JobStatus::Cancelled,
+            },
+        }
+    }
+
+    pub(crate) fn cancel(&self) {
+        self.ctrl.cancel();
+    }
+
+    /// Block until the entry reaches a terminal state (does not consume
+    /// the outcome).
+    fn wait_finished(&self) {
+        let mut st = self.state.lock().unwrap();
+        while !matches!(*st, EntryState::Finished { .. }) {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Read-only view of the outcome; `None` until terminal. The closure
+    /// sees `None` only in the (single-extraction) case where a handle
+    /// already took the owned value.
+    pub(crate) fn with_outcome<R>(
+        &self,
+        f: impl FnOnce(Option<&Result<JobResult, PipelineError>>) -> R,
+    ) -> Option<R> {
+        let st = self.state.lock().unwrap();
+        match &*st {
+            EntryState::Finished { outcome, .. } => Some(f(outcome.as_ref())),
+            _ => None,
+        }
+    }
+
+    /// Take the owned outcome (blocks until terminal). Guarded by the
+    /// consuming handle accessors: each entry has exactly one handle and
+    /// both accessors take `self`, so this runs at most once.
+    fn take_outcome(&self) -> Result<JobResult, PipelineError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &mut *st {
+                EntryState::Finished { outcome, .. } => {
+                    return outcome
+                        .take()
+                        .expect("outcome taken twice despite consuming accessors");
+                }
+                _ => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn finish(&self, label: FinLabel, outcome: Result<JobResult, PipelineError>) {
+        let mut st = self.state.lock().unwrap();
+        *st = EntryState::Finished { label, outcome: Some(outcome) };
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Owner's view of one submitted job. Not `Clone`: single ownership is
+/// what lets [`JobHandle::wait`] hand back the *owned* structured
+/// [`PipelineError`] / [`JobResult`] exactly once (the [`Service`]
+/// registry keeps shared read access for everyone else).
+pub struct JobHandle {
+    entry: Arc<JobEntry>,
+}
+
+impl JobHandle {
+    /// Service-unique job id (the HTTP API's `:id`).
+    pub fn id(&self) -> u64 {
+        self.entry.id
+    }
+
+    /// The spec as the service runs it (after donation — see
+    /// [`JobSpec::threads`]).
+    pub fn spec(&self) -> &JobSpec {
+        &self.entry.spec
+    }
+
+    /// Current status snapshot (cheap; safe to poll).
+    pub fn status(&self) -> JobStatus {
+        self.entry.status()
+    }
+
+    /// Request cooperative cancellation. Returns immediately; the job
+    /// observes the request at its next checkpoint (phase boundary /
+    /// between region sweeps) and settles to [`JobStatus::Cancelled`].
+    /// A job that already finished is unaffected.
+    pub fn cancel(&self) {
+        self.entry.cancel();
+    }
+
+    /// Block until the job finishes and take its outcome. A cancelled
+    /// job yields `Err(`[`PipelineError::Cancelled`]`)`.
+    pub fn wait(self) -> Result<JobResult, PipelineError> {
+        self.entry.take_outcome()
+    }
+
+    /// Non-blocking [`JobHandle::wait`]: the outcome if the job already
+    /// finished, otherwise the handle back (`Err` = keep polling).
+    /// Deliberately checks the entry's *settled* state, not the status
+    /// label: a cancelled-but-still-queued job reports
+    /// [`JobStatus::Cancelled`] immediately, while its outcome settles
+    /// only when an executor retires it — `try_result` must not block on
+    /// that window.
+    pub fn try_result(self) -> Result<Result<JobResult, PipelineError>, JobHandle> {
+        if self.entry.with_outcome(|_| ()).is_some() {
+            Ok(self.entry.take_outcome())
+        } else {
+            Err(self)
+        }
+    }
+}
+
+struct ExecState {
+    queue: VecDeque<Arc<JobEntry>>,
+    /// Executor threads alive (decremented on exit).
+    spawned: usize,
+    /// Executors parked waiting for work.
+    idle: usize,
+    /// Set when the last [`Service`] clone drops: executors drain the
+    /// backlog, then exit instead of parking.
+    closed: bool,
+}
+
+struct Inner {
+    workers: usize,
+    cache_dir: Option<PathBuf>,
+    next_id: AtomicU64,
+    exec: Mutex<ExecState>,
+    work_cv: Condvar,
+    jobs: Mutex<BTreeMap<u64, Arc<JobEntry>>>,
+}
+
+impl Inner {
+    fn close(&self) {
+        let mut ex = self.exec.lock().unwrap();
+        ex.closed = true;
+        drop(ex);
+        self.work_cv.notify_all();
+    }
+}
+
+/// Closes the service when the last public [`Service`] clone drops.
+/// Executor threads hold only `Arc<Inner>`, so they never keep the
+/// gate — and therefore the service — alive.
+struct Gate {
+    inner: Arc<Inner>,
+}
+
+impl Drop for Gate {
+    fn drop(&mut self) {
+        self.inner.close();
+    }
+}
+
+/// Builder for [`Service`].
+pub struct ServiceBuilder {
+    workers: usize,
+    cache_dir: Option<PathBuf>,
+}
+
+impl ServiceBuilder {
+    /// Maximum concurrently *running* jobs, and the donation budget every
+    /// non-strict spec's `threads` is raised to (default: machine
+    /// parallelism). Executors are spawned lazily, so an idle service
+    /// owns no threads.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Shared design-space disk cache for every job (see
+    /// [`crate::coordinator::cache`]).
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    pub fn build(self) -> Service {
+        let inner = Arc::new(Inner {
+            workers: self.workers,
+            cache_dir: self.cache_dir,
+            next_id: AtomicU64::new(0),
+            exec: Mutex::new(ExecState {
+                queue: VecDeque::new(),
+                spawned: 0,
+                idle: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            jobs: Mutex::new(BTreeMap::new()),
+        });
+        Service { gate: Arc::new(Gate { inner: Arc::clone(&inner) }), inner }
+    }
+}
+
+/// The job service: a registry + executor pool over the process-wide
+/// scheduler and the shared disk cache. Cheap to clone (all clones share
+/// one registry); see the [module docs](self) for the full lifecycle.
+#[derive(Clone)]
+pub struct Service {
+    inner: Arc<Inner>,
+    /// Present in every public clone; executors do not hold it.
+    gate: Arc<Gate>,
+}
+
+impl Service {
+    /// A service with default settings (machine-parallel workers, no
+    /// disk cache).
+    pub fn new() -> Service {
+        Service::builder().build()
+    }
+
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            cache_dir: None,
+        }
+    }
+
+    /// The concurrent-job budget this service was built with.
+    pub fn workers(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Register `spec` and return immediately with its handle. The job
+    /// starts as soon as an executor is free; specs without
+    /// [`JobSpec::threads_strict`] get their inner budget raised to the
+    /// service's worker budget (donation floor).
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let entry = Arc::new(JobEntry {
+            id,
+            spec: spec.donated(self.inner.workers),
+            ctrl: Arc::new(JobCtrl::new()),
+            state: Mutex::new(EntryState::Queued),
+            cv: Condvar::new(),
+        });
+        self.inner.jobs.lock().unwrap().insert(id, Arc::clone(&entry));
+        let mut ex = self.inner.exec.lock().unwrap();
+        ex.queue.push_back(Arc::clone(&entry));
+        let mut spawn_failed = false;
+        // Spawn whenever the backlog exceeds the parked executors (up to
+        // the budget): a burst of submissions to a warm service must
+        // ramp to `workers`-way concurrency, not serialize on whichever
+        // executor happens to be idle.
+        if ex.idle < ex.queue.len() && ex.spawned < self.inner.workers {
+            ex.spawned += 1;
+            let inner = Arc::clone(&self.inner);
+            let ok = std::thread::Builder::new()
+                .name(format!("polygen-svc-{id}"))
+                .spawn(move || executor_loop(inner))
+                .is_ok();
+            if !ok {
+                ex.spawned -= 1;
+                spawn_failed = ex.spawned == 0;
+            }
+        }
+        drop(ex);
+        self.inner.work_cv.notify_one();
+        if spawn_failed {
+            // Resource exhaustion with no executor alive: degrade to
+            // running the backlog inline so the handle can never hang.
+            drain_queue_inline(&self.inner);
+        }
+        JobHandle { entry }
+    }
+
+    /// Parse a TOML job file (the [`JobSpec::from_toml`] grammar) and
+    /// submit it — the HTTP `POST /jobs` entry point.
+    pub fn submit_toml(&self, text: &str) -> Result<JobHandle, PipelineError> {
+        Ok(self.submit(JobSpec::from_toml(text)?))
+    }
+
+    /// Status of a job by id (`None` = unknown id).
+    pub fn status_of(&self, id: u64) -> Option<JobStatus> {
+        self.entry(id).map(|e| e.status())
+    }
+
+    /// Cancel a job by id; `false` = unknown id. Idempotent.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.entry(id) {
+            Some(e) => {
+                e.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Snapshot of every registered job, id-ascending (submission order).
+    pub fn jobs(&self) -> Vec<(u64, String, JobStatus)> {
+        self.inner
+            .jobs
+            .lock()
+            .unwrap()
+            .values()
+            .map(|e| (e.id, e.spec.label(), e.status()))
+            .collect()
+    }
+
+    /// Block until every job submitted so far is terminal. (Jobs
+    /// submitted concurrently with the call may be missed — this is a
+    /// test/shutdown barrier, not a fence.)
+    pub fn drain(&self) {
+        let entries: Vec<Arc<JobEntry>> =
+            self.inner.jobs.lock().unwrap().values().cloned().collect();
+        for e in entries {
+            e.wait_finished();
+        }
+    }
+
+    pub(crate) fn entry(&self, id: u64) -> Option<Arc<JobEntry>> {
+        self.inner.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Every registered entry, id-ascending, cloned out under one lock
+    /// acquisition (the HTTP listing's access path).
+    pub(crate) fn entries(&self) -> Vec<Arc<JobEntry>> {
+        self.inner.jobs.lock().unwrap().values().cloned().collect()
+    }
+}
+
+impl Default for Service {
+    fn default() -> Self {
+        Service::new()
+    }
+}
+
+fn executor_loop(inner: Arc<Inner>) {
+    loop {
+        let entry = {
+            let mut ex = inner.exec.lock().unwrap();
+            loop {
+                if let Some(e) = ex.queue.pop_front() {
+                    break Some(e);
+                }
+                if ex.closed {
+                    break None;
+                }
+                ex.idle += 1;
+                ex = inner.work_cv.wait(ex).unwrap();
+                ex.idle -= 1;
+            }
+        };
+        match entry {
+            Some(e) => run_job(&inner, &e),
+            None => {
+                inner.exec.lock().unwrap().spawned -= 1;
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn-failure fallback: run whatever is queued on the calling thread.
+fn drain_queue_inline(inner: &Inner) {
+    loop {
+        let Some(e) = inner.exec.lock().unwrap().queue.pop_front() else { return };
+        run_job(inner, &e);
+    }
+}
+
+fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
+    {
+        let mut st = entry.state.lock().unwrap();
+        if entry.ctrl.is_cancelled() {
+            // Cancelled while queued: settle without touching the
+            // pipeline at all.
+            drop(st);
+            entry.finish(FinLabel::Cancelled, Err(PipelineError::Cancelled));
+            return;
+        }
+        *st = EntryState::Running;
+    }
+    let cache = inner.cache_dir.as_deref();
+    let ctrl = Arc::clone(&entry.ctrl);
+    // A panicking stage must fail the job, not kill the executor (the
+    // scheduler already forwards task panics to the submitting thread —
+    // which is us). AssertUnwindSafe: the pipeline owns all its state
+    // and nothing of ours is observable after the catch.
+    let run = catch_unwind(AssertUnwindSafe(|| entry.spec.run_controlled(cache, Some(ctrl))));
+    let (label, outcome) = match run {
+        // A cancel that races the run's completion still wins — even on
+        // paths with no checkpoint after their last phase (fixed-R with
+        // verify = false): the owner asked the job to stop, so it must
+        // not observe success.
+        Ok(Ok(_)) if entry.ctrl.is_cancelled() => {
+            (FinLabel::Cancelled, Err(PipelineError::Cancelled))
+        }
+        Ok(Ok(result)) => (FinLabel::Done, Ok(result)),
+        Ok(Err(PipelineError::Cancelled)) => {
+            (FinLabel::Cancelled, Err(PipelineError::Cancelled))
+        }
+        Ok(Err(e)) => (FinLabel::Failed(e.to_string()), Err(e)),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "job panicked".into());
+            (FinLabel::Failed(format!("panic: {msg}")), Err(PipelineError::Panic(msg)))
+        }
+    };
+    entry.finish(label, outcome);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::LookupBits;
+
+    fn quick_spec(func: &str) -> JobSpec {
+        let mut s = JobSpec::new(func, 8);
+        s.lookup = LookupBits::Fixed(4);
+        s
+    }
+
+    #[test]
+    fn submit_wait_matches_direct_run() {
+        let svc = Service::builder().workers(2).build();
+        let spec = quick_spec("recip");
+        let handle = svc.submit(spec.clone());
+        assert_eq!(handle.spec().func, "recip");
+        let via_service = handle.wait().expect("recip 8b R=4 feasible");
+        let direct = spec.run().expect("direct run feasible");
+        assert_eq!(via_service.implementation.coeffs, direct.implementation.coeffs);
+        assert_eq!(via_service.lookup_bits, direct.lookup_bits);
+    }
+
+    #[test]
+    fn statuses_progress_to_done_and_failures_are_structured() {
+        let svc = Service::builder().workers(1).build();
+        let ok = svc.submit(quick_spec("recip"));
+        let bad = svc.submit(quick_spec("tan")); // unknown function
+        assert!(matches!(ok.status(), JobStatus::Queued | JobStatus::Running { .. } | JobStatus::Done));
+        let result = ok.wait();
+        assert!(result.is_ok());
+        svc.drain();
+        match bad.status() {
+            JobStatus::Failed { error } => assert!(error.contains("tan"), "{error}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        match bad.wait() {
+            Err(PipelineError::UnknownFunction(f)) => assert_eq!(f, "tan"),
+            other => panic!("expected owned UnknownFunction, ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn try_result_round_trips_the_handle() {
+        let svc = Service::builder().workers(1).build();
+        let mut handle = svc.submit(quick_spec("exp2"));
+        let result = loop {
+            match handle.try_result() {
+                Ok(r) => break r,
+                Err(h) => {
+                    handle = h;
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        };
+        assert_eq!(result.unwrap().func, "exp2");
+    }
+
+    #[test]
+    fn queued_job_cancel_settles_cancelled() {
+        // One executor, so the second submission sits queued behind the
+        // first; cancelling it must settle Cancelled whether the
+        // executor reached it or not.
+        let svc = Service::builder().workers(1).build();
+        let first = svc.submit(quick_spec("recip"));
+        let second = svc.submit(quick_spec("log2"));
+        second.cancel();
+        assert!(first.wait().is_ok());
+        match second.wait() {
+            Err(PipelineError::Cancelled) => {}
+            other => panic!("expected Cancelled, ok={}", other.is_ok()),
+        }
+        assert_eq!(svc.status_of(2), Some(JobStatus::Cancelled));
+    }
+
+    #[test]
+    fn service_registry_answers_by_id() {
+        let svc = Service::builder().workers(2).build();
+        let a = svc.submit(quick_spec("recip"));
+        let b = svc.submit(quick_spec("exp2"));
+        let (ida, idb) = (a.id(), b.id());
+        assert_ne!(ida, idb);
+        svc.drain();
+        assert_eq!(svc.status_of(ida), Some(JobStatus::Done));
+        assert_eq!(svc.status_of(idb), Some(JobStatus::Done));
+        assert_eq!(svc.status_of(999), None);
+        assert!(!svc.cancel(999));
+        let jobs = svc.jobs();
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs.iter().all(|(_, _, s)| *s == JobStatus::Done));
+    }
+
+    #[test]
+    fn submit_toml_drives_the_pipeline() {
+        let svc = Service::builder().workers(1).build();
+        let handle = svc
+            .submit_toml("func = recip\nbits = 8\n[generate]\nlookup_bits = 4\n")
+            .expect("valid job file");
+        assert_eq!(handle.wait().unwrap().lookup_bits, 4);
+        match svc.submit_toml("func = recip\nbits = many\n") {
+            Err(PipelineError::Spec(_)) => {}
+            other => panic!("expected Spec error, ok={}", other.is_ok()),
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests for `polygen::service`: concurrent submit / poll /
+//! cancel from multiple threads, cancellation mid-generation leaving the
+//! process-wide scheduler drained-but-reusable, and the Batch shim's
+//! equivalence with direct runs.
+
+use std::time::{Duration, Instant};
+
+use polygen::pipeline::{Batch, JobSpec, LookupBits, LubObjective, Phase, PipelineError};
+use polygen::service::{JobStatus, Service};
+
+/// A sub-second job (recip 8-bit R=4).
+fn quick_spec(func: &str) -> JobSpec {
+    let mut s = JobSpec::new(func, 8);
+    s.lookup = LookupBits::Fixed(4);
+    s
+}
+
+/// A long job: recip 16-bit auto-LUB sweeps the whole default R range —
+/// multiple seconds of generation work, so a cancel fired as soon as the
+/// Generate phase is observed always lands mid-generation. Verification
+/// is off: the generation phase is the one under test.
+fn long_spec() -> JobSpec {
+    let mut s = JobSpec::new("recip", 16);
+    s.lookup = LookupBits::Auto(LubObjective::AreaDelay);
+    s.threads = 2;
+    s.verify = false;
+    s
+}
+
+/// A fixed-R heavy job whose progress ticks per region (64 of them).
+fn long_fixed_spec() -> JobSpec {
+    let mut s = long_spec();
+    s.lookup = LookupBits::Fixed(6);
+    s
+}
+
+fn in_generate(status: &JobStatus) -> bool {
+    matches!(status, JobStatus::Running { phase: Phase::Generate, .. })
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, timeout: Duration, mut pred: F) {
+    let deadline = Instant::now() + timeout;
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn concurrent_submit_poll_cancel_from_many_threads() {
+    let svc = Service::builder().workers(4).build();
+    // One long job, submitted first so it occupies an executor while the
+    // quick jobs flow around it.
+    let long = svc.submit(long_spec());
+    let long_id = long.id();
+    std::thread::scope(|scope| {
+        let svc = &svc;
+        // Three submitter threads, each polling its own job to completion.
+        let quick: Vec<_> = ["recip", "log2", "exp2"]
+            .iter()
+            .map(|func| {
+                scope.spawn(move || {
+                    let h = svc.submit(quick_spec(func));
+                    wait_for("quick job", Duration::from_secs(120), || {
+                        h.status().is_finished()
+                    });
+                    h.wait()
+                })
+            })
+            .collect();
+        // A canceller thread kills the long job once its generation
+        // phase has begun (the sweep then still has seconds of work).
+        let canceller = scope.spawn(move || {
+            wait_for("long job generating", Duration::from_secs(120), || {
+                in_generate(&long.status()) || long.status().is_finished()
+            });
+            long.cancel();
+            long.wait()
+        });
+        for (h, func) in quick.into_iter().zip(["recip", "log2", "exp2"]) {
+            let res = h.join().unwrap().unwrap_or_else(|e| panic!("{func}: {e}"));
+            assert_eq!(res.func, func);
+            assert!(res.verify.as_ref().unwrap().ok());
+        }
+        match canceller.join().unwrap() {
+            Err(PipelineError::Cancelled) => {}
+            Ok(_) => panic!("a full 16-bit auto-LUB sweep outran a 2ms-poll cancel"),
+            Err(other) => panic!("expected Cancelled, got {other}"),
+        }
+    });
+    assert_eq!(svc.status_of(long_id), Some(JobStatus::Cancelled));
+}
+
+#[test]
+fn cancel_mid_generation_leaves_scheduler_drained_and_reusable() {
+    let svc = Service::builder().workers(2).build();
+    let h = svc.submit(long_spec());
+    wait_for("mid-generation", Duration::from_secs(120), || {
+        in_generate(&h.status()) || h.status().is_finished()
+    });
+    h.cancel();
+    match h.wait() {
+        Err(PipelineError::Cancelled) => {}
+        Ok(_) => panic!("a full 16-bit auto-LUB sweep outran the cancel"),
+        Err(other) => panic!("expected Cancelled, got {other}"),
+    }
+    // The contract under test: cooperative cancellation retires every
+    // scheduler task, so a drain completes (rather than hanging on an
+    // abandoned job) and the pool keeps working for the next caller.
+    polygen::pipeline::shutdown();
+    let direct = polygen::pool::run_indexed(16, 4, |i| i * i);
+    assert_eq!(direct, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    // And the same service keeps executing new jobs after the cancel.
+    let again = svc.submit(quick_spec("recip"));
+    assert!(again.wait().is_ok());
+    polygen::pipeline::shutdown();
+}
+
+#[test]
+fn batch_shim_matches_direct_runs_exactly() {
+    // The acceptance criterion: Batch over the service is byte-identical
+    // to running each spec alone.
+    let specs =
+        vec![quick_spec("recip"), quick_spec("log2"), quick_spec("tan"), quick_spec("exp2")];
+    let batched = Batch::run(&specs, 3);
+    assert_eq!(batched.len(), 4);
+    for (spec, got) in specs.iter().zip(&batched) {
+        let direct = spec.run();
+        match (got, direct) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.implementation.coeffs, b.implementation.coeffs);
+                assert_eq!(a.lookup_bits, b.lookup_bits);
+                assert_eq!(a.synth, b.synth);
+            }
+            (Err(PipelineError::UnknownFunction(a)), Err(PipelineError::UnknownFunction(b))) => {
+                assert_eq!((a.as_str(), spec.func.as_str()), (b.as_str(), "tan"));
+            }
+            (a, b) => panic!("{}: shim/direct divergence (ok={} vs ok={})",
+                spec.label(), a.is_ok(), b.is_ok()),
+        }
+    }
+    polygen::pipeline::shutdown();
+}
+
+#[test]
+fn service_progress_reports_generate_phase_regions() {
+    let svc = Service::builder().workers(1).build();
+    let h = svc.submit(long_fixed_spec());
+    // Observe a mid-generation snapshot with sane bounds: 2^6 regions.
+    let mut saw_generate = false;
+    wait_for("progress snapshot", Duration::from_secs(120), || match h.status() {
+        JobStatus::Running { phase, done, total } => {
+            if phase == Phase::Generate && total == 64 {
+                assert!(done <= total, "done {done} > total {total}");
+                saw_generate = done >= 1;
+            }
+            saw_generate
+        }
+        s => s.is_finished(),
+    });
+    h.cancel();
+    let _ = h.wait();
+    assert!(saw_generate, "never observed a generate-phase region count");
+    polygen::pipeline::shutdown();
+}

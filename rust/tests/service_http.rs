@@ -1,0 +1,219 @@
+//! End-to-end tests for the HTTP/JSON front-end: a live `serve` loop on
+//! an ephemeral port, driven over real TCP — including the acceptance
+//! scenario (≥ 4 concurrent submissions, one cancelled, correct results
+//! and statuses for all).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use polygen::pipeline::{JobSpec, LookupBits};
+use polygen::service::http::HttpServer;
+use polygen::service::Service;
+
+fn server() -> HttpServer {
+    let svc = Service::builder().workers(4).build();
+    HttpServer::spawn(svc, "127.0.0.1:0").expect("bind ephemeral port")
+}
+
+/// One-shot HTTP/1.1 client: returns (status code, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("server closes after one response");
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (code, body)
+}
+
+/// Extract `"key":<integer>` from a flat JSON body.
+fn json_u64(body: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).unwrap_or_else(|| panic!("{key} missing in {body}"));
+    body[at + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("{key} not an integer in {body}"))
+}
+
+fn poll_until(
+    addr: SocketAddr,
+    id: u64,
+    target: &str,
+    timeout: Duration,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (code, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(code, 200, "{body}");
+        if body.contains(&format!("\"status\":\"{target}\"")) {
+            return body;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job {id} never reached {target}; last status: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn http_round_trips_a_recip8_job_end_to_end() {
+    let server = server();
+    let addr = server.addr();
+
+    // Submit the job-file TOML the CLI batch command takes.
+    let spec_toml = "func = recip\nbits = 8\n[generate]\nlookup_bits = 4\n";
+    let (code, body) = http(addr, "POST", "/jobs", spec_toml);
+    assert_eq!(code, 201, "{body}");
+    assert!(body.contains("\"label\":\"recip_8b_R4\""), "{body}");
+    let id = json_u64(&body, "id");
+
+    poll_until(addr, id, "done", Duration::from_secs(120));
+    let (code, result) = http(addr, "GET", &format!("/jobs/{id}/result"), "");
+    assert_eq!(code, 200, "{result}");
+
+    // The wire result must match an in-process run of the same spec.
+    let mut spec = JobSpec::new("recip", 8);
+    spec.lookup = LookupBits::Fixed(4);
+    let direct = spec.run().expect("recip 8b R=4 feasible");
+    assert_eq!(json_u64(&result, "lookup_bits"), u64::from(direct.lookup_bits));
+    assert_eq!(json_u64(&result, "k"), u64::from(direct.implementation.k));
+    assert_eq!(
+        json_u64(&result, "verified"),
+        direct.verify.as_ref().unwrap().total,
+        "verification count differs: {result}"
+    );
+    for co in &direct.implementation.coeffs {
+        let frag = format!("{{\"a\":{},\"b\":{},\"c\":{}}}", co.a, co.b, co.c);
+        assert!(result.contains(&frag), "coeff {frag} missing in {result}");
+    }
+
+    // The registry listing contains the job.
+    let (code, list) = http(addr, "GET", "/jobs", "");
+    assert_eq!(code, 200);
+    assert!(list.starts_with('[') && list.contains("recip_8b_R4"), "{list}");
+
+    server.stop();
+}
+
+#[test]
+fn http_accepts_json_specs_and_rejects_bad_ones() {
+    let server = server();
+    let addr = server.addr();
+
+    let (code, body) = http(
+        addr,
+        "POST",
+        "/jobs",
+        r#"{"func":"exp2","bits":8,"generate":{"lookup_bits":4},"job":{"verify":true}}"#,
+    );
+    assert_eq!(code, 201, "{body}");
+    let id = json_u64(&body, "id");
+    poll_until(addr, id, "done", Duration::from_secs(120));
+    let (code, result) = http(addr, "GET", &format!("/jobs/{id}/result"), "");
+    assert_eq!(code, 200);
+    assert!(result.contains("\"func\":\"exp2\""), "{result}");
+
+    // Bad spec value → 400 with a message; bad JSON likewise.
+    let (code, body) = http(addr, "POST", "/jobs", "bits = many\n");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("error"), "{body}");
+    let (code, _) = http(addr, "POST", "/jobs", "{\"a\":[1]}");
+    assert_eq!(code, 400);
+
+    // Unknown ids and routes.
+    let (code, _) = http(addr, "GET", "/jobs/999", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/jobs/999/result", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "DELETE", "/jobs/999", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "PUT", "/jobs", "");
+    assert_eq!(code, 405);
+
+    server.stop();
+}
+
+#[test]
+fn http_concurrent_submissions_with_one_cancel() {
+    // The acceptance scenario: >= 4 jobs submitted concurrently over
+    // HTTP, one (long) job cancelled via DELETE; the cancelled job ends
+    // `cancelled` and every other job delivers a correct result.
+    let server = server();
+    let addr = server.addr();
+
+    let quick = ["recip", "log2", "exp2"];
+    // recip 16-bit auto-LUB: seconds of sweep work, so the DELETE below
+    // always lands while it is running (or still queued).
+    let long_toml =
+        "func = recip\nbits = 16\n[generate]\nlookup_bits = auto\nthreads = 2\n\
+         [job]\nverify = false\n";
+
+    let mut ids: Vec<(u64, Option<&str>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        handles.push(scope.spawn(move || {
+            let (code, body) = http(addr, "POST", "/jobs", long_toml);
+            assert_eq!(code, 201, "{body}");
+            (json_u64(&body, "id"), None)
+        }));
+        for func in quick {
+            handles.push(scope.spawn(move || {
+                let toml = format!("func = {func}\nbits = 8\n[generate]\nlookup_bits = 4\n");
+                let (code, body) = http(addr, "POST", "/jobs", &toml);
+                assert_eq!(code, 201, "{body}");
+                (json_u64(&body, "id"), Some(func))
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ids.len(), 4);
+
+    // Cancel the long job.
+    let (long_id, _) = ids.remove(0);
+    let (code, body) = http(addr, "DELETE", &format!("/jobs/{long_id}"), "");
+    assert_eq!(code, 200, "{body}");
+    poll_until(addr, long_id, "cancelled", Duration::from_secs(120));
+    let (code, body) = http(addr, "GET", &format!("/jobs/{long_id}/result"), "");
+    assert_eq!(code, 409, "cancelled result must be 409: {body}");
+    assert!(body.contains("\"status\":\"cancelled\""), "{body}");
+
+    // Every other job completes with a correct result.
+    for (id, func) in ids {
+        let func = func.unwrap();
+        poll_until(addr, id, "done", Duration::from_secs(120));
+        let (code, result) = http(addr, "GET", &format!("/jobs/{id}/result"), "");
+        assert_eq!(code, 200, "{result}");
+        let mut spec = JobSpec::new(func, 8);
+        spec.lookup = LookupBits::Fixed(4);
+        let direct = spec.run().unwrap();
+        assert!(result.contains(&format!("\"func\":\"{func}\"")), "{result}");
+        assert_eq!(json_u64(&result, "lookup_bits"), 4);
+        for co in &direct.implementation.coeffs {
+            let frag = format!("{{\"a\":{},\"b\":{},\"c\":{}}}", co.a, co.b, co.c);
+            assert!(result.contains(&frag), "{func}: coeff {frag} missing in {result}");
+        }
+    }
+
+    // DELETE is idempotent on a finished job.
+    let (code, body) = http(addr, "DELETE", &format!("/jobs/{long_id}"), "");
+    assert_eq!(code, 200);
+    assert!(body.contains("\"status\":\"cancelled\""), "{body}");
+
+    server.stop();
+    polygen::pipeline::shutdown();
+}
