@@ -13,9 +13,9 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
-use crate::designspace::{generate_ctrl, DesignSpace, GenError, GenOptions};
+use crate::designspace::{generate_ticks, DesignSpace, GenError, GenOptions};
 use crate::pool::{CancelToken, Progress};
-use crate::dse::{explore, DseOptions, Implementation};
+use crate::dse::{explore_ctrl, DseOptions, Implementation};
 use crate::synth::{synth_min_delay_with, SynthPoint};
 
 /// A prepared workload: the function and its bound table.
@@ -66,7 +66,7 @@ pub fn run_point_cached(
     dse: &DseOptions,
     cache: Option<&Path>,
 ) -> SweepPoint {
-    run_point_inner(w, r, gen, dse, cache, None)
+    run_point_inner(w, r, gen, dse, cache, None, None)
 }
 
 /// One sweep point with an optional cancel token threaded into its
@@ -80,12 +80,13 @@ fn run_point_inner(
     dse: &DseOptions,
     cache: Option<&Path>,
     cancel: Option<&CancelToken>,
+    sub: Option<&Progress>,
 ) -> SweepPoint {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let t0 = Instant::now();
     let space = match cache {
-        Some(dir) => generate_cached_ctrl(w, r, &opts, dir, cancel, None),
-        None => generate_ctrl(&w.bt, &opts, cancel, None),
+        Some(dir) => generate_cached_ctrl(w, r, &opts, dir, cancel, sub),
+        None => generate_ticks(&w.bt, &opts, cancel, sub),
     };
     let gen_time = t0.elapsed();
     // A cancel that lands between generation and exploration also stops
@@ -95,7 +96,8 @@ fn run_point_inner(
         Ok(_) if cancel.is_some_and(|c| c.is_cancelled()) => Err(GenError::Cancelled),
         other => other,
     };
-    let implementation = space.as_ref().ok().and_then(|ds| explore(&w.bt, ds, dse));
+    let implementation =
+        space.as_ref().ok().and_then(|ds| explore_ctrl(&w.bt, ds, dse, cancel));
     // Cost under the technology the exploration targeted, so sweeps and
     // auto-LUB selection optimize the same model the procedure used.
     let cm = dse.tech.technology().cost_model();
@@ -137,13 +139,15 @@ pub fn sweep_lub_cached(
     })
 }
 
-/// [`sweep_lub_cached`] with cooperative cancellation and per-point
+/// [`sweep_lub_cached`] with cooperative cancellation and two-level
 /// progress — the sweep [`crate::service`] jobs run. The token is
 /// checked before each point *and* between each point's region sweeps;
 /// a cancelled point carries `Err(GenError::Cancelled)` as its space.
-/// `progress` counts completed points (the region-level counts of the
-/// individual generations are deliberately not reported: concurrent
-/// points would interleave their resets into noise).
+/// `progress` counts completed points. `sub` counts analyzed regions
+/// summed across the whole sweep (one window of `Σ 2^R`, opened here
+/// once): concurrent points only ever *add* to it, so — unlike the
+/// per-generation reset-style counter — interleaving stays monotone,
+/// and the long first points of a 16-bit sweep are visibly advancing.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_lub_ctrl(
     w: &Workload,
@@ -154,9 +158,13 @@ pub fn sweep_lub_ctrl(
     cache: Option<&Path>,
     cancel: &CancelToken,
     progress: Option<&Progress>,
+    sub: Option<&Progress>,
 ) -> Vec<SweepPoint> {
     if let Some(p) = progress {
         p.begin(r_values.len());
+    }
+    if let Some(s) = sub {
+        s.begin(r_values.iter().map(|&r| 1usize << r).sum());
     }
     crate::pool::run_indexed(r_values.len(), threads, |i| {
         if cancel.is_cancelled() {
@@ -168,7 +176,7 @@ pub fn sweep_lub_ctrl(
                 synth: None,
             };
         }
-        let point = run_point_inner(w, r_values[i], gen, dse, cache, Some(cancel));
+        let point = run_point_inner(w, r_values[i], gen, dse, cache, Some(cancel), sub);
         if let Some(p) = progress {
             p.tick();
         }
@@ -249,23 +257,29 @@ pub fn generate_cached(
 /// [`generate_cached`] with cooperative cancellation/progress threaded
 /// into the miss path (both the analysis phases and the pre-save
 /// materialization sweep — the dominant cost at 16+ bits — honor the
-/// token). Cache hits are a parse and never cancel.
+/// token). Cache hits are a parse and never cancel. `ticks` advances
+/// against a window the **caller** opened (never re-opened here, so one
+/// window can span several generations): a miss ticks per analyzed
+/// region, a hit credits all `2^R` regions at once.
 pub fn generate_cached_ctrl(
     w: &Workload,
     r: u32,
     gen: &GenOptions,
     dir: &Path,
     cancel: Option<&CancelToken>,
-    progress: Option<&Progress>,
+    ticks: Option<&Progress>,
 ) -> Result<DesignSpace, GenError> {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, &opts);
     if let Ok(ds) = cache::load(&path) {
         if ds.in_bits == w.bt.in_bits && ds.out_bits == w.bt.out_bits {
+            if let Some(p) = ticks {
+                p.add(1usize << r);
+            }
             return Ok(ds);
         }
     }
-    let ds = generate_ctrl(&w.bt, &opts, cancel, progress)?;
+    let ds = generate_ticks(&w.bt, &opts, cancel, ticks)?;
     // The `.pgds` format stores the full dictionaries, so a miss pays
     // materialization here either way — do it through the scheduler
     // (parallel phase 3) rather than letting `cache::save`'s serializer

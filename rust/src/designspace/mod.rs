@@ -296,6 +296,136 @@ impl DesignSpace {
     }
 }
 
+/// One shard's analysis phases (phases 1 + 2 restricted to regions
+/// `lo..hi`) — the unit of work [`crate::service`]'s cluster layer
+/// distributes to workers. Only `min_k` and `dd_evals` need to cross the
+/// wire before the sweep phase; the (large) per-region analyses stay on
+/// the worker that computed them.
+#[derive(Clone, Debug)]
+pub struct ShardAnalysis {
+    /// First region index covered (inclusive).
+    pub lo: u64,
+    /// One past the last region index covered.
+    pub hi: u64,
+    /// Max over the shard's regions of the per-region minimal feasible
+    /// `k` — this shard's contribution to the common `k` (which is the
+    /// max over all shards).
+    pub min_k: u32,
+    /// Divided-difference evaluations spent analyzing this shard.
+    pub dd_evals: u64,
+    /// Per-region analyses, region `lo` first.
+    pub analyses: Vec<RegionAnalysis>,
+}
+
+/// Split `0..nregions` into up to `shards` contiguous ascending ranges of
+/// near-equal length (the first `nregions % shards` ranges get one extra
+/// region). Never returns an empty range: the shard count is clamped to
+/// `nregions`.
+pub fn shard_ranges(nregions: u64, shards: usize) -> Vec<(u64, u64)> {
+    let shards = (shards.max(1) as u64).min(nregions.max(1));
+    let base = nregions / shards;
+    let extra = nregions % shards;
+    let mut out = Vec::with_capacity(shards as usize);
+    let mut lo = 0u64;
+    for i in 0..shards {
+        let len = base + u64::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Analyze regions `lo..hi` of the `2^R` range: per-region envelopes plus
+/// this shard's max-of-minimal-`k`, exactly as the single-node engine
+/// computes them. The ascending feasibility loop mirrors
+/// [`generate`]'s, so the first failing region of the shard wins — a
+/// coordinator that takes the error of the *failed shard with the
+/// smallest `lo`* reproduces the single-node error verbatim.
+pub fn analyze_shard(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    lo: u64,
+    hi: u64,
+    cancel: Option<&CancelToken>,
+) -> Result<ShardAnalysis, GenError> {
+    assert!(opts.lookup_bits <= bt.in_bits);
+    let nregions = 1u64 << opts.lookup_bits;
+    assert!(lo < hi && hi <= nregions, "shard {lo}..{hi} out of range for R={}", opts.lookup_bits);
+    let cancelled = || cancel.is_some_and(|c| c.is_cancelled());
+    let analyses: Option<Vec<RegionAnalysis>> =
+        run_indexed((hi - lo) as usize, opts.threads, |i| -> Option<RegionAnalysis> {
+            if cancelled() {
+                return None;
+            }
+            let r = lo + i as u64;
+            let (l, u) = bt.region(opts.lookup_bits, r);
+            Some(region::analyze_region(r, l, u, opts.search, None))
+        })
+        .into_iter()
+        .collect();
+    let analyses = analyses.ok_or(GenError::Cancelled)?;
+    if cancelled() {
+        return Err(GenError::Cancelled);
+    }
+    let mut min_k = 0u32;
+    for an in &analyses {
+        if !an.feasible {
+            return Err(GenError::InfeasibleRegion { r: an.r });
+        }
+        match min_feasible_k(an, opts.max_k) {
+            Some(kr) => min_k = min_k.max(kr),
+            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
+        }
+    }
+    let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
+    Ok(ShardAnalysis { lo, hi, min_k, dd_evals, analyses })
+}
+
+/// Phase 3 for one shard: sweep every region's `(a, b)` dictionary at the
+/// cluster-wide common `k` (which must be `>= self.min_k` — the
+/// coordinator computes it as the max over shards).
+pub fn sweep_shard(sa: &ShardAnalysis, k: u32) -> Vec<RegionSpace> {
+    assert!(k >= sa.min_k, "sweep at k={k} below shard minimum {}", sa.min_k);
+    sa.analyses
+        .iter()
+        .map(|an| {
+            region_space_at_k(an, k)
+                .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r))
+        })
+        .collect()
+}
+
+/// Assemble a [`DesignSpace`] from shard-swept regions, concatenated in
+/// region order. Validates full coverage (every region exactly once,
+/// ascending, at the common `k`) and pre-fills every cell — the same
+/// fully-materialized representation cache loads use, which answers
+/// every query identically to a lazily generated space.
+pub fn merge_shard_spaces(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    k: u32,
+    regions: Vec<RegionSpace>,
+    dd_evals: u64,
+) -> DesignSpace {
+    let nregions = 1u64 << opts.lookup_bits;
+    assert_eq!(regions.len() as u64, nregions, "merged shards must cover every region");
+    for (i, sp) in regions.iter().enumerate() {
+        assert_eq!(sp.r, i as u64, "merged shard regions out of order at slot {i}");
+        assert_eq!(sp.k, k, "region {} swept at k={} instead of the common {k}", sp.r, sp.k);
+    }
+    DesignSpace::from_materialized(
+        bt.func.clone(),
+        bt.accuracy.clone(),
+        bt.in_bits,
+        bt.out_bits,
+        opts.lookup_bits,
+        k,
+        regions,
+        Vec::new(),
+        dd_evals,
+    )
+}
+
 /// Generate the complete design space for `R = opts.lookup_bits`,
 /// **lazily**: only the per-region analyses and the common `k` are
 /// computed; entries are swept on demand through [`RegionView`]s.
@@ -324,7 +454,24 @@ pub fn generate_ctrl(
     cancel: Option<&CancelToken>,
     progress: Option<&Progress>,
 ) -> Result<DesignSpace, GenError> {
+    if let Some(p) = progress {
+        p.begin(1usize << opts.lookup_bits);
+    }
     generate_inner(bt, opts, None, cancel, progress)
+}
+
+/// [`generate_ctrl`] minus the [`Progress::begin`]: `ticks` is advanced
+/// once per analyzed region against a window the *caller* opened. This
+/// lets one progress window span work beyond a single generate call —
+/// e.g. a cache probe that `add`s the whole region count on a hit, or a
+/// cluster coordinator accounting remote shards as they land.
+pub(crate) fn generate_ticks(
+    bt: &BoundTable,
+    opts: &GenOptions,
+    cancel: Option<&CancelToken>,
+    ticks: Option<&Progress>,
+) -> Result<DesignSpace, GenError> {
+    generate_inner(bt, opts, None, cancel, ticks)
 }
 
 fn generate_inner(
@@ -418,9 +565,6 @@ fn analyze_all(
     cancel: Option<&CancelToken>,
     progress: Option<&Progress>,
 ) -> Option<Vec<RegionAnalysis>> {
-    if let Some(p) = progress {
-        p.begin(nregions as usize);
-    }
     // The cancellation checkpoint (both branches): polled before each
     // region's sweep, so a cancelled run stops within one region's worth
     // of work per executor.
@@ -728,6 +872,84 @@ mod tests {
             ];
             for other in others {
                 assert_spaces_identical(&reference, &other, name);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_node() {
+        // The cluster invariant: analyze shards independently, take the
+        // max of the shard min-ks, sweep each shard at that common k,
+        // concatenate — byte-identical to the single-node eager oracle,
+        // across shard counts (1, 2, 3, 5, one-per-region) and an
+        // uneven hand-built boundary split.
+        for (name, bits, r) in [("recip", 8u32, 4u32), ("log2", 8, 3), ("exp2", 8, 4)] {
+            let bt = table(name, bits);
+            let opts = GenOptions { lookup_bits: r, ..Default::default() };
+            let oracle = generate_eager(&bt, &opts).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let n = 1u64 << r;
+            let mut splits: Vec<Vec<(u64, u64)>> =
+                [1usize, 2, 3, 5, n as usize].iter().map(|&s| shard_ranges(n, s)).collect();
+            if n >= 4 {
+                splits.push(vec![(0, 1), (1, n - 2), (n - 2, n)]);
+            }
+            for ranges in splits {
+                assert_eq!(ranges.iter().map(|(l, h)| h - l).sum::<u64>(), n);
+                let shards: Vec<ShardAnalysis> = ranges
+                    .iter()
+                    .map(|&(lo, hi)| analyze_shard(&bt, &opts, lo, hi, None).unwrap())
+                    .collect();
+                let k = shards.iter().map(|s| s.min_k).max().unwrap();
+                let dd: u64 = shards.iter().map(|s| s.dd_evals).sum();
+                let regions: Vec<RegionSpace> =
+                    shards.iter().flat_map(|s| sweep_shard(s, k)).collect();
+                let merged = merge_shard_spaces(&bt, &opts, k, regions, dd);
+                let label = format!("{name} in {} shards", ranges.len());
+                assert_eq!(merged.dd_evals, oracle.dd_evals, "{label}: dd_evals");
+                assert_spaces_identical(&merged, &oracle, &label);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_error_matches_single_node() {
+        // Error precedence: the failed shard with the smallest `lo`
+        // carries the exact error the single-node ascending loop
+        // reports.
+        let bt = table("recip", 8);
+        let opts = GenOptions { lookup_bits: 4, max_k: 0, ..Default::default() };
+        let single = match generate(&bt, &opts) {
+            Err(e) => e,
+            Ok(_) => return, // k=0 feasible: nothing to compare
+        };
+        let first_shard_err = shard_ranges(16, 3)
+            .into_iter()
+            .filter_map(|(lo, hi)| analyze_shard(&bt, &opts, lo, hi, None).err())
+            .next()
+            .expect("single-node failed, so some shard must fail");
+        assert_eq!(first_shard_err, single);
+
+        // A pre-fired token cancels a shard without analyzing it.
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let opts = GenOptions { lookup_bits: 4, ..Default::default() };
+        let err = analyze_shard(&bt, &opts, 0, 4, Some(&cancel));
+        assert_eq!(err.unwrap_err(), GenError::Cancelled);
+    }
+
+    #[test]
+    fn shard_ranges_partition_contiguously() {
+        for n in [1u64, 2, 7, 16, 33] {
+            for s in [1usize, 2, 3, 5, 64] {
+                let ranges = shard_ranges(n, s);
+                assert!(!ranges.is_empty());
+                assert!(ranges.len() <= s.max(1));
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, n);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap/overlap in {ranges:?}");
+                }
+                assert!(ranges.iter().all(|(l, h)| l < h), "empty shard in {ranges:?}");
             }
         }
     }

@@ -31,6 +31,7 @@ pub mod procedure;
 use crate::bounds::BoundTable;
 use crate::designspace::region::{polynomial_valid, CEnvelope};
 use crate::designspace::DesignSpace;
+use crate::pool::CancelToken;
 use crate::tech::{CostModel, TechKind};
 use precision::{algorithm1, Encoding, IntervalSet};
 use procedure::DecisionProcedure;
@@ -204,12 +205,27 @@ impl Implementation {
 /// default options reproduce the paper's ASIC procedure exactly
 /// (`AsicGe` technology, whose default ordering is SquareFirst).
 pub fn explore(bt: &BoundTable, ds: &DesignSpace, opts: &DseOptions) -> Option<Implementation> {
+    explore_ctrl(bt, ds, opts, None)
+}
+
+/// [`explore`] with a cooperative [`CancelToken`] threaded into the
+/// shipped procedures (checked between regions of every dictionary
+/// scan, so a cancel lands within one region's worth of work even
+/// minutes into a 20-bit exploration). A cancelled exploration returns
+/// `None`; the caller distinguishes that from an exhausted space by
+/// polling the token it passed in.
+pub fn explore_ctrl(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    opts: &DseOptions,
+    cancel: Option<&CancelToken>,
+) -> Option<Implementation> {
     let tech = opts.tech.technology();
     let proc_: Box<dyn DecisionProcedure> = match opts.procedure {
         Some(p) => p.instantiate(),
         None => tech.default_procedure(),
     };
-    explore_with(bt, ds, proc_.as_ref(), tech.cost_model(), opts)
+    explore_with_ctrl(bt, ds, proc_.as_ref(), tech.cost_model(), opts, cancel)
 }
 
 /// [`explore`] with an explicit procedure and cost model — the plugin
@@ -223,6 +239,20 @@ pub fn explore_with(
     opts: &DseOptions,
 ) -> Option<Implementation> {
     proc_.decide(bt, ds, cm, opts)
+}
+
+/// [`explore_with`] plus a cancel token, dispatched through
+/// [`DecisionProcedure::decide_ctrl`] (procedures that don't override it
+/// run to completion as before).
+pub fn explore_with_ctrl(
+    bt: &BoundTable,
+    ds: &DesignSpace,
+    proc_: &dyn DecisionProcedure,
+    cm: &dyn CostModel,
+    opts: &DseOptions,
+    cancel: Option<&CancelToken>,
+) -> Option<Implementation> {
+    proc_.decide_ctrl(bt, ds, cm, opts, cancel)
 }
 
 /// Resolve the degree under `opts`: forced if requested (and feasible),
@@ -253,15 +283,21 @@ fn max_feasible_trunc(
     ds: &DesignSpace,
     degree: Degree,
     opts: &DseOptions,
+    cancel: Option<&CancelToken>,
     map: impl Fn(u32) -> (u32, u32),
 ) -> u32 {
     let xbits = ds.x_bits();
     let feasible = |p: u32| {
         let (i, j) = map(p);
-        all_regions_survive(bt, ds, degree, i, j, opts.max_b_per_a)
+        all_regions_survive(bt, ds, degree, i, j, opts.max_b_per_a, cancel)
     };
+    // (A cancelled scan reports infeasible, which would trip the
+    // untruncated-dictionary invariant — the short-circuit exempts it.)
+    debug_assert!(
+        cancel.is_some_and(|c| c.is_cancelled()) || feasible(0),
+        "untruncated dictionary must be feasible"
+    );
     let (mut lo, mut hi) = (0u32, xbits);
-    debug_assert!(feasible(0), "untruncated dictionary must be feasible");
     while lo < hi {
         let mid = (lo + hi + 1) / 2;
         if feasible(mid) {
@@ -280,11 +316,17 @@ fn all_regions_survive(
     i: u32,
     j: u32,
     cap: usize,
+    cancel: Option<&CancelToken>,
 ) -> bool {
     // Lazy iteration: each region's entries are swept (and memoized) as
     // the procedure reaches it, so an early infeasible region stops the
-    // scan before the rest of the space is ever materialized.
+    // scan before the rest of the space is ever materialized. A fired
+    // cancel token reports "infeasible" to end the enclosing search —
+    // the procedure's own checkpoint then discards the bogus answer.
     ds.region_views().all(|rv| {
+        if cancel.is_some_and(|c| c.is_cancelled()) {
+            return false;
+        }
         let sp = rv.space();
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         !filter_region(l, u, ds.k, sp, degree, i, j, cap, true).is_empty()
@@ -298,9 +340,15 @@ fn filter_all(
     i: u32,
     j: u32,
     cap: usize,
+    cancel: Option<&CancelToken>,
 ) -> Vec<RegionCands> {
     ds.region_views()
         .map(|rv| {
+            // An empty candidate set makes the downstream `finish` bail
+            // with `None` — the cheapest way for a cancel to propagate.
+            if cancel.is_some_and(|c| c.is_cancelled()) {
+                return RegionCands::default();
+            }
             let sp = rv.space();
             let (l, u) = bt.region(ds.lookup_bits, sp.r);
             filter_region(l, u, ds.k, sp, degree, i, j, cap, false)
@@ -369,7 +417,12 @@ fn finish(
     j: u32,
     mut cands: Vec<RegionCands>,
     opts: &DseOptions,
+    cancel: Option<&CancelToken>,
 ) -> Option<Implementation> {
+    let cancelled = || cancel.is_some_and(|c| c.is_cancelled());
+    if cancelled() {
+        return None;
+    }
     let sampled = sampled_any(ds, opts);
 
     // --- a ---
@@ -409,6 +462,9 @@ fn finish(
     // --- c --- (interval-backed: one interval per surviving (a, b))
     let mut c_sets: Vec<IntervalSet> = Vec::with_capacity(cands.len());
     for (rc, rv) in cands.iter().zip(ds.region_views()) {
+        if cancelled() {
+            return None;
+        }
         let (l, u) = bt.region(ds.lookup_bits, rv.r());
         let mut set: IntervalSet = Vec::new();
         for (a, bs) in &rc.cands {
@@ -430,6 +486,9 @@ fn finish(
     // --- selection: first jointly-valid triple per region ---
     let mut coeffs = Vec::with_capacity(cands.len());
     for (rc, rv) in cands.iter().zip(ds.region_views()) {
+        if cancelled() {
+            return None;
+        }
         let (l, u) = bt.region(ds.lookup_bits, rv.r());
         let mut chosen: Option<Coeffs> = None;
         'outer: for (a, bs) in &rc.cands {
@@ -500,9 +559,13 @@ fn reselect_at_trunc(
     i: u32,
     j: u32,
     admits: &impl Fn(&Coeffs) -> bool,
+    cancel: Option<&CancelToken>,
 ) -> Option<Implementation> {
     let mut coeffs = Vec::with_capacity(ds.num_regions());
     for rv in ds.region_views() {
+        if cancel.is_some_and(|c| c.is_cancelled()) {
+            return None;
+        }
         let sp = rv.space();
         let (l, u) = bt.region(ds.lookup_bits, sp.r);
         let mut chosen = None;
@@ -637,7 +700,7 @@ mod tests {
         if im.degree == Degree::Quadratic && im.sq_trunc < im.x_bits() {
             // One more bit of square truncation must be infeasible.
             assert!(
-                !all_regions_survive(&bt, &ds, im.degree, im.sq_trunc + 1, 0, 512),
+                !all_regions_survive(&bt, &ds, im.degree, im.sq_trunc + 1, 0, 512, None),
                 "sq_trunc {} not maximal",
                 im.sq_trunc
             );

@@ -19,6 +19,7 @@ use super::{
 };
 use crate::bounds::BoundTable;
 use crate::designspace::DesignSpace;
+use crate::pool::CancelToken;
 use crate::synth::synth_min_delay_with;
 use crate::tech::CostModel;
 
@@ -67,6 +68,23 @@ pub trait DecisionProcedure: Sync {
         cm: &dyn CostModel,
         opts: &DseOptions,
     ) -> Option<Implementation>;
+
+    /// [`DecisionProcedure::decide`] with a cooperative cancel token.
+    /// The default ignores the token (a custom procedure stays correct,
+    /// just uncancellable); the shipped procedures override it to poll
+    /// between regions of every dictionary scan and return `None` once
+    /// the token fires. Callers that pass a token must check it on a
+    /// `None` result to tell cancellation from an exhausted space.
+    fn decide_ctrl(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        cm: &dyn CostModel,
+        opts: &DseOptions,
+        _cancel: Option<&CancelToken>,
+    ) -> Option<Implementation> {
+        self.decide(bt, ds, cm, opts)
+    }
 }
 
 /// A sequence of [`Pass`]es applied left to right — earlier passes take
@@ -118,13 +136,17 @@ fn constrained_max(
     square_axis: bool,
     i: u32,
     j: u32,
+    cancel: Option<&CancelToken>,
 ) -> Implementation {
     let admits = |co: &Coeffs| {
         pre.enc_a.admits(co.a) && pre.enc_b.admits(co.b) && pre.enc_c.admits(co.c)
     };
     for p in (0..=ds.x_bits()).rev() {
+        if cancel.is_some_and(|c| c.is_cancelled()) {
+            break;
+        }
         let (ii, jj) = if square_axis { (p, j) } else { (i, p) };
-        if let Some(im) = reselect_at_trunc(bt, ds, pre, ii, jj, &admits) {
+        if let Some(im) = reselect_at_trunc(bt, ds, pre, ii, jj, &admits, cancel) {
             return im;
         }
     }
@@ -140,19 +162,34 @@ impl DecisionProcedure for Lexicographic {
         &self,
         bt: &BoundTable,
         ds: &DesignSpace,
-        _cm: &dyn CostModel,
+        cm: &dyn CostModel,
         opts: &DseOptions,
     ) -> Option<Implementation> {
+        self.decide_ctrl(bt, ds, cm, opts, None)
+    }
+
+    fn decide_ctrl(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        _cm: &dyn CostModel,
+        opts: &DseOptions,
+        cancel: Option<&CancelToken>,
+    ) -> Option<Implementation> {
+        let cancelled = || cancel.is_some_and(|c| c.is_cancelled());
         let degree = resolve_degree(ds, opts)?;
         let xbits = ds.x_bits();
         let (mut i, mut j) = (0u32, 0u32);
         let mut fixed: Option<Implementation> = None;
         for pass in &self.passes {
+            if cancelled() {
+                return None;
+            }
             match pass {
                 Pass::MinimizeK => {} // generation already minimized k
                 Pass::MaximizeSquareTrunc => {
                     if let Some(pre) = fixed.take() {
-                        let upd = constrained_max(bt, ds, &pre, true, i, j);
+                        let upd = constrained_max(bt, ds, &pre, true, i, j, cancel);
                         i = upd.sq_trunc;
                         fixed = Some(upd);
                     } else {
@@ -162,32 +199,35 @@ impl DecisionProcedure for Lexicographic {
                         i = if degree == Degree::Linear {
                             xbits
                         } else {
-                            max_feasible_trunc(bt, ds, degree, opts, |p| (p, j))
+                            max_feasible_trunc(bt, ds, degree, opts, cancel, |p| (p, j))
                         };
                     }
                 }
                 Pass::MaximizeLinearTrunc => {
                     if let Some(pre) = fixed.take() {
-                        let upd = constrained_max(bt, ds, &pre, false, i, j);
+                        let upd = constrained_max(bt, ds, &pre, false, i, j, cancel);
                         j = upd.lin_trunc;
                         fixed = Some(upd);
                     } else {
-                        j = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
+                        j = max_feasible_trunc(bt, ds, degree, opts, cancel, |p| (i, p));
                     }
                 }
                 Pass::MinimizeWidths => {
-                    let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
-                    fixed = Some(finish(bt, ds, degree, i, j, cands, opts)?);
+                    let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a, cancel);
+                    fixed = Some(finish(bt, ds, degree, i, j, cands, opts, cancel)?);
                 }
             }
+        }
+        if cancelled() {
+            return None;
         }
         match fixed {
             Some(im) => Some(im),
             // A sequence without MinimizeWidths still needs encodings to
             // emit an implementation: minimize them at the final (i, j).
             None => {
-                let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a);
-                finish(bt, ds, degree, i, j, cands, opts)
+                let cands = filter_all(bt, ds, degree, i, j, opts.max_b_per_a, cancel);
+                finish(bt, ds, degree, i, j, cands, opts, cancel)
             }
         }
     }
@@ -260,17 +300,33 @@ impl DecisionProcedure for ParetoCost {
         cm: &dyn CostModel,
         opts: &DseOptions,
     ) -> Option<Implementation> {
+        self.decide_ctrl(bt, ds, cm, opts, None)
+    }
+
+    fn decide_ctrl(
+        &self,
+        bt: &BoundTable,
+        ds: &DesignSpace,
+        cm: &dyn CostModel,
+        opts: &DseOptions,
+        cancel: Option<&CancelToken>,
+    ) -> Option<Implementation> {
+        let cancelled = || cancel.is_some_and(|c| c.is_cancelled());
         let degree = resolve_degree(ds, opts)?;
         let xbits = ds.x_bits();
         let cap = opts.max_b_per_a;
         let mut cands: Vec<Implementation> = Vec::new();
         let at = |i: u32, j: u32| -> Option<Implementation> {
-            finish(bt, ds, degree, i, j, filter_all(bt, ds, degree, i, j, cap), opts)
+            let cands = filter_all(bt, ds, degree, i, j, cap, cancel);
+            finish(bt, ds, degree, i, j, cands, opts, cancel)
         };
         if degree == Degree::Quadratic {
-            let i_max = max_feasible_trunc(bt, ds, degree, opts, |p| (p, 0));
+            let i_max = max_feasible_trunc(bt, ds, degree, opts, cancel, |p| (p, 0));
             for i in downsample_desc(i_max, self.max_candidates) {
-                let j_max = max_feasible_trunc(bt, ds, degree, opts, |p| (i, p));
+                if cancelled() {
+                    return None;
+                }
+                let j_max = max_feasible_trunc(bt, ds, degree, opts, cancel, |p| (i, p));
                 let js = if self.frontier_2d {
                     // The full frontier row at this i: j_max down to 0.
                     // Shallower j admits more (a, b) survivors, which can
@@ -285,17 +341,26 @@ impl DecisionProcedure for ParetoCost {
                 }
             }
         } else {
-            let j_max = max_feasible_trunc(bt, ds, degree, opts, |p| (xbits, p));
+            let j_max = max_feasible_trunc(bt, ds, degree, opts, cancel, |p| (xbits, p));
             for j in downsample_desc(j_max, self.max_candidates) {
+                if cancelled() {
+                    return None;
+                }
                 cands.extend(at(xbits, j));
             }
         }
+        if cancelled() {
+            return None;
+        }
         // The width-first selection explores the opposite corner of the
         // trade space (minimal widths, whatever truncation survives).
-        if let Some(wf) = Lexicographic::lut_first().decide(bt, ds, cm, opts) {
+        if let Some(wf) = Lexicographic::lut_first().decide_ctrl(bt, ds, cm, opts, cancel) {
             if wf.degree == degree {
                 cands.push(wf);
             }
+        }
+        if cancelled() {
+            return None;
         }
         let mut costed: Vec<(Implementation, crate::synth::SynthPoint)> = cands
             .into_iter()

@@ -13,7 +13,9 @@
 //! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear|tech> [--deep] [--out DIR]
 //! polygen config   --file job.toml [--set key=value ...]
 //! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR] [--threads-strict]
-//! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR]
+//! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR] [--state DIR]
+//!                  [--auth-token TOK] [--max-conns N]
+//!                  [--worker --coordinator URL [--public-addr ADDR]]
 //! ```
 //!
 //! `--lub auto` (optionally with `--objective area|delay|area_delay`)
@@ -328,25 +330,60 @@ fn run() -> Result<(), String> {
         }
         "serve" => {
             // The HTTP/JSON front-end over polygen::service (wire format
-            // in DESIGN.md §Service): POST /jobs, GET /jobs[/:id[/result]],
-            // DELETE /jobs/:id. `--port 0` binds an ephemeral port (the
-            // actual one is printed).
+            // in DESIGN.md §Service / §Cluster): POST /jobs, GET
+            // /jobs[/:id[/result]], DELETE /jobs/:id, plus the worker and
+            // shard endpoints. `--port 0` binds an ephemeral port (the
+            // actual one is printed). `--state DIR` makes the registry
+            // durable; `--worker --coordinator URL` additionally
+            // registers this listener as a shard worker there.
             let addr = args.get("addr").unwrap_or("127.0.0.1");
             let port = args.u32_or("port", 7878);
             let jobs = args.u32_or(
                 "jobs",
                 std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(4),
             ) as usize;
+            let token = args.get("auth-token").map(str::to_string);
             let mut builder = polygen::service::Service::builder().workers(jobs);
             if let Some(dir) = args.get("cache") {
                 builder = builder.cache_dir(dir);
+            }
+            if let Some(dir) = args.get("state") {
+                builder = builder.state_dir(dir);
+            }
+            if let Some(tok) = &token {
+                builder = builder.auth_token(tok.clone());
             }
             let svc = builder.build();
             let listener = std::net::TcpListener::bind(format!("{addr}:{port}"))
                 .map_err(|e| format!("bind {addr}:{port}: {e}"))?;
             let local = listener.local_addr().map_err(|e| e.to_string())?;
-            println!("polygen service listening on http://{local} ({jobs} concurrent jobs)");
-            polygen::service::http::serve(svc, listener);
+            let opts = polygen::service::http::HttpOptions {
+                auth_token: token.clone(),
+                max_conns: args.u32_or("max-conns", 0) as usize,
+            };
+            if args.has("worker") {
+                let coordinator = args
+                    .get("coordinator")
+                    .ok_or("--worker requires --coordinator URL")?
+                    .to_string();
+                // Workers usually bind 0.0.0.0 (or port 0); --public-addr
+                // is the address the coordinator should dial back.
+                let my_addr = args
+                    .get("public-addr")
+                    .map(str::to_string)
+                    .unwrap_or_else(|| local.to_string());
+                println!(
+                    "polygen worker listening on http://{local} (coordinator: {coordinator})"
+                );
+                let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+                let _agent =
+                    polygen::service::run_worker_agent(coordinator, my_addr, token, stop);
+            } else {
+                println!(
+                    "polygen service listening on http://{local} ({jobs} concurrent jobs)"
+                );
+            }
+            polygen::service::http::serve_with(svc, listener, opts);
             Ok(())
         }
         "batch" => {

@@ -137,12 +137,27 @@ impl JobSpec {
         cache: Option<&Path>,
         ctrl: Option<Arc<JobCtrl>>,
     ) -> Result<JobResult, PipelineError> {
+        self.run_serviced(cache, ctrl, None)
+    }
+
+    /// [`JobSpec::run_controlled`] plus an optional generation backend
+    /// override — the service layer passes its cluster here so fixed-`R`
+    /// generation can be sharded across registered workers.
+    pub(crate) fn run_serviced(
+        &self,
+        cache: Option<&Path>,
+        ctrl: Option<Arc<JobCtrl>>,
+        generator: Option<Arc<dyn crate::pipeline::Generator>>,
+    ) -> Result<JobResult, PipelineError> {
         let mut p = self.to_pipeline();
         if let Some(dir) = cache {
             p = p.cache_dir(dir);
         }
         if let Some(c) = ctrl {
             p = p.control(c);
+        }
+        if let Some(g) = generator {
+            p = p.generator(g);
         }
         let synthesized = p.prepare()?.generate()?.explore()?.synthesize();
         if self.verify {

@@ -156,6 +156,32 @@ impl Phase {
     }
 }
 
+/// A pluggable generation backend for the fixed-`R` generate phase.
+/// The one production implementation lives in `service::cluster`: it
+/// shards the region range across registered workers. Returning `None`
+/// means "not applicable here" (e.g. no live workers) and falls the
+/// pipeline back to local generation; `Some(result)` is authoritative.
+pub(crate) trait Generator: Send + Sync {
+    fn generate(
+        &self,
+        bt: &BoundTable,
+        opts: &GenOptions,
+        cancel: Option<&CancelToken>,
+        ticks: Option<&Progress>,
+    ) -> Option<Result<DesignSpace, GenError>>;
+}
+
+/// [`Settings`]-storable wrapper for an optional [`Generator`]:
+/// `Settings` derives `Clone + Debug`, and trait objects have neither.
+#[derive(Clone, Default)]
+pub(crate) struct GenHook(Option<Arc<dyn Generator>>);
+
+impl std::fmt::Debug for GenHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "GenHook(installed)" } else { "GenHook(none)" })
+    }
+}
+
 /// Shared control block for one controlled pipeline run: a cooperative
 /// [`CancelToken`], a [`Progress`] counter, and the current [`Phase`].
 ///
@@ -173,11 +199,15 @@ impl Phase {
 ///   the pool stays reusable.
 /// - **Progress.** During [`Phase::Generate`] the counter holds
 ///   `(regions analyzed, regions total)` for a fixed-`R` job and
-///   `(sweep points done, points total)` for an auto-LUB job.
+///   `(sweep points done, points total)` for an auto-LUB job. Auto-LUB
+///   jobs additionally expose a second level through [`JobCtrl::sub`]:
+///   `(regions analyzed, regions total)` summed across the whole sweep,
+///   so the long first points of a 16-bit sweep are visibly advancing.
 #[derive(Debug, Default)]
 pub struct JobCtrl {
     cancel: CancelToken,
     progress: Progress,
+    sub: Progress,
     phase: AtomicU8,
 }
 
@@ -203,6 +233,19 @@ impl JobCtrl {
     /// `(done, total)` within the current phase's counted unit.
     pub fn progress(&self) -> (usize, usize) {
         self.progress.get()
+    }
+
+    /// Second-level `(done, total)` progress, when the run reports one:
+    /// for an auto-LUB job's generate phase this counts regions analyzed
+    /// across the whole sweep underneath the per-point top level. `None`
+    /// until a phase opens a sub-window.
+    pub fn sub(&self) -> Option<(usize, usize)> {
+        let (done, total) = self.sub.get();
+        if total == 0 {
+            None
+        } else {
+            Some((done, total))
+        }
     }
 
     /// The underlying token, for threading into lower layers.
@@ -246,6 +289,8 @@ struct Settings {
     sweep_range: Option<Vec<u32>>,
     /// Cancellation/progress control block for this run (service jobs).
     ctrl: Option<Arc<JobCtrl>>,
+    /// Optional generation backend override (the service's cluster).
+    generator: GenHook,
 }
 
 impl Default for Settings {
@@ -267,6 +312,7 @@ impl Default for Settings {
             testbench: false,
             sweep_range: None,
             ctrl: None,
+            generator: GenHook::default(),
         }
     }
 }
@@ -324,6 +370,10 @@ impl Settings {
 
     fn progress_counter(&self) -> Option<&Progress> {
         self.ctrl.as_deref().map(|c| &c.progress)
+    }
+
+    fn sub_counter(&self) -> Option<&Progress> {
+        self.ctrl.as_deref().map(|c| &c.sub)
     }
 }
 
@@ -463,6 +513,15 @@ impl Pipeline {
         self
     }
 
+    /// Install a generation backend override. Consulted by the fixed-`R`
+    /// generate stage for built-in workloads only (a custom function's
+    /// name cannot be resolved by a remote worker); a `None` from the
+    /// hook falls back to the local path.
+    pub(crate) fn generator(mut self, g: Arc<dyn Generator>) -> Self {
+        self.settings.generator = GenHook(Some(g));
+        self
+    }
+
     /// Stage 1: resolve the function and build its bound table.
     pub fn prepare(self) -> Result<Prepared, PipelineError> {
         let Pipeline { source, settings } = self;
@@ -552,21 +611,39 @@ impl Prepared {
             LookupBits::Fixed(r) => {
                 let opts = settings.gen_opts(r);
                 let t0 = Instant::now();
-                let space = match cache {
-                    Some(dir) => generate_cached_ctrl(
-                        &workload,
-                        r,
-                        &opts,
-                        dir,
-                        settings.cancel_token(),
-                        settings.progress_counter(),
-                    ),
-                    None => generate_ctrl(
+                // One region-count window for whichever backend runs:
+                // the cluster hook and the cache probe tick/add against
+                // it without re-opening it.
+                if let Some(p) = settings.progress_counter() {
+                    p.begin(1usize << r);
+                }
+                let hook = if cacheable { settings.generator.0.as_deref() } else { None };
+                let remote = hook.and_then(|g| {
+                    g.generate(
                         &workload.bt,
                         &opts,
                         settings.cancel_token(),
                         settings.progress_counter(),
-                    ),
+                    )
+                });
+                let space = match remote {
+                    Some(result) => result,
+                    None => match cache {
+                        Some(dir) => generate_cached_ctrl(
+                            &workload,
+                            r,
+                            &opts,
+                            dir,
+                            settings.cancel_token(),
+                            settings.progress_counter(),
+                        ),
+                        None => generate_ctrl(
+                            &workload.bt,
+                            &opts,
+                            settings.cancel_token(),
+                            settings.progress_counter(),
+                        ),
+                    },
                 };
                 let gen_time = t0.elapsed();
                 let space = space.map_err(|source| match source {
@@ -590,6 +667,7 @@ impl Prepared {
                         cache,
                         token,
                         settings.progress_counter(),
+                        settings.sub_counter(),
                     ),
                     None => sweep_lub_cached(
                         &workload,
@@ -651,13 +729,24 @@ impl Spaced {
         settings.checkpoint(Phase::Explore)?;
         let implementation = match preselected {
             Some(im) => im,
-            None => crate::dse::explore(&workload.bt, &space, &settings.dse_opts()).ok_or_else(
-                || PipelineError::DseExhausted {
+            None => {
+                let im = crate::dse::explore_ctrl(
+                    &workload.bt,
+                    &space,
+                    &settings.dse_opts(),
+                    settings.cancel_token(),
+                );
+                // A cancelled procedure bails out with `None`; report it
+                // as a cancellation, not an exhausted space.
+                if settings.ctrl.as_deref().is_some_and(JobCtrl::is_cancelled) {
+                    return Err(PipelineError::Cancelled);
+                }
+                im.ok_or_else(|| PipelineError::DseExhausted {
                     func: workload.bt.func.clone(),
                     lookup_bits: space.lookup_bits,
                     degree: settings.degree,
-                },
-            )?,
+                })?
+            }
         };
         Ok(Explored { settings, workload, space, gen_time, implementation })
     }

@@ -101,6 +101,12 @@ impl Progress {
         self.done.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` completed work items at once (e.g. a cache hit or a
+    /// remote shard covering many regions).
+    pub fn add(&self, n: usize) {
+        self.done.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// `(done, total)` as last observed.
     pub fn get(&self) -> (usize, usize) {
         (self.done.load(Ordering::Relaxed), self.total.load(Ordering::Relaxed))

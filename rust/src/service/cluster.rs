@@ -1,0 +1,862 @@
+//! `polygen::cluster` — region-sharded multi-worker generation.
+//!
+//! The unit of parallelism is the region: per-region analyses are
+//! independent, and the common `k` is an associative max over the
+//! per-region minima — so one job's region range `0..2^R` splits into
+//! contiguous shards that different *processes* can analyze. This
+//! module is both halves of that protocol:
+//!
+//! - **Coordinator side** ([`Cluster`]): a heartbeat-tracked worker
+//!   registry (`POST /workers`, `POST /workers/:id/heartbeat`) and the
+//!   distributed generate driver, which assigns shards round-robin,
+//!   polls them, reassigns a dead worker's shard (heartbeat timeout or
+//!   connection failure) to a live worker — or analyzes it locally when
+//!   none is left — and merges the returned per-region entry lists. The
+//!   merged space is **byte-identical to single-node generation**: the
+//!   pure shard algebra lives in [`crate::designspace`]
+//!   ([`analyze_shard`]/[`sweep_shard`]/[`merge_shard_spaces`]) and is
+//!   property-tested there across shard counts and boundaries.
+//! - **Worker side** ([`ShardServer`]): an async shard state machine
+//!   behind `POST /shards` (spec TOML + `[shard] lo/hi` → analyze in a
+//!   background thread), `GET /shards/:id` (flat JSON status carrying
+//!   `min_k`/`dd_evals` or the structured [`GenError`]),
+//!   `POST /shards/:id/sweep` (sweep at the cluster-wide common `k`,
+//!   returning the region entries as a versioned `PGSH` binary — the
+//!   JSON layer has no arrays, and entry lists are big), and
+//!   `DELETE /shards/:id` (cooperative cancel + drop). Plus
+//!   [`run_worker_agent`]: the register/heartbeat/re-register loop
+//!   `polygen serve --worker --coordinator <url>` runs.
+//!
+//! The wire protocol is two-phase because the common `k` is global:
+//! every shard must finish analyzing before any shard can sweep. Shard
+//! requests reuse the job-file TOML grammar; binary payloads reuse the
+//! PGDS length-prefixed idiom. See DESIGN.md §Cluster.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicU64;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bounds::{builtin, BoundTable};
+use crate::designspace::region::RegionSpace;
+use crate::designspace::{
+    analyze_shard, merge_shard_spaces, shard_ranges, sweep_shard, DesignSpace, GenError,
+    GenOptions, ShardAnalysis,
+};
+use crate::pipeline::{Config, JobSpec, LookupBits, SearchStrategy};
+use crate::pool::{CancelToken, Progress};
+
+use super::http::{json_str, obj};
+
+/// How often a worker pings its coordinator, and the staleness bound
+/// after which the coordinator treats it as dead and reassigns its
+/// shard. Tests shrink the timeout through [`Cluster::new`].
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_secs(2);
+pub const DEFAULT_HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Coordinator → worker poll cadence while a shard analyzes.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+// ---------------------------------------------------------------------
+// Minimal HTTP client (the other half of service::http's server).
+
+/// Strip an `http://` scheme and trailing slash: the registry stores
+/// plain `host:port` but accepts URL spellings.
+pub(crate) fn normalize_addr(addr: &str) -> String {
+    addr.trim().trim_start_matches("http://").trim_end_matches('/').to_string()
+}
+
+/// One `Connection: close` HTTP/1.1 exchange. Returns `(status, body)`;
+/// transport-level failures are `Err` (the coordinator's dead-worker
+/// signal).
+pub(crate) fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    auth: Option<&str>,
+) -> Result<(u16, Vec<u8>), String> {
+    let addr = normalize_addr(addr);
+    let mut stream = TcpStream::connect(&addr).map_err(|e| format!("{addr}: {e}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30))).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(Duration::from_secs(30))).map_err(|e| e.to_string())?;
+    let auth_line = match auth {
+        Some(tok) => format!("Authorization: Bearer {tok}\r\n"),
+        None => String::new(),
+    };
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         {auth_line}Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).map_err(|e| e.to_string())?;
+    stream.write_all(body).map_err(|e| e.to_string())?;
+    stream.flush().map_err(|e| e.to_string())?;
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let code: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| format!("bad status line {line:?}"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.trim().parse().map_err(|_| "bad content-length")?);
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+        }
+        None => {
+            reader.read_to_end(&mut body).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok((code, body))
+}
+
+/// Extract `"key":<number>` from a flat JSON object (the coordinator
+/// reads only scalar fields off the wire).
+pub(crate) fn json_u64(body: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat)? + pat.len();
+    let rest = &body[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract `"key":"value"` from a flat JSON object (values here are
+/// labels — never escaped).
+pub(crate) fn json_field<'a>(body: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let at = body.find(&pat)? + pat.len();
+    let rest = &body[at..];
+    Some(&rest[..rest.find('"')?])
+}
+
+// ---------------------------------------------------------------------
+// Shard request wire format (TOML, reusing the job-file grammar).
+
+fn search_label(s: SearchStrategy) -> &'static str {
+    match s {
+        SearchStrategy::Hull => "hull",
+        SearchStrategy::Pruned => "pruned",
+        SearchStrategy::Naive => "naive",
+    }
+}
+
+/// The `POST /shards` body: the generation-affecting spec fields plus
+/// the `[shard]` range.
+fn shard_request(bt: &BoundTable, opts: &GenOptions, lo: u64, hi: u64) -> String {
+    format!(
+        "func = {}\nbits = {}\naccuracy = {}\n\n[generate]\nlookup_bits = {}\n\
+         search = {}\nmax_k = {}\nthreads = {}\n\n[shard]\nlo = {lo}\nhi = {hi}\n",
+        bt.func,
+        bt.in_bits,
+        bt.accuracy,
+        opts.lookup_bits,
+        search_label(opts.search),
+        opts.max_k,
+        opts.threads,
+    )
+}
+
+/// Parse a shard request back into `(bound table, options, lo, hi)`.
+fn parse_shard_request(text: &str) -> Result<(BoundTable, GenOptions, u64, u64), String> {
+    let cfg = Config::parse(text)?;
+    let spec = JobSpec::from_config(&cfg).map_err(|e| e.to_string())?;
+    let LookupBits::Fixed(lookup_bits) = spec.lookup else {
+        return Err("shard requests must pin lookup_bits".into());
+    };
+    let lo = cfg.get_u32("shard.lo")?.ok_or("missing shard.lo")? as u64;
+    let hi = cfg.get_u32("shard.hi")?.ok_or("missing shard.hi")? as u64;
+    let f = builtin(&spec.func, spec.bits)
+        .ok_or_else(|| format!("unknown function {}", spec.func))?;
+    let bt = BoundTable::build(f.as_ref(), spec.accuracy);
+    let opts = GenOptions {
+        lookup_bits,
+        search: spec.search,
+        max_k: spec.max_k,
+        threads: spec.threads,
+    };
+    if !(lo < hi && hi <= (1u64 << lookup_bits)) {
+        return Err(format!("shard {lo}..{hi} out of range for R={lookup_bits}"));
+    }
+    Ok((bt, opts, lo, hi))
+}
+
+// ---------------------------------------------------------------------
+// PGSH: the swept-shard binary (entry lists are too big for the flat
+// JSON layer; same length-prefixed little-endian idiom as PGDS).
+
+const PGSH_MAGIC: &[u8; 4] = b"PGSH";
+const PGSH_VERSION: u32 = 1;
+
+fn encode_pgsh(lo: u64, hi: u64, k: u32, dd_evals: u64, regions: &[RegionSpace]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(PGSH_MAGIC);
+    out.extend_from_slice(&PGSH_VERSION.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&hi.to_le_bytes());
+    out.extend_from_slice(&k.to_le_bytes());
+    out.extend_from_slice(&dd_evals.to_le_bytes());
+    for sp in regions {
+        out.extend_from_slice(&sp.r.to_le_bytes());
+        out.extend_from_slice(&u32::from(sp.linear_ok).to_le_bytes());
+        out.extend_from_slice(&(sp.entries.len() as u32).to_le_bytes());
+        for e in &sp.entries {
+            out.extend_from_slice(&e.a.to_le_bytes());
+            out.extend_from_slice(&e.b_lo.to_le_bytes());
+            out.extend_from_slice(&e.b_hi.to_le_bytes());
+        }
+    }
+    out
+}
+
+struct Pgsh {
+    lo: u64,
+    hi: u64,
+    k: u32,
+    dd_evals: u64,
+    regions: Vec<RegionSpace>,
+}
+
+fn decode_pgsh(bytes: &[u8]) -> Option<Pgsh> {
+    use crate::designspace::region::AbEntry;
+    fn take<'a>(b: &mut &'a [u8], n: usize) -> Option<&'a [u8]> {
+        if b.len() < n {
+            return None;
+        }
+        let (head, tail) = b.split_at(n);
+        *b = tail;
+        Some(head)
+    }
+    fn r_u32(b: &mut &[u8]) -> Option<u32> {
+        take(b, 4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn r_u64(b: &mut &[u8]) -> Option<u64> {
+        take(b, 8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn r_i64(b: &mut &[u8]) -> Option<i64> {
+        take(b, 8).map(|s| i64::from_le_bytes(s.try_into().unwrap()))
+    }
+    let mut b = bytes;
+    if take(&mut b, 4)? != PGSH_MAGIC || r_u32(&mut b)? != PGSH_VERSION {
+        return None;
+    }
+    let lo = r_u64(&mut b)?;
+    let hi = r_u64(&mut b)?;
+    let k = r_u32(&mut b)?;
+    let dd_evals = r_u64(&mut b)?;
+    if hi <= lo {
+        return None;
+    }
+    let mut regions = Vec::with_capacity((hi - lo) as usize);
+    for _ in lo..hi {
+        let r = r_u64(&mut b)?;
+        let linear_ok = match r_u32(&mut b)? {
+            0 => false,
+            1 => true,
+            _ => return None,
+        };
+        let nent = r_u32(&mut b)? as usize;
+        let mut entries = Vec::with_capacity(nent);
+        for _ in 0..nent {
+            let a = r_i64(&mut b)?;
+            let b_lo = r_i64(&mut b)?;
+            let b_hi = r_i64(&mut b)?;
+            entries.push(AbEntry { a, b_lo, b_hi });
+        }
+        regions.push(RegionSpace { r, k, entries, linear_ok });
+    }
+    if !b.is_empty() {
+        return None;
+    }
+    Some(Pgsh { lo, hi, k, dd_evals, regions })
+}
+
+// ---------------------------------------------------------------------
+// Worker side: the shard state machine.
+
+enum ShardState {
+    Analyzing,
+    Analyzed(ShardAnalysis),
+    Failed(GenError),
+}
+
+struct ShardEntry {
+    cancel: CancelToken,
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+/// The worker-side shard registry every service carries (any `polygen
+/// serve` instance can take shard work; it only does when a coordinator
+/// sends some).
+#[derive(Default)]
+pub(crate) struct ShardServer {
+    next_id: AtomicU64,
+    shards: Mutex<BTreeMap<u64, Arc<ShardEntry>>>,
+}
+
+impl ShardServer {
+    /// `POST /shards`: parse, spawn the analysis, return the shard id.
+    pub fn start(&self, body: &str) -> Result<u64, String> {
+        let (bt, opts, lo, hi) = parse_shard_request(body)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let entry = Arc::new(ShardEntry {
+            cancel: CancelToken::new(),
+            state: Mutex::new(ShardState::Analyzing),
+            cv: Condvar::new(),
+        });
+        self.shards.lock().unwrap().insert(id, Arc::clone(&entry));
+        let worker = Arc::clone(&entry);
+        let spawned = std::thread::Builder::new()
+            .name(format!("polygen-shard-{id}"))
+            .spawn(move || {
+                let result = analyze_shard(&bt, &opts, lo, hi, Some(&worker.cancel));
+                let mut st = worker.state.lock().unwrap();
+                *st = match result {
+                    Ok(sa) => ShardState::Analyzed(sa),
+                    Err(e) => ShardState::Failed(e),
+                };
+                drop(st);
+                worker.cv.notify_all();
+            })
+            .is_ok();
+        if !spawned {
+            // Thread exhaustion: analyze inline rather than leaving the
+            // shard parked in Analyzing forever.
+            let result = analyze_shard(&bt, &opts, lo, hi, Some(&entry.cancel));
+            let mut st = entry.state.lock().unwrap();
+            *st = match result {
+                Ok(sa) => ShardState::Analyzed(sa),
+                Err(e) => ShardState::Failed(e),
+            };
+        }
+        Ok(id)
+    }
+
+    /// `GET /shards/:id`: flat-scalar status JSON.
+    pub fn status_json(&self, id: u64) -> Option<String> {
+        let entry = self.shards.lock().unwrap().get(&id).cloned()?;
+        let st = entry.state.lock().unwrap();
+        let body = match &*st {
+            ShardState::Analyzing => {
+                obj([("id", id.to_string()), ("state", json_str("analyzing"))])
+            }
+            ShardState::Analyzed(sa) => obj([
+                ("id", id.to_string()),
+                ("state", json_str("analyzed")),
+                ("min_k", sa.min_k.to_string()),
+                ("dd_evals", sa.dd_evals.to_string()),
+            ]),
+            ShardState::Failed(e) => {
+                let mut fields = vec![("id", id.to_string()), ("state", json_str("failed"))];
+                match e {
+                    GenError::InfeasibleRegion { r } => {
+                        fields.push(("kind", json_str("infeasible")));
+                        fields.push(("region", r.to_string()));
+                    }
+                    GenError::KExhausted { r, max_k } => {
+                        fields.push(("kind", json_str("k_exhausted")));
+                        fields.push(("region", r.to_string()));
+                        fields.push(("max_k", max_k.to_string()));
+                    }
+                    GenError::Cancelled => fields.push(("kind", json_str("cancelled"))),
+                }
+                obj(fields)
+            }
+        };
+        Some(body)
+    }
+
+    /// `POST /shards/:id/sweep` (body `k = <common k>`): block until the
+    /// analysis lands, then sweep and encode. Errors are
+    /// `(status, json)` pairs ready for the HTTP layer.
+    pub fn sweep(&self, id: u64, body: &str) -> Result<Vec<u8>, (u16, String)> {
+        let bad = |m: &str| (400u16, obj([("error", json_str(m))]));
+        let k = Config::parse(body)
+            .and_then(|c| c.get_u32("k")?.ok_or_else(|| "missing k".into()))
+            .map_err(|e| bad(&e))?;
+        let entry = self
+            .shards
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or((404, obj([("error", json_str("no such shard"))])))?;
+        let mut st = entry.state.lock().unwrap();
+        loop {
+            match &*st {
+                ShardState::Analyzing => st = entry.cv.wait(st).unwrap(),
+                ShardState::Failed(_) => {
+                    return Err((409, obj([("error", json_str("shard failed"))])))
+                }
+                ShardState::Analyzed(sa) => {
+                    if k < sa.min_k {
+                        return Err(bad(&format!("k={k} below shard minimum {}", sa.min_k)));
+                    }
+                    let regions = sweep_shard(sa, k);
+                    return Ok(encode_pgsh(sa.lo, sa.hi, k, sa.dd_evals, &regions));
+                }
+            }
+        }
+    }
+
+    /// `DELETE /shards/:id`: cooperative cancel + unregister.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.shards.lock().unwrap().remove(&id) {
+            Some(e) => {
+                e.cancel.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side.
+
+struct WorkerInfo {
+    addr: String,
+    last_seen: Instant,
+}
+
+/// The coordinator's worker registry + distributed generate driver.
+pub(crate) struct Cluster {
+    next_id: AtomicU64,
+    workers: Mutex<BTreeMap<u64, WorkerInfo>>,
+    timeout: Duration,
+    auth: Mutex<Option<String>>,
+}
+
+impl Cluster {
+    pub fn new(timeout: Duration) -> Cluster {
+        Cluster {
+            next_id: AtomicU64::new(0),
+            workers: Mutex::new(BTreeMap::new()),
+            timeout,
+            auth: Mutex::new(None),
+        }
+    }
+
+    /// Token forwarded on coordinator → worker calls (the cluster shares
+    /// one `--auth-token`).
+    pub fn set_auth(&self, token: Option<String>) {
+        *self.auth.lock().unwrap() = token;
+    }
+
+    fn auth(&self) -> Option<String> {
+        self.auth.lock().unwrap().clone()
+    }
+
+    /// `POST /workers`: register (or re-register) a worker by address.
+    /// Re-registering an address replaces the old entry, so a restarted
+    /// worker does not appear twice.
+    pub fn register(&self, addr: &str) -> u64 {
+        let addr = normalize_addr(addr);
+        let mut ws = self.workers.lock().unwrap();
+        ws.retain(|_, w| w.addr != addr);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        ws.insert(id, WorkerInfo { addr, last_seen: Instant::now() });
+        id
+    }
+
+    /// `POST /workers/:id/heartbeat` → `false` = unknown id (the worker
+    /// should re-register; the coordinator may have restarted).
+    pub fn heartbeat(&self, id: u64) -> bool {
+        match self.workers.lock().unwrap().get_mut(&id) {
+            Some(w) => {
+                w.last_seen = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Registered workers as `(id, addr, alive)`, id-ascending.
+    pub fn workers(&self) -> Vec<(u64, String, bool)> {
+        let ws = self.workers.lock().unwrap();
+        ws.iter()
+            .map(|(&id, w)| (id, w.addr.clone(), w.last_seen.elapsed() < self.timeout))
+            .collect()
+    }
+
+    fn live(&self) -> Vec<(u64, String)> {
+        self.workers()
+            .into_iter()
+            .filter_map(|(id, addr, alive)| alive.then_some((id, addr)))
+            .collect()
+    }
+
+    fn mark_dead(&self, id: u64) {
+        self.workers.lock().unwrap().remove(&id);
+    }
+
+    /// Distributed generation: shard `0..2^R` over the live workers,
+    /// merge byte-identically to single-node. `None` = no live workers
+    /// (caller falls back to the local engine); `ticks` counts analyzed
+    /// regions (no `begin` — the caller owns the progress window).
+    pub fn generate(
+        &self,
+        bt: &BoundTable,
+        opts: &GenOptions,
+        cancel: Option<&CancelToken>,
+        ticks: Option<&Progress>,
+    ) -> Option<Result<DesignSpace, GenError>> {
+        let live = self.live();
+        if live.is_empty() {
+            return None;
+        }
+        let nregions = 1u64 << opts.lookup_bits;
+        let ranges = shard_ranges(nregions, live.len());
+        Some(self.drive(bt, opts, &ranges, cancel, ticks))
+    }
+
+    fn drive(
+        &self,
+        bt: &BoundTable,
+        opts: &GenOptions,
+        ranges: &[(u64, u64)],
+        cancel: Option<&CancelToken>,
+        ticks: Option<&Progress>,
+    ) -> Result<DesignSpace, GenError> {
+        let auth = self.auth();
+        let auth = auth.as_deref();
+
+        // Assign round-robin; a worker that fails the initial POST is
+        // immediately treated as dead.
+        let mut rr = 0usize;
+        let mut slots: Vec<Slot> = ranges
+            .iter()
+            .map(|&(lo, hi)| self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks))
+            .collect();
+
+        // Poll until every slot settles, reassigning slots whose worker
+        // died mid-analysis (connection failure or heartbeat timeout).
+        loop {
+            if cancel.is_some_and(|c| c.is_cancelled()) {
+                self.release(&slot_remotes(&slots), auth);
+                return Err(GenError::Cancelled);
+            }
+            let mut pending = false;
+            for (i, &(lo, hi)) in ranges.iter().enumerate() {
+                let Slot::Remote(worker, remote) = slots[i] else { continue };
+                if !self.is_live(worker) {
+                    self.mark_dead(worker);
+                    slots[i] = self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
+                    pending |= matches!(slots[i], Slot::Remote(..));
+                    continue;
+                }
+                let polled = self.addr_of(worker).and_then(|a| {
+                    http_call(&a, "GET", &format!("/shards/{remote}"), b"", auth).ok()
+                });
+                match polled {
+                    Some((200, body)) => {
+                        let body = String::from_utf8_lossy(&body).into_owned();
+                        match json_field(&body, "state") {
+                            Some("analyzing") => pending = true,
+                            Some("analyzed") => {
+                                let min_k = json_u64(&body, "min_k").unwrap_or(0) as u32;
+                                let dd = json_u64(&body, "dd_evals").unwrap_or(0);
+                                if let Some(p) = ticks {
+                                    p.add((hi - lo) as usize);
+                                }
+                                slots[i] = Slot::RemoteDone(worker, remote, min_k, dd);
+                            }
+                            Some("failed") => {
+                                slots[i] = Slot::Failed(decode_error(&body, opts));
+                            }
+                            _ => {
+                                // Unintelligible worker: treat as dead.
+                                self.mark_dead(worker);
+                                slots[i] =
+                                    self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
+                                pending |= matches!(slots[i], Slot::Remote(..));
+                            }
+                        }
+                    }
+                    // Connection refused / timeout / non-200 (including a
+                    // worker that restarted and forgot the shard): the
+                    // worker is dead to this job — reassign.
+                    _ => {
+                        self.mark_dead(worker);
+                        slots[i] = self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
+                        pending |= matches!(slots[i], Slot::Remote(..));
+                    }
+                }
+            }
+            if !pending {
+                break;
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+
+        // Merge phase 1: the error of the failed shard with the smallest
+        // `lo` (= lowest slot index) reproduces the single-node ascending
+        // loop; otherwise the common k is the max of the shard minima.
+        for slot in &slots {
+            if let Slot::Failed(e) = slot {
+                self.release(&slot_remotes(&slots), auth);
+                return Err(e.clone());
+            }
+        }
+        let k = slots
+            .iter()
+            .map(|s| match s {
+                Slot::RemoteDone(_, _, min_k, _) => *min_k,
+                Slot::Local(sa) => sa.min_k,
+                Slot::Remote(..) | Slot::Failed(_) => 0,
+            })
+            .max()
+            .unwrap_or(0);
+
+        // Merge phase 2: sweep every shard at the common k, in region
+        // order; a worker dying here re-analyzes its shard locally
+        // (byte-identical by the shard property tests).
+        let mut regions: Vec<RegionSpace> = Vec::with_capacity(1usize << opts.lookup_bits);
+        let mut dd_evals = 0u64;
+        for (i, &(lo, hi)) in ranges.iter().enumerate() {
+            match &slots[i] {
+                Slot::Local(sa) => {
+                    dd_evals += sa.dd_evals;
+                    regions.extend(sweep_shard(sa, k));
+                }
+                Slot::RemoteDone(worker, remote, _, dd) => {
+                    let swept = self.addr_of(*worker).and_then(|addr| {
+                        let body = format!("k = {k}\n");
+                        match http_call(
+                            &addr,
+                            "POST",
+                            &format!("/shards/{remote}/sweep"),
+                            body.as_bytes(),
+                            auth,
+                        ) {
+                            Ok((200, bytes)) => decode_pgsh(&bytes)
+                                .filter(|p| p.lo == lo && p.hi == hi && p.k == k)
+                                .map(|p| (addr, p.regions)),
+                            _ => None,
+                        }
+                    });
+                    match swept {
+                        Some((addr, sw)) => {
+                            dd_evals += dd;
+                            regions.extend(sw);
+                            let _ =
+                                http_call(&addr, "DELETE", &format!("/shards/{remote}"), b"", auth);
+                        }
+                        None => {
+                            self.mark_dead(*worker);
+                            match analyze_shard(bt, opts, lo, hi, cancel) {
+                                Ok(sa) => {
+                                    dd_evals += sa.dd_evals;
+                                    regions.extend(sweep_shard(&sa, k));
+                                }
+                                Err(e) => {
+                                    self.release(&slot_remotes(&slots), auth);
+                                    return Err(e);
+                                }
+                            }
+                        }
+                    }
+                }
+                Slot::Remote(..) | Slot::Failed(_) => unreachable!("settled above"),
+            }
+        }
+        Ok(merge_shard_spaces(bt, opts, k, regions, dd_evals))
+    }
+
+    fn is_live(&self, id: u64) -> bool {
+        self.workers
+            .lock()
+            .unwrap()
+            .get(&id)
+            .is_some_and(|w| w.last_seen.elapsed() < self.timeout)
+    }
+
+    fn addr_of(&self, id: u64) -> Option<String> {
+        self.workers.lock().unwrap().get(&id).map(|w| w.addr.clone())
+    }
+
+    /// POST one shard to the next live worker (round-robin via `*rr`),
+    /// marking workers whose POST fails as dead; when no live worker
+    /// remains, analyze in-process.
+    #[allow(clippy::too_many_arguments)]
+    fn assign(
+        &self,
+        bt: &BoundTable,
+        opts: &GenOptions,
+        lo: u64,
+        hi: u64,
+        rr: &mut usize,
+        auth: Option<&str>,
+        cancel: Option<&CancelToken>,
+        ticks: Option<&Progress>,
+    ) -> Slot {
+        let body = shard_request(bt, opts, lo, hi);
+        loop {
+            let live = self.live();
+            if live.is_empty() {
+                match analyze_shard(bt, opts, lo, hi, cancel) {
+                    Ok(sa) => {
+                        if let Some(p) = ticks {
+                            p.add((hi - lo) as usize);
+                        }
+                        return Slot::Local(sa);
+                    }
+                    Err(e) => return Slot::Failed(e),
+                }
+            }
+            let (worker, addr) = live[*rr % live.len()].clone();
+            *rr += 1;
+            match http_call(&addr, "POST", "/shards", body.as_bytes(), auth) {
+                Ok((201, resp)) => {
+                    let resp = String::from_utf8_lossy(&resp).into_owned();
+                    match json_u64(&resp, "id") {
+                        Some(remote) => return Slot::Remote(worker, remote),
+                        None => self.mark_dead(worker),
+                    }
+                }
+                _ => self.mark_dead(worker),
+            }
+        }
+    }
+
+    fn release(&self, remotes: &[(u64, u64)], auth: Option<&str>) {
+        for &(worker, remote) in remotes {
+            if let Some(addr) = self.addr_of(worker) {
+                let _ = http_call(&addr, "DELETE", &format!("/shards/{remote}"), b"", auth);
+            }
+        }
+    }
+}
+
+/// One shard's lifecycle during a distributed generate.
+enum Slot {
+    /// Assigned to `(worker id, remote shard id)`, awaiting analysis.
+    Remote(u64, u64),
+    /// Analyzed remotely: `(worker id, remote id, min_k, dd_evals)`.
+    RemoteDone(u64, u64, u32, u64),
+    /// Fallback: analyzed in-process.
+    Local(ShardAnalysis),
+    /// Failed with the single-node-identical error.
+    Failed(GenError),
+}
+
+/// Every `(worker, remote shard)` pair still held remotely — the set to
+/// release on an error path.
+fn slot_remotes(slots: &[Slot]) -> Vec<(u64, u64)> {
+    slots
+        .iter()
+        .filter_map(|s| match s {
+            Slot::Remote(w, r) | Slot::RemoteDone(w, r, _, _) => Some((*w, *r)),
+            Slot::Local(_) | Slot::Failed(_) => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Worker agent: the register/heartbeat loop `--worker` mode runs.
+
+/// Keep this process registered with `coordinator` as a worker reachable
+/// at `my_addr`, re-registering whenever the coordinator restarts or the
+/// link drops. Runs until `stop` flips. This is the background loop
+/// `polygen serve --worker` pairs with its shard-serving listener;
+/// re-exported as `polygen::service::run_worker_agent`.
+pub fn run_worker_agent(
+    coordinator: String,
+    my_addr: String,
+    auth: Option<String>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("polygen-worker-agent".into())
+        .spawn(move || {
+            let auth = auth.as_deref();
+            let mut id: Option<u64> = None;
+            while !stop.load(Ordering::Relaxed) {
+                match id {
+                    None => {
+                        let body = obj([("addr", json_str(&my_addr))]);
+                        if let Ok((200 | 201, resp)) =
+                            http_call(&coordinator, "POST", "/workers", body.as_bytes(), auth)
+                        {
+                            let resp = String::from_utf8_lossy(&resp).into_owned();
+                            id = json_u64(&resp, "id");
+                        }
+                    }
+                    Some(wid) => {
+                        let beat = http_call(
+                            &coordinator,
+                            "POST",
+                            &format!("/workers/{wid}/heartbeat"),
+                            b"",
+                            auth,
+                        );
+                        if !matches!(beat, Ok((200, _))) {
+                            // Coordinator restarted or evicted us:
+                            // re-register on the next pass.
+                            id = None;
+                        }
+                    }
+                }
+                // Sleep in short steps so `stop` is honored promptly.
+                for _ in 0..20 {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(HEARTBEAT_INTERVAL / 20);
+                }
+            }
+        })
+        .expect("spawn polygen-worker-agent")
+}
+
+/// Rebuild the exact [`GenError`] a worker reported.
+fn decode_error(body: &str, opts: &GenOptions) -> GenError {
+    match json_field(body, "kind") {
+        Some("infeasible") => {
+            GenError::InfeasibleRegion { r: json_u64(body, "region").unwrap_or(0) }
+        }
+        Some("k_exhausted") => GenError::KExhausted {
+            r: json_u64(body, "region").unwrap_or(0),
+            max_k: json_u64(body, "max_k").unwrap_or(opts.max_k as u64) as u32,
+        },
+        _ => GenError::Cancelled,
+    }
+}
+
+/// [`crate::pipeline::Generator`] adapter: routes a pipeline's fixed-R
+/// generation phase through the cluster when live workers exist,
+/// falling back to local generation (by returning `None`) otherwise.
+pub(crate) struct ClusterGenerator(pub Arc<Cluster>);
+
+impl crate::pipeline::Generator for ClusterGenerator {
+    fn generate(
+        &self,
+        bt: &BoundTable,
+        opts: &GenOptions,
+        cancel: Option<&CancelToken>,
+        ticks: Option<&Progress>,
+    ) -> Option<Result<DesignSpace, GenError>> {
+        self.0.generate(bt, opts, cancel, ticks)
+    }
+}

@@ -22,14 +22,36 @@
 //! A status object is
 //! `{"id":3,"label":"recip_16b_R8","status":"running","phase":"generate",`
 //! `"progress":{"done":37,"total":64}}` (phase/progress only while
-//! running; `"error"` when failed). `POST` accepts the exact job-file
+//! running, plus a second-level `"sub"` counter when the job reports
+//! one; `"error"` when failed). `POST` accepts the exact job-file
 //! TOML the CLI's `batch` takes, or the same keys as JSON — nested
 //! (`{"generate":{"lookup_bits":"auto"}}`) or dotted
 //! (`{"generate.lookup_bits":"auto"}`).
+//!
+//! # Cluster endpoints
+//!
+//! The same listener doubles as the cluster wire surface (see
+//! `service::cluster` for the protocol):
+//!
+//! | Method & path                 | Role        | Replies |
+//! |-------------------------------|-------------|---------|
+//! | `POST /workers`               | coordinator | `201 {"id":n}` — register a worker (`{"addr":"host:port"}`) |
+//! | `GET /workers`                | coordinator | `200` array of `{"id","addr","live"}` |
+//! | `POST /workers/:id/heartbeat` | coordinator | `200`, `404` (worker must re-register) |
+//! | `POST /shards`                | worker      | `201 {"id":n}` — start analyzing a shard (TOML body) |
+//! | `GET /shards/:id`             | worker      | `200` shard state, `404` |
+//! | `POST /shards/:id/sweep`      | worker      | `200` binary (PGSH) region entries, `400`, `409`, `404` |
+//! | `DELETE /shards/:id`          | worker      | `200`, `404` |
+//!
+//! # Hardening
+//!
+//! [`HttpOptions`] adds an optional bearer token (every request must
+//! carry `Authorization: Bearer <token>`; failures get `401`) and a cap
+//! on concurrent in-flight connections (excess gets `503` immediately).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -37,25 +59,63 @@ use std::time::Duration;
 use super::{JobEntry, JobStatus, Service};
 use crate::pipeline::{JobResult, PipelineError};
 
+/// Listener-level hardening knobs for [`serve_with`] /
+/// [`HttpServer::spawn_with`].
+#[derive(Clone, Debug, Default)]
+pub struct HttpOptions {
+    /// When set, every request must carry `Authorization: Bearer
+    /// <token>`; anything else is refused with `401`.
+    pub auth_token: Option<String>,
+    /// Cap on concurrently-served connections; excess connections are
+    /// answered `503` without touching the service. `0` = unlimited.
+    pub max_conns: usize,
+}
+
 /// Serve `service` on `listener` until the process exits (the blocking
 /// entry point `polygen serve` uses). Use [`HttpServer::spawn`] for an
 /// in-process server you can stop (tests, examples).
 pub fn serve(service: Service, listener: TcpListener) {
-    serve_until(service, listener, None);
+    serve_with(service, listener, HttpOptions::default());
 }
 
-fn serve_until(service: Service, listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
+/// [`serve`] with hardening options.
+pub fn serve_with(service: Service, listener: TcpListener, opts: HttpOptions) {
+    serve_until(service, listener, opts, None);
+}
+
+fn serve_until(
+    service: Service,
+    listener: TcpListener,
+    opts: HttpOptions,
+    stop: Option<Arc<AtomicBool>>,
+) {
+    let opts = Arc::new(opts);
+    let active = Arc::new(AtomicUsize::new(0));
     for conn in listener.incoming() {
         if stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed)) {
             return;
         }
-        let Ok(stream) = conn else { continue };
+        let Ok(mut stream) = conn else { continue };
         let svc = service.clone();
+        let opts = Arc::clone(&opts);
+        let active = Arc::clone(&active);
         // One thread per connection: connections are short (one request)
         // and job execution happens on the service's executors, so the
         // handler threads only parse and format.
         std::thread::spawn(move || {
-            let _ = handle_connection(stream, &svc);
+            // Claim a slot before parsing anything: an idle client that
+            // never sends its request still occupies a connection.
+            let claimed = active.fetch_add(1, Ordering::SeqCst) + 1;
+            if opts.max_conns != 0 && claimed > opts.max_conns {
+                let _ = respond(
+                    &mut stream,
+                    503,
+                    &obj([("error", json_str("connection limit reached"))]),
+                );
+            } else {
+                let _ = handle_connection(stream, &svc, &opts);
+            }
+            active.fetch_sub(1, Ordering::SeqCst);
         });
     }
 }
@@ -73,13 +133,22 @@ impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
     /// serve `service` on a background thread.
     pub fn spawn(service: Service, addr: &str) -> std::io::Result<HttpServer> {
+        HttpServer::spawn_with(service, addr, HttpOptions::default())
+    }
+
+    /// [`HttpServer::spawn`] with hardening options.
+    pub fn spawn_with(
+        service: Service,
+        addr: &str,
+        opts: HttpOptions,
+    ) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&stop);
         let thread = std::thread::Builder::new()
             .name("polygen-http".into())
-            .spawn(move || serve_until(service, listener, Some(flag)))?;
+            .spawn(move || serve_until(service, listener, opts, Some(flag)))?;
         Ok(HttpServer { addr, stop, thread: Some(thread) })
     }
 
@@ -100,19 +169,105 @@ impl HttpServer {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, svc: &Service) -> std::io::Result<()> {
+fn handle_connection(
+    mut stream: TcpStream,
+    svc: &Service,
+    opts: &HttpOptions,
+) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
-    let (method, path, body) = match read_request(&mut stream) {
+    let (method, path, auth, body) = match read_request(&mut stream) {
         Ok(req) => req,
         Err(e) => return respond(&mut stream, 400, &obj([("error", json_str(&e))])),
     };
+    if let Some(token) = &opts.auth_token {
+        if auth.as_deref() != Some(&format!("Bearer {token}")) {
+            return respond(&mut stream, 401, &obj([("error", json_str("unauthorized"))]));
+        }
+    }
     let segs: Vec<&str> = path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
-    let (code, body) = route(svc, &method, &segs, &body);
-    respond(&mut stream, code, &body)
+    match route(svc, &method, &segs, &body) {
+        (code, Payload::Json(body)) => respond(&mut stream, code, &body),
+        (code, Payload::Bytes(body)) => respond_bytes(&mut stream, code, &body),
+    }
 }
 
-fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, String) {
+/// A response body: JSON (everything) or raw bytes (shard sweeps, whose
+/// entry lists would be pathological as JSON — see `service::cluster`).
+enum Payload {
+    Json(String),
+    Bytes(Vec<u8>),
+}
+
+fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payload) {
+    // Cluster surface first: worker registry and shard execution.
+    match (method, segs) {
+        ("POST", ["workers"]) => {
+            let Some(addr) = super::cluster::json_field(body, "addr") else {
+                return json(400, obj([("error", json_str("missing \"addr\""))]));
+            };
+            let id = svc.cluster().register(addr);
+            return json(201, obj([("id", id.to_string())]));
+        }
+        ("GET", ["workers"]) => {
+            let items: Vec<String> = svc
+                .cluster()
+                .workers()
+                .into_iter()
+                .map(|(id, addr, live)| {
+                    obj([
+                        ("id", id.to_string()),
+                        ("addr", json_str(&addr)),
+                        ("live", live.to_string()),
+                    ])
+                })
+                .collect();
+            return json(200, format!("[{}]", items.join(",")));
+        }
+        ("POST", ["workers", id, "heartbeat"]) => {
+            return match parse_id(id).map(|id| svc.cluster().heartbeat(id)) {
+                Some(true) => json(200, obj([("ok", "true".into())])),
+                _ => json(404, obj([("error", json_str("no such worker"))])),
+            };
+        }
+        ("POST", ["shards"]) => {
+            return match svc.shards().start(body) {
+                Ok(id) => json(201, obj([("id", id.to_string())])),
+                Err(e) => json(400, obj([("error", json_str(&e))])),
+            };
+        }
+        ("GET", ["shards", id]) => {
+            return match parse_id(id).and_then(|id| svc.shards().status_json(id)) {
+                Some(body) => json(200, body),
+                None => json(404, obj([("error", json_str("no such shard"))])),
+            };
+        }
+        ("POST", ["shards", id, "sweep"]) => {
+            let Some(id) = parse_id(id) else {
+                return json(404, obj([("error", json_str("no such shard"))]));
+            };
+            return match svc.shards().sweep(id, body) {
+                Ok(bytes) => (200, Payload::Bytes(bytes)),
+                Err((code, e)) => json(code, obj([("error", json_str(&e))])),
+            };
+        }
+        ("DELETE", ["shards", id]) => {
+            return match parse_id(id).map(|id| svc.shards().cancel(id)) {
+                Some(true) => json(200, obj([("ok", "true".into())])),
+                _ => json(404, obj([("error", json_str("no such shard"))])),
+            };
+        }
+        _ => {}
+    }
+    let (code, body) = route_jobs(svc, method, segs, body);
+    json(code, body)
+}
+
+fn json(code: u16, body: String) -> (u16, Payload) {
+    (code, Payload::Json(body))
+}
+
+fn route_jobs(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, String) {
     match (method, segs) {
         ("POST", ["jobs"]) => {
             let text = body.trim();
@@ -177,13 +332,14 @@ fn result_response(entry: &Arc<JobEntry>) -> (u16, String) {
             let body = entry
                 .with_outcome(|o| match o {
                     Some(Ok(res)) => result_json(entry.id(), res),
-                    // Outcome taken by a local JobHandle (possible when
-                    // the service is driven both in-process and over
-                    // HTTP): the status is still truthful.
+                    // Outcome taken by a local JobHandle, or a pre-crash
+                    // job replayed from the log whose result predates
+                    // the content-addressed store: the status is still
+                    // truthful, the payload is just gone.
                     _ => obj([
                         ("id", entry.id().to_string()),
                         ("status", json_str("done")),
-                        ("error", json_str("result consumed by its in-process handle")),
+                        ("error", json_str("result not retained")),
                     ]),
                 })
                 .unwrap_or_default();
@@ -217,9 +373,12 @@ fn status_json(entry: &Arc<JobEntry>) -> String {
     let status = entry.status();
     fields.push(("status", json_str(status.label())));
     match &status {
-        JobStatus::Running { phase, done, total } => {
+        JobStatus::Running { phase, done, total, sub } => {
             fields.push(("phase", json_str(phase.label())));
             fields.push(("progress", format!("{{\"done\":{done},\"total\":{total}}}")));
+            if let Some((sd, st)) = sub {
+                fields.push(("sub", format!("{{\"done\":{sd},\"total\":{st}}}")));
+            }
         }
         JobStatus::Failed { error } => fields.push(("error", json_str(error))),
         _ => {}
@@ -264,13 +423,13 @@ fn fmt_f64(v: f64) -> String {
     }
 }
 
-fn obj<'a>(fields: impl IntoIterator<Item = (&'a str, String)>) -> String {
+pub(crate) fn obj<'a>(fields: impl IntoIterator<Item = (&'a str, String)>) -> String {
     let body: Vec<String> =
         fields.into_iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
     format!("{{{}}}", body.join(","))
 }
 
-fn json_str(s: &str) -> String {
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -464,7 +623,9 @@ impl JsonParser<'_> {
 // Minimal HTTP/1.1
 // ---------------------------------------------------------------------
 
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), String> {
+type Request = (String, String, Option<String>, String);
+
+fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line).map_err(|e| e.to_string())?;
@@ -472,6 +633,7 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), Stri
     let method = parts.next().ok_or("empty request line")?.to_string();
     let path = parts.next().ok_or("request line without path")?.to_string();
     let mut content_length = 0usize;
+    let mut auth: Option<String> = None;
     loop {
         let mut header = String::new();
         reader.read_line(&mut header).map_err(|e| e.to_string())?;
@@ -482,6 +644,8 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), Stri
         if let Some((k, v)) = header.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().map_err(|_| "bad content-length")?;
+            } else if k.trim().eq_ignore_ascii_case("authorization") {
+                auth = Some(v.trim().to_string());
             }
         }
     }
@@ -490,28 +654,46 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), Stri
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body).map_err(|e| e.to_string())?;
-    String::from_utf8(body).map(|b| (method, path, b)).map_err(|e| e.to_string())
+    String::from_utf8(body).map(|b| (method, path, auth, b)).map_err(|e| e.to_string())
 }
 
-fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
-    let reason = match code {
+fn reason(code: u16) -> &'static str {
+    match code {
         200 => "OK",
         201 => "Created",
         202 => "Accepted",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
         422 => "Unprocessable Entity",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
-    };
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
     let head = format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
         body.len()
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/octet-stream\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
     stream.flush()
 }
 

@@ -44,7 +44,7 @@
 //! spec.func = "log2".into();
 //! let other = svc.submit(spec); // both jobs now run concurrently
 //! while !handle.status().is_finished() {
-//!     if let JobStatus::Running { phase, done, total } = handle.status() {
+//!     if let JobStatus::Running { phase, done, total, .. } = handle.status() {
 //!         eprintln!("recip: {} {done}/{total}", phase.label());
 //!     }
 //!     std::thread::sleep(std::time::Duration::from_millis(100));
@@ -59,8 +59,23 @@
 //! A job moves `Queued → Running → (Done | Failed | Cancelled)`; the
 //! transitions are monotone and every terminal state is sticky. The
 //! service keeps finished entries in its registry so late `GET`s (and
-//! late [`JobHandle`] reads) still see them; a registry eviction policy
-//! is deliberately out of scope until a deployment needs one.
+//! late [`JobHandle`] reads) still see them. Long-lived deployments can
+//! bound the registry with [`ServiceBuilder::finished_ttl`] /
+//! [`ServiceBuilder::max_finished`]: terminal entries past the TTL or
+//! beyond the count cap are evicted (oldest first) on each submission,
+//! after which their ids answer 404 over HTTP; outstanding
+//! [`JobHandle`]s are unaffected (they own their entry).
+//!
+//! # Durability and clustering
+//!
+//! [`ServiceBuilder::state_dir`] makes the registry survive restarts: an
+//! append-only, checksummed job log (`jobs.log`, replayed on startup)
+//! plus a content-addressed result store keyed by the result-affecting
+//! spec text — a resubmitted spec completes at submit time as a store
+//! hit without touching the scheduler. The `cluster` module adds
+//! region-sharded multi-worker generation over the same HTTP surface
+//! (`polygen serve --worker --coordinator <url>`); see DESIGN.md
+//! §Cluster.
 //!
 //! Dropping the last [`Service`] clone *closes* the service: executors
 //! finish the queued backlog and exit. Outstanding [`JobHandle`]s stay
@@ -70,15 +85,22 @@
 //! job's tasks (each one observes the token and returns early), so the
 //! pool is left drained-but-reusable, never poisoned.
 
+pub(crate) mod cluster;
 pub mod http;
+pub(crate) mod store;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::pipeline::{JobCtrl, JobResult, JobSpec, Phase, PipelineError};
+use crate::pipeline::{Generator, JobCtrl, JobResult, JobSpec, Phase, PipelineError};
+
+use cluster::Cluster;
+pub use cluster::run_worker_agent;
+use store::{JobLog, LogOutcome, ResultStore};
 
 /// Observable job state. `Failed` carries the error's rendered message;
 /// the owned structured [`PipelineError`] is delivered once, by
@@ -90,7 +112,11 @@ pub enum JobStatus {
     /// An executor is driving the pipeline; `phase` is the stage it last
     /// entered and `done`/`total` count the phase's work unit (regions
     /// analyzed for fixed-`R` generation, sweep points for auto-LUB).
-    Running { phase: Phase, done: usize, total: usize },
+    /// For auto-LUB jobs `sub` is the second level: regions analyzed
+    /// across the whole sweep, so a 16-bit sweep's long first points are
+    /// visible while `done` still reads 0. `None` when the job has a
+    /// single progress level.
+    Running { phase: Phase, done: usize, total: usize, sub: Option<(usize, usize)> },
     Done,
     Failed { error: String },
     Cancelled,
@@ -128,8 +154,12 @@ enum EntryState {
     Finished {
         label: FinLabel,
         /// The owned result/error; `None` once a consuming handle
-        /// accessor extracted it. The HTTP layer only ever peeks.
+        /// accessor extracted it — or from the start for entries
+        /// replayed out of the job log without a stored result. The
+        /// HTTP layer only ever peeks.
         outcome: Option<Result<JobResult, PipelineError>>,
+        /// When the entry went terminal (eviction clock).
+        at: Instant,
     },
 }
 
@@ -160,7 +190,7 @@ impl JobEntry {
             EntryState::Queued => JobStatus::Queued,
             EntryState::Running => {
                 let (done, total) = self.ctrl.progress();
-                JobStatus::Running { phase: self.ctrl.phase(), done, total }
+                JobStatus::Running { phase: self.ctrl.phase(), done, total, sub: self.ctrl.sub() }
             }
             EntryState::Finished { label, .. } => match label {
                 FinLabel::Done => JobStatus::Done,
@@ -216,9 +246,17 @@ impl JobEntry {
 
     fn finish(&self, label: FinLabel, outcome: Result<JobResult, PipelineError>) {
         let mut st = self.state.lock().unwrap();
-        *st = EntryState::Finished { label, outcome: Some(outcome) };
+        *st = EntryState::Finished { label, outcome: Some(outcome), at: Instant::now() };
         drop(st);
         self.cv.notify_all();
+    }
+
+    /// Time since the entry went terminal (`None` while live).
+    fn finished_elapsed(&self) -> Option<Duration> {
+        match &*self.state.lock().unwrap() {
+            EntryState::Finished { at, .. } => Some(at.elapsed()),
+            _ => None,
+        }
     }
 }
 
@@ -291,10 +329,19 @@ struct ExecState {
 struct Inner {
     workers: usize,
     cache_dir: Option<PathBuf>,
+    max_finished: usize,
+    finished_ttl: Option<Duration>,
     next_id: AtomicU64,
     exec: Mutex<ExecState>,
     work_cv: Condvar,
     jobs: Mutex<BTreeMap<u64, Arc<JobEntry>>>,
+    /// Durability (present iff [`ServiceBuilder::state_dir`] was set).
+    log: Option<JobLog>,
+    store: Option<ResultStore>,
+    /// Cluster registries: every service can coordinate workers and
+    /// serve shards; both stay empty until the HTTP surface is used.
+    cluster: Arc<Cluster>,
+    shards: Arc<cluster::ShardServer>,
 }
 
 impl Inner {
@@ -323,6 +370,11 @@ impl Drop for Gate {
 pub struct ServiceBuilder {
     workers: usize,
     cache_dir: Option<PathBuf>,
+    state_dir: Option<PathBuf>,
+    max_finished: usize,
+    finished_ttl: Option<Duration>,
+    heartbeat_timeout: Duration,
+    auth_token: Option<String>,
 }
 
 impl ServiceBuilder {
@@ -342,11 +394,71 @@ impl ServiceBuilder {
         self
     }
 
+    /// Durable state directory: `dir/jobs.log` (append-only, checksummed
+    /// job log, replayed by [`ServiceBuilder::build`] so `GET /jobs/:id`
+    /// survives restarts) and `dir/results/` (content-addressed result
+    /// store; a resubmitted spec completes at submit time as a store
+    /// hit).
+    pub fn state_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.state_dir = Some(dir.into());
+        self
+    }
+
+    /// Keep at most `n` terminal jobs in the registry; older ones (by
+    /// id, i.e. submission order) are evicted on each submission and
+    /// their ids answer 404 afterwards. Default: unbounded.
+    pub fn max_finished(mut self, n: usize) -> Self {
+        self.max_finished = n;
+        self
+    }
+
+    /// Evict terminal jobs `ttl` after they finish (checked on each
+    /// submission). Default: never.
+    pub fn finished_ttl(mut self, ttl: Duration) -> Self {
+        self.finished_ttl = Some(ttl);
+        self
+    }
+
+    /// How stale a cluster worker's heartbeat may be before the
+    /// coordinator reassigns its shards (default 10s).
+    pub fn heartbeat_timeout(mut self, timeout: Duration) -> Self {
+        self.heartbeat_timeout = timeout;
+        self
+    }
+
+    /// Bearer token this service presents on its *outgoing* cluster
+    /// calls (shard dispatch to workers). The counterpart of
+    /// [`http::HttpOptions::auth_token`], which guards the incoming
+    /// side; start every node with the same `--auth-token` to close the
+    /// cluster to outsiders.
+    pub fn auth_token(mut self, token: impl Into<String>) -> Self {
+        self.auth_token = Some(token.into());
+        self
+    }
+
     pub fn build(self) -> Service {
+        let (log, store, replayed, max_id) = match &self.state_dir {
+            None => (None, None, Vec::new(), 0),
+            Some(dir) => {
+                let log_path = dir.join("jobs.log");
+                let replayed = JobLog::replay(&log_path);
+                let max_id = replayed.iter().map(|r| r.id).max().unwrap_or(0);
+                (
+                    JobLog::open(&log_path).ok(),
+                    Some(ResultStore::new(&dir.join("results"))),
+                    replayed,
+                    max_id,
+                )
+            }
+        };
+        let cluster = Arc::new(Cluster::new(self.heartbeat_timeout));
+        cluster.set_auth(self.auth_token);
         let inner = Arc::new(Inner {
             workers: self.workers,
             cache_dir: self.cache_dir,
-            next_id: AtomicU64::new(0),
+            max_finished: self.max_finished,
+            finished_ttl: self.finished_ttl,
+            next_id: AtomicU64::new(max_id),
             exec: Mutex::new(ExecState {
                 queue: VecDeque::new(),
                 spawned: 0,
@@ -355,7 +467,43 @@ impl ServiceBuilder {
             }),
             work_cv: Condvar::new(),
             jobs: Mutex::new(BTreeMap::new()),
+            log,
+            store,
+            cluster,
+            shards: Arc::new(cluster::ShardServer::default()),
         });
+        // Replay the log into the registry: every job the previous
+        // process accepted is queryable again. Done jobs reload their
+        // result from the store (absence degrades to a label-only
+        // entry); jobs interrupted mid-run report a structured failure
+        // rather than a forever-Running lie.
+        {
+            let mut jobs = inner.jobs.lock().unwrap();
+            for r in replayed {
+                let label = match &r.outcome {
+                    Some(LogOutcome::Done) => FinLabel::Done,
+                    Some(LogOutcome::Failed(e)) => FinLabel::Failed(e.clone()),
+                    Some(LogOutcome::Cancelled) => FinLabel::Cancelled,
+                    None => FinLabel::Failed("interrupted by service restart".into()),
+                };
+                let outcome = match (&r.outcome, &r.store_key, &inner.store) {
+                    (Some(LogOutcome::Done), Some(key), Some(st)) => st.load(key).map(Ok),
+                    _ => None,
+                };
+                let entry = Arc::new(JobEntry {
+                    id: r.id,
+                    spec: r.spec,
+                    ctrl: Arc::new(JobCtrl::new()),
+                    state: Mutex::new(EntryState::Finished {
+                        label,
+                        outcome,
+                        at: Instant::now(),
+                    }),
+                    cv: Condvar::new(),
+                });
+                jobs.insert(r.id, entry);
+            }
+        }
         Service { gate: Arc::new(Gate { inner: Arc::clone(&inner) }), inner }
     }
 }
@@ -381,6 +529,11 @@ impl Service {
         ServiceBuilder {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             cache_dir: None,
+            state_dir: None,
+            max_finished: usize::MAX,
+            finished_ttl: None,
+            heartbeat_timeout: cluster::DEFAULT_HEARTBEAT_TIMEOUT,
+            auth_token: None,
         }
     }
 
@@ -394,14 +547,47 @@ impl Service {
     /// [`JobSpec::threads_strict`] get their inner budget raised to the
     /// service's worker budget (donation floor).
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        self.evict_finished();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let spec = spec.donated(self.inner.workers);
+
+        // Content-addressed store hit: a spec whose result-affecting
+        // text is already stored completes *now* — the handle is born
+        // terminal and the scheduler is never touched.
+        if let Some(store) = &self.inner.store {
+            if let Some(key) = store::store_key(&spec) {
+                if let Some(res) = store.load(&key) {
+                    let entry = Arc::new(JobEntry {
+                        id,
+                        spec,
+                        ctrl: Arc::new(JobCtrl::new()),
+                        state: Mutex::new(EntryState::Finished {
+                            label: FinLabel::Done,
+                            outcome: Some(Ok(res)),
+                            at: Instant::now(),
+                        }),
+                        cv: Condvar::new(),
+                    });
+                    if let Some(log) = &self.inner.log {
+                        log.append_submit(id, &entry.spec);
+                        log.append_finish(id, &LogOutcome::Done, Some(&key));
+                    }
+                    self.inner.jobs.lock().unwrap().insert(id, Arc::clone(&entry));
+                    return JobHandle { entry };
+                }
+            }
+        }
+
         let entry = Arc::new(JobEntry {
             id,
-            spec: spec.donated(self.inner.workers),
+            spec,
             ctrl: Arc::new(JobCtrl::new()),
             state: Mutex::new(EntryState::Queued),
             cv: Condvar::new(),
         });
+        if let Some(log) = &self.inner.log {
+            log.append_submit(id, &entry.spec);
+        }
         self.inner.jobs.lock().unwrap().insert(id, Arc::clone(&entry));
         let mut ex = self.inner.exec.lock().unwrap();
         ex.queue.push_back(Arc::clone(&entry));
@@ -476,6 +662,52 @@ impl Service {
         }
     }
 
+    /// Drop terminal registry entries past the TTL / count cap (oldest
+    /// ids first). Handles keep their `Arc`, so an evicted job's owner
+    /// can still read its outcome; only id-based lookups 404.
+    fn evict_finished(&self) {
+        let cap = self.inner.max_finished;
+        let ttl = self.inner.finished_ttl;
+        if cap == usize::MAX && ttl.is_none() {
+            return;
+        }
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        if let Some(ttl) = ttl {
+            let expired: Vec<u64> = jobs
+                .iter()
+                .filter(|(_, e)| e.finished_elapsed().is_some_and(|el| el > ttl))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in expired {
+                jobs.remove(&id);
+            }
+        }
+        if cap < usize::MAX {
+            let mut finished: Vec<u64> = jobs
+                .iter()
+                .filter(|(_, e)| e.finished_elapsed().is_some())
+                .map(|(&id, _)| id)
+                .collect();
+            if finished.len() > cap {
+                finished.truncate(finished.len() - cap);
+                for id in finished {
+                    jobs.remove(&id);
+                }
+            }
+        }
+    }
+
+    /// The coordinator-side cluster registry (worker registration,
+    /// heartbeats, distributed generate) — the HTTP layer's access path.
+    pub(crate) fn cluster(&self) -> &Arc<Cluster> {
+        &self.inner.cluster
+    }
+
+    /// The worker-side shard registry — the HTTP layer's access path.
+    pub(crate) fn shards(&self) -> &Arc<cluster::ShardServer> {
+        &self.inner.shards
+    }
+
     pub(crate) fn entry(&self, id: u64) -> Option<Arc<JobEntry>> {
         self.inner.jobs.lock().unwrap().get(&id).cloned()
     }
@@ -534,6 +766,9 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
             // Cancelled while queued: settle without touching the
             // pipeline at all.
             drop(st);
+            if let Some(log) = &inner.log {
+                log.append_finish(entry.id, &LogOutcome::Cancelled, None);
+            }
             entry.finish(FinLabel::Cancelled, Err(PipelineError::Cancelled));
             return;
         }
@@ -541,11 +776,19 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
     }
     let cache = inner.cache_dir.as_deref();
     let ctrl = Arc::clone(&entry.ctrl);
+    // Fixed-R generation consults the cluster first: with live workers
+    // registered the region range is sharded across them (merging
+    // byte-identically); with none the hook declines and the local
+    // engine runs exactly as before.
+    let generator: Arc<dyn Generator> =
+        Arc::new(cluster::ClusterGenerator(Arc::clone(&inner.cluster)));
     // A panicking stage must fail the job, not kill the executor (the
     // scheduler already forwards task panics to the submitting thread —
     // which is us). AssertUnwindSafe: the pipeline owns all its state
     // and nothing of ours is observable after the catch.
-    let run = catch_unwind(AssertUnwindSafe(|| entry.spec.run_controlled(cache, Some(ctrl))));
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        entry.spec.run_serviced(cache, Some(ctrl), Some(generator))
+    }));
     let (label, outcome) = match run {
         // A cancel that races the run's completion still wins — even on
         // paths with no checkpoint after their last phase (fixed-R with
@@ -568,6 +811,27 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
             (FinLabel::Failed(format!("panic: {msg}")), Err(PipelineError::Panic(msg)))
         }
     };
+    // Durability: persist the result (content-addressed), then the
+    // terminal log record, then publish — so any state a restarted
+    // service replays is backed by what is already on disk.
+    let store_key = match (&outcome, &inner.store) {
+        (Ok(res), Some(store)) => match store::store_key(&entry.spec) {
+            Some(key) => {
+                store.save(&key, res);
+                Some(key)
+            }
+            None => None,
+        },
+        _ => None,
+    };
+    if let Some(log) = &inner.log {
+        let logged = match &label {
+            FinLabel::Done => LogOutcome::Done,
+            FinLabel::Failed(e) => LogOutcome::Failed(e.clone()),
+            FinLabel::Cancelled => LogOutcome::Cancelled,
+        };
+        log.append_finish(entry.id, &logged, store_key.as_deref());
+    }
     entry.finish(label, outcome);
 }
 
@@ -599,7 +863,10 @@ mod tests {
         let svc = Service::builder().workers(1).build();
         let ok = svc.submit(quick_spec("recip"));
         let bad = svc.submit(quick_spec("tan")); // unknown function
-        assert!(matches!(ok.status(), JobStatus::Queued | JobStatus::Running { .. } | JobStatus::Done));
+        assert!(matches!(
+            ok.status(),
+            JobStatus::Queued | JobStatus::Running { .. } | JobStatus::Done
+        ));
         let result = ok.wait();
         assert!(result.is_ok());
         svc.drain();
@@ -661,6 +928,32 @@ mod tests {
         let jobs = svc.jobs();
         assert_eq!(jobs.len(), 2);
         assert!(jobs.iter().all(|(_, _, s)| *s == JobStatus::Done));
+    }
+
+    #[test]
+    fn interrupted_log_records_replay_as_failed() {
+        // A submit record with no finish record is what a crash leaves
+        // behind; the replayed entry must settle as a structured failure
+        // (never a forever-Running lie) and the id counter must resume
+        // past it.
+        let dir = std::env::temp_dir()
+            .join(format!("polygen_svc_interrupt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let log = JobLog::open(&dir.join("jobs.log")).expect("open log");
+            log.append_submit(7, &quick_spec("recip"));
+        }
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        match svc.status_of(7) {
+            Some(JobStatus::Failed { error }) => {
+                assert!(error.contains("interrupted"), "{error}")
+            }
+            other => panic!("expected interrupted Failed, got {other:?}"),
+        }
+        let handle = svc.submit(quick_spec("recip"));
+        assert!(handle.id() > 7, "id counter must resume past replayed ids");
+        assert!(handle.wait().is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

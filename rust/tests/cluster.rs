@@ -1,0 +1,377 @@
+//! End-to-end cluster tests: sharded multi-worker generation over real
+//! TCP (byte-identical to single-node), dead-worker shard reassignment,
+//! restart replay of the durable job log, the content-addressed store
+//! fast path, registry eviction, and the listener hardening knobs
+//! (bearer auth, connection cap).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use polygen::pipeline::{JobSpec, LookupBits};
+use polygen::service::http::{HttpOptions, HttpServer};
+use polygen::service::{JobStatus, Service};
+
+fn quick_spec(func: &str) -> JobSpec {
+    let mut s = JobSpec::new(func, 8);
+    s.lookup = LookupBits::Fixed(4);
+    s
+}
+
+/// A fresh scratch directory under the system temp dir.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("polygen_cluster_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// One-shot HTTP/1.1 exchange returning the raw body bytes (shard sweeps
+/// answer binary PGSH payloads).
+fn http_bytes(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    auth: Option<&str>,
+) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let auth_line = match auth {
+        Some(tok) => format!("Authorization: Bearer {tok}\r\n"),
+        None => String::new(),
+    };
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n{auth_line}\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("server closes after one response");
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header terminator in {raw:?}"));
+    let head = String::from_utf8_lossy(&raw[..header_end]).into_owned();
+    let code: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad response head: {head:?}"));
+    (code, raw[header_end + 4..].to_vec())
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let (code, bytes) = http_bytes(addr, method, path, body, None);
+    (code, String::from_utf8_lossy(&bytes).into_owned())
+}
+
+/// Extract `"key":<integer>` from a flat JSON body.
+fn json_u64(body: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).unwrap_or_else(|| panic!("{key} missing in {body}"));
+    body[at + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("{key} not an integer in {body}"))
+}
+
+fn worker() -> HttpServer {
+    let svc = Service::builder().workers(1).build();
+    HttpServer::spawn(svc, "127.0.0.1:0").expect("bind worker")
+}
+
+fn register(coord: SocketAddr, worker_addr: SocketAddr) -> u64 {
+    let (code, body) =
+        http(coord, "POST", "/workers", &format!("{{\"addr\":\"{worker_addr}\"}}"));
+    assert_eq!(code, 201, "{body}");
+    json_u64(&body, "id")
+}
+
+/// A valid `POST /shards` body for a one-region probe shard; the
+/// returned id reveals how many shards the worker served before it.
+fn probe_shard_toml() -> String {
+    "func = recip\nbits = 8\naccuracy = 1ulp\n\n[generate]\nlookup_bits = 4\n\
+     search = hull\nmax_k = 30\nthreads = 1\n\n[shard]\nlo = 0\nhi = 1\n"
+        .to_string()
+}
+
+/// POST a probe shard and return how many shards the worker had already
+/// served (shard ids are monotonically assigned from 1).
+fn shards_served_before_probe(addr: SocketAddr) -> u64 {
+    let (code, body) = http(addr, "POST", "/shards", &probe_shard_toml());
+    assert_eq!(code, 201, "{body}");
+    let id = json_u64(&body, "id");
+    let (code, _) = http(addr, "DELETE", &format!("/shards/{id}"), "");
+    assert_eq!(code, 200);
+    id - 1
+}
+
+#[test]
+fn sharded_generation_matches_single_node() {
+    let coord_svc = Service::builder().workers(2).build();
+    let coord = HttpServer::spawn(coord_svc.clone(), "127.0.0.1:0").expect("bind coordinator");
+    let (w1, w2) = (worker(), worker());
+    register(coord.addr(), w1.addr());
+    register(coord.addr(), w2.addr());
+
+    // Both workers are listed live.
+    let (code, list) = http(coord.addr(), "GET", "/workers", "");
+    assert_eq!(code, 200);
+    assert!(list.contains(&w1.addr().to_string()), "{list}");
+    assert!(list.contains(&w2.addr().to_string()), "{list}");
+    assert_eq!(list.matches("\"live\":true").count(), 2, "{list}");
+
+    // The same spec through the cluster and single-node must agree
+    // exactly (the merged space is byte-identical, so the downstream
+    // DSE/synthesis sees identical inputs).
+    let spec = quick_spec("recip");
+    let via_cluster = coord_svc.submit(spec.clone()).wait().expect("recip 8b R=4 feasible");
+    let direct = spec.run().expect("direct run feasible");
+    assert_eq!(via_cluster.lookup_bits, direct.lookup_bits);
+    assert_eq!(via_cluster.implementation.k, direct.implementation.k);
+    assert_eq!(via_cluster.implementation.coeffs, direct.implementation.coeffs);
+    assert_eq!(via_cluster.synth.delay_ns, direct.synth.delay_ns);
+    assert_eq!(via_cluster.synth.area_um2, direct.synth.area_um2);
+
+    // The work was actually distributed: each worker served one shard.
+    let served = shards_served_before_probe(w1.addr()) + shards_served_before_probe(w2.addr());
+    assert!(served >= 2, "expected both workers to have served shards, saw {served}");
+
+    w1.stop();
+    w2.stop();
+    coord.stop();
+}
+
+#[test]
+fn dead_worker_shard_is_reassigned_and_job_completes() {
+    let coord_svc = Service::builder()
+        .workers(1)
+        .heartbeat_timeout(Duration::from_millis(500))
+        .build();
+    let coord = HttpServer::spawn(coord_svc.clone(), "127.0.0.1:0").expect("bind coordinator");
+    let (dead, live) = (worker(), worker());
+    let dead_addr = dead.addr();
+    register(coord.addr(), dead_addr);
+    register(coord.addr(), live.addr());
+    // Kill one worker after registration: its shard POST fails and the
+    // coordinator must reassign the shard to the surviving worker.
+    dead.stop();
+
+    let spec = quick_spec("log2");
+    let via_cluster = coord_svc.submit(spec.clone()).wait().expect("job survives dead worker");
+    let direct = spec.run().expect("direct run feasible");
+    assert_eq!(via_cluster.implementation.coeffs, direct.implementation.coeffs);
+
+    // The dead worker was evicted from the registry; the survivor served
+    // the whole range (both shards).
+    let (code, list) = http(coord.addr(), "GET", "/workers", "");
+    assert_eq!(code, 200);
+    assert!(!list.contains(&dead_addr.to_string()), "dead worker still listed: {list}");
+    assert!(
+        shards_served_before_probe(live.addr()) >= 2,
+        "survivor should have served the reassigned shard too"
+    );
+
+    live.stop();
+    coord.stop();
+}
+
+#[test]
+fn restart_replays_log_and_store_serves_resubmission() {
+    let dir = temp_dir("replay");
+    let spec = quick_spec("recip");
+    let (id, first) = {
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        let handle = svc.submit(spec.clone());
+        let id = handle.id();
+        let first = handle.wait().expect("recip 8b R=4 feasible");
+        (id, first)
+    }; // service dropped: the "restart"
+
+    // The replayed registry still answers for the old id, over HTTP too.
+    let svc2 = Service::builder().workers(1).state_dir(&dir).build();
+    assert_eq!(svc2.status_of(id), Some(JobStatus::Done));
+    let server = HttpServer::spawn(svc2.clone(), "127.0.0.1:0").expect("bind");
+    let (code, result) = http(server.addr(), "GET", &format!("/jobs/{id}/result"), "");
+    assert_eq!(code, 200, "{result}");
+    for co in &first.implementation.coeffs {
+        let frag = format!("{{\"a\":{},\"b\":{},\"c\":{}}}", co.a, co.b, co.c);
+        assert!(result.contains(&frag), "coeff {frag} missing in replayed {result}");
+    }
+
+    // Resubmitting the same spec is a content-addressed store hit: the
+    // handle is born terminal without touching the scheduler.
+    let t0 = Instant::now();
+    let resubmitted = svc2.submit(spec.clone());
+    assert!(resubmitted.id() > id);
+    assert_eq!(resubmitted.status(), JobStatus::Done, "store hit must be instantly Done");
+    let hit = resubmitted.wait().expect("store hit yields the stored result");
+    assert!(t0.elapsed() < Duration::from_secs(1), "store hit took {:?}", t0.elapsed());
+    assert_eq!(hit.implementation.coeffs, first.implementation.coeffs);
+    assert_eq!(hit.lookup_bits, first.lookup_bits);
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn evicted_jobs_answer_404() {
+    let svc = Service::builder().workers(1).max_finished(1).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    let a = svc.submit(quick_spec("recip"));
+    let b = svc.submit(quick_spec("exp2"));
+    let (ida, idb) = (a.id(), b.id());
+    assert!(a.wait().is_ok());
+    assert!(b.wait().is_ok());
+
+    // The next submission triggers eviction: 2 terminal jobs, cap 1 —
+    // the older one goes.
+    let c = svc.submit(quick_spec("log2"));
+    assert_eq!(svc.status_of(ida), None, "oldest terminal job should be evicted");
+    assert_eq!(svc.status_of(idb), Some(JobStatus::Done), "newest stays within the cap");
+    let (code, _) = http(server.addr(), "GET", &format!("/jobs/{ida}"), "");
+    assert_eq!(code, 404);
+    let (code, _) = http(server.addr(), "GET", &format!("/jobs/{ida}/result"), "");
+    assert_eq!(code, 404);
+    let (code, _) = http(server.addr(), "GET", &format!("/jobs/{idb}"), "");
+    assert_eq!(code, 200);
+    assert!(c.wait().is_ok());
+    server.stop();
+}
+
+#[test]
+fn finished_ttl_evicts_on_submission() {
+    let svc = Service::builder()
+        .workers(1)
+        .finished_ttl(Duration::from_millis(1))
+        .build();
+    let a = svc.submit(quick_spec("recip"));
+    let ida = a.id();
+    assert!(a.wait().is_ok());
+    std::thread::sleep(Duration::from_millis(20));
+    let b = svc.submit(quick_spec("exp2"));
+    assert_eq!(svc.status_of(ida), None, "expired terminal job should be evicted");
+    assert!(b.wait().is_ok());
+}
+
+#[test]
+fn auth_token_guards_every_route() {
+    let svc = Service::builder().workers(1).build();
+    let opts = HttpOptions { auth_token: Some("s3cret".into()), max_conns: 0 };
+    let server = HttpServer::spawn_with(svc, "127.0.0.1:0", opts).expect("bind");
+
+    let (code, body) = http_bytes(server.addr(), "GET", "/jobs", "", None);
+    assert_eq!(code, 401, "{}", String::from_utf8_lossy(&body));
+    let (code, _) = http_bytes(server.addr(), "GET", "/jobs", "", Some("wrong"));
+    assert_eq!(code, 401);
+    let (code, body) = http_bytes(server.addr(), "GET", "/jobs", "", Some("s3cret"));
+    assert_eq!(code, 200);
+    assert_eq!(String::from_utf8_lossy(&body), "[]");
+
+    server.stop();
+}
+
+#[test]
+fn connection_cap_answers_503() {
+    let svc = Service::builder().workers(1).build();
+    let opts = HttpOptions { auth_token: None, max_conns: 1 };
+    let server = HttpServer::spawn_with(svc, "127.0.0.1:0", opts).expect("bind");
+
+    // An idle connection occupies the single slot without sending a
+    // request...
+    let idle = TcpStream::connect(server.addr()).expect("connect idle");
+    std::thread::sleep(Duration::from_millis(200));
+    // ...so a concurrent request is refused at the door.
+    let (code, body) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 503, "{body}");
+    assert!(body.contains("connection limit"), "{body}");
+
+    // Releasing the slot restores service.
+    drop(idle);
+    std::thread::sleep(Duration::from_millis(200));
+    let (code, _) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 200);
+
+    server.stop();
+}
+
+#[test]
+fn shard_protocol_round_trips_pgsh() {
+    let w = worker();
+
+    // Full-range single shard for recip 8b R=4.
+    let toml = "func = recip\nbits = 8\naccuracy = 1ulp\n\n[generate]\nlookup_bits = 4\n\
+                search = hull\nmax_k = 30\nthreads = 1\n\n[shard]\nlo = 0\nhi = 16\n";
+    let (code, body) = http(w.addr(), "POST", "/shards", toml);
+    assert_eq!(code, 201, "{body}");
+    let id = json_u64(&body, "id");
+
+    // Poll until analyzed, then sweep at the shard minimum.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let min_k = loop {
+        let (code, st) = http(w.addr(), "GET", &format!("/shards/{id}"), "");
+        assert_eq!(code, 200, "{st}");
+        if st.contains("\"state\":\"analyzed\"") {
+            break json_u64(&st, "min_k");
+        }
+        assert!(st.contains("\"state\":\"analyzing\""), "unexpected shard state: {st}");
+        assert!(Instant::now() < deadline, "shard never analyzed: {st}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let sweep_body = format!("k = {min_k}\n");
+    let (code, bytes) =
+        http_bytes(w.addr(), "POST", &format!("/shards/{id}/sweep"), &sweep_body, None);
+    assert_eq!(code, 200);
+    assert_eq!(&bytes[..4], b"PGSH", "sweep must answer the PGSH binary");
+
+    // A k below the shard minimum is a 400; bogus ids are 404s.
+    if min_k > 0 {
+        let (code, body) = http(w.addr(), "POST", &format!("/shards/{id}/sweep"), "k = 0\n");
+        assert_eq!(code, 400, "{body}");
+    }
+    let (code, _) = http(w.addr(), "GET", "/shards/999", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(w.addr(), "POST", "/shards/999/sweep", "k = 1\n");
+    assert_eq!(code, 404);
+
+    // Malformed shard requests are rejected up front.
+    let (code, body) = http(w.addr(), "POST", "/shards", "func = recip\nbits = 8\n");
+    assert_eq!(code, 400, "{body}");
+
+    // DELETE cancels and unregisters; a second DELETE is a 404.
+    let (code, _) = http(w.addr(), "DELETE", &format!("/shards/{id}"), "");
+    assert_eq!(code, 200);
+    let (code, _) = http(w.addr(), "GET", &format!("/shards/{id}"), "");
+    assert_eq!(code, 404);
+    let (code, _) = http(w.addr(), "DELETE", &format!("/shards/{id}"), "");
+    assert_eq!(code, 404);
+
+    w.stop();
+}
+
+#[test]
+fn worker_heartbeat_and_reregistration() {
+    let svc = Service::builder().workers(1).build();
+    let coord = HttpServer::spawn(svc, "127.0.0.1:0").expect("bind");
+
+    let id = register(coord.addr(), "127.0.0.1:9".parse().unwrap());
+    let (code, body) = http(coord.addr(), "POST", &format!("/workers/{id}/heartbeat"), "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"ok\":true"), "{body}");
+    // Unknown ids tell the worker to re-register.
+    let (code, _) = http(coord.addr(), "POST", "/workers/999/heartbeat", "");
+    assert_eq!(code, 404);
+
+    // Re-registering the same address replaces the entry (no duplicate
+    // workers after a restart).
+    let id2 = register(coord.addr(), "127.0.0.1:9".parse().unwrap());
+    assert_ne!(id, id2);
+    let (_, list) = http(coord.addr(), "GET", "/workers", "");
+    assert_eq!(list.matches("127.0.0.1:9").count(), 1, "{list}");
+
+    coord.stop();
+}
