@@ -72,6 +72,16 @@ impl Args {
     pub fn u32_or(&self, key: &str, default: u32) -> u32 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Like [`Args::u32_or`] but `u64` (byte counts, TTLs in seconds).
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Like [`Args::u32_or`] but `f64` (rates, fractional timeouts).
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +144,17 @@ mod tests {
         let a = parse(&["generate", "--bits", "many"]);
         assert_eq!(a.u32_or("bits", 10), 10, "unparsable value falls back");
         assert_eq!(a.u32_or("absent", 7), 7);
+    }
+
+    #[test]
+    fn wide_and_float_variants_parse_and_fall_back() {
+        let a = parse(&["serve", "--store-max-bytes", "1048576", "--rate-limit", "2.5"]);
+        assert_eq!(a.u64_or("store-max-bytes", 0), 1_048_576);
+        assert_eq!(a.f64_or("rate-limit", 0.0), 2.5);
+        assert_eq!(a.u64_or("absent", 9), 9);
+        assert_eq!(a.f64_or("absent", 1.5), 1.5);
+        let a = parse(&["serve", "--rate-limit", "fast"]);
+        assert_eq!(a.f64_or("rate-limit", 0.25), 0.25);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Deterministic fault injection (compiled out of release builds).
+//!
+//! Robustness claims are only as good as the failure modes they were
+//! tested against, and ad-hoc "kill a worker mid-job" tests cover a
+//! handful of interleavings at best. This module is a process-wide
+//! registry of *injection sites*: every I/O boundary of the service
+//! stack calls [`inject`] with a site name and the set of faults it
+//! knows how to express, and an armed [`FaultPlan`] answers from a
+//! seeded PRNG schedule — so a chaos test replays the exact same fault
+//! interleaving from the same seed, and a failing seed is a one-line
+//! reproduction.
+//!
+//! The whole module is gated on the `fault-injection` cargo feature.
+//! Without it every entry point is an inlineable no-op returning
+//! `None`/`0`, so production builds carry zero overhead (the bench gate
+//! verifies the default build); with it, faults only fire while a plan
+//! is armed, so even `--features fault-injection` test binaries run
+//! clean outside the chaos suite.
+//!
+//! ## Injection sites
+//!
+//! | site                | faults                          | boundary |
+//! |---------------------|---------------------------------|----------|
+//! | `cluster.call`      | `Drop`, `Delay`, `Refuse`       | every coordinator↔worker HTTP exchange |
+//! | `cluster.call.send` | `Corrupt`, `Truncate`           | outbound request body |
+//! | `cluster.call.recv` | `Corrupt`, `Truncate`           | inbound response body |
+//! | `cluster.heartbeat` | `Drop`                          | worker agent heartbeat (goes stale) |
+//! | `http.read`         | `Delay`                         | server-side request read (slow client) |
+//! | `http.respond`      | `Disconnect`                    | server-side response write (mid-response hangup) |
+//! | `store.log`         | `ShortWrite`, `Corrupt`, `FsyncFail` | `jobs.log` frame append |
+//! | `store.result`      | `ShortWrite`, `Corrupt`         | `.pgjr` result save |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One injectable failure mode. Sites pass the subset they can express
+/// to [`inject`], which picks among them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the whole operation as if the peer vanished.
+    Drop,
+    /// Stall briefly before proceeding (see [`small_delay`]).
+    Delay,
+    /// Answer with a load-shedding refusal (HTTP 503) instead of work.
+    Refuse,
+    /// Cut the payload short.
+    Truncate,
+    /// Flip one bit of the payload.
+    Corrupt,
+    /// Hang up halfway through writing a response.
+    Disconnect,
+    /// Persist only a prefix of the frame (torn write).
+    ShortWrite,
+    /// The write lands but the durability sync fails.
+    FsyncFail,
+}
+
+/// A seeded fault schedule: which sites fire, how often.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Firing probability per injection-site visit, in permille.
+    rate_permille: u32,
+    /// When set, only sites whose name starts with this prefix fire.
+    only: Option<String>,
+}
+
+impl FaultPlan {
+    /// A plan firing at 10% per site visit, all sites.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rate_permille: 100, only: None }
+    }
+
+    /// Set the per-visit firing probability (permille, clamped to 1000).
+    pub fn rate(mut self, permille: u32) -> FaultPlan {
+        self.rate_permille = permille.min(1000);
+        self
+    }
+
+    /// Restrict the plan to sites whose name starts with `prefix`
+    /// (e.g. `"cluster."` or `"store."`).
+    pub fn only(mut self, prefix: &str) -> FaultPlan {
+        self.only = Some(prefix.to_string());
+        self
+    }
+}
+
+/// True when the binary was built with the `fault-injection` feature
+/// (whether or not a plan is armed).
+pub const COMPILED: bool = cfg!(feature = "fault-injection");
+
+#[cfg(feature = "fault-injection")]
+struct Armed {
+    plan: FaultPlan,
+    rng: u64,
+}
+
+#[cfg(feature = "fault-injection")]
+static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+
+/// Total faults fired since the last [`reset_injected`] — a chaos run
+/// asserting "the system survived N faults" needs N > 0 to mean
+/// anything.
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+#[cfg(feature = "fault-injection")]
+fn draw(rng: &mut u64) -> u64 {
+    // xorshift64*: deterministic, dependency-free, good enough to
+    // scatter faults; never zero-locked because arming bias-seeds it.
+    let mut x = *rng;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *rng = x;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// Arm `plan` process-wide. Replaces any previously armed plan.
+pub fn arm(plan: FaultPlan) {
+    #[cfg(feature = "fault-injection")]
+    {
+        let rng = plan.seed | 1; // never let the xorshift state be 0
+        *ARMED.lock().unwrap() = Some(Armed { plan, rng });
+    }
+    #[cfg(not(feature = "fault-injection"))]
+    let _ = plan;
+}
+
+/// Disarm: all sites go quiet again.
+pub fn disarm() {
+    #[cfg(feature = "fault-injection")]
+    {
+        *ARMED.lock().unwrap() = None;
+    }
+}
+
+/// RAII arming: the plan disarms when the guard drops, so a panicking
+/// chaos test cannot leave faults armed for the next test.
+pub struct ArmedGuard(());
+
+impl Drop for ArmedGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// [`arm`], returning a guard that disarms on drop.
+pub fn arm_guard(plan: FaultPlan) -> ArmedGuard {
+    arm(plan);
+    ArmedGuard(())
+}
+
+/// Arm from `POLYGEN_FAULT_SEED` / `POLYGEN_FAULT_RATE` (permille) /
+/// `POLYGEN_FAULT_ONLY` when the feature is compiled in — the manual
+/// chaos knob for a `polygen serve` built with `--features
+/// fault-injection`. No-op otherwise.
+pub fn arm_from_env() {
+    #[cfg(feature = "fault-injection")]
+    {
+        let Some(seed) = std::env::var("POLYGEN_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+        else {
+            return;
+        };
+        let mut plan = FaultPlan::new(seed);
+        if let Some(rate) = std::env::var("POLYGEN_FAULT_RATE")
+            .ok()
+            .and_then(|s| s.trim().parse::<u32>().ok())
+        {
+            plan = plan.rate(rate);
+        }
+        if let Ok(prefix) = std::env::var("POLYGEN_FAULT_ONLY") {
+            if !prefix.is_empty() {
+                plan = plan.only(&prefix);
+            }
+        }
+        eprintln!("polygen: fault injection armed (seed {seed})");
+        arm(plan);
+    }
+}
+
+/// The injection point. Returns the fault `site` must now exhibit, or
+/// `None` (the overwhelmingly common answer, and the only one in
+/// default builds, where this compiles to a constant).
+#[inline]
+pub fn inject(site: &'static str, allowed: &[Fault]) -> Option<Fault> {
+    #[cfg(feature = "fault-injection")]
+    {
+        if allowed.is_empty() {
+            return None;
+        }
+        let mut g = ARMED.lock().unwrap();
+        let armed = g.as_mut()?;
+        if let Some(prefix) = &armed.plan.only {
+            if !site.starts_with(prefix.as_str()) {
+                return None;
+            }
+        }
+        let roll = draw(&mut armed.rng);
+        if (roll % 1000) as u32 >= armed.plan.rate_permille {
+            return None;
+        }
+        let pick = draw(&mut armed.rng);
+        let fault = allowed[(pick % allowed.len() as u64) as usize];
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        Some(fault)
+    }
+    #[cfg(not(feature = "fault-injection"))]
+    {
+        let _ = (site, allowed);
+        None
+    }
+}
+
+/// A deterministic index below `n` from the armed plan's PRNG — sites
+/// use it to pick *which* byte to corrupt or truncate at. Returns 0
+/// when unarmed (callers only reach this after [`inject`] fired).
+pub fn rand_below(n: usize) -> usize {
+    #[cfg(feature = "fault-injection")]
+    {
+        if n == 0 {
+            return 0;
+        }
+        let mut g = ARMED.lock().unwrap();
+        match g.as_mut() {
+            Some(armed) => (draw(&mut armed.rng) % n as u64) as usize,
+            None => 0,
+        }
+    }
+    #[cfg(not(feature = "fault-injection"))]
+    {
+        let _ = n;
+        0
+    }
+}
+
+/// Sleep 1–25 ms (drawn from the plan) — the body of a `Delay` fault.
+pub fn small_delay() {
+    let ms = 1 + rand_below(25) as u64;
+    std::thread::sleep(std::time::Duration::from_millis(ms));
+}
+
+/// Faults fired since the last [`reset_injected`].
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Zero the fired-fault counter (start of a chaos round).
+pub fn reset_injected() {
+    INJECTED.store(0, Ordering::Relaxed);
+}
+
+// `Mutex` is only used by the armed implementation; keep the import
+// warning-free in default builds.
+#[cfg(not(feature = "fault-injection"))]
+#[allow(unused)]
+fn _unused(_: &Mutex<()>) {}
+
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+
+    // The registry is process-global: serialize these tests against
+    // each other (and any chaos suite linked into the same binary).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_registry_is_silent() {
+        let _g = lock();
+        disarm();
+        reset_injected();
+        for _ in 0..100 {
+            assert_eq!(inject("cluster.call", &[Fault::Drop]), None);
+        }
+        assert_eq!(injected(), 0);
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let _g = lock();
+        let run = |seed: u64| -> Vec<Option<Fault>> {
+            let _armed = arm_guard(FaultPlan::new(seed).rate(300));
+            (0..64).map(|_| inject("store.log", &[Fault::Corrupt, Fault::ShortWrite])).collect()
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        assert_eq!(a, b, "same seed must replay identically");
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.iter().any(|f| f.is_some()), "rate 300‰ over 64 visits must fire");
+        assert!(a.iter().any(|f| f.is_none()), "rate 300‰ must not always fire");
+    }
+
+    #[test]
+    fn prefix_filter_scopes_sites() {
+        let _g = lock();
+        let _armed = arm_guard(FaultPlan::new(7).rate(1000).only("store."));
+        assert_eq!(inject("cluster.call", &[Fault::Drop]), None);
+        assert!(inject("store.log", &[Fault::Corrupt]).is_some());
+    }
+
+    #[test]
+    fn rate_1000_always_fires_and_counts() {
+        let _g = lock();
+        let _armed = arm_guard(FaultPlan::new(9).rate(1000));
+        reset_injected();
+        for _ in 0..10 {
+            assert!(inject("http.read", &[Fault::Delay]).is_some());
+        }
+        assert_eq!(injected(), 10);
+        assert!(rand_below(5) < 5);
+        assert_eq!(rand_below(0), 0);
+    }
+}

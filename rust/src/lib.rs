@@ -16,6 +16,8 @@ pub mod cli;
 pub mod coordinator;
 pub mod designspace;
 pub mod dse;
+pub mod faults;
+pub mod net;
 pub mod pipeline;
 pub mod pool;
 pub mod rtl;

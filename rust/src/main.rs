@@ -14,7 +14,9 @@
 //! polygen config   --file job.toml [--set key=value ...]
 //! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR] [--threads-strict]
 //! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR] [--state DIR]
-//!                  [--auth-token TOK] [--max-conns N]
+//!                  [--auth-token TOK] [--max-conns N] [--rate-limit R [--rate-burst B]]
+//!                  [--call-timeout SECS] [--retries N] [--breaker-threshold K]
+//!                  [--store-max-bytes BYTES] [--store-ttl SECS]
 //!                  [--worker --coordinator URL [--public-addr ADDR]]
 //! ```
 //!
@@ -343,7 +345,20 @@ fn run() -> Result<(), String> {
                 std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(4),
             ) as usize;
             let token = args.get("auth-token").map(str::to_string);
-            let mut builder = polygen::service::Service::builder().workers(jobs);
+            // No-op unless the binary was built with `--features
+            // fault-injection` AND POLYGEN_FAULT_SEED is set.
+            polygen::faults::arm_from_env();
+            let mut policy = polygen::net::Policy::default();
+            if args.has("call-timeout") {
+                let secs = args.f64_or("call-timeout", 10.0).max(0.001);
+                policy.call_timeout = std::time::Duration::from_secs_f64(secs);
+            }
+            policy.retries = args.u32_or("retries", policy.retries);
+            policy.breaker_threshold =
+                args.u32_or("breaker-threshold", policy.breaker_threshold);
+            let mut builder = polygen::service::Service::builder()
+                .workers(jobs)
+                .policy(policy.clone());
             if let Some(dir) = args.get("cache") {
                 builder = builder.cache_dir(dir);
             }
@@ -353,6 +368,13 @@ fn run() -> Result<(), String> {
             if let Some(tok) = &token {
                 builder = builder.auth_token(tok.clone());
             }
+            if args.has("store-max-bytes") {
+                builder = builder.store_max_bytes(args.u64_or("store-max-bytes", 0));
+            }
+            if args.has("store-ttl") {
+                builder = builder
+                    .store_ttl(std::time::Duration::from_secs(args.u64_or("store-ttl", 0)));
+            }
             let svc = builder.build();
             let listener = std::net::TcpListener::bind(format!("{addr}:{port}"))
                 .map_err(|e| format!("bind {addr}:{port}: {e}"))?;
@@ -360,6 +382,8 @@ fn run() -> Result<(), String> {
             let opts = polygen::service::http::HttpOptions {
                 auth_token: token.clone(),
                 max_conns: args.u32_or("max-conns", 0) as usize,
+                rate_limit: args.f64_or("rate-limit", 0.0),
+                rate_burst: args.f64_or("rate-burst", 0.0),
             };
             if args.has("worker") {
                 let coordinator = args
@@ -376,8 +400,13 @@ fn run() -> Result<(), String> {
                     "polygen worker listening on http://{local} (coordinator: {coordinator})"
                 );
                 let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-                let _agent =
-                    polygen::service::run_worker_agent(coordinator, my_addr, token, stop);
+                let _agent = polygen::service::run_worker_agent_with(
+                    coordinator,
+                    my_addr,
+                    token,
+                    stop,
+                    policy,
+                );
             } else {
                 println!(
                     "polygen service listening on http://{local} ({jobs} concurrent jobs)"

@@ -1,0 +1,413 @@
+//! Unified failure-handling policy for the cluster's network calls.
+//!
+//! PR 6's cluster hard-coded one 30 s socket timeout and treated any
+//! single failed call as a dead worker. This module centralizes the
+//! knobs that replace that: a [`Policy`] (per-attempt deadline, bounded
+//! retries with jittered exponential backoff), a process-wide
+//! [`RetryBudget`] so a coordinator under correlated failure cannot
+//! amplify its own load with retry storms, a per-worker
+//! [`CircuitBreaker`] that quarantines a flapping worker after K
+//! consecutive failed calls and probes it back in after a cooldown, and
+//! the [`TokenBucket`] the HTTP front-end uses for per-client request
+//! budgets. Everything here is transport-agnostic plain state —
+//! `service::cluster` composes it with its HTTP client, which keeps
+//! this module unit-testable without sockets. See DESIGN.md §Fault
+//! model.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Failure-handling knobs for one class of calls. CLI spelling:
+/// `--call-timeout SECS --retries N --breaker-threshold K`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Policy {
+    /// Deadline for a single attempt (connect + read + write).
+    pub call_timeout: Duration,
+    /// Extra attempts after the first failure (0 = never retry).
+    pub retries: u32,
+    /// Base backoff before the first retry; doubles per retry, jittered
+    /// to 50–100% so synchronized retries spread out.
+    pub backoff: Duration,
+    /// Consecutive failed calls before a worker's breaker opens.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects calls before letting one probe
+    /// through.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for Policy {
+    fn default() -> Policy {
+        Policy {
+            call_timeout: Duration::from_secs(10),
+            retries: 2,
+            backoff: Duration::from_millis(100),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Policy {
+    /// Run `attempt` under this policy: each attempt gets
+    /// `call_timeout`, failures are retried up to `retries` times with
+    /// jittered exponential backoff, and every retry must be paid for
+    /// from `budget` (when one is supplied). `breaker` is consulted
+    /// before the first attempt — an open breaker short-circuits — and
+    /// told about the *call's* final outcome (one success or one
+    /// failure per `run`, not per attempt, so a call that succeeds on
+    /// retry does not advance the breaker).
+    pub fn run<T>(
+        &self,
+        budget: Option<&RetryBudget>,
+        breaker: Option<&CircuitBreaker>,
+        mut attempt: impl FnMut(Duration) -> Result<T, String>,
+    ) -> Result<T, String> {
+        if let Some(b) = breaker {
+            if !b.allow() {
+                return Err("circuit open (worker quarantined)".into());
+            }
+        }
+        let mut failures = 0u32;
+        loop {
+            match attempt(self.call_timeout) {
+                Ok(v) => {
+                    if let Some(b) = breaker {
+                        b.on_success();
+                    }
+                    if let Some(bu) = budget {
+                        bu.deposit(0.1);
+                    }
+                    return Ok(v);
+                }
+                Err(e) => {
+                    failures += 1;
+                    let can_retry =
+                        failures <= self.retries && budget.map_or(true, |b| b.try_spend());
+                    if !can_retry {
+                        if let Some(b) = breaker {
+                            b.on_failure(self.breaker_threshold, self.breaker_cooldown);
+                        }
+                        return Err(e);
+                    }
+                    std::thread::sleep(jittered_backoff(self.backoff, failures - 1));
+                }
+            }
+        }
+    }
+}
+
+/// Exponential backoff with 50–100% jitter: `base << attempt`, scaled
+/// by a cheap clock-derived factor so a fleet of synchronized retriers
+/// decorrelates. Capped at `base << 6`.
+pub fn jittered_backoff(base: Duration, attempt: u32) -> Duration {
+    let full = base.saturating_mul(1u32 << attempt.min(6));
+    let jitter = std::time::SystemTime::UNIX_EPOCH.elapsed().map_or(0, |d| d.subsec_nanos());
+    // Map the jitter into [512, 1024) / 1024 ≈ [50%, 100%).
+    let scale = 512 + (jitter % 512) as u64;
+    Duration::from_nanos((full.as_nanos() as u64).saturating_mul(scale) / 1024)
+}
+
+/// A process-wide retry allowance: every retry spends one token, every
+/// success drips a fraction back. When correlated failures drain it,
+/// calls fail fast instead of multiplying load on whatever is left
+/// standing.
+pub struct RetryBudget {
+    state: Mutex<BudgetState>,
+}
+
+struct BudgetState {
+    tokens: f64,
+    cap: f64,
+}
+
+impl RetryBudget {
+    /// A budget starting (and capped) at `cap` tokens.
+    pub fn new(cap: f64) -> RetryBudget {
+        RetryBudget { state: Mutex::new(BudgetState { tokens: cap, cap }) }
+    }
+
+    /// Spend one retry token; `false` = budget exhausted, fail fast.
+    pub fn try_spend(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.tokens >= 1.0 {
+            s.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return `amount` tokens (successful calls refill the budget).
+    pub fn deposit(&self, amount: f64) {
+        let mut s = self.state.lock().unwrap();
+        s.tokens = (s.tokens + amount).min(s.cap);
+    }
+
+    /// Tokens currently available (observability / tests).
+    pub fn available(&self) -> f64 {
+        self.state.lock().unwrap().tokens
+    }
+}
+
+/// Where a breaker currently stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Calls flow normally.
+    Closed,
+    /// Quarantined: calls are rejected until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: the next call goes through as a probe.
+    HalfOpen,
+}
+
+/// A per-peer circuit breaker: after `threshold` *consecutive* failed
+/// calls the peer is quarantined for `cooldown`, then a single probe is
+/// let through — success closes the breaker, failure re-opens it for
+/// another cooldown. Counting whole calls (not attempts) means a peer
+/// that recovers within a call's retry budget never trips it.
+pub struct CircuitBreaker {
+    state: Mutex<BreakerInner>,
+}
+
+struct BreakerInner {
+    consecutive: u32,
+    open_until: Option<Instant>,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> CircuitBreaker {
+        CircuitBreaker::new()
+    }
+}
+
+impl CircuitBreaker {
+    pub fn new() -> CircuitBreaker {
+        CircuitBreaker { state: Mutex::new(BreakerInner { consecutive: 0, open_until: None }) }
+    }
+
+    /// May a call proceed right now? (Closed or probe-ready.)
+    pub fn allow(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        match s.open_until {
+            None => true,
+            Some(t) => Instant::now() >= t,
+        }
+    }
+
+    /// Is the peer quarantined (open, including probe-ready)?
+    pub fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open_until.is_some()
+    }
+
+    pub fn state(&self) -> BreakerState {
+        let s = self.state.lock().unwrap();
+        match s.open_until {
+            None => BreakerState::Closed,
+            Some(t) if Instant::now() >= t => BreakerState::HalfOpen,
+            Some(_) => BreakerState::Open,
+        }
+    }
+
+    /// Record a successful call: the breaker closes fully.
+    pub fn on_success(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive = 0;
+        s.open_until = None;
+    }
+
+    /// Record a failed call; returns `true` when this failure *newly*
+    /// opened the breaker (the caller's cue to log the quarantine). A
+    /// failed probe re-arms the cooldown without returning `true`.
+    pub fn on_failure(&self, threshold: u32, cooldown: Duration) -> bool {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive = s.consecutive.saturating_add(1);
+        if s.consecutive >= threshold.max(1) {
+            let newly = s.open_until.is_none();
+            s.open_until = Some(Instant::now() + cooldown);
+            newly
+        } else {
+            false
+        }
+    }
+}
+
+/// A classic token bucket: `rate` tokens/second refill up to `burst`,
+/// one token per request. Used per client IP by the HTTP front-end;
+/// callers serialize access (the front-end keeps buckets in a mutexed
+/// map).
+pub struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full.
+    pub fn new(rate: f64, burst: f64) -> TokenBucket {
+        let rate = if rate > 0.0 { rate } else { 1.0 };
+        let burst = if burst >= 1.0 { burst } else { 1.0 };
+        TokenBucket { tokens: burst, last: Instant::now(), rate, burst }
+    }
+
+    /// Take one token. `Err(secs)` = exhausted; retry after `secs`
+    /// (≥ 1, suitable for an HTTP `Retry-After` header).
+    pub fn try_take(&mut self) -> Result<(), u64> {
+        let now = Instant::now();
+        self.tokens =
+            (self.tokens + now.duration_since(self.last).as_secs_f64() * self.rate).min(self.burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(((1.0 - self.tokens) / self.rate).ceil().max(1.0) as u64)
+        }
+    }
+
+    /// Is the bucket back at capacity? (Idle buckets can be pruned.)
+    pub fn is_full(&mut self) -> bool {
+        let now = Instant::now();
+        self.tokens =
+            (self.tokens + now.duration_since(self.last).as_secs_f64() * self.rate).min(self.burst);
+        self.last = now;
+        self.tokens >= self.burst - 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn fast_policy() -> Policy {
+        Policy {
+            call_timeout: Duration::from_millis(50),
+            retries: 2,
+            backoff: Duration::from_millis(1),
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(40),
+        }
+    }
+
+    #[test]
+    fn run_retries_up_to_the_limit_then_surfaces_the_error() {
+        let p = fast_policy();
+        let calls = AtomicU32::new(0);
+        let r: Result<(), String> = p.run(None, None, |timeout| {
+            assert_eq!(timeout, p.call_timeout, "attempts get the per-call deadline");
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err("nope".into())
+        });
+        assert_eq!(r.unwrap_err(), "nope");
+        assert_eq!(calls.load(Ordering::Relaxed), 3, "1 try + 2 retries");
+
+        let calls = AtomicU32::new(0);
+        let r = p.run(None, None, |_| {
+            if calls.fetch_add(1, Ordering::Relaxed) < 2 {
+                Err("flaky".into())
+            } else {
+                Ok(7u32)
+            }
+        });
+        assert_eq!(r.unwrap(), 7, "success on the last retry wins");
+    }
+
+    #[test]
+    fn retry_budget_bounds_retry_storms() {
+        let p = fast_policy();
+        let budget = RetryBudget::new(3.0);
+        let mut total_attempts = 0u32;
+        for _ in 0..10 {
+            let _ = p.run::<()>(Some(&budget), None, |_| {
+                total_attempts += 1;
+                Err("down".into())
+            });
+        }
+        // 10 first attempts are free; only 3 retries fit the budget.
+        assert_eq!(total_attempts, 13);
+        // Successes drip tokens back in.
+        for _ in 0..10 {
+            let _ = p.run(Some(&budget), None, |_| Ok(()));
+        }
+        assert!(budget.available() >= 1.0);
+        let _ = p.run::<()>(Some(&budget), None, |_| {
+            total_attempts += 1;
+            Err("down".into())
+        });
+        assert!(total_attempts > 13, "replenished budget allows retries again");
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_probes_back_in() {
+        let p = fast_policy();
+        let b = CircuitBreaker::new();
+        assert_eq!(b.state(), BreakerState::Closed);
+        for _ in 0..2 {
+            let _ = p.run::<()>(None, Some(&b), |_| Err("down".into()));
+        }
+        assert!(b.is_open(), "threshold 2 consecutive failed calls must open it");
+        assert_eq!(b.state(), BreakerState::Open);
+        // While open, calls short-circuit without invoking the attempt.
+        let r = p.run::<()>(None, Some(&b), |_| panic!("must not be attempted"));
+        assert!(r.unwrap_err().contains("circuit open"));
+        // After the cooldown a probe goes through; success closes it.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(p.run(None, Some(&b), |_| Ok(1u8)).unwrap(), 1);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_failed_probe_rearms_the_cooldown() {
+        let p = fast_policy();
+        let b = CircuitBreaker::new();
+        assert!(b.on_failure(1, Duration::from_millis(10)), "first open is 'newly'");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.allow(), "cooldown elapsed: probe allowed");
+        assert!(!b.on_failure(1, Duration::from_millis(200)), "re-open is not 'newly'");
+        assert!(!b.allow(), "failed probe re-quarantines");
+        // An intervening success always closes fully.
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn a_success_resets_the_consecutive_count() {
+        let b = CircuitBreaker::new();
+        let cd = Duration::from_secs(5);
+        assert!(!b.on_failure(3, cd));
+        assert!(!b.on_failure(3, cd));
+        b.on_success();
+        assert!(!b.on_failure(3, cd), "count restarted after success");
+        assert!(!b.is_open());
+    }
+
+    #[test]
+    fn jittered_backoff_stays_in_range_and_grows() {
+        let base = Duration::from_millis(100);
+        for attempt in 0..4u32 {
+            let full = base * (1 << attempt);
+            let d = jittered_backoff(base, attempt);
+            assert!(d >= full / 2 && d <= full, "attempt {attempt}: {d:?} vs {full:?}");
+        }
+        // The shift saturates instead of overflowing.
+        let d = jittered_backoff(Duration::from_secs(1), 40);
+        assert!(d <= Duration::from_secs(64));
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_reports_retry_after() {
+        let mut tb = TokenBucket::new(10.0, 2.0);
+        assert!(tb.try_take().is_ok());
+        assert!(tb.try_take().is_ok());
+        let wait = tb.try_take().unwrap_err();
+        assert!(wait >= 1, "Retry-After must be at least 1s, got {wait}");
+        // 10 tokens/s refill: ~150ms buys one back.
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(tb.try_take().is_ok());
+        assert!(!tb.is_full());
+        std::thread::sleep(Duration::from_millis(350));
+        assert!(tb.is_full(), "idle bucket refills to burst");
+    }
+}

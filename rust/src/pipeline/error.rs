@@ -51,6 +51,17 @@ pub enum PipelineError {
     /// Produced by [`crate::service::Service`] executors, which convert
     /// panics into failed jobs instead of dying.
     Panic(String),
+    /// The job ran *degraded* — the cluster had workers registered but
+    /// none reachable (dead or quarantined), so the coordinator fell
+    /// back to local compute — and then failed anyway; `source` is the
+    /// underlying failure. Jobs that degrade but succeed surface the
+    /// flag through their status instead of an error.
+    Degraded { source: Box<PipelineError> },
+    /// A persisted artifact (a `.pgjr` result file or the tail of
+    /// `jobs.log`) failed its integrity check and was renamed aside;
+    /// `path` is where the quarantined copy lives. Resubmitting the
+    /// same spec recomputes the result.
+    Quarantined { path: PathBuf },
 }
 
 impl std::fmt::Display for PipelineError {
@@ -94,6 +105,17 @@ impl std::fmt::Display for PipelineError {
             PipelineError::Spec(msg) => write!(f, "job spec: {msg}"),
             PipelineError::Cancelled => write!(f, "job cancelled"),
             PipelineError::Panic(msg) => write!(f, "job panicked: {msg}"),
+            PipelineError::Degraded { source } => {
+                write!(f, "degraded (cluster fell back to local compute): {source}")
+            }
+            PipelineError::Quarantined { path } => {
+                write!(
+                    f,
+                    "stored artifact failed its integrity check and was quarantined at {}; \
+                     resubmit to recompute",
+                    path.display()
+                )
+            }
         }
     }
 }
@@ -103,6 +125,7 @@ impl std::error::Error for PipelineError {
         match self {
             PipelineError::Generation { source, .. } => Some(source),
             PipelineError::Io { source, .. } => Some(source),
+            PipelineError::Degraded { source } => Some(source.as_ref()),
             _ => None,
         }
     }
@@ -136,6 +159,23 @@ mod tests {
         };
         let s = e.to_string();
         assert!(s.contains("z=42") && s.contains("3 of 1024"), "{s}");
+    }
+
+    #[test]
+    fn degraded_and_quarantined_carry_their_evidence() {
+        use std::error::Error as _;
+        let inner = PipelineError::Generation {
+            lookup_bits: 4,
+            source: GenError::InfeasibleRegion { r: 2 },
+        };
+        let e = PipelineError::Degraded { source: Box::new(inner) };
+        let s = e.to_string();
+        assert!(s.contains("degraded") && s.contains("region 2"), "{s}");
+        assert!(e.source().unwrap().to_string().contains("R=4"));
+
+        let e = PipelineError::Quarantined { path: PathBuf::from("/state/results/ab.pgjr") };
+        let s = e.to_string();
+        assert!(s.contains("quarantined") && s.contains("ab.pgjr"), "{s}");
     }
 
     #[test]

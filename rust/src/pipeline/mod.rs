@@ -78,7 +78,7 @@ pub mod error;
 pub mod job;
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -209,6 +209,7 @@ pub struct JobCtrl {
     progress: Progress,
     sub: Progress,
     phase: AtomicU8,
+    degraded: AtomicBool,
 }
 
 impl JobCtrl {
@@ -251,6 +252,24 @@ impl JobCtrl {
     /// The underlying token, for threading into lower layers.
     pub fn token(&self) -> &CancelToken {
         &self.cancel
+    }
+
+    /// True once any part of the run fell back from its intended
+    /// distributed path to local compute (all cluster workers dead or
+    /// quarantined). Sticky for the lifetime of the run; the service
+    /// surfaces it in job status.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Mark the run degraded (idempotent).
+    pub fn mark_degraded(&self) {
+        self.degraded.store(true, Ordering::Relaxed);
+    }
+
+    /// The raw flag, for threading into the cluster driver.
+    pub(crate) fn degraded_flag(&self) -> &AtomicBool {
+        &self.degraded
     }
 
     fn set_phase(&self, p: Phase) {

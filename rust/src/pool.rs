@@ -380,6 +380,13 @@ impl Scheduler {
     pub fn workers_spawned(&self) -> usize {
         self.inner.lock().unwrap().spawned
     }
+
+    /// Jobs currently outstanding (posted but not yet fully completed).
+    /// Zero after [`Scheduler::drain`] returns; the chaos suite uses this
+    /// to assert the pool is drained-but-reusable after a faulted run.
+    pub fn outstanding_jobs(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
 }
 
 #[cfg(test)]

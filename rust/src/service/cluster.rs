@@ -34,9 +34,9 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
-use std::sync::atomic::AtomicU64;
-use std::sync::atomic::Ordering;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -46,10 +46,13 @@ use crate::designspace::{
     analyze_shard, merge_shard_spaces, shard_ranges, sweep_shard, DesignSpace, GenError,
     GenOptions, ShardAnalysis,
 };
+use crate::faults::{self, Fault};
+use crate::net::{CircuitBreaker, Policy, RetryBudget};
 use crate::pipeline::{Config, JobSpec, LookupBits, SearchStrategy};
 use crate::pool::{CancelToken, Progress};
 
 use super::http::{json_str, obj};
+use super::store::crc32;
 
 /// How often a worker pings its coordinator, and the staleness bound
 /// after which the coordinator treats it as dead and reassigns its
@@ -69,32 +72,77 @@ pub(crate) fn normalize_addr(addr: &str) -> String {
     addr.trim().trim_start_matches("http://").trim_end_matches('/').to_string()
 }
 
-/// One `Connection: close` HTTP/1.1 exchange. Returns `(status, body)`;
+/// One `Connection: close` HTTP/1.1 exchange with a per-call deadline
+/// covering connect, write, and read. Returns `(status, body)`;
 /// transport-level failures are `Err` (the coordinator's dead-worker
-/// signal).
-pub(crate) fn http_call(
+/// signal). Carries the `cluster.call*` fault-injection sites — every
+/// coordinator↔worker exchange funnels through here.
+pub(crate) fn http_call_to(
     addr: &str,
     method: &str,
     path: &str,
     body: &[u8],
     auth: Option<&str>,
+    timeout: Duration,
 ) -> Result<(u16, Vec<u8>), String> {
     let addr = normalize_addr(addr);
-    let mut stream = TcpStream::connect(&addr).map_err(|e| format!("{addr}: {e}"))?;
-    stream.set_read_timeout(Some(Duration::from_secs(30))).map_err(|e| e.to_string())?;
-    stream.set_write_timeout(Some(Duration::from_secs(30))).map_err(|e| e.to_string())?;
+    match faults::inject("cluster.call", &[Fault::Drop, Fault::Delay, Fault::Refuse]) {
+        Some(Fault::Drop) => return Err(format!("{addr}: injected connection drop")),
+        Some(Fault::Refuse) => {
+            return Ok((503, br#"{"error":"injected refusal"}"#.to_vec()));
+        }
+        Some(Fault::Delay) => faults::small_delay(),
+        _ => {}
+    }
+    // Outbound tampering happens on a copy: the caller's buffer is its
+    // record of what it *meant* to send (e.g. for body_crc checks).
+    let mut sent: Vec<u8>;
+    let mut torn = false;
+    // The declared Content-Length is always the intended body's: a torn
+    // send promises more bytes than it delivers.
+    let declared_len = body.len();
+    let body: &[u8] = match faults::inject("cluster.call.send", &[Fault::Corrupt, Fault::Truncate])
+    {
+        Some(Fault::Corrupt) if !body.is_empty() => {
+            sent = body.to_vec();
+            let at = faults::rand_below(sent.len());
+            sent[at] ^= 0x01;
+            &sent
+        }
+        Some(Fault::Truncate) if !body.is_empty() => {
+            // Send a prefix, then close the write half: the peer sees a
+            // torn request (EOF before Content-Length), not a stall.
+            sent = body.to_vec();
+            let keep = faults::rand_below(sent.len());
+            sent.truncate(keep);
+            torn = true;
+            &sent
+        }
+        _ => body,
+    };
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("{addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("{addr}: unresolvable"))?;
+    let mut stream =
+        TcpStream::connect_timeout(&sock, timeout).map_err(|e| format!("{addr}: {e}"))?;
+    stream.set_read_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(timeout)).map_err(|e| e.to_string())?;
     let auth_line = match auth {
         Some(tok) => format!("Authorization: Bearer {tok}\r\n"),
         None => String::new(),
     };
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
-         {auth_line}Connection: close\r\n\r\n",
-        body.len()
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {declared_len}\r\n\
+         {auth_line}Connection: close\r\n\r\n"
     );
     stream.write_all(head.as_bytes()).map_err(|e| e.to_string())?;
     stream.write_all(body).map_err(|e| e.to_string())?;
     stream.flush().map_err(|e| e.to_string())?;
+    if torn {
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+    }
 
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -127,6 +175,17 @@ pub(crate) fn http_call(
         None => {
             reader.read_to_end(&mut body).map_err(|e| e.to_string())?;
         }
+    }
+    match faults::inject("cluster.call.recv", &[Fault::Corrupt, Fault::Truncate]) {
+        Some(Fault::Corrupt) if !body.is_empty() => {
+            let at = faults::rand_below(body.len());
+            body[at] ^= 0x01;
+        }
+        Some(Fault::Truncate) if !body.is_empty() => {
+            let keep = faults::rand_below(body.len());
+            body.truncate(keep);
+        }
+        _ => {}
     }
     Ok((code, body))
 }
@@ -206,7 +265,10 @@ fn parse_shard_request(text: &str) -> Result<(BoundTable, GenOptions, u64, u64),
 // JSON layer; same length-prefixed little-endian idiom as PGDS).
 
 const PGSH_MAGIC: &[u8; 4] = b"PGSH";
-const PGSH_VERSION: u32 = 1;
+// v2 appends a CRC-32 of everything before it. The entries feed the
+// byte-identical merge, so a bit flipped in transit must be *detected*
+// (→ reassign/local re-analysis), never silently merged.
+const PGSH_VERSION: u32 = 2;
 
 fn encode_pgsh(lo: u64, hi: u64, k: u32, dd_evals: u64, regions: &[RegionSpace]) -> Vec<u8> {
     let mut out = Vec::new();
@@ -226,6 +288,8 @@ fn encode_pgsh(lo: u64, hi: u64, k: u32, dd_evals: u64, regions: &[RegionSpace])
             out.extend_from_slice(&e.b_hi.to_le_bytes());
         }
     }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
@@ -256,7 +320,15 @@ fn decode_pgsh(bytes: &[u8]) -> Option<Pgsh> {
     fn r_i64(b: &mut &[u8]) -> Option<i64> {
         take(b, 8).map(|s| i64::from_le_bytes(s.try_into().unwrap()))
     }
-    let mut b = bytes;
+    // Verify the whole-payload checksum before trusting any field.
+    if bytes.len() < 4 {
+        return None;
+    }
+    let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+    if crc32(payload) != u32::from_le_bytes(trailer.try_into().unwrap()) {
+        return None;
+    }
+    let mut b = payload;
     if take(&mut b, 4)? != PGSH_MAGIC || r_u32(&mut b)? != PGSH_VERSION {
         return None;
     }
@@ -298,6 +370,19 @@ enum ShardState {
     Analyzing,
     Analyzed(ShardAnalysis),
     Failed(GenError),
+    /// The analysis thread panicked. Reported distinctly (not as a
+    /// [`GenError`]) so the coordinator reassigns the shard instead of
+    /// failing the job — and so the shard can never park in `Analyzing`
+    /// forever.
+    Panicked,
+}
+
+/// Checksum over a shard status' load-bearing fields. The coordinator
+/// recomputes it from the fields it parsed off the wire; a mismatch
+/// (bit flip, truncation) makes the response unintelligible, which is a
+/// reassign — never a silently-wrong `min_k` in the merged space.
+fn status_check(id: u64, state: &str, a: u64, b: u64, c: u64) -> u32 {
+    crc32(format!("{id}/{state}/{a}/{b}/{c}").as_bytes())
 }
 
 struct ShardEntry {
@@ -330,11 +415,14 @@ impl ShardServer {
         let spawned = std::thread::Builder::new()
             .name(format!("polygen-shard-{id}"))
             .spawn(move || {
-                let result = analyze_shard(&bt, &opts, lo, hi, Some(&worker.cancel));
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    analyze_shard(&bt, &opts, lo, hi, Some(&worker.cancel))
+                }));
                 let mut st = worker.state.lock().unwrap();
                 *st = match result {
-                    Ok(sa) => ShardState::Analyzed(sa),
-                    Err(e) => ShardState::Failed(e),
+                    Ok(Ok(sa)) => ShardState::Analyzed(sa),
+                    Ok(Err(e)) => ShardState::Failed(e),
+                    Err(_) => ShardState::Panicked,
                 };
                 drop(st);
                 worker.cv.notify_all();
@@ -343,11 +431,14 @@ impl ShardServer {
         if !spawned {
             // Thread exhaustion: analyze inline rather than leaving the
             // shard parked in Analyzing forever.
-            let result = analyze_shard(&bt, &opts, lo, hi, Some(&entry.cancel));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                analyze_shard(&bt, &opts, lo, hi, Some(&entry.cancel))
+            }));
             let mut st = entry.state.lock().unwrap();
             *st = match result {
-                Ok(sa) => ShardState::Analyzed(sa),
-                Err(e) => ShardState::Failed(e),
+                Ok(Ok(sa)) => ShardState::Analyzed(sa),
+                Ok(Err(e)) => ShardState::Failed(e),
+                Err(_) => ShardState::Panicked,
             };
         }
         Ok(id)
@@ -358,31 +449,48 @@ impl ShardServer {
         let entry = self.shards.lock().unwrap().get(&id).cloned()?;
         let st = entry.state.lock().unwrap();
         let body = match &*st {
-            ShardState::Analyzing => {
-                obj([("id", id.to_string()), ("state", json_str("analyzing"))])
-            }
+            ShardState::Analyzing => obj([
+                ("id", id.to_string()),
+                ("state", json_str("analyzing")),
+                ("check", status_check(id, "analyzing", 0, 0, 0).to_string()),
+            ]),
             ShardState::Analyzed(sa) => obj([
                 ("id", id.to_string()),
                 ("state", json_str("analyzed")),
                 ("min_k", sa.min_k.to_string()),
                 ("dd_evals", sa.dd_evals.to_string()),
+                (
+                    "check",
+                    status_check(id, "analyzed", sa.min_k as u64, sa.dd_evals, 0).to_string(),
+                ),
             ]),
             ShardState::Failed(e) => {
                 let mut fields = vec![("id", id.to_string()), ("state", json_str("failed"))];
-                match e {
+                let (region, max_k, code) = match e {
                     GenError::InfeasibleRegion { r } => {
                         fields.push(("kind", json_str("infeasible")));
                         fields.push(("region", r.to_string()));
+                        (*r, 0, 1)
                     }
                     GenError::KExhausted { r, max_k } => {
                         fields.push(("kind", json_str("k_exhausted")));
                         fields.push(("region", r.to_string()));
                         fields.push(("max_k", max_k.to_string()));
+                        (*r, *max_k as u64, 2)
                     }
-                    GenError::Cancelled => fields.push(("kind", json_str("cancelled"))),
-                }
+                    GenError::Cancelled => {
+                        fields.push(("kind", json_str("cancelled")));
+                        (0, 0, 3)
+                    }
+                };
+                fields.push(("check", status_check(id, "failed", region, max_k, code).to_string()));
                 obj(fields)
             }
+            ShardState::Panicked => obj([
+                ("id", id.to_string()),
+                ("state", json_str("panicked")),
+                ("check", status_check(id, "panicked", 0, 0, 0).to_string()),
+            ]),
         };
         Some(body)
     }
@@ -408,6 +516,9 @@ impl ShardServer {
                 ShardState::Analyzing => st = entry.cv.wait(st).unwrap(),
                 ShardState::Failed(_) => {
                     return Err((409, obj([("error", json_str("shard failed"))])))
+                }
+                ShardState::Panicked => {
+                    return Err((409, obj([("error", json_str("shard panicked"))])))
                 }
                 ShardState::Analyzed(sa) => {
                     if k < sa.min_k {
@@ -440,12 +551,37 @@ struct WorkerInfo {
     last_seen: Instant,
 }
 
+/// A registered worker as the `GET /workers` listing reports it.
+#[derive(Clone, Debug)]
+pub struct WorkerView {
+    pub id: u64,
+    pub addr: String,
+    /// Eligible for shard work right now (fresh heartbeat, breaker not
+    /// blocking).
+    pub live: bool,
+    /// `"live"`, `"stale"` (heartbeat timed out), or `"quarantined"`
+    /// (circuit breaker open after consecutive call failures).
+    pub state: &'static str,
+}
+
 /// The coordinator's worker registry + distributed generate driver.
+///
+/// Failure handling (see DESIGN.md §Fault model): every call to a
+/// worker runs under the cluster [`Policy`] (per-attempt deadline,
+/// bounded retries, shared [`RetryBudget`]), and each worker carries a
+/// [`CircuitBreaker`] — after `breaker_threshold` consecutive failed
+/// calls (or unintelligible responses) the worker is *quarantined*: it
+/// stays registered and listed, but receives no shards until a
+/// post-cooldown probe succeeds. A heartbeat-stale worker is likewise
+/// skipped but no longer deleted from the registry.
 pub(crate) struct Cluster {
     next_id: AtomicU64,
     workers: Mutex<BTreeMap<u64, WorkerInfo>>,
     timeout: Duration,
     auth: Mutex<Option<String>>,
+    policy: Mutex<Policy>,
+    budget: RetryBudget,
+    breakers: Mutex<BTreeMap<u64, Arc<CircuitBreaker>>>,
 }
 
 impl Cluster {
@@ -455,6 +591,9 @@ impl Cluster {
             workers: Mutex::new(BTreeMap::new()),
             timeout,
             auth: Mutex::new(None),
+            policy: Mutex::new(Policy::default()),
+            budget: RetryBudget::new(10.0),
+            breakers: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -468,15 +607,89 @@ impl Cluster {
         self.auth.lock().unwrap().clone()
     }
 
+    /// Install the call policy (`--call-timeout` / `--retries` /
+    /// `--breaker-threshold`).
+    pub fn set_policy(&self, policy: Policy) {
+        *self.policy.lock().unwrap() = policy;
+    }
+
+    fn policy(&self) -> Policy {
+        self.policy.lock().unwrap().clone()
+    }
+
+    fn breaker(&self, id: u64) -> Arc<CircuitBreaker> {
+        Arc::clone(self.breakers.lock().unwrap().entry(id).or_default())
+    }
+
+    fn breaker_allows(&self, id: u64) -> bool {
+        self.breakers.lock().unwrap().get(&id).map_or(true, |b| b.allow())
+    }
+
+    /// Record a protocol-level failure (non-200, unintelligible or
+    /// checksum-failing response) against `id`'s breaker. Transport
+    /// failures are recorded by [`Cluster::call`] itself.
+    pub fn note_failure(&self, id: u64) {
+        let policy = self.policy();
+        let b = self.breaker(id);
+        if b.on_failure(policy.breaker_threshold, policy.breaker_cooldown) {
+            let addr = self.addr_of(id).unwrap_or_default();
+            eprintln!(
+                "polygen: worker {id} ({addr}) quarantined after \
+                 {} consecutive call failures",
+                policy.breaker_threshold
+            );
+        }
+    }
+
+    /// One policy-governed call to worker `id`: per-attempt deadline,
+    /// bounded budgeted retries, breaker consulted and updated. The
+    /// single funnel for every coordinator → worker exchange that
+    /// matters (best-effort shard releases go around it).
+    fn call(
+        &self,
+        id: u64,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>), String> {
+        let Some(addr) = self.addr_of(id) else {
+            return Err(format!("worker {id} not registered"));
+        };
+        let auth = self.auth();
+        let policy = self.policy();
+        let breaker = self.breaker(id);
+        let was_open = breaker.is_open();
+        let r = policy.run(Some(&self.budget), Some(&breaker), |timeout| {
+            http_call_to(&addr, method, path, body, auth.as_deref(), timeout)
+        });
+        if r.is_err() && !was_open && breaker.is_open() {
+            eprintln!(
+                "polygen: worker {id} ({addr}) quarantined after \
+                 {} consecutive call failures",
+                policy.breaker_threshold
+            );
+        }
+        r
+    }
+
     /// `POST /workers`: register (or re-register) a worker by address.
-    /// Re-registering an address replaces the old entry, so a restarted
-    /// worker does not appear twice.
+    /// Re-registering an address replaces the old entry (so a restarted
+    /// worker does not appear twice) and resets its breaker — a
+    /// re-registration is positive evidence the worker is back.
     pub fn register(&self, addr: &str) -> u64 {
         let addr = normalize_addr(addr);
         let mut ws = self.workers.lock().unwrap();
+        let replaced: Vec<u64> =
+            ws.iter().filter(|(_, w)| w.addr == addr).map(|(&id, _)| id).collect();
         ws.retain(|_, w| w.addr != addr);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         ws.insert(id, WorkerInfo { addr, last_seen: Instant::now() });
+        drop(ws);
+        let mut breakers = self.breakers.lock().unwrap();
+        for old in replaced {
+            breakers.remove(&old);
+        }
+        breakers.remove(&id);
         id
     }
 
@@ -492,45 +705,75 @@ impl Cluster {
         }
     }
 
-    /// Registered workers as `(id, addr, alive)`, id-ascending.
-    pub fn workers(&self) -> Vec<(u64, String, bool)> {
-        let ws = self.workers.lock().unwrap();
-        ws.iter()
-            .map(|(&id, w)| (id, w.addr.clone(), w.last_seen.elapsed() < self.timeout))
+    /// Registered workers, id-ascending, with their availability state.
+    pub fn workers(&self) -> Vec<WorkerView> {
+        let views: Vec<(u64, String, bool)> = {
+            let ws = self.workers.lock().unwrap();
+            ws.iter()
+                .map(|(&id, w)| (id, w.addr.clone(), w.last_seen.elapsed() < self.timeout))
+                .collect()
+        };
+        views
+            .into_iter()
+            .map(|(id, addr, fresh)| {
+                let allows = self.breaker_allows(id);
+                let state = if !fresh {
+                    "stale"
+                } else if !allows {
+                    "quarantined"
+                } else {
+                    "live"
+                };
+                WorkerView { id, addr, live: fresh && allows, state }
+            })
             .collect()
     }
 
     fn live(&self) -> Vec<(u64, String)> {
-        self.workers()
-            .into_iter()
-            .filter_map(|(id, addr, alive)| alive.then_some((id, addr)))
-            .collect()
+        self.workers().into_iter().filter(|w| w.live).map(|w| (w.id, w.addr)).collect()
     }
 
-    fn mark_dead(&self, id: u64) {
-        self.workers.lock().unwrap().remove(&id);
+    /// Any worker at all in the registry? (Distinguishes "never had a
+    /// cluster" from "had one and lost it" — only the latter is a
+    /// degradation worth flagging.)
+    fn any_registered(&self) -> bool {
+        !self.workers.lock().unwrap().is_empty()
     }
 
     /// Distributed generation: shard `0..2^R` over the live workers,
     /// merge byte-identically to single-node. `None` = no live workers
     /// (caller falls back to the local engine); `ticks` counts analyzed
     /// regions (no `begin` — the caller owns the progress window).
+    /// `degraded` (when given) is set — once, with a log line — the
+    /// first time any part of the job silently falls from remote to
+    /// local compute while workers are still registered.
     pub fn generate(
         &self,
         bt: &BoundTable,
         opts: &GenOptions,
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
+        degraded: Option<&AtomicBool>,
     ) -> Option<Result<DesignSpace, GenError>> {
         let live = self.live();
         if live.is_empty() {
+            if self.any_registered() {
+                // Workers exist but none is reachable: the caller will
+                // compute locally, which is correct but not what the
+                // operator deployed workers for — say so.
+                mark_degraded(
+                    degraded,
+                    "all registered workers are stale or quarantined; computing locally",
+                );
+            }
             return None;
         }
         let nregions = 1u64 << opts.lookup_bits;
         let ranges = shard_ranges(nregions, live.len());
-        Some(self.drive(bt, opts, &ranges, cancel, ticks))
+        Some(self.drive(bt, opts, &ranges, cancel, ticks, degraded))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn drive(
         &self,
         bt: &BoundTable,
@@ -538,20 +781,22 @@ impl Cluster {
         ranges: &[(u64, u64)],
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
+        degraded: Option<&AtomicBool>,
     ) -> Result<DesignSpace, GenError> {
         let auth = self.auth();
         let auth = auth.as_deref();
 
-        // Assign round-robin; a worker that fails the initial POST is
-        // immediately treated as dead.
+        // Assign round-robin; a worker that fails the initial POST
+        // advances its breaker and the shard moves on.
         let mut rr = 0usize;
         let mut slots: Vec<Slot> = ranges
             .iter()
-            .map(|&(lo, hi)| self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks))
+            .map(|&(lo, hi)| self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded))
             .collect();
 
         // Poll until every slot settles, reassigning slots whose worker
-        // died mid-analysis (connection failure or heartbeat timeout).
+        // died mid-analysis (call failures past the retry policy,
+        // heartbeat timeout, or an unintelligible/corrupt response).
         loop {
             if cancel.is_some_and(|c| c.is_cancelled()) {
                 self.release(&slot_remotes(&slots), auth);
@@ -560,47 +805,51 @@ impl Cluster {
             let mut pending = false;
             for (i, &(lo, hi)) in ranges.iter().enumerate() {
                 let Slot::Remote(worker, remote) = slots[i] else { continue };
+                let mut reassign = |slots: &mut Vec<Slot>, pending: &mut bool| {
+                    // Best-effort: free the orphaned remote shard.
+                    self.release(&[(worker, remote)], auth);
+                    slots[i] = self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded);
+                    *pending |= matches!(slots[i], Slot::Remote(..));
+                };
                 if !self.is_live(worker) {
-                    self.mark_dead(worker);
-                    slots[i] = self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
-                    pending |= matches!(slots[i], Slot::Remote(..));
+                    reassign(&mut slots, &mut pending);
                     continue;
                 }
-                let polled = self.addr_of(worker).and_then(|a| {
-                    http_call(&a, "GET", &format!("/shards/{remote}"), b"", auth).ok()
-                });
-                match polled {
-                    Some((200, body)) => {
+                match self.call(worker, "GET", &format!("/shards/{remote}"), b"") {
+                    Ok((200, body)) => {
                         let body = String::from_utf8_lossy(&body).into_owned();
-                        match json_field(&body, "state") {
-                            Some("analyzing") => pending = true,
-                            Some("analyzed") => {
-                                let min_k = json_u64(&body, "min_k").unwrap_or(0) as u32;
-                                let dd = json_u64(&body, "dd_evals").unwrap_or(0);
+                        match verified_status(&body, remote) {
+                            Some(ShardPoll::Analyzing) => pending = true,
+                            Some(ShardPoll::Analyzed { min_k, dd_evals }) => {
                                 if let Some(p) = ticks {
                                     p.add((hi - lo) as usize);
                                 }
-                                slots[i] = Slot::RemoteDone(worker, remote, min_k, dd);
+                                slots[i] = Slot::RemoteDone(worker, remote, min_k, dd_evals);
                             }
-                            Some("failed") => {
-                                slots[i] = Slot::Failed(decode_error(&body, opts));
+                            Some(ShardPoll::Failed(e)) => {
+                                slots[i] = Slot::Failed(e);
                             }
-                            _ => {
-                                // Unintelligible worker: treat as dead.
-                                self.mark_dead(worker);
-                                slots[i] =
-                                    self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
-                                pending |= matches!(slots[i], Slot::Remote(..));
+                            Some(ShardPoll::Panicked) | None => {
+                                // The worker's analysis thread died, or
+                                // the response failed its checksum:
+                                // either way this worker can't be
+                                // trusted with the shard — count the
+                                // strike and reassign.
+                                self.note_failure(worker);
+                                reassign(&mut slots, &mut pending);
                             }
                         }
                     }
-                    // Connection refused / timeout / non-200 (including a
-                    // worker that restarted and forgot the shard): the
-                    // worker is dead to this job — reassign.
-                    _ => {
-                        self.mark_dead(worker);
-                        slots[i] = self.assign(bt, opts, lo, hi, &mut rr, auth, cancel, ticks);
-                        pending |= matches!(slots[i], Slot::Remote(..));
+                    // Non-200 (including a worker that restarted and
+                    // forgot the shard): protocol-level strike.
+                    Ok(_) => {
+                        self.note_failure(worker);
+                        reassign(&mut slots, &mut pending);
+                    }
+                    // Transport failure past the retry policy (the call
+                    // already advanced the breaker): reassign.
+                    Err(_) => {
+                        reassign(&mut slots, &mut pending);
                     }
                 }
             }
@@ -641,30 +890,37 @@ impl Cluster {
                     regions.extend(sweep_shard(sa, k));
                 }
                 Slot::RemoteDone(worker, remote, _, dd) => {
-                    let swept = self.addr_of(*worker).and_then(|addr| {
-                        let body = format!("k = {k}\n");
-                        match http_call(
-                            &addr,
-                            "POST",
-                            &format!("/shards/{remote}/sweep"),
-                            body.as_bytes(),
-                            auth,
-                        ) {
-                            Ok((200, bytes)) => decode_pgsh(&bytes)
-                                .filter(|p| p.lo == lo && p.hi == hi && p.k == k)
-                                .map(|p| (addr, p.regions)),
-                            _ => None,
-                        }
-                    });
+                    let body = format!("k = {k}\n");
+                    let swept = match self.call(
+                        *worker,
+                        "POST",
+                        &format!("/shards/{remote}/sweep"),
+                        body.as_bytes(),
+                    ) {
+                        // decode_pgsh verifies the payload CRC: a bit
+                        // flipped in transit is a miss here, never a
+                        // silently-wrong entry in the merged space.
+                        Ok((200, bytes)) => decode_pgsh(&bytes)
+                            .filter(|p| p.lo == lo && p.hi == hi && p.k == k)
+                            .map(|p| p.regions),
+                        _ => None,
+                    };
                     match swept {
-                        Some((addr, sw)) => {
+                        Some(sw) => {
                             dd_evals += dd;
                             regions.extend(sw);
-                            let _ =
-                                http_call(&addr, "DELETE", &format!("/shards/{remote}"), b"", auth);
+                            self.release(&[(*worker, *remote)], auth);
                         }
                         None => {
-                            self.mark_dead(*worker);
+                            // The worker died or garbled its sweep
+                            // between analyze and here: re-analyze this
+                            // shard locally (byte-identical by the shard
+                            // property tests) and flag the degradation.
+                            self.note_failure(*worker);
+                            mark_degraded(
+                                degraded,
+                                "a worker failed mid-sweep; re-analyzing its shard locally",
+                            );
                             match analyze_shard(bt, opts, lo, hi, cancel) {
                                 Ok(sa) => {
                                     dd_evals += sa.dd_evals;
@@ -697,7 +953,8 @@ impl Cluster {
     }
 
     /// POST one shard to the next live worker (round-robin via `*rr`),
-    /// marking workers whose POST fails as dead; when no live worker
+    /// striking workers whose POST fails (past the retry policy) or
+    /// whose response fails its `body_crc` echo; when no live worker
     /// remains, analyze in-process.
     #[allow(clippy::too_many_arguments)]
     fn assign(
@@ -707,14 +964,20 @@ impl Cluster {
         lo: u64,
         hi: u64,
         rr: &mut usize,
-        auth: Option<&str>,
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
+        degraded: Option<&AtomicBool>,
     ) -> Slot {
         let body = shard_request(bt, opts, lo, hi);
         loop {
             let live = self.live();
             if live.is_empty() {
+                if self.any_registered() {
+                    mark_degraded(
+                        degraded,
+                        "no live worker left for a shard; analyzing it locally",
+                    );
+                }
                 match analyze_shard(bt, opts, lo, hi, cancel) {
                     Ok(sa) => {
                         if let Some(p) = ticks {
@@ -725,27 +988,109 @@ impl Cluster {
                     Err(e) => return Slot::Failed(e),
                 }
             }
-            let (worker, addr) = live[*rr % live.len()].clone();
+            let (worker, _addr) = live[*rr % live.len()].clone();
             *rr += 1;
-            match http_call(&addr, "POST", "/shards", body.as_bytes(), auth) {
+            match self.call(worker, "POST", "/shards", body.as_bytes()) {
                 Ok((201, resp)) => {
                     let resp = String::from_utf8_lossy(&resp).into_owned();
+                    // The worker echoes a CRC of the request body it
+                    // received: a mismatch means the shard request was
+                    // corrupted in transit and the remote shard is
+                    // computing the wrong range — don't trust it.
+                    let echo_ok = json_u64(&resp, "body_crc")
+                        .is_some_and(|c| c == crc32(body.as_bytes()) as u64);
                     match json_u64(&resp, "id") {
-                        Some(remote) => return Slot::Remote(worker, remote),
-                        None => self.mark_dead(worker),
+                        Some(remote) if echo_ok => return Slot::Remote(worker, remote),
+                        Some(remote) => {
+                            self.release(&[(worker, remote)], self.auth().as_deref());
+                            self.note_failure(worker);
+                        }
+                        None => self.note_failure(worker),
                     }
                 }
-                _ => self.mark_dead(worker),
+                Ok(_) => self.note_failure(worker),
+                // Transport failure: call() already advanced the breaker.
+                Err(_) => {}
             }
         }
     }
 
+    /// Best-effort shard cleanup: single attempt, short deadline, no
+    /// retries, breaker untouched (failing to free a shard on a dead
+    /// worker is not evidence about the worker's next call).
     fn release(&self, remotes: &[(u64, u64)], auth: Option<&str>) {
+        let timeout = self.policy().call_timeout;
         for &(worker, remote) in remotes {
             if let Some(addr) = self.addr_of(worker) {
-                let _ = http_call(&addr, "DELETE", &format!("/shards/{remote}"), b"", auth);
+                let _ =
+                    http_call_to(&addr, "DELETE", &format!("/shards/{remote}"), b"", auth, timeout);
             }
         }
+    }
+}
+
+/// Set the degraded flag, logging the reason the first time only.
+fn mark_degraded(flag: Option<&AtomicBool>, why: &str) {
+    if let Some(f) = flag {
+        if !f.swap(true, Ordering::Relaxed) {
+            eprintln!("polygen: cluster degraded: {why}");
+        }
+    }
+}
+
+/// A verified shard-status poll. `None` = the response failed its
+/// checksum or was missing fields — unintelligible, reassign.
+enum ShardPoll {
+    Analyzing,
+    Analyzed { min_k: u32, dd_evals: u64 },
+    Failed(GenError),
+    Panicked,
+}
+
+fn verified_status(body: &str, expect_id: u64) -> Option<ShardPoll> {
+    let id = json_u64(body, "id")?;
+    let state = json_field(body, "state")?;
+    let check = json_u64(body, "check")? as u32;
+    if id != expect_id {
+        return None;
+    }
+    match state {
+        "analyzing" => {
+            (check == status_check(id, "analyzing", 0, 0, 0)).then_some(ShardPoll::Analyzing)
+        }
+        "analyzed" => {
+            let min_k = json_u64(body, "min_k")?;
+            let dd_evals = json_u64(body, "dd_evals")?;
+            (check == status_check(id, "analyzed", min_k, dd_evals, 0)).then_some(
+                ShardPoll::Analyzed { min_k: u32::try_from(min_k).ok()?, dd_evals },
+            )
+        }
+        "failed" => {
+            let (e, region, max_k, code) = match json_field(body, "kind")? {
+                "infeasible" => {
+                    let r = json_u64(body, "region")?;
+                    (GenError::InfeasibleRegion { r }, r, 0, 1)
+                }
+                "k_exhausted" => {
+                    let r = json_u64(body, "region")?;
+                    let max_k = json_u64(body, "max_k")?;
+                    (
+                        GenError::KExhausted { r, max_k: u32::try_from(max_k).ok()? },
+                        r,
+                        max_k,
+                        2,
+                    )
+                }
+                "cancelled" => (GenError::Cancelled, 0, 0, 3),
+                _ => return None,
+            };
+            (check == status_check(id, "failed", region, max_k, code))
+                .then_some(ShardPoll::Failed(e))
+        }
+        "panicked" => {
+            (check == status_check(id, "panicked", 0, 0, 0)).then_some(ShardPoll::Panicked)
+        }
+        _ => None,
     }
 }
 
@@ -785,7 +1130,21 @@ pub fn run_worker_agent(
     coordinator: String,
     my_addr: String,
     auth: Option<String>,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    run_worker_agent_with(coordinator, my_addr, auth, stop, Policy::default())
+}
+
+///// [`run_worker_agent`] with an explicit call [`Policy`]: register and
+/// heartbeat calls get the policy's per-attempt deadline and bounded
+/// retries (no breaker — there is exactly one coordinator, and the loop
+/// itself is the recovery mechanism).
+pub fn run_worker_agent_with(
+    coordinator: String,
+    my_addr: String,
+    auth: Option<String>,
+    stop: Arc<AtomicBool>,
+    policy: Policy,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name("polygen-worker-agent".into())
@@ -796,25 +1155,43 @@ pub fn run_worker_agent(
                 match id {
                     None => {
                         let body = obj([("addr", json_str(&my_addr))]);
-                        if let Ok((200 | 201, resp)) =
-                            http_call(&coordinator, "POST", "/workers", body.as_bytes(), auth)
-                        {
+                        let reg = policy.run(None, None, |timeout| {
+                            http_call_to(
+                                &coordinator,
+                                "POST",
+                                "/workers",
+                                body.as_bytes(),
+                                auth,
+                                timeout,
+                            )
+                        });
+                        if let Ok((200 | 201, resp)) = reg {
                             let resp = String::from_utf8_lossy(&resp).into_owned();
                             id = json_u64(&resp, "id");
                         }
                     }
                     Some(wid) => {
-                        let beat = http_call(
-                            &coordinator,
-                            "POST",
-                            &format!("/workers/{wid}/heartbeat"),
-                            b"",
-                            auth,
-                        );
-                        if !matches!(beat, Ok((200, _))) {
-                            // Coordinator restarted or evicted us:
-                            // re-register on the next pass.
-                            id = None;
+                        // A dropped heartbeat round (injected or real)
+                        // just lets the coordinator see us as stale
+                        // until the next beat lands.
+                        let skip =
+                            faults::inject("cluster.heartbeat", &[Fault::Drop]).is_some();
+                        if !skip {
+                            let beat = policy.run(None, None, |timeout| {
+                                http_call_to(
+                                    &coordinator,
+                                    "POST",
+                                    &format!("/workers/{wid}/heartbeat"),
+                                    b"",
+                                    auth,
+                                    timeout,
+                                )
+                            });
+                            if !matches!(beat, Ok((200, _))) {
+                                // Coordinator restarted or evicted us:
+                                // re-register on the next pass.
+                                id = None;
+                            }
                         }
                     }
                 }
@@ -830,24 +1207,16 @@ pub fn run_worker_agent(
         .expect("spawn polygen-worker-agent")
 }
 
-/// Rebuild the exact [`GenError`] a worker reported.
-fn decode_error(body: &str, opts: &GenOptions) -> GenError {
-    match json_field(body, "kind") {
-        Some("infeasible") => {
-            GenError::InfeasibleRegion { r: json_u64(body, "region").unwrap_or(0) }
-        }
-        Some("k_exhausted") => GenError::KExhausted {
-            r: json_u64(body, "region").unwrap_or(0),
-            max_k: json_u64(body, "max_k").unwrap_or(opts.max_k as u64) as u32,
-        },
-        _ => GenError::Cancelled,
-    }
-}
-
 /// [`crate::pipeline::Generator`] adapter: routes a pipeline's fixed-R
 /// generation phase through the cluster when live workers exist,
 /// falling back to local generation (by returning `None`) otherwise.
-pub(crate) struct ClusterGenerator(pub Arc<Cluster>);
+/// Carries the job's [`crate::pipeline::JobCtrl`] so cluster-level
+/// degradation (local fallback while workers are registered) is visible
+/// in the job's status.
+pub(crate) struct ClusterGenerator {
+    pub cluster: Arc<Cluster>,
+    pub ctrl: Option<Arc<crate::pipeline::JobCtrl>>,
+}
 
 impl crate::pipeline::Generator for ClusterGenerator {
     fn generate(
@@ -857,6 +1226,7 @@ impl crate::pipeline::Generator for ClusterGenerator {
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
     ) -> Option<Result<DesignSpace, GenError>> {
-        self.0.generate(bt, opts, cancel, ticks)
+        let flag = self.ctrl.as_deref().map(|c| c.degraded_flag());
+        self.cluster.generate(bt, opts, cancel, ticks, flag)
     }
 }

@@ -49,14 +49,18 @@
 //! carry `Authorization: Bearer <token>`; failures get `401`) and a cap
 //! on concurrent in-flight connections (excess gets `503` immediately).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::store::crc32;
 use super::{JobEntry, JobStatus, Service};
+use crate::faults::{self, Fault};
+use crate::net::TokenBucket;
 use crate::pipeline::{JobResult, PipelineError};
 
 /// Listener-level hardening knobs for [`serve_with`] /
@@ -69,6 +73,14 @@ pub struct HttpOptions {
     /// Cap on concurrently-served connections; excess connections are
     /// answered `503` without touching the service. `0` = unlimited.
     pub max_conns: usize,
+    /// Per-client (peer IP) sustained request rate in requests/second;
+    /// excess connections are answered `429` with a `Retry-After`
+    /// header. `0.0` = unlimited.
+    pub rate_limit: f64,
+    /// Burst allowance on top of [`HttpOptions::rate_limit`] (token
+    /// bucket depth). Values below 1 are raised to 1 when a limit is
+    /// set, so the first request always passes.
+    pub rate_burst: f64,
 }
 
 /// Serve `service` on `listener` until the process exits (the blocking
@@ -91,6 +103,7 @@ fn serve_until(
 ) {
     let opts = Arc::new(opts);
     let active = Arc::new(AtomicUsize::new(0));
+    let buckets: Arc<Mutex<HashMap<IpAddr, TokenBucket>>> = Arc::new(Mutex::new(HashMap::new()));
     for conn in listener.incoming() {
         if stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed)) {
             return;
@@ -99,6 +112,7 @@ fn serve_until(
         let svc = service.clone();
         let opts = Arc::clone(&opts);
         let active = Arc::clone(&active);
+        let buckets = Arc::clone(&buckets);
         // One thread per connection: connections are short (one request)
         // and job execution happens on the service's executors, so the
         // handler threads only parse and format.
@@ -112,12 +126,39 @@ fn serve_until(
                     503,
                     &obj([("error", json_str("connection limit reached"))]),
                 );
+            } else if let Some(retry_after) = over_rate_limit(&mut stream, &opts, &buckets) {
+                let _ = respond_rate_limited(&mut stream, retry_after);
             } else {
                 let _ = handle_connection(stream, &svc, &opts);
             }
             active.fetch_sub(1, Ordering::SeqCst);
         });
     }
+}
+
+/// Spend one token from the connecting peer's bucket; `Some(secs)` =
+/// the peer is over its budget and should retry after that long.
+/// Checked before the request is even read, so a flooding client costs
+/// one accept and one small write, never a parse or a registry lock.
+fn over_rate_limit(
+    stream: &mut TcpStream,
+    opts: &HttpOptions,
+    buckets: &Mutex<HashMap<IpAddr, TokenBucket>>,
+) -> Option<u64> {
+    if opts.rate_limit <= 0.0 {
+        return None;
+    }
+    let peer = stream.peer_addr().ok()?.ip();
+    let mut map = buckets.lock().unwrap();
+    // Bound the table: buckets that have refilled to full are
+    // indistinguishable from fresh ones, so they can be dropped.
+    if map.len() > 1024 {
+        map.retain(|_, b| !b.is_full());
+    }
+    let bucket = map
+        .entry(peer)
+        .or_insert_with(|| TokenBucket::new(opts.rate_limit, opts.rate_burst.max(1.0)));
+    bucket.try_take().err()
 }
 
 /// An HTTP front-end running on its own thread. Dropping it does *not*
@@ -176,6 +217,10 @@ fn handle_connection(
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    // Injection tap: a slow client dribbling its request in.
+    if faults::inject("http.read", &[Fault::Delay]).is_some() {
+        faults::small_delay();
+    }
     let (method, path, auth, body) = match read_request(&mut stream) {
         Ok(req) => req,
         Err(e) => return respond(&mut stream, 400, &obj([("error", json_str(&e))])),
@@ -214,11 +259,12 @@ fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payloa
                 .cluster()
                 .workers()
                 .into_iter()
-                .map(|(id, addr, live)| {
+                .map(|w| {
                     obj([
-                        ("id", id.to_string()),
-                        ("addr", json_str(&addr)),
-                        ("live", live.to_string()),
+                        ("id", w.id.to_string()),
+                        ("addr", json_str(&w.addr)),
+                        ("live", w.live.to_string()),
+                        ("state", json_str(w.state)),
                     ])
                 })
                 .collect();
@@ -232,7 +278,17 @@ fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payloa
         }
         ("POST", ["shards"]) => {
             return match svc.shards().start(body) {
-                Ok(id) => json(201, obj([("id", id.to_string())])),
+                // `body_crc` echoes what this worker actually received;
+                // the coordinator compares it against what it sent, so a
+                // spec corrupted in flight is re-dispatched instead of
+                // silently analyzed wrong.
+                Ok(id) => json(
+                    201,
+                    obj([
+                        ("id", id.to_string()),
+                        ("body_crc", crc32(body.as_bytes()).to_string()),
+                    ]),
+                ),
                 Err(e) => json(400, obj([("error", json_str(&e))])),
             };
         }
@@ -255,6 +311,34 @@ fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payloa
             return match parse_id(id).map(|id| svc.shards().cancel(id)) {
                 Some(true) => json(200, obj([("ok", "true".into())])),
                 _ => json(404, obj([("error", json_str("no such shard"))])),
+            };
+        }
+        ("GET", ["store"]) => {
+            return match svc.store_inventory() {
+                Some(entries) => {
+                    let total: u64 = entries.iter().map(|e| e.bytes).sum();
+                    let items: Vec<String> = entries
+                        .iter()
+                        .map(|e| {
+                            obj([
+                                ("key", json_str(&e.key)),
+                                ("bytes", e.bytes.to_string()),
+                                ("age_secs", e.age_secs.to_string()),
+                            ])
+                        })
+                        .collect();
+                    json(
+                        200,
+                        obj([
+                            ("count", entries.len().to_string()),
+                            ("bytes", total.to_string()),
+                            ("entries", format!("[{}]", items.join(","))),
+                        ]),
+                    )
+                }
+                None => {
+                    json(404, obj([("error", json_str("no result store (start with --state)"))]))
+                }
             };
         }
         _ => {}
@@ -382,6 +466,12 @@ fn status_json(entry: &Arc<JobEntry>) -> String {
         }
         JobStatus::Failed { error } => fields.push(("error", json_str(error))),
         _ => {}
+    }
+    // A job that completed only because the coordinator fell back to
+    // local compute is still correct, but the operator should know the
+    // cluster wasn't. (Absent entirely when the job never degraded.)
+    if entry.is_degraded() {
+        fields.push(("degraded", "true".into()));
     }
     obj(fields)
 }
@@ -668,6 +758,7 @@ fn reason(code: u16) -> &'static str {
         405 => "Method Not Allowed",
         409 => "Conflict",
         422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
@@ -681,8 +772,7 @@ fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()>
         body.len()
     );
     stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+    write_body(stream, body.as_bytes())
 }
 
 fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Result<()> {
@@ -693,6 +783,34 @@ fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Res
         body.len()
     );
     stream.write_all(head.as_bytes())?;
+    write_body(stream, body)
+}
+
+/// `429 Too Many Requests` with the `Retry-After` hint a well-behaved
+/// client backs off by.
+fn respond_rate_limited(stream: &mut TcpStream, retry_after_secs: u64) -> std::io::Result<()> {
+    let body = obj([("error", json_str("rate limit exceeded"))]);
+    let head = format!(
+        "HTTP/1.1 429 {}\r\nContent-Type: application/json\r\n\
+         Retry-After: {retry_after_secs}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(429),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Write a response body after its head — with an injection tap that
+/// hangs up halfway through (the declared `Content-Length` then never
+/// arrives, which clients must treat as a failed call, not a short
+/// success).
+fn write_body(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    if faults::inject("http.respond", &[Fault::Disconnect]).is_some() {
+        stream.write_all(&body[..body.len() / 2])?;
+        stream.flush()?;
+        return stream.shutdown(std::net::Shutdown::Both);
+    }
     stream.write_all(body)?;
     stream.flush()
 }

@@ -96,11 +96,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::net::Policy;
 use crate::pipeline::{Generator, JobCtrl, JobResult, JobSpec, Phase, PipelineError};
 
 use cluster::Cluster;
-pub use cluster::run_worker_agent;
-use store::{JobLog, LogOutcome, ResultStore};
+pub use cluster::{run_worker_agent, run_worker_agent_with, WorkerView};
+use store::{JobLog, LoadOutcome, LogOutcome, ResultStore};
+pub use store::StoreEntry;
 
 /// Observable job state. `Failed` carries the error's rendered message;
 /// the owned structured [`PipelineError`] is delivered once, by
@@ -204,6 +206,11 @@ impl JobEntry {
         self.ctrl.cancel();
     }
 
+    /// Did this job's cluster path degrade to local compute?
+    pub(crate) fn is_degraded(&self) -> bool {
+        self.ctrl.is_degraded()
+    }
+
     /// Block until the entry reaches a terminal state (does not consume
     /// the outcome).
     fn wait_finished(&self) {
@@ -293,6 +300,15 @@ impl JobHandle {
         self.entry.cancel();
     }
 
+    /// `true` once the job's cluster path has fallen back to local
+    /// compute (all workers stale/quarantined, or a shard failed
+    /// mid-sweep). The result — if any — is still byte-identical to a
+    /// healthy run; this flag only reports that the *cluster* wasn't.
+    /// Also surfaced as `"degraded":true` in the HTTP status object.
+    pub fn degraded(&self) -> bool {
+        self.entry.is_degraded()
+    }
+
     /// Block until the job finishes and take its outcome. A cancelled
     /// job yields `Err(`[`PipelineError::Cancelled`]`)`.
     pub fn wait(self) -> Result<JobResult, PipelineError> {
@@ -375,6 +391,9 @@ pub struct ServiceBuilder {
     finished_ttl: Option<Duration>,
     heartbeat_timeout: Duration,
     auth_token: Option<String>,
+    policy: Policy,
+    store_max_bytes: Option<u64>,
+    store_ttl: Option<Duration>,
 }
 
 impl ServiceBuilder {
@@ -436,16 +455,64 @@ impl ServiceBuilder {
         self
     }
 
+    /// The full failure-handling policy for this service's outgoing
+    /// cluster calls (deadline, retries, breaker). See
+    /// [`crate::net::Policy`].
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Per-attempt deadline for outgoing cluster calls (default 10s).
+    pub fn call_timeout(mut self, timeout: Duration) -> Self {
+        self.policy.call_timeout = timeout;
+        self
+    }
+
+    /// Extra attempts after a failed cluster call (default 2).
+    pub fn retries(mut self, retries: u32) -> Self {
+        self.policy.retries = retries;
+        self
+    }
+
+    /// Consecutive failed calls before a worker is quarantined behind
+    /// its circuit breaker (default 3).
+    pub fn breaker_threshold(mut self, threshold: u32) -> Self {
+        self.policy.breaker_threshold = threshold;
+        self
+    }
+
+    /// Byte budget for the content-addressed result store; oldest
+    /// results are evicted past it. Default: unbounded.
+    pub fn store_max_bytes(mut self, bytes: u64) -> Self {
+        self.store_max_bytes = Some(bytes);
+        self
+    }
+
+    /// Age limit for stored results (enforced after each save).
+    /// Default: forever.
+    pub fn store_ttl(mut self, ttl: Duration) -> Self {
+        self.store_ttl = Some(ttl);
+        self
+    }
+
     pub fn build(self) -> Service {
         let (log, store, replayed, max_id) = match &self.state_dir {
             None => (None, None, Vec::new(), 0),
             Some(dir) => {
                 let log_path = dir.join("jobs.log");
-                let replayed = JobLog::replay(&log_path);
+                // `recover`, not `replay`: a corrupt tail is copied
+                // aside and truncated so this process's appends are not
+                // shadowed behind a bad frame forever.
+                let replayed = JobLog::recover(&log_path);
                 let max_id = replayed.iter().map(|r| r.id).max().unwrap_or(0);
                 (
                     JobLog::open(&log_path).ok(),
-                    Some(ResultStore::new(&dir.join("results"))),
+                    Some(ResultStore::with_bounds(
+                        &dir.join("results"),
+                        self.store_max_bytes,
+                        self.store_ttl,
+                    )),
                     replayed,
                     max_id,
                 )
@@ -453,6 +520,7 @@ impl ServiceBuilder {
         };
         let cluster = Arc::new(Cluster::new(self.heartbeat_timeout));
         cluster.set_auth(self.auth_token);
+        cluster.set_policy(self.policy);
         let inner = Arc::new(Inner {
             workers: self.workers,
             cache_dir: self.cache_dir,
@@ -487,7 +555,18 @@ impl ServiceBuilder {
                     None => FinLabel::Failed("interrupted by service restart".into()),
                 };
                 let outcome = match (&r.outcome, &r.store_key, &inner.store) {
-                    (Some(LogOutcome::Done), Some(key), Some(st)) => st.load(key).map(Ok),
+                    (Some(LogOutcome::Done), Some(key), Some(st)) => match st.load_checked(key) {
+                        LoadOutcome::Hit(res) => Some(Ok(res)),
+                        // Absent file: label-only entry, as before.
+                        LoadOutcome::Miss => None,
+                        // A corrupt artifact was renamed aside: the
+                        // entry stays Done (that's what history says)
+                        // but its payload is the structured quarantine
+                        // error, so a result fetch explains itself.
+                        LoadOutcome::Quarantined(path) => {
+                            Some(Err(PipelineError::Quarantined { path }))
+                        }
+                    },
                     _ => None,
                 };
                 let entry = Arc::new(JobEntry {
@@ -534,6 +613,9 @@ impl Service {
             finished_ttl: None,
             heartbeat_timeout: cluster::DEFAULT_HEARTBEAT_TIMEOUT,
             auth_token: None,
+            policy: Policy::default(),
+            store_max_bytes: None,
+            store_ttl: None,
         }
     }
 
@@ -556,7 +638,10 @@ impl Service {
         // terminal and the scheduler is never touched.
         if let Some(store) = &self.inner.store {
             if let Some(key) = store::store_key(&spec) {
-                if let Some(res) = store.load(&key) {
+                // `load_checked`: a corrupt file is quarantined aside
+                // here and the submission falls through to a real run,
+                // whose save then repopulates the key — self-healing.
+                if let LoadOutcome::Hit(res) = store.load_checked(&key) {
                     let entry = Arc::new(JobEntry {
                         id,
                         spec,
@@ -708,6 +793,12 @@ impl Service {
         &self.inner.shards
     }
 
+    /// Inventory of the content-addressed result store (the `GET
+    /// /store` payload); `None` when the service has no state dir.
+    pub fn store_inventory(&self) -> Option<Vec<StoreEntry>> {
+        self.inner.store.as_ref().map(|s| s.inventory())
+    }
+
     pub(crate) fn entry(&self, id: u64) -> Option<Arc<JobEntry>> {
         self.inner.jobs.lock().unwrap().get(&id).cloned()
     }
@@ -780,8 +871,10 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
     // registered the region range is sharded across them (merging
     // byte-identically); with none the hook declines and the local
     // engine runs exactly as before.
-    let generator: Arc<dyn Generator> =
-        Arc::new(cluster::ClusterGenerator(Arc::clone(&inner.cluster)));
+    let generator: Arc<dyn Generator> = Arc::new(cluster::ClusterGenerator {
+        cluster: Arc::clone(&inner.cluster),
+        ctrl: Some(Arc::clone(&entry.ctrl)),
+    });
     // A panicking stage must fail the job, not kill the executor (the
     // scheduler already forwards task panics to the submitting thread —
     // which is us). AssertUnwindSafe: the pipeline owns all its state
@@ -801,6 +894,13 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
         Ok(Err(PipelineError::Cancelled)) => {
             (FinLabel::Cancelled, Err(PipelineError::Cancelled))
         }
+        // A failure after the cluster degraded to local compute gets
+        // the degradation attached: the caller should know the error
+        // happened *under* a broken cluster, not a healthy one.
+        Ok(Err(e)) if entry.ctrl.is_degraded() => (
+            FinLabel::Failed(format!("degraded: {e}")),
+            Err(PipelineError::Degraded { source: Box::new(e) }),
+        ),
         Ok(Err(e)) => (FinLabel::Failed(e.to_string()), Err(e)),
         Err(payload) => {
             let msg = payload

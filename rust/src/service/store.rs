@@ -28,8 +28,10 @@ use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, SystemTime};
 
 use crate::dse::precision::{Encoding, Sign};
+use crate::faults::{self, Fault};
 use crate::dse::Coeffs;
 use crate::pipeline::{Degree, Implementation, JobResult, JobSpec, SynthPoint, VerifyReport};
 
@@ -195,6 +197,25 @@ impl JobLog {
         w_u32(&mut frame, payload.len() as u32);
         w_u32(&mut frame, crc32(payload));
         frame.extend_from_slice(payload);
+        // Injection taps (inline no-ops unless `fault-injection` is
+        // compiled in and armed): the three crash shapes recover/replay
+        // must absorb — a torn frame, a flipped payload byte, a write
+        // that never reaches the platters.
+        match faults::inject("store.log", &[Fault::ShortWrite, Fault::Corrupt, Fault::FsyncFail]) {
+            Some(Fault::ShortWrite) => {
+                let cut = 1 + faults::rand_below(frame.len().min(8));
+                frame.truncate(frame.len() - cut);
+            }
+            Some(Fault::Corrupt) => {
+                let at = 8 + faults::rand_below(frame.len() - 8);
+                frame[at] ^= 0x01;
+            }
+            Some(Fault::FsyncFail) => {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            _ => {}
+        }
         let mut f = self.file.lock().unwrap();
         // Durability is best-effort: a full disk must not take the
         // (still correct in-memory) service down, so write errors are
@@ -249,17 +270,54 @@ impl JobLog {
     /// semantics); a finish for an unknown id is ignored; a duplicate
     /// submit for an id keeps the first spec.
     pub fn replay(path: &Path) -> Vec<ReplayedJob> {
+        JobLog::scan(path).0
+    }
+
+    /// [`JobLog::replay`] plus repair: when the scan stops short of the
+    /// file's end (torn or corrupt tail), the damaged log is copied
+    /// aside as `<name>.quarantined` and the live file is truncated
+    /// back to its valid prefix — so future appends extend good frames
+    /// instead of hiding behind a bad one forever. The service's build
+    /// path uses this; `replay` stays read-only for tools and tests.
+    pub fn recover(path: &Path) -> Vec<ReplayedJob> {
+        let (jobs, valid, total) = JobLog::scan(path);
+        if valid < total {
+            let mut q = path.as_os_str().to_os_string();
+            q.push(".quarantined");
+            let q = PathBuf::from(q);
+            let _ = fs::copy(path, &q);
+            let truncated = OpenOptions::new()
+                .write(true)
+                .open(path)
+                .and_then(|f| f.set_len(valid))
+                .is_ok();
+            eprintln!(
+                "polygen: jobs.log has a corrupt tail ({valid} of {total} bytes valid); \
+                 damaged copy quarantined at {}{}",
+                q.display(),
+                if truncated { ", live log truncated to the valid prefix" } else { "" }
+            );
+        }
+        jobs
+    }
+
+    /// Parse the log: the replayed jobs, the byte length of the valid
+    /// prefix (frames fully applied), and the file's total length.
+    /// `valid == total` means the log is clean.
+    fn scan(path: &Path) -> (Vec<ReplayedJob>, u64, u64) {
         let mut buf = Vec::new();
         match File::open(path) {
             Ok(mut f) => {
                 if f.read_to_end(&mut buf).is_err() {
-                    return Vec::new();
+                    return (Vec::new(), 0, 0);
                 }
             }
-            Err(_) => return Vec::new(),
+            Err(_) => return (Vec::new(), 0, 0),
         }
+        let total = buf.len() as u64;
         let mut jobs: Vec<ReplayedJob> = Vec::new();
         let mut rd = Reader::new(&buf);
+        let mut valid = 0u64;
         loop {
             let Some(len) = rd.u32() else { break };
             let Some(crc) = rd.u32() else { break };
@@ -272,9 +330,13 @@ impl JobLog {
             match kind {
                 REC_SUBMIT => {
                     let Some(toml) = p.string() else { break };
-                    let Ok(spec) = JobSpec::from_toml(&toml) else { continue };
-                    if jobs.iter().all(|j| j.id != id) {
-                        jobs.push(ReplayedJob { id, spec, outcome: None, store_key: None });
+                    // An unparseable spec in a checksum-valid frame is a
+                    // version skew, not corruption: skip the record but
+                    // keep the frame in the valid prefix.
+                    if let Ok(spec) = JobSpec::from_toml(&toml) {
+                        if jobs.iter().all(|j| j.id != id) {
+                            jobs.push(ReplayedJob { id, spec, outcome: None, store_key: None });
+                        }
                     }
                 }
                 REC_FINISH => {
@@ -300,8 +362,9 @@ impl JobLog {
                 }
                 _ => break,
             }
+            valid = rd.pos as u64;
         }
-        jobs
+        (jobs, valid, total)
     }
 }
 
@@ -309,16 +372,53 @@ impl JobLog {
 // The content-addressed result store.
 
 const PGJR_MAGIC: &[u8; 4] = b"PGJR";
-const PGJR_VERSION: u32 = 1;
+/// v2 appends a whole-file CRC-32 trailer, so *any* flipped bit fails
+/// closed (v1 relied on the embedded-key echo plus field decoding,
+/// which a coefficient flip could slip past). v1 files fail the
+/// trailer check, get quarantined on first load, and are recomputed —
+/// the upgrade is self-healing.
+const PGJR_VERSION: u32 = 2;
 
-/// Content-addressed `JobResult` files under `<state>/results/`.
+/// What [`ResultStore::load_checked`] found under a key.
+pub(crate) enum LoadOutcome {
+    /// A CRC-valid result whose embedded key matches.
+    Hit(JobResult),
+    /// No file, or a CRC-valid file for a *different* key (FNV
+    /// collision) — the file is left alone.
+    Miss,
+    /// The file failed its integrity check and was renamed aside to
+    /// the returned path; resubmitting the spec recomputes it.
+    Quarantined(PathBuf),
+}
+
+/// One stored result, as reported by `GET /store`.
+#[derive(Clone, Debug)]
+pub struct StoreEntry {
+    /// The content key (canonical spec TOML) the file embeds, or
+    /// `"(unreadable)"` when even the header cannot be parsed.
+    pub key: String,
+    /// On-disk size.
+    pub bytes: u64,
+    /// Seconds since the file was written.
+    pub age_secs: u64,
+}
+
+/// Content-addressed `JobResult` files under `<state>/results/`,
+/// optionally bounded by a byte budget and/or an age limit (both
+/// enforced after each save, oldest files first).
 pub(crate) struct ResultStore {
     dir: PathBuf,
+    max_bytes: Option<u64>,
+    ttl: Option<Duration>,
 }
 
 impl ResultStore {
     pub fn new(dir: &Path) -> ResultStore {
-        ResultStore { dir: dir.to_path_buf() }
+        ResultStore::with_bounds(dir, None, None)
+    }
+
+    pub fn with_bounds(dir: &Path, max_bytes: Option<u64>, ttl: Option<Duration>) -> ResultStore {
+        ResultStore { dir: dir.to_path_buf(), max_bytes, ttl }
     }
 
     /// Where `key`'s result lives (whether or not it exists yet).
@@ -333,20 +433,138 @@ impl ResultStore {
         if fs::create_dir_all(&self.dir).is_err() {
             return;
         }
-        let bytes = encode_result(key, res);
+        let mut bytes = encode_result(key, res);
+        // Injection tap: a save that lands short or with a flipped bit
+        // is exactly what `load_checked`'s quarantine path must absorb.
+        match faults::inject("store.result", &[Fault::ShortWrite, Fault::Corrupt]) {
+            Some(Fault::ShortWrite) => {
+                let cut = 1 + faults::rand_below(bytes.len().min(16));
+                bytes.truncate(bytes.len() - cut);
+            }
+            Some(Fault::Corrupt) => {
+                let at = faults::rand_below(bytes.len());
+                bytes[at] ^= 0x01;
+            }
+            _ => {}
+        }
         let path = self.path_for(key);
         let tmp = path.with_extension(format!("tmp{}", std::process::id()));
         let ok = fs::write(&tmp, &bytes).is_ok() && fs::rename(&tmp, &path).is_ok();
         if !ok {
             let _ = fs::remove_file(&tmp);
         }
+        self.prune();
     }
 
-    /// Load the result stored under `key`, verifying the embedded key
-    /// (hash collisions and truncated files degrade to a miss).
+    /// Load the result stored under `key`, verifying the whole-file
+    /// CRC and the embedded key; any non-hit degrades to `None`
+    /// (corrupt files are still quarantined as a side effect).
     pub fn load(&self, key: &str) -> Option<JobResult> {
-        let bytes = fs::read(self.path_for(key)).ok()?;
-        decode_result(key, &bytes)
+        match self.load_checked(key) {
+            LoadOutcome::Hit(res) => Some(res),
+            _ => None,
+        }
+    }
+
+    /// Load with the full verdict: hit, miss, or corrupt-and-now-
+    /// quarantined (the file is renamed to `<name>.pgjr.quarantined`
+    /// so the next submission of the same spec recomputes instead of
+    /// tripping over it again).
+    pub fn load_checked(&self, key: &str) -> LoadOutcome {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return LoadOutcome::Miss,
+        };
+        match decode_checked(key, &bytes) {
+            Decoded::Ok(res) => LoadOutcome::Hit(res),
+            Decoded::KeyMismatch => LoadOutcome::Miss,
+            Decoded::Corrupt => {
+                let mut q = path.as_os_str().to_os_string();
+                q.push(".quarantined");
+                let q = PathBuf::from(q);
+                if fs::rename(&path, &q).is_err() {
+                    // Read-only store: leave it; every load re-verifies.
+                    let _ = fs::remove_file(&path);
+                }
+                eprintln!(
+                    "polygen: stored result {} failed its integrity check; \
+                     quarantined at {} (resubmit to recompute)",
+                    path.display(),
+                    q.display()
+                );
+                LoadOutcome::Quarantined(q)
+            }
+        }
+    }
+
+    /// Everything currently stored, key-sorted — the `GET /store`
+    /// inventory. Reads each file's embedded key best-effort (corrupt
+    /// files still occupy disk, so they are listed too).
+    pub fn inventory(&self) -> Vec<StoreEntry> {
+        let Ok(entries) = fs::read_dir(&self.dir) else { return Vec::new() };
+        let now = SystemTime::now();
+        let mut out = Vec::new();
+        for e in entries.flatten() {
+            let path = e.path();
+            if path.extension().map_or(true, |x| x != "pgjr") {
+                continue;
+            }
+            let Ok(md) = e.metadata() else { continue };
+            let key = fs::read(&path)
+                .ok()
+                .and_then(|bytes| embedded_key(&bytes))
+                .unwrap_or_else(|| "(unreadable)".into());
+            let age_secs = md
+                .modified()
+                .ok()
+                .and_then(|m| now.duration_since(m).ok())
+                .map_or(0, |d| d.as_secs());
+            out.push(StoreEntry { key, bytes: md.len(), age_secs });
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// Enforce the TTL, then the byte budget (oldest files first).
+    /// Best-effort: an unreadable directory just skips the pass.
+    fn prune(&self) {
+        if self.max_bytes.is_none() && self.ttl.is_none() {
+            return;
+        }
+        let Ok(entries) = fs::read_dir(&self.dir) else { return };
+        let mut files: Vec<(PathBuf, u64, SystemTime)> = Vec::new();
+        for e in entries.flatten() {
+            let path = e.path();
+            if path.extension().map_or(true, |x| x != "pgjr") {
+                continue;
+            }
+            let Ok(md) = e.metadata() else { continue };
+            let modified = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            files.push((path, md.len(), modified));
+        }
+        if let Some(ttl) = self.ttl {
+            let now = SystemTime::now();
+            files.retain(|(path, _, modified)| {
+                let expired = now.duration_since(*modified).map_or(false, |age| age > ttl);
+                if expired {
+                    let _ = fs::remove_file(path);
+                }
+                !expired
+            });
+        }
+        if let Some(cap) = self.max_bytes {
+            let mut total: u64 = files.iter().map(|(_, len, _)| *len).sum();
+            files.sort_by_key(|(_, _, modified)| *modified);
+            for (path, len, _) in &files {
+                if total <= cap {
+                    break;
+                }
+                if fs::remove_file(path).is_ok() {
+                    total -= len;
+                }
+            }
+        }
     }
 }
 
@@ -421,17 +639,61 @@ fn encode_result(key: &str, res: &JobResult) -> Vec<u8> {
         }
         None => out.push(0),
     }
+    let crc = crc32(&out);
+    w_u32(&mut out, crc);
     out
 }
 
-fn decode_result(key: &str, bytes: &[u8]) -> Option<JobResult> {
+/// Why a `.pgjr` file did not yield a hit for a key.
+enum Decoded {
+    Ok(JobResult),
+    /// CRC-valid file for a different key: a genuine FNV collision, not
+    /// damage — the file belongs to some other spec and must survive.
+    KeyMismatch,
+    /// Failed the CRC trailer, or (CRC-valid but) structurally
+    /// unparseable — either way the file is not trustworthy.
+    Corrupt,
+}
+
+fn decode_checked(key: &str, bytes: &[u8]) -> Decoded {
+    // The trailer covers everything before it, so check it first: a
+    // single flipped bit anywhere fails closed here.
+    if bytes.len() < 4 {
+        return Decoded::Corrupt;
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 4);
+    let crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(payload) != crc {
+        return Decoded::Corrupt;
+    }
+    let mut rd = Reader::new(payload);
+    if rd.take(4) != Some(PGJR_MAGIC.as_slice()) || rd.u32() != Some(PGJR_VERSION) {
+        return Decoded::Corrupt;
+    }
+    match rd.string() {
+        Some(k) if k == key => {}
+        Some(_) => return Decoded::KeyMismatch,
+        None => return Decoded::Corrupt,
+    }
+    match decode_body(&mut rd) {
+        Some(res) if rd.done() => Decoded::Ok(res),
+        _ => Decoded::Corrupt,
+    }
+}
+
+/// Best-effort read of the key a `.pgjr` file embeds — no CRC check,
+/// the inventory lists damaged files too.
+fn embedded_key(bytes: &[u8]) -> Option<String> {
     let mut rd = Reader::new(bytes);
-    if rd.take(4)? != PGJR_MAGIC || rd.u32()? != PGJR_VERSION {
+    if rd.take(4)? != PGJR_MAGIC {
         return None;
     }
-    if rd.string()? != key {
-        return None; // FNV collision: treat as a miss
-    }
+    let _version = rd.u32()?;
+    rd.string()
+}
+
+/// The fields after the embedded key (shared by every version so far).
+fn decode_body(rd: &mut Reader<'_>) -> Option<JobResult> {
     let func = rd.string()?;
     let bits = rd.u32()?;
     let lookup_bits = rd.u32()?;
@@ -496,9 +758,6 @@ fn decode_result(key: &str, bytes: &[u8]) -> Option<JobResult> {
         }
         _ => return None,
     };
-    if !rd.done() {
-        return None;
-    }
     Some(JobResult { func, bits, lookup_bits, implementation, synth, verify, rtl: Vec::new() })
 }
 
@@ -554,17 +813,126 @@ mod tests {
         assert_eq!(back.verify.as_ref().unwrap().total, res.verify.as_ref().unwrap().total);
         // A different key never aliases onto this file's contents.
         assert!(store.load("other-key").is_none());
-        // Corruption degrades to a miss.
+        // Corruption fails the whole-file CRC: a strict miss (v1 could
+        // let a coefficient flip decode), and the damaged file is
+        // quarantined aside so the key recomputes cleanly.
         let path = store.path_for(&key);
         let mut bytes = fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
         fs::write(&path, &bytes).unwrap();
-        // Either the key echo or a field decode breaks; flipping one
-        // byte can land in coeffs, so double-check against the oracle.
-        if let Some(loaded) = store.load(&key) {
-            assert_ne!(loaded.implementation.coeffs, res.implementation.coeffs);
+        assert!(store.load(&key).is_none(), "any flipped bit must fail closed");
+        assert!(!path.exists(), "corrupt file must be moved aside");
+        match store.load_checked(&key) {
+            LoadOutcome::Miss => {}
+            LoadOutcome::Hit(_) => panic!("quarantined key must not hit"),
+            LoadOutcome::Quarantined(_) => panic!("quarantine must not repeat"),
         }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught_and_quarantined() {
+        // The satellite-4 sweep at the store level: flip each byte of a
+        // stored result in turn; every variant must fail closed (no
+        // panic, no wrong result) and land in quarantine.
+        let dir = tmpdir("flip");
+        let mut spec = JobSpec::new("recip", 8);
+        spec.lookup = LookupBits::Fixed(4);
+        let res = spec.run().unwrap();
+        let key = store_key(&spec).unwrap();
+        let store = ResultStore::new(&dir);
+        store.save(&key, &res);
+        let path = store.path_for(&key);
+        let clean = fs::read(&path).unwrap();
+        let mut q = path.as_os_str().to_os_string();
+        q.push(".quarantined");
+        let q = PathBuf::from(q);
+        for at in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x01;
+            fs::write(&path, &bad).unwrap();
+            match store.load_checked(&key) {
+                LoadOutcome::Quarantined(p) => assert_eq!(p, q),
+                LoadOutcome::Hit(_) => panic!("flip at byte {at} decoded as a hit"),
+                LoadOutcome::Miss => panic!("flip at byte {at} read as a plain miss"),
+            }
+            assert!(!path.exists(), "flip at byte {at} must be moved aside");
+            fs::remove_file(&q).ok();
+        }
+        // The clean bytes still load after all that.
+        fs::write(&path, &clean).unwrap();
+        assert!(store.load(&key).is_some());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_quarantines_and_truncates_a_corrupt_tail() {
+        let dir = tmpdir("recover");
+        let path = dir.join("jobs.log");
+        let log = JobLog::open(&path).unwrap();
+        let spec = JobSpec::new("recip", 8);
+        log.append_submit(1, &spec);
+        let valid_len = fs::metadata(&path).unwrap().len();
+        log.append_submit(2, &spec);
+        drop(log);
+        let mut damaged = fs::read(&path).unwrap();
+        let last = damaged.len() - 1;
+        damaged[last] ^= 0xFF;
+        fs::write(&path, &damaged).unwrap();
+
+        let jobs = JobLog::recover(&path);
+        assert_eq!(jobs.len(), 1, "the frame behind the corruption is gone");
+        assert_eq!(
+            fs::metadata(&path).unwrap().len(),
+            valid_len,
+            "live log must be truncated back to its valid prefix"
+        );
+        let q = dir.join("jobs.log.quarantined");
+        assert_eq!(
+            fs::metadata(&q).unwrap().len() as usize,
+            damaged.len(),
+            "damaged copy must be kept for forensics"
+        );
+
+        // The repaired log accepts appends that replay cleanly —
+        // without the truncation they would hide behind the bad frame.
+        let log = JobLog::open(&path).unwrap();
+        log.append_finish(1, &LogOutcome::Done, None);
+        drop(log);
+        let jobs = JobLog::recover(&path);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].outcome, Some(LogOutcome::Done));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_bounds_prune_and_inventory_lists() {
+        let dir = tmpdir("bounds");
+        let mut spec = JobSpec::new("recip", 8);
+        spec.lookup = LookupBits::Fixed(4);
+        let res = spec.run().unwrap();
+        let key = store_key(&spec).unwrap();
+
+        // Unbounded: the file stays and the inventory reports it.
+        let store = ResultStore::new(&dir);
+        store.save(&key, &res);
+        let inv = store.inventory();
+        assert_eq!(inv.len(), 1);
+        assert_eq!(inv[0].key, key, "inventory must surface the embedded key");
+        assert_eq!(inv[0].bytes, fs::metadata(store.path_for(&key)).unwrap().len());
+
+        // A zero-byte budget evicts everything on the save-time prune.
+        let bounded = ResultStore::with_bounds(&dir, Some(0), None);
+        bounded.save(&key, &res);
+        assert!(bounded.inventory().is_empty(), "byte cap must evict");
+        assert!(bounded.load(&key).is_none());
+
+        // A zero TTL expires files as soon as the clock ticks past
+        // their mtime; an hour-long TTL keeps them.
+        let keeper = ResultStore::with_bounds(&dir, None, Some(Duration::from_secs(3600)));
+        keeper.save(&key, &res);
+        assert_eq!(keeper.inventory().len(), 1, "young file must survive its TTL");
         fs::remove_dir_all(&dir).ok();
     }
 

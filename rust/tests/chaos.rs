@@ -1,0 +1,341 @@
+//! Chaos suite: seeded deterministic fault injection against the real
+//! coordinator + worker stack (compiled only with `--features
+//! fault-injection`; tier-1 builds never see this file's cost).
+//!
+//! Three campaigns, serialized on a process lock because the fault
+//! registry is process-wide:
+//!
+//! - **cluster**: ≥100 seeded coordinator+2-worker generation runs with
+//!   connection drops, delays, refusals, torn/corrupted payloads and
+//!   dropped heartbeats on every coordinator↔worker exchange. Every run
+//!   must finish (no hangs) with a merged space byte-identical to the
+//!   unfaulted single-node run — degraded local fallback is allowed,
+//!   silent corruption is not.
+//! - **store**: repeated restarts over one durable state dir while the
+//!   job log and result store suffer torn frames, bit flips and failed
+//!   fsyncs; every submission still yields the baseline result.
+//! - **http**: slow reads and mid-response disconnects on the JSON
+//!   front-end; a retrying client always converges and the listener
+//!   survives.
+//!
+//! `POLYGEN_CHAOS_SEED` / `POLYGEN_CHAOS_RUNS` override the pinned seed
+//! and round count (CI runs the pinned seed plus one fresh seed per
+//! build).
+
+#![cfg(feature = "fault-injection")]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use polygen::faults::{self, FaultPlan};
+use polygen::net::Policy;
+use polygen::pipeline::{JobResult, JobSpec, LookupBits, PipelineError};
+use polygen::service::http::HttpServer;
+use polygen::service::{run_worker_agent_with, JobHandle, Service};
+
+/// The fault registry is process-global, so campaigns must not overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn seed_base() -> u64 {
+    std::env::var("POLYGEN_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_D00D)
+}
+
+fn rounds(default: u64) -> u64 {
+    std::env::var("POLYGEN_CHAOS_RUNS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// Weyl-sequence round mixing: distinct, reproducible per-round seeds.
+fn round_seed(base: u64, i: u64) -> u64 {
+    base ^ i.wrapping_mul(0x9E37_79B9_97F4_A7C5)
+}
+
+fn quick_spec(func: &str) -> JobSpec {
+    let mut s = JobSpec::new(func, 8);
+    s.lookup = LookupBits::Fixed(4);
+    s
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("polygen_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Tight policy so faulted calls fail fast and rounds stay short.
+fn tight_policy() -> Policy {
+    Policy {
+        call_timeout: Duration::from_secs(2),
+        retries: 2,
+        backoff: Duration::from_millis(10),
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(200),
+    }
+}
+
+/// Wait for a handle with a wall-clock deadline: a round that neither
+/// finishes nor fails within it is a hang, the one outcome the fault
+/// layer must never produce. Returns the outcome plus the job's
+/// degraded flag (read post-completion, before `wait` consumes the
+/// handle).
+fn wait_deadline(h: JobHandle, what: &str) -> (Result<JobResult, PipelineError>, bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !h.status().is_finished() {
+        assert!(Instant::now() < deadline, "{what}: job hung under fault injection");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let degraded = h.degraded();
+    (h.wait(), degraded)
+}
+
+/// The byte-identity contract: whatever the faults did, the surviving
+/// result must match the unfaulted baseline exactly.
+fn assert_identical(got: &JobResult, want: &JobResult, what: &str) {
+    assert_eq!(got.lookup_bits, want.lookup_bits, "{what}: lookup_bits diverged");
+    assert_eq!(got.implementation.k, want.implementation.k, "{what}: k diverged");
+    assert_eq!(
+        got.implementation.coeffs, want.implementation.coeffs,
+        "{what}: coefficients diverged"
+    );
+    assert_eq!(got.synth, want.synth, "{what}: synthesis estimate diverged");
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("server closes after one response");
+    let header_end =
+        raw.windows(4).position(|w| w == b"\r\n\r\n").expect("header terminator");
+    let head = String::from_utf8_lossy(&raw[..header_end]).into_owned();
+    let code: u16 =
+        head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).expect("status code");
+    (code, String::from_utf8_lossy(&raw[header_end + 4..]).into_owned())
+}
+
+#[test]
+fn cluster_runs_converge_byte_identically_under_faults() {
+    let _serial = lock();
+    let base = seed_base();
+    let n = rounds(100);
+
+    let spec = quick_spec("recip");
+    let baseline = spec.run().expect("unfaulted single-node baseline");
+
+    // Coordinator + two real workers, joined by live heartbeat agents.
+    let coord_svc = Service::builder()
+        .workers(2)
+        .policy(tight_policy())
+        .heartbeat_timeout(Duration::from_secs(60))
+        .build();
+    let coord = HttpServer::spawn(coord_svc.clone(), "127.0.0.1:0").expect("bind coordinator");
+    let (w1, w2) = (
+        HttpServer::spawn(Service::builder().workers(1).build(), "127.0.0.1:0").unwrap(),
+        HttpServer::spawn(Service::builder().workers(1).build(), "127.0.0.1:0").unwrap(),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let agents = [
+        run_worker_agent_with(
+            coord.addr().to_string(),
+            w1.addr().to_string(),
+            None,
+            Arc::clone(&stop),
+            tight_policy(),
+        ),
+        run_worker_agent_with(
+            coord.addr().to_string(),
+            w2.addr().to_string(),
+            None,
+            Arc::clone(&stop),
+            tight_policy(),
+        ),
+    ];
+    // Let both agents register (unfaulted) before the storm starts.
+    let setup_deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, list) = http(coord.addr(), "GET", "/workers", "");
+        if list.matches("\"live\":true").count() == 2 {
+            break;
+        }
+        assert!(Instant::now() < setup_deadline, "workers never registered: {list}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    faults::reset_injected();
+    let mut degraded_rounds = 0u64;
+    for i in 0..n {
+        let guard = faults::arm_guard(
+            FaultPlan::new(round_seed(base, i)).rate(120).only("cluster."),
+        );
+        let handle = coord_svc.submit(spec.clone());
+        let (got, degraded) = wait_deadline(handle, &format!("cluster round {i}"));
+        drop(guard);
+        let got = got.unwrap_or_else(|e| panic!("cluster round {i} failed: {e}"));
+        assert_identical(&got, &baseline, &format!("cluster round {i}"));
+        if degraded {
+            degraded_rounds += 1;
+        }
+    }
+    assert!(
+        faults::injected() > 0,
+        "{n} rounds at 12% per-site rate never fired a fault — the taps are dead"
+    );
+    eprintln!(
+        "chaos cluster: {n} rounds, seed {base:#x}, {} injections, {degraded_rounds} degraded",
+        faults::injected()
+    );
+
+    // Disarmed epilogue: the stack is still healthy — a clean run agrees
+    // with the baseline and the scheduler is drained but reusable.
+    let (clean, _) = wait_deadline(coord_svc.submit(spec.clone()), "clean epilogue");
+    assert_identical(&clean.expect("clean run succeeds"), &baseline, "clean epilogue");
+    polygen::pool::global().drain();
+    assert_eq!(polygen::pool::global().outstanding_jobs(), 0, "scheduler not drained");
+    let reusable = quick_spec("exp2").run().expect("scheduler reusable after chaos");
+    assert!(!reusable.implementation.coeffs.is_empty());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for a in agents {
+        let _ = a.join();
+    }
+    w1.stop();
+    w2.stop();
+    coord.stop();
+}
+
+#[test]
+fn durable_state_survives_store_faults_across_restarts() {
+    let _serial = lock();
+    let base = seed_base().rotate_left(17);
+    let n = rounds(100).min(30); // each round rebuilds the service
+    let dir = temp_dir("store");
+
+    let specs = [quick_spec("recip"), quick_spec("exp2")];
+    let baselines: Vec<JobResult> =
+        specs.iter().map(|s| s.clone().run().expect("unfaulted baseline")).collect();
+
+    faults::reset_injected();
+    for i in 0..n {
+        // Aggressive rate: every append/save is a coin flip away from a
+        // torn frame, a flipped bit or a failed fsync.
+        let guard = faults::arm_guard(
+            FaultPlan::new(round_seed(base, i)).rate(250).only("store."),
+        );
+        // A fresh build each round replays — and, when the previous
+        // round tore the tail, quarantines and truncates — the log.
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        let which = (i % 2) as usize;
+        let (got, _) = wait_deadline(
+            svc.submit(specs[which].clone()),
+            &format!("store round {i}"),
+        );
+        drop(guard);
+        let got = got.unwrap_or_else(|e| panic!("store round {i} failed: {e}"));
+        assert_identical(&got, &baselines[which], &format!("store round {i}"));
+    }
+    assert!(faults::injected() > 0, "store taps never fired");
+
+    // Disarmed: one more restart must still come up and serve both
+    // specs (store hit or recompute — either way, the baseline bytes).
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    for (spec, want) in specs.iter().zip(&baselines) {
+        let (got, _) = wait_deadline(svc.submit(spec.clone()), "store epilogue");
+        assert_identical(&got.expect("epilogue succeeds"), want, "store epilogue");
+    }
+    eprintln!(
+        "chaos store: {n} rounds, seed {base:#x}, {} injections",
+        faults::injected()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn http_front_end_survives_slow_reads_and_disconnects() {
+    let _serial = lock();
+    let base = seed_base().rotate_left(31);
+    let n = rounds(100).min(30);
+
+    let svc = Service::builder().workers(1).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    let id = {
+        let h = svc.submit(quick_spec("recip"));
+        let id = h.id();
+        wait_deadline(h, "http setup job").0.expect("setup job succeeds");
+        id
+    };
+
+    // A complete 200 exchange, or None on any transport/parse trouble
+    // (the injected disconnect truncates the body mid-flight).
+    let fetch_ok = |path: &str| -> Option<String> {
+        let mut s = TcpStream::connect(server.addr()).ok()?;
+        s.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+        s.write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n").as_bytes(),
+        )
+        .ok()?;
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).ok()?;
+        let header_end = raw.windows(4).position(|w| w == b"\r\n\r\n")?;
+        let head = String::from_utf8_lossy(&raw[..header_end]).into_owned();
+        if head.split_whitespace().nth(1) != Some("200") {
+            return None;
+        }
+        let declared: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .and_then(|v| v.trim().parse().ok())?;
+        let body = &raw[header_end + 4..];
+        // A torn response (injected disconnect) is shorter than its own
+        // Content-Length — the client-visible signature the retry eats.
+        (body.len() == declared).then(|| String::from_utf8_lossy(body).into_owned())
+    };
+
+    faults::reset_injected();
+    for i in 0..n {
+        let guard = faults::arm_guard(
+            FaultPlan::new(round_seed(base, i)).rate(300).only("http."),
+        );
+        let path = format!("/jobs/{id}");
+        let mut ok = false;
+        for _ in 0..50 {
+            if let Some(body) = fetch_ok(&path) {
+                assert!(body.contains("\"status\":\"done\""), "round {i}: {body}");
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(guard);
+        assert!(ok, "http round {i}: client never saw a complete response in 50 tries");
+    }
+    assert!(faults::injected() > 0, "http taps never fired");
+    eprintln!(
+        "chaos http: {n} rounds, seed {base:#x}, {} injections",
+        faults::injected()
+    );
+
+    // Disarmed: the listener still serves a full job lifecycle.
+    let (code, body) = http(server.addr(), "GET", &format!("/jobs/{id}/result"), "");
+    assert_eq!(code, 200, "{body}");
+    server.stop();
+}

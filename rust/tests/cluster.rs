@@ -1,8 +1,10 @@
 //! End-to-end cluster tests: sharded multi-worker generation over real
 //! TCP (byte-identical to single-node), dead-worker shard reassignment,
 //! restart replay of the durable job log, the content-addressed store
-//! fast path, registry eviction, and the listener hardening knobs
-//! (bearer auth, connection cap).
+//! fast path, registry eviction, the listener hardening knobs (bearer
+//! auth, connection cap, per-client rate limit), the store inventory
+//! route, and on-disk corruption: a rotten `.pgjr` or `jobs.log` byte
+//! must be quarantined and recomputed, never panic the service.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -166,11 +168,14 @@ fn dead_worker_shard_is_reassigned_and_job_completes() {
     let direct = spec.run().expect("direct run feasible");
     assert_eq!(via_cluster.implementation.coeffs, direct.implementation.coeffs);
 
-    // The dead worker was evicted from the registry; the survivor served
-    // the whole range (both shards).
+    // The dead worker stays in the registry (operators can see what
+    // failed) but is no longer live once its heartbeat lapses; the
+    // survivor served the whole range (both shards).
+    std::thread::sleep(Duration::from_millis(600));
     let (code, list) = http(coord.addr(), "GET", "/workers", "");
     assert_eq!(code, 200);
-    assert!(!list.contains(&dead_addr.to_string()), "dead worker still listed: {list}");
+    assert!(list.contains(&dead_addr.to_string()), "dead worker should stay listed: {list}");
+    assert_eq!(list.matches("\"live\":true").count(), 1, "only the survivor is live: {list}");
     assert!(
         shards_served_before_probe(live.addr()) >= 2,
         "survivor should have served the reassigned shard too"
@@ -261,7 +266,7 @@ fn finished_ttl_evicts_on_submission() {
 #[test]
 fn auth_token_guards_every_route() {
     let svc = Service::builder().workers(1).build();
-    let opts = HttpOptions { auth_token: Some("s3cret".into()), max_conns: 0 };
+    let opts = HttpOptions { auth_token: Some("s3cret".into()), ..HttpOptions::default() };
     let server = HttpServer::spawn_with(svc, "127.0.0.1:0", opts).expect("bind");
 
     let (code, body) = http_bytes(server.addr(), "GET", "/jobs", "", None);
@@ -278,7 +283,7 @@ fn auth_token_guards_every_route() {
 #[test]
 fn connection_cap_answers_503() {
     let svc = Service::builder().workers(1).build();
-    let opts = HttpOptions { auth_token: None, max_conns: 1 };
+    let opts = HttpOptions { max_conns: 1, ..HttpOptions::default() };
     let server = HttpServer::spawn_with(svc, "127.0.0.1:0", opts).expect("bind");
 
     // An idle connection occupies the single slot without sending a
@@ -297,6 +302,124 @@ fn connection_cap_answers_503() {
     assert_eq!(code, 200);
 
     server.stop();
+}
+
+#[test]
+fn rate_limit_answers_429_with_retry_after() {
+    let svc = Service::builder().workers(1).build();
+    // Sustained 1 req/s with a burst depth of 2: the first two
+    // back-to-back requests pass, the third is refused at the door.
+    let opts = HttpOptions { rate_limit: 1.0, rate_burst: 2.0, ..HttpOptions::default() };
+    let server = HttpServer::spawn_with(svc, "127.0.0.1:0", opts).expect("bind");
+
+    let (code, _) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 200);
+    let (code, _) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 200);
+
+    // Third request: raw exchange so the Retry-After header is visible.
+    let mut s = TcpStream::connect(server.addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"GET /jobs HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("server closes after one response");
+    assert!(raw.starts_with("HTTP/1.1 429 "), "{raw}");
+    assert!(raw.contains("Retry-After: "), "{raw}");
+    assert!(raw.contains("rate limit exceeded"), "{raw}");
+
+    // The bucket refills with time: after ~1.2 s one request fits again.
+    std::thread::sleep(Duration::from_millis(1200));
+    let (code, _) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 200, "bucket should refill at the sustained rate");
+
+    server.stop();
+}
+
+#[test]
+fn store_inventory_route_lists_results() {
+    let dir = temp_dir("inventory");
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+
+    let (code, body) = http(server.addr(), "GET", "/store", "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"count\":0"), "fresh store should be empty: {body}");
+
+    svc.submit(quick_spec("recip")).wait().expect("recip 8b R=4 feasible");
+    let (code, body) = http(server.addr(), "GET", "/store", "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"count\":1"), "{body}");
+    assert!(body.contains("\"key\":"), "{body}");
+    assert!(body.contains("\"age_secs\":"), "{body}");
+    server.stop();
+
+    // A stateless service has no store to inventory.
+    let svc2 = Service::builder().workers(1).build();
+    let server2 = HttpServer::spawn(svc2, "127.0.0.1:0").expect("bind");
+    let (code, body) = http(server2.addr(), "GET", "/store", "");
+    assert_eq!(code, 404, "{body}");
+    server2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_stored_result_is_quarantined_and_recomputed() {
+    let dir = temp_dir("quarantine");
+    let spec = quick_spec("exp2");
+    let first = {
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        svc.submit(spec.clone()).wait().expect("exp2 8b R=4 feasible")
+    }; // service dropped: the "restart"
+
+    // Rot one byte of the stored artifact on disk.
+    let results = dir.join("results");
+    let pgjr = std::fs::read_dir(&results)
+        .expect("results dir exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().map_or(false, |x| x == "pgjr"))
+        .expect("stored result exists");
+    let mut bytes = std::fs::read(&pgjr).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&pgjr, &bytes).unwrap();
+
+    // Restart over the rotten store: the build must not panic, the bad
+    // artifact is set aside, and a resubmission recomputes the same
+    // result from scratch instead of serving garbage.
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    let again = svc.submit(spec.clone()).wait().expect("recompute succeeds");
+    assert_eq!(again.implementation.coeffs, first.implementation.coeffs);
+    assert_eq!(again.lookup_bits, first.lookup_bits);
+    let quarantined = std::fs::read_dir(&results)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .any(|e| e.path().to_string_lossy().ends_with(".pgjr.quarantined"));
+    assert!(quarantined, "corrupt artifact should be set aside, not deleted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_jobs_log_byte_flip_replays_without_panic() {
+    let dir = temp_dir("logflips");
+    {
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        svc.submit(quick_spec("recip")).wait().expect("recip 8b R=4 feasible");
+    }
+    let log_path = dir.join("jobs.log");
+    let pristine = std::fs::read(&log_path).expect("job log exists");
+    assert!(!pristine.is_empty());
+
+    // Whatever single byte rots — length header, frame CRC, spec TOML,
+    // outcome record — recovery must never panic and the service must
+    // come up answering queries (possibly with fewer replayed jobs).
+    for i in 0..pristine.len() {
+        let mut bytes = pristine.clone();
+        bytes[i] ^= 0x01;
+        std::fs::write(&log_path, &bytes).unwrap();
+        let svc = Service::builder().workers(1).state_dir(&dir).build();
+        let _ = svc.status_of(1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

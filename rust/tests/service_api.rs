@@ -149,7 +149,7 @@ fn service_progress_reports_generate_phase_regions() {
     // Observe a mid-generation snapshot with sane bounds: 2^6 regions.
     let mut saw_generate = false;
     wait_for("progress snapshot", Duration::from_secs(120), || match h.status() {
-        JobStatus::Running { phase, done, total } => {
+        JobStatus::Running { phase, done, total, .. } => {
             if phase == Phase::Generate && total == 64 {
                 assert!(done <= total, "done {done} > total {total}");
                 saw_generate = done >= 1;
