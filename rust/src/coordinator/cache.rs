@@ -5,17 +5,25 @@
 //! core argument for generating the *complete* space once. This cache
 //! makes that concrete: `.pgds` files store the full region dictionaries
 //! in a small versioned little-endian binary format (hand-rolled; no
-//! serde offline).
+//! serde offline). Loads are verified against a whole-file CRC-32
+//! trailer; a damaged file is quarantined aside (`.quarantined`) and the
+//! space regenerates — never a silently wrong dictionary.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use crate::designspace::extrema::SearchStrategy;
 use crate::designspace::region::{AbEntry, RegionSpace};
 use crate::designspace::{DesignSpace, GenOptions};
+use crate::faults::{self, Fault};
+use crate::service::store::crc32;
 
 const MAGIC: &[u8; 4] = b"PGDS";
-const VERSION: u32 = 2;
+/// v3 appends a whole-file CRC-32 trailer (the `.pgjr` idiom), so *any*
+/// flipped bit fails closed instead of decoding into a wrong dictionary.
+/// v2 files fail the trailer check, get quarantined on first load, and
+/// are regenerated — the upgrade is self-healing.
+const VERSION: u32 = 3;
 
 fn w_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -90,19 +98,58 @@ pub fn to_bytes(ds: &DesignSpace) -> Vec<u8> {
             w_i64(&mut out, e.b_hi);
         }
     }
+    let crc = crc32(&out);
+    w_u32(&mut out, crc);
     out
+}
+
+/// Why a buffer did or did not decode, for [`load_checked`]'s verdict.
+enum Decoded {
+    Ok(DesignSpace),
+    /// CRC-valid file in a different format version: not damage, just a
+    /// stale or foreign writer — treated as a miss and regenerated over.
+    Stale(u32),
+    Corrupt(String),
+}
+
+fn decode(buf: &[u8]) -> Decoded {
+    // The trailer covers everything before it and is checked first, so
+    // any flipped bit or lost tail fails closed.
+    if buf.len() < 12 {
+        return Decoded::Corrupt("truncated cache file".into());
+    }
+    let (payload, tail) = buf.split_at(buf.len() - 4);
+    let crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(payload) != crc {
+        return Decoded::Corrupt("cache CRC mismatch".into());
+    }
+    let mut r = Reader { buf: payload, pos: 0 };
+    match r.take(4) {
+        Ok(m) if m == MAGIC => {}
+        _ => return Decoded::Corrupt("not a .pgds file".into()),
+    }
+    match r.u32() {
+        Ok(v) if v == VERSION => {}
+        Ok(v) => return Decoded::Stale(v),
+        Err(e) => return Decoded::Corrupt(e),
+    }
+    match decode_body(&mut r) {
+        Ok(ds) if r.pos == payload.len() => Decoded::Ok(ds),
+        Ok(_) => Decoded::Corrupt("trailing bytes in cache file".into()),
+        Err(e) => Decoded::Corrupt(e),
+    }
 }
 
 /// Deserialize; `analyses` comes back empty (recompute when needed).
 pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
-    let mut r = Reader { buf, pos: 0 };
-    if r.take(4)? != MAGIC {
-        return Err("not a .pgds file".into());
+    match decode(buf) {
+        Decoded::Ok(ds) => Ok(ds),
+        Decoded::Stale(v) => Err(format!("cache version {v}, expected {VERSION}")),
+        Decoded::Corrupt(e) => Err(e),
     }
-    let ver = r.u32()?;
-    if ver != VERSION {
-        return Err(format!("cache version {ver}, expected {VERSION}"));
-    }
+}
+
+fn decode_body(r: &mut Reader) -> Result<DesignSpace, String> {
     let func = r.string()?;
     let accuracy = r.string()?;
     let in_bits = r.u32()?;
@@ -121,9 +168,6 @@ pub fn from_bytes(buf: &[u8]) -> Result<DesignSpace, String> {
             entries.push(AbEntry { a: r.i64()?, b_lo: r.i64()?, b_hi: r.i64()? });
         }
         regions.push(RegionSpace { r: rr, k, entries, linear_ok });
-    }
-    if r.pos != buf.len() {
-        return Err("trailing bytes in cache file".into());
     }
     // Cache hits come back fully materialized (analyses are recomputable
     // and deliberately not stored); every lazy-view query answers from
@@ -162,10 +206,14 @@ pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, opts: &GenOpt
 /// Save atomically (write a per-process temp file, then rename): batch
 /// workers share one cache directory, and a reader must never observe a
 /// half-written `.pgds`.
+// lint: fault-ok(write-side damage is load-side damage by the time anyone
+// reads it, and the load path below injects + catches exactly that; the
+// tmp+rename dance keeps torn writes invisible)
 pub fn save(ds: &DesignSpace, path: &Path) -> std::io::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
+    // lint: sync-ok(const-init static counter in never-modeled code)
     static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut tmp = path.as_os_str().to_owned();
@@ -178,13 +226,68 @@ pub fn save(ds: &DesignSpace, path: &Path) -> std::io::Result<()> {
     std::fs::rename(&tmp, path)
 }
 
+/// What [`load_checked`] found at a cache path.
+#[derive(Debug)]
+pub enum CacheLoad {
+    /// A CRC-valid, current-version space.
+    Hit(DesignSpace),
+    /// No file, an unreadable file, or a clean file in another format
+    /// version — regenerate (the save overwrites it).
+    Miss,
+    /// The file failed its integrity check and was renamed aside to the
+    /// returned path; regenerate and inspect the quarantined bytes.
+    Quarantined(PathBuf),
+}
+
+/// Load with the full verdict. The read is routed through the
+/// `cache.load` injection tap (bit flips and truncation — the two
+/// disk-rot shapes the CRC trailer must catch), so the chaos suite can
+/// prove a damaged cache is quarantined, never decoded.
+pub fn load_checked(path: &Path) -> CacheLoad {
+    let mut buf = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(_) => return CacheLoad::Miss,
+    };
+    match faults::inject("cache.load", &[Fault::Corrupt, Fault::Truncate]) {
+        Some(Fault::Corrupt) if !buf.is_empty() => {
+            let at = faults::rand_below(buf.len());
+            buf[at] ^= 0x01;
+        }
+        Some(Fault::Truncate) => {
+            let cut = 1 + faults::rand_below(buf.len().min(16));
+            let keep = buf.len().saturating_sub(cut);
+            buf.truncate(keep);
+        }
+        _ => {}
+    }
+    match decode(&buf) {
+        Decoded::Ok(ds) => CacheLoad::Hit(ds),
+        Decoded::Stale(_) => CacheLoad::Miss,
+        Decoded::Corrupt(why) => {
+            let mut q = path.as_os_str().to_owned();
+            q.push(".quarantined");
+            let q = PathBuf::from(q);
+            if std::fs::rename(path, &q).is_err() {
+                let _ = std::fs::remove_file(path);
+            }
+            eprintln!(
+                "polygen: design-space cache {} failed its integrity check ({why}); \
+                 quarantined at {} (will regenerate)",
+                path.display(),
+                q.display()
+            );
+            CacheLoad::Quarantined(q)
+        }
+    }
+}
+
+/// Compatibility wrapper: any non-hit is an `Err` (callers regenerate).
 pub fn load(path: &Path) -> Result<DesignSpace, String> {
-    let mut buf = Vec::new();
-    std::fs::File::open(path)
-        .map_err(|e| format!("{}: {e}", path.display()))?
-        .read_to_end(&mut buf)
-        .map_err(|e| e.to_string())?;
-    from_bytes(&buf)
+    match load_checked(path) {
+        CacheLoad::Hit(ds) => Ok(ds),
+        CacheLoad::Miss => Err(format!("{}: cache miss", path.display())),
+        CacheLoad::Quarantined(q) => Err(format!("cache quarantined at {}", q.display())),
+    }
 }
 
 #[cfg(test)]
@@ -238,7 +341,86 @@ mod tests {
         let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
         let ds = generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() }).unwrap();
         let mut bytes = to_bytes(&ds);
-        bytes.push(0); // trailing byte
+        bytes.push(0); // trailing byte shifts the CRC window
         assert!(from_bytes(&bytes).is_err());
+    }
+
+    fn small_space() -> DesignSpace {
+        let f = builtin("exp2", 8).unwrap();
+        let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
+        generate(&bt, &GenOptions { lookup_bits: 4, ..Default::default() }).unwrap()
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pgds_test_{}_{tag}.pgds", std::process::id()))
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught_and_quarantined() {
+        let ds = small_space();
+        let path = scratch("byteflip");
+        save(&ds, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let quarantined = {
+            let mut q = path.as_os_str().to_owned();
+            q.push(".quarantined");
+            PathBuf::from(q)
+        };
+        for at in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x01;
+            std::fs::write(&path, &bad).unwrap();
+            match load_checked(&path) {
+                CacheLoad::Quarantined(q) => assert_eq!(q, quarantined, "flip at byte {at}"),
+                other => panic!("flip at byte {at} not quarantined: {other:?}"),
+            }
+            assert!(!path.exists(), "flip at byte {at} left the bad file in place");
+            std::fs::remove_file(&quarantined).unwrap();
+        }
+        std::fs::write(&path, &clean).unwrap();
+        match load_checked(&path) {
+            CacheLoad::Hit(back) => assert_eq!(back.num_regions(), ds.num_regions()),
+            other => panic!("clean file did not load: {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stale_version_is_a_miss_not_damage() {
+        // A CRC-valid file from another format version is a plain miss:
+        // left in place for regeneration to overwrite, never quarantined.
+        let ds = small_space();
+        let mut bytes = to_bytes(&ds);
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let path = scratch("stale");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(load_checked(&path), CacheLoad::Miss));
+        assert!(path.exists(), "stale file must stay for the save to overwrite");
+        std::fs::remove_file(&path).unwrap();
+        // Missing file is also a miss, not damage.
+        assert!(matches!(load_checked(&path), CacheLoad::Miss));
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn armed_load_tap_quarantines() {
+        use crate::faults::{arm_guard, injected, FaultPlan};
+        let _serial = crate::faults::test_serial_lock();
+        let ds = small_space();
+        let path = scratch("armed");
+        save(&ds, &path).unwrap();
+        let before = injected();
+        {
+            let _g = arm_guard(FaultPlan::new(0xCAFE).rate(1000).only("cache."));
+            // Corrupt or Truncate, either way the CRC fails closed.
+            assert!(matches!(load_checked(&path), CacheLoad::Quarantined(_)));
+        }
+        assert!(injected() > before, "the tap must have fired");
+        let mut q = path.as_os_str().to_owned();
+        q.push(".quarantined");
+        std::fs::remove_file(PathBuf::from(q)).unwrap();
     }
 }

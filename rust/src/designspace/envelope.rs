@@ -18,15 +18,20 @@
 //! for isolated points). All comparisons are exact: rational intercepts
 //! cross-multiply through [`Rat`], integer lines stay in `i128`.
 //!
-//! Magnitude analysis (documented per call site, debug-asserted here):
-//! intercepts of the Eqn 3/4 lines are diagonal extrema with numerators
-//! `< 2^33` and denominators `< 2^24`; breakpoints are differences of two
-//! such over a slope gap `< 2^25`, so every cross product stays well
-//! inside `i128`. Eqn 1 lines have `|icept| < 2^94` and `|slope| < 2^24`
-//! in the worst supported format, leaving the hull-domination products
-//! `< 2^119`.
+//! Magnitude analysis (documented per call site): intercepts of the
+//! Eqn 3/4 lines are diagonal extrema with numerators `< 2^33` and
+//! denominators `< 2^24`; breakpoints are differences of two such over a
+//! slope gap `< 2^25`, so every cross product stays well inside `i128`.
+//! Eqn 1 lines have `|icept| < 2^94` and `|slope| < 2^24` in the worst
+//! supported format, leaving the hull-domination products `< 2^119`.
+//! Those envelopes are not trusted silently: cross-multiplied comparisons
+//! go through [`crate::wide::cmp_i128_products`], which widens to 256-bit
+//! magnitudes when a product overflows `i128`, and line evaluation is
+//! checked (loud panic rather than a silent wrap).
 
 use crate::rational::Rat;
+use crate::wide::cmp_i128_products;
+use std::cmp::Ordering;
 
 /// A line `y = icept + slope * x` with an exact rational intercept.
 #[derive(Clone, Copy, Debug)]
@@ -105,16 +110,13 @@ impl<'a> RatCursor<'a> {
     /// be non-decreasing across calls on one cursor; at a breakpoint both
     /// adjacent lines are equal-valued and either may be returned.
     pub fn line_at(&mut self, a: i64, k: u32) -> &'a RatLine {
+        debug_assert!(k < 127, "RatCursor shift out of range");
         loop {
-            // Advance while a / 2^k >= t  <=>  a * t.den >= t.num * 2^k.
+            // Advance while a / 2^k >= t  <=>  a * t.den >= t.num * 2^k,
+            // compared exactly (widens past i128 instead of wrapping).
             let advance = match &self.next {
                 Some(t) => {
-                    debug_assert!(
-                        (a as i128).checked_mul(t.den()).is_some()
-                            && t.num().checked_mul(1i128 << k).is_some(),
-                        "RatCursor breakpoint comparison overflow"
-                    );
-                    (a as i128) * t.den() >= t.num() * (1i128 << k)
+                    cmp_i128_products(a as i128, t.den(), t.num(), 1i128 << k) != Ordering::Less
                 }
                 None => false,
             };
@@ -137,7 +139,10 @@ pub struct IntLine {
 
 #[inline]
 fn value(l: IntLine, x: i64) -> i128 {
-    l.icept + l.slope * x as i128
+    l.slope
+        .checked_mul(x as i128)
+        .and_then(|p| l.icept.checked_add(p))
+        .expect("IntLine value overflows i128")
 }
 
 /// Upper envelope (pointwise max) of [`IntLine`]s.
@@ -164,13 +169,14 @@ impl IntEnvelope {
             while hull.len() >= 2 {
                 let a = hull[hull.len() - 2];
                 let b = hull[hull.len() - 1];
-                debug_assert!(
-                    (b.icept - l.icept).checked_mul(b.slope - a.slope).is_some()
-                        && (a.icept - b.icept).checked_mul(l.slope - b.slope).is_some(),
-                    "IntEnvelope domination overflow"
-                );
-                if (b.icept - l.icept) * (b.slope - a.slope)
-                    <= (a.icept - b.icept) * (l.slope - b.slope)
+                // Same takeover-point test as the rational envelope,
+                // cross-multiplied exactly (widens past i128 on demand).
+                if cmp_i128_products(
+                    b.icept - l.icept,
+                    b.slope - a.slope,
+                    a.icept - b.icept,
+                    l.slope - b.slope,
+                ) != Ordering::Greater
                 {
                     hull.pop();
                 } else {
@@ -192,7 +198,7 @@ impl IntEnvelope {
         let h = &self.hull;
         let (mut lo, mut hi) = (0usize, h.len() - 1);
         while lo < hi {
-            let mid = (lo + hi) / 2;
+            let mid = (lo + hi) / 2; // lint: overflow-ok(usize midpoint of in-bounds hull indices)
             if value(h[mid + 1], x) >= value(h[mid], x) {
                 lo = mid + 1;
             } else {
@@ -272,6 +278,48 @@ mod tests {
         for x in -10i64..=10 {
             assert_eq!(env.eval(x), brute_max_int(&lines, x), "x={x}");
         }
+    }
+
+    #[test]
+    fn int_envelope_exact_beyond_i128_product_range() {
+        // Intercepts of opposite signs near 2^120: the domination cross
+        // products need ~2^131 bits, so the build must widen instead of
+        // wrapping. Line values at the query points still fit i128.
+        let big = 1i128 << 120;
+        let lines = [
+            IntLine { slope: -(1 << 10), icept: big },
+            IntLine { slope: 0, icept: -big },
+            IntLine { slope: 1 << 10, icept: big },
+        ];
+        let env = IntEnvelope::upper(lines.iter().copied());
+        let mut cur = env.cursor();
+        for x in [-8i64, -1, 0, 1, 8] {
+            let want = brute_max_int(&lines, x);
+            assert_eq!(env.eval(x), want, "x={x}");
+            assert_eq!(cur.max_at(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "IntLine value overflows")]
+    fn int_line_value_overflow_is_loud() {
+        let env = IntEnvelope::upper([IntLine { slope: i128::MAX, icept: 1 }]);
+        let _ = env.eval(2);
+    }
+
+    #[test]
+    fn rat_cursor_advances_exactly_on_huge_breakpoints() {
+        // Breakpoint (2^100+1)/2^65: at k = 27 both advance-test products
+        // (a * den and num * 2^k) reach 2^127, so the comparison must
+        // widen. The crossover sits at a = 2^62 + 1 exactly.
+        let lines = [
+            RatLine { slope: 0, icept: Rat::new((1i128 << 100) + 1, 1i128 << 30) },
+            RatLine { slope: 1i64 << 35, icept: Rat::ZERO },
+        ];
+        let env = RatEnvelope::upper(lines.iter().copied());
+        let mut cur = env.cursor();
+        assert_eq!(cur.line_at(1 << 62, 27).slope, 0);
+        assert_eq!(cur.line_at((1 << 62) + 1, 27).slope, 1i64 << 35);
     }
 
     #[test]

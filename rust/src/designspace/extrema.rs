@@ -19,6 +19,7 @@
 //! All comparisons are exact (integer cross-multiplication / `Rat`).
 
 use crate::rational::Rat;
+use std::cmp::Ordering;
 
 /// Which implementation the generator uses for the Eqn 10 searches (and,
 /// with [`SearchStrategy::Hull`], the diagonal-extrema inner loops).
@@ -127,8 +128,10 @@ pub fn min_dd(g: &[Rat], h: &[Rat], strategy: SearchStrategy) -> Option<DdMax> {
 /// `Rat::new`'s gcd on every divided difference dominated generation
 /// time). Magnitude analysis for every caller in this crate: numerators
 /// stay below 2^60 and denominators below 2^40, so cross-multiplied
-/// comparisons fit `i128` with >25 bits of headroom; debug assertions
-/// guard the products.
+/// comparisons fit `i128` with >25 bits of headroom. Neither comparisons
+/// nor divided-difference formation trust that envelope: both are
+/// checked, falling back to reduced/widened arithmetic on overflow
+/// ([`RawFrac::lt`], [`dd_raw`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RawFrac {
     pub num: i128,
@@ -169,6 +172,25 @@ impl RawFrac {
     }
 }
 
+/// Divided difference `(a - b) / gap` as an unreduced fraction, formed
+/// with checked products. When the raw `i128` cross products would
+/// overflow, the formation falls back to reduced [`Rat`] arithmetic —
+/// exact whenever the reduced result is representable, and a loud panic
+/// (never a silent wrap) when even that is not.
+#[inline]
+fn dd_raw(a: &RawFrac, b: &RawFrac, gap: i128) -> RawFrac {
+    let num = a
+        .num
+        .checked_mul(b.den)
+        .zip(b.num.checked_mul(a.den))
+        .and_then(|(l, r)| l.checked_sub(r));
+    let den = a.den.checked_mul(b.den).and_then(|v| v.checked_mul(gap));
+    match (num, den) {
+        (Some(num), Some(den)) => RawFrac { num, den },
+        _ => RawFrac::from_rat(&a.to_rat().sub(&b.to_rat()).div(&Rat::int(gap))),
+    }
+}
+
 /// Gcd-free `max_{x<y} (g(y) - h(x)) / (y - x)` over raw fractions.
 /// `pruned` selects the Claim II.1 skip rule. Identical results to the
 /// `Rat` implementations (property-tested).
@@ -184,20 +206,14 @@ pub fn max_dd_fracs(g: &[RawFrac], h: &[RawFrac], pruned: bool) -> Option<DdMax>
         if pruned {
             if let Some((bd, bx, _)) = best {
                 // Claim II.1: slope = (h(x) - h(bx)) / (x - bx).
-                let slope = RawFrac {
-                    num: h[x].num * h[bx].den - h[bx].num * h[x].den,
-                    den: h[x].den * h[bx].den * (x - bx) as i128,
-                };
+                let slope = dd_raw(&h[x], &h[bx], (x - bx) as i128);
                 if bd.le(&slope) {
                     continue;
                 }
             }
         }
         for y in x + 1..n {
-            let d = RawFrac {
-                num: g[y].num * h[x].den - h[x].num * g[y].den,
-                den: g[y].den * h[x].den * (y - x) as i128,
-            };
+            let d = dd_raw(&g[y], &h[x], (y - x) as i128);
             evals += 1;
             if best.map_or(true, |(b, _, _)| b.lt(&d)) {
                 best = Some((d, x, y));
@@ -258,6 +274,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
         nb = nb.max(bits(f.num));
         db = db.max(bits(f.den));
     }
+    // lint: overflow-ok(u32 bit-count sums, bounded by a few hundred)
     if nb + 2 * db + bits(n as i128) + 1 > 126 {
         return max_dd_fracs(g, h, true);
     }
@@ -283,6 +300,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
                     && fits(vp.num * v2.den - v2.num * vp.den, (i2 - i1) as i128, v1.den),
                 "hull domination overflow"
             );
+            // lint: overflow-ok(triple products magnitude-prechecked above; beyond-envelope inputs routed to max_dd_fracs)
             let lhs = (v2.num * v1.den - v1.num * v2.den) * ((p - i2) as i128) * vp.den;
             let rhs = (vp.num * v2.den - v2.num * vp.den) * ((i2 - i1) as i128) * v1.den;
             if lhs >= rhs {
@@ -296,7 +314,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
         let q = g[y];
         let (mut lo, mut hi) = (0usize, hull.len() - 1);
         while lo < hi {
-            let mid = (lo + hi) / 2;
+            let mid = (lo + hi) / 2; // lint: overflow-ok(usize midpoint of in-bounds hull indices)
             let (ia, ib) = (hull[mid], hull[mid + 1]);
             let (va, vb) = (h[ia], h[ib]);
             evals += 1;
@@ -307,6 +325,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
                     && fits(q.num * va.den - va.num * q.den, (y - ib) as i128, vb.den),
                 "tangent comparison overflow"
             );
+            // lint: overflow-ok(triple products magnitude-prechecked above; beyond-envelope inputs routed to max_dd_fracs)
             let lhs = (q.num * vb.den - vb.num * q.den) * ((y - ia) as i128) * va.den;
             let rhs = (q.num * va.den - va.num * q.den) * ((y - ib) as i128) * vb.den;
             if lhs > rhs {
@@ -317,10 +336,7 @@ pub fn max_dd_hull(g: &[RawFrac], h: &[RawFrac]) -> Option<DdMax> {
         }
         let ix = hull[lo];
         let vx = h[ix];
-        let d = RawFrac {
-            num: q.num * vx.den - vx.num * q.den,
-            den: q.den * vx.den * ((y - ix) as i128),
-        };
+        let d = dd_raw(&q, &vx, (y - ix) as i128);
         evals += 1;
         // Strict improvement, or an equal value with a lexicographically
         // smaller (x, y) — matching the naive scan's first-found witness.
@@ -402,10 +418,23 @@ pub fn diagonal_extrema(l: &[i32], u: &[i32]) -> DiagExtrema {
     DiagExtrema { big_m, small_m }
 }
 
+/// Exact ordering of `a*b` versus `c*d` over `i64` factors: the fast path
+/// multiplies in `i64` (checked), and on overflow the comparison widens
+/// to `i128` — two `i64` factors always fit there, so it never wraps.
+#[inline]
+fn prod_i64_cmp(a: i64, b: i64, c: i64, d: i64) -> Ordering {
+    match (a.checked_mul(b), c.checked_mul(d)) {
+        (Some(l), Some(r)) => l.cmp(&r),
+        _ => ((a as i128) * (b as i128)).cmp(&((c as i128) * (d as i128))),
+    }
+}
+
 /// [`diagonal_extrema`] with the inner comparisons kept entirely in `i64`
 /// (§Perf). Bound values are `i32` (numerator magnitudes `<= 2^32`) and
-/// separations are `< 2^24`, so cross products stay below `2^57` — no
-/// `i128` widening in the O(N²) hot loop. Value-identical to [`diagonal_extrema`]
+/// separations are `< 2^24`, so cross products stay below `2^57` and the
+/// checked `i64` fast path of [`prod_i64_cmp`] always hits — no `i128`
+/// widening in the O(N²) hot loop, and no silent wrap if an input ever
+/// leaves that envelope. Value-identical to [`diagonal_extrema`]
 /// (property-tested), which is retained as the reference for the XLA
 /// extrema kernel cross-checks and the pre-envelope oracle engine.
 pub fn diagonal_extrema_fast(l: &[i32], u: &[i32]) -> DiagExtrema {
@@ -433,13 +462,13 @@ pub fn diagonal_extrema_fast(l: &[i32], u: &[i32]) -> DiagExtrema {
             // M candidate: (l(y) - u(x) - 1) / (y - x), strict improvement
             // keeps the first maximizer like the reference scan.
             let a = l[y] as i64 - u[x] as i64 - 1;
-            if a * md > mn * d {
+            if prod_i64_cmp(a, md, mn, d) == Ordering::Greater {
                 mn = a;
                 md = d;
             }
             // m candidate: (u(y) + 1 - l(x)) / (y - x).
             let b = u[y] as i64 + 1 - l[x] as i64;
-            if b * sd < sn * d {
+            if prod_i64_cmp(b, sd, sn, d) == Ordering::Less {
                 sn = b;
                 sd = d;
             }
@@ -729,6 +758,60 @@ mod tests {
             assert_eq!(a.big_m, b.big_m, "l={l:?} u={u:?}");
             assert_eq!(a.small_m, b.small_m, "l={l:?} u={u:?}");
         });
+    }
+
+    #[test]
+    fn prod_i64_cmp_survives_i64_overflow() {
+        use std::cmp::Ordering::*;
+        let m = i64::MAX;
+        // Products near 2^126 overflow i64; ground truth is the widened
+        // i128 comparison.
+        assert_eq!(prod_i64_cmp(m, m, m - 1, m), Greater);
+        assert_eq!(prod_i64_cmp(m - 1, m, m, m), Less);
+        assert_eq!(prod_i64_cmp(m, m, m, m), Equal);
+        assert_eq!(prod_i64_cmp(i64::MIN, m, m, m), Less);
+        assert_eq!(prod_i64_cmp(-m, -m, m, m), Equal);
+        assert_eq!(prod_i64_cmp(i64::MIN, i64::MIN, m, m), Greater);
+        // In-envelope operands take the i64 fast path and agree.
+        assert_eq!(prod_i64_cmp(3, 4, 2, 7), Less);
+        assert_eq!(prod_i64_cmp(-3, 4, 2, -6), Equal);
+    }
+
+    #[test]
+    fn fast_diagonal_extrema_at_i32_extremes() {
+        // Full-range i32 bounds: numerators reach 2^32 + 1, the largest
+        // magnitude the fast loop can see. Fast and reference scans must
+        // agree exactly.
+        let l = vec![i32::MIN, i32::MAX, i32::MIN, i32::MAX, 0, i32::MIN];
+        let u = vec![i32::MAX, i32::MAX, i32::MIN, i32::MAX, i32::MAX, i32::MIN];
+        let a = diagonal_extrema(&l, &u);
+        let b = diagonal_extrema_fast(&l, &u);
+        assert_eq!(a.big_m, b.big_m);
+        assert_eq!(a.small_m, b.small_m);
+    }
+
+    #[test]
+    fn frac_search_survives_den_product_overflow() {
+        // Denominators of 2^63 make the unreduced divided-difference
+        // denominator product overflow i128 for every gap >= 2, forcing
+        // dd_raw through its reduced-Rat fallback; gap-1 pairs still take
+        // the raw path, so both agree within one search.
+        let n = 5usize;
+        let g: Vec<RawFrac> =
+            (0..n).map(|i| RawFrac { num: i as i128, den: 1i128 << 63 }).collect();
+        let h: Vec<RawFrac> =
+            (0..n).map(|i| RawFrac { num: -((i * i) as i128), den: 1i128 << 63 }).collect();
+        let gr: Vec<Rat> = g.iter().map(RawFrac::to_rat).collect();
+        let hr: Vec<Rat> = h.iter().map(RawFrac::to_rat).collect();
+        let want = max_dd_naive(&gr, &hr).unwrap();
+        for pruned in [false, true] {
+            let got = max_dd_fracs(&g, &h, pruned).unwrap();
+            assert_eq!(got.value, want.value, "pruned={pruned}");
+            assert_eq!((got.x, got.y), (want.x, want.y), "pruned={pruned}");
+        }
+        // The hull front-end prechecks these magnitudes and routes here.
+        let hull = max_dd_hull(&g, &h).unwrap();
+        assert_eq!(hull.value, want.value);
     }
 
     #[test]

@@ -31,6 +31,9 @@ pub mod envelope;
 pub mod extrema;
 pub mod region;
 
+// Const-initialized static registry; `OnceLock` has no loom mirror and
+// this cache is never loom-modeled.
+// lint: sync-ok(const-init OnceLock static in never-modeled code)
 use std::sync::OnceLock;
 
 use crate::bounds::BoundTable;

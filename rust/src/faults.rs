@@ -29,8 +29,15 @@
 //! | `http.respond`      | `Disconnect`                    | server-side response write (mid-response hangup) |
 //! | `store.log`         | `ShortWrite`, `Corrupt`, `FsyncFail` | `jobs.log` frame append |
 //! | `store.result`      | `ShortWrite`, `Corrupt`         | `.pgjr` result save |
+//! | `cache.load`        | `Corrupt`, `Truncate`           | `.pgds` design-space cache read |
+//! | `runtime.artifact`  | `Corrupt`                       | XLA `.hlo.txt` artifact read |
 
+// The armed-plan registry and fired counter are const-initialized
+// statics; loom's constructors are not `const`, and this module is
+// never loom-modeled (chaos and loom are separate jobs).
+// lint: sync-ok(const-init statics in never-modeled code)
 use std::sync::atomic::{AtomicU64, Ordering};
+// lint: sync-ok(const-init statics in never-modeled code)
 use std::sync::Mutex;
 
 /// One injectable failure mode. Sites pass the subset they can express
@@ -89,6 +96,24 @@ impl FaultPlan {
 /// (whether or not a plan is armed).
 pub const COMPILED: bool = cfg!(feature = "fault-injection");
 
+/// Every registered injection site, mirroring the table above. This is
+/// the source of truth `cargo xtask lint` cross-checks both ways: a
+/// `faults::inject` call whose site literal is not listed here fails
+/// the lint, and so does a registry entry with no call site. Keep the
+/// table, this list, and the call sites in step.
+pub const SITES: &[&str] = &[
+    "cluster.call",
+    "cluster.call.send",
+    "cluster.call.recv",
+    "cluster.heartbeat",
+    "http.read",
+    "http.respond",
+    "store.log",
+    "store.result",
+    "cache.load",
+    "runtime.artifact",
+];
+
 #[cfg(feature = "fault-injection")]
 struct Armed {
     plan: FaultPlan,
@@ -120,7 +145,7 @@ pub fn arm(plan: FaultPlan) {
     #[cfg(feature = "fault-injection")]
     {
         let rng = plan.seed | 1; // never let the xorshift state be 0
-        *ARMED.lock().unwrap() = Some(Armed { plan, rng });
+        *ARMED.lock().unwrap_or_else(|e| e.into_inner()) = Some(Armed { plan, rng });
     }
     #[cfg(not(feature = "fault-injection"))]
     let _ = plan;
@@ -130,7 +155,7 @@ pub fn arm(plan: FaultPlan) {
 pub fn disarm() {
     #[cfg(feature = "fault-injection")]
     {
-        *ARMED.lock().unwrap() = None;
+        *ARMED.lock().unwrap_or_else(|e| e.into_inner()) = None;
     }
 }
 
@@ -190,7 +215,7 @@ pub fn inject(site: &'static str, allowed: &[Fault]) -> Option<Fault> {
         if allowed.is_empty() {
             return None;
         }
-        let mut g = ARMED.lock().unwrap();
+        let mut g = ARMED.lock().unwrap_or_else(|e| e.into_inner());
         let armed = g.as_mut()?;
         if let Some(prefix) = &armed.plan.only {
             if !site.starts_with(prefix.as_str()) {
@@ -222,7 +247,7 @@ pub fn rand_below(n: usize) -> usize {
         if n == 0 {
             return 0;
         }
-        let mut g = ARMED.lock().unwrap();
+        let mut g = ARMED.lock().unwrap_or_else(|e| e.into_inner());
         match g.as_mut() {
             Some(armed) => (draw(&mut armed.rng) % n as u64) as usize,
             None => 0,
@@ -251,6 +276,18 @@ pub fn reset_injected() {
     INJECTED.store(0, Ordering::Relaxed);
 }
 
+/// Serialize tests that arm the process-global registry. Unit tests run
+/// many-at-once in one process and an armed plan is visible to all of
+/// them, so every in-crate test that arms must hold this guard for its
+/// whole armed span (test-support only, not part of the API).
+#[cfg(feature = "fault-injection")]
+#[doc(hidden)]
+// lint: sync-ok(const-init static guard in never-modeled code)
+pub fn test_serial_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 // `Mutex` is only used by the armed implementation; keep the import
 // warning-free in default builds.
 #[cfg(not(feature = "fault-injection"))]
@@ -262,11 +299,8 @@ mod tests {
     use super::*;
 
     // The registry is process-global: serialize these tests against
-    // each other (and any chaos suite linked into the same binary).
-    fn lock() -> std::sync::MutexGuard<'static, ()> {
-        static LOCK: Mutex<()> = Mutex::new(());
-        LOCK.lock().unwrap_or_else(|e| e.into_inner())
-    }
+    // each other and against every other in-crate test that arms.
+    use super::test_serial_lock as lock;
 
     #[test]
     fn disarmed_registry_is_silent() {

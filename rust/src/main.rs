@@ -399,7 +399,7 @@ fn run() -> Result<(), String> {
                 println!(
                     "polygen worker listening on http://{local} (coordinator: {coordinator})"
                 );
-                let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+                let stop = polygen::sync::Arc::new(polygen::sync::atomic::AtomicBool::new(false));
                 let _agent = polygen::service::run_worker_agent_with(
                     coordinator,
                     my_addr,

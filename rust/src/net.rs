@@ -14,8 +14,9 @@
 //! this module unit-testable without sockets. See DESIGN.md §Fault
 //! model.
 
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::sync::{plock, Mutex};
 
 /// Failure-handling knobs for one class of calls. CLI spelling:
 /// `--call-timeout SECS --retries N --breaker-threshold K`.
@@ -128,7 +129,7 @@ impl RetryBudget {
 
     /// Spend one retry token; `false` = budget exhausted, fail fast.
     pub fn try_spend(&self) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         if s.tokens >= 1.0 {
             s.tokens -= 1.0;
             true
@@ -139,13 +140,13 @@ impl RetryBudget {
 
     /// Return `amount` tokens (successful calls refill the budget).
     pub fn deposit(&self, amount: f64) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         s.tokens = (s.tokens + amount).min(s.cap);
     }
 
     /// Tokens currently available (observability / tests).
     pub fn available(&self) -> f64 {
-        self.state.lock().unwrap().tokens
+        plock(&self.state).tokens
     }
 }
 
@@ -187,7 +188,7 @@ impl CircuitBreaker {
 
     /// May a call proceed right now? (Closed or probe-ready.)
     pub fn allow(&self) -> bool {
-        let s = self.state.lock().unwrap();
+        let s = plock(&self.state);
         match s.open_until {
             None => true,
             Some(t) => Instant::now() >= t,
@@ -196,11 +197,11 @@ impl CircuitBreaker {
 
     /// Is the peer quarantined (open, including probe-ready)?
     pub fn is_open(&self) -> bool {
-        self.state.lock().unwrap().open_until.is_some()
+        plock(&self.state).open_until.is_some()
     }
 
     pub fn state(&self) -> BreakerState {
-        let s = self.state.lock().unwrap();
+        let s = plock(&self.state);
         match s.open_until {
             None => BreakerState::Closed,
             Some(t) if Instant::now() >= t => BreakerState::HalfOpen,
@@ -210,7 +211,7 @@ impl CircuitBreaker {
 
     /// Record a successful call: the breaker closes fully.
     pub fn on_success(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         s.consecutive = 0;
         s.open_until = None;
     }
@@ -219,7 +220,7 @@ impl CircuitBreaker {
     /// opened the breaker (the caller's cue to log the quarantine). A
     /// failed probe re-arms the cooldown without returning `true`.
     pub fn on_failure(&self, threshold: u32, cooldown: Duration) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         s.consecutive = s.consecutive.saturating_add(1);
         if s.consecutive >= threshold.max(1) {
             let newly = s.open_until.is_none();
@@ -278,7 +279,7 @@ impl TokenBucket {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU32, Ordering};
+    use crate::sync::atomic::{AtomicU32, Ordering};
 
     fn fast_policy() -> Policy {
         Policy {

@@ -23,7 +23,8 @@
 //! ```
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+
+use crate::sync::Arc;
 
 use crate::coordinator::config::Config;
 

@@ -78,9 +78,10 @@ pub mod error;
 pub mod job;
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use crate::sync::Arc;
 
 use crate::coordinator::{
     best_by_objective, default_r_range, generate_cached_ctrl, sweep_lub_cached, sweep_lub_ctrl,

@@ -43,10 +43,22 @@
 //! and re-raised there with the original payload (e.g. the region id in
 //! generation's invariant-breach message); the pool itself survives and
 //! remains reusable.
+//!
+//! # Model checking
+//!
+//! Every primitive here comes from [`crate::sync`], so under
+//! `--cfg loom` the whole protocol — park/unpark, nested
+//! submit-executes-own-job, donation, drain — is explored exhaustively
+//! by the `tests/loom` suite against standalone instances
+//! ([`Scheduler::new_standalone`]). [`Scheduler::shutdown`] exists for
+//! those models (loom requires every spawned thread to be joined before
+//! a model ends) and for tests; the global instance is simply never
+//! torn down.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::{cwait, plock, thread, Arc, Condvar, Mutex};
 
 /// Cooperative cancellation flag, shared between a job's owner (who calls
 /// [`CancelToken::cancel`]) and the task closures running on the
@@ -59,8 +71,14 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 /// caller maps the run to a `Cancelled` error, so scheduler accounting
 /// (`completed == n`) stays exact and the pool remains reusable after
 /// any cancellation.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CancelToken(Arc<AtomicBool>);
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+}
 
 impl CancelToken {
     pub fn new() -> CancelToken {
@@ -83,10 +101,16 @@ impl CancelToken {
 /// resets the counter for a new phase; concurrent readers may observe
 /// `done` mid-update — the pair is a progress *indication*, not a
 /// barrier.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Progress {
     done: AtomicUsize,
     total: AtomicUsize,
+}
+
+impl Default for Progress {
+    fn default() -> Progress {
+        Progress { done: AtomicUsize::new(0), total: AtomicUsize::new(0) }
+    }
 }
 
 impl Progress {
@@ -135,7 +159,7 @@ where
         // the submitter only reads `out` after every task completed.
         unsafe { *slots.0.add(i) = Some(v) };
     };
-    global().run(n, threads, &task);
+    global().run_on(n, threads, &task);
     out.into_iter().map(|v| v.expect("scheduler missed an index")).collect()
 }
 
@@ -149,7 +173,7 @@ unsafe impl<T: Send> Send for Slots<T> {}
 unsafe impl<T: Send> Sync for Slots<T> {}
 
 /// Type-erased pointer to the submitter's task closure. Only dereferenced
-/// while the submitting [`Scheduler::run`] frame is alive — it blocks
+/// while the submitting [`Scheduler::run_on`] frame is alive — it blocks
 /// until every task execution has finished, and an exhausted cursor stops
 /// workers from ever touching the task again.
 struct TaskPtr(*const (dyn Fn(usize) + Sync));
@@ -190,14 +214,14 @@ fn execute(job: &Job) {
         }
         // SAFETY: index `i < n` was still available, so this task has not
         // been counted completed — the submitter cannot observe
-        // `completed == n` and is still blocked in `Scheduler::run`,
+        // `completed == n` and is still blocked in `Scheduler::run_on`,
         // keeping the closure alive for the duration of this call. (The
         // deref sits after the cursor check on purpose: a worker that
         // claims a just-finished job must break without ever touching
         // the pointer.)
         let task = unsafe { &*job.task.0 };
         let result = catch_unwind(AssertUnwindSafe(|| task(i)));
-        let mut st = job.state.lock().unwrap();
+        let mut st = plock(&job.state);
         if let Err(payload) = result {
             if st.panic.is_none() {
                 st.panic = Some(payload);
@@ -246,9 +270,16 @@ struct Inner {
     spawned: usize,
     /// Workers currently executing a job.
     busy: usize,
+    /// Set by [`Scheduler::shutdown`]: idle workers exit instead of
+    /// parking. Never set on the global instance.
+    stop: bool,
+    /// Join handles for every spawned worker, taken by `shutdown`.
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
-/// The process-wide scheduler. Obtain via [`global`].
+/// The process-wide scheduler. Obtain via [`global`], or build a
+/// private instance with [`Scheduler::new_standalone`] (tests and the
+/// loom models, which must own and join every thread they spawn).
 pub struct Scheduler {
     inner: Mutex<Inner>,
     /// Parked workers wait here; notified on job submission.
@@ -258,20 +289,20 @@ pub struct Scheduler {
     max_workers: usize,
 }
 
-static GLOBAL: OnceLock<Scheduler> = OnceLock::new();
+// The one sanctioned raw-std static: `OnceLock` has no loom mirror and
+// a const initializer; the global instance is never loom-modeled (the
+// models drive `new_standalone` schedulers they can join and tear
+// down).
+// lint: sync-ok(const-init static registry; loom models use new_standalone)
+static GLOBAL: std::sync::OnceLock<Arc<Scheduler>> = std::sync::OnceLock::new();
 
 /// The process-wide scheduler, created on first use. Worker threads are
 /// spawned lazily as jobs demand them, up to machine parallelism minus
 /// one (submitting threads always participate in their own jobs);
 /// `POLYGEN_POOL_THREADS` overrides the cap (`0` = no workers, every
 /// call runs on its submitting thread alone).
-pub fn global() -> &'static Scheduler {
-    GLOBAL.get_or_init(|| Scheduler {
-        inner: Mutex::new(Inner { jobs: Vec::new(), spawned: 0, busy: 0 }),
-        work_cv: Condvar::new(),
-        idle_cv: Condvar::new(),
-        max_workers: default_workers(),
-    })
+pub fn global() -> &'static Arc<Scheduler> {
+    GLOBAL.get_or_init(|| Scheduler::new_standalone(default_workers()))
 }
 
 fn default_workers() -> usize {
@@ -284,10 +315,32 @@ fn default_workers() -> usize {
 }
 
 impl Scheduler {
+    /// A private scheduler instance with its own worker pool, capped at
+    /// `max_workers` pool threads. The global instance is exactly
+    /// `new_standalone(default_workers())`; standalone instances exist
+    /// so tests and the loom models can run the *same* protocol code on
+    /// a pool they fully own — and can [`Scheduler::shutdown`].
+    pub fn new_standalone(max_workers: usize) -> Arc<Scheduler> {
+        Arc::new(Scheduler {
+            inner: Mutex::new(Inner {
+                jobs: Vec::new(),
+                spawned: 0,
+                busy: 0,
+                stop: false,
+                handles: Vec::new(),
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            max_workers,
+        })
+    }
+
     /// Execute `task(i)` for `i in 0..n` with up to `limit` concurrent
     /// executors (including the calling thread); blocks until every
     /// index has run, then re-raises the first task panic, if any.
-    fn run(&'static self, n: usize, limit: usize, task: &(dyn Fn(usize) + Sync)) {
+    /// [`run_indexed`] is the typed convenience over the global
+    /// instance; the loom models drive this directly.
+    pub fn run_on(self: &Arc<Self>, n: usize, limit: usize, task: &(dyn Fn(usize) + Sync)) {
         let job = Arc::new(Job {
             task: TaskPtr(task as *const (dyn Fn(usize) + Sync)),
             n,
@@ -298,7 +351,7 @@ impl Scheduler {
             done_cv: Condvar::new(),
         });
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = plock(&self.inner);
             inner.jobs.push(Arc::clone(&job));
             self.spawn_workers(&mut inner, limit.saturating_sub(1));
             // Wake parked workers to come steal.
@@ -308,13 +361,13 @@ impl Scheduler {
         // on worker availability, so nested submission cannot deadlock.
         execute(&job);
         // Wait out indices stolen by workers that are still in flight.
-        let mut st = job.state.lock().unwrap();
+        let mut st = plock(&job.state);
         while st.completed < n {
-            st = job.done_cv.wait(st).unwrap();
+            st = cwait(&job.done_cv, st);
         }
         let panic = st.panic.take();
         drop(st);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.jobs.retain(|j| !Arc::ptr_eq(j, &job));
         if inner.busy == 0 && inner.jobs.is_empty() {
             self.idle_cv.notify_all();
@@ -325,23 +378,24 @@ impl Scheduler {
         }
     }
 
-    fn spawn_workers(&'static self, inner: &mut Inner, wanted: usize) {
+    fn spawn_workers(self: &Arc<Self>, inner: &mut Inner, wanted: usize) {
         let mut deficit = wanted.min(self.max_workers.saturating_sub(inner.spawned));
         while deficit > 0 {
-            let spawned = std::thread::Builder::new()
-                .name(format!("polygen-pool-{}", inner.spawned))
-                .spawn(move || self.worker_loop())
-                .is_ok();
-            if !spawned {
-                break; // resource exhaustion: degrade to fewer workers
+            let worker = Arc::clone(self);
+            let name = format!("polygen-pool-{}", inner.spawned);
+            match thread::spawn_named(name, move || worker.worker_loop()) {
+                Some(handle) => {
+                    inner.handles.push(handle);
+                    inner.spawned += 1;
+                    deficit -= 1;
+                }
+                None => break, // resource exhaustion: degrade to fewer workers
             }
-            inner.spawned += 1;
-            deficit -= 1;
         }
     }
 
-    fn worker_loop(&'static self) {
-        let mut inner = self.inner.lock().unwrap();
+    fn worker_loop(&self) {
+        let mut inner = plock(&self.inner);
         loop {
             // Donation: join *any* job still under its budget, not just
             // the one that woke us. The pick is cost-aware (see
@@ -354,13 +408,14 @@ impl Scheduler {
                     inner.busy += 1;
                     drop(inner);
                     execute(&job);
-                    inner = self.inner.lock().unwrap();
+                    inner = plock(&self.inner);
                     inner.busy -= 1;
                     if inner.busy == 0 && inner.jobs.is_empty() {
                         self.idle_cv.notify_all();
                     }
                 }
-                None => inner = self.work_cv.wait(inner).unwrap(),
+                None if inner.stop => return,
+                None => inner = cwait(&self.work_cv, inner),
             }
         }
     }
@@ -370,22 +425,42 @@ impl Scheduler {
     /// they stay resident for the next batch; this is the shutdown
     /// barrier that lets a caller know no scheduler work remains.
     pub fn drain(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         while !(inner.jobs.is_empty() && inner.busy == 0) {
-            inner = self.idle_cv.wait(inner).unwrap();
+            inner = cwait(&self.idle_cv, inner);
+        }
+    }
+
+    /// Drain, then stop and join every pool worker. For standalone
+    /// instances (tests, loom models — loom requires every thread a
+    /// model spawned to be joined before the model ends); the global
+    /// instance is never shut down. A scheduler remains *safe* after
+    /// shutdown: submissions still complete, executed entirely by their
+    /// submitting thread (the worker respawn path is closed by the
+    /// monotone `spawned` count).
+    pub fn shutdown(&self) {
+        self.drain();
+        let handles = {
+            let mut inner = plock(&self.inner);
+            inner.stop = true;
+            std::mem::take(&mut inner.handles)
+        };
+        self.work_cv.notify_all();
+        for h in handles {
+            let _ = h.join();
         }
     }
 
     /// Workers spawned so far (diagnostics; never exceeds the cap).
     pub fn workers_spawned(&self) -> usize {
-        self.inner.lock().unwrap().spawned
+        plock(&self.inner).spawned
     }
 
     /// Jobs currently outstanding (posted but not yet fully completed).
     /// Zero after [`Scheduler::drain`] returns; the chaos suite uses this
     /// to assert the pool is drained-but-reusable after a faulted run.
     pub fn outstanding_jobs(&self) -> usize {
-        self.inner.lock().unwrap().jobs.len()
+        plock(&self.inner).jobs.len()
     }
 }
 
@@ -480,6 +555,29 @@ mod tests {
         global().drain(); // idle drain returns immediately
         let b = run_indexed(40, 4, uneven_work);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn standalone_scheduler_runs_and_shuts_down() {
+        // The same protocol the loom models explore, on a private pool:
+        // run, drain, run again (parked-but-reusable), then shutdown
+        // joins every worker — and a post-shutdown submission still
+        // completes (inline on its submitter), never hangs.
+        let sched = Scheduler::new_standalone(2);
+        let hits = AtomicUsize::new(0);
+        let task = |_: usize| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        sched.run_on(16, 3, &task);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        sched.drain();
+        sched.run_on(8, 3, &task);
+        assert_eq!(hits.load(Ordering::Relaxed), 24);
+        sched.shutdown();
+        sched.run_on(4, 3, &task);
+        assert_eq!(hits.load(Ordering::Relaxed), 28);
+        assert_eq!(sched.outstanding_jobs(), 0);
+        assert!(sched.workers_spawned() <= 2);
     }
 
     /// Build a synthetic job for `pick_job` tests: `n` total indices,

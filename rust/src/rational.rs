@@ -5,7 +5,10 @@
 //! integers. Floating point would silently mis-classify boundary cases, so
 //! all of `designspace` works in exact rationals. Magnitudes are small
 //! (numerators ≲ 2^70, denominators ≲ 2^24 even for 23-bit designs), so a
-//! reduced `i128` fraction never overflows; debug assertions guard this.
+//! reduced `i128` fraction never overflows; the arithmetic is checked, so
+//! an operand beyond that envelope fails loudly instead of wrapping, and
+//! comparisons stay exact for the full `i128` domain by widening to
+//! 256-bit cross products.
 
 use std::cmp::Ordering;
 use std::fmt;
@@ -36,8 +39,14 @@ impl Rat {
     /// Construct and reduce. Panics on zero denominator.
     pub fn new(num: i128, den: i128) -> Rat {
         assert!(den != 0, "Rat with zero denominator");
-        let s = if den < 0 { -1 } else { 1 };
-        let (num, den) = (num * s, den * s);
+        let (num, den) = if den < 0 {
+            (
+                num.checked_neg().expect("Rat sign flip overflow"),
+                den.checked_neg().expect("Rat sign flip overflow"),
+            )
+        } else {
+            (num, den)
+        };
         let g = gcd(num, den);
         if g == 0 {
             return Rat { num: 0, den: 1 };
@@ -72,18 +81,26 @@ impl Rat {
     }
 
     pub fn add(&self, o: &Rat) -> Rat {
-        Rat::new(self.num * o.den + o.num * self.den, self.den * o.den)
+        let l = self.num.checked_mul(o.den).expect("Rat add overflow");
+        let r = o.num.checked_mul(self.den).expect("Rat add overflow");
+        let den = self.den.checked_mul(o.den).expect("Rat add overflow");
+        Rat::new(l.checked_add(r).expect("Rat add overflow"), den)
     }
 
     pub fn sub(&self, o: &Rat) -> Rat {
-        Rat::new(self.num * o.den - o.num * self.den, self.den * o.den)
+        let l = self.num.checked_mul(o.den).expect("Rat sub overflow");
+        let r = o.num.checked_mul(self.den).expect("Rat sub overflow");
+        let den = self.den.checked_mul(o.den).expect("Rat sub overflow");
+        Rat::new(l.checked_sub(r).expect("Rat sub overflow"), den)
     }
 
     pub fn mul(&self, o: &Rat) -> Rat {
         // Cross-reduce before multiplying to keep intermediates small.
         let g1 = gcd(self.num, o.den).max(1);
         let g2 = gcd(o.num, self.den).max(1);
-        Rat::new((self.num / g1) * (o.num / g2), (self.den / g2) * (o.den / g1))
+        let num = (self.num / g1).checked_mul(o.num / g2).expect("Rat mul overflow");
+        let den = (self.den / g2).checked_mul(o.den / g1).expect("Rat mul overflow");
+        Rat::new(num, den)
     }
 
     pub fn div(&self, o: &Rat) -> Rat {
@@ -92,12 +109,13 @@ impl Rat {
     }
 
     pub fn neg(&self) -> Rat {
-        Rat { num: -self.num, den: self.den }
+        Rat { num: self.num.checked_neg().expect("Rat neg overflow"), den: self.den }
     }
 
     /// Multiply by `2^k` exactly.
     pub fn shl(&self, k: u32) -> Rat {
-        Rat::new(self.num << k, self.den)
+        assert!(k < 127, "Rat shl shift out of range");
+        Rat::new(self.num.checked_mul(1i128 << k).expect("Rat shl overflow"), self.den)
     }
 
     pub fn to_f64(&self) -> f64 {
@@ -242,6 +260,35 @@ mod tests {
         assert!(b.neg().lt(&a));
         assert_eq!(a.cmp_rat(&a), Ordering::Equal);
         assert_eq!(a.neg().cmp_rat(&a.neg()), Ordering::Equal);
+    }
+
+    #[test]
+    fn checked_arithmetic_works_at_the_boundary() {
+        // Large-but-representable operands still compute exactly.
+        let big = Rat::int(1i128 << 125);
+        assert_eq!(big.add(&big), Rat::int(1i128 << 126));
+        assert_eq!(Rat::int(1i128 << 63).mul(&Rat::int(1i128 << 63)), Rat::int(1i128 << 126));
+        assert_eq!(Rat::new(1, 1 << 30).shl(126), Rat::int(1i128 << 96));
+        assert_eq!(Rat::int(i128::MAX).neg(), Rat::int(-i128::MAX));
+        assert_eq!(Rat::new(i128::MAX, -1), Rat::int(-i128::MAX));
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat add overflow")]
+    fn add_overflow_is_loud() {
+        let _ = Rat::int(i128::MAX).add(&Rat::ONE);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat shl overflow")]
+    fn shl_overflow_is_loud() {
+        let _ = Rat::int(1i128 << 100).shl(30);
+    }
+
+    #[test]
+    #[should_panic(expected = "shift out of range")]
+    fn shl_rejects_out_of_range_shift() {
+        let _ = Rat::ONE.shl(127);
     }
 
     #[test]

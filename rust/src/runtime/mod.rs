@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::designspace::extrema::DiagExtrema;
 use crate::dse::Implementation;
+use crate::faults::{self, Fault};
 
 /// Batch size of the verify graphs.
 pub const CHUNK: usize = 65536;
@@ -32,12 +33,43 @@ pub enum Flavor {
     Pallas,
 }
 
+/// Sanity-check an HLO text artifact before it reaches the FFI parser.
+///
+/// Artifacts are machine-written ASCII, so the check is structural: the
+/// bytes must be UTF-8 and name an `HloModule`. Anything else is damage
+/// — the file is renamed aside (`.quarantined`) and the load fails with
+/// a rebuild hint, instead of feeding garbage to the C++ HLO parser.
+/// The read is routed through the `runtime.artifact` injection tap so
+/// the chaos suite can prove a corrupt artifact never reaches `compile`.
+fn check_artifact(path: &Path) -> Result<()> {
+    let mut bytes =
+        std::fs::read(path).with_context(|| format!("reading HLO text {}", path.display()))?;
+    if faults::inject("runtime.artifact", &[Fault::Corrupt]).is_some() && !bytes.is_empty() {
+        let at = faults::rand_below(bytes.len());
+        bytes[at] ^= 0x80;
+    }
+    let looks_like_hlo = std::str::from_utf8(&bytes).is_ok_and(|t| t.contains("HloModule"));
+    if !looks_like_hlo {
+        let mut q = path.as_os_str().to_owned();
+        q.push(".quarantined");
+        let q = PathBuf::from(q);
+        let _ = std::fs::rename(path, &q);
+        bail!(
+            "{} is not HLO module text; quarantined at {} — run `make artifacts` to rebuild",
+            path.display(),
+            q.display()
+        );
+    }
+    Ok(())
+}
+
 struct LoadedExe {
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl LoadedExe {
     fn load(client: &xla::PjRtClient, path: &Path) -> Result<LoadedExe> {
+        check_artifact(path)?;
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -200,4 +232,73 @@ pub fn accumulator_fits_i64(im: &Implementation) -> bool {
     let cmax = im.coeffs.iter().map(|c| (c.c as i128).abs()).max().unwrap_or(0);
     let acc = amax * xmax * xmax + bmax * xmax + cmax;
     acc < (1i128 << 62)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HLO: &[u8] =
+        b"HloModule verify_jnp, entry_computation_layout={()->s64[]}\n\nENTRY main {\n  ROOT c = s64[] constant(1)\n}\n";
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("polygen_hlo_{}_{tag}.hlo.txt", std::process::id()))
+    }
+
+    fn quarantine_of(path: &Path) -> PathBuf {
+        let mut q = path.as_os_str().to_owned();
+        q.push(".quarantined");
+        PathBuf::from(q)
+    }
+
+    #[test]
+    fn clean_artifact_passes_and_stays() {
+        let path = scratch("clean");
+        std::fs::write(&path, HLO).unwrap();
+        check_artifact(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn every_high_bit_flip_is_caught_and_quarantined() {
+        // The artifact is pure ASCII, so flipping any byte's high bit
+        // yields invalid UTF-8 — the structural check must catch every
+        // position and move the file aside.
+        let path = scratch("byteflip");
+        let q = quarantine_of(&path);
+        for at in 0..HLO.len() {
+            let mut bad = HLO.to_vec();
+            bad[at] ^= 0x80;
+            std::fs::write(&path, &bad).unwrap();
+            let err = check_artifact(&path).unwrap_err().to_string();
+            assert!(err.contains("quarantined"), "flip at {at}: {err}");
+            assert!(!path.exists(), "flip at {at} left the bad artifact in place");
+            assert!(q.exists(), "flip at {at} did not quarantine");
+            std::fs::remove_file(&q).unwrap();
+        }
+    }
+
+    #[test]
+    fn text_without_module_header_is_quarantined() {
+        let path = scratch("noheader");
+        std::fs::write(&path, b"ENTRY main { ROOT c = s64[] constant(1) }\n").unwrap();
+        assert!(check_artifact(&path).is_err());
+        assert!(!path.exists());
+        std::fs::remove_file(quarantine_of(&path)).unwrap();
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn armed_artifact_tap_quarantines() {
+        use crate::faults::{arm_guard, FaultPlan};
+        let _serial = crate::faults::test_serial_lock();
+        let path = scratch("armed");
+        std::fs::write(&path, HLO).unwrap();
+        {
+            let _g = arm_guard(FaultPlan::new(0xBEEF).rate(1000).only("runtime."));
+            assert!(check_artifact(&path).is_err(), "armed corruption must fail the check");
+        }
+        std::fs::remove_file(quarantine_of(&path)).unwrap();
+    }
 }

@@ -36,8 +36,6 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::bounds::{builtin, BoundTable};
@@ -50,6 +48,8 @@ use crate::faults::{self, Fault};
 use crate::net::{CircuitBreaker, Policy, RetryBudget};
 use crate::pipeline::{Config, JobSpec, LookupBits, SearchStrategy};
 use crate::pool::{CancelToken, Progress};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{cwait, plock, thread, Arc, Condvar, Mutex};
 
 use super::http::{json_str, obj};
 use super::store::crc32;
@@ -410,31 +410,29 @@ impl ShardServer {
             state: Mutex::new(ShardState::Analyzing),
             cv: Condvar::new(),
         });
-        self.shards.lock().unwrap().insert(id, Arc::clone(&entry));
+        plock(&self.shards).insert(id, Arc::clone(&entry));
         let worker = Arc::clone(&entry);
-        let spawned = std::thread::Builder::new()
-            .name(format!("polygen-shard-{id}"))
-            .spawn(move || {
-                let result = catch_unwind(AssertUnwindSafe(|| {
-                    analyze_shard(&bt, &opts, lo, hi, Some(&worker.cancel))
-                }));
-                let mut st = worker.state.lock().unwrap();
-                *st = match result {
-                    Ok(Ok(sa)) => ShardState::Analyzed(sa),
-                    Ok(Err(e)) => ShardState::Failed(e),
-                    Err(_) => ShardState::Panicked,
-                };
-                drop(st);
-                worker.cv.notify_all();
-            })
-            .is_ok();
+        let spawned = thread::spawn_named(format!("polygen-shard-{id}"), move || {
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                analyze_shard(&bt, &opts, lo, hi, Some(&worker.cancel))
+            }));
+            let mut st = plock(&worker.state);
+            *st = match result {
+                Ok(Ok(sa)) => ShardState::Analyzed(sa),
+                Ok(Err(e)) => ShardState::Failed(e),
+                Err(_) => ShardState::Panicked,
+            };
+            drop(st);
+            worker.cv.notify_all();
+        })
+        .is_some();
         if !spawned {
             // Thread exhaustion: analyze inline rather than leaving the
             // shard parked in Analyzing forever.
             let result = catch_unwind(AssertUnwindSafe(|| {
                 analyze_shard(&bt, &opts, lo, hi, Some(&entry.cancel))
             }));
-            let mut st = entry.state.lock().unwrap();
+            let mut st = plock(&entry.state);
             *st = match result {
                 Ok(Ok(sa)) => ShardState::Analyzed(sa),
                 Ok(Err(e)) => ShardState::Failed(e),
@@ -446,8 +444,8 @@ impl ShardServer {
 
     /// `GET /shards/:id`: flat-scalar status JSON.
     pub fn status_json(&self, id: u64) -> Option<String> {
-        let entry = self.shards.lock().unwrap().get(&id).cloned()?;
-        let st = entry.state.lock().unwrap();
+        let entry = plock(&self.shards).get(&id).cloned()?;
+        let st = plock(&entry.state);
         let body = match &*st {
             ShardState::Analyzing => obj([
                 ("id", id.to_string()),
@@ -503,17 +501,14 @@ impl ShardServer {
         let k = Config::parse(body)
             .and_then(|c| c.get_u32("k")?.ok_or_else(|| "missing k".into()))
             .map_err(|e| bad(&e))?;
-        let entry = self
-            .shards
-            .lock()
-            .unwrap()
+        let entry = plock(&self.shards)
             .get(&id)
             .cloned()
             .ok_or((404, obj([("error", json_str("no such shard"))])))?;
-        let mut st = entry.state.lock().unwrap();
+        let mut st = plock(&entry.state);
         loop {
             match &*st {
-                ShardState::Analyzing => st = entry.cv.wait(st).unwrap(),
+                ShardState::Analyzing => st = cwait(&entry.cv, st),
                 ShardState::Failed(_) => {
                     return Err((409, obj([("error", json_str("shard failed"))])))
                 }
@@ -533,7 +528,7 @@ impl ShardServer {
 
     /// `DELETE /shards/:id`: cooperative cancel + unregister.
     pub fn cancel(&self, id: u64) -> bool {
-        match self.shards.lock().unwrap().remove(&id) {
+        match plock(&self.shards).remove(&id) {
             Some(e) => {
                 e.cancel.cancel();
                 true
@@ -600,29 +595,29 @@ impl Cluster {
     /// Token forwarded on coordinator → worker calls (the cluster shares
     /// one `--auth-token`).
     pub fn set_auth(&self, token: Option<String>) {
-        *self.auth.lock().unwrap() = token;
+        *plock(&self.auth) = token;
     }
 
     fn auth(&self) -> Option<String> {
-        self.auth.lock().unwrap().clone()
+        plock(&self.auth).clone()
     }
 
     /// Install the call policy (`--call-timeout` / `--retries` /
     /// `--breaker-threshold`).
     pub fn set_policy(&self, policy: Policy) {
-        *self.policy.lock().unwrap() = policy;
+        *plock(&self.policy) = policy;
     }
 
     fn policy(&self) -> Policy {
-        self.policy.lock().unwrap().clone()
+        plock(&self.policy).clone()
     }
 
     fn breaker(&self, id: u64) -> Arc<CircuitBreaker> {
-        Arc::clone(self.breakers.lock().unwrap().entry(id).or_default())
+        Arc::clone(plock(&self.breakers).entry(id).or_default())
     }
 
     fn breaker_allows(&self, id: u64) -> bool {
-        self.breakers.lock().unwrap().get(&id).map_or(true, |b| b.allow())
+        plock(&self.breakers).get(&id).map_or(true, |b| b.allow())
     }
 
     /// Record a protocol-level failure (non-200, unintelligible or
@@ -678,14 +673,14 @@ impl Cluster {
     /// re-registration is positive evidence the worker is back.
     pub fn register(&self, addr: &str) -> u64 {
         let addr = normalize_addr(addr);
-        let mut ws = self.workers.lock().unwrap();
+        let mut ws = plock(&self.workers);
         let replaced: Vec<u64> =
             ws.iter().filter(|(_, w)| w.addr == addr).map(|(&id, _)| id).collect();
         ws.retain(|_, w| w.addr != addr);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         ws.insert(id, WorkerInfo { addr, last_seen: Instant::now() });
         drop(ws);
-        let mut breakers = self.breakers.lock().unwrap();
+        let mut breakers = plock(&self.breakers);
         for old in replaced {
             breakers.remove(&old);
         }
@@ -696,7 +691,7 @@ impl Cluster {
     /// `POST /workers/:id/heartbeat` → `false` = unknown id (the worker
     /// should re-register; the coordinator may have restarted).
     pub fn heartbeat(&self, id: u64) -> bool {
-        match self.workers.lock().unwrap().get_mut(&id) {
+        match plock(&self.workers).get_mut(&id) {
             Some(w) => {
                 w.last_seen = Instant::now();
                 true
@@ -708,7 +703,7 @@ impl Cluster {
     /// Registered workers, id-ascending, with their availability state.
     pub fn workers(&self) -> Vec<WorkerView> {
         let views: Vec<(u64, String, bool)> = {
-            let ws = self.workers.lock().unwrap();
+            let ws = plock(&self.workers);
             ws.iter()
                 .map(|(&id, w)| (id, w.addr.clone(), w.last_seen.elapsed() < self.timeout))
                 .collect()
@@ -737,7 +732,7 @@ impl Cluster {
     /// cluster" from "had one and lost it" — only the latter is a
     /// degradation worth flagging.)
     fn any_registered(&self) -> bool {
-        !self.workers.lock().unwrap().is_empty()
+        !plock(&self.workers).is_empty()
     }
 
     /// Distributed generation: shard `0..2^R` over the live workers,
@@ -941,15 +936,11 @@ impl Cluster {
     }
 
     fn is_live(&self, id: u64) -> bool {
-        self.workers
-            .lock()
-            .unwrap()
-            .get(&id)
-            .is_some_and(|w| w.last_seen.elapsed() < self.timeout)
+        plock(&self.workers).get(&id).is_some_and(|w| w.last_seen.elapsed() < self.timeout)
     }
 
     fn addr_of(&self, id: u64) -> Option<String> {
-        self.workers.lock().unwrap().get(&id).map(|w| w.addr.clone())
+        plock(&self.workers).get(&id).map(|w| w.addr.clone())
     }
 
     /// POST one shard to the next live worker (round-robin via `*rr`),

@@ -1,0 +1,184 @@
+//! The service's executor queue, extracted so the close protocol is one
+//! self-contained, loom-modelable unit (DESIGN.md §Static analysis).
+//!
+//! A [`TaskQueue`] is the park/close half of the service's executor
+//! pool: submissions push work and decide whether a new executor thread
+//! is warranted; executors pop work or park; closing the queue (what
+//! the service's `Gate` does when the last public clone drops) lets
+//! parked executors drain the backlog and exit instead of re-parking.
+//! The invariant the loom models check: after `close`, every item
+//! pushed *before* the close is still popped by someone — the backlog
+//! is drained, never abandoned.
+//!
+//! This type is `pub` only so the `tests/loom` suite can drive it; it
+//! is not part of the crate's supported API surface.
+
+use std::collections::VecDeque;
+
+use crate::sync::{cwait, plock, Condvar, Mutex};
+
+struct QueueState<T> {
+    queue: VecDeque<T>,
+    /// Executor threads alive (decremented when one exits).
+    spawned: usize,
+    /// Executors parked waiting for work.
+    idle: usize,
+    /// Set once by [`TaskQueue::close`]: executors drain the backlog,
+    /// then exit instead of parking.
+    closed: bool,
+}
+
+/// A close-aware MPMC work queue with executor-pool accounting.
+pub struct TaskQueue<T> {
+    state: Mutex<QueueState<T>>,
+    work_cv: Condvar,
+}
+
+impl<T> Default for TaskQueue<T> {
+    fn default() -> Self {
+        TaskQueue::new()
+    }
+}
+
+impl<T> TaskQueue<T> {
+    pub fn new() -> TaskQueue<T> {
+        TaskQueue {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                spawned: 0,
+                idle: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+        }
+    }
+
+    /// Push `item` and decide whether the caller should spawn a new
+    /// executor: `true` whenever the backlog exceeds the parked
+    /// executors and the pool is under `cap` — a burst of submissions
+    /// to a warm pool must ramp to `cap`-way concurrency, not serialize
+    /// on whichever executor happens to be idle. A `true` return
+    /// *reserves* the spawn slot (the `spawned` count is already
+    /// incremented); the caller must either actually spawn an executor
+    /// that will run a pop loop, or report [`TaskQueue::spawn_failed`].
+    pub fn push_and_plan(&self, item: T, cap: usize) -> bool {
+        let mut st = plock(&self.state);
+        st.queue.push_back(item);
+        let plan = st.idle < st.queue.len() && st.spawned < cap;
+        if plan {
+            st.spawned += 1;
+        }
+        drop(st);
+        self.work_cv.notify_one();
+        plan
+    }
+
+    /// Roll back a reserved spawn slot after a failed thread spawn.
+    /// Returns `true` when no executor remains alive — the caller must
+    /// then drain the queue inline ([`TaskQueue::pop_now`]) so no
+    /// pushed item can hang forever.
+    pub fn spawn_failed(&self) -> bool {
+        let mut st = plock(&self.state);
+        st.spawned -= 1;
+        st.spawned == 0
+    }
+
+    /// The executor loop's blocking pop: an item to run, or `None` when
+    /// the queue is closed *and* the backlog is fully drained — at
+    /// which point this executor's `spawned` slot is already released
+    /// and it must exit.
+    pub fn pop_or_exit(&self) -> Option<T> {
+        let mut st = plock(&self.state);
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                st.spawned -= 1;
+                return None;
+            }
+            st.idle += 1;
+            st = cwait(&self.work_cv, st);
+            st.idle -= 1;
+        }
+    }
+
+    /// Non-blocking pop (the inline-drain fallback when no executor
+    /// could be spawned).
+    pub fn pop_now(&self) -> Option<T> {
+        plock(&self.state).queue.pop_front()
+    }
+
+    /// Close the queue: parked executors wake, drain the backlog, and
+    /// exit. Items may still be pushed afterwards; they are only
+    /// guaranteed to run if the pusher handles the no-executor case
+    /// (the service never pushes after its gate dropped — the gate *is*
+    /// the last clone).
+    pub fn close(&self) {
+        let mut st = plock(&self.state);
+        st.closed = true;
+        drop(st);
+        self.work_cv.notify_all();
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::sync::Arc;
+
+    #[test]
+    fn push_plans_spawns_up_to_cap() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        assert!(q.push_and_plan(1, 2), "first push must plan an executor");
+        assert!(q.push_and_plan(2, 2), "backlog of 2 > idle 0, under cap");
+        assert!(!q.push_and_plan(3, 2), "at cap: no third executor");
+        // Failed spawns roll back; the last rollback demands inline drain.
+        assert!(!q.spawn_failed(), "one executor slot still reserved");
+        assert!(q.spawn_failed(), "no executors left: caller must drain inline");
+        assert_eq!(q.pop_now(), Some(1));
+        assert_eq!(q.pop_now(), Some(2));
+        assert_eq!(q.pop_now(), Some(3));
+        assert_eq!(q.pop_now(), None);
+    }
+
+    #[test]
+    fn close_drains_backlog_then_exits_executors() {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        assert!(q.push_and_plan(10, 4));
+        assert!(q.push_and_plan(20, 4));
+        q.close();
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(v) = q.pop_or_exit() {
+                    seen.push(v);
+                }
+                seen
+            })
+        };
+        let seen = worker.join().unwrap();
+        assert_eq!(seen, vec![10, 20], "backlog drained before exit");
+    }
+
+    #[test]
+    fn close_wakes_a_parked_executor() {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        assert!(q.push_and_plan(1, 1));
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut n = 0;
+                while q.pop_or_exit().is_some() {
+                    n += 1;
+                }
+                n
+            })
+        };
+        // Eventually the worker pops the item and parks; close must wake
+        // it so it exits rather than parking forever.
+        q.close();
+        assert_eq!(worker.join().unwrap(), 1);
+    }
+}

@@ -52,8 +52,6 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -62,6 +60,8 @@ use super::{JobEntry, JobStatus, Service};
 use crate::faults::{self, Fault};
 use crate::net::TokenBucket;
 use crate::pipeline::{JobResult, PipelineError};
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::{plock, Arc, Mutex};
 
 /// Listener-level hardening knobs for [`serve_with`] /
 /// [`HttpServer::spawn_with`].
@@ -149,7 +149,7 @@ fn over_rate_limit(
         return None;
     }
     let peer = stream.peer_addr().ok()?.ip();
-    let mut map = buckets.lock().unwrap();
+    let mut map = plock(buckets);
     // Bound the table: buckets that have refilled to full are
     // indistinguishable from fresh ones, so they can be dropped.
     if map.len() > 1024 {
@@ -203,6 +203,7 @@ impl HttpServer {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Wake the blocking accept with a throwaway connection.
+        // lint: fault-ok(self-connect to our own listener; not a remote boundary)
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
@@ -715,6 +716,8 @@ impl JsonParser<'_> {
 
 type Request = (String, String, Option<String>, String);
 
+// lint: fault-ok(the http.read delay tap fires in handle_connection
+// right before this reader runs on the same stream)
 fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -764,6 +767,8 @@ fn reason(code: u16) -> &'static str {
     }
 }
 
+// lint: fault-ok(the http.respond disconnect tap fires in write_body on
+// the payload; the head write shares the stream and failure path)
 fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
@@ -775,6 +780,8 @@ fn respond(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()>
     write_body(stream, body.as_bytes())
 }
 
+// lint: fault-ok(the http.respond disconnect tap fires in write_body on
+// the payload; the head write shares the stream and failure path)
 fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {code} {}\r\nContent-Type: application/octet-stream\r\n\
@@ -788,6 +795,8 @@ fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Res
 
 /// `429 Too Many Requests` with the `Retry-After` hint a well-behaved
 /// client backs off by.
+// lint: fault-ok(load-shed fast path that bypasses route dispatch;
+// disconnect faults are exercised on the normal path via write_body)
 fn respond_rate_limited(stream: &mut TcpStream, retry_after_secs: u64) -> std::io::Result<()> {
     let body = obj([("error", json_str("rate limit exceeded"))]);
     let head = format!(

@@ -86,20 +86,23 @@
 //! pool is left drained-but-reusable, never poisoned.
 
 pub(crate) mod cluster;
+#[doc(hidden)]
+pub mod exec;
 pub mod http;
 pub(crate) mod store;
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::net::Policy;
 use crate::pipeline::{Generator, JobCtrl, JobResult, JobSpec, Phase, PipelineError};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{cwait, plock, thread, Arc, Condvar, Mutex};
 
 use cluster::Cluster;
+use exec::TaskQueue;
 pub use cluster::{run_worker_agent, run_worker_agent_with, WorkerView};
 use store::{JobLog, LoadOutcome, LogOutcome, ResultStore};
 pub use store::StoreEntry;
@@ -184,7 +187,7 @@ impl JobEntry {
     }
 
     pub(crate) fn status(&self) -> JobStatus {
-        let st = self.state.lock().unwrap();
+        let st = plock(&self.state);
         match &*st {
             // A cancel on a still-queued job is reported immediately —
             // the executor that eventually pops it only confirms.
@@ -214,9 +217,9 @@ impl JobEntry {
     /// Block until the entry reaches a terminal state (does not consume
     /// the outcome).
     fn wait_finished(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         while !matches!(*st, EntryState::Finished { .. }) {
-            st = self.cv.wait(st).unwrap();
+            st = cwait(&self.cv, st);
         }
     }
 
@@ -227,7 +230,7 @@ impl JobEntry {
         &self,
         f: impl FnOnce(Option<&Result<JobResult, PipelineError>>) -> R,
     ) -> Option<R> {
-        let st = self.state.lock().unwrap();
+        let st = plock(&self.state);
         match &*st {
             EntryState::Finished { outcome, .. } => Some(f(outcome.as_ref())),
             _ => None,
@@ -238,7 +241,7 @@ impl JobEntry {
     /// consuming handle accessors: each entry has exactly one handle and
     /// both accessors take `self`, so this runs at most once.
     fn take_outcome(&self) -> Result<JobResult, PipelineError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         loop {
             match &mut *st {
                 EntryState::Finished { outcome, .. } => {
@@ -246,13 +249,13 @@ impl JobEntry {
                         .take()
                         .expect("outcome taken twice despite consuming accessors");
                 }
-                _ => st = self.cv.wait(st).unwrap(),
+                _ => st = cwait(&self.cv, st),
             }
         }
     }
 
     fn finish(&self, label: FinLabel, outcome: Result<JobResult, PipelineError>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         *st = EntryState::Finished { label, outcome: Some(outcome), at: Instant::now() };
         drop(st);
         self.cv.notify_all();
@@ -260,7 +263,7 @@ impl JobEntry {
 
     /// Time since the entry went terminal (`None` while live).
     fn finished_elapsed(&self) -> Option<Duration> {
-        match &*self.state.lock().unwrap() {
+        match &*plock(&self.state) {
             EntryState::Finished { at, .. } => Some(at.elapsed()),
             _ => None,
         }
@@ -331,25 +334,15 @@ impl JobHandle {
     }
 }
 
-struct ExecState {
-    queue: VecDeque<Arc<JobEntry>>,
-    /// Executor threads alive (decremented on exit).
-    spawned: usize,
-    /// Executors parked waiting for work.
-    idle: usize,
-    /// Set when the last [`Service`] clone drops: executors drain the
-    /// backlog, then exit instead of parking.
-    closed: bool,
-}
-
 struct Inner {
     workers: usize,
     cache_dir: Option<PathBuf>,
     max_finished: usize,
     finished_ttl: Option<Duration>,
     next_id: AtomicU64,
-    exec: Mutex<ExecState>,
-    work_cv: Condvar,
+    /// The executor pool's work queue and park/close protocol — the
+    /// loom-modeled half of the service (see [`exec::TaskQueue`]).
+    exec: TaskQueue<Arc<JobEntry>>,
     jobs: Mutex<BTreeMap<u64, Arc<JobEntry>>>,
     /// Durability (present iff [`ServiceBuilder::state_dir`] was set).
     log: Option<JobLog>,
@@ -362,10 +355,7 @@ struct Inner {
 
 impl Inner {
     fn close(&self) {
-        let mut ex = self.exec.lock().unwrap();
-        ex.closed = true;
-        drop(ex);
-        self.work_cv.notify_all();
+        self.exec.close();
     }
 }
 
@@ -527,13 +517,7 @@ impl ServiceBuilder {
             max_finished: self.max_finished,
             finished_ttl: self.finished_ttl,
             next_id: AtomicU64::new(max_id),
-            exec: Mutex::new(ExecState {
-                queue: VecDeque::new(),
-                spawned: 0,
-                idle: 0,
-                closed: false,
-            }),
-            work_cv: Condvar::new(),
+            exec: TaskQueue::new(),
             jobs: Mutex::new(BTreeMap::new()),
             log,
             store,
@@ -546,7 +530,7 @@ impl ServiceBuilder {
         // entry); jobs interrupted mid-run report a structured failure
         // rather than a forever-Running lie.
         {
-            let mut jobs = inner.jobs.lock().unwrap();
+            let mut jobs = plock(&inner.jobs);
             for r in replayed {
                 let label = match &r.outcome {
                     Some(LogOutcome::Done) => FinLabel::Done,
@@ -657,7 +641,7 @@ impl Service {
                         log.append_submit(id, &entry.spec);
                         log.append_finish(id, &LogOutcome::Done, Some(&key));
                     }
-                    self.inner.jobs.lock().unwrap().insert(id, Arc::clone(&entry));
+                    plock(&self.inner.jobs).insert(id, Arc::clone(&entry));
                     return JobHandle { entry };
                 }
             }
@@ -673,32 +657,19 @@ impl Service {
         if let Some(log) = &self.inner.log {
             log.append_submit(id, &entry.spec);
         }
-        self.inner.jobs.lock().unwrap().insert(id, Arc::clone(&entry));
-        let mut ex = self.inner.exec.lock().unwrap();
-        ex.queue.push_back(Arc::clone(&entry));
-        let mut spawn_failed = false;
-        // Spawn whenever the backlog exceeds the parked executors (up to
-        // the budget): a burst of submissions to a warm service must
-        // ramp to `workers`-way concurrency, not serialize on whichever
-        // executor happens to be idle.
-        if ex.idle < ex.queue.len() && ex.spawned < self.inner.workers {
-            ex.spawned += 1;
+        plock(&self.inner.jobs).insert(id, Arc::clone(&entry));
+        // The queue decides whether a new executor is warranted (backlog
+        // exceeds parked executors, pool under budget — see
+        // `TaskQueue::push_and_plan`); a `true` return reserves the slot.
+        if self.inner.exec.push_and_plan(Arc::clone(&entry), self.inner.workers) {
             let inner = Arc::clone(&self.inner);
-            let ok = std::thread::Builder::new()
-                .name(format!("polygen-svc-{id}"))
-                .spawn(move || executor_loop(inner))
-                .is_ok();
-            if !ok {
-                ex.spawned -= 1;
-                spawn_failed = ex.spawned == 0;
+            let spawned =
+                thread::spawn_named(format!("polygen-svc-{id}"), move || executor_loop(inner));
+            if spawned.is_none() && self.inner.exec.spawn_failed() {
+                // Resource exhaustion with no executor alive: degrade to
+                // running the backlog inline so the handle can never hang.
+                drain_queue_inline(&self.inner);
             }
-        }
-        drop(ex);
-        self.inner.work_cv.notify_one();
-        if spawn_failed {
-            // Resource exhaustion with no executor alive: degrade to
-            // running the backlog inline so the handle can never hang.
-            drain_queue_inline(&self.inner);
         }
         JobHandle { entry }
     }
@@ -727,21 +698,14 @@ impl Service {
 
     /// Snapshot of every registered job, id-ascending (submission order).
     pub fn jobs(&self) -> Vec<(u64, String, JobStatus)> {
-        self.inner
-            .jobs
-            .lock()
-            .unwrap()
-            .values()
-            .map(|e| (e.id, e.spec.label(), e.status()))
-            .collect()
+        plock(&self.inner.jobs).values().map(|e| (e.id, e.spec.label(), e.status())).collect()
     }
 
     /// Block until every job submitted so far is terminal. (Jobs
     /// submitted concurrently with the call may be missed — this is a
     /// test/shutdown barrier, not a fence.)
     pub fn drain(&self) {
-        let entries: Vec<Arc<JobEntry>> =
-            self.inner.jobs.lock().unwrap().values().cloned().collect();
+        let entries: Vec<Arc<JobEntry>> = plock(&self.inner.jobs).values().cloned().collect();
         for e in entries {
             e.wait_finished();
         }
@@ -756,7 +720,7 @@ impl Service {
         if cap == usize::MAX && ttl.is_none() {
             return;
         }
-        let mut jobs = self.inner.jobs.lock().unwrap();
+        let mut jobs = plock(&self.inner.jobs);
         if let Some(ttl) = ttl {
             let expired: Vec<u64> = jobs
                 .iter()
@@ -800,13 +764,13 @@ impl Service {
     }
 
     pub(crate) fn entry(&self, id: u64) -> Option<Arc<JobEntry>> {
-        self.inner.jobs.lock().unwrap().get(&id).cloned()
+        plock(&self.inner.jobs).get(&id).cloned()
     }
 
     /// Every registered entry, id-ascending, cloned out under one lock
     /// acquisition (the HTTP listing's access path).
     pub(crate) fn entries(&self) -> Vec<Arc<JobEntry>> {
-        self.inner.jobs.lock().unwrap().values().cloned().collect()
+        plock(&self.inner.jobs).values().cloned().collect()
     }
 }
 
@@ -817,42 +781,21 @@ impl Default for Service {
 }
 
 fn executor_loop(inner: Arc<Inner>) {
-    loop {
-        let entry = {
-            let mut ex = inner.exec.lock().unwrap();
-            loop {
-                if let Some(e) = ex.queue.pop_front() {
-                    break Some(e);
-                }
-                if ex.closed {
-                    break None;
-                }
-                ex.idle += 1;
-                ex = inner.work_cv.wait(ex).unwrap();
-                ex.idle -= 1;
-            }
-        };
-        match entry {
-            Some(e) => run_job(&inner, &e),
-            None => {
-                inner.exec.lock().unwrap().spawned -= 1;
-                return;
-            }
-        }
+    while let Some(e) = inner.exec.pop_or_exit() {
+        run_job(&inner, &e);
     }
 }
 
 /// Spawn-failure fallback: run whatever is queued on the calling thread.
 fn drain_queue_inline(inner: &Inner) {
-    loop {
-        let Some(e) = inner.exec.lock().unwrap().queue.pop_front() else { return };
+    while let Some(e) = inner.exec.pop_now() {
         run_job(inner, &e);
     }
 }
 
 fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
     {
-        let mut st = entry.state.lock().unwrap();
+        let mut st = plock(&entry.state);
         if entry.ctrl.is_cancelled() {
             // Cancelled while queued: settle without touching the
             // pipeline at all.

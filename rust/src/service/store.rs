@@ -26,12 +26,12 @@
 use std::fs::{self, File, OpenOptions};
 use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, SystemTime};
 
 use crate::dse::precision::{Encoding, Sign};
 use crate::faults::{self, Fault};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{plock, Mutex};
 use crate::dse::Coeffs;
 use crate::pipeline::{Degree, Implementation, JobResult, JobSpec, SynthPoint, VerifyReport};
 
@@ -216,7 +216,7 @@ impl JobLog {
             }
             _ => {}
         }
-        let mut f = self.file.lock().unwrap();
+        let mut f = plock(&self.file);
         // Durability is best-effort: a full disk must not take the
         // (still correct in-memory) service down, so write errors are
         // counted, not propagated.
@@ -279,6 +279,8 @@ impl JobLog {
     /// back to its valid prefix — so future appends extend good frames
     /// instead of hiding behind a bad one forever. The service's build
     /// path uses this; `replay` stays read-only for tools and tests.
+    // lint: fault-ok(log damage is injected at append time via store.log;
+    // this repair path is what the chaos suite exercises with it)
     pub fn recover(path: &Path) -> Vec<ReplayedJob> {
         let (jobs, valid, total) = JobLog::scan(path);
         if valid < total {
@@ -304,6 +306,8 @@ impl JobLog {
     /// Parse the log: the replayed jobs, the byte length of the valid
     /// prefix (frames fully applied), and the file's total length.
     /// `valid == total` means the log is clean.
+    // lint: fault-ok(log damage is injected at append time via store.log;
+    // the per-frame CRC here is the check that tap exercises)
     fn scan(path: &Path) -> (Vec<ReplayedJob>, u64, u64) {
         let mut buf = Vec::new();
         match File::open(path) {
@@ -470,6 +474,8 @@ impl ResultStore {
     /// quarantined (the file is renamed to `<name>.pgjr.quarantined`
     /// so the next submission of the same spec recomputes instead of
     /// tripping over it again).
+    // lint: fault-ok(result damage is injected at save time via
+    // store.result; the CRC trailer check here is what that tap exercises)
     pub fn load_checked(&self, key: &str) -> LoadOutcome {
         let path = self.path_for(key);
         let bytes = match fs::read(&path) {
@@ -501,6 +507,8 @@ impl ResultStore {
     /// Everything currently stored, key-sorted — the `GET /store`
     /// inventory. Reads each file's embedded key best-effort (corrupt
     /// files still occupy disk, so they are listed too).
+    // lint: fault-ok(best-effort maintenance scan; a bad read degrades a
+    // listing entry, never a result — integrity lives in load_checked)
     pub fn inventory(&self) -> Vec<StoreEntry> {
         let Ok(entries) = fs::read_dir(&self.dir) else { return Vec::new() };
         let now = SystemTime::now();
@@ -528,6 +536,8 @@ impl ResultStore {
 
     /// Enforce the TTL, then the byte budget (oldest files first).
     /// Best-effort: an unreadable directory just skips the pass.
+    // lint: fault-ok(best-effort maintenance deletes; a failed remove
+    // leaves a file the next prune retries — no integrity boundary)
     fn prune(&self) {
         if self.max_bytes.is_none() && self.ttl.is_none() {
             return;

@@ -1,0 +1,127 @@
+//! The crate-wide synchronization shim (DESIGN.md §Static analysis).
+//!
+//! Every concurrency primitive the scheduler and service protocols use
+//! is imported from here, never from `std::sync` directly — that is the
+//! rule `cargo xtask lint` (the `sync-imports` pass) enforces. Normally
+//! the re-exports below *are* `std::sync`, so this module costs
+//! nothing; under `--cfg loom` they swap to [`loom`]'s model-checked
+//! mirrors, and the `tests/loom` suite explores every interleaving of
+//! the real locking protocol — the same source lines that ship, not a
+//! hand-written model.
+//!
+//! Run the models locally with
+//! `RUSTFLAGS="--cfg loom" cargo test --release --test loom`.
+//!
+//! Two rules keep the swap sound:
+//!
+//! - **No `std::sync` primitives outside this module.** A single raw
+//!   `Mutex` in a modeled protocol is invisible to loom's exploration,
+//!   which silently un-checks the model. Const-initialized `static`s in
+//!   never-modeled code are the one sanctioned exception (loom's
+//!   constructors are not `const`); they carry a
+//!   `// lint: sync-ok(reason)` waiver.
+//! - **No `.unwrap()` on lock results.** Lock poisoning is a byproduct
+//!   of a task panic, which the scheduler and service already catch and
+//!   forward; unwrapping the poison would turn one recovered panic into
+//!   a cascade. Use [`plock`] / [`cwait`], which recover the guard.
+//!
+//! `Arc`, `mpsc`, and `std::thread` are not primitives the lint bans —
+//! but modeled protocols still take `Arc` and thread spawns from here so
+//! loom can track clone counts and joins.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+/// Lock `m`, recovering the guard from a poisoned lock. Poisoning here
+/// only ever means "a task panicked while holding the guard"; both the
+/// scheduler and the service catch that panic and forward it to the
+/// submitter, so the shared state a survivor observes is already
+/// consistent — propagating the poison would fail healthy threads for
+/// a failure that was handled.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`plock`].
+pub fn cwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Thread spawning for modeled protocols: loom's scheduler must own
+/// every thread a model creates, so modeled code spawns through here.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    /// Spawn a named thread; `None` = resource exhaustion (the callers
+    /// all degrade — fewer pool workers, inline execution — rather than
+    /// propagate). Loom has no named builder and cannot fail to spawn.
+    #[cfg(not(loom))]
+    pub fn spawn_named<F>(name: String, f: F) -> Option<JoinHandle<()>>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        std::thread::Builder::new().name(name).spawn(f).ok()
+    }
+
+    #[cfg(loom)]
+    pub fn spawn_named<F>(_name: String, f: F) -> Option<JoinHandle<()>>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        Some(loom::thread::spawn(f))
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let clone = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = clone.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex must actually be poisoned");
+        assert_eq!(*plock(&m), 7, "plock must hand back the guard anyway");
+        *plock(&m) = 8;
+        assert_eq!(*plock(&m), 8);
+    }
+
+    #[test]
+    fn cwait_wakes_like_condvar_wait() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let clone = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*clone;
+            *plock(m) = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut done = plock(m);
+        while !*done {
+            done = cwait(cv, done);
+        }
+        t.join().unwrap();
+    }
+}

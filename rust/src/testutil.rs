@@ -85,7 +85,15 @@ pub fn zigzag_bounds(rng: &mut Rng, n: usize) -> (Vec<i32>, Vec<i32>) {
 }
 
 /// Run `f` across `cases` seeds; on panic, report which seed failed.
+///
+/// `POLYGEN_PROP_SEEDS` caps the seed count from the environment — the
+/// miri CI job sets it low (interpreted execution is ~2 orders of
+/// magnitude slower than native) without thinning native coverage.
 pub fn for_each_seed(cases: u64, f: impl Fn(&mut Rng)) {
+    let cases = std::env::var("POLYGEN_PROP_SEEDS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map_or(cases, |n| cases.min(n.max(1)));
     for seed in 0..cases {
         let mut rng = Rng::new(0xc0ffee ^ seed.wrapping_mul(0x9e3779b97f4a7c15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));

@@ -21,6 +21,7 @@ impl U256 {
     }
 
     /// Full 128x128 -> 256 multiply.
+    // lint: overflow-ok(64-bit limb products and carries; every sum is bounded by 2^128 by construction)
     pub fn mul_u128(a: u128, b: u128) -> U256 {
         const MASK: u128 = (1u128 << 64) - 1;
         let (a0, a1) = (a & MASK, a >> 64);
@@ -39,6 +40,7 @@ impl U256 {
     }
 
     /// Logical right shift by `s` bits (`0 <= s < 256`).
+    // lint: overflow-ok(limb stitching; the shift amounts are range-matched)
     pub fn shr(self, s: u32) -> U256 {
         match s {
             0 => self,
@@ -50,6 +52,7 @@ impl U256 {
     }
 
     /// Left shift by `s` bits (`0 <= s < 256`), discarding overflow.
+    // lint: overflow-ok(limb stitching; discarding shifted-out bits is this function's contract)
     pub fn shl(self, s: u32) -> U256 {
         match s {
             0 => self,
@@ -87,6 +90,7 @@ impl U256 {
 }
 
 /// `floor(sqrt(v))` for `u128` by Newton iteration seeded from `f64`.
+// lint: overflow-ok(x stays near sqrt(v) from the f64 seed, so x + v/x < 2^66)
 pub fn isqrt_u128(v: u128) -> u128 {
     if v == 0 {
         return 0;
@@ -182,6 +186,44 @@ pub fn div_u256_by_u128(v: U256, d: u128) -> u128 {
     quo
 }
 
+/// Sign of `a*b` without multiplying (`-1`, `0`, or `1`).
+fn prod_sign(a: i128, b: i128) -> i32 {
+    if a == 0 || b == 0 {
+        0
+    } else if (a < 0) == (b < 0) {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Exact ordering of `a*b` versus `c*d` over `i128` factors.
+///
+/// The fast path compares `i128` products; if either product overflows,
+/// the comparison widens to 256-bit magnitudes with explicit sign
+/// handling instead of wrapping — the widening counterpart the overflow
+/// lint demands of the envelope/extrema cross multiplications.
+pub fn cmp_i128_products(a: i128, b: i128, c: i128, d: i128) -> std::cmp::Ordering {
+    match (a.checked_mul(b), c.checked_mul(d)) {
+        (Some(l), Some(r)) => l.cmp(&r),
+        _ => {
+            let (sl, sr) = (prod_sign(a, b), prod_sign(c, d));
+            if sl != sr {
+                return sl.cmp(&sr);
+            }
+            let ml = U256::mul_u128(a.unsigned_abs(), b.unsigned_abs());
+            let mr = U256::mul_u128(c.unsigned_abs(), d.unsigned_abs());
+            // Same sign: larger magnitude wins for non-negative products,
+            // loses for negative ones.
+            if sl >= 0 {
+                ml.cmp256(&mr)
+            } else {
+                mr.cmp256(&ml)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +297,27 @@ mod tests {
         assert_eq!(div_u256_by_u128(v, 987654321u128), 123456789012345678901234567890u128);
         let v1 = U256 { hi: v.hi, lo: v.lo + 5 };
         assert_eq!(div_u256_by_u128(v1, 987654321u128), 123456789012345678901234567890u128);
+    }
+
+    #[test]
+    fn cmp_i128_products_widens_exactly() {
+        use std::cmp::Ordering::*;
+        // In-range products: plain i128 comparison.
+        assert_eq!(cmp_i128_products(3, 4, 2, 7), Less);
+        assert_eq!(cmp_i128_products(-3, 4, 2, -6), Equal);
+        assert_eq!(cmp_i128_products(5, -2, -3, 4), Greater);
+        // Overflowing products, same sign: 2^130 + 2^30 vs 2^130 + 2^100.
+        let big = 1i128 << 100;
+        assert_eq!(cmp_i128_products(big + 1, 1 << 30, big, (1 << 30) + 1), Less);
+        assert_eq!(cmp_i128_products(big, (1 << 30) + 1, big + 1, 1 << 30), Greater);
+        // Both negative: the magnitude ordering reverses.
+        assert_eq!(cmp_i128_products(-(big + 1), 1 << 30, -big, (1 << 30) + 1), Greater);
+        // Equal overflowing products in different factorizations.
+        assert_eq!(cmp_i128_products(big + 1, 1 << 30, (big + 1) * 2, 1 << 29), Equal);
+        // Mixed: one side overflows, the other is zero or negative.
+        assert_eq!(cmp_i128_products(big, big, -1, 1), Greater);
+        assert_eq!(cmp_i128_products(0, big, big, big), Less);
+        assert_eq!(cmp_i128_products(-big, big, 1, 0), Less);
     }
 
     #[test]

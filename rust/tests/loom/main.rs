@@ -1,0 +1,240 @@
+//! Loom models of the crate's locking protocols (DESIGN.md §Static
+//! analysis). Compiled only under `RUSTFLAGS="--cfg loom"`; run with
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom
+//! ```
+//!
+//! These are not hand-written abstractions of the scheduler — they drive
+//! the shipping `Scheduler` and `TaskQueue` code through the
+//! `crate::sync` shim, so loom explores every interleaving of the exact
+//! lock/condvar/atomic protocol the product runs:
+//!
+//! - nested submit-executes-own-job (`run_on` from inside a task) never
+//!   deadlocks, because the submitter always works its own job;
+//! - an idle worker donates itself to *any* under-budget job, so two
+//!   concurrent submitters sharing one worker both complete;
+//! - `drain` leaves the pool parked but reusable, and `shutdown` wakes
+//!   parked workers so every spawned thread joins;
+//! - `TaskQueue::close` lets executors drain the pre-close backlog
+//!   (never abandon it) and wakes parked executors so they exit;
+//! - the service's last-clone `Gate` drop closes the queue exactly once
+//!   while an executor is mid-drain.
+
+// Same unexpected-cfg escape hatch as lib.rs: `--cfg loom` is injected
+// only by the loom CI job, and MSRV 1.75 predates `check-cfg`.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+#![cfg(loom)]
+
+use loom::model::Builder;
+
+use polygen::pool::Scheduler;
+use polygen::service::exec::TaskQueue;
+use polygen::sync::atomic::{AtomicUsize, Ordering};
+use polygen::sync::Arc;
+
+/// Exhaustive exploration is exponential in preemption points. A bound
+/// of two forced preemptions per thread is loom's recommended setting:
+/// it still finds lost wakeups, missed notifies, and accounting races,
+/// while keeping each model tractable in CI.
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    let mut b = Builder::new();
+    b.preemption_bound = Some(2);
+    b.check(f);
+}
+
+#[test]
+fn nested_submit_completes_without_deadlock() {
+    // A task that itself submits a job to the same scheduler: the claim
+    // (pool.rs module docs) is that progress never depends on worker
+    // availability, because every submitter executes its own indices.
+    model(|| {
+        let sched = Scheduler::new_standalone(1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let outer_hits = Arc::clone(&hits);
+        let outer_sched = Arc::clone(&sched);
+        let outer = move |i: usize| {
+            if i == 0 {
+                let inner_hits = Arc::clone(&outer_hits);
+                let inner = move |_: usize| {
+                    inner_hits.fetch_add(1, Ordering::Relaxed);
+                };
+                outer_sched.run_on(1, 1, &inner);
+            }
+            outer_hits.fetch_add(1, Ordering::Relaxed);
+        };
+        sched.run_on(2, 2, &outer);
+        assert_eq!(hits.load(Ordering::Relaxed), 3, "2 outer + 1 nested index");
+        sched.shutdown();
+    });
+}
+
+#[test]
+fn worker_donates_across_concurrent_jobs() {
+    // Two submitters, one pool worker: the worker must be free to join
+    // either job (pick_job donation), and both jobs must complete with
+    // exact accounting no matter which one it helps, or when.
+    model(|| {
+        let sched = Scheduler::new_standalone(1);
+        let a = Arc::new(AtomicUsize::new(0));
+        let b = Arc::new(AtomicUsize::new(0));
+        let submitter = {
+            let sched = Arc::clone(&sched);
+            let b = Arc::clone(&b);
+            loom::thread::spawn(move || {
+                let task = move |_: usize| {
+                    b.fetch_add(1, Ordering::Relaxed);
+                };
+                sched.run_on(2, 2, &task);
+            })
+        };
+        let a2 = Arc::clone(&a);
+        let task = move |_: usize| {
+            a2.fetch_add(1, Ordering::Relaxed);
+        };
+        sched.run_on(2, 2, &task);
+        submitter.join().unwrap();
+        assert_eq!(a.load(Ordering::Relaxed), 2);
+        assert_eq!(b.load(Ordering::Relaxed), 2);
+        sched.shutdown();
+    });
+}
+
+#[test]
+fn drain_leaves_pool_parked_but_reusable() {
+    // `drain` must block until the worker is fully parked (busy == 0,
+    // not merely "the submitter saw completion"), and the parked pool
+    // must accept and complete a second job.
+    model(|| {
+        let sched = Scheduler::new_standalone(1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        let task = move |_: usize| {
+            h.fetch_add(1, Ordering::Relaxed);
+        };
+        sched.run_on(2, 2, &task);
+        sched.drain();
+        assert_eq!(sched.outstanding_jobs(), 0, "drain left a job behind");
+        sched.run_on(2, 2, &task);
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        sched.shutdown();
+        assert_eq!(sched.outstanding_jobs(), 0);
+    });
+}
+
+#[test]
+fn shutdown_unparks_and_joins_a_parked_worker() {
+    // One index, two executors: whichever of submitter/worker loses the
+    // cursor race parks (or never runs), and shutdown must wake and
+    // join it — loom fails the model if any spawned thread leaks.
+    model(|| {
+        let sched = Scheduler::new_standalone(1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        let task = move |_: usize| {
+            h.fetch_add(1, Ordering::Relaxed);
+        };
+        sched.run_on(1, 2, &task);
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "the single index ran exactly once");
+        sched.shutdown();
+    });
+}
+
+#[test]
+fn queue_close_drains_backlog_before_exit() {
+    // The TaskQueue invariant (exec.rs module docs): items pushed
+    // before `close` are popped by someone, never abandoned — whatever
+    // order the executor, the second push, and the close interleave in.
+    model(|| {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        assert!(q.push_and_plan(1, 1), "first push reserves the executor slot");
+        let exec = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                let mut sum = 0u32;
+                while let Some(v) = q.pop_or_exit() {
+                    sum += v;
+                }
+                sum
+            })
+        };
+        assert!(!q.push_and_plan(2, 1), "at cap: no second executor");
+        q.close();
+        assert_eq!(exec.join().unwrap(), 3, "both pre-close items popped");
+    });
+}
+
+#[test]
+fn queue_close_wakes_parked_executor() {
+    // After the backlog empties the executor parks; `close` must wake
+    // it so it exits instead of waiting forever (the lost-wakeup shape
+    // loom is best at finding).
+    model(|| {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        assert!(q.push_and_plan(7, 1));
+        let exec = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                let mut n = 0usize;
+                while q.pop_or_exit().is_some() {
+                    n += 1;
+                }
+                n
+            })
+        };
+        q.close();
+        assert_eq!(exec.join().unwrap(), 1);
+    });
+}
+
+/// The service's close trigger, reduced to its protocol: the last
+/// public clone's drop closes the executor queue (service/mod.rs
+/// `Gate`). Executors hold only the queue, never the gate.
+struct Gate {
+    q: Arc<TaskQueue<u32>>,
+}
+
+impl Drop for Gate {
+    fn drop(&mut self) {
+        self.q.close();
+    }
+}
+
+#[test]
+fn last_clone_drop_closes_exactly_once_and_drains() {
+    model(|| {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        assert!(q.push_and_plan(5, 1));
+        let exec = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(v) = q.pop_or_exit() {
+                    seen.push(v);
+                }
+                seen
+            })
+        };
+        let gate = Arc::new(Gate { q: Arc::clone(&q) });
+        let other = Arc::clone(&gate);
+        let dropper = loom::thread::spawn(move || drop(other));
+        drop(gate);
+        dropper.join().unwrap();
+        assert_eq!(exec.join().unwrap(), vec![5], "backlog survived the gated close");
+    });
+}
+
+#[test]
+fn spawn_failure_rolls_back_to_inline_drain() {
+    // The degraded path: a reserved executor slot whose thread spawn
+    // failed must roll back, and the (now executor-less) pusher must be
+    // told to drain inline so no item hangs.
+    model(|| {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        assert!(q.push_and_plan(9, 4));
+        assert!(q.spawn_failed(), "no executor remains: caller must drain inline");
+        assert_eq!(q.pop_now(), Some(9));
+        assert_eq!(q.pop_now(), None);
+    });
+}

@@ -1,0 +1,605 @@
+//! polygen-lint: AST lints for invariants clippy cannot express.
+//!
+//! The repo carries three invariants that are *structural* — they hold
+//! across files, not within an expression — plus one local footgun, and
+//! all four have already caused (or nearly caused) real bugs:
+//!
+//! | rule            | invariant |
+//! |-----------------|-----------|
+//! | `sync-imports`  | no raw `std::sync` primitive outside `src/sync.rs` — a raw `Mutex` in a modeled protocol silently un-checks the loom model |
+//! | `fault-taps`    | every outbound-I/O function in the service/cache/runtime boundary files calls `faults::inject`, and every site literal matches `faults::SITES` (both directions) |
+//! | `overflow`      | no unchecked `*`/`+`/`<<` in the exact-arithmetic files (`rational.rs`, `wide.rs`, `designspace/{envelope,extrema}.rs`) — the `RawFrac::lt` wrap was a real completeness bug |
+//! | `lock-unwrap`   | no `.unwrap()` on lock/wait results in service-facing modules — poison must be recovered (`sync::plock`), not cascaded |
+//!
+//! A finding is silenced with a waiver comment carrying a mandatory
+//! reason: `// lint: overflow-ok(reason)` (`sync-ok`, `fault-ok`,
+//! `lock-ok` likewise). A waiver covers its own line and the next three
+//! lines, so it can sit trailing, directly above the flagged line, or
+//! directly above an `fn` signature — the fn-signature form waives the
+//! whole body (the waiver kinds are checked per finding, so an
+//! `overflow-ok` never silences a sync finding).
+//!
+//! `#[cfg(test)]` modules and `#[test]` functions are skipped: tests may
+//! use raw primitives and wrapping arithmetic freely — they are never
+//! loom-modeled and never on the proof path.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Which rules run on a file.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuleSet {
+    pub sync: bool,
+    pub taps: bool,
+    pub overflow: bool,
+    pub lock_unwrap: bool,
+}
+
+impl RuleSet {
+    pub fn all() -> RuleSet {
+        RuleSet { sync: true, taps: true, overflow: true, lock_unwrap: true }
+    }
+}
+
+/// The repo's rule → file scoping. `rel` is the path relative to
+/// `src/`, with `/` separators (e.g. `service/http.rs`).
+pub fn rules_for(rel: &str) -> RuleSet {
+    RuleSet {
+        // The shim itself is the one place raw std::sync belongs.
+        sync: rel != "sync.rs",
+        taps: matches!(
+            rel,
+            "net.rs"
+                | "service/cluster.rs"
+                | "service/http.rs"
+                | "service/store.rs"
+                | "coordinator/cache.rs"
+                | "runtime/mod.rs"
+        ),
+        overflow: matches!(
+            rel,
+            "rational.rs" | "wide.rs" | "designspace/envelope.rs" | "designspace/extrema.rs"
+        ),
+        lock_unwrap: rel == "pool.rs"
+            || rel == "net.rs"
+            || rel.starts_with("service/")
+            || rel.starts_with("pipeline/"),
+    }
+}
+
+const WAIVER_KINDS: &[&str] = &["sync", "fault", "overflow", "lock"];
+
+/// Waiver comments (`// lint: <kind>-ok(reason)`) by line. The reason
+/// is mandatory: `overflow-ok()` does not waive.
+pub struct Waivers {
+    by_line: Vec<(usize, &'static str)>,
+}
+
+impl Waivers {
+    pub fn scan(src: &str) -> Waivers {
+        let mut by_line = Vec::new();
+        for (i, text) in src.lines().enumerate() {
+            let Some(at) = text.find("lint:") else { continue };
+            let rest = &text[at..];
+            for &kind in WAIVER_KINDS {
+                let tag = format!("{kind}-ok(");
+                if let Some(p) = rest.find(&tag) {
+                    let reason = &rest[p + tag.len()..];
+                    if !reason.trim_start().starts_with(')') && !reason.trim().is_empty() {
+                        by_line.push((i + 1, kind));
+                    }
+                }
+            }
+        }
+        Waivers { by_line }
+    }
+
+    /// A waiver covers its own line and the three lines below it.
+    pub fn covers(&self, kind: &str, line: usize) -> bool {
+        let lo = line.saturating_sub(3);
+        self.by_line.iter().any(|&(l, k)| k == kind && l >= lo && l <= line)
+    }
+}
+
+/// Everything a single-file pass produces.
+#[derive(Default)]
+pub struct FileOutcome {
+    pub violations: Vec<Violation>,
+    /// `faults::inject("site", ..)` literals found in non-test code.
+    pub inject_sites: Vec<(String, usize)>,
+    /// Entries of a `const SITES: &[&str]` registry, if this file has one.
+    pub sites_registry: Vec<(String, usize)>,
+}
+
+/// Lint one file's source under `rules`. Fails only if syn cannot parse.
+pub fn lint_file(rel: &str, src: &str, rules: RuleSet) -> Result<FileOutcome, syn::Error> {
+    let ast = syn::parse_file(src)?;
+    let waivers = Waivers::scan(src);
+    let mut l = Linter {
+        file: rel.to_string(),
+        rules,
+        waivers,
+        fns: Vec::new(),
+        out: FileOutcome::default(),
+    };
+    l.visit_file(&ast);
+    Ok(l.out)
+}
+
+struct FnCtx {
+    fn_line: usize,
+    has_inject: bool,
+    io_calls: Vec<(usize, String)>,
+}
+
+struct Linter {
+    file: String,
+    rules: RuleSet,
+    waivers: Waivers,
+    fns: Vec<FnCtx>,
+    out: FileOutcome,
+}
+
+/// `std::sync` items that must come through `crate::sync` instead.
+/// (`Arc`, `Weak`, `mpsc`, and the poison/result types stay allowed —
+/// they are not lock primitives, so loom does not need to see them.)
+const BANNED_SYNC: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "Barrier",
+    "Once",
+    "OnceLock",
+    "OnceState",
+    "LazyLock",
+    "MutexGuard",
+    "RwLockReadGuard",
+    "RwLockWriteGuard",
+    "WaitTimeoutResult",
+];
+
+/// Method names that perform outbound I/O on a reader/writer/stream.
+const IO_METHODS: &[&str] = &[
+    "read_to_end",
+    "read_exact",
+    "read_to_string",
+    "read_line",
+    "write_all",
+    "write_fmt",
+    "sync_all",
+    "sync_data",
+];
+
+/// `Qual::method` path calls that perform file/socket I/O.
+fn io_path_call(segs: &[String]) -> Option<String> {
+    let n = segs.len();
+    if n < 2 {
+        return None;
+    }
+    let hit = match (segs[n - 2].as_str(), segs[n - 1].as_str()) {
+        ("fs", "read" | "write" | "read_to_string" | "rename" | "remove_file" | "copy") => true,
+        ("File", "open" | "create") => true,
+        ("TcpStream", "connect" | "connect_timeout") => true,
+        _ => false,
+    };
+    hit.then(|| format!("{}::{}", segs[n - 2], segs[n - 1]))
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if !a.path().is_ident("cfg") {
+            return false;
+        }
+        match &a.meta {
+            syn::Meta::List(ml) => ml.tokens.to_string().contains("test"),
+            _ => false,
+        }
+    })
+}
+
+fn is_test_fn(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| a.path().is_ident("test")) || is_cfg_test(attrs)
+}
+
+fn unparen(mut e: &syn::Expr) -> &syn::Expr {
+    loop {
+        match e {
+            syn::Expr::Paren(p) => e = &p.expr,
+            syn::Expr::Group(g) => e = &g.expr,
+            _ => return e,
+        }
+    }
+}
+
+fn is_int_literal(e: &syn::Expr) -> bool {
+    match unparen(e) {
+        syn::Expr::Lit(l) => matches!(l.lit, syn::Lit::Int(_)),
+        syn::Expr::Unary(u) => {
+            matches!(u.op, syn::UnOp::Neg(_)) && is_int_literal(&u.expr)
+        }
+        _ => false,
+    }
+}
+
+fn is_cast(e: &syn::Expr) -> bool {
+    matches!(unparen(e), syn::Expr::Cast(_))
+}
+
+fn path_segs(p: &syn::Path) -> Vec<String> {
+    p.segments.iter().map(|s| s.ident.to_string()).collect()
+}
+
+fn flatten_use(tree: &syn::UseTree, prefix: &mut Vec<String>, out: &mut Vec<(Vec<String>, usize)>) {
+    match tree {
+        syn::UseTree::Path(p) => {
+            prefix.push(p.ident.to_string());
+            flatten_use(&p.tree, prefix, out);
+            prefix.pop();
+        }
+        syn::UseTree::Name(n) => {
+            let mut full = prefix.clone();
+            full.push(n.ident.to_string());
+            out.push((full, n.span().start().line));
+        }
+        syn::UseTree::Rename(r) => {
+            let mut full = prefix.clone();
+            full.push(r.ident.to_string());
+            out.push((full, r.span().start().line));
+        }
+        syn::UseTree::Glob(g) => {
+            let mut full = prefix.clone();
+            full.push("*".to_string());
+            out.push((full, g.span().start().line));
+        }
+        syn::UseTree::Group(grp) => {
+            for t in &grp.items {
+                flatten_use(t, prefix, out);
+            }
+        }
+    }
+}
+
+/// A `std::sync` path is banned when any segment past `sync` is a lock
+/// primitive, anything atomic, or a glob that could pull one in.
+fn banned_sync_path(segs: &[String]) -> bool {
+    if segs.len() < 2 || segs[0] != "std" || segs[1] != "sync" {
+        return false;
+    }
+    segs[2..].iter().any(|s| {
+        s == "atomic" || s == "*" || s.starts_with("Atomic") || BANNED_SYNC.contains(&s.as_str())
+    })
+}
+
+impl Linter {
+    fn waived(&self, kind: &str, line: usize) -> bool {
+        if self.waivers.covers(kind, line) {
+            return true;
+        }
+        // fn-level waiver: a waiver just above the enclosing signature.
+        self.fns.last().is_some_and(|f| self.waivers.covers(kind, f.fn_line))
+    }
+
+    fn push(&mut self, rule: &'static str, kind: &str, line: usize, msg: String) {
+        if !self.waived(kind, line) {
+            self.out.violations.push(Violation { file: self.file.clone(), line, rule, msg });
+        }
+    }
+
+    fn enter_fn(&mut self, fn_line: usize) {
+        self.fns.push(FnCtx { fn_line, has_inject: false, io_calls: Vec::new() });
+    }
+
+    fn leave_fn(&mut self) {
+        let ctx = self.fns.pop().expect("balanced fn stack");
+        if !self.rules.taps || ctx.has_inject {
+            return;
+        }
+        for (line, what) in ctx.io_calls {
+            // `waived` consults the *current* stack top, so re-check both
+            // the call line and the just-popped fn's own line here.
+            if self.waivers.covers("fault", line) || self.waivers.covers("fault", ctx.fn_line) {
+                continue;
+            }
+            self.out.violations.push(Violation {
+                file: self.file.clone(),
+                line,
+                rule: "fault-taps",
+                msg: format!(
+                    "`{what}` in a fault-boundary file, but the function never calls \
+                     `faults::inject` (add a tap or a `// lint: fault-ok(reason)` waiver)"
+                ),
+            });
+        }
+    }
+
+    fn record_io(&mut self, line: usize, what: String) {
+        if let Some(ctx) = self.fns.last_mut() {
+            ctx.io_calls.push((line, what));
+        }
+    }
+}
+
+impl<'ast> Visit<'ast> for Linter {
+    fn visit_item_mod(&mut self, i: &'ast syn::ItemMod) {
+        if is_cfg_test(&i.attrs) {
+            return;
+        }
+        visit::visit_item_mod(self, i);
+    }
+
+    fn visit_item_fn(&mut self, i: &'ast syn::ItemFn) {
+        if is_test_fn(&i.attrs) {
+            return;
+        }
+        self.enter_fn(i.sig.fn_token.span().start().line);
+        visit::visit_item_fn(self, i);
+        self.leave_fn();
+    }
+
+    fn visit_impl_item_fn(&mut self, i: &'ast syn::ImplItemFn) {
+        if is_test_fn(&i.attrs) {
+            return;
+        }
+        self.enter_fn(i.sig.fn_token.span().start().line);
+        visit::visit_impl_item_fn(self, i);
+        self.leave_fn();
+    }
+
+    fn visit_item_use(&mut self, i: &'ast syn::ItemUse) {
+        if self.rules.sync {
+            let mut leaves = Vec::new();
+            flatten_use(&i.tree, &mut Vec::new(), &mut leaves);
+            for (segs, line) in leaves {
+                if banned_sync_path(&segs) {
+                    self.push(
+                        "sync-imports",
+                        "sync",
+                        line,
+                        format!(
+                            "`{}` imported from std::sync — use `crate::sync` so loom \
+                             models the primitive",
+                            segs.join("::")
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_item_use(self, i);
+    }
+
+    fn visit_path(&mut self, p: &'ast syn::Path) {
+        if self.rules.sync {
+            let segs = path_segs(p);
+            if banned_sync_path(&segs) {
+                self.push(
+                    "sync-imports",
+                    "sync",
+                    p.span().start().line,
+                    format!(
+                        "qualified `{}` — use `crate::sync` so loom models the primitive",
+                        segs.join("::")
+                    ),
+                );
+            }
+        }
+        visit::visit_path(self, p);
+    }
+
+    fn visit_item_const(&mut self, i: &'ast syn::ItemConst) {
+        if i.ident == "SITES" {
+            struct Strings(Vec<(String, usize)>);
+            impl<'a> Visit<'a> for Strings {
+                fn visit_lit_str(&mut self, l: &'a syn::LitStr) {
+                    self.0.push((l.value(), l.span().start().line));
+                }
+            }
+            let mut s = Strings(Vec::new());
+            s.visit_expr(&i.expr);
+            self.out.sites_registry.extend(s.0);
+        }
+        visit::visit_item_const(self, i);
+    }
+
+    fn visit_expr_binary(&mut self, b: &'ast syn::ExprBinary) {
+        if self.rules.overflow {
+            let op = match b.op {
+                syn::BinOp::Mul(_) => Some("*"),
+                syn::BinOp::Add(_) => Some("+"),
+                syn::BinOp::Shl(_) => Some("<<"),
+                _ => None,
+            };
+            if let Some(op) = op {
+                let exempt = is_int_literal(&b.left)
+                    || is_int_literal(&b.right)
+                    || (is_cast(&b.left) && is_cast(&b.right));
+                if !exempt {
+                    self.push(
+                        "overflow",
+                        "overflow",
+                        b.span().start().line,
+                        format!(
+                            "unchecked `{op}` in exact-arithmetic code — use the \
+                             `checked_`/widening counterpart or waive with \
+                             `// lint: overflow-ok(reason)`"
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_expr_binary(self, b);
+    }
+
+    fn visit_expr_method_call(&mut self, m: &'ast syn::ExprMethodCall) {
+        let name = m.method.to_string();
+        if self.rules.lock_unwrap && name == "unwrap" {
+            if let syn::Expr::MethodCall(inner) = unparen(&m.receiver) {
+                let im = inner.method.to_string();
+                if matches!(im.as_str(), "lock" | "try_lock" | "wait" | "wait_timeout" | "wait_while")
+                {
+                    self.push(
+                        "lock-unwrap",
+                        "lock",
+                        m.span().start().line,
+                        format!(
+                            "`.{im}().unwrap()` cascades lock poison — use \
+                             `sync::plock`/`sync::cwait` (poison means a task panic \
+                             that was already caught)"
+                        ),
+                    );
+                }
+            }
+        }
+        if self.rules.taps && IO_METHODS.contains(&name.as_str()) {
+            self.record_io(m.span().start().line, format!(".{name}()"));
+        }
+        visit::visit_expr_method_call(self, m);
+    }
+
+    fn visit_expr_call(&mut self, c: &'ast syn::ExprCall) {
+        if let syn::Expr::Path(p) = unparen(&c.func) {
+            let segs = path_segs(&p.path);
+            if segs.last().is_some_and(|s| s == "inject") {
+                if let Some(ctx) = self.fns.last_mut() {
+                    ctx.has_inject = true;
+                }
+                if let Some(syn::Expr::Lit(l)) = c.args.first().map(unparen) {
+                    if let syn::Lit::Str(s) = &l.lit {
+                        self.out.inject_sites.push((s.value(), s.span().start().line));
+                    }
+                }
+            }
+            if self.rules.taps {
+                if let Some(what) = io_path_call(&segs) {
+                    self.record_io(c.span().start().line, what);
+                }
+            }
+        }
+        visit::visit_expr_call(self, c);
+    }
+}
+
+/// The whole-tree report.
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root` with the repo scoping, then
+/// cross-check injection-site literals against the `SITES` registry in
+/// both directions.
+pub fn run(src_root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    walk(src_root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    let mut used: Vec<(String, String, usize)> = Vec::new();
+    let mut registry: Vec<(String, String, usize)> = Vec::new();
+    let nfiles = files.len();
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .expect("walked under root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+        match lint_file(&rel, &src, rules_for(&rel)) {
+            Ok(outcome) => {
+                violations.extend(outcome.violations);
+                used.extend(outcome.inject_sites.into_iter().map(|(s, l)| (rel.clone(), s, l)));
+                registry
+                    .extend(outcome.sites_registry.into_iter().map(|(s, l)| (rel.clone(), s, l)));
+            }
+            Err(e) => violations.push(Violation {
+                file: rel,
+                line: e.span().start().line,
+                rule: "parse",
+                msg: e.to_string(),
+            }),
+        }
+    }
+    let reg_names: BTreeSet<&str> = registry.iter().map(|(_, s, _)| s.as_str()).collect();
+    let used_names: BTreeSet<&str> = used.iter().map(|(_, s, _)| s.as_str()).collect();
+    for (file, site, line) in &used {
+        if !reg_names.contains(site.as_str()) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "fault-taps",
+                msg: format!("injection site \"{site}\" is not in `faults::SITES`"),
+            });
+        }
+    }
+    for (file, site, line) in &registry {
+        if !used_names.contains(site.as_str()) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "fault-taps",
+                msg: format!("`faults::SITES` entry \"{site}\" has no `faults::inject` call site"),
+            });
+        }
+    }
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report { files: nfiles, violations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_needs_a_reason() {
+        let w = Waivers::scan("// lint: overflow-ok()\nlet x = 1;\n// lint: overflow-ok(bounded)\n");
+        assert!(!w.covers("overflow", 1), "empty reason must not waive");
+        assert!(w.covers("overflow", 3));
+        assert!(w.covers("overflow", 6), "covers three lines below");
+        assert!(!w.covers("overflow", 7), "but not four");
+        assert!(!w.covers("sync", 3), "kinds do not cross");
+    }
+
+    #[test]
+    fn banned_paths() {
+        let p = |s: &str| s.split("::").map(str::to_string).collect::<Vec<_>>();
+        assert!(banned_sync_path(&p("std::sync::Mutex")));
+        assert!(banned_sync_path(&p("std::sync::atomic::AtomicU64::new")));
+        assert!(banned_sync_path(&p("std::sync::*")));
+        assert!(!banned_sync_path(&p("std::sync::Arc")));
+        assert!(!banned_sync_path(&p("std::sync::mpsc::channel")));
+        assert!(!banned_sync_path(&p("crate::sync::Mutex")));
+    }
+}

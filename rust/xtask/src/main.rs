@@ -1,0 +1,52 @@
+//! `cargo xtask lint` — run the polygen-lint suite over `../src`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_default();
+    if cmd != "lint" {
+        eprintln!("usage: cargo xtask lint [--root <src-dir>]");
+        return ExitCode::from(2);
+    }
+    let mut root =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask sits in rust/").join("src");
+    while let Some(flag) = args.next() {
+        match flag.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match xtask::run(&root) {
+        Ok(report) => {
+            for v in &report.violations {
+                println!("{v}");
+            }
+            println!(
+                "polygen-lint: {} files, {} violation{}",
+                report.files,
+                report.violations.len(),
+                if report.violations.len() == 1 { "" } else { "s" }
+            );
+            if report.violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("polygen-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Self-test: each rule fires on its fixture's `// FLAG` lines — and
+//! only those, which also proves the waiver forms (trailing, above the
+//! line, above the `fn`) suppress findings.
+
+use std::path::Path;
+
+use xtask::{lint_file, RuleSet};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn flag_lines(src: &str) -> Vec<usize> {
+    src.lines()
+        .enumerate()
+        .filter(|(_, l)| l.trim_end().ends_with("// FLAG"))
+        .map(|(i, _)| i + 1)
+        .collect()
+}
+
+fn check(name: &str, rules: RuleSet, rule: &str) {
+    let src = fixture(name);
+    let out = lint_file(name, &src, rules).unwrap();
+    let mut got: Vec<usize> = out.violations.iter().map(|v| v.line).collect();
+    got.sort_unstable();
+    assert_eq!(got, flag_lines(&src), "{name} violations: {:#?}", out.violations);
+    for v in &out.violations {
+        assert_eq!(v.rule, rule, "{v}");
+    }
+}
+
+#[test]
+fn sync_imports_fixture() {
+    check("sync_imports.rs", RuleSet { sync: true, ..Default::default() }, "sync-imports");
+}
+
+#[test]
+fn fault_taps_fixture() {
+    check("fault_taps.rs", RuleSet { taps: true, ..Default::default() }, "fault-taps");
+}
+
+#[test]
+fn overflow_fixture() {
+    check("overflow.rs", RuleSet { overflow: true, ..Default::default() }, "overflow");
+}
+
+#[test]
+fn lock_unwrap_fixture() {
+    check("lock_unwrap.rs", RuleSet { lock_unwrap: true, ..Default::default() }, "lock-unwrap");
+}
+
+#[test]
+fn site_literals_are_collected_both_ways() {
+    let src = r#"
+pub const SITES: &[&str] = &["a.site", "b.site"];
+fn f() {
+    let _ = faults::inject("a.site", &[]);
+    let _ = faults::inject("c.site", &[]);
+}
+"#;
+    let out = lint_file("faults.rs", src, RuleSet::default()).unwrap();
+    let reg: Vec<&str> = out.sites_registry.iter().map(|(s, _)| s.as_str()).collect();
+    let used: Vec<&str> = out.inject_sites.iter().map(|(s, _)| s.as_str()).collect();
+    assert_eq!(reg, ["a.site", "b.site"]);
+    assert_eq!(used, ["a.site", "c.site"]);
+}
+
+#[test]
+fn repo_scoping_matches_design() {
+    assert!(!xtask::rules_for("sync.rs").sync, "the shim may use std::sync");
+    assert!(xtask::rules_for("pool.rs").sync);
+    assert!(xtask::rules_for("service/store.rs").taps);
+    assert!(!xtask::rules_for("dse/mod.rs").taps);
+    assert!(xtask::rules_for("designspace/extrema.rs").overflow);
+    assert!(!xtask::rules_for("designspace/region.rs").overflow);
+    assert!(xtask::rules_for("service/exec.rs").lock_unwrap);
+    assert!(!xtask::rules_for("rational.rs").lock_unwrap);
+}

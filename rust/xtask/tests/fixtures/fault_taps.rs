@@ -1,0 +1,25 @@
+//! polygen-lint fixture: `fault-taps` rule. Lines marked `// FLAG`
+//! must fire; everything else must stay silent.
+
+fn untapped_read(path: &std::path::Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_default() // FLAG
+}
+
+fn tapped_read(path: &std::path::Path) -> Vec<u8> {
+    let _ = faults::inject("cache.load", &[]);
+    std::fs::read(path).unwrap_or_default()
+}
+
+// lint: fault-ok(fixture: covered by the save-side tap)
+fn waived_fn(path: &std::path::Path) {
+    let _ = std::fs::rename(path, path);
+}
+
+fn waived_line(path: &std::path::Path) {
+    // lint: fault-ok(fixture: setup write, not a fault boundary)
+    let _ = std::fs::write(path, b"x");
+}
+
+fn method_io(mut s: impl std::io::Write) {
+    let _ = s.write_all(b"hi"); // FLAG
+}

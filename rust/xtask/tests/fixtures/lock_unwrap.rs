@@ -1,0 +1,23 @@
+//! polygen-lint fixture: `lock-unwrap` rule. Lines marked `// FLAG`
+//! must fire; everything else must stay silent.
+
+fn bad(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // FLAG
+}
+
+fn bad_wait(cv: &std::sync::Condvar, m: &std::sync::Mutex<bool>) {
+    let g = m.lock().unwrap(); // FLAG
+    let _g = cv.wait(g).unwrap(); // FLAG
+}
+
+fn good(m: &std::sync::Mutex<u32>) -> u32 {
+    *crate::sync::plock(m)
+}
+
+fn waived(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // lint: lock-ok(fixture: single-threaded setup path)
+}
+
+fn not_a_lock(r: Result<u32, ()>) -> u32 {
+    r.unwrap()
+}

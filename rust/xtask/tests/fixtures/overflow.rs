@@ -1,0 +1,35 @@
+//! polygen-lint fixture: `overflow` rule. Lines marked `// FLAG` must
+//! fire; everything else must stay silent.
+
+fn raw_ops(a: i64, b: i64) -> i64 {
+    let p = a * b; // FLAG
+    let s = a + b; // FLAG
+    let h = a << b; // FLAG
+    p - s - h
+}
+
+fn sanctioned(a: i64, b: i64) -> i128 {
+    let wide = (a as i128) * (b as i128);
+    let lit = 2 * a;
+    let shift = 1i64 << b;
+    let checked = a.checked_add(b).unwrap_or(lit).checked_mul(shift).unwrap_or(0);
+    wide.checked_add(checked as i128).unwrap_or(0)
+}
+
+fn waived_line(a: i64, b: i64) -> i64 {
+    a * b // lint: overflow-ok(fixture: bounded by construction)
+}
+
+// lint: overflow-ok(fixture: fn-level waiver covers the whole body)
+fn waived_fn(a: i64, b: i64) -> i64 {
+    let p = a * b;
+    let q = a + p;
+    q << 1
+}
+
+#[cfg(test)]
+mod tests {
+    fn helper(a: i64, b: i64) -> i64 {
+        a * b
+    }
+}

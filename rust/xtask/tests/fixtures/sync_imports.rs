@@ -1,0 +1,25 @@
+//! polygen-lint fixture: `sync-imports` rule. Lines marked `// FLAG`
+//! must fire; everything else must stay silent.
+
+use std::sync::Mutex; // FLAG
+use std::sync::{Arc, Condvar}; // FLAG
+use std::sync::atomic::AtomicU64; // FLAG
+use std::sync::mpsc::channel;
+use crate::sync::Mutex as Shim;
+
+// lint: sync-ok(const-init static in never-modeled fixture code)
+use std::sync::OnceLock;
+
+fn qualified() {
+    let _ = std::sync::Mutex::new(0); // FLAG
+}
+
+// lint: sync-ok(fixture fn-level waiver covers the signature too)
+fn waived_fn() -> std::sync::MutexGuard<'static, ()> {
+    unimplemented!()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Barrier;
+}
