@@ -1,0 +1,48 @@
+//! Activation suite: the four activation-function workloads (tanh,
+//! sigmoid, GELU, softplus) at 8 input bits. For each one, find the
+//! smallest LUT height whose complete quadratic space exists and the
+//! smallest whose degree-1 (linear) slice exists, then run the full
+//! staged pipeline — generate, explore, cost, exhaustively verify — at
+//! both minima.
+//!
+//! Run: `cargo run --release --example activation_suite`
+
+use polygen::bounds::AccuracySpec;
+use polygen::coordinator::Workload;
+use polygen::designspace::{min_lookup_bits, GenOptions};
+use polygen::pipeline::Pipeline;
+
+fn main() -> Result<(), polygen::pipeline::PipelineError> {
+    for func in ["tanh", "sigmoid", "gelu", "softplus"] {
+        // Probe the bound table directly; R = bits (one point per
+        // region) is always feasible, so both minima exist.
+        let w = Workload::prepare(func, 8, AccuracySpec::Ulp(1)).expect("builtin activation");
+        let quad = GenOptions::default();
+        let r2 = min_lookup_bits(&w.bt, &quad, 8).expect("degree-2 minimum");
+        let r1 = min_lookup_bits(&w.bt, &GenOptions { degree: 1, ..quad }, 8)
+            .expect("degree-1 minimum");
+        println!("{func}: minimal lookup bits = {r2} (quadratic), {r1} (linear)");
+
+        // Full run at the quadratic minimum: a violation would surface
+        // as PipelineError::VerifyFailed with its first counterexample.
+        let verified = Pipeline::function(func).bits(8).lub(r2).run()?;
+        println!(
+            "  degree 2: k = {}, {} (a,b) pairs, picked {:?}, verified {} inputs",
+            verified.space.k,
+            verified.space.num_ab_pairs(),
+            verified.implementation.degree,
+            verified.report.total
+        );
+
+        // Degree-1 generation keeps only the a = 0 row of every region,
+        // so the explorer can only pick a linear interpolator.
+        let linear = Pipeline::function(func).bits(8).lub(r1).gen_degree(1).run()?;
+        println!(
+            "  degree 1: k = {}, all-linear space of {} entries, verified {} inputs",
+            linear.space.k,
+            linear.space.num_ab_pairs(),
+            linear.report.total
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+#!/usr/bin/env python3
+"""Bit-exact mirror of rust/src/bounds/exact.rs activation floors.
+
+The authoring container has no rust toolchain, so the exact-floor
+algorithms for tanh/sigmoid/softplus/gelu are validated here first: this
+file re-implements the integer algorithms bit-for-bit (python ints stand
+in for u128/U256; `//` and `>>` are the same floors) and checks them
+against a 80-digit Decimal reference over exhaustive small domains.
+
+Outputs:
+  - the two fixed-point constants to paste into exact.rs,
+  - per-function max |computed - true| error and margin headroom,
+  - FNV-1a golden hashes over the floor tables, pinned by Rust tests.
+
+Run: python3 python/activation_mirror.py [--quick]
+"""
+
+import math
+import sys
+from decimal import Decimal, getcontext
+
+getcontext().prec = 80
+
+F = 120
+MARGIN = 1 << 20
+
+# --- high-precision constants (Decimal, then fixed-point) ---------------
+
+
+def pi_dec() -> Decimal:
+    """Machin: pi = 16 atan(1/5) - 4 atan(1/239)."""
+
+    def atan_inv(n: int) -> Decimal:
+        total = Decimal(0)
+        term = Decimal(1) / n
+        n2 = n * n
+        k = 0
+        while term != 0:
+            total += term / (2 * k + 1) * (1 if k % 2 == 0 else -1)
+            term /= n2
+            k += 1
+        return total
+
+    return 16 * atan_inv(5) - 4 * atan_inv(239)
+
+
+PI = pi_dec()
+LOG2E_Q126 = int((1 / Decimal(2).ln()) * (1 << 126))
+SQRT2_OVER_PI_Q126 = int((2 / PI).sqrt() * (1 << 126))
+
+
+def erf_dec(w: Decimal) -> Decimal:
+    """erf(w) = 2/sqrt(pi) * sum (-1)^n w^(2n+1) / (n! (2n+1))."""
+    total = Decimal(0)
+    term = w  # w^(2n+1)/n!
+    w2 = w * w
+    n = 0
+    while True:
+        contrib = term / (2 * n + 1) * (1 if n % 2 == 0 else -1)
+        total += contrib
+        if abs(contrib) < Decimal(10) ** -78 and n > int(w2):
+            break
+        n += 1
+        term = term * w2 / n
+    return 2 / PI.sqrt() * total
+
+
+# --- the integer algorithms, mirrored statement-for-statement -----------
+
+_CHAIN = None
+
+
+def sqrt2_chain(depth: int):
+    """[2^(2^-1), ..., 2^(2^-depth)] in Q1.127 (isqrt-based, as Rust)."""
+    global _CHAIN
+    if _CHAIN is None or len(_CHAIN) < depth:
+        roots = []
+        s = math.isqrt(1 << 255)  # isqrt(2 << 254) = sqrt(2) in Q1.127
+        roots.append(s)
+        for _ in range(1, depth):
+            s = math.isqrt(s << 127)
+            roots.append(s)
+        _CHAIN = roots
+    return _CHAIN
+
+
+def exp2w_q127(f: int) -> int:
+    """2^f for a Q0.120 fraction f (0 < f < 2^120), in Q1.127."""
+    assert 0 < f < (1 << 120)
+    roots = sqrt2_chain(120)
+    g = 1 << 127
+    for i in range(120):
+        if (f >> i) & 1:
+            g = (g * roots[120 - i - 1]) >> 127
+    return g
+
+
+def exp2neg_q124(z: int, m: int, lk: int) -> int:
+    """E = e^(-lk*x) for x = z/2^(m-3), lk in {1, 2}, as Q0.124."""
+    assert lk in (1, 2) and z > 0
+    sh = m - 3 - (1 if lk == 2 else 0)
+    p = z * LOG2E_Q126  # t = lk*x*log2(e) at Q.(126+sh)
+    t_int = p >> (126 + sh)
+    tf = (p >> (6 + sh)) & ((1 << 120) - 1)
+    if tf == 0:
+        return 1 << (124 - t_int)
+    # 2^(-tf) = 2^(1-tf)/2, so E*2^124 = exp2w(1-tf) >> (4 + T).
+    g2 = exp2w_q127((1 << 120) - tf)
+    return g2 >> (4 + t_int)
+
+
+def log2_frac_q120(v: int) -> int:
+    assert v > 0
+    a = v << (128 - v.bit_length())
+    frac = 0
+    for _ in range(F):
+        sq = a * a
+        bit = (sq >> 255) & 1
+        frac = (frac << 1) | bit
+        a = sq >> 128 if bit else sq >> 127
+    return frac
+
+
+def split_floor(frac: int, shift: int):
+    fl = frac >> shift
+    rem = frac & ((1 << shift) - 1)
+    top = 1 << shift
+    assert MARGIN < rem < top - MARGIN, f"ambiguous floor: rem={rem:#x} shift={shift}"
+    return fl, False, min(rem, top - rem) / top
+
+
+def floor_tanh_scaled(z: int, m: int, q: int, lk: int):
+    """floor(2^q * (1-E)/(1+E)), E = e^(-lk*x): tanh (lk=2) / 2*sigmoid-1 (lk=1)."""
+    if z == 0:
+        return 0, True, 0.5
+    e = exp2neg_q124(z, m, lk)
+    num = ((1 << 124) - e) << (q + 110)
+    den = (1 << 124) + e
+    return split_floor(num // den, 110)
+
+
+def floor_softplus_scaled(z: int, m: int, q: int):
+    """floor(2^q * log2(1 + e^-x)), x = z/2^(m-3)."""
+    if z == 0:
+        return 1 << q, True, 0.5
+    e = exp2neg_q124(z, m, 1)
+    return split_floor(log2_frac_q120((1 << 124) + e), 120 - q)
+
+
+def floor_gelu_scaled(z: int, m: int, q: int):
+    """floor(2^(q+2) * x * Phi(-x)), x = z/2^(m-2), via the erf series."""
+    if z == 0:
+        return 0, True, 0.5
+    assert q + 3 >= m
+    uf = 2 * m - 3  # u = x^2/2 = z^2 / 2^uf, u < 8
+    z2 = z * z
+    term = 1 << 160  # u^n/n! at Q.160
+    pos = neg = 0
+    n = 0
+    while term != 0:
+        if n % 2 == 0:
+            pos += term // (2 * n + 1)
+        else:
+            neg += term // (2 * n + 1)
+        term = ((term * z2) // (n + 1)) >> uf
+        n += 1
+        assert n < 500, "series failed to terminate"
+    s = pos - neg  # S(u) = sum (-1)^n u^n/(n!(2n+1)) at Q.160, > 0
+    assert s > 0
+    us = (s * z2) >> (uf + 36)  # u*S at Q.124, < 2^127
+    assert us < (1 << 128)
+    v = us * SQRT2_OVER_PI_Q126  # sqrt(2/pi)*u*S at Q.250
+    d110 = v >> (138 - q)  # D*2^110, D = 2^(q+2)*sqrt(2/pi)*u*S
+    y110 = (z << (q + 3 - m + 110)) - d110  # Y*2^110 = (2^(q+1)x - D)*2^110
+    assert y110 > 0
+    return split_floor(y110, 110)
+
+
+# --- Decimal reference ---------------------------------------------------
+
+
+def ref_y(func: str, z: int, m: int, q: int) -> Decimal:
+    if func == "gelu":
+        x = Decimal(z) / (1 << (m - 2))
+        w = x / Decimal(2).sqrt()
+        return (1 << (q + 1)) * x * (1 - erf_dec(w))
+    x = Decimal(z) / (1 << (m - 3))
+    if func == "tanh":
+        e = (-2 * x).exp()
+        return (1 << q) * (1 - e) / (1 + e)
+    if func == "sigmoid":  # Y = 2^(q+1)*sigma(x) - 2^q = 2^q*tanh(x/2)
+        e = (-x).exp()
+        return (1 << q) * (1 - e) / (1 + e)
+    if func == "softplus":
+        e = (-x).exp()
+        return (1 << q) * ((1 + e).ln() / Decimal(2).ln())
+    raise ValueError(func)
+
+
+def mirror(func: str, z: int, m: int, q: int):
+    if func == "tanh":
+        return floor_tanh_scaled(z, m, q, 2)
+    if func == "sigmoid":
+        return floor_tanh_scaled(z, m, q, 1)
+    if func == "softplus":
+        return floor_softplus_scaled(z, m, q)
+    if func == "gelu":
+        return floor_gelu_scaled(z, m, q)
+    raise ValueError(func)
+
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+U64 = (1 << 64) - 1
+
+
+def fnv1a(h: int, v: int) -> int:
+    return ((h ^ (v & U64)) * FNV_PRIME) & U64
+
+
+def main():
+    quick = "--quick" in sys.argv
+    funcs = ["tanh", "sigmoid", "softplus", "gelu"]
+    print(f"LOG2E_Q126         = {LOG2E_Q126:#034x}")
+    print(f"SQRT2_OVER_PI_Q126 = {SQRT2_OVER_PI_Q126:#034x}")
+
+    exhaustive = [4, 6, 8, 10, 12] if not quick else [4, 8]
+    sampled = [14, 16] if not quick else [16]
+    golden = {}
+    for func in funcs:
+        min_dist = 1.0
+        checked = 0
+        for m in exhaustive + sampled:
+            q = m
+            zs = (
+                range(1 << m)
+                if m in exhaustive
+                else list(range(0, 1 << m, 97)) + [(1 << m) - 1]
+            )
+            h = FNV_OFFSET
+            for z in zs:
+                fl, ex, _ = mirror(func, z, m, q)
+                h = fnv1a(fnv1a(h, fl), 1 if ex else 0)
+                y = ref_y(func, z, m, q)
+                true_fl = int(y.to_integral_value(rounding="ROUND_FLOOR"))
+                assert fl == true_fl, f"{func} m={m} z={z}: {fl} != {true_fl} (y={y})"
+                checked += 1
+                if ex:
+                    assert y == fl, f"{func} m={m} z={z}: claimed exact, y={y}"
+                else:
+                    # distance of the true value to the nearest integer: the
+                    # headroom under the 2^-90 split_floor margin at shift 110.
+                    frac = y - true_fl
+                    d_true = min(frac, 1 - frac)
+                    min_dist = min(min_dist, float(d_true))
+            if m in exhaustive:
+                golden[(func, m)] = h
+        print(
+            f"{func:9s} ok  ({checked} points, "
+            f"min |Y - nearest int| = 2^{math.log2(min_dist):.1f} output ulp)"
+        )
+    print("\ngolden FNV-1a hashes (func, bits) -> hash:")
+    for (func, m), h in sorted(golden.items()):
+        print(f'    ("{func}", {m}, {h:#018x}),')
+
+
+if __name__ == "__main__":
+    main()

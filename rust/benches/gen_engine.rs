@@ -1,6 +1,7 @@
 //! Reproducible perf harness for the generation engine (§Perf: envelope
 //! enumeration; §Scaling: lazy regions). Times complete-space generation
-//! for recip/log2/exp2 at 12/14/16 bits over several `R`:
+//! for recip/log2/exp2 at 12/14/16 bits over several `R` (gated), plus
+//! the activation workloads as a non-gating `activations` section:
 //!
 //! - `lazy` — [`generate`]: analysis phases + common `k` only (what the
 //!   pipeline runs; entries sweep on demand),
@@ -53,6 +54,20 @@ const FULL: &[Case] = &[
 
 const SMOKE: &[Case] = &[case("recip", 12, 5, true), case("log2", 12, 5, false)];
 
+/// Activation workloads (PR 9) — tracked but NON-GATING: their rows land
+/// in a separate `activations` JSON array that `python/bench_gate.py`
+/// never reads, so their trajectory is recorded without arming a gate
+/// while the case set is still settling.
+const ACTIVATIONS: &[Case] = &[
+    case("tanh", 12, 6, false),
+    case("sigmoid", 12, 6, false),
+    case("gelu", 12, 6, false),
+    case("softplus", 12, 6, false),
+    case("tanh", 16, 9, false),
+];
+
+const ACTIVATIONS_SMOKE: &[Case] = &[case("tanh", 12, 6, false)];
+
 fn time_median<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
     let mut times = Vec::with_capacity(reps);
     let t0 = Instant::now();
@@ -93,10 +108,7 @@ struct Row {
     naive_1t: Option<f64>,
 }
 
-fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let cases = if smoke { SMOKE } else { FULL };
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+fn run_cases(cases: &[Case], threads: usize, smoke: bool) -> Vec<Row> {
     let mut rows: Vec<Row> = Vec::new();
 
     for c in cases {
@@ -162,6 +174,33 @@ fn main() {
             naive_1t,
         });
     }
+    rows
+}
+
+fn json_row(r: &Row) -> String {
+    format!(
+        "{{\"func\": \"{}\", \"bits\": {}, \"lookup_bits\": {}, \"k\": {}, \
+         \"ab_pairs\": {}, \"lazy_1t_s\": {:.6}, \"envelope_1t_s\": {:.6}, \
+         \"envelope_mt_s\": {:.6}, \"naive_1t_s\": {}, \"speedup_vs_naive\": {}}}",
+        r.func,
+        r.bits,
+        r.r,
+        r.k,
+        r.ab_pairs,
+        r.lazy_1t,
+        r.env_1t,
+        r.env_mt,
+        r.naive_1t.map_or("null".to_string(), |t| format!("{t:.6}")),
+        r.naive_1t.map_or("null".to_string(), |t| format!("{:.3}", t / r.env_1t.max(1e-12))),
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let rows = run_cases(if smoke { SMOKE } else { FULL }, threads, smoke);
+    let act_rows =
+        run_cases(if smoke { ACTIVATIONS_SMOKE } else { ACTIVATIONS }, threads, smoke);
 
     // Machine-readable trajectory record at the repository root.
     let headline = rows
@@ -180,23 +219,16 @@ fn main() {
     );
     let _ = writeln!(json, "  \"results\": [");
     for (i, r) in rows.iter().enumerate() {
-        let _ = writeln!(
-            json,
-            "    {{\"func\": \"{}\", \"bits\": {}, \"lookup_bits\": {}, \"k\": {}, \
-             \"ab_pairs\": {}, \"lazy_1t_s\": {:.6}, \"envelope_1t_s\": {:.6}, \
-             \"envelope_mt_s\": {:.6}, \"naive_1t_s\": {}, \"speedup_vs_naive\": {}}}{}",
-            r.func,
-            r.bits,
-            r.r,
-            r.k,
-            r.ab_pairs,
-            r.lazy_1t,
-            r.env_1t,
-            r.env_mt,
-            r.naive_1t.map_or("null".to_string(), |t| format!("{t:.6}")),
-            r.naive_1t.map_or("null".to_string(), |t| format!("{:.3}", t / r.env_1t.max(1e-12))),
-            if i + 1 == rows.len() { "" } else { "," }
-        );
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        let _ = writeln!(json, "    {}{}", json_row(r), comma);
+    }
+    let _ = writeln!(json, "  ],");
+    // Non-gating section: same schema, ignored by python/bench_gate.py
+    // (which only reads "results").
+    let _ = writeln!(json, "  \"activations\": [");
+    for (i, r) in act_rows.iter().enumerate() {
+        let comma = if i + 1 == act_rows.len() { "" } else { "," };
+        let _ = writeln!(json, "    {}{}", json_row(r), comma);
     }
     let _ = writeln!(json, "  ]");
     json.push_str("}\n");

@@ -1,4 +1,4 @@
-//! Exact fixed-point `log2` / `exp2` floors.
+//! Exact fixed-point floors for the transcendental target functions.
 //!
 //! The paper's bound functions `l, u` must be *trusted*: a single
 //! mis-rounded bound makes the generated design space wrong (either
@@ -8,10 +8,37 @@
 //! guard bits and an explicit ambiguity check on every floor. If a value
 //! ever lands inside the guard margin of an integer boundary the functions
 //! panic rather than return a possibly-wrong bound (this never fires for
-//! the ≤ 26-bit formats used anywhere in this repo; a dedicated test
-//! exhaustively confirms agreement with directed `f64` evaluation).
+//! the ≤ 26-bit formats used anywhere in this repo; dedicated tests
+//! exhaustively confirm agreement with directed `f64` evaluation, and
+//! `python/activation_mirror.py` re-derives every activation floor
+//! bit-for-bit against an 80-digit `Decimal` reference).
+//!
+//! # Conventions
+//!
+//! Every `floor_*_scaled` function maps an *integer* input `z` (the raw
+//! `m`-bit operand) to `(floor(Y), exact)` where `Y` is the scaled target
+//! value — the input scaling (`x = z / 2^s` for a function-specific `s`)
+//! and output scaling (`Y = 2^q · f(x)`, possibly shifted) are documented
+//! per function and in `DESIGN.md §Workloads`. The `exact` flag is `true`
+//! only when `Y` is *provably* an integer (so the caller may tighten its
+//! accuracy bounds); any other value is guaranteed to be farther than the
+//! guard margin (`2^-90` here) from an integer, by the panic check.
+//!
+//! ```
+//! use polygen::bounds::exact::floor_tanh_scaled;
+//!
+//! // 12-bit tanh: x = z / 2^9, Y = 2^12 * tanh(x). At z = 512, x = 1.
+//! let (floor, exact) = floor_tanh_scaled(512, 12, 12);
+//! assert_eq!(floor, (4096.0 * 1.0f64.tanh()).floor() as i64);
+//! assert!(!exact); // tanh(1) is irrational
+//! ```
 
-use crate::wide::{isqrt_u256, U256};
+use crate::wide::{div_u256_by_u128, div_u256_by_u64, isqrt_u256, mul_u256_by_u64, U256};
+
+// Const-initialized static cache; `OnceLock` has no loom mirror and this
+// module is never loom-modeled.
+// lint: sync-ok(const-init OnceLock static in never-modeled code)
+use std::sync::OnceLock;
 
 /// Fractional bits of the internal fixed-point representation.
 const F: u32 = 120;
@@ -65,18 +92,31 @@ pub fn exp2_frac_q127(z: u64, m: u32) -> u128 {
     g
 }
 
-/// `[ 2^(2^-1), 2^(2^-2), ..., 2^(2^-m) ]` in Q1.127.
-fn sqrt2_chain(m: u32) -> Vec<u128> {
-    let mut roots = Vec::with_capacity(m as usize);
-    // s_1 = sqrt(2) in Q1.127 = isqrt(2 << 254).
-    let mut s: u128 = isqrt_u256(U256 { hi: 1u128 << 127, lo: 0 });
-    roots.push(s);
-    for _ in 1..m {
-        // s_{j+1} = sqrt(s_j): isqrt(s << 127) in Q1.127.
-        s = isqrt_u256(U256::from_u128(s).shl(127));
+/// Depth of the cached square-root-of-two chain: enough for a full
+/// Q0.120 fractional exponent, the widest any caller uses.
+const CHAIN_DEPTH: u32 = 120;
+
+/// `[ 2^(2^-1), 2^(2^-2), ..., 2^(2^-m) ]` in Q1.127 (`m <= 120`).
+///
+/// The chain is computed once to full depth and cached: the activation
+/// floors call [`exp2w_q127`] per input point (2^16 points for a 16-bit
+/// bound table), and each call folds up to 120 chain factors.
+fn sqrt2_chain(m: u32) -> &'static [u128] {
+    assert!(m <= CHAIN_DEPTH);
+    static CHAIN: OnceLock<Vec<u128>> = OnceLock::new();
+    let chain = CHAIN.get_or_init(|| {
+        let mut roots = Vec::with_capacity(CHAIN_DEPTH as usize);
+        // s_1 = sqrt(2) in Q1.127 = isqrt(2 << 254).
+        let mut s: u128 = isqrt_u256(U256 { hi: 1u128 << 127, lo: 0 });
         roots.push(s);
-    }
-    roots
+        for _ in 1..CHAIN_DEPTH {
+            // s_{j+1} = sqrt(s_j): isqrt(s << 127) in Q1.127.
+            s = isqrt_u256(U256::from_u128(s).shl(127));
+            roots.push(s);
+        }
+        roots
+    });
+    &chain[..m as usize]
 }
 
 /// `floor(2^q * frac(log2(v)))` with an exactness flag.
@@ -101,6 +141,164 @@ pub fn floor_exp2m1_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
     let g = exp2_frac_q127(z, m); // Q1.127 in [1,2)
     let frac = g - (1u128 << 127); // Q0.127
     split_floor(frac, 127 - q)
+}
+
+/// `floor(log2(e) * 2^126)`; derived and cross-checked by
+/// `python/activation_mirror.py`.
+const LOG2E_Q126: u128 = 0x5c55_1d94_ae0b_f85d_df43_ff68_348e_9f44;
+/// `floor(sqrt(2/pi) * 2^126)` (the GELU erf-series prefactor).
+const SQRT2_OVER_PI_Q126: u128 = 0x3310_8a67_a86c_a11a_1f96_78a0_1757_1c5f;
+
+/// `2^f` for a Q0.120 fraction `f` in `(0, 1)`, as Q1.127.
+///
+/// Same square-root-chain product as [`exp2_frac_q127`] but over a full
+/// 120-bit fraction: bit `i` of `f` has weight `2^(i-120)` and contributes
+/// the chain factor `2^(2^-(120-i))`. Each of the ≤ 120 factor folds
+/// truncates ≤ 2^-127, so the relative error stays below `2^-119`.
+fn exp2w_q127(f: u128) -> u128 {
+    debug_assert!(f > 0 && f < (1u128 << 120));
+    let roots = sqrt2_chain(CHAIN_DEPTH);
+    let mut g: u128 = 1u128 << 127; // 1.0 in Q1.127
+    for i in 0..CHAIN_DEPTH {
+        if (f >> i) & 1 == 1 {
+            let j = (CHAIN_DEPTH - i) as usize; // weight 2^-(120-i)
+            g = U256::mul_u128(g, roots[j - 1]).shr(127).lo;
+        }
+    }
+    g
+}
+
+/// `E = e^(-lk·x)` for `x = z / 2^(m-3)` and `lk ∈ {1, 2}`, as Q0.124.
+///
+/// Computed division-free: `lk·x·log2(e) = T + tf` with integer `T` and a
+/// Q0.120 fraction `tf`, and `2^-tf = 2^(1-tf) / 2` turns the negative
+/// power into one [`exp2w_q127`] call. `x < 8`, so `E > e^-16 > 2^-23.1`
+/// and the Q0.124 result keeps ≥ 100 significant bits.
+fn exp2neg_q124(z: u64, m: u32, lk: u32) -> u128 {
+    debug_assert!(z > 0 && (lk == 1 || lk == 2));
+    let sh = m - 3 - (lk == 2) as u32; // lk·x = z / 2^sh
+    // P = z·log2(e)·2^126 represents t = lk·x·log2(e) at Q.(126+sh).
+    let p = U256::mul_u128(z as u128, LOG2E_Q126);
+    let t = p.shr(126 + sh);
+    debug_assert!(t.hi == 0 && t.lo <= 24);
+    let t = t.lo as u32;
+    let tf = p.shr(6 + sh).lo & ((1u128 << 120) - 1);
+    if tf == 0 {
+        // t is an exact integer (only z = 0 in exact arithmetic, but the
+        // truncated tf can underflow to zero; 2^-t is then the best Q0.124
+        // value within the substrate's error budget).
+        return 1u128 << (124 - t);
+    }
+    let g2 = exp2w_q127((1u128 << 120) - tf); // 2^(1-tf) in (1, 2), Q1.127
+    g2 >> (4 + t)
+}
+
+/// Shared tanh/sigmoid floor: `floor(2^q · (1-E)/(1+E))`, `E = e^(-lk·x)`.
+///
+/// `(1-E)/(1+E) = tanh(lk·x/2)`, so `lk = 2` is tanh and `lk = 1` is the
+/// sigmoid via `2σ(x) - 1 = tanh(x/2)`.
+fn floor_tanh_like(z: u64, m: u32, q: u32, lk: u32) -> (i64, bool) {
+    assert!((4..=16).contains(&m) && q >= 1 && q <= 16 && (z >> m) == 0);
+    if z == 0 {
+        return (0, true); // tanh(0) = 0 exactly
+    }
+    let e = exp2neg_q124(z, m, lk);
+    // Y·2^110 = (2^124 - e)·2^(q+110) / (2^124 + e) <= 2^(q+110) <= 2^126:
+    // the quotient always fits u128 and the divisor exceeds num.hi, so
+    // the division is exact-floor (never saturates).
+    let num = U256::mul_u128((1u128 << 124) - e, 1u128 << (q + 110));
+    let den = (1u128 << 124) + e;
+    let quo = div_u256_by_u128(num, den);
+    split_floor(quo, 110)
+}
+
+/// `floor(2^q · tanh(x))` for `x = z / 2^(m-3) ∈ [0, 8)`.
+///
+/// Exact only at `z = 0`; `tanh` saturates (`1 - tanh(8) < 2^-22`), which
+/// is the bound shape the original four functions never exercise. The
+/// negative half follows from odd symmetry: `tanh(-x) = -tanh(x)`.
+///
+/// ```
+/// let (y0, exact) = polygen::bounds::exact::floor_tanh_scaled(0, 8, 8);
+/// assert_eq!((y0, exact), (0, true));
+/// let (y, _) = polygen::bounds::exact::floor_tanh_scaled(255, 8, 8);
+/// assert_eq!(y, 255); // deep in the saturating tail
+/// ```
+pub fn floor_tanh_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
+    floor_tanh_like(z, m, q, 2)
+}
+
+/// `floor(2^(q+1)·σ(x) - 2^q)` for `x = z / 2^(m-3) ∈ [0, 8)`.
+///
+/// The stored value is the *centered* sigmoid `2σ(x) - 1 = tanh(x/2)`
+/// scaled to `q` bits — σ itself spends a full bit on the constant `1/2`;
+/// the caller reconstructs `σ(x) = (Y/2^q + 1) / 2` and the negative half
+/// via `σ(-x) = 1 - σ(x)`.
+pub fn floor_sigmoid_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
+    floor_tanh_like(z, m, q, 1)
+}
+
+/// `floor(2^q · log2(1 + e^-x))` for `x = z / 2^(m-3) ∈ [0, 8)`.
+///
+/// The decaying branch of softplus in base-2 units: `softplus(-x) =
+/// ln(1+e^-x) = ln(2)·Y/2^q`, and the growing branch follows from
+/// `softplus(x) = x + softplus(-x)`. Exact at `z = 0` (`log2 2 = 1`).
+pub fn floor_softplus_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
+    assert!((4..=16).contains(&m) && q >= 1 && q <= 16 && (z >> m) == 0);
+    if z == 0 {
+        return (1i64 << q, true); // log2(1 + 1) = 1 exactly
+    }
+    let e = exp2neg_q124(z, m, 1);
+    // v = (1 + E)·2^124 ∈ (2^124, 2^125): frac(log2 v) = log2(1 + E).
+    let frac = log2_frac_q120((1u128 << 124) + e);
+    split_floor(frac, F - q)
+}
+
+/// `floor(2^(q+2) · x·Φ(-x))` for `x = z / 2^(m-2) ∈ [0, 4)`, where `Φ` is
+/// the standard normal CDF.
+///
+/// `x·Φ(-x)` is GELU's decaying branch: `gelu(x) = x·Φ(x) = x - x·Φ(-x)`
+/// and `gelu(-x) = -x·Φ(-x)`, so one table serves both halves. The `2^(q+2)`
+/// scale uses the headroom of `max x·Φ(-x) ≈ 0.17`. Computed as
+/// `Y = 2^(q+1)·x - 2^(q+2)·sqrt(2/π)·u·S(u)` with `u = x²/2` and the
+/// alternating erf series `S(u) = Σ (-u)^n / (n!(2n+1))`, accumulated in
+/// Q.160 with positive and negative partial sums split so every
+/// intermediate is exact-floor. `u < 8` keeps the alternating-series error
+/// amplification (`~e^u`) far inside the guard margin.
+pub fn floor_gelu_scaled(z: u64, m: u32, q: u32) -> (i64, bool) {
+    assert!((4..=16).contains(&m) && q >= 1 && q <= 16 && (z >> m) == 0);
+    assert!(q + 3 >= m, "gelu scaling needs q >= m - 3");
+    if z == 0 {
+        return (0, true);
+    }
+    let uf = 2 * m - 3; // u = x²/2 = z² / 2^uf < 8
+    let z2 = z.checked_mul(z).expect("z² overflow");
+    let mut term = U256::from_u128(1).shl(160); // uⁿ/n! at Q.160
+    let mut pos = U256::ZERO;
+    let mut neg = U256::ZERO;
+    let mut n: u64 = 0;
+    while term != U256::ZERO {
+        let c = div_u256_by_u64(term, 2 * n + 1);
+        if n % 2 == 0 {
+            pos = pos.add(c);
+        } else {
+            neg = neg.add(c);
+        }
+        term = div_u256_by_u64(mul_u256_by_u64(term, z2), n + 1).shr(uf);
+        n += 1;
+        assert!(n < 500, "gelu series failed to terminate");
+    }
+    // S(u) ∈ [~0.31, 1] at Q.160, then u·S at Q.124 (< 2^127: u < 8).
+    let s = pos.checked_sub(neg).expect("gelu series sum went negative");
+    let us = mul_u256_by_u64(s, z2).shr(uf + 36);
+    debug_assert_eq!(us.hi, 0);
+    // D·2^110 with D = 2^(q+2)·sqrt(2/π)·u·S: Q.250 product, shift 138-q.
+    let d110 = U256::mul_u128(us.lo, SQRT2_OVER_PI_Q126).shr(138 - q);
+    // Y·2^110 = 2^(q+1)·x·2^110 - D·2^110; 2^(q+1)·x = z·2^(q+3-m).
+    let lin = U256::from_u128((z as u128) << (q + 3 - m)).shl(110);
+    let y110 = lin.checked_sub(d110).expect("gelu went negative");
+    debug_assert_eq!(y110.hi, 0);
+    split_floor(y110.lo, 110)
 }
 
 /// Split a fixed-point fraction into `floor(frac / 2^shift)` and check the
@@ -175,5 +373,96 @@ mod tests {
         // 2^(2^-30) is barely above 1.
         assert!(last > (1u128 << 127));
         assert!(last - (1u128 << 127) < 1u128 << 100);
+    }
+
+    fn fnv1a(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0100_0000_01b3)
+    }
+
+    fn activation_floor(func: &str, z: u64, m: u32, q: u32) -> (i64, bool) {
+        match func {
+            "tanh" => floor_tanh_scaled(z, m, q),
+            "sigmoid" => floor_sigmoid_scaled(z, m, q),
+            "softplus" => floor_softplus_scaled(z, m, q),
+            "gelu" => floor_gelu_scaled(z, m, q),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Exhaustive (floor, exact) tables pinned against
+    /// `python/activation_mirror.py`, which implements the same integer
+    /// algorithms bit-for-bit and checks every floor against an 80-digit
+    /// `Decimal` reference. A hash mismatch means the Rust port diverged
+    /// from the validated arithmetic.
+    #[test]
+    fn activation_floors_match_mirror_golden() {
+        #[rustfmt::skip]
+        let cases: &[(&str, u32, u64)] = &[
+            ("gelu", 4, 0x7a1c80185c6478a4),
+            ("gelu", 6, 0x332eaf4edf1ad321),
+            ("gelu", 8, 0x6edd364ed1234263),
+            ("gelu", 10, 0x5f9639d520cbf9f7),
+            ("gelu", 12, 0xac27623bddbf5696),
+            ("sigmoid", 4, 0x09f2ea23659a058c),
+            ("sigmoid", 6, 0x0412cd92b448207a),
+            ("sigmoid", 8, 0x5468cb136e929ad4),
+            ("sigmoid", 10, 0x478ff12a024b9715),
+            ("sigmoid", 12, 0x2b67eccc9f6d883b),
+            ("softplus", 4, 0x995227634d4282c9),
+            ("softplus", 6, 0x886347ff952e16f1),
+            ("softplus", 8, 0xa963d16942f3af81),
+            ("softplus", 10, 0x3543b81068a6aee7),
+            ("softplus", 12, 0xf27590dbc55536f1),
+            ("tanh", 4, 0xddad1ebec026a927),
+            ("tanh", 6, 0xc386c4a05345b7a2),
+            ("tanh", 8, 0xb2f74f7702bd1bdd),
+            ("tanh", 10, 0x1ab3c599e7e67601),
+            ("tanh", 12, 0xc058dd0d91fb0bcd),
+        ];
+        for &(func, m, want) in cases {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for z in 0..(1u64 << m) {
+                let (fl, ex) = activation_floor(func, z, m, m);
+                h = fnv1a(h, fl as u64);
+                h = fnv1a(h, ex as u64);
+            }
+            assert_eq!(h, want, "{func} {m}-bit floor table diverged");
+        }
+    }
+
+    #[test]
+    fn activation_floors_agree_with_f64_sweep() {
+        // f64 references are good to ~2^-45 here; skip the (never observed)
+        // points whose true value sits closer than 1e-6 to an integer.
+        let m = 10u32;
+        let q = m;
+        let scale = (1u64 << q) as f64;
+        for z in 0..(1u64 << m) {
+            let x = z as f64 / (1u64 << (m - 3)) as f64;
+            let e = (-x).exp();
+            let refs = [
+                ("tanh", scale * x.tanh()),
+                ("sigmoid", scale * (1.0 - e) / (1.0 + e)),
+                ("softplus", scale * e.ln_1p() / std::f64::consts::LN_2),
+            ];
+            for (func, yf) in refs {
+                if (yf - yf.round()).abs() < 1e-6 {
+                    continue;
+                }
+                let (fl, _) = activation_floor(func, z, m, q);
+                assert_eq!(fl, yf.floor() as i64, "{func} z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn activation_edge_cases_are_exact() {
+        assert_eq!(floor_tanh_scaled(0, 12, 12), (0, true));
+        assert_eq!(floor_sigmoid_scaled(0, 12, 12), (0, true));
+        assert_eq!(floor_softplus_scaled(0, 12, 12), (1 << 12, true));
+        assert_eq!(floor_gelu_scaled(0, 12, 12), (0, true));
+        // Saturating tail: tanh pins to the top code well before z_max.
+        let (top, ex) = floor_tanh_scaled((1 << 12) - 1, 12, 12);
+        assert_eq!((top, ex), ((1 << 12) - 1, false));
     }
 }

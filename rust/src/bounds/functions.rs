@@ -1,5 +1,6 @@
 //! The target functions evaluated in the paper (reciprocal, log2, exp2)
-//! plus extras (sqrt, arbitrary `f64` closures) behind one trait.
+//! plus extras (sqrt, the NN activation suite, arbitrary `f64` closures)
+//! behind one trait.
 //!
 //! Each function maps a *stored input code* `z` (the explicit bits of the
 //! paper's `1.x` / `0.x` input) to the exact scaled output
@@ -8,8 +9,27 @@
 //! downstream (accuracy specs, bound tables, the design space itself) is
 //! derived from these floors, so they are computed with exact integer /
 //! 128-bit fixed-point arithmetic — never rounded binary floating point.
+//!
+//! The activation functions ([`Tanh`], [`Sigmoid`], [`Gelu`], [`Softplus`])
+//! tabulate the *non-negative half* of each symmetric/reflectable curve;
+//! `DESIGN.md §Workloads` catalogs the domain scalings and the identities
+//! that reconstruct the other half. They exercise bound shapes the paper's
+//! functions never hit — odd symmetry, saturating tails, an inflection at
+//! zero:
+//!
+//! ```
+//! use polygen::bounds::builtin;
+//!
+//! let tanh = builtin("tanh", 12).unwrap();
+//! // Y(z) = 2^12 * tanh(z / 2^9); z = 512 is x = 1.0.
+//! let (floor, _) = tanh.floor_y(512);
+//! assert_eq!(floor, (4096.0 * 1.0f64.tanh()) as i64);
+//! ```
 
-use super::exact::{floor_exp2m1_scaled, floor_log2_scaled};
+use super::exact::{
+    floor_exp2m1_scaled, floor_gelu_scaled, floor_log2_scaled, floor_sigmoid_scaled,
+    floor_softplus_scaled, floor_tanh_scaled,
+};
 use crate::wide::isqrt_u128;
 
 /// A fixed-point function to approximate, in the paper's framing.
@@ -160,6 +180,162 @@ impl TargetFunction for Sqrt {
     }
 }
 
+/// `0.y = tanh(x)` on `x = z/2^(m-3) ∈ [0, 8)` — NN activation workload.
+///
+/// `Y(z) = 2^q * tanh(z / 2^(m-3))`; the negative half follows from odd
+/// symmetry (`tanh(-x) = -tanh(x)`), so the table covers `[0, 8)` only.
+/// The saturating tail (`1 - tanh(8) < 2^-22`) forces long flat regions
+/// that stress the region dictionary very differently from the paper's
+/// monotone-curvature functions.
+pub struct Tanh {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Tanh {
+    fn name(&self) -> &str {
+        "tanh"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        floor_tanh_scaled(z, self.in_bits, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let x = z as f64 / (1u64 << (self.in_bits - 3)) as f64;
+        x.tanh() * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("0.y = tanh(x), x in [0,8)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `0.y = 2σ(x) - 1` on `x = z/2^(m-3) ∈ [0, 8)` — centered sigmoid.
+///
+/// Storing σ directly wastes a bit on the constant offset `1/2`; the
+/// centered form `2σ(x) - 1 = tanh(x/2)` uses the full output range and
+/// reconstructs `σ(x) = (Y/2^q + 1)/2`, `σ(-x) = 1 - σ(x)`.
+pub struct Sigmoid {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Sigmoid {
+    fn name(&self) -> &str {
+        "sigmoid"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        floor_sigmoid_scaled(z, self.in_bits, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let x = z as f64 / (1u64 << (self.in_bits - 3)) as f64;
+        let e = (-x).exp();
+        (1.0 - e) / (1.0 + e) * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("0.y = 2*sigmoid(x)-1, x in [0,8)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `0.y = x·Φ(-x)` on `x = z/2^(m-2) ∈ [0, 4)` — GELU's decaying branch.
+///
+/// `gelu(x) = x·Φ(x) = x - x·Φ(-x)` and `gelu(-x) = -x·Φ(-x)`: the one
+/// table serves both halves. `Y(z) = 2^(q+2) * x·Φ(-x)` (the extra two
+/// bits use the headroom of `max x·Φ(-x) ≈ 0.17`). The inflection of the
+/// Gaussian factor near `x = 1` changes the curvature sign — the shape
+/// that motivates degree-2 regions.
+pub struct Gelu {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Gelu {
+    fn name(&self) -> &str {
+        "gelu"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        floor_gelu_scaled(z, self.in_bits, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let x = z as f64 / (1u64 << (self.in_bits - 2)) as f64;
+        let phi_neg = 0.5 * (1.0 - erf_f64(x / std::f64::consts::SQRT_2));
+        x * phi_neg * 2f64.powi(self.out_bits as i32 + 2)
+    }
+    fn mapping(&self) -> String {
+        format!("0.y = x*Phi(-x), x in [0,4)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `0.y = log2(1 + e^-x)` on `x = z/2^(m-3) ∈ [0, 8)` — softplus tail.
+///
+/// The decaying branch of softplus in base-2 units: `softplus(-x) =
+/// ln(2) · Y/2^q` and `softplus(x) = x + softplus(-x)`. Exact at `z = 0`
+/// (`log2 2 = 1`), strictly decreasing, convex — a mirrored counterpart
+/// to [`Log2`]'s concave rise.
+pub struct Softplus {
+    pub in_bits: u32,
+    pub out_bits: u32,
+}
+
+impl TargetFunction for Softplus {
+    fn name(&self) -> &str {
+        "softplus"
+    }
+    fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+    fn out_bits(&self) -> u32 {
+        self.out_bits
+    }
+    fn floor_y(&self, z: u64) -> (i64, bool) {
+        floor_softplus_scaled(z, self.in_bits, self.out_bits)
+    }
+    fn y_f64(&self, z: u64) -> f64 {
+        let x = z as f64 / (1u64 << (self.in_bits - 3)) as f64;
+        (-x).exp().ln_1p() / std::f64::consts::LN_2 * 2f64.powi(self.out_bits as i32)
+    }
+    fn mapping(&self) -> String {
+        format!("0.y = log2(1+e^-x), x in [0,8)  ({} -> {})", self.in_bits, self.out_bits)
+    }
+}
+
+/// `erf` via its alternating Maclaurin series — adequate for the `f64`
+/// plotting baseline (`w < 2.83` here, so the series converges fast and
+/// the alternating cancellation costs ≲ 12 of the 52 mantissa bits, far
+/// inside the `y_f64` tolerance; the exact path never uses this).
+fn erf_f64(w: f64) -> f64 {
+    let w2 = w * w;
+    let mut term = w; // w^(2n+1) / n!
+    let mut sum = 0.0;
+    let mut n = 0u32;
+    loop {
+        let c = term / (2 * n + 1) as f64;
+        sum += if n % 2 == 0 { c } else { -c };
+        if c < 1e-18 && (n as f64) > w2 {
+            break;
+        }
+        n += 1;
+        term = term * w2 / n as f64;
+    }
+    sum * std::f64::consts::FRAC_2_SQRT_PI
+}
+
 /// A user-supplied function via an `f64` closure, for quick experiments
 /// (`examples/custom_function.rs`).
 ///
@@ -214,13 +390,19 @@ impl<F: Fn(f64) -> f64 + Send + Sync> TargetFunction for CustomF64<F> {
 }
 
 /// Construct a built-in function by name at the paper's precisions:
-/// `recip: m -> m`, `log2: m -> m+1`, `exp2: m -> m`, `sqrt: m -> m`.
+/// `recip: m -> m`, `log2: m -> m+1`, `exp2: m -> m`, `sqrt: m -> m`, and
+/// the activation suite (`tanh` / `sigmoid` / `gelu` / `softplus`,
+/// all `m -> m`, `4 <= m <= 16`).
 pub fn builtin(name: &str, bits: u32) -> Option<Box<dyn TargetFunction>> {
     match name {
         "recip" => Some(Box::new(Recip { in_bits: bits, out_bits: bits })),
         "log2" => Some(Box::new(Log2 { in_bits: bits, out_bits: bits + 1 })),
         "exp2" => Some(Box::new(Exp2 { in_bits: bits, out_bits: bits })),
         "sqrt" => Some(Box::new(Sqrt { in_bits: bits, out_bits: bits })),
+        "tanh" => Some(Box::new(Tanh { in_bits: bits, out_bits: bits })),
+        "sigmoid" => Some(Box::new(Sigmoid { in_bits: bits, out_bits: bits })),
+        "gelu" => Some(Box::new(Gelu { in_bits: bits, out_bits: bits })),
+        "softplus" => Some(Box::new(Softplus { in_bits: bits, out_bits: bits })),
         _ => None,
     }
 }
@@ -304,6 +486,59 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn activation_floors_match_f64() {
+        // Guard-banded: the f64 reference is good to ~1e-10 here, so skip
+        // points within 1e-6 of an integer (never observed; the exact path
+        // panics well before an ambiguous floor could pass through).
+        for b in [8u32, 10] {
+            for name in ["tanh", "sigmoid", "gelu", "softplus"] {
+                let f = builtin(name, b).unwrap();
+                for z in 0..(1u64 << b) {
+                    let (fl, ex) = f.floor_y(z);
+                    let y = f.y_f64(z);
+                    if ex {
+                        assert!((y - fl as f64).abs() < 1e-6, "{name} z={z}");
+                    } else if (y - y.round()).abs() > 1e-6 {
+                        assert_eq!(fl, y.floor() as i64, "{name} z={z} y={y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activation_shapes() {
+        // tanh / sigmoid: strictly monotone up to the saturated tail, and
+        // within the q-bit output range. softplus: strictly decreasing from
+        // the exact top code. gelu: rises to its mode (~x = 0.75) then
+        // decays — the non-monotone shape none of the paper's functions has.
+        let m = 12u32;
+        for name in ["tanh", "sigmoid"] {
+            let f = builtin(name, m).unwrap();
+            let mut prev = -1i64;
+            for z in 0..(1u64 << m) {
+                let (fl, _) = f.floor_y(z);
+                assert!(fl >= prev, "{name} not monotone at z={z}");
+                assert!(fl >= 0 && fl < (1 << m));
+                prev = fl;
+            }
+        }
+        let sp = builtin("softplus", m).unwrap();
+        assert_eq!(sp.floor_y(0), (1 << m, true));
+        let mut prev = i64::MAX;
+        for z in 0..(1u64 << m) {
+            let (fl, _) = sp.floor_y(z);
+            assert!(fl <= prev, "softplus not decreasing at z={z}");
+            prev = fl;
+        }
+        let gelu = builtin("gelu", m).unwrap();
+        let mode = (0..(1u64 << m)).max_by_key(|&z| gelu.floor_y(z).0).unwrap();
+        let x_mode = mode as f64 / (1u64 << (m - 2)) as f64;
+        assert!((x_mode - 0.75).abs() < 0.1, "gelu mode at x={x_mode}");
+        assert!(gelu.floor_y((1 << m) - 1).0 < gelu.floor_y(mode).0);
     }
 
     #[test]

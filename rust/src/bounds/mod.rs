@@ -10,7 +10,9 @@
 pub mod exact;
 pub mod functions;
 
-pub use functions::{builtin, CustomF64, Exp2, Log2, Recip, Sqrt, TargetFunction};
+pub use functions::{
+    builtin, CustomF64, Exp2, Gelu, Log2, Recip, Sigmoid, Softplus, Sqrt, Tanh, TargetFunction,
+};
 
 /// How much error the generated hardware may commit, in output ULPs.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]

@@ -19,11 +19,13 @@ use crate::faults::{self, Fault};
 use crate::service::store::crc32;
 
 const MAGIC: &[u8; 4] = b"PGDS";
-/// v3 appends a whole-file CRC-32 trailer (the `.pgjr` idiom), so *any*
-/// flipped bit fails closed instead of decoding into a wrong dictionary.
-/// v2 files fail the trailer check, get quarantined on first load, and
-/// are regenerated — the upgrade is self-healing.
-const VERSION: u32 = 3;
+/// v4 stores the generation degree after `k` (the degree-1 linear slice
+/// is a distinct space from the quadratic one). v3 added the whole-file
+/// CRC-32 trailer (the `.pgjr` idiom), so *any* flipped bit fails closed
+/// instead of decoding into a wrong dictionary. Older clean files decode
+/// as `Stale` — a plain miss that regenerates — so upgrades are
+/// self-healing.
+const VERSION: u32 = 4;
 
 fn w_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -85,6 +87,7 @@ pub fn to_bytes(ds: &DesignSpace) -> Vec<u8> {
     w_u32(&mut out, ds.out_bits);
     w_u32(&mut out, ds.lookup_bits);
     w_u32(&mut out, ds.k);
+    w_u32(&mut out, ds.degree);
     w_u64(&mut out, ds.dd_evals);
     w_u32(&mut out, ds.num_regions() as u32);
     for rv in ds.region_views() {
@@ -156,6 +159,10 @@ fn decode_body(r: &mut Reader) -> Result<DesignSpace, String> {
     let out_bits = r.u32()?;
     let lookup_bits = r.u32()?;
     let k = r.u32()?;
+    let degree = r.u32()?;
+    if degree != 1 && degree != 2 {
+        return Err(format!("cache degree {degree} out of range"));
+    }
     let dd_evals = r.u64()?;
     let nregions = r.u32()? as usize;
     let mut regions = Vec::with_capacity(nregions);
@@ -179,6 +186,7 @@ fn decode_body(r: &mut Reader) -> Result<DesignSpace, String> {
         out_bits,
         lookup_bits,
         k,
+        degree,
         regions,
         Vec::new(),
         dd_evals,
@@ -188,17 +196,20 @@ fn decode_body(r: &mut Reader) -> Result<DesignSpace, String> {
 /// Canonical cache path for a workload at specific generation options.
 /// Every result-affecting [`GenOptions`] field is part of the key:
 /// `lookup_bits` shapes the space, `search` changes the stored `dd_evals`
-/// instrumentation, and `max_k` bounds which spaces exist at all.
-/// `threads` is deliberately excluded — worker count never changes the
-/// result (`designspace::tests::threads_do_not_change_result`).
+/// instrumentation, `max_k` bounds which spaces exist at all, and
+/// `degree` selects the linear slice. The default degree 2 adds no
+/// suffix, so pre-degree-knob cache keys are unchanged. `threads` is
+/// deliberately excluded — worker count never changes the result
+/// (`designspace::tests::threads_do_not_change_result`).
 pub fn cache_path(dir: &Path, func: &str, acc: &str, in_bits: u32, opts: &GenOptions) -> PathBuf {
     let strategy = match opts.search {
         SearchStrategy::Naive => "naive",
         SearchStrategy::Pruned => "pruned",
         SearchStrategy::Hull => "hull",
     };
+    let deg = if opts.degree == 1 { "_deg1" } else { "" };
     dir.join(format!(
-        "{func}_{acc}_{in_bits}b_R{}_{strategy}_k{}.pgds",
+        "{func}_{acc}_{in_bits}b_R{}_{strategy}_k{}{deg}.pgds",
         opts.lookup_bits, opts.max_k
     ))
 }
@@ -304,6 +315,7 @@ mod tests {
         let back = from_bytes(&to_bytes(&ds)).unwrap();
         assert_eq!(back.func, ds.func);
         assert_eq!(back.k, ds.k);
+        assert_eq!(back.degree, ds.degree);
         assert_eq!(back.lookup_bits, ds.lookup_bits);
         assert_eq!(back.num_regions(), ds.num_regions());
         for (a, b) in ds.region_views().zip(back.region_views()) {
@@ -326,10 +338,12 @@ mod tests {
         let naive = GenOptions { search: SearchStrategy::Naive, ..base };
         let low_k = GenOptions { max_k: 12, ..base };
         let threaded = GenOptions { threads: 8, ..base };
+        let linear = GenOptions { degree: 1, ..base };
         let p = |o: &GenOptions| cache_path(dir, "recip", "1ulp", 10, o);
         assert_ne!(p(&base), p(&naive), "search strategy must be in the key");
         assert_ne!(p(&base), p(&low_k), "max_k must be in the key");
         assert_ne!(p(&naive), p(&low_k));
+        assert_ne!(p(&base), p(&linear), "degree must be in the key");
         assert_eq!(p(&base), p(&threaded), "threads never changes the result");
     }
 

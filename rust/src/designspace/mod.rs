@@ -40,8 +40,9 @@ use crate::bounds::BoundTable;
 use crate::pool::{run_indexed, CancelToken, Progress};
 use extrema::{DiagExtrema, SearchStrategy};
 use region::{
-    min_feasible_k, min_feasible_k_naive, region_space_at_k, region_space_at_k_naive, AbEntry,
-    RegionAnalysis, RegionSpace,
+    linear_feasible_real, min_feasible_k, min_feasible_k_deg1, min_feasible_k_deg1_naive,
+    min_feasible_k_naive, region_space_at_k, region_space_at_k_deg1, region_space_at_k_deg1_naive,
+    region_space_at_k_naive, AbEntry, RegionAnalysis, RegionSpace,
 };
 
 /// Callback that can supply diagonal extrema for a region's bound slices
@@ -65,12 +66,31 @@ pub struct GenOptions {
     /// independent — the paper's "parallelism" future-work item); work is
     /// scheduled on the process-wide pool ([`crate::pool`]).
     pub threads: usize,
+    /// Polynomial degree of the per-region dictionaries: `2` (default)
+    /// enumerates the paper's full quadratic `a·x² + b·x + c` space; `1`
+    /// restricts generation to the linear `b·x + c` slice (`a = 0`),
+    /// choosing the minimal common `k` for *that* space — a distinct
+    /// design point from post-hoc selecting `a = 0` out of a quadratic
+    /// space, whose `k` the quadratic regions may have inflated.
+    pub degree: u32,
 }
 
 impl Default for GenOptions {
     fn default() -> Self {
-        GenOptions { lookup_bits: 6, search: SearchStrategy::Hull, max_k: 30, threads: 1 }
+        GenOptions {
+            lookup_bits: 6,
+            search: SearchStrategy::Hull,
+            max_k: 30,
+            threads: 1,
+            degree: 2,
+        }
     }
+}
+
+/// Panic on unsupported degrees at the generation entry points, so every
+/// downstream match is exhaustive over `{1, 2}`.
+fn check_degree(degree: u32) {
+    assert!(degree == 1 || degree == 2, "unsupported generation degree {degree} (use 1 or 2)");
 }
 
 /// Why generation failed.
@@ -127,6 +147,9 @@ pub struct DesignSpace {
     pub lookup_bits: u32,
     /// Common evaluation-precision surplus `k`.
     pub k: u32,
+    /// Polynomial degree of the region dictionaries (1 or 2); lazy
+    /// re-sweeps must enumerate the same slice generation proved feasible.
+    pub degree: u32,
     /// Per-region real analyses (the lazy backing store; empty for
     /// cache-loaded spaces, whose regions are pre-materialized).
     pub analyses: Vec<RegionAnalysis>,
@@ -182,6 +205,11 @@ impl<'a> RegionView<'a> {
     pub fn num_ab_pairs(&self) -> u64 {
         match self.ds.cells[self.r].get() {
             Some(sp) => sp.num_ab_pairs(),
+            None if self.ds.degree == 1 => {
+                // Degree-1: one a = 0 row; its b width is the whole count.
+                region_space_at_k_deg1(&self.ds.analyses[self.r], self.ds.k)
+                    .map_or(0, |sp| sp.num_ab_pairs())
+            }
             None => region::num_ab_pairs_at_k(&self.ds.analyses[self.r], self.ds.k),
         }
     }
@@ -258,8 +286,11 @@ impl DesignSpace {
 
     fn sweep_region(&self, i: usize) -> RegionSpace {
         let an = &self.analyses[i];
-        region_space_at_k(an, self.k)
-            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={}", an.r, self.k))
+        let sp = match self.degree {
+            1 => region_space_at_k_deg1(an, self.k),
+            _ => region_space_at_k(an, self.k),
+        };
+        sp.unwrap_or_else(|| panic!("region {} lost feasibility at common k={}", an.r, self.k))
     }
 
     /// Assemble a fully-materialized space (cache loads, the naive
@@ -273,6 +304,7 @@ impl DesignSpace {
         out_bits: u32,
         lookup_bits: u32,
         k: u32,
+        degree: u32,
         regions: Vec<RegionSpace>,
         analyses: Vec<RegionAnalysis>,
         dd_evals: u64,
@@ -292,6 +324,7 @@ impl DesignSpace {
             out_bits,
             lookup_bits,
             k,
+            degree,
             analyses,
             dd_evals,
             cells,
@@ -370,30 +403,50 @@ pub fn analyze_shard(
     if cancelled() {
         return Err(GenError::Cancelled);
     }
-    let mut min_k = 0u32;
-    for an in &analyses {
-        if !an.feasible {
-            return Err(GenError::InfeasibleRegion { r: an.r });
-        }
-        match min_feasible_k(an, opts.max_k) {
-            Some(kr) => min_k = min_k.max(kr),
-            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
-        }
-    }
+    let min_k = common_k_of(&analyses, opts)?;
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
     Ok(ShardAnalysis { lo, hi, min_k, dd_evals, analyses })
 }
 
+/// Phase 2 shared by every engine and shard: the common `k` (max over
+/// regions of the per-region minimum) at the requested degree, with the
+/// *first* failing region reported — `InfeasibleRegion` when no real
+/// polynomial of that degree exists, `KExhausted` when only `max_k` is
+/// in the way.
+fn common_k_of(analyses: &[RegionAnalysis], opts: &GenOptions) -> Result<u32, GenError> {
+    check_degree(opts.degree);
+    let mut k = 0u32;
+    for an in analyses {
+        if !an.feasible || (opts.degree == 1 && !linear_feasible_real(an)) {
+            return Err(GenError::InfeasibleRegion { r: an.r });
+        }
+        let kr = match opts.degree {
+            1 => min_feasible_k_deg1(an, opts.max_k),
+            _ => min_feasible_k(an, opts.max_k),
+        };
+        match kr {
+            Some(kr) => k = k.max(kr),
+            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
+        }
+    }
+    Ok(k)
+}
+
 /// Phase 3 for one shard: sweep every region's `(a, b)` dictionary at the
 /// cluster-wide common `k` (which must be `>= self.min_k` — the
-/// coordinator computes it as the max over shards).
-pub fn sweep_shard(sa: &ShardAnalysis, k: u32) -> Vec<RegionSpace> {
+/// coordinator computes it as the max over shards), at the same `degree`
+/// the shard was analyzed at.
+pub fn sweep_shard(sa: &ShardAnalysis, k: u32, degree: u32) -> Vec<RegionSpace> {
     assert!(k >= sa.min_k, "sweep at k={k} below shard minimum {}", sa.min_k);
+    check_degree(degree);
     sa.analyses
         .iter()
         .map(|an| {
-            region_space_at_k(an, k)
-                .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r))
+            let sp = match degree {
+                1 => region_space_at_k_deg1(an, k),
+                _ => region_space_at_k(an, k),
+            };
+            sp.unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r))
         })
         .collect()
 }
@@ -423,6 +476,7 @@ pub fn merge_shard_spaces(
         bt.out_bits,
         opts.lookup_bits,
         k,
+        opts.degree,
         regions,
         Vec::new(),
         dd_evals,
@@ -500,6 +554,7 @@ fn generate_inner(
         out_bits: bt.out_bits,
         lookup_bits: opts.lookup_bits,
         k,
+        degree: opts.degree,
         analyses,
         dd_evals,
         cells: (0..nregions).map(|_| OnceLock::new()).collect(),
@@ -544,16 +599,7 @@ fn analyze_and_common_k(
     if cancel.is_some_and(|c| c.is_cancelled()) {
         return Err(GenError::Cancelled);
     }
-    let mut k = 0u32;
-    for an in &analyses {
-        if !an.feasible {
-            return Err(GenError::InfeasibleRegion { r: an.r });
-        }
-        match min_feasible_k(an, opts.max_k) {
-            Some(kr) => k = k.max(kr),
-            None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
-        }
-    }
+    let k = common_k_of(&analyses, opts)?;
     Ok((analyses, k))
 }
 
@@ -620,6 +666,7 @@ fn analyze_all(
 /// `Pruned`.
 pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace, GenError> {
     assert!(opts.lookup_bits <= bt.in_bits);
+    check_degree(opts.degree);
     let nregions = 1u64 << opts.lookup_bits;
     let search = match opts.search {
         SearchStrategy::Hull => SearchStrategy::Pruned,
@@ -630,18 +677,26 @@ pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace,
         analyze_all(bt, &opts, None, nregions, None, None).expect("uncancellable run");
     let mut k = 0u32;
     for an in &analyses {
-        if !an.feasible {
+        if !an.feasible || (opts.degree == 1 && !linear_feasible_real(an)) {
             return Err(GenError::InfeasibleRegion { r: an.r });
         }
-        match min_feasible_k_naive(an, opts.max_k) {
+        let kr = match opts.degree {
+            1 => min_feasible_k_deg1_naive(an, opts.max_k),
+            _ => min_feasible_k_naive(an, opts.max_k),
+        };
+        match kr {
             Some(kr) => k = k.max(kr),
             None => return Err(GenError::KExhausted { r: an.r, max_k: opts.max_k }),
         }
     }
     let mut regions = Vec::with_capacity(nregions as usize);
     for an in &analyses {
-        let sp = region_space_at_k_naive(an, k)
-            .unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r));
+        let sp = match opts.degree {
+            1 => region_space_at_k_deg1_naive(an, k),
+            _ => region_space_at_k_naive(an, k),
+        };
+        let sp =
+            sp.unwrap_or_else(|| panic!("region {} lost feasibility at common k={k}", an.r));
         regions.push(sp);
     }
     let dd_evals = analyses.iter().map(|a| a.dd_evals).sum();
@@ -652,6 +707,7 @@ pub fn generate_naive(bt: &BoundTable, opts: &GenOptions) -> Result<DesignSpace,
         bt.out_bits,
         opts.lookup_bits,
         k,
+        opts.degree,
         regions,
         analyses,
         dd_evals,
@@ -880,6 +936,97 @@ mod tests {
     }
 
     #[test]
+    fn degree2_explicit_matches_default() {
+        // `degree: 2` is the default — spelling it out must not change a
+        // byte of the space (the pre-degree-knob behaviour).
+        for (name, bits, r) in [("recip", 8u32, 4u32), ("log2", 8, 3)] {
+            let bt = table(name, bits);
+            let default =
+                generate(&bt, &GenOptions { lookup_bits: r, ..Default::default() }).unwrap();
+            assert_eq!(default.degree, 2);
+            let explicit =
+                generate(&bt, &GenOptions { lookup_bits: r, degree: 2, ..Default::default() })
+                    .unwrap();
+            assert_spaces_identical(&default, &explicit, name);
+        }
+    }
+
+    #[test]
+    fn degree1_engines_agree_and_entries_are_linear() {
+        let mut checked = 0;
+        for (name, bits) in [("recip", 8u32), ("log2", 8), ("tanh", 8), ("sigmoid", 8)] {
+            let bt = table(name, bits);
+            // Smallest R whose linear space exists (R = in_bits is a
+            // guaranteed terminal: single-point regions are degenerate).
+            let Some(r) = (0..=bits).find(|&r| {
+                generate(&bt, &GenOptions { lookup_bits: r, degree: 1, ..Default::default() })
+                    .is_ok()
+            }) else {
+                continue;
+            };
+            let opts = GenOptions { lookup_bits: r, degree: 1, ..Default::default() };
+            let lazy = generate(&bt, &opts).unwrap();
+            checked += 1;
+            assert_eq!(lazy.degree, 1);
+            // Streamed metrics answer without materializing, and a
+            // degree-1 space is linear-feasible by construction.
+            let pairs = lazy.num_ab_pairs();
+            assert!(lazy.region_views().all(|v| !v.is_materialized()));
+            assert!(lazy.linear_feasible(), "{name}: degree-1 space must be linear-feasible");
+            // Every region's dictionary is exactly one a = 0 row.
+            for rv in lazy.region_views() {
+                let sp = rv.space();
+                assert_eq!(sp.entries.len(), 1, "{name} region {}", rv.r());
+                assert_eq!(sp.entries[0].a, 0, "{name} region {}", rv.r());
+                assert!(sp.linear_ok);
+            }
+            assert_eq!(lazy.num_ab_pairs(), pairs, "{name}: streamed vs materialized");
+            // The pre-envelope oracle agrees byte-for-byte.
+            let naive = generate_naive(&bt, &opts).unwrap();
+            assert_spaces_identical(&lazy, &naive, name);
+            // The linear slice can only need at least the quadratic k.
+            if let Ok(quad) = generate(&bt, &GenOptions { degree: 2, ..opts }) {
+                assert!(lazy.k >= quad.k, "{name}: deg1 k {} < quad k {}", lazy.k, quad.k);
+            }
+        }
+        assert!(checked >= 3, "too few feasible degree-1 cases: {checked}");
+    }
+
+    #[test]
+    fn degree1_sharded_merge_matches_single_node() {
+        let bt = table("sigmoid", 8);
+        let r = (0..=8u32)
+            .find(|&r| {
+                generate(&bt, &GenOptions { lookup_bits: r, degree: 1, ..Default::default() })
+                    .is_ok()
+            })
+            .expect("sigmoid 8-bit degree-1 must be feasible at some R");
+        let opts = GenOptions { lookup_bits: r, degree: 1, ..Default::default() };
+        let oracle = generate_eager(&bt, &opts).unwrap();
+        let n = 1u64 << r;
+        for s in [1usize, 2, 3] {
+            let shards: Vec<ShardAnalysis> = shard_ranges(n, s)
+                .into_iter()
+                .map(|(lo, hi)| analyze_shard(&bt, &opts, lo, hi, None).unwrap())
+                .collect();
+            let k = shards.iter().map(|s| s.min_k).max().unwrap();
+            let dd: u64 = shards.iter().map(|s| s.dd_evals).sum();
+            let regions: Vec<RegionSpace> =
+                shards.iter().flat_map(|s| sweep_shard(s, k, opts.degree)).collect();
+            let merged = merge_shard_spaces(&bt, &opts, k, regions, dd);
+            assert_eq!(merged.degree, 1);
+            assert_spaces_identical(&merged, &oracle, &format!("sigmoid deg1 in {s} shards"));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported generation degree")]
+    fn degree3_is_rejected() {
+        let bt = table("recip", 8);
+        let _ = generate(&bt, &GenOptions { lookup_bits: 4, degree: 3, ..Default::default() });
+    }
+
+    #[test]
     fn sharded_merge_matches_single_node() {
         // The cluster invariant: analyze shards independently, take the
         // max of the shard min-ks, sweep each shard at that common k,
@@ -905,7 +1052,7 @@ mod tests {
                 let k = shards.iter().map(|s| s.min_k).max().unwrap();
                 let dd: u64 = shards.iter().map(|s| s.dd_evals).sum();
                 let regions: Vec<RegionSpace> =
-                    shards.iter().flat_map(|s| sweep_shard(s, k)).collect();
+                    shards.iter().flat_map(|s| sweep_shard(s, k, opts.degree)).collect();
                 let merged = merge_shard_spaces(&bt, &opts, k, regions, dd);
                 let label = format!("{name} in {} shards", ranges.len());
                 assert_eq!(merged.dd_evals, oracle.dd_evals, "{label}: dd_evals");

@@ -518,6 +518,97 @@ pub fn region_feasible_at_k(an: &RegionAnalysis, k: u32) -> bool {
     (a0..=a1).any(|a| b_interval_from(&mut lo_cur, &mut hi_cur, k, a).is_some())
 }
 
+/// Real feasibility of a *degree-1* (forced `a = 0`) polynomial on the
+/// region: `max_t M(t) < min_t m(t)`, i.e. one real `b` satisfies every
+/// Eqn 3/4 diagonal constraint at once.
+///
+/// Strictly stronger than [`RegionAnalysis::feasible`] (it implies Eqn 9
+/// per-diagonal and `A_lo < 0 < A_hi` in Eqn 10), and `k`-independent:
+/// when it holds an integer `b` exists for large enough `k`, when it
+/// fails no `k` helps — which is what lets the degree-1 generator
+/// classify failures as `InfeasibleRegion` vs `KExhausted` exactly like
+/// the quadratic path.
+pub fn linear_feasible_real(an: &RegionAnalysis) -> bool {
+    let Some(diag) = an.diag.as_ref() else {
+        return an.n < 2; // degenerate region: any b works
+    };
+    let mut max_m = &diag.big_m[0];
+    for v in &diag.big_m[1..] {
+        if max_m.lt(v) {
+            max_m = v;
+        }
+    }
+    let mut min_s = &diag.small_m[0];
+    for v in &diag.small_m[1..] {
+        if v.lt(min_s) {
+            min_s = v;
+        }
+    }
+    max_m.lt(min_s)
+}
+
+/// Degree-1 slice of the region's space at `k`: the `a = 0` row of
+/// [`region_space_at_k`], or `None` when no integer `b` exists (or the
+/// region is not linearly feasible in real arithmetic). The returned
+/// entry is bit-identical to the quadratic sweep's `a = 0` entry at the
+/// same `k` — both evaluate the same envelope fraction — which is what
+/// keeps degree-1 results byte-identical wherever the DSE previously
+/// *chose* a linear implementation out of the quadratic space.
+pub fn region_space_at_k_deg1(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
+    if !an.feasible || !linear_feasible_real(an) {
+        return None;
+    }
+    if an.n < 2 {
+        let entries = vec![AbEntry { a: 0, b_lo: -DEGENERATE_A_CLAMP, b_hi: DEGENERATE_A_CLAMP }];
+        return Some(RegionSpace { r: an.r, k, entries, linear_ok: true });
+    }
+    let (a0, a1) = a_range_at_k(an, k);
+    if !(a0 <= 0 && 0 <= a1) {
+        return None;
+    }
+    let (b_lo, b_hi) = b_range_at_env(an, k, 0)?;
+    let entries = vec![AbEntry { a: 0, b_lo, b_hi }];
+    Some(RegionSpace { r: an.r, k, entries, linear_ok: true })
+}
+
+/// Diagonal-rescan oracle for [`region_space_at_k_deg1`]
+/// (property-tested identical).
+pub fn region_space_at_k_deg1_naive(an: &RegionAnalysis, k: u32) -> Option<RegionSpace> {
+    if !an.feasible || !linear_feasible_real(an) {
+        return None;
+    }
+    if an.n < 2 {
+        let entries = vec![AbEntry { a: 0, b_lo: -DEGENERATE_A_CLAMP, b_hi: DEGENERATE_A_CLAMP }];
+        return Some(RegionSpace { r: an.r, k, entries, linear_ok: true });
+    }
+    let (a0, a1) = a_range_at_k(an, k);
+    if !(a0 <= 0 && 0 <= a1) {
+        return None;
+    }
+    let (b_lo, b_hi) = b_range_at(an, k, 0)?;
+    let entries = vec![AbEntry { a: 0, b_lo, b_hi }];
+    Some(RegionSpace { r: an.r, k, entries, linear_ok: true })
+}
+
+/// Smallest `k <= max_k` at which the region admits an integer `(0, b, c)`
+/// — the degree-1 counterpart of [`min_feasible_k`]. Monotone in `k` for
+/// the same doubling reason, so the same exponential-probe search applies
+/// with [`linear_ok_at_k`] as the existence predicate.
+pub fn min_feasible_k_deg1(an: &RegionAnalysis, max_k: u32) -> Option<u32> {
+    if !an.feasible || !linear_feasible_real(an) {
+        return None;
+    }
+    min_monotone(max_k, |k| linear_ok_at_k(an, k))
+}
+
+/// Linear-scan oracle for [`min_feasible_k_deg1`].
+pub fn min_feasible_k_deg1_naive(an: &RegionAnalysis, max_k: u32) -> Option<u32> {
+    if !an.feasible || !linear_feasible_real(an) {
+        return None;
+    }
+    (0..=max_k).find(|&k| region_space_at_k_deg1_naive(an, k).is_some())
+}
+
 /// Smallest `v in [0, cap]` with `pred(v)` true, for a monotone predicate
 /// (`false.. false true.. true`); `None` when even `cap` fails.
 /// Exponential probe upward, then bisection of the bracket — shared by
@@ -785,6 +876,76 @@ mod tests {
                     );
                 }
             }
+        });
+    }
+
+    #[test]
+    fn deg1_space_matches_naive_and_quadratic_a0_row() {
+        for_each_seed(60, |rng| {
+            let n = 1 + rng.below(30) as usize;
+            let (l, u) =
+                if rng.bool() { quadratic_bounds(rng, n) } else { zigzag_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            for k in 0..=8u32 {
+                let env = region_space_at_k_deg1(&an, k);
+                let naive = region_space_at_k_deg1_naive(&an, k);
+                match (&env, &naive) {
+                    (None, None) => {}
+                    (Some(e), Some(nv)) => {
+                        assert_eq!(e.entries, nv.entries, "k={k} l={l:?} u={u:?}");
+                        assert!(e.linear_ok && e.entries.len() == 1 && e.entries[0].a == 0);
+                    }
+                    _ => panic!("deg1 engines disagree at k={k} l={l:?} u={u:?}"),
+                }
+                // The degree-1 space is exactly the a = 0 row of the
+                // quadratic space (both present or both absent).
+                let quad_a0 = region_space_at_k(&an, k)
+                    .and_then(|s| s.entries.iter().find(|e| e.a == 0).copied());
+                assert_eq!(
+                    env.map(|s| s.entries[0]),
+                    quad_a0,
+                    "deg1 vs quadratic a=0 row at k={k} l={l:?} u={u:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn deg1_k_search_matches_naive_and_dominates_quadratic() {
+        for_each_seed(60, |rng| {
+            let n = 3 + rng.below(24) as usize;
+            let (l, u) =
+                if rng.below(3) == 0 { zigzag_bounds(rng, n) } else { quadratic_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            for max_k in [0u32, 1, 3, 10] {
+                let fast = min_feasible_k_deg1(&an, max_k);
+                assert_eq!(
+                    fast,
+                    min_feasible_k_deg1_naive(&an, max_k),
+                    "max_k={max_k} l={l:?} u={u:?}"
+                );
+                // Restricting to a = 0 can only raise the minimal k.
+                if let (Some(k1), Some(k2)) = (fast, min_feasible_k(&an, max_k)) {
+                    assert!(k1 >= k2, "deg1 k={k1} < quadratic k={k2}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn linear_feasible_real_is_k_independent_existence() {
+        // When linear real feasibility holds, some k admits an integer b;
+        // when it fails, no k ever does.
+        for_each_seed(40, |rng| {
+            let n = 2 + rng.below(20) as usize;
+            let (l, u) =
+                if rng.bool() { quadratic_bounds(rng, n) } else { zigzag_bounds(rng, n) };
+            let an = analyze_region(0, &l, &u, SearchStrategy::Hull, None);
+            if !an.feasible {
+                return;
+            }
+            let any_k = (0..=30u32).any(|k| linear_ok_at_k(&an, k));
+            assert_eq!(linear_feasible_real(&an), any_k, "l={l:?} u={u:?}");
         });
     }
 

@@ -5,12 +5,12 @@
 //! flags ([`polygen::cli`]) and formats stage artifacts.
 //!
 //! ```text
-//! polygen generate --func recip --bits 16 --lub 8 [--naive|--pruned] [--threads N] [--cache DIR]
+//! polygen generate --func recip --bits 16 --lub 8 [--degree 1|2] [--naive|--pruned] [--threads N] [--cache DIR]
 //! polygen dse      --func recip --bits 16 --lub 8 [--quadratic|--linear] [--procedure P]
 //! polygen rtl      --func recip --bits 10 --lub 5 --out DIR [--tb]
 //! polygen verify   --func recip --bits 16 --lub 8 [--engine scalar|xla|pallas] [--artifacts DIR]
 //! polygen sweep    --func log2  --bits 10 [--threads N]
-//! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear|tech> [--deep] [--out DIR]
+//! polygen report   <table1|table2|fig2|fig3|claim|scaling|linear|tech|activations> [--deep] [--out DIR]
 //! polygen config   --file job.toml [--set key=value ...]
 //! polygen batch    job1.toml job2.toml ... [--threads N] [--cache DIR] [--threads-strict]
 //! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR] [--state DIR]
@@ -75,6 +75,13 @@ fn pipeline_from(args: &Args) -> Result<Pipeline, String> {
         .max_k(args.u32_or("max-k", 30))
         .threads(args.u32_or("threads", 1) as usize)
         .max_b_per_a(args.u32_or("max-b", 512) as usize);
+    // Generation degree: 2 (default) is the paper's complete quadratic
+    // space, 1 generates only the linear b·x + c slice.
+    let degree = args.u32_or("degree", 2);
+    if degree != 1 && degree != 2 {
+        return Err(format!("bad degree {degree} (use 1 or 2)"));
+    }
+    p = p.gen_degree(degree);
     p = match args.get("lub") {
         Some("auto") => p.auto_lub(match args.get("objective") {
             // No explicit objective: the technology's own default (e.g.
@@ -301,6 +308,7 @@ fn run() -> Result<(), String> {
                     .iter()
                     .map(|f| report::linear_threshold(f, 10))
                     .collect::<String>(),
+                "activations" => report::activations(&[8, 12, 16], if deep { 16 } else { 14 }),
                 other => return Err(format!("unknown report {other}")),
             };
             println!("{text}");

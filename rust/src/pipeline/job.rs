@@ -40,6 +40,11 @@ pub struct JobSpec {
     pub bits: u32,
     pub accuracy: AccuracySpec,
     pub lookup: LookupBits,
+    /// Generation degree (`generate.degree`, default 2): 2 generates the
+    /// complete quadratic space, 1 only the linear `b·x + c` slice.
+    /// Distinct from `degree` below, which picks the interpolator within
+    /// the generated space.
+    pub gen_degree: u32,
     pub degree: Option<Degree>,
     /// Forced procedure; `None` (`procedure = auto`) = the technology's
     /// default ordering.
@@ -79,6 +84,7 @@ impl JobSpec {
             bits,
             accuracy: s.accuracy,
             lookup: s.lookup,
+            gen_degree: s.gen_degree,
             degree: s.degree,
             procedure: s.procedure,
             tech: s.tech,
@@ -106,6 +112,7 @@ impl JobSpec {
             .bits(self.bits)
             .accuracy(self.accuracy)
             .lookup_bits(self.lookup)
+            .gen_degree(self.gen_degree)
             .technology(self.tech)
             .search(self.search)
             .max_k(self.max_k)
@@ -221,6 +228,12 @@ impl JobSpec {
                 other => return Err(spec_err(format!("generate.search: {other}"))),
             };
         }
+        if let Some(v) = cfg.get_u32("generate.degree").map_err(spec_err)? {
+            if v != 1 && v != 2 {
+                return Err(spec_err(format!("generate.degree: {v} (use 1 or 2)")));
+            }
+            s.gen_degree = v;
+        }
         if let Some(v) = cfg.get_u32("generate.max_k").map_err(spec_err)? {
             s.max_k = v;
         }
@@ -277,6 +290,11 @@ impl JobSpec {
                 SearchStrategy::Naive => "naive",
             }
         ));
+        // Only a non-default degree is spelled out, so pre-degree job
+        // files and the service store's canonical keys are unchanged.
+        if self.gen_degree != 2 {
+            out.push_str(&format!("degree = {}\n", self.gen_degree));
+        }
         out.push_str(&format!("max_k = {}\n", self.max_k));
         out.push_str(&format!("threads = {}\n", self.threads));
         out.push_str(&format!("threads_strict = {}\n\n", self.threads_strict));
@@ -471,6 +489,7 @@ mod tests {
             bits: 12,
             accuracy: AccuracySpec::Faithful,
             lookup: LookupBits::Auto(LubObjective::Delay),
+            gen_degree: 1,
             degree: Some(Degree::Quadratic),
             procedure: Some(Procedure::LutFirst),
             tech: TechKind::FpgaLut6,
@@ -485,6 +504,26 @@ mod tests {
         let text = spec.to_toml();
         let back = JobSpec::from_toml(&text).unwrap();
         assert_eq!(spec, back, "round-trip through:\n{text}");
+    }
+
+    #[test]
+    fn gen_degree_roundtrips_and_default_stays_implicit() {
+        // The default degree never appears in [generate] — pre-degree job
+        // files and the service store's canonical keys are unchanged.
+        let spec = JobSpec::new("tanh", 12);
+        assert_eq!(spec.gen_degree, 2);
+        let text = spec.to_toml();
+        let cfg = Config::parse(&text).unwrap();
+        assert!(cfg.get("generate.degree").is_none(), "default degree leaked into:\n{text}");
+        // A linear-slice job spells it out and round-trips.
+        let mut spec = spec;
+        spec.gen_degree = 1;
+        let text = spec.to_toml();
+        assert!(text.contains("degree = 1\n"), "{text}");
+        assert_eq!(JobSpec::from_toml(&text).unwrap(), spec);
+        // Hand-written form parses too.
+        let parsed = JobSpec::from_toml("func = tanh\n[generate]\ndegree = 1\n").unwrap();
+        assert_eq!(parsed.gen_degree, 1);
     }
 
     #[test]
@@ -575,6 +614,8 @@ mod tests {
             "tech = tpu\n",
             "[generate]\nlookup_bits = many\n",
             "[generate]\nsearch = exhaustive\n",
+            "[generate]\ndegree = 3\n",
+            "[generate]\ndegree = linear\n",
             "[dse]\ndegree = cubic\n",
             "[dse]\nprocedure = random\n",
             "[job]\nverify = maybe\n",

@@ -107,7 +107,9 @@ pub fn shutdown() {
 
 // Re-exports: everything a pipeline caller needs, so `main.rs`, the
 // examples and the benches compile against `polygen::pipeline` alone.
-pub use crate::bounds::{builtin, AccuracySpec, BoundTable, CustomF64, TargetFunction};
+pub use crate::bounds::{
+    builtin, AccuracySpec, BoundTable, CustomF64, Gelu, Sigmoid, Softplus, Tanh, TargetFunction,
+};
 pub use crate::coordinator::config::Config;
 pub use crate::coordinator::{LubObjective, SweepPoint};
 pub use crate::designspace::extrema::SearchStrategy;
@@ -295,6 +297,11 @@ struct Settings {
     bits: u32,
     accuracy: AccuracySpec,
     lookup: LookupBits,
+    /// Generation degree (the [`GenOptions::degree`] knob): 2 enumerates
+    /// the full quadratic space, 1 generates only the linear slice.
+    /// Distinct from `degree` below, which picks the interpolator *within*
+    /// whatever space was generated.
+    gen_degree: u32,
     degree: Option<Degree>,
     /// Forced procedure; `None` = the technology's default ordering.
     procedure: Option<Procedure>,
@@ -321,6 +328,7 @@ impl Default for Settings {
             bits: 10,
             accuracy: AccuracySpec::Ulp(1),
             lookup: LookupBits::Fixed(gen.lookup_bits),
+            gen_degree: gen.degree,
             degree: dse.degree,
             procedure: dse.procedure,
             tech: dse.tech,
@@ -344,6 +352,7 @@ impl Settings {
             search: self.search,
             max_k: self.max_k,
             threads: self.threads,
+            degree: self.gen_degree,
         }
     }
 
@@ -457,6 +466,16 @@ impl Pipeline {
     /// Force the interpolator degree (default: linear iff feasible).
     pub fn degree(mut self, degree: Degree) -> Self {
         self.settings.degree = Some(degree);
+        self
+    }
+
+    /// Polynomial degree of the *generated* space (default 2): 2 is the
+    /// paper's complete quadratic space, 1 generates only the linear
+    /// `b·x + c` slice at its own minimal `k` (see
+    /// [`GenOptions::degree`]). Panics on any other value when the
+    /// pipeline generates.
+    pub fn gen_degree(mut self, degree: u32) -> Self {
+        self.settings.gen_degree = degree;
         self
     }
 
@@ -1044,6 +1063,35 @@ mod tests {
             Err(PipelineError::Cancelled) => {}
             other => panic!("expected Cancelled, got ok={}", other.is_ok()),
         }
+    }
+
+    #[test]
+    fn gen_degree_flows_through_and_verifies() {
+        // Spelling out the default degree changes nothing.
+        let quad = Pipeline::function("recip").bits(8).lub(4).run().unwrap();
+        let explicit = Pipeline::function("recip").bits(8).lub(4).gen_degree(2).run().unwrap();
+        assert_eq!(quad.implementation.coeffs, explicit.implementation.coeffs);
+        assert_eq!(explicit.space.degree, 2);
+
+        // The linear slice of an activation workload: find a feasible R,
+        // run end to end, and check the space really is the a = 0 slice.
+        let r = (0..=8u32)
+            .find(|&r| {
+                Pipeline::function("tanh")
+                    .bits(8)
+                    .lub(r)
+                    .gen_degree(1)
+                    .prepare()
+                    .unwrap()
+                    .generate()
+                    .is_ok()
+            })
+            .expect("tanh 8-bit degree-1 must be feasible at some R");
+        let lin = Pipeline::function("tanh").bits(8).lub(r).gen_degree(1).run().unwrap();
+        assert!(lin.report.ok());
+        assert_eq!(lin.space.degree, 1);
+        assert!(lin.space.linear_feasible());
+        assert!(lin.implementation.coeffs.iter().all(|c| c.a == 0));
     }
 
     #[test]

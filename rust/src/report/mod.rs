@@ -11,7 +11,7 @@ use crate::baselines::flopoco::flopoco_like;
 use crate::bounds::AccuracySpec;
 use crate::coordinator::{default_r_range, LubObjective, Workload};
 use crate::designspace::extrema::SearchStrategy;
-use crate::designspace::{generate, generate_eager, GenOptions};
+use crate::designspace::{generate, generate_eager, min_lookup_bits, GenOptions};
 use crate::dse::{explore, Degree, DseOptions};
 use crate::pipeline::Pipeline;
 use crate::synth::{sweep as synth_sweep, synth_min_delay_with};
@@ -420,6 +420,99 @@ pub fn linear_threshold(name: &str, bits: u32) -> String {
     format!("{name} {bits}-bit: linear never feasible in the default sweep range\n")
 }
 
+/// Piecewise-segment counts from the FQA non-uniform activation
+/// catalog (arXiv:2606.05627) at matching input/output widths.
+/// **Transcribed reference constants**, not computed here: FQA places
+/// segment breakpoints non-uniformly, so its counts lower-bound what any
+/// uniform-addressing scheme (ours) can reach.
+fn fqa_segments(func: &str, bits: u32) -> Option<u32> {
+    match (func, bits) {
+        ("tanh", 8) => Some(8),
+        ("tanh", 12) => Some(32),
+        ("tanh", 16) => Some(96),
+        ("sigmoid", 8) => Some(6),
+        ("sigmoid", 12) => Some(24),
+        ("sigmoid", 16) => Some(80),
+        ("gelu", 8) => Some(10),
+        ("gelu", 12) => Some(40),
+        ("gelu", 16) => Some(112),
+        ("softplus", 8) => Some(8),
+        ("softplus", 12) => Some(28),
+        ("softplus", 16) => Some(88),
+        _ => None,
+    }
+}
+
+/// ACTIVATIONS — the activation-function workload suite vs the FQA
+/// segment catalog. For every function and precision: the smallest LUT
+/// height whose complete *quadratic* space exists (with its common `k`
+/// and streamed `(a, b)`-pair count), the smallest height whose *linear*
+/// slice exists (`degree = 1` generation), and the FQA reference segment
+/// count at the same spec. The ratio is uniform linear regions over
+/// FQA's non-uniform segments — the addressing cost of a plain
+/// truncate-the-input LUT index.
+pub fn activations(specs: &[u32], r_max: u32) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "ACTIVATIONS — complete-space minima vs the FQA segment catalog (arXiv:2606.05627)"
+    );
+    let _ = writeln!(
+        out,
+        "{:<9} {:>4} | {:>5} {:>8} {:>3} {:>12} | {:>5} {:>8} | {:>8} {:>6}",
+        "func", "bits", "R2", "regions", "k", "(a,b) pairs", "R1", "regions", "FQA seg", "ratio"
+    );
+    let dash = || "-".to_string();
+    for &func in &["tanh", "sigmoid", "gelu", "softplus"] {
+        for &bits in specs {
+            let Some(w) = Workload::prepare(func, bits, AccuracySpec::Ulp(1)) else {
+                continue;
+            };
+            let cap = r_max.min(bits);
+            let quad = GenOptions::default();
+            let lin = GenOptions { degree: 1, ..quad };
+            let r2 = min_lookup_bits(&w.bt, &quad, cap);
+            let r1 = min_lookup_bits(&w.bt, &lin, cap);
+            let (regions2, k2, pairs2) = match r2 {
+                Some(r) => {
+                    let ds = generate(&w.bt, &GenOptions { lookup_bits: r, ..quad })
+                        .expect("minimal R probed feasible");
+                    (ds.num_regions().to_string(), ds.k.to_string(), ds.num_ab_pairs().to_string())
+                }
+                None => (dash(), dash(), dash()),
+            };
+            let regions1 = r1.map_or_else(dash, |r| (1u64 << r).to_string());
+            let (fqa, ratio) = match (fqa_segments(func, bits), r1) {
+                (Some(s), Some(r)) => {
+                    (s.to_string(), format!("{:.2}", (1u64 << r) as f64 / s as f64))
+                }
+                (Some(s), None) => (s.to_string(), dash()),
+                _ => (dash(), dash()),
+            };
+            let _ = writeln!(
+                out,
+                "{:<9} {:>4} | {:>5} {:>8} {:>3} {:>12} | {:>5} {:>8} | {:>8} {:>6}",
+                func,
+                bits,
+                r2.map_or_else(dash, |r| r.to_string()),
+                regions2,
+                k2,
+                pairs2,
+                r1.map_or_else(dash, |r| r.to_string()),
+                regions1,
+                fqa,
+                ratio
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "(R2/R1 = minimal LUT height for the quadratic space / linear slice; FQA counts are\n\
+         transcribed non-uniform-segment references, so ratio > 1 is the uniform-addressing cost)"
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,5 +553,18 @@ mod tests {
     fn linear_threshold_found_for_recip8() {
         let s = linear_threshold("recip", 8);
         assert!(s.contains("linear feasible"), "{s}");
+    }
+
+    #[test]
+    fn activations_report_renders_every_workload_and_reference() {
+        let t = activations(&[8], 8);
+        for f in ["tanh", "sigmoid", "gelu", "softplus"] {
+            assert!(t.contains(f), "missing {f}:\n{t}");
+        }
+        assert!(t.contains("2606.05627"), "{t}");
+        // 8-bit activations must be feasible somewhere in 0..=8 for both
+        // degrees: no dashes in the tanh row.
+        let tanh_row = t.lines().find(|l| l.starts_with("tanh")).unwrap();
+        assert!(!tanh_row.contains('-'), "infeasible cell in: {tanh_row}");
     }
 }

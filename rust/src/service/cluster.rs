@@ -223,9 +223,16 @@ fn search_label(s: SearchStrategy) -> &'static str {
 /// The `POST /shards` body: the generation-affecting spec fields plus
 /// the `[shard]` range.
 fn shard_request(bt: &BoundTable, opts: &GenOptions, lo: u64, hi: u64) -> String {
+    // The default degree stays implicit (the `to_toml` idiom), so
+    // degree-2 request bodies are byte-identical to the pre-degree wire.
+    let degree = if opts.degree != 2 {
+        format!("degree = {}\n", opts.degree)
+    } else {
+        String::new()
+    };
     format!(
         "func = {}\nbits = {}\naccuracy = {}\n\n[generate]\nlookup_bits = {}\n\
-         search = {}\nmax_k = {}\nthreads = {}\n\n[shard]\nlo = {lo}\nhi = {hi}\n",
+         {degree}search = {}\nmax_k = {}\nthreads = {}\n\n[shard]\nlo = {lo}\nhi = {hi}\n",
         bt.func,
         bt.in_bits,
         bt.accuracy,
@@ -253,6 +260,7 @@ fn parse_shard_request(text: &str) -> Result<(BoundTable, GenOptions, u64, u64),
         search: spec.search,
         max_k: spec.max_k,
         threads: spec.threads,
+        degree: spec.gen_degree,
     };
     if !(lo < hi && hi <= (1u64 << lookup_bits)) {
         return Err(format!("shard {lo}..{hi} out of range for R={lookup_bits}"));
@@ -389,6 +397,9 @@ struct ShardEntry {
     cancel: CancelToken,
     state: Mutex<ShardState>,
     cv: Condvar,
+    /// Generation degree the shard was analyzed at; the sweep must
+    /// enumerate the same slice.
+    degree: u32,
 }
 
 /// The worker-side shard registry every service carries (any `polygen
@@ -409,6 +420,7 @@ impl ShardServer {
             cancel: CancelToken::new(),
             state: Mutex::new(ShardState::Analyzing),
             cv: Condvar::new(),
+            degree: opts.degree,
         });
         plock(&self.shards).insert(id, Arc::clone(&entry));
         let worker = Arc::clone(&entry);
@@ -519,7 +531,7 @@ impl ShardServer {
                     if k < sa.min_k {
                         return Err(bad(&format!("k={k} below shard minimum {}", sa.min_k)));
                     }
-                    let regions = sweep_shard(sa, k);
+                    let regions = sweep_shard(sa, k, entry.degree);
                     return Ok(encode_pgsh(sa.lo, sa.hi, k, sa.dd_evals, &regions));
                 }
             }
@@ -882,7 +894,7 @@ impl Cluster {
             match &slots[i] {
                 Slot::Local(sa) => {
                     dd_evals += sa.dd_evals;
-                    regions.extend(sweep_shard(sa, k));
+                    regions.extend(sweep_shard(sa, k, opts.degree));
                 }
                 Slot::RemoteDone(worker, remote, _, dd) => {
                     let body = format!("k = {k}\n");
@@ -919,7 +931,7 @@ impl Cluster {
                             match analyze_shard(bt, opts, lo, hi, cancel) {
                                 Ok(sa) => {
                                     dd_evals += sa.dd_evals;
-                                    regions.extend(sweep_shard(&sa, k));
+                                    regions.extend(sweep_shard(&sa, k, opts.degree));
                                 }
                                 Err(e) => {
                                     self.release(&slot_remotes(&slots), auth);

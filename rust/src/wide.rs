@@ -186,6 +186,44 @@ pub fn div_u256_by_u128(v: U256, d: u128) -> u128 {
     quo
 }
 
+/// Exact `v * f` for a `u64` factor, panicking on 256-bit overflow.
+///
+/// The GELU erf-series accumulation multiplies Q.160 terms by `z²`
+/// (`< 2^32` at 16-bit operands); the widest product stays under `2^205`,
+/// so the checked high-limb arithmetic never fires in practice — it is
+/// the overflow-lint-mandated guard, not a saturation contract.
+pub fn mul_u256_by_u64(v: U256, f: u64) -> U256 {
+    let p = U256::mul_u128(v.lo, f as u128);
+    let hi = v
+        .hi
+        .checked_mul(f as u128)
+        .and_then(|h| h.checked_add(p.hi))
+        .expect("mul_u256_by_u64 overflow");
+    U256 { hi, lo: p.lo }
+}
+
+/// Exact `floor(v / d)` for a `u64` divisor, returning the full 256-bit
+/// quotient (unlike [`div_u256_by_u128`], which saturates to `u128`).
+///
+/// Schoolbook long division over four 64-bit limbs: the rolling remainder
+/// stays `< d < 2^64`, so `(rem << 64) | limb` fits `u128` and each limb
+/// quotient fits `u64`.
+// lint: overflow-ok(rem < d <= 2^64 - 1, so (rem << 64) | limb < 2^128 and cur / d < 2^64)
+pub fn div_u256_by_u64(v: U256, d: u64) -> U256 {
+    assert!(d != 0, "division by zero");
+    const MASK: u128 = (1u128 << 64) - 1;
+    let limbs = [v.hi >> 64, v.hi & MASK, v.lo >> 64, v.lo & MASK];
+    let d = d as u128;
+    let mut rem: u128 = 0;
+    let mut q = [0u128; 4];
+    for (i, &limb) in limbs.iter().enumerate() {
+        let cur = (rem << 64) | limb;
+        q[i] = cur / d;
+        rem = cur % d;
+    }
+    U256 { hi: (q[0] << 64) | q[1], lo: (q[2] << 64) | q[3] }
+}
+
 /// Sign of `a*b` without multiplying (`-1`, `0`, or `1`).
 fn prod_sign(a: i128, b: i128) -> i32 {
     if a == 0 || b == 0 {

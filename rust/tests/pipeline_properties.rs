@@ -22,7 +22,9 @@ fn exhaustive_ok(bt: &BoundTable, im: &polygen::dse::Implementation) -> bool {
 #[test]
 fn grid_every_design_verifies_and_simulates() {
     let mut checked = 0;
-    for name in ["recip", "log2", "exp2", "sqrt"] {
+    for name in
+        ["recip", "log2", "exp2", "sqrt", "tanh", "sigmoid", "gelu", "softplus"]
+    {
         for bits in [8u32, 10, 12] {
             let f = builtin(name, bits).unwrap();
             let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
@@ -55,7 +57,9 @@ fn grid_every_design_verifies_and_simulates() {
 #[test]
 fn grid_lazy_views_equal_eager_oracle() {
     let mut checked = 0;
-    for name in ["recip", "log2", "exp2", "sqrt"] {
+    for name in
+        ["recip", "log2", "exp2", "sqrt", "tanh", "sigmoid", "gelu", "softplus"]
+    {
         for bits in [8u32, 10, 12] {
             let f = builtin(name, bits).unwrap();
             let bt = BoundTable::build(f.as_ref(), AccuracySpec::Ulp(1));
