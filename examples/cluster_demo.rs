@@ -2,7 +2,10 @@
 //! shard workers on ephemeral ports, a worker agent registering each
 //! worker (what `polygen serve --worker --coordinator <url>` runs), one
 //! sharded generation job — and proof that the merged result is
-//! identical to a single-node run. This is the CI cluster smoke test.
+//! identical to a single-node run. Then the chaos leg: one worker is
+//! killed, a second job must still come back correct, and a `/metrics`
+//! scrape must show the dispatch and failure machinery firing. This is
+//! the CI cluster smoke test.
 //!
 //! ```text
 //! cargo run --release --example cluster_demo
@@ -31,6 +34,16 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String)
     let code = raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
     let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
     (code, body)
+}
+
+/// Read one sample from a Prometheus text scrape (`name value` lines;
+/// `# HELP` / `# TYPE` lines never match because of the exact prefix).
+fn prom_value(scrape: &str, name: &str) -> u64 {
+    scrape
+        .lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("{name} missing from /metrics scrape:\n{scrape}"))
 }
 
 fn main() {
@@ -90,6 +103,32 @@ fn main() {
     assert_eq!(via_cluster.implementation.k, direct.implementation.k);
     assert_eq!(via_cluster.synth.delay_ns, direct.synth.delay_ns);
     println!("merged sharded result is identical to single-node: ok");
+
+    // Chaos leg: kill one worker's server (its agent keeps heartbeating,
+    // so the coordinator still dispatches to it and hits refused
+    // connections). The job must still come back bit-identical, and the
+    // failure machinery must leave a visible trail in /metrics.
+    workers.remove(1).stop();
+    let t1 = Instant::now();
+    let degraded_run =
+        coord_svc.submit(spec.clone()).wait().expect("recip 10b R=5 feasible with a dead worker");
+    assert_eq!(degraded_run.implementation.coeffs, direct.implementation.coeffs);
+    println!("one-dead-worker run is still correct ({:?})", t1.elapsed());
+
+    let (code, scrape) = http(coord.addr(), "GET", "/metrics", "");
+    assert_eq!(code, 200, "{scrape}");
+    if polygen::obs::metrics::COMPILED {
+        let dispatched = prom_value(&scrape, "polygen_cluster_shards_dispatched_total");
+        let calls = prom_value(&scrape, "polygen_net_calls_total");
+        let recovery = prom_value(&scrape, "polygen_net_call_failures_total")
+            + prom_value(&scrape, "polygen_net_retries_total")
+            + prom_value(&scrape, "polygen_cluster_shards_reassigned_total")
+            + prom_value(&scrape, "polygen_cluster_degraded_total");
+        assert!(dispatched > 0, "no shards dispatched\n{scrape}");
+        assert!(calls > 0, "no policy-wrapped calls recorded\n{scrape}");
+        assert!(recovery > 0, "dead worker left no failure trail in /metrics\n{scrape}");
+        println!("metrics: dispatched={dispatched} calls={calls} recovery_events={recovery}");
+    }
 
     stop.store(true, Ordering::Relaxed);
     for agent in agents {

@@ -16,7 +16,12 @@ use crate::designspace::extrema::SearchStrategy;
 use crate::designspace::region::{AbEntry, RegionSpace};
 use crate::designspace::{DesignSpace, GenOptions};
 use crate::faults::{self, Fault};
+use crate::obs::metrics;
 use crate::service::store::crc32;
+
+const CACHE_HITS: metrics::Counter = metrics::counter("cache.hits");
+const CACHE_MISSES: metrics::Counter = metrics::counter("cache.misses");
+const CACHE_QUARANTINED: metrics::Counter = metrics::counter("cache.quarantined");
 
 const MAGIC: &[u8; 4] = b"PGDS";
 /// v4 stores the generation degree after `k` (the degree-1 linear slice
@@ -257,7 +262,10 @@ pub enum CacheLoad {
 pub fn load_checked(path: &Path) -> CacheLoad {
     let mut buf = match std::fs::read(path) {
         Ok(b) => b,
-        Err(_) => return CacheLoad::Miss,
+        Err(_) => {
+            CACHE_MISSES.inc();
+            return CacheLoad::Miss;
+        }
     };
     match faults::inject("cache.load", &[Fault::Corrupt, Fault::Truncate]) {
         Some(Fault::Corrupt) if !buf.is_empty() => {
@@ -272,9 +280,16 @@ pub fn load_checked(path: &Path) -> CacheLoad {
         _ => {}
     }
     match decode(&buf) {
-        Decoded::Ok(ds) => CacheLoad::Hit(ds),
-        Decoded::Stale(_) => CacheLoad::Miss,
+        Decoded::Ok(ds) => {
+            CACHE_HITS.inc();
+            CacheLoad::Hit(ds)
+        }
+        Decoded::Stale(_) => {
+            CACHE_MISSES.inc();
+            CacheLoad::Miss
+        }
         Decoded::Corrupt(why) => {
+            CACHE_QUARANTINED.inc();
             let mut q = path.as_os_str().to_owned();
             q.push(".quarantined");
             let q = PathBuf::from(q);

@@ -12,6 +12,8 @@ pub mod config;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::bounds::{builtin, AccuracySpec, BoundTable, TargetFunction};
 use crate::designspace::{generate_ticks, DesignSpace, GenError, GenOptions};
 use crate::pool::{CancelToken, Progress};
@@ -269,15 +271,42 @@ pub fn generate_cached_ctrl(
     cancel: Option<&CancelToken>,
     ticks: Option<&Progress>,
 ) -> Result<DesignSpace, GenError> {
+    generate_cached_rec(w, r, gen, dir, cancel, ticks, None)
+}
+
+/// [`generate_cached_ctrl`] with an optional recovery counter: a
+/// quarantined `.pgds` (integrity-check failure, renamed aside and
+/// regenerated over) bumps it, so a service job can report how many
+/// recoveries it absorbed next to its `degraded` flag
+/// ([`crate::pipeline::JobCtrl::recovered`]).
+pub(crate) fn generate_cached_rec(
+    w: &Workload,
+    r: u32,
+    gen: &GenOptions,
+    dir: &Path,
+    cancel: Option<&CancelToken>,
+    ticks: Option<&Progress>,
+    recovered: Option<&AtomicUsize>,
+) -> Result<DesignSpace, GenError> {
     let opts = GenOptions { lookup_bits: r, ..*gen };
     let path = cache::cache_path(dir, &w.bt.func, &w.bt.accuracy, w.bt.in_bits, &opts);
-    if let Ok(ds) = cache::load(&path) {
-        if ds.in_bits == w.bt.in_bits && ds.out_bits == w.bt.out_bits {
+    match cache::load_checked(&path) {
+        cache::CacheLoad::Hit(ds)
+            if ds.in_bits == w.bt.in_bits && ds.out_bits == w.bt.out_bits =>
+        {
             if let Some(p) = ticks {
                 p.add(1usize << r);
             }
             return Ok(ds);
         }
+        cache::CacheLoad::Quarantined(_) => {
+            if let Some(n) = recovered {
+                n.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // A dimension-mismatched hit, a plain miss, or a stale version:
+        // regenerate (the save below overwrites the entry).
+        _ => {}
     }
     let ds = generate_ticks(&w.bt, &opts, cancel, ticks)?;
     // The `.pgds` format stores the full dictionaries, so a miss pays

@@ -128,6 +128,13 @@ static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
 /// anything.
 static INJECTED: AtomicU64 = AtomicU64::new(0);
 
+/// The same fire events, exported through the observability registry so
+/// a chaos build's `/metrics` shows fault pressure next to the breaker
+/// and quarantine counters ([`INJECTED`] stays the resettable
+/// test-facing counter; this one is monotone like every metric).
+#[cfg(feature = "fault-injection")]
+const FIRED: crate::obs::metrics::Counter = crate::obs::metrics::counter("faults.injected");
+
 #[cfg(feature = "fault-injection")]
 fn draw(rng: &mut u64) -> u64 {
     // xorshift64*: deterministic, dependency-free, good enough to
@@ -229,6 +236,7 @@ pub fn inject(site: &'static str, allowed: &[Fault]) -> Option<Fault> {
         let pick = draw(&mut armed.rng);
         let fault = allowed[(pick % allowed.len() as u64) as usize];
         INJECTED.fetch_add(1, Ordering::Relaxed);
+        FIRED.inc();
         Some(fault)
     }
     #[cfg(not(feature = "fault-injection"))]

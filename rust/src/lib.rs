@@ -25,6 +25,7 @@ pub mod designspace;
 pub mod dse;
 pub mod faults;
 pub mod net;
+pub mod obs;
 pub mod pipeline;
 pub mod pool;
 pub mod rtl;

@@ -16,8 +16,9 @@
 //! polygen serve    [--port 7878] [--addr 127.0.0.1] [--jobs N] [--cache DIR] [--state DIR]
 //!                  [--auth-token TOK] [--max-conns N] [--rate-limit R [--rate-burst B]]
 //!                  [--call-timeout SECS] [--retries N] [--breaker-threshold K]
-//!                  [--store-max-bytes BYTES] [--store-ttl SECS]
+//!                  [--store-max-bytes BYTES] [--store-ttl SECS] [--trace]
 //!                  [--worker --coordinator URL [--public-addr ADDR]]
+//! polygen trace    <job.toml | JOB_ID> [--out trace.json] [--server HOST:PORT] [--auth-token TOK]
 //! ```
 //!
 //! `--lub auto` (optionally with `--objective area|delay|area_delay`)
@@ -39,7 +40,7 @@ use polygen::report;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: polygen <generate|dse|rtl|verify|sweep|report|config|batch|serve> [--flags]\n\
+        "usage: polygen <generate|dse|rtl|verify|sweep|report|config|batch|serve|trace> [--flags]\n\
          see rust/src/main.rs header or README.md for details"
     );
     ExitCode::FAILURE
@@ -383,6 +384,11 @@ fn run() -> Result<(), String> {
                 builder = builder
                     .store_ttl(std::time::Duration::from_secs(args.u64_or("store-ttl", 0)));
             }
+            if args.has("trace") {
+                // Every submitted job gets a span tracer; export with
+                // `polygen trace JOB_ID` or `GET /jobs/:id/trace`.
+                builder = builder.tracing(true);
+            }
             let svc = builder.build();
             let listener = std::net::TcpListener::bind(format!("{addr}:{port}"))
                 .map_err(|e| format!("bind {addr}:{port}: {e}"))?;
@@ -421,6 +427,44 @@ fn run() -> Result<(), String> {
                 );
             }
             polygen::service::http::serve_with(svc, listener, opts);
+            Ok(())
+        }
+        "trace" => {
+            // Chrome trace_events export (load in chrome://tracing or
+            // Perfetto). Two modes: a job-file argument runs the job
+            // locally under a tracer; a numeric id fetches the trace of
+            // a job on a running `polygen serve --trace` instance.
+            let target = args
+                .positional
+                .first()
+                .cloned()
+                .ok_or("trace requires a job file (.toml) or a job id")?;
+            let out = PathBuf::from(args.get("out").unwrap_or("trace.json"));
+            let json = if target.ends_with(".toml") {
+                let text =
+                    std::fs::read_to_string(&target).map_err(|e| format!("{target}: {e}"))?;
+                let spec = JobSpec::from_toml(&text).map_err(|e| format!("{target}: {e}"))?;
+                let ctrl = polygen::sync::Arc::new(polygen::pipeline::JobCtrl::traced());
+                let res = spec
+                    .run_controlled(None, Some(polygen::sync::Arc::clone(&ctrl)))
+                    .map_err(|e| e.to_string())?;
+                ctrl.finish_trace();
+                let tracer = ctrl.tracer().expect("ctrl built with JobCtrl::traced");
+                println!(
+                    "{} R={}: {} spans recorded",
+                    spec.label(),
+                    res.lookup_bits,
+                    tracer.spans().len()
+                );
+                tracer.export_chrome()
+            } else {
+                let id: u64 =
+                    target.parse().map_err(|_| format!("bad job id or file {target}"))?;
+                let server = args.get("server").unwrap_or("127.0.0.1:7878");
+                fetch_trace(server, id, args.get("auth-token"))?
+            };
+            std::fs::write(&out, &json).map_err(|e| format!("{}: {e}", out.display()))?;
+            println!("wrote {}", out.display());
             Ok(())
         }
         "batch" => {
@@ -482,6 +526,31 @@ fn run() -> Result<(), String> {
         }
         _ => Err(format!("unknown command {}", args.cmd)),
     }
+}
+
+/// One-shot HTTP GET of `/jobs/:id/trace` for `polygen trace JOB_ID` —
+/// the same minimal client shape the integration tests use, kept here
+/// so the CLI needs no HTTP dependency.
+fn fetch_trace(server: &str, id: u64, token: Option<&str>) -> Result<String, String> {
+    use std::io::{Read, Write};
+    let addr = server.trim_start_matches("http://").trim_end_matches('/');
+    let mut stream =
+        std::net::TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let auth =
+        token.map(|t| format!("Authorization: Bearer {t}\r\n")).unwrap_or_default();
+    let req = format!(
+        "GET /jobs/{id}/trace HTTP/1.1\r\nHost: {addr}\r\n{auth}\
+         Content-Length: 0\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).map_err(|e| e.to_string())?;
+    let (head, body) = raw.split_once("\r\n\r\n").ok_or("malformed response")?;
+    let code = head.split_whitespace().nth(1).unwrap_or("");
+    if code != "200" {
+        return Err(format!("server replied {code}: {body}"));
+    }
+    Ok(body.to_string())
 }
 
 fn main() -> ExitCode {

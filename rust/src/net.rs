@@ -16,7 +16,16 @@
 
 use std::time::{Duration, Instant};
 
+use crate::obs::metrics;
 use crate::sync::{plock, Mutex};
+
+const CALLS: metrics::Counter = metrics::counter("net.calls");
+const RETRIES: metrics::Counter = metrics::counter("net.retries");
+const CALL_FAILURES: metrics::Counter = metrics::counter("net.call_failures");
+const CALL_MS: metrics::Histogram = metrics::histogram("net.call_ms");
+const BREAKER_OPENED: metrics::Counter = metrics::counter("net.breaker_opened");
+const BREAKER_RECLOSED: metrics::Counter = metrics::counter("net.breaker_reclosed");
+const BUDGET_LEVEL: metrics::Gauge = metrics::gauge("net.retry_budget_millitokens");
 
 /// Failure-handling knobs for one class of calls. CLI spelling:
 /// `--call-timeout SECS --retries N --breaker-threshold K`.
@@ -63,8 +72,12 @@ impl Policy {
         breaker: Option<&CircuitBreaker>,
         mut attempt: impl FnMut(Duration) -> Result<T, String>,
     ) -> Result<T, String> {
+        CALLS.inc();
+        let call_start = Instant::now();
         if let Some(b) = breaker {
             if !b.allow() {
+                CALL_FAILURES.inc();
+                CALL_MS.observe(call_start.elapsed().as_millis() as u64);
                 return Err("circuit open (worker quarantined)".into());
             }
         }
@@ -78,6 +91,7 @@ impl Policy {
                     if let Some(bu) = budget {
                         bu.deposit(0.1);
                     }
+                    CALL_MS.observe(call_start.elapsed().as_millis() as u64);
                     return Ok(v);
                 }
                 Err(e) => {
@@ -88,8 +102,11 @@ impl Policy {
                         if let Some(b) = breaker {
                             b.on_failure(self.breaker_threshold, self.breaker_cooldown);
                         }
+                        CALL_FAILURES.inc();
+                        CALL_MS.observe(call_start.elapsed().as_millis() as u64);
                         return Err(e);
                     }
+                    RETRIES.inc();
                     std::thread::sleep(jittered_backoff(self.backoff, failures - 1));
                 }
             }
@@ -130,18 +147,21 @@ impl RetryBudget {
     /// Spend one retry token; `false` = budget exhausted, fail fast.
     pub fn try_spend(&self) -> bool {
         let mut s = plock(&self.state);
-        if s.tokens >= 1.0 {
+        let ok = if s.tokens >= 1.0 {
             s.tokens -= 1.0;
             true
         } else {
             false
-        }
+        };
+        BUDGET_LEVEL.set((s.tokens * 1000.0) as u64);
+        ok
     }
 
     /// Return `amount` tokens (successful calls refill the budget).
     pub fn deposit(&self, amount: f64) {
         let mut s = plock(&self.state);
         s.tokens = (s.tokens + amount).min(s.cap);
+        BUDGET_LEVEL.set((s.tokens * 1000.0) as u64);
     }
 
     /// Tokens currently available (observability / tests).
@@ -213,7 +233,9 @@ impl CircuitBreaker {
     pub fn on_success(&self) {
         let mut s = plock(&self.state);
         s.consecutive = 0;
-        s.open_until = None;
+        if s.open_until.take().is_some() {
+            BREAKER_RECLOSED.inc();
+        }
     }
 
     /// Record a failed call; returns `true` when this failure *newly*
@@ -225,6 +247,9 @@ impl CircuitBreaker {
         if s.consecutive >= threshold.max(1) {
             let newly = s.open_until.is_none();
             s.open_until = Some(Instant::now() + cooldown);
+            if newly {
+                BREAKER_OPENED.inc();
+            }
             newly
         } else {
             false

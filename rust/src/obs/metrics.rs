@@ -1,0 +1,458 @@
+//! Process-wide metrics registry: atomic counters, gauges, and
+//! fixed-bucket histograms, registered statically by name.
+//!
+//! Every metric the process can ever record is one entry in
+//! [`METRICS`]; storage is a single flat `static` array of relaxed
+//! atomics whose layout is computed at compile time from the registry.
+//! Recording sites obtain a handle through the `const fn` constructors
+//! ([`counter`], [`gauge`], [`histogram`]):
+//!
+//! ```
+//! use polygen::obs::metrics;
+//! const DONATIONS: metrics::Counter = metrics::counter("pool.donations");
+//! DONATIONS.inc(); // one relaxed fetch_add — no lock, no lookup
+//! ```
+//!
+//! A name that is not in [`METRICS`] (or registered under a different
+//! kind) fails the `const` evaluation — i.e. it is a *compile error*,
+//! not a runtime panic. The `obs-registry` rule in `polygen-lint`
+//! additionally cross-checks the registry against the use sites both
+//! ways, so a registered metric nothing records (dead) and a recorded
+//! name missing from the registry both fail CI, mirroring the PR 7/8
+//! fault-tap `SITES` discipline.
+//!
+//! # Compile-out
+//!
+//! With the `obs-stub` cargo feature the recorders compile to empty
+//! inline functions ([`COMPILED`] is `false`): cells stay zero, the
+//! hot path carries no recording code, and `/metrics` still renders
+//! (all zeros). This mirrors `faults::inject`'s const-false pattern —
+//! the default build records, and the tier-1 bench gate runs against
+//! the default build.
+
+// The cells are const-initialized globals recordable from any thread;
+// obs is never loom-modeled (no blocking, single relaxed RMWs only),
+// so it deliberately bypasses the crate::sync shim like faults.rs.
+// lint: sync-ok(const-init atomic metric cells in never-modeled code)
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `false` when the `obs-stub` feature compiles recording out.
+pub const COMPILED: bool = !cfg!(feature = "obs-stub");
+
+/// Metric kind, fixed at registration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotonically increasing count (rendered with a `_total` suffix).
+    Counter,
+    /// Last-write-wins instantaneous value.
+    Gauge,
+    /// Fixed-bucket histogram (bucket edges in [`Spec::buckets`]).
+    Histogram,
+}
+
+impl Kind {
+    /// Prometheus `# TYPE` label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Debug)]
+pub struct Spec {
+    /// Dotted registry name (`layer.metric`); rendered as
+    /// `polygen_<layer>_<metric>[_total]`.
+    pub name: &'static str,
+    /// Counter / gauge / histogram.
+    pub kind: Kind,
+    /// One-line `# HELP` text.
+    pub help: &'static str,
+    /// Upper bucket edges for histograms (empty for counters/gauges).
+    pub buckets: &'static [u64],
+}
+
+const NO_BUCKETS: &[u64] = &[];
+/// Shared latency edges (milliseconds) for the RPC-scale histogram.
+const MS_CALL: &[u64] = &[1, 10, 100, 1_000, 10_000];
+/// Latency edges (milliseconds) for whole-job durations.
+const MS_JOB: &[u64] = &[100, 1_000, 10_000, 60_000, 300_000];
+
+const fn c(name: &'static str, help: &'static str) -> Spec {
+    Spec { name, kind: Kind::Counter, help, buckets: NO_BUCKETS }
+}
+const fn g(name: &'static str, help: &'static str) -> Spec {
+    Spec { name, kind: Kind::Gauge, help, buckets: NO_BUCKETS }
+}
+const fn h(name: &'static str, help: &'static str, buckets: &'static [u64]) -> Spec {
+    Spec { name, kind: Kind::Histogram, help, buckets }
+}
+
+/// The full static registry. Rendering iterates this; the lint's
+/// `obs-registry` rule collects the `name:` literals below and
+/// cross-checks them against every `counter("…")`/`gauge("…")`/
+/// `histogram("…")` call in the tree.
+pub const METRICS: &[Spec] = &[
+    // -- scheduler (pool.rs) ------------------------------------------
+    g("pool.queue_depth", "jobs currently registered with the work-donating scheduler"),
+    c("pool.donations", "times a pool worker donated a slice of work to a foreign job"),
+    c("pool.task_panics", "tasks that panicked inside the scheduler and were contained"),
+    // -- service (service/mod.rs, service/exec.rs) --------------------
+    c("service.submitted", "jobs accepted by Service::submit"),
+    c("service.done", "jobs finished successfully (including store-served repeats)"),
+    c("service.failed", "jobs finished with an error (including panics and degraded wrap)"),
+    c("service.cancelled", "jobs observed cancelled at settle time"),
+    c("service.store_submit_hits", "submissions served directly from the result store"),
+    g("service.registry_size", "entries currently held in the job registry"),
+    h("service.job_ms", "wall-clock job execution time in milliseconds", MS_JOB),
+    g("exec.queue_depth", "entries waiting in the executor task queue"),
+    g("exec.executors", "executor threads currently alive"),
+    // -- cluster (service/cluster.rs) ---------------------------------
+    c("cluster.shards_dispatched", "shards assigned to remote workers"),
+    c("cluster.shards_reassigned", "shards re-dispatched after a worker failure or timeout"),
+    c("cluster.heartbeat_misses", "worker heartbeats that failed and forced re-registration"),
+    c("cluster.wire_crc_failures", "shard-protocol payloads rejected by CRC or frame checks"),
+    c("cluster.degraded", "times a sharded job fell back to local (degraded) execution"),
+    c("cluster.strikes", "protocol strikes recorded against workers"),
+    // -- net policies (net.rs) ----------------------------------------
+    c("net.calls", "policy-wrapped cluster calls attempted"),
+    c("net.retries", "retry attempts spent by the retry policy"),
+    c("net.call_failures", "policy-wrapped calls that exhausted retries and failed"),
+    c("net.breaker_opened", "circuit breaker closed→open transitions"),
+    c("net.breaker_reclosed", "circuit breaker half-open→closed recoveries"),
+    g("net.retry_budget_millitokens", "process retry budget level, in 1/1000 tokens"),
+    h("net.call_ms", "per-call wall time through net::Policy in milliseconds", MS_CALL),
+    // -- durable stores (service/store.rs) ----------------------------
+    c("store.log_frames", "frames appended to the jobs.log durable journal"),
+    c("store.log_write_errors", "jobs.log append failures tolerated (journal best-effort)"),
+    c("store.log_quarantined", "jobs.log files quarantined during startup replay"),
+    c("store.result_hits", "result-store (.pgjr) lookups served intact"),
+    c("store.result_misses", "result-store (.pgjr) lookups with no entry"),
+    c("store.result_quarantined", ".pgjr entries quarantined on CRC/shape mismatch"),
+    c("store.result_saves", "results persisted to the store"),
+    g("store.bytes", "bytes currently held by the result store"),
+    g("store.entries", "entries currently held by the result store"),
+    // -- generation disk cache (coordinator/cache.rs) -----------------
+    c("cache.hits", "design-space disk cache (.pgds) hits"),
+    c("cache.misses", "design-space disk cache (.pgds) misses"),
+    c("cache.quarantined", ".pgds files quarantined on CRC/validation failure"),
+    // -- fault injection (faults.rs) ----------------------------------
+    c("faults.injected", "faults fired by the deterministic injection plan"),
+    // -- the tracer itself (obs/trace.rs) -----------------------------
+    c("trace.spans", "spans recorded across all traced jobs"),
+];
+
+const fn str_eq(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut i = 0;
+    while i < a.len() {
+        if a[i] != b[i] {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+const fn find(name: &str) -> usize {
+    let mut i = 0;
+    while i < METRICS.len() {
+        if str_eq(METRICS[i].name, name) {
+            return i;
+        }
+        i += 1;
+    }
+    panic!("metric name not registered in obs::metrics::METRICS")
+}
+
+/// Cells a metric occupies: 1 for counters/gauges; histograms take one
+/// per bucket, one overflow (+Inf) bucket, and one running sum.
+const fn cells_of(i: usize) -> usize {
+    match METRICS[i].kind {
+        Kind::Counter | Kind::Gauge => 1,
+        Kind::Histogram => METRICS[i].buckets.len() + 2,
+    }
+}
+
+const fn offset_of(idx: usize) -> usize {
+    let mut off = 0;
+    let mut i = 0;
+    while i < idx {
+        off += cells_of(i);
+        i += 1;
+    }
+    off
+}
+
+const TOTAL_CELLS: usize = offset_of(METRICS.len());
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static CELLS: [AtomicU64; TOTAL_CELLS] = [ZERO; TOTAL_CELLS];
+
+/// Compile-time handle to a registered counter.
+#[derive(Clone, Copy, Debug)]
+pub struct Counter {
+    cell: usize,
+}
+
+/// Resolve a counter by registry name at compile time. Unregistered
+/// names or kind mismatches fail `const` evaluation.
+pub const fn counter(name: &str) -> Counter {
+    let i = find(name);
+    match METRICS[i].kind {
+        Kind::Counter => Counter { cell: offset_of(i) },
+        _ => panic!("metric is registered, but not as a counter"),
+    }
+}
+
+impl Counter {
+    /// Record one event. A single relaxed `fetch_add`; a no-op under
+    /// `obs-stub`.
+    #[inline]
+    pub fn inc(self) {
+        self.add(1);
+    }
+
+    /// Record `n` events at once.
+    #[inline]
+    pub fn add(self, n: u64) {
+        if COMPILED {
+            CELLS[self.cell].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value (zero forever under `obs-stub`).
+    pub fn get(self) -> u64 {
+        CELLS[self.cell].load(Ordering::Relaxed)
+    }
+}
+
+/// Compile-time handle to a registered gauge.
+#[derive(Clone, Copy, Debug)]
+pub struct Gauge {
+    cell: usize,
+}
+
+/// Resolve a gauge by registry name at compile time.
+pub const fn gauge(name: &str) -> Gauge {
+    let i = find(name);
+    match METRICS[i].kind {
+        Kind::Gauge => Gauge { cell: offset_of(i) },
+        _ => panic!("metric is registered, but not as a gauge"),
+    }
+}
+
+impl Gauge {
+    /// Publish the current value (last write wins).
+    #[inline]
+    pub fn set(self, v: u64) {
+        if COMPILED {
+            CELLS[self.cell].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value (zero forever under `obs-stub`).
+    pub fn get(self) -> u64 {
+        CELLS[self.cell].load(Ordering::Relaxed)
+    }
+}
+
+/// Compile-time handle to a registered histogram.
+#[derive(Clone, Copy, Debug)]
+pub struct Histogram {
+    idx: usize,
+    cell: usize,
+}
+
+/// Resolve a histogram by registry name at compile time.
+pub const fn histogram(name: &str) -> Histogram {
+    let i = find(name);
+    match METRICS[i].kind {
+        Kind::Histogram => Histogram { idx: i, cell: offset_of(i) },
+        _ => panic!("metric is registered, but not as a histogram"),
+    }
+}
+
+impl Histogram {
+    /// Record one observation: one bucket increment + one sum add.
+    #[inline]
+    pub fn observe(self, v: u64) {
+        if COMPILED {
+            let edges = METRICS[self.idx].buckets;
+            let mut b = 0;
+            while b < edges.len() && v > edges[b] {
+                b += 1;
+            }
+            CELLS[self.cell + b].fetch_add(1, Ordering::Relaxed);
+            CELLS[self.cell + edges.len() + 1].fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Total observation count (zero forever under `obs-stub`).
+    pub fn count(self) -> u64 {
+        let edges = METRICS[self.idx].buckets;
+        let mut total = 0;
+        for b in 0..=edges.len() {
+            total += CELLS[self.cell + b].load(Ordering::Relaxed);
+        }
+        total
+    }
+}
+
+/// Rendered (Prometheus) name for a registry entry: `polygen_` prefix,
+/// dots mapped to underscores, `_total` suffix on counters.
+pub fn prom_name(spec: &Spec) -> String {
+    let base = format!("polygen_{}", spec.name.replace('.', "_"));
+    match spec.kind {
+        Kind::Counter => format!("{base}_total"),
+        _ => base,
+    }
+}
+
+/// Render the whole registry in Prometheus text exposition format.
+/// Every registered metric is always present (zeros included), so a
+/// scrape is a complete inventory of the registry.
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(4096);
+    for (i, m) in METRICS.iter().enumerate() {
+        let name = prom_name(m);
+        out.push_str(&format!("# HELP {name} {}\n", m.help));
+        out.push_str(&format!("# TYPE {name} {}\n", m.kind.label()));
+        let off = offset_of(i);
+        match m.kind {
+            Kind::Counter | Kind::Gauge => {
+                out.push_str(&format!("{name} {}\n", CELLS[off].load(Ordering::Relaxed)));
+            }
+            Kind::Histogram => {
+                let mut cum = 0u64;
+                for (b, edge) in m.buckets.iter().enumerate() {
+                    cum += CELLS[off + b].load(Ordering::Relaxed);
+                    out.push_str(&format!("{name}_bucket{{le=\"{edge}\"}} {cum}\n"));
+                }
+                cum += CELLS[off + m.buckets.len()].load(Ordering::Relaxed);
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                let sum = CELLS[off + m.buckets.len() + 1].load(Ordering::Relaxed);
+                out.push_str(&format!("{name}_sum {sum}\n"));
+                out.push_str(&format!("{name}_count {cum}\n"));
+            }
+        }
+    }
+    out
+}
+
+/// Runtime lookup of a metric's current value by registry name —
+/// counter/gauge value, or observation count for histograms. Linear
+/// scan; for tests and debugging, not hot paths.
+pub fn value(name: &str) -> u64 {
+    let i = find(name);
+    let off = offset_of(i);
+    match METRICS[i].kind {
+        Kind::Counter | Kind::Gauge => CELLS[off].load(Ordering::Relaxed),
+        Kind::Histogram => {
+            let mut total = 0;
+            for b in 0..=METRICS[i].buckets.len() {
+                total += CELLS[off + b].load(Ordering::Relaxed);
+            }
+            total
+        }
+    }
+}
+
+/// Zero every cell. Test helper — the registry is process-global, so
+/// tests asserting deltas take [`test_serial_lock`] and reset first.
+pub fn reset_all() {
+    for cell in CELLS.iter() {
+        cell.store(0, Ordering::Relaxed);
+    }
+}
+
+// lint: sync-ok(test-only serializer over the global metric cells)
+static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Serialize tests that reset/assert the process-global cells
+/// (poisoning is ignored — the cells themselves can't be corrupted).
+pub fn test_serial_lock() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_well_formed() {
+        for (i, m) in METRICS.iter().enumerate() {
+            assert!(
+                m.name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '.' || c == '_'),
+                "bad metric name {:?}",
+                m.name
+            );
+            assert!(m.name.contains('.'), "metric {:?} lacks a layer prefix", m.name);
+            assert!(!m.help.is_empty());
+            for other in &METRICS[..i] {
+                assert_ne!(m.name, other.name, "duplicate metric name");
+            }
+            match m.kind {
+                Kind::Histogram => {
+                    assert!(!m.buckets.is_empty(), "{}: histogram without buckets", m.name);
+                    assert!(m.buckets.windows(2).all(|w| w[0] < w[1]), "{}: edges not ascending", m.name);
+                }
+                _ => assert!(m.buckets.is_empty(), "{}: buckets on non-histogram", m.name),
+            }
+        }
+    }
+
+    #[test]
+    fn counters_and_gauges_record() {
+        let _guard = test_serial_lock();
+        reset_all();
+        const C: Counter = counter("trace.spans");
+        C.inc();
+        C.add(2);
+        assert_eq!(C.get(), if COMPILED { 3 } else { 0 });
+        const G: Gauge = gauge("pool.queue_depth");
+        G.set(7);
+        assert_eq!(G.get(), if COMPILED { 7 } else { 0 });
+        assert_eq!(value("trace.spans"), C.get());
+        reset_all();
+        assert_eq!(C.get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let _guard = test_serial_lock();
+        reset_all();
+        const H: Histogram = histogram("net.call_ms");
+        H.observe(0); // le=1
+        H.observe(5); // le=10
+        H.observe(100_000); // +Inf overflow
+        assert_eq!(H.count(), if COMPILED { 3 } else { 0 });
+        let text = render_prometheus();
+        if COMPILED {
+            assert!(text.contains("polygen_net_call_ms_bucket{le=\"1\"} 1"));
+            assert!(text.contains("polygen_net_call_ms_bucket{le=\"10\"} 2"));
+            assert!(text.contains("polygen_net_call_ms_bucket{le=\"+Inf\"} 3"));
+            assert!(text.contains("polygen_net_call_ms_sum 100005"));
+            assert!(text.contains("polygen_net_call_ms_count 3"));
+        }
+        reset_all();
+    }
+
+    #[test]
+    fn render_covers_every_registered_metric() {
+        let text = render_prometheus();
+        for m in METRICS {
+            let name = prom_name(m);
+            assert!(
+                text.contains(&format!("# TYPE {name} ")),
+                "{name} missing from render"
+            );
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! `polygen::obs` — dependency-free observability: process-wide metrics
+//! and per-job span tracing.
+//!
+//! PR 7's fault layer made every I/O boundary *testable*; this module
+//! makes the same boundaries (plus the scheduler and the pipeline's
+//! phases) *measurable* in production. Two halves:
+//!
+//! - [`metrics`] — a statically-registered, process-wide registry of
+//!   atomic counters, gauges, and fixed-bucket histograms. The full
+//!   metric set is the [`metrics::METRICS`] const (enumerable, rendered
+//!   in Prometheus text exposition by `GET /metrics`), and every
+//!   recording site resolves its slot at **compile time** via the
+//!   `const fn` handles ([`metrics::counter`] and friends) — an
+//!   unregistered name is a compile error, and `polygen-lint`'s
+//!   `obs-registry` rule cross-checks the registry against the use
+//!   sites both ways (a dead metric and an unregistered metric both
+//!   fail CI).
+//! - [`trace`] — a span-based tracer threaded through
+//!   [`crate::pipeline::JobCtrl`]: one span per pipeline phase
+//!   (prepare/generate/explore/synthesize/verify) plus per-shard child
+//!   spans on the cluster coordinator, exported as Chrome
+//!   `trace_events` JSON (`GET /jobs/:id/trace`, `polygen trace`).
+//!
+//! # Overhead discipline
+//!
+//! Hot-path recording is a single relaxed atomic RMW — no locks, no
+//! allocation, no formatting. Mirroring the `faults::inject`
+//! const-false pattern, the `obs-stub` cargo feature compiles every
+//! recorder down to an empty inline function (`metrics::COMPILED` is
+//! `false`), so minimal builds carry no recording code at all; the
+//! default build records, and the tier-1 bench gate runs against it.
+//! Span collection allocates only when a job was *built traced*
+//! (`ServiceBuilder::tracing` / `polygen serve --trace`): an untraced
+//! job's `JobCtrl` holds no tracer and every span call is an
+//! `Option::None` check.
+
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,236 @@
+//! Span-based tracing with a Chrome `trace_events` exporter.
+//!
+//! A [`Tracer`] is attached to a job's `pipeline::JobCtrl` when the job
+//! is built traced (`ServiceBuilder::tracing` / `polygen serve --trace`
+//! / `JobCtrl::traced`). The pipeline's single phase funnel
+//! (`JobCtrl::set_phase`) then turns every phase transition into a
+//! complete span, and the cluster coordinator records per-shard child
+//! spans around its dispatch/collect calls. Untraced jobs carry no
+//! tracer at all — span recording is one `Option::None` check.
+//!
+//! Spans are duration events: `{name, cat, tid, start_us, dur_us}`
+//! with timestamps relative to the tracer's birth. [`Tracer::export_chrome`]
+//! renders the `chrome://tracing` / Perfetto JSON array form:
+//!
+//! ```json
+//! {"traceEvents":[{"name":"generate","cat":"phase","ph":"X",
+//!   "ts":412,"dur":180234,"pid":1,"tid":1}],"displayTimeUnit":"ms"}
+//! ```
+//!
+//! Phase spans render on `tid` [`TID_PHASES`]; shard call spans on
+//! `TID_SHARDS + shard index` so each shard gets its own lane.
+
+use crate::sync::{plock, Mutex};
+use std::time::Instant;
+
+use super::metrics;
+
+const SPANS: metrics::Counter = metrics::counter("trace.spans");
+
+/// Chrome-trace lane for the job's pipeline phases.
+pub const TID_PHASES: u64 = 1;
+/// First chrome-trace lane for per-shard cluster calls; shard `i`
+/// renders on `TID_SHARDS + i`.
+pub const TID_SHARDS: u64 = 2;
+
+/// One completed span, timestamps in microseconds since tracer birth.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Display name (phase label, or `shard <i> <op>`).
+    pub name: String,
+    /// Category: `"phase"` for pipeline phases, `"shard"` for cluster calls.
+    pub cat: &'static str,
+    /// Chrome-trace lane.
+    pub tid: u64,
+    /// Start offset from tracer birth, µs.
+    pub start_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+}
+
+/// Per-job span collector. Cheap to create; all recording is one short
+/// mutex push (never on the per-task hot path — phases and shard calls
+/// are coarse events).
+#[derive(Debug)]
+pub struct Tracer {
+    t0: Instant,
+    spans: Mutex<Vec<Span>>,
+    /// The currently-open phase span, fed by `enter_phase`.
+    open: Mutex<Option<(&'static str, Instant)>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// A tracer born now, with no spans.
+    pub fn new() -> Tracer {
+        Tracer {
+            t0: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            open: Mutex::new(None),
+        }
+    }
+
+    fn us_since_birth(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.t0).as_micros() as u64
+    }
+
+    /// Record a completed span covering `start..end`.
+    pub fn record(&self, name: String, cat: &'static str, tid: u64, start: Instant, end: Instant) {
+        let start_us = self.us_since_birth(start);
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        plock(&self.spans).push(Span { name, cat, tid, start_us, dur_us });
+        SPANS.inc();
+    }
+
+    /// Phase funnel: close the currently-open phase span (if any) and
+    /// open one for `label`. Called by `JobCtrl::set_phase`.
+    pub fn enter_phase(&self, label: &'static str) {
+        let now = Instant::now();
+        let prev = plock(&self.open).replace((label, now));
+        if let Some((name, started)) = prev {
+            self.record(name.to_string(), "phase", TID_PHASES, started, now);
+        }
+    }
+
+    /// Close the open phase span, if any. Called when the job settles;
+    /// idempotent.
+    pub fn finish(&self) {
+        let now = Instant::now();
+        if let Some((name, started)) = plock(&self.open).take() {
+            self.record(name.to_string(), "phase", TID_PHASES, started, now);
+        }
+    }
+
+    /// Snapshot of all spans so far, in recording order. A still-open
+    /// phase span is included as if it ended now, so live exports of a
+    /// running job show the current phase.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = plock(&self.spans).clone();
+        if let Some((name, started)) = *plock(&self.open) {
+            let now = Instant::now();
+            out.push(Span {
+                name: name.to_string(),
+                cat: "phase",
+                tid: TID_PHASES,
+                start_us: self.us_since_birth(started),
+                dur_us: now.saturating_duration_since(started).as_micros() as u64,
+            });
+        }
+        out
+    }
+
+    /// Aggregate phase durations (µs) by span name, in first-seen
+    /// order — the `timings` object in job status JSON.
+    pub fn timings(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        for s in self.spans() {
+            if s.cat != "phase" {
+                continue;
+            }
+            match out.iter_mut().find(|(n, _)| *n == s.name) {
+                Some((_, d)) => *d += s.dur_us,
+                None => out.push((s.name, s.dur_us)),
+            }
+        }
+        out
+    }
+
+    /// Render the Chrome `trace_events` JSON document.
+    pub fn export_chrome(&self) -> String {
+        export_chrome(&self.spans())
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render spans as a Chrome `trace_events` JSON document (`ph:"X"`
+/// complete events, µs timestamps, `pid` fixed at 1).
+pub fn export_chrome(spans: &[Span]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+            escape(&s.name),
+            escape(s.cat),
+            s.start_us,
+            s.dur_us,
+            s.tid
+        ));
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_funnel_closes_previous_span() {
+        let t = Tracer::new();
+        t.enter_phase("prepare");
+        t.enter_phase("generate");
+        t.finish();
+        t.finish(); // idempotent
+        let spans = t.spans();
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["prepare", "generate"]);
+        assert!(spans.iter().all(|s| s.cat == "phase" && s.tid == TID_PHASES));
+        // Ordering invariant: spans close in the order they were opened.
+        assert!(spans[0].start_us <= spans[1].start_us);
+    }
+
+    #[test]
+    fn open_span_is_visible_in_snapshots() {
+        let t = Tracer::new();
+        t.enter_phase("prepare");
+        let spans = t.spans();
+        assert_eq!(spans.len(), 1, "open phase must show in live snapshots");
+        assert_eq!(spans[0].name, "prepare");
+        assert_eq!(t.timings().len(), 1);
+    }
+
+    #[test]
+    fn timings_aggregate_by_name() {
+        let t = Tracer::new();
+        let now = Instant::now();
+        t.record("generate".into(), "phase", TID_PHASES, now, now);
+        t.record("generate".into(), "phase", TID_PHASES, now, now);
+        t.record("shard 0 sweep".into(), "shard", TID_SHARDS, now, now);
+        let timings = t.timings();
+        assert_eq!(timings.len(), 1, "shard spans are not phases");
+        assert_eq!(timings[0].0, "generate");
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed() {
+        let t = Tracer::new();
+        t.enter_phase("prepare");
+        t.finish();
+        let json = t.export_chrome();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"prepare\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.ends_with("],\"displayTimeUnit\":\"ms\"}"));
+        assert_eq!(escape("a\"b\\c\n"), "a\\\"b\\\\c\\u000a");
+    }
+}

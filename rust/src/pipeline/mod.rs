@@ -80,14 +80,15 @@ pub mod job;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use crate::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use crate::sync::Arc;
 
 use crate::coordinator::{
-    best_by_objective, default_r_range, generate_cached_ctrl, sweep_lub_cached, sweep_lub_ctrl,
+    best_by_objective, default_r_range, generate_cached_rec, sweep_lub_cached, sweep_lub_ctrl,
     Workload,
 };
 use crate::designspace::generate_ctrl;
+use crate::obs::trace::Tracer;
 use crate::pool::{CancelToken, Progress};
 use crate::rtl;
 use crate::verify::verify_exhaustive;
@@ -185,6 +186,18 @@ impl std::fmt::Debug for GenHook {
     }
 }
 
+/// [`JobCtrl`]-storable wrapper for an optional span [`Tracer`], the
+/// [`GenHook`] shape again: `JobCtrl` derives `Debug`, and the tracer's
+/// internals are noise there.
+#[derive(Clone, Default)]
+pub(crate) struct TraceHook(Option<Arc<Tracer>>);
+
+impl std::fmt::Debug for TraceHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "TraceHook(installed)" } else { "TraceHook(none)" })
+    }
+}
+
 /// Shared control block for one controlled pipeline run: a cooperative
 /// [`CancelToken`], a [`Progress`] counter, and the current [`Phase`].
 ///
@@ -213,6 +226,8 @@ pub struct JobCtrl {
     sub: Progress,
     phase: AtomicU8,
     degraded: AtomicBool,
+    recovered: AtomicUsize,
+    trace: TraceHook,
 }
 
 impl JobCtrl {
@@ -275,8 +290,65 @@ impl JobCtrl {
         &self.degraded
     }
 
+    /// Build a control block with span tracing enabled: every phase
+    /// transition (and, on cluster runs, each shard's dispatch) records
+    /// a span, exportable as Chrome `trace_events` JSON through
+    /// [`crate::obs::trace`]. The default [`JobCtrl::new`] carries no
+    /// tracer and records nothing.
+    pub fn traced() -> JobCtrl {
+        JobCtrl { trace: TraceHook(Some(Arc::new(Tracer::new()))), ..JobCtrl::default() }
+    }
+
+    /// The attached span tracer, when this block was built with
+    /// [`JobCtrl::traced`].
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.trace.0.as_ref()
+    }
+
+    /// Close the still-open phase span, if any (idempotent). The service
+    /// calls this when the job settles so the last phase's duration is
+    /// final instead of "up to now" at every export.
+    pub fn finish_trace(&self) {
+        if let Some(t) = self.trace.0.as_deref() {
+            t.finish();
+        }
+    }
+
+    /// Per-phase wall-clock totals in microseconds, in first-entered
+    /// order. `None` without a tracer or before any phase ran.
+    pub fn timings(&self) -> Option<Vec<(String, u64)>> {
+        let t = self.trace.0.as_deref()?;
+        let v = t.timings();
+        if v.is_empty() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Count one integrity-check recovery against this run: a damaged
+    /// `.pgjr` or `.pgds` that was quarantined aside and regenerated
+    /// over. Sticky, like `degraded`; the service surfaces the count in
+    /// job status so "healed by recomputing" is visible, not silent.
+    pub fn mark_recovered(&self) {
+        self.recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How many quarantine recoveries this run absorbed.
+    pub fn recovered(&self) -> usize {
+        self.recovered.load(Ordering::Relaxed)
+    }
+
+    /// The raw counter, for threading into the cache layer.
+    pub(crate) fn recovered_counter(&self) -> &AtomicUsize {
+        &self.recovered
+    }
+
     fn set_phase(&self, p: Phase) {
         self.phase.store(p as u8, Ordering::Relaxed);
+        if let Some(t) = self.trace.0.as_deref() {
+            t.enter_phase(p.label());
+        }
     }
 }
 
@@ -403,6 +475,10 @@ impl Settings {
 
     fn sub_counter(&self) -> Option<&Progress> {
         self.ctrl.as_deref().map(|c| &c.sub)
+    }
+
+    fn recovered_counter(&self) -> Option<&AtomicUsize> {
+        self.ctrl.as_deref().map(JobCtrl::recovered_counter)
     }
 }
 
@@ -668,13 +744,14 @@ impl Prepared {
                 let space = match remote {
                     Some(result) => result,
                     None => match cache {
-                        Some(dir) => generate_cached_ctrl(
+                        Some(dir) => generate_cached_rec(
                             &workload,
                             r,
                             &opts,
                             dir,
                             settings.cancel_token(),
                             settings.progress_counter(),
+                            settings.recovered_counter(),
                         ),
                         None => generate_ctrl(
                             &workload.bt,

@@ -60,6 +60,16 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::sync::{cwait, plock, thread, Arc, Condvar, Mutex};
 
+use crate::obs::metrics;
+
+/// Jobs currently registered with the scheduler (set under the
+/// scheduler lock, so it tracks `Inner::jobs.len()` exactly).
+const QUEUE_DEPTH: metrics::Gauge = metrics::gauge("pool.queue_depth");
+/// One increment per worker-joins-job donation decision.
+const DONATIONS: metrics::Counter = metrics::counter("pool.donations");
+/// Contained task panics (the payload still propagates to the submitter).
+const TASK_PANICS: metrics::Counter = metrics::counter("pool.task_panics");
+
 /// Cooperative cancellation flag, shared between a job's owner (who calls
 /// [`CancelToken::cancel`]) and the task closures running on the
 /// scheduler (who poll [`CancelToken::is_cancelled`] at their natural
@@ -223,6 +233,7 @@ fn execute(job: &Job) {
         let result = catch_unwind(AssertUnwindSafe(|| task(i)));
         let mut st = plock(&job.state);
         if let Err(payload) = result {
+            TASK_PANICS.inc();
             if st.panic.is_none() {
                 st.panic = Some(payload);
             }
@@ -353,6 +364,7 @@ impl Scheduler {
         {
             let mut inner = plock(&self.inner);
             inner.jobs.push(Arc::clone(&job));
+            QUEUE_DEPTH.set(inner.jobs.len() as u64);
             self.spawn_workers(&mut inner, limit.saturating_sub(1));
             // Wake parked workers to come steal.
             self.work_cv.notify_all();
@@ -369,6 +381,7 @@ impl Scheduler {
         drop(st);
         let mut inner = plock(&self.inner);
         inner.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        QUEUE_DEPTH.set(inner.jobs.len() as u64);
         if inner.busy == 0 && inner.jobs.is_empty() {
             self.idle_cv.notify_all();
         }
@@ -405,6 +418,7 @@ impl Scheduler {
                 Some(job) => {
                     // Under the scheduler lock, so budget checks do not race.
                     job.active.fetch_add(1, Ordering::Relaxed);
+                    DONATIONS.inc();
                     inner.busy += 1;
                     drop(inner);
                     execute(&job);

@@ -46,6 +46,8 @@ use crate::designspace::{
 };
 use crate::faults::{self, Fault};
 use crate::net::{CircuitBreaker, Policy, RetryBudget};
+use crate::obs::metrics;
+use crate::obs::trace::{Tracer, TID_SHARDS};
 use crate::pipeline::{Config, JobSpec, LookupBits, SearchStrategy};
 use crate::pool::{CancelToken, Progress};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -62,6 +64,13 @@ pub const DEFAULT_HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Coordinator → worker poll cadence while a shard analyzes.
 const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+const SHARDS_DISPATCHED: metrics::Counter = metrics::counter("cluster.shards_dispatched");
+const SHARDS_REASSIGNED: metrics::Counter = metrics::counter("cluster.shards_reassigned");
+const HEARTBEAT_MISSES: metrics::Counter = metrics::counter("cluster.heartbeat_misses");
+const WIRE_CRC_FAILURES: metrics::Counter = metrics::counter("cluster.wire_crc_failures");
+const DEGRADED: metrics::Counter = metrics::counter("cluster.degraded");
+const STRIKES: metrics::Counter = metrics::counter("cluster.strikes");
 
 // ---------------------------------------------------------------------
 // Minimal HTTP client (the other half of service::http's server).
@@ -636,6 +645,7 @@ impl Cluster {
     /// checksum-failing response) against `id`'s breaker. Transport
     /// failures are recorded by [`Cluster::call`] itself.
     pub fn note_failure(&self, id: u64) {
+        STRIKES.inc();
         let policy = self.policy();
         let b = self.breaker(id);
         if b.on_failure(policy.breaker_threshold, policy.breaker_cooldown) {
@@ -761,6 +771,7 @@ impl Cluster {
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
         degraded: Option<&AtomicBool>,
+        tracer: Option<&Tracer>,
     ) -> Option<Result<DesignSpace, GenError>> {
         let live = self.live();
         if live.is_empty() {
@@ -777,7 +788,7 @@ impl Cluster {
         }
         let nregions = 1u64 << opts.lookup_bits;
         let ranges = shard_ranges(nregions, live.len());
-        Some(self.drive(bt, opts, &ranges, cancel, ticks, degraded))
+        Some(self.drive(bt, opts, &ranges, cancel, ticks, degraded, tracer))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -789,16 +800,35 @@ impl Cluster {
         cancel: Option<&CancelToken>,
         ticks: Option<&Progress>,
         degraded: Option<&AtomicBool>,
+        tracer: Option<&Tracer>,
     ) -> Result<DesignSpace, GenError> {
         let auth = self.auth();
         let auth = auth.as_deref();
+        // Per-shard child span: lane `TID_SHARDS + i`, so each shard gets
+        // its own row under the job's phase lane in chrome://tracing.
+        let span = |i: usize, op: &str, start: Instant| {
+            if let Some(t) = tracer {
+                t.record(format!("shard {i} {op}"), "shard", TID_SHARDS + i as u64, start, Instant::now());
+            }
+        };
 
         // Assign round-robin; a worker that fails the initial POST
-        // advances its breaker and the shard moves on.
+        // advances its breaker and the shard moves on. `opened[i]` is
+        // shard `i`'s span start: (re)set at assignment, closed when the
+        // analysis settles.
         let mut rr = 0usize;
+        let mut opened: Vec<Instant> = Vec::with_capacity(ranges.len());
         let mut slots: Vec<Slot> = ranges
             .iter()
-            .map(|&(lo, hi)| self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded))
+            .map(|&(lo, hi)| {
+                opened.push(Instant::now());
+                let slot = self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded);
+                if !matches!(slot, Slot::Remote(..)) {
+                    // Local fallback (or failure) settles inside assign.
+                    span(opened.len() - 1, "analyze", opened[opened.len() - 1]);
+                }
+                slot
+            })
             .collect();
 
         // Poll until every slot settles, reassigning slots whose worker
@@ -812,25 +842,39 @@ impl Cluster {
             let mut pending = false;
             for (i, &(lo, hi)) in ranges.iter().enumerate() {
                 let Slot::Remote(worker, remote) = slots[i] else { continue };
-                let mut reassign = |slots: &mut Vec<Slot>, pending: &mut bool| {
-                    // Best-effort: free the orphaned remote shard.
-                    self.release(&[(worker, remote)], auth);
-                    slots[i] = self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded);
-                    *pending |= matches!(slots[i], Slot::Remote(..));
-                };
+                let mut reassign =
+                    |slots: &mut Vec<Slot>, opened: &mut Vec<Instant>, pending: &mut bool| {
+                        // Best-effort: free the orphaned remote shard.
+                        self.release(&[(worker, remote)], auth);
+                        SHARDS_REASSIGNED.inc();
+                        opened[i] = Instant::now();
+                        slots[i] = self.assign(bt, opts, lo, hi, &mut rr, cancel, ticks, degraded);
+                        if matches!(slots[i], Slot::Remote(..)) {
+                            *pending = true;
+                        } else {
+                            span(i, "analyze", opened[i]);
+                        }
+                    };
                 if !self.is_live(worker) {
-                    reassign(&mut slots, &mut pending);
+                    HEARTBEAT_MISSES.inc();
+                    reassign(&mut slots, &mut opened, &mut pending);
                     continue;
                 }
                 match self.call(worker, "GET", &format!("/shards/{remote}"), b"") {
                     Ok((200, body)) => {
                         let body = String::from_utf8_lossy(&body).into_owned();
-                        match verified_status(&body, remote) {
+                        let poll = verified_status(&body, remote);
+                        if poll.is_none() {
+                            // Unintelligible or checksum-failing status.
+                            WIRE_CRC_FAILURES.inc();
+                        }
+                        match poll {
                             Some(ShardPoll::Analyzing) => pending = true,
                             Some(ShardPoll::Analyzed { min_k, dd_evals }) => {
                                 if let Some(p) = ticks {
                                     p.add((hi - lo) as usize);
                                 }
+                                span(i, "analyze", opened[i]);
                                 slots[i] = Slot::RemoteDone(worker, remote, min_k, dd_evals);
                             }
                             Some(ShardPoll::Failed(e)) => {
@@ -843,7 +887,7 @@ impl Cluster {
                                 // trusted with the shard — count the
                                 // strike and reassign.
                                 self.note_failure(worker);
-                                reassign(&mut slots, &mut pending);
+                                reassign(&mut slots, &mut opened, &mut pending);
                             }
                         }
                     }
@@ -851,12 +895,12 @@ impl Cluster {
                     // forgot the shard): protocol-level strike.
                     Ok(_) => {
                         self.note_failure(worker);
-                        reassign(&mut slots, &mut pending);
+                        reassign(&mut slots, &mut opened, &mut pending);
                     }
                     // Transport failure past the retry policy (the call
                     // already advanced the breaker): reassign.
                     Err(_) => {
-                        reassign(&mut slots, &mut pending);
+                        reassign(&mut slots, &mut opened, &mut pending);
                     }
                 }
             }
@@ -891,10 +935,12 @@ impl Cluster {
         let mut regions: Vec<RegionSpace> = Vec::with_capacity(1usize << opts.lookup_bits);
         let mut dd_evals = 0u64;
         for (i, &(lo, hi)) in ranges.iter().enumerate() {
+            let sweep_start = Instant::now();
             match &slots[i] {
                 Slot::Local(sa) => {
                     dd_evals += sa.dd_evals;
                     regions.extend(sweep_shard(sa, k, opts.degree));
+                    span(i, "sweep", sweep_start);
                 }
                 Slot::RemoteDone(worker, remote, _, dd) => {
                     let body = format!("k = {k}\n");
@@ -907,9 +953,14 @@ impl Cluster {
                         // decode_pgsh verifies the payload CRC: a bit
                         // flipped in transit is a miss here, never a
                         // silently-wrong entry in the merged space.
-                        Ok((200, bytes)) => decode_pgsh(&bytes)
-                            .filter(|p| p.lo == lo && p.hi == hi && p.k == k)
-                            .map(|p| p.regions),
+                        Ok((200, bytes)) => match decode_pgsh(&bytes) {
+                            Some(p) if p.lo == lo && p.hi == hi && p.k == k => Some(p.regions),
+                            Some(_) => None,
+                            None => {
+                                WIRE_CRC_FAILURES.inc();
+                                None
+                            }
+                        },
                         _ => None,
                     };
                     match swept {
@@ -917,6 +968,7 @@ impl Cluster {
                             dd_evals += dd;
                             regions.extend(sw);
                             self.release(&[(*worker, *remote)], auth);
+                            span(i, "sweep", sweep_start);
                         }
                         None => {
                             // The worker died or garbled its sweep
@@ -932,6 +984,7 @@ impl Cluster {
                                 Ok(sa) => {
                                     dd_evals += sa.dd_evals;
                                     regions.extend(sweep_shard(&sa, k, opts.degree));
+                                    span(i, "sweep", sweep_start);
                                 }
                                 Err(e) => {
                                     self.release(&slot_remotes(&slots), auth);
@@ -1003,8 +1056,12 @@ impl Cluster {
                     let echo_ok = json_u64(&resp, "body_crc")
                         .is_some_and(|c| c == crc32(body.as_bytes()) as u64);
                     match json_u64(&resp, "id") {
-                        Some(remote) if echo_ok => return Slot::Remote(worker, remote),
+                        Some(remote) if echo_ok => {
+                            SHARDS_DISPATCHED.inc();
+                            return Slot::Remote(worker, remote);
+                        }
                         Some(remote) => {
+                            WIRE_CRC_FAILURES.inc();
                             self.release(&[(worker, remote)], self.auth().as_deref());
                             self.note_failure(worker);
                         }
@@ -1036,6 +1093,7 @@ impl Cluster {
 fn mark_degraded(flag: Option<&AtomicBool>, why: &str) {
     if let Some(f) = flag {
         if !f.swap(true, Ordering::Relaxed) {
+            DEGRADED.inc();
             eprintln!("polygen: cluster degraded: {why}");
         }
     }
@@ -1193,6 +1251,7 @@ pub fn run_worker_agent_with(
                             if !matches!(beat, Ok((200, _))) {
                                 // Coordinator restarted or evicted us:
                                 // re-register on the next pass.
+                                HEARTBEAT_MISSES.inc();
                                 id = None;
                             }
                         }
@@ -1230,6 +1289,7 @@ impl crate::pipeline::Generator for ClusterGenerator {
         ticks: Option<&Progress>,
     ) -> Option<Result<DesignSpace, GenError>> {
         let flag = self.ctrl.as_deref().map(|c| c.degraded_flag());
-        self.cluster.generate(bt, opts, cancel, ticks, flag)
+        let tracer = self.ctrl.as_deref().and_then(|c| c.tracer()).map(Arc::as_ref);
+        self.cluster.generate(bt, opts, cancel, ticks, flag, tracer)
     }
 }

@@ -15,7 +15,14 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::metrics;
 use crate::sync::{cwait, plock, Condvar, Mutex};
+
+// Process-global last-write-wins gauges; with several queues alive
+// (tests) they track whichever moved last, which is exactly the
+// production shape (one service, one queue).
+const QUEUE_DEPTH: metrics::Gauge = metrics::gauge("exec.queue_depth");
+const EXECUTORS: metrics::Gauge = metrics::gauge("exec.executors");
 
 struct QueueState<T> {
     queue: VecDeque<T>,
@@ -64,9 +71,11 @@ impl<T> TaskQueue<T> {
     pub fn push_and_plan(&self, item: T, cap: usize) -> bool {
         let mut st = plock(&self.state);
         st.queue.push_back(item);
+        QUEUE_DEPTH.set(st.queue.len() as u64);
         let plan = st.idle < st.queue.len() && st.spawned < cap;
         if plan {
             st.spawned += 1;
+            EXECUTORS.set(st.spawned as u64);
         }
         drop(st);
         self.work_cv.notify_one();
@@ -80,6 +89,7 @@ impl<T> TaskQueue<T> {
     pub fn spawn_failed(&self) -> bool {
         let mut st = plock(&self.state);
         st.spawned -= 1;
+        EXECUTORS.set(st.spawned as u64);
         st.spawned == 0
     }
 
@@ -91,10 +101,12 @@ impl<T> TaskQueue<T> {
         let mut st = plock(&self.state);
         loop {
             if let Some(item) = st.queue.pop_front() {
+                QUEUE_DEPTH.set(st.queue.len() as u64);
                 return Some(item);
             }
             if st.closed {
                 st.spawned -= 1;
+                EXECUTORS.set(st.spawned as u64);
                 return None;
             }
             st.idle += 1;
@@ -106,7 +118,10 @@ impl<T> TaskQueue<T> {
     /// Non-blocking pop (the inline-drain fallback when no executor
     /// could be spawned).
     pub fn pop_now(&self) -> Option<T> {
-        plock(&self.state).queue.pop_front()
+        let mut st = plock(&self.state);
+        let item = st.queue.pop_front();
+        QUEUE_DEPTH.set(st.queue.len() as u64);
+        item
     }
 
     /// Close the queue: parked executors wake, drain the backlog, and

@@ -17,7 +17,9 @@
 //! | `GET /jobs`            | —                           | `200` array of status objects |
 //! | `GET /jobs/:id`        | —                           | `200` status object, `404` |
 //! | `GET /jobs/:id/result` | —                           | `200` result, `202` still queued/running, `409` cancelled, `422` failed, `404` |
+//! | `GET /jobs/:id/trace`  | —                           | `200` Chrome trace JSON, `404` (job unknown or not traced) |
 //! | `DELETE /jobs/:id`     | —                           | `200` post-cancel status, `404` |
+//! | `GET /metrics`         | —                           | `200` Prometheus text exposition |
 //!
 //! A status object is
 //! `{"id":3,"label":"recip_16b_R8","status":"running","phase":"generate",`
@@ -59,6 +61,7 @@ use super::store::crc32;
 use super::{JobEntry, JobStatus, Service};
 use crate::faults::{self, Fault};
 use crate::net::TokenBucket;
+use crate::obs::metrics;
 use crate::pipeline::{JobResult, PipelineError};
 use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::sync::{plock, Arc, Mutex};
@@ -235,19 +238,25 @@ fn handle_connection(
     match route(svc, &method, &segs, &body) {
         (code, Payload::Json(body)) => respond(&mut stream, code, &body),
         (code, Payload::Bytes(body)) => respond_bytes(&mut stream, code, &body),
+        (code, Payload::Text(body)) => respond_text(&mut stream, code, &body),
     }
 }
 
-/// A response body: JSON (everything) or raw bytes (shard sweeps, whose
-/// entry lists would be pathological as JSON — see `service::cluster`).
+/// A response body: JSON (everything), raw bytes (shard sweeps, whose
+/// entry lists would be pathological as JSON — see `service::cluster`),
+/// or plain text (the Prometheus exposition format on `/metrics`).
 enum Payload {
     Json(String),
     Bytes(Vec<u8>),
+    Text(String),
 }
 
 fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payload) {
     // Cluster surface first: worker registry and shard execution.
     match (method, segs) {
+        ("GET", ["metrics"]) => {
+            return (200, Payload::Text(metrics::render_prometheus()));
+        }
         ("POST", ["workers"]) => {
             let Some(addr) = super::cluster::json_field(body, "addr") else {
                 return json(400, obj([("error", json_str("missing \"addr\""))]));
@@ -333,6 +342,16 @@ fn route(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, Payloa
                         obj([
                             ("count", entries.len().to_string()),
                             ("bytes", total.to_string()),
+                            // Aggregate duplicated under one key so
+                            // clients scrape a single object instead of
+                            // re-summing the entry list.
+                            (
+                                "summary",
+                                obj([
+                                    ("entries", entries.len().to_string()),
+                                    ("total_bytes", total.to_string()),
+                                ]),
+                            ),
                             ("entries", format!("[{}]", items.join(","))),
                         ]),
                     )
@@ -387,6 +406,13 @@ fn route_jobs(svc: &Service, method: &str, segs: &[&str], body: &str) -> (u16, S
         },
         ("GET", ["jobs", id, "result"]) => match parse_id(id).and_then(|id| svc.entry(id)) {
             Some(entry) => result_response(&entry),
+            None => not_found(),
+        },
+        ("GET", ["jobs", id, "trace"]) => match parse_id(id).and_then(|id| svc.entry(id)) {
+            Some(entry) => match entry.tracer() {
+                Some(t) => (200, t.export_chrome()),
+                None => (404, obj([("error", json_str("job not traced (serve with --trace)"))])),
+            },
             None => not_found(),
         },
         ("DELETE", ["jobs", id]) => match parse_id(id).and_then(|id| svc.entry(id)) {
@@ -473,6 +499,19 @@ fn status_json(entry: &Arc<JobEntry>) -> String {
     // cluster wasn't. (Absent entirely when the job never degraded.)
     if entry.is_degraded() {
         fields.push(("degraded", "true".into()));
+    }
+    // Same contract for recovery: how many corrupt on-disk artifacts
+    // (.pgjr results, .pgds caches) this job survived by recomputing.
+    let recovered = entry.recovered();
+    if recovered > 0 {
+        fields.push(("recovered", recovered.to_string()));
+    }
+    // Per-phase wall time, present once a traced job has closed at
+    // least one phase span.
+    if let Some(timings) = entry.timings() {
+        let items: Vec<String> =
+            timings.iter().map(|(name, us)| format!("\"{name}\":{us}")).collect();
+        fields.push(("timings", format!("{{{}}}", items.join(","))));
     }
     obj(fields)
 }
@@ -791,6 +830,19 @@ fn respond_bytes(stream: &mut TcpStream, code: u16, body: &[u8]) -> std::io::Res
     );
     stream.write_all(head.as_bytes())?;
     write_body(stream, body)
+}
+
+// lint: fault-ok(the http.respond disconnect tap fires in write_body on
+// the payload; the head write shares the stream and failure path)
+fn respond_text(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    write_body(stream, body.as_bytes())
 }
 
 /// `429 Too Many Requests` with the `Retry-After` hint a well-behaved

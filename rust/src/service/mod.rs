@@ -97,6 +97,7 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::net::Policy;
+use crate::obs::metrics;
 use crate::pipeline::{Generator, JobCtrl, JobResult, JobSpec, Phase, PipelineError};
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{cwait, plock, thread, Arc, Condvar, Mutex};
@@ -106,6 +107,14 @@ use exec::TaskQueue;
 pub use cluster::{run_worker_agent, run_worker_agent_with, WorkerView};
 use store::{JobLog, LoadOutcome, LogOutcome, ResultStore};
 pub use store::StoreEntry;
+
+const SUBMITTED: metrics::Counter = metrics::counter("service.submitted");
+const DONE: metrics::Counter = metrics::counter("service.done");
+const FAILED: metrics::Counter = metrics::counter("service.failed");
+const CANCELLED: metrics::Counter = metrics::counter("service.cancelled");
+const STORE_SUBMIT_HITS: metrics::Counter = metrics::counter("service.store_submit_hits");
+const REGISTRY_SIZE: metrics::Gauge = metrics::gauge("service.registry_size");
+const JOB_MS: metrics::Histogram = metrics::histogram("service.job_ms");
 
 /// Observable job state. `Failed` carries the error's rendered message;
 /// the owned structured [`PipelineError`] is delivered once, by
@@ -214,6 +223,22 @@ impl JobEntry {
         self.ctrl.is_degraded()
     }
 
+    /// Quarantine recoveries this job absorbed (damaged `.pgjr`/`.pgds`
+    /// healed by recomputing) — surfaced next to `degraded` in status.
+    pub(crate) fn recovered(&self) -> usize {
+        self.ctrl.recovered()
+    }
+
+    /// Per-phase wall-clock totals (µs), when the job was traced.
+    pub(crate) fn timings(&self) -> Option<Vec<(String, u64)>> {
+        self.ctrl.timings()
+    }
+
+    /// The job's span tracer, when the service runs with tracing.
+    pub(crate) fn tracer(&self) -> Option<&Arc<crate::obs::trace::Tracer>> {
+        self.ctrl.tracer()
+    }
+
     /// Block until the entry reaches a terminal state (does not consume
     /// the outcome).
     fn wait_finished(&self) {
@@ -312,6 +337,14 @@ impl JobHandle {
         self.entry.is_degraded()
     }
 
+    /// How many quarantine recoveries this job absorbed: damaged
+    /// durable artifacts (`.pgjr` result, `.pgds` space) that failed
+    /// their integrity check, were renamed aside, and were regenerated
+    /// over. Also surfaced as `"recovered":N` in the HTTP status object.
+    pub fn recovered(&self) -> usize {
+        self.entry.recovered()
+    }
+
     /// Block until the job finishes and take its outcome. A cancelled
     /// job yields `Err(`[`PipelineError::Cancelled`]`)`.
     pub fn wait(self) -> Result<JobResult, PipelineError> {
@@ -339,6 +372,9 @@ struct Inner {
     cache_dir: Option<PathBuf>,
     max_finished: usize,
     finished_ttl: Option<Duration>,
+    /// Attach a span tracer to every submitted job
+    /// ([`ServiceBuilder::tracing`]).
+    tracing: bool,
     next_id: AtomicU64,
     /// The executor pool's work queue and park/close protocol — the
     /// loom-modeled half of the service (see [`exec::TaskQueue`]).
@@ -384,6 +420,7 @@ pub struct ServiceBuilder {
     policy: Policy,
     store_max_bytes: Option<u64>,
     store_ttl: Option<Duration>,
+    tracing: bool,
 }
 
 impl ServiceBuilder {
@@ -486,6 +523,16 @@ impl ServiceBuilder {
         self
     }
 
+    /// Attach a span tracer ([`crate::obs::trace`]) to every submitted
+    /// job: phase transitions (and cluster shard dispatches) record
+    /// spans, exportable as per-job `timings` in status, `GET
+    /// /jobs/:id/trace`, and `polygen trace`. Off by default — an
+    /// untraced job allocates nothing and records nothing.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
     pub fn build(self) -> Service {
         let (log, store, replayed, max_id) = match &self.state_dir {
             None => (None, None, Vec::new(), 0),
@@ -516,6 +563,7 @@ impl ServiceBuilder {
             cache_dir: self.cache_dir,
             max_finished: self.max_finished,
             finished_ttl: self.finished_ttl,
+            tracing: self.tracing,
             next_id: AtomicU64::new(max_id),
             exec: TaskQueue::new(),
             jobs: Mutex::new(BTreeMap::new()),
@@ -538,6 +586,7 @@ impl ServiceBuilder {
                     Some(LogOutcome::Cancelled) => FinLabel::Cancelled,
                     None => FinLabel::Failed("interrupted by service restart".into()),
                 };
+                let mut quarantined = false;
                 let outcome = match (&r.outcome, &r.store_key, &inner.store) {
                     (Some(LogOutcome::Done), Some(key), Some(st)) => match st.load_checked(key) {
                         LoadOutcome::Hit(res) => Some(Ok(res)),
@@ -548,15 +597,22 @@ impl ServiceBuilder {
                         // but its payload is the structured quarantine
                         // error, so a result fetch explains itself.
                         LoadOutcome::Quarantined(path) => {
+                            quarantined = true;
                             Some(Err(PipelineError::Quarantined { path }))
                         }
                     },
                     _ => None,
                 };
+                let ctrl = Arc::new(JobCtrl::new());
+                if quarantined {
+                    // Latched so `"recovered"` in status JSON records
+                    // that this entry's artifact was healed-by-removal.
+                    ctrl.mark_recovered();
+                }
                 let entry = Arc::new(JobEntry {
                     id: r.id,
                     spec: r.spec,
-                    ctrl: Arc::new(JobCtrl::new()),
+                    ctrl,
                     state: Mutex::new(EntryState::Finished {
                         label,
                         outcome,
@@ -566,6 +622,7 @@ impl ServiceBuilder {
                 });
                 jobs.insert(r.id, entry);
             }
+            REGISTRY_SIZE.set(jobs.len() as u64);
         }
         Service { gate: Arc::new(Gate { inner: Arc::clone(&inner) }), inner }
     }
@@ -600,6 +657,7 @@ impl Service {
             policy: Policy::default(),
             store_max_bytes: None,
             store_ttl: None,
+            tracing: false,
         }
     }
 
@@ -614,50 +672,74 @@ impl Service {
     /// service's worker budget (donation floor).
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
         self.evict_finished();
+        SUBMITTED.inc();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let spec = spec.donated(self.inner.workers);
 
         // Content-addressed store hit: a spec whose result-affecting
         // text is already stored completes *now* — the handle is born
         // terminal and the scheduler is never touched.
+        let mut store_recovered = false;
         if let Some(store) = &self.inner.store {
             if let Some(key) = store::store_key(&spec) {
                 // `load_checked`: a corrupt file is quarantined aside
                 // here and the submission falls through to a real run,
                 // whose save then repopulates the key — self-healing.
-                if let LoadOutcome::Hit(res) = store.load_checked(&key) {
-                    let entry = Arc::new(JobEntry {
-                        id,
-                        spec,
-                        ctrl: Arc::new(JobCtrl::new()),
-                        state: Mutex::new(EntryState::Finished {
-                            label: FinLabel::Done,
-                            outcome: Some(Ok(res)),
-                            at: Instant::now(),
-                        }),
-                        cv: Condvar::new(),
-                    });
-                    if let Some(log) = &self.inner.log {
-                        log.append_submit(id, &entry.spec);
-                        log.append_finish(id, &LogOutcome::Done, Some(&key));
+                match store.load_checked(&key) {
+                    LoadOutcome::Hit(res) => {
+                        STORE_SUBMIT_HITS.inc();
+                        DONE.inc();
+                        let entry = Arc::new(JobEntry {
+                            id,
+                            spec,
+                            ctrl: Arc::new(JobCtrl::new()),
+                            state: Mutex::new(EntryState::Finished {
+                                label: FinLabel::Done,
+                                outcome: Some(Ok(res)),
+                                at: Instant::now(),
+                            }),
+                            cv: Condvar::new(),
+                        });
+                        if let Some(log) = &self.inner.log {
+                            log.append_submit(id, &entry.spec);
+                            log.append_finish(id, &LogOutcome::Done, Some(&key));
+                        }
+                        let mut jobs = plock(&self.inner.jobs);
+                        jobs.insert(id, Arc::clone(&entry));
+                        REGISTRY_SIZE.set(jobs.len() as u64);
+                        return JobHandle { entry };
                     }
-                    plock(&self.inner.jobs).insert(id, Arc::clone(&entry));
-                    return JobHandle { entry };
+                    LoadOutcome::Quarantined(_) => store_recovered = true,
+                    LoadOutcome::Miss => {}
                 }
             }
         }
 
+        let ctrl = if self.inner.tracing {
+            Arc::new(JobCtrl::traced())
+        } else {
+            Arc::new(JobCtrl::new())
+        };
+        if store_recovered {
+            // The fresh run below regenerates over the quarantined
+            // artifact; latch that into the job's `recovered` count.
+            ctrl.mark_recovered();
+        }
         let entry = Arc::new(JobEntry {
             id,
             spec,
-            ctrl: Arc::new(JobCtrl::new()),
+            ctrl,
             state: Mutex::new(EntryState::Queued),
             cv: Condvar::new(),
         });
         if let Some(log) = &self.inner.log {
             log.append_submit(id, &entry.spec);
         }
-        plock(&self.inner.jobs).insert(id, Arc::clone(&entry));
+        {
+            let mut jobs = plock(&self.inner.jobs);
+            jobs.insert(id, Arc::clone(&entry));
+            REGISTRY_SIZE.set(jobs.len() as u64);
+        }
         // The queue decides whether a new executor is warranted (backlog
         // exceeds parked executors, pool under budget — see
         // `TaskQueue::push_and_plan`); a `true` return reserves the slot.
@@ -744,6 +826,7 @@ impl Service {
                 }
             }
         }
+        REGISTRY_SIZE.set(jobs.len() as u64);
     }
 
     /// The coordinator-side cluster registry (worker registration,
@@ -803,11 +886,13 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
             if let Some(log) = &inner.log {
                 log.append_finish(entry.id, &LogOutcome::Cancelled, None);
             }
+            CANCELLED.inc();
             entry.finish(FinLabel::Cancelled, Err(PipelineError::Cancelled));
             return;
         }
         *st = EntryState::Running;
     }
+    let t0 = Instant::now();
     let cache = inner.cache_dir.as_deref();
     let ctrl = Arc::clone(&entry.ctrl);
     // Fixed-R generation consults the cluster first: with live workers
@@ -875,6 +960,15 @@ fn run_job(inner: &Inner, entry: &Arc<JobEntry>) {
         };
         log.append_finish(entry.id, &logged, store_key.as_deref());
     }
+    match &label {
+        FinLabel::Done => DONE.inc(),
+        FinLabel::Failed(_) => FAILED.inc(),
+        FinLabel::Cancelled => CANCELLED.inc(),
+    }
+    JOB_MS.observe(t0.elapsed().as_millis() as u64);
+    // Close the open phase span before publishing: every later export
+    // of this job's trace sees final durations.
+    entry.ctrl.finish_trace();
     entry.finish(label, outcome);
 }
 

@@ -30,8 +30,19 @@ use std::time::{Duration, SystemTime};
 
 use crate::dse::precision::{Encoding, Sign};
 use crate::faults::{self, Fault};
+use crate::obs::metrics;
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{plock, Mutex};
+
+const LOG_FRAMES: metrics::Counter = metrics::counter("store.log_frames");
+const LOG_WRITE_ERRORS: metrics::Counter = metrics::counter("store.log_write_errors");
+const LOG_QUARANTINED: metrics::Counter = metrics::counter("store.log_quarantined");
+const RESULT_HITS: metrics::Counter = metrics::counter("store.result_hits");
+const RESULT_MISSES: metrics::Counter = metrics::counter("store.result_misses");
+const RESULT_QUARANTINED: metrics::Counter = metrics::counter("store.result_quarantined");
+const RESULT_SAVES: metrics::Counter = metrics::counter("store.result_saves");
+const STORE_BYTES: metrics::Gauge = metrics::gauge("store.bytes");
+const STORE_ENTRIES: metrics::Gauge = metrics::gauge("store.entries");
 use crate::dse::Coeffs;
 use crate::pipeline::{Degree, Implementation, JobResult, JobSpec, SynthPoint, VerifyReport};
 
@@ -212,6 +223,7 @@ impl JobLog {
             }
             Some(Fault::FsyncFail) => {
                 self.write_errors.fetch_add(1, Ordering::Relaxed);
+                LOG_WRITE_ERRORS.inc();
                 return;
             }
             _ => {}
@@ -222,6 +234,9 @@ impl JobLog {
         // counted, not propagated.
         if f.write_all(&frame).and_then(|()| f.sync_data()).is_err() {
             self.write_errors.fetch_add(1, Ordering::Relaxed);
+            LOG_WRITE_ERRORS.inc();
+        } else {
+            LOG_FRAMES.inc();
         }
     }
 
@@ -284,6 +299,7 @@ impl JobLog {
     pub fn recover(path: &Path) -> Vec<ReplayedJob> {
         let (jobs, valid, total) = JobLog::scan(path);
         if valid < total {
+            LOG_QUARANTINED.inc();
             let mut q = path.as_os_str().to_os_string();
             q.push(".quarantined");
             let q = PathBuf::from(q);
@@ -454,7 +470,9 @@ impl ResultStore {
         let path = self.path_for(key);
         let tmp = path.with_extension(format!("tmp{}", std::process::id()));
         let ok = fs::write(&tmp, &bytes).is_ok() && fs::rename(&tmp, &path).is_ok();
-        if !ok {
+        if ok {
+            RESULT_SAVES.inc();
+        } else {
             let _ = fs::remove_file(&tmp);
         }
         self.prune();
@@ -480,12 +498,22 @@ impl ResultStore {
         let path = self.path_for(key);
         let bytes = match fs::read(&path) {
             Ok(b) => b,
-            Err(_) => return LoadOutcome::Miss,
+            Err(_) => {
+                RESULT_MISSES.inc();
+                return LoadOutcome::Miss;
+            }
         };
         match decode_checked(key, &bytes) {
-            Decoded::Ok(res) => LoadOutcome::Hit(res),
-            Decoded::KeyMismatch => LoadOutcome::Miss,
+            Decoded::Ok(res) => {
+                RESULT_HITS.inc();
+                LoadOutcome::Hit(res)
+            }
+            Decoded::KeyMismatch => {
+                RESULT_MISSES.inc();
+                LoadOutcome::Miss
+            }
             Decoded::Corrupt => {
+                RESULT_QUARANTINED.inc();
                 let mut q = path.as_os_str().to_os_string();
                 q.push(".quarantined");
                 let q = PathBuf::from(q);
@@ -510,7 +538,11 @@ impl ResultStore {
     // lint: fault-ok(best-effort maintenance scan; a bad read degrades a
     // listing entry, never a result — integrity lives in load_checked)
     pub fn inventory(&self) -> Vec<StoreEntry> {
-        let Ok(entries) = fs::read_dir(&self.dir) else { return Vec::new() };
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            STORE_BYTES.set(0);
+            STORE_ENTRIES.set(0);
+            return Vec::new();
+        };
         let now = SystemTime::now();
         let mut out = Vec::new();
         for e in entries.flatten() {
@@ -531,6 +563,11 @@ impl ResultStore {
             out.push(StoreEntry { key, bytes: md.len(), age_secs });
         }
         out.sort_by(|a, b| a.key.cmp(&b.key));
+        // The walk already has the totals; publish them so /metrics
+        // agrees with what GET /store just reported (cross-checked in
+        // tests/obs.rs).
+        STORE_BYTES.set(out.iter().map(|e| e.bytes).sum());
+        STORE_ENTRIES.set(out.len() as u64);
         out
     }
 

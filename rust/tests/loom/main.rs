@@ -19,7 +19,11 @@
 //! - `TaskQueue::close` lets executors drain the pre-close backlog
 //!   (never abandon it) and wakes parked executors so they exit;
 //! - the service's last-clone `Gate` drop closes the queue exactly once
-//!   while an executor is mid-drain.
+//!   while an executor is mid-drain;
+//! - `net::CircuitBreaker` opens exactly once under concurrent failures
+//!   and re-closes from half-open on a successful probe;
+//! - `net::RetryBudget` never goes negative nor above its cap under
+//!   concurrent spends and deposits.
 
 // Same unexpected-cfg escape hatch as lib.rs: `--cfg loom` is injected
 // only by the loom CI job, and MSRV 1.75 predates `check-cfg`.
@@ -27,8 +31,11 @@
 #![allow(unexpected_cfgs)]
 #![cfg(loom)]
 
+use std::time::Duration;
+
 use loom::model::Builder;
 
+use polygen::net::{CircuitBreaker, RetryBudget};
 use polygen::pool::Scheduler;
 use polygen::service::exec::TaskQueue;
 use polygen::sync::atomic::{AtomicUsize, Ordering};
@@ -222,6 +229,57 @@ fn last_clone_drop_closes_exactly_once_and_drains() {
         drop(gate);
         dropper.join().unwrap();
         assert_eq!(exec.join().unwrap(), vec![5], "backlog survived the gated close");
+    });
+}
+
+#[test]
+fn breaker_opens_exactly_once_under_concurrent_failures() {
+    // Two threads report a failed call at threshold 2: exactly one of
+    // them must see `newly == true` (the quarantine-log cue fires
+    // once), and the breaker must be open afterwards. A zero cooldown
+    // then makes the breaker immediately probe-ready (half-open), and a
+    // successful probe closes it fully — the closed → open → half-open
+    // → closed cycle with the open transition under contention.
+    // (`Duration::ZERO`, never `Duration::MAX`: `Instant + cooldown`
+    // must not overflow.)
+    model(|| {
+        let breaker = Arc::new(CircuitBreaker::new());
+        let other = Arc::clone(&breaker);
+        let t = loom::thread::spawn(move || other.on_failure(2, Duration::ZERO));
+        let mine = breaker.on_failure(2, Duration::ZERO);
+        let theirs = t.join().unwrap();
+        assert!(
+            mine != theirs,
+            "exactly one failure crosses the threshold (mine={mine} theirs={theirs})"
+        );
+        assert!(breaker.is_open(), "two consecutive failures at threshold 2 must open");
+        assert!(breaker.allow(), "zero cooldown: probe-ready immediately");
+        breaker.on_success();
+        assert!(!breaker.is_open(), "successful probe re-closes the breaker");
+    });
+}
+
+#[test]
+fn retry_budget_stays_within_bounds_under_contention() {
+    // Concurrent spends racing a deposit: whatever the interleaving,
+    // the token count must stay in [0, cap] — never negative (a spend
+    // observed mid-deposit), never above cap (a deposit that missed the
+    // clamp).
+    model(|| {
+        let budget = Arc::new(RetryBudget::new(1.5));
+        let spender = {
+            let b = Arc::clone(&budget);
+            loom::thread::spawn(move || {
+                let _ = b.try_spend();
+                let _ = b.try_spend();
+            })
+        };
+        budget.deposit(1.0);
+        spender.join().unwrap();
+        let left = budget.available();
+        assert!((0.0..=1.5).contains(&left), "budget out of bounds: {left}");
+        budget.deposit(5.0);
+        assert!(budget.available() <= 1.5, "deposit must clamp at the cap");
     });
 }
 

@@ -1,0 +1,346 @@
+//! End-to-end tests for `polygen::obs`: the `/metrics` Prometheus
+//! surface (two-way: every registered metric is scraped, every scraped
+//! metric is registered), the per-job span tracer and its Chrome
+//! trace_events export (stable phase-span names and ordering on a
+//! recip-8 job), the `/store` summary vs. the store gauges, the
+//! `recovered` latch in job status JSON, and — behind the `obs-stub` /
+//! `fault-injection` features — the compile-out and fault-metric paths.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use polygen::obs::metrics;
+use polygen::pipeline::{JobCtrl, JobSpec, LookupBits};
+use polygen::service::http::HttpServer;
+use polygen::service::Service;
+use polygen::sync::Arc;
+
+fn quick_spec(func: &str) -> JobSpec {
+    let mut s = JobSpec::new(func, 8);
+    s.lookup = LookupBits::Fixed(4);
+    s
+}
+
+/// A fresh scratch directory under the system temp dir.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("polygen_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// One-shot HTTP/1.1 exchange returning (status, head, body). `None`
+/// when the connection failed mid-flight (fault-injection tests drive
+/// requests into deliberate disconnects).
+fn try_http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Option<(u16, String, String)> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok()?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).ok()?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).ok()?;
+    let code: u16 = raw.split_whitespace().nth(1).and_then(|c| c.parse().ok())?;
+    let (head, body) = raw.split_once("\r\n\r\n")?;
+    Some((code, head.to_string(), body.to_string()))
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let (code, _, body) =
+        try_http(addr, method, path, body).expect("server closes after one response");
+    (code, body)
+}
+
+/// Extract `"key":<integer>` from a flat JSON body.
+fn json_u64(body: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).unwrap_or_else(|| panic!("{key} missing in {body}"));
+    body[at + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("{key} not an integer in {body}"))
+}
+
+#[test]
+fn metrics_endpoint_scrapes_the_whole_registry_both_ways() {
+    let svc = Service::builder().workers(1).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    svc.submit(quick_spec("recip")).wait().expect("recip 8b R=4 feasible");
+
+    let (code, head, body) =
+        try_http(server.addr(), "GET", "/metrics", "").expect("scrape succeeds");
+    assert_eq!(code, 200, "{body}");
+    assert!(head.contains("text/plain; version=0.0.4"), "wrong content type: {head}");
+
+    // Registry → scrape: every registered metric renders, zeros included.
+    for m in metrics::METRICS {
+        let name = metrics::prom_name(m);
+        assert!(
+            body.contains(&format!("# TYPE {name} {}\n", m.kind.label())),
+            "{name} missing from scrape"
+        );
+    }
+    // Scrape → registry: every `# TYPE` line maps back to a registered
+    // metric (no ad-hoc names sneak into the exposition).
+    let registered: Vec<String> = metrics::METRICS.iter().map(metrics::prom_name).collect();
+    for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let name = line.split_whitespace().nth(2).expect("TYPE line has a name");
+        assert!(registered.iter().any(|r| r == name), "unregistered metric scraped: {name}");
+    }
+
+    // The finished job is visible in the counters (unless compiled out).
+    if metrics::COMPILED {
+        assert!(metrics::value("service.submitted") >= 1, "submit not counted");
+        assert!(metrics::value("service.done") >= 1, "completion not counted");
+        assert!(metrics::value("service.job_ms") >= 1, "job duration not observed");
+        assert!(body.contains("polygen_service_job_ms_bucket"), "{body}");
+    }
+    server.stop();
+}
+
+#[test]
+fn traced_run_exports_stable_phase_spans() {
+    let ctrl = Arc::new(JobCtrl::traced());
+    quick_spec("recip")
+        .run_controlled(None, Some(Arc::clone(&ctrl)))
+        .expect("recip 8b R=4 feasible");
+    ctrl.finish_trace();
+
+    let tracer = ctrl.tracer().expect("ctrl built with JobCtrl::traced");
+    let phases: Vec<String> = tracer
+        .spans()
+        .iter()
+        .filter(|s| s.cat == "phase")
+        .map(|s| s.name.clone())
+        .collect();
+    // The golden sequence: one span per pipeline phase, in pipeline
+    // order. This is the stability contract trace consumers rely on.
+    assert_eq!(phases, ["prepare", "generate", "explore", "synthesize", "verify"]);
+
+    let json = tracer.export_chrome();
+    assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    assert!(json.ends_with("}"), "{json}");
+    for p in &phases {
+        assert!(json.contains(&format!("\"name\":\"{p}\"")), "{p} missing in {json}");
+    }
+    assert!(json.contains("\"ph\":\"X\""), "complete events expected: {json}");
+
+    // `timings()` aggregates the phase spans in first-seen order.
+    let timings = ctrl.timings().expect("traced run has timings");
+    let names: Vec<&str> = timings.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, phases.iter().map(String::as_str).collect::<Vec<_>>());
+
+    // An untraced ctrl reports neither tracer nor timings.
+    let plain = JobCtrl::new();
+    assert!(plain.tracer().is_none());
+    assert!(plain.timings().is_none());
+}
+
+#[test]
+fn service_tracing_surfaces_timings_and_trace_endpoint() {
+    let svc = Service::builder().workers(1).tracing(true).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    let handle = svc.submit(quick_spec("recip"));
+    let id = handle.id();
+    handle.wait().expect("recip 8b R=4 feasible");
+
+    let (code, body) = http(server.addr(), "GET", &format!("/jobs/{id}"), "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"timings\":{"), "timings missing: {body}");
+    for phase in ["prepare", "generate", "explore", "synthesize", "verify"] {
+        assert!(body.contains(&format!("\"{phase}\":")), "{phase} missing: {body}");
+    }
+
+    let (code, trace) = http(server.addr(), "GET", &format!("/jobs/{id}/trace"), "");
+    assert_eq!(code, 200, "{trace}");
+    assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+    assert!(trace.contains("\"cat\":\"phase\""), "{trace}");
+    server.stop();
+
+    // Without `--trace` the endpoint explains itself instead of 500ing,
+    // and the status object carries no timings.
+    let svc2 = Service::builder().workers(1).build();
+    let server2 = HttpServer::spawn(svc2.clone(), "127.0.0.1:0").expect("bind");
+    let h2 = svc2.submit(quick_spec("recip"));
+    let id2 = h2.id();
+    h2.wait().expect("recip 8b R=4 feasible");
+    let (code, body) = http(server2.addr(), "GET", &format!("/jobs/{id2}/trace"), "");
+    assert_eq!(code, 404, "{body}");
+    assert!(body.contains("not traced"), "{body}");
+    let (_, status) = http(server2.addr(), "GET", &format!("/jobs/{id2}"), "");
+    assert!(!status.contains("\"timings\""), "{status}");
+    server2.stop();
+}
+
+#[test]
+fn store_summary_agrees_with_the_store_gauges() {
+    let dir = temp_dir("store");
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    svc.submit(quick_spec("recip")).wait().expect("recip 8b R=4 feasible");
+
+    let (code, body) = http(server.addr(), "GET", "/store", "");
+    assert_eq!(code, 200, "{body}");
+    let count = json_u64(&body, "count");
+    let total = json_u64(&body, "bytes");
+    assert!(count >= 1 && total > 0, "{body}");
+    // The summary object duplicates the flat keys exactly.
+    assert!(
+        body.contains(&format!(
+            "\"summary\":{{\"entries\":{count},\"total_bytes\":{total}}}"
+        )),
+        "{body}"
+    );
+    // The inventory pass published the same numbers as gauges.
+    if metrics::COMPILED {
+        assert_eq!(metrics::value("store.entries"), count, "{body}");
+        assert_eq!(metrics::value("store.bytes"), total, "{body}");
+    }
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Rot one byte in the middle of the first file under `dir` with
+/// extension `ext`, returning its path.
+fn corrupt_artifact(dir: &std::path::Path, ext: &str) -> PathBuf {
+    let path = std::fs::read_dir(dir)
+        .expect("artifact dir exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().map_or(false, |x| x == ext))
+        .unwrap_or_else(|| panic!("no .{ext} under {}", dir.display()));
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    path
+}
+
+#[test]
+fn quarantine_recovery_is_latched_into_job_status() {
+    let dir = temp_dir("recovered");
+    let spec = quick_spec("exp2");
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    let first = svc.submit(spec.clone()).wait().expect("exp2 8b R=4 feasible");
+
+    // Rot the stored .pgjr while the service is live: the resubmission's
+    // store fast path must quarantine it, fall through to a real run,
+    // and latch the recovery — on the handle and in the wire status
+    // (next to `degraded`).
+    corrupt_artifact(&dir.join("results"), "pgjr");
+    let handle = svc.submit(spec.clone());
+    let id = handle.id();
+    assert!(handle.recovered() >= 1, "store quarantine must latch at submit");
+    let again = handle.wait().expect("recompute succeeds");
+    assert_eq!(again.implementation.coeffs, first.implementation.coeffs);
+
+    let (code, body) = http(server.addr(), "GET", &format!("/jobs/{id}"), "");
+    assert_eq!(code, 200, "{body}");
+    assert!(json_u64(&body, "recovered") >= 1, "{body}");
+    if metrics::COMPILED {
+        assert!(metrics::value("store.result_quarantined") >= 1);
+    }
+
+    // A clean job reports no `recovered` key at all.
+    let clean = svc.submit(quick_spec("recip"));
+    let clean_id = clean.id();
+    clean.wait().expect("recip 8b R=4 feasible");
+    let (_, clean_body) = http(server.addr(), "GET", &format!("/jobs/{clean_id}"), "");
+    assert!(!clean_body.contains("\"recovered\""), "{clean_body}");
+    server.stop();
+    drop(svc); // the "restart"
+
+    // The run above re-saved the artifact (self-healing). Rot it again
+    // and restart: startup replay quarantines it and the replayed entry
+    // carries the same latch.
+    corrupt_artifact(&dir.join("results"), "pgjr");
+    let svc = Service::builder().workers(1).state_dir(&dir).build();
+    let server = HttpServer::spawn(svc.clone(), "127.0.0.1:0").expect("bind");
+    let (code, list) = http(server.addr(), "GET", "/jobs", "");
+    assert_eq!(code, 200, "{list}");
+    assert!(list.contains("\"recovered\":"), "replay latch missing: {list}");
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_generation_cache_recovery_latches_on_ctrl() {
+    let dir = temp_dir("cache");
+    let spec = quick_spec("log2");
+    spec.run_with(Some(&dir)).expect("log2 8b R=4 feasible (populates .pgds cache)");
+
+    // A rotten cached design space is quarantined mid-run and the
+    // regeneration is counted on the job's control block.
+    corrupt_artifact(&dir, "pgds");
+    let ctrl = Arc::new(JobCtrl::new());
+    spec.run_controlled(Some(&dir), Some(Arc::clone(&ctrl))).expect("recompute succeeds");
+    assert!(ctrl.recovered() >= 1, "cache quarantine must latch on the ctrl");
+    let quarantined = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .any(|e| e.path().to_string_lossy().ends_with(".pgds.quarantined"));
+    assert!(quarantined, "corrupt cache entry should be set aside, not deleted");
+    if metrics::COMPILED {
+        assert!(metrics::value("cache.quarantined") >= 1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With `--features obs-stub` every recorder is an empty inline
+/// function: handles resolve, `/metrics` still renders the full
+/// registry, but no cell ever moves.
+#[cfg(feature = "obs-stub")]
+#[test]
+fn stub_build_compiles_recording_out() {
+    assert!(!metrics::COMPILED);
+    const SPANS: metrics::Counter = metrics::counter("trace.spans");
+    SPANS.inc();
+    SPANS.add(10);
+    assert_eq!(SPANS.get(), 0, "stub build must not record");
+    const DEPTH: metrics::Gauge = metrics::gauge("pool.queue_depth");
+    DEPTH.set(42);
+    assert_eq!(DEPTH.get(), 0, "stub build must not record");
+    let text = metrics::render_prometheus();
+    assert!(text.contains("polygen_trace_spans_total 0"), "{text}");
+    assert!(text.contains("polygen_pool_queue_depth 0"), "{text}");
+}
+
+/// Chaos cross-check: armed fault injection on the HTTP taps must show
+/// up in `faults.injected`.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn injected_faults_surface_in_metrics() {
+    use polygen::faults::{arm_guard, FaultPlan};
+
+    let _serial = polygen::faults::test_serial_lock();
+    let before = metrics::value("faults.injected");
+    let svc = Service::builder().workers(1).build();
+    let server = HttpServer::spawn(svc, "127.0.0.1:0").expect("bind");
+    {
+        // Every eligible http.* site fires (rate 1000‰): reads are
+        // delayed, responses are cut mid-body. The client tolerates
+        // both; the counter must not.
+        let _armed = arm_guard(FaultPlan::new(42).rate(1000).only("http."));
+        for _ in 0..8 {
+            let _ = try_http(server.addr(), "GET", "/jobs", "");
+        }
+    }
+    server.stop();
+    if metrics::COMPILED {
+        assert!(
+            metrics::value("faults.injected") > before,
+            "armed http faults did not move faults.injected"
+        );
+    }
+}

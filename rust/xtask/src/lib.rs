@@ -10,6 +10,7 @@
 //! | `fault-taps`    | every outbound-I/O function in the service/cache/runtime boundary files calls `faults::inject`, and every site literal matches `faults::SITES` (both directions) |
 //! | `overflow`      | no unchecked `*`/`+`/`<<` in the exact-arithmetic files (`rational.rs`, `wide.rs`, `designspace/{envelope,extrema}.rs`) — the `RawFrac::lt` wrap was a real completeness bug |
 //! | `lock-unwrap`   | no `.unwrap()` on lock/wait results in service-facing modules — poison must be recovered (`sync::plock`), not cascaded |
+//! | `obs-registry`  | every `obs::metrics::METRICS` entry has a `counter`/`gauge`/`histogram` use site and vice versa (both directions) — a dead metric lies in every scrape, an unregistered name is a compile error the lint catches before rustc |
 //!
 //! A finding is silenced with a waiver comment carrying a mandatory
 //! reason: `// lint: overflow-ok(reason)` (`sync-ok`, `fault-ok`,
@@ -128,6 +129,12 @@ pub struct FileOutcome {
     pub inject_sites: Vec<(String, usize)>,
     /// Entries of a `const SITES: &[&str]` registry, if this file has one.
     pub sites_registry: Vec<(String, usize)>,
+    /// First-argument literals of `counter("…")`/`gauge("…")`/
+    /// `histogram("…")` calls found in non-test code.
+    pub metric_uses: Vec<(String, usize)>,
+    /// Metric names declared in a `const METRICS` registry, if this
+    /// file has one (constructor-call or `name:` struct-field form).
+    pub metrics_registry: Vec<(String, usize)>,
 }
 
 /// Lint one file's source under `rules`. Fails only if syn cannot parse.
@@ -416,6 +423,38 @@ impl<'ast> Visit<'ast> for Linter {
             s.visit_expr(&i.expr);
             self.out.sites_registry.extend(s.0);
         }
+        if i.ident == "METRICS" {
+            // Each registry entry is a constructor call whose first
+            // argument is the metric name (`c("pool.donations", …)`) or
+            // a `Spec { name: "…", … }` literal; help strings and bucket
+            // tables are deliberately not collected.
+            struct Names(Vec<(String, usize)>);
+            impl<'a> Visit<'a> for Names {
+                fn visit_expr_call(&mut self, c: &'a syn::ExprCall) {
+                    if let Some(syn::Expr::Lit(l)) = c.args.first().map(unparen) {
+                        if let syn::Lit::Str(s) = &l.lit {
+                            self.0.push((s.value(), s.span().start().line));
+                        }
+                    }
+                    visit::visit_expr_call(self, c);
+                }
+                fn visit_expr_struct(&mut self, e: &'a syn::ExprStruct) {
+                    for f in &e.fields {
+                        if matches!(&f.member, syn::Member::Named(id) if id == "name") {
+                            if let syn::Expr::Lit(l) = unparen(&f.expr) {
+                                if let syn::Lit::Str(s) = &l.lit {
+                                    self.0.push((s.value(), s.span().start().line));
+                                }
+                            }
+                        }
+                    }
+                    visit::visit_expr_struct(self, e);
+                }
+            }
+            let mut n = Names(Vec::new());
+            n.visit_expr(&i.expr);
+            self.out.metrics_registry.extend(n.0);
+        }
         visit::visit_item_const(self, i);
     }
 
@@ -487,6 +526,14 @@ impl<'ast> Visit<'ast> for Linter {
                     }
                 }
             }
+            if matches!(segs.last().map(String::as_str), Some("counter" | "gauge" | "histogram"))
+            {
+                if let Some(syn::Expr::Lit(l)) = c.args.first().map(unparen) {
+                    if let syn::Lit::Str(s) = &l.lit {
+                        self.out.metric_uses.push((s.value(), s.span().start().line));
+                    }
+                }
+            }
             if self.rules.taps {
                 if let Some(what) = io_path_call(&segs) {
                     self.record_io(c.span().start().line, what);
@@ -527,6 +574,8 @@ pub fn run(src_root: &Path) -> Result<Report, String> {
     let mut violations = Vec::new();
     let mut used: Vec<(String, String, usize)> = Vec::new();
     let mut registry: Vec<(String, String, usize)> = Vec::new();
+    let mut metric_used: Vec<(String, String, usize)> = Vec::new();
+    let mut metric_reg: Vec<(String, String, usize)> = Vec::new();
     let nfiles = files.len();
     for path in files {
         let rel = path
@@ -543,6 +592,11 @@ pub fn run(src_root: &Path) -> Result<Report, String> {
                 used.extend(outcome.inject_sites.into_iter().map(|(s, l)| (rel.clone(), s, l)));
                 registry
                     .extend(outcome.sites_registry.into_iter().map(|(s, l)| (rel.clone(), s, l)));
+                metric_used
+                    .extend(outcome.metric_uses.into_iter().map(|(s, l)| (rel.clone(), s, l)));
+                metric_reg.extend(
+                    outcome.metrics_registry.into_iter().map(|(s, l)| (rel.clone(), s, l)),
+                );
             }
             Err(e) => violations.push(Violation {
                 file: rel,
@@ -571,6 +625,33 @@ pub fn run(src_root: &Path) -> Result<Report, String> {
                 line: *line,
                 rule: "fault-taps",
                 msg: format!("`faults::SITES` entry \"{site}\" has no `faults::inject` call site"),
+            });
+        }
+    }
+    // Same two-way discipline for the metrics registry: a handle built
+    // on an unregistered name would be a compile error anyway (const
+    // eval panics), but the lint reports it with a message; a registered
+    // metric nothing records renders as a forever-zero lie on /metrics.
+    let metric_reg_names: BTreeSet<&str> = metric_reg.iter().map(|(_, s, _)| s.as_str()).collect();
+    let metric_used_names: BTreeSet<&str> =
+        metric_used.iter().map(|(_, s, _)| s.as_str()).collect();
+    for (file, name, line) in &metric_used {
+        if !metric_reg_names.contains(name.as_str()) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "obs-registry",
+                msg: format!("metric \"{name}\" is recorded but not registered in `METRICS`"),
+            });
+        }
+    }
+    for (file, name, line) in &metric_reg {
+        if !metric_used_names.contains(name.as_str()) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "obs-registry",
+                msg: format!("`METRICS` entry \"{name}\" is never recorded (dead metric)"),
             });
         }
     }

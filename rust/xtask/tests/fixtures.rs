@@ -67,6 +67,59 @@ fn f() {
 }
 
 #[test]
+fn metric_literals_are_collected_both_ways() {
+    let src = fixture("obs_registry.rs");
+    let out = lint_file("obs_registry.rs", &src, RuleSet::default()).unwrap();
+    assert!(out.violations.is_empty(), "{:#?}", out.violations);
+    let reg: Vec<&str> = out.metrics_registry.iter().map(|(s, _)| s.as_str()).collect();
+    let used: Vec<&str> = out.metric_uses.iter().map(|(s, _)| s.as_str()).collect();
+    assert_eq!(reg, ["pool.donations", "pool.queue_depth", "net.call_ms", "struct.literal"]);
+    assert_eq!(
+        used,
+        ["pool.donations", "pool.queue_depth", "net.call_ms"],
+        "help strings, bucket tables, and #[cfg(test)] uses must not be collected"
+    );
+}
+
+#[test]
+fn obs_registry_cross_check_fails_both_ways() {
+    // `run` walks a tree: give it one declaring a dead metric and
+    // recording an unregistered one — both directions must fail, and
+    // the matched name must stay silent.
+    let dir = std::env::temp_dir().join(format!("xtask_obs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("metrics.rs"),
+        "pub const METRICS: &[Spec] = &[\n\
+         \tc(\"live.metric\", \"recorded below\"),\n\
+         \tg(\"dead.metric\", \"nothing records this\"),\n\
+         ];\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("user.rs"),
+        "const LIVE: Counter = counter(\"live.metric\");\n\
+         const GHOST: Counter = counter(\"ghost.metric\");\n",
+    )
+    .unwrap();
+    let report = xtask::run(&dir).unwrap();
+    let obs: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| v.rule == "obs-registry")
+        .map(|v| v.to_string())
+        .collect();
+    assert_eq!(obs.len(), 2, "{obs:#?}");
+    assert!(obs.iter().any(|m| m.contains("\"dead.metric\" is never recorded")), "{obs:#?}");
+    assert!(
+        obs.iter().any(|m| m.contains("\"ghost.metric\" is recorded but not registered")),
+        "{obs:#?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn repo_scoping_matches_design() {
     assert!(!xtask::rules_for("sync.rs").sync, "the shim may use std::sync");
     assert!(xtask::rules_for("pool.rs").sync);

@@ -1,0 +1,27 @@
+//! Fixture for the `obs-registry` collection pass: names inside a
+//! `const METRICS` registry (constructor-call and struct-field forms)
+//! and the first arguments of `counter`/`gauge`/`histogram` calls are
+//! both collected; help strings and bucket tables are not. The two-way
+//! cross-check itself runs in `xtask::run`.
+
+pub const METRICS: &[Spec] = &[
+    c("pool.donations", "counter help text, never collected as a name"),
+    g("pool.queue_depth", "gauge help"),
+    h("net.call_ms", "histogram help", MS_CALL),
+    Spec { name: "struct.literal", kind: Kind::Counter, help: "struct form", buckets: NO_BUCKETS },
+];
+
+const DONATIONS: Counter = counter("pool.donations");
+const DEPTH: Gauge = gauge("pool.queue_depth");
+
+fn observe_call(ms: u64) {
+    histogram("net.call_ms").observe(ms);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_uses_are_not_collected() {
+        let _ = counter("test.only.metric");
+    }
+}
